@@ -1,0 +1,129 @@
+//! End-to-end driver: the full GoFFish system on real (synthetic-analog)
+//! workloads, reproducing the paper's headline comparison.
+//!
+//! For each dataset analog (RN / TR / LJ, Table 1) and each algorithm
+//! (CC / SSSP / PageRank, §6): generate → partition (METIS-like) → GoFS
+//! store on disk → run with Gopher *from disk* → run the vertex-centric
+//! Giraph stand-in on the same graph → assert result parity → print the
+//! paper-style makespan / superstep / message table with speedups.
+//!
+//! Recorded in EXPERIMENTS.md. Scale with an argument:
+//!
+//! ```bash
+//! cargo run --release --example end_to_end [-- scale]   # default 0.1
+//! ```
+
+use std::collections::BTreeMap;
+
+use goffish::algos::cc::{CcSg, CcVx};
+use goffish::algos::pagerank::{PageRankSg, PageRankVx, RankKernel};
+use goffish::algos::sssp::{SsspSg, SsspVx};
+use goffish::algos::{gather_subgraph_values, gather_vertex_values};
+use goffish::bench::{fmt_secs, fmt_speedup, Table};
+use goffish::gofs::Store;
+use goffish::gopher::{run_on_store, GopherConfig};
+use goffish::graph::{gen, props, Graph};
+use goffish::metrics::JobMetrics;
+use goffish::partition::{HashPartitioner, MultilevelPartitioner, Partitioner};
+use goffish::pregel::{run_vertex, PregelConfig};
+
+const K: usize = 4; // simulated hosts (paper: 12; laptop default: 4)
+
+fn main() -> anyhow::Result<()> {
+    let scale: f64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0.1);
+    let datasets: Vec<(&str, Graph)> = vec![
+        ("RN", gen::rn_analog(scale, 11)),
+        ("TR", gen::tr_analog(scale, 22)),
+        ("LJ", gen::lj_analog(scale, 33)),
+    ];
+
+    let mut table = Table::new(
+        &format!("End-to-end: GoFFish vs vertex baseline (scale {scale}, k={K})"),
+        &["dataset", "algo", "gopher", "vertex", "speedup", "ss(g)", "ss(v)", "msgs(g)", "msgs(v)", "parity"],
+    );
+
+    for (name, g) in &datasets {
+        println!(
+            "\n--- {name}: {} vertices, {} edges, wcc {}, diameter~{}",
+            g.num_vertices(),
+            g.num_edges(),
+            props::wcc_count(g),
+            props::diameter_estimate(g, 3, 5)
+        );
+        let parts = MultilevelPartitioner::default().partition(g, K);
+        let root = std::env::temp_dir().join(format!(
+            "goffish_e2e_{}_{}",
+            name,
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&root);
+        let (store, dg) = Store::create(&root, name, g, &parts)?;
+        let vparts = HashPartitioner::default().partition(g, K);
+        let gcfg = GopherConfig::default();
+        let vcfg = PregelConfig::default();
+
+        // SSSP source: the max-out-degree vertex (vertex 0 of the directed
+        // analogs can have zero out-edges, which reaches nothing).
+        let source = (0..g.num_vertices() as u32)
+            .max_by_key(|&v| g.out_degree(v))
+            .unwrap_or(0);
+
+        for algo in ["cc", "sssp", "pagerank"] {
+            let (gm, vm, parity): (JobMetrics, JobMetrics, bool) = match algo {
+                "cc" => {
+                    let gres = run_on_store(&store, &CcSg, &gcfg)?;
+                    let vres = run_vertex(g, &vparts, &CcVx, &vcfg)?;
+                    let glabels = gather_subgraph_values(&dg, &gres.states);
+                    (gres.metrics, vres.metrics, glabels == vres.values)
+                }
+                "sssp" => {
+                    let gres = run_on_store(&store, &SsspSg { source }, &gcfg)?;
+                    let vres = run_vertex(g, &vparts, &SsspVx { source }, &vcfg)?;
+                    let states: BTreeMap<_, Vec<f32>> = gres
+                        .states
+                        .into_iter()
+                        .map(|(id, s)| (id, s.dist))
+                        .collect();
+                    let gdist = gather_vertex_values(&dg, &states);
+                    let parity = gdist.iter().zip(&vres.values).all(|(&a, &b)| {
+                        (a.is_infinite() && b.is_infinite()) || (a - b).abs() < 1e-3
+                    });
+                    (gres.metrics, vres.metrics, parity)
+                }
+                _ => {
+                    let prog = PageRankSg { supersteps: 30, kernel: RankKernel::Scalar };
+                    let gres = run_on_store(&store, &prog, &gcfg)?;
+                    let vres =
+                        run_vertex(g, &vparts, &PageRankVx { supersteps: 30 }, &vcfg)?;
+                    let states: BTreeMap<_, Vec<f32>> = gres
+                        .states
+                        .into_iter()
+                        .map(|(id, s)| (id, s.ranks))
+                        .collect();
+                    let granks = gather_vertex_values(&dg, &states);
+                    let parity = granks
+                        .iter()
+                        .zip(&vres.values)
+                        .all(|(&a, &b)| (a - b).abs() < 1e-5 + 1e-3 * b.abs());
+                    (gres.metrics, vres.metrics, parity)
+                }
+            };
+            assert!(parity, "{name}/{algo}: engines disagree");
+            table.row(&[
+                name.to_string(),
+                algo.to_string(),
+                fmt_secs(gm.makespan_seconds()),
+                fmt_secs(vm.makespan_seconds()),
+                fmt_speedup(vm.makespan_seconds() / gm.makespan_seconds()),
+                gm.num_supersteps().to_string(),
+                vm.num_supersteps().to_string(),
+                gm.total_messages().to_string(),
+                vm.total_messages().to_string(),
+                "ok".to_string(),
+            ]);
+        }
+    }
+    table.print();
+    println!("\nAll engine pairs agreed on results. OK");
+    Ok(())
+}

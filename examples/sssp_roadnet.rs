@@ -1,0 +1,69 @@
+//! SSSP on a road network: the paper's flagship traversal win (§6.4).
+//!
+//! Runs sub-graph centric SSSP (Dijkstra inside each sub-graph per
+//! superstep, Algorithm 3) against the vertex-centric baseline on the
+//! same weighted road-network analog, verifying both agree and showing
+//! the superstep collapse that drives the paper's 78x.
+//!
+//! ```bash
+//! cargo run --release --example sssp_roadnet [-- scale]
+//! ```
+
+use std::collections::BTreeMap;
+
+use goffish::algos::sssp::{SsspSg, SsspVx};
+use goffish::algos::gather_vertex_values;
+use goffish::gofs::subgraph::discover;
+use goffish::gopher::{run, GopherConfig};
+use goffish::graph::gen;
+use goffish::partition::{HashPartitioner, MultilevelPartitioner, Partitioner};
+use goffish::pregel::{run_vertex, PregelConfig};
+
+fn main() -> anyhow::Result<()> {
+    let scale: f64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0.15);
+    let k = 4;
+    let g = gen::with_random_weights(&gen::rn_analog(scale, 7), 1.0, 10.0, 8);
+    println!(
+        "road analog: {} vertices, {} edges (scale {scale})",
+        g.num_vertices(),
+        g.num_edges()
+    );
+    let source = 0u32;
+
+    // Gopher (sub-graph centric).
+    let parts = MultilevelPartitioner::default().partition(&g, k);
+    let dg = discover(&g, &parts)?;
+    let sg_res = run(&dg, &SsspSg { source }, &GopherConfig::default())?;
+    let states: BTreeMap<_, Vec<f32>> = sg_res
+        .states
+        .into_iter()
+        .map(|(id, s)| (id, s.dist))
+        .collect();
+    let sg_dist = gather_vertex_values(&dg, &states);
+    println!("{}", sg_res.metrics.report("gopher/sssp"));
+
+    // Vertex-centric baseline (Giraph stand-in).
+    let vparts = HashPartitioner::default().partition(&g, k);
+    let vx_res = run_vertex(&g, &vparts, &SsspVx { source }, &PregelConfig::default())?;
+    println!("{}", vx_res.metrics.report("vertex/sssp"));
+
+    // Agreement.
+    let mut max_diff = 0f32;
+    for (&a, &b) in sg_dist.iter().zip(&vx_res.values) {
+        if a.is_finite() && b.is_finite() {
+            max_diff = max_diff.max((a - b).abs());
+        } else {
+            assert_eq!(a.is_finite(), b.is_finite());
+        }
+    }
+    println!("max distance diff: {max_diff:e}");
+
+    let ratio = vx_res.metrics.num_supersteps() as f64 / sg_res.metrics.num_supersteps() as f64;
+    println!(
+        "supersteps: gopher {} vs vertex {} — {:.1}x fewer (paper: 84 vs 1000+ on RN)",
+        sg_res.metrics.num_supersteps(),
+        vx_res.metrics.num_supersteps(),
+        ratio
+    );
+    Ok(())
+}

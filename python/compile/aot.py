@@ -1,0 +1,110 @@
+"""AOT: lower the Layer-2 model functions to HLO *text* artifacts.
+
+The interchange format is HLO text, **not** ``serialize()``-d
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids which
+the Rust side's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids, so text round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Each model function is lowered once per rung of the block-size ladder;
+``rust/src/runtime/engine.rs`` pads every sub-graph to the next rung and
+dispatches to the matching executable. A plain-text manifest
+(``artifacts/manifest.txt``) records kernel name, file, rung and the
+compile-time loop count, one per line::
+
+    pagerank_step pagerank_step_128.hlo.txt 128 1
+    sssp_relax sssp_relax_128.hlo.txt 128 8
+
+Run via ``make artifacts`` (no-op when inputs are unchanged). Python never
+runs after this point: the Rust binary is self-contained.
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Block-size ladder: padded sub-graph sizes we compile executables for.
+# 64..512 covers the sub-graph size distribution of the evaluation graphs;
+# larger sub-graphs fall back to the Rust scalar path (or tile over rungs).
+LADDER = (64, 128, 256, 512)
+# Compile-time inner-loop counts (see model.py docstrings).
+PAGERANK_LOCAL_ITERS = 10
+SSSP_SWEEPS = 8
+CC_SWEEPS = 8
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def build_entries():
+    """Yield (kernel_name, rung, loop_count, lowered) for every artifact."""
+    for n in LADDER:
+        adj = _spec(n, n)
+        vec = _spec(n)
+        two = _spec(2)
+
+        yield (
+            "pagerank_step", n, 1,
+            jax.jit(model.pagerank_step).lower(adj, vec, vec, two),
+        )
+        yield (
+            "pagerank_local", n, PAGERANK_LOCAL_ITERS,
+            jax.jit(
+                functools.partial(model.pagerank_local,
+                                  iters=PAGERANK_LOCAL_ITERS)
+            ).lower(adj, vec, two),
+        )
+        yield (
+            "sssp_relax", n, SSSP_SWEEPS,
+            jax.jit(
+                functools.partial(model.sssp_relax, sweeps=SSSP_SWEEPS)
+            ).lower(adj, vec),
+        )
+        yield (
+            "cc_flood", n, CC_SWEEPS,
+            jax.jit(
+                functools.partial(model.cc_flood, sweeps=CC_SWEEPS)
+            ).lower(adj, vec),
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest_lines = []
+    for name, n, loops, lowered in build_entries():
+        fname = f"{name}_{n}.hlo.txt"
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(f"{name} {fname} {n} {loops}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote manifest with {len(manifest_lines)} entries")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Layer-1 Pallas kernels for GoFFish per-sub-graph numeric hot spots.
+
+Each kernel operates on a *padded dense block* representation of one
+sub-graph's adjacency (GoFS sub-graphs are small relative to the whole
+graph; Gopher pads each sub-graph to the next rung of a block-size ladder
+and dispatches to the matching AOT-compiled executable).
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and correctness on this testbed is
+what we validate. TPU tiling choices (BlockSpec ladder) are still made as
+if for VMEM — see DESIGN.md §Hardware-Adaptation.
+"""
+
+from .pagerank import pagerank_step_pallas
+from .minplus import minplus_relax_pallas
+from .maxprop import maxprop_step_pallas
+
+__all__ = [
+    "pagerank_step_pallas",
+    "minplus_relax_pallas",
+    "maxprop_step_pallas",
+]

@@ -1,0 +1,63 @@
+"""Masked max-propagation Pallas kernel (connected-components label flood).
+
+One label-flood step over a padded dense adjacency block::
+
+    out[i] = max(label[i], max_{j : A[i,j]=1} label[j])
+
+This is the inner step of HCC-style connected components (the paper's
+§5.1): iterated to fixpoint it floods the largest vertex label through
+every component of the block. Non-edges must not contribute, so the kernel
+masks them to ``-inf`` before the row-max.
+
+Labels travel as f32 (vertex ids are < 2^24 at sub-graph block scale, so
+f32 is exact); the Rust side converts u32 labels to f32 and back.
+
+Tiling mirrors pagerank.py: grid over row blocks, full label vector
+resident per program instance.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _maxprop_kernel(a_ref, lab_ref, lab_blk_ref, o_ref):
+    a = a_ref[...]            # (bm, n) 0/1 adjacency tile
+    lab = lab_ref[...]        # (n,) labels
+    mine = lab_blk_ref[...]   # (bm,) this block's labels
+    neg = jnp.asarray(-jnp.inf, dtype=lab.dtype)
+    masked = jnp.where(a > 0, lab[None, :], neg)
+    cand = jnp.max(masked, axis=1)
+    o_ref[...] = jnp.maximum(mine, cand)
+
+
+def maxprop_step_pallas(adj, labels, *, block_rows=None):
+    """One max-label flood step over a dense ``(n, n)`` block.
+
+    Args:
+      adj: ``(n, n)`` 0/1 adjacency (symmetric for undirected components;
+        ``adj[i, j] = 1`` iff ``j`` is a neighbour of ``i``).
+      labels: ``(n,)`` f32 labels.
+      block_rows: row-block size; default ``min(n, 128)``.
+
+    Returns:
+      ``(n,)`` updated labels.
+    """
+    n = adj.shape[0]
+    assert adj.shape == (n, n), adj.shape
+    assert labels.shape == (n,), labels.shape
+    bm = block_rows or min(n, 128)
+    assert n % bm == 0, (n, bm)
+    grid = (n // bm,)
+    return pl.pallas_call(
+        _maxprop_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), labels.dtype),
+        interpret=True,
+    )(adj, labels, labels)

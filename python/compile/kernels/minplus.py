@@ -1,0 +1,67 @@
+"""Min-plus relaxation Pallas kernel (SSSP / Bellman-Ford step).
+
+One relaxation sweep over a padded dense weight block::
+
+    out[i] = min(dist[i], min_j (dist[j] + W[i, j]))
+
+where ``W[i, j]`` is the weight of edge ``j -> i`` (in-link orientation,
+matching the PageRank kernel) or ``+inf`` when no such edge exists. This is
+one step of the min-plus (tropical) matrix-vector product that underlies
+Bellman-Ford; iterating it ``n-1`` times from the source yields all
+shortest paths within the block.
+
+Gopher uses it as the sub-graph-internal relaxation engine for SSSP on
+dense sub-graphs: the scalar Dijkstra path (Algorithm 3 in the paper) wins
+for sparse sub-graphs, while the blocked min-plus sweep is the "fast
+shared-memory kernel" alternative the paper's §7 envisions, and is what
+lowers onto the MXU-style tiling (VPU max/add lanes on TPU; here, XLA:CPU
+vector loops).
+
+Tiling mirrors pagerank.py: grid over row blocks, full ``dist`` vector
+resident, ``(bm, n)`` weight tile per program instance.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _minplus_kernel(w_ref, dist_ref, dist_blk_ref, o_ref):
+    w = w_ref[...]              # (bm, n) in-edge weights, +inf for non-edges
+    dist = dist_ref[...]        # (n,) current tentative distances
+    mine = dist_blk_ref[...]    # (bm,) this block's current distances
+    # Tropical matvec: candidate[i] = min_j dist[j] + w[i, j].
+    cand = jnp.min(w + dist[None, :], axis=1)
+    o_ref[...] = jnp.minimum(mine, cand)
+
+
+def minplus_relax_pallas(weights, dist, *, block_rows=None):
+    """One min-plus relaxation sweep over a dense ``(n, n)`` weight block.
+
+    Args:
+      weights: ``(n, n)`` matrix, ``weights[i, j]`` = weight of edge
+        ``j -> i``, ``+inf`` where absent.
+      dist: ``(n,)`` tentative distances (``+inf`` = unreached).
+      block_rows: row-block size; default ``min(n, 128)``.
+
+    Returns:
+      ``(n,)`` improved distances.
+    """
+    n = weights.shape[0]
+    assert weights.shape == (n, n), weights.shape
+    assert dist.shape == (n,), dist.shape
+    bm = block_rows or min(n, 128)
+    assert n % bm == 0, (n, bm)
+    grid = (n // bm,)
+    return pl.pallas_call(
+        _minplus_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), dist.dtype),
+        interpret=True,
+    )(weights, dist, dist)

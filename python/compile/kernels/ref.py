@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the Layer-1 Pallas kernels.
+
+These are the correctness ground truth: simple, obviously-right jnp
+expressions with no Pallas, no tiling, no tricks. pytest compares every
+kernel against these under hypothesis-driven shape/seed sweeps, and the
+L2 model functions are *defined* in terms of kernels but *tested* against
+compositions of these references.
+"""
+
+import jax.numpy as jnp
+
+
+def pagerank_step_ref(adj, contrib, scalars):
+    """out[i] = base + alpha * sum_j adj[i, j] * contrib[j]."""
+    base, alpha = scalars[0], scalars[1]
+    return base + alpha * adj @ contrib
+
+
+def minplus_relax_ref(weights, dist):
+    """out[i] = min(dist[i], min_j dist[j] + weights[i, j])."""
+    return jnp.minimum(dist, jnp.min(weights + dist[None, :], axis=1))
+
+
+def maxprop_step_ref(adj, labels):
+    """out[i] = max(labels[i], max over neighbours j of labels[j])."""
+    masked = jnp.where(adj > 0, labels[None, :], -jnp.inf)
+    return jnp.maximum(labels, jnp.max(masked, axis=1))
+
+
+def pagerank_full_ref(adj, out_deg, n_total, alpha, iters, dangling="none"):
+    """Reference damped PageRank over a dense block, `iters` iterations.
+
+    Matches model.pagerank_local semantics: ranks start uniform at
+    1/n_total over the *live* vertices (out_deg >= 0 marks live, padding
+    rows carry out_deg = -1 and are frozen at rank 0).
+    """
+    live = out_deg >= 0
+    ranks = jnp.where(live, 1.0 / n_total, 0.0)
+    base = (1.0 - alpha) / n_total
+    for _ in range(iters):
+        safe_deg = jnp.where(out_deg > 0, out_deg, 1)
+        contrib = jnp.where(out_deg > 0, ranks / safe_deg, 0.0)
+        ranks = jnp.where(live, base + alpha * adj @ contrib, 0.0)
+    return ranks
+
+
+def sssp_full_ref(weights, source, iters):
+    """Iterated min-plus relaxation from one source (Bellman-Ford)."""
+    n = weights.shape[0]
+    dist = jnp.where(jnp.arange(n) == source, 0.0, jnp.inf)
+    for _ in range(iters):
+        dist = minplus_relax_ref(weights, dist)
+    return dist
+
+
+def cc_full_ref(adj, labels, iters):
+    """Iterated max-label flood."""
+    for _ in range(iters):
+        labels = maxprop_step_ref(adj, labels)
+    return labels

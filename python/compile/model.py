@@ -1,0 +1,108 @@
+"""Layer-2 JAX compute graphs for GoFFish per-sub-graph analytics.
+
+These are the functions Gopher's hot path actually executes (after AOT
+lowering to HLO, loaded by ``rust/src/runtime``). Each one composes the
+Layer-1 Pallas kernels with the graph-semantics bookkeeping that the paper
+keeps *inside* a sub-graph's shared-memory computation:
+
+* ``pagerank_step``  — one damped PageRank iteration over a padded dense
+  sub-graph block (classic PageRank: Gopher calls it once per superstep).
+* ``pagerank_local`` — ``ITERS`` iterations via ``lax.scan`` (BlockRank's
+  local phase: rank a sub-graph in isolation in one superstep).
+* ``sssp_relax``     — ``k`` min-plus sweeps via ``lax.scan`` (sub-graph
+  internal shortest-path closure between message exchanges).
+* ``cc_flood``       — ``k`` max-label floods via ``lax.scan``.
+
+Padded-block convention (shared with rust/src/runtime/engine.rs):
+sub-graphs are densified into the next block-ladder rung ``n``; rows past
+the live vertex count are *padding* and are marked by ``out_deg = -1``
+(PageRank), by ``+inf`` weight rows/cols (SSSP), or by zero adjacency rows
+(CC). All model functions keep padding inert so the Rust side can slice
+the first ``n_live`` outputs and ignore the rest.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    pagerank_step_pallas,
+    minplus_relax_pallas,
+    maxprop_step_pallas,
+)
+
+
+def pagerank_step(adj, ranks, out_deg, scalars):
+    """One damped PageRank iteration over a padded dense block.
+
+    Args:
+      adj: ``(n, n)`` f32 in-adjacency (``adj[i, j] = 1`` iff edge j->i).
+      ranks: ``(n,)`` f32 current ranks (padding rows 0).
+      out_deg: ``(n,)`` f32 *global* out-degrees; ``-1`` marks padding,
+        ``0`` marks dangling vertices (handled by the base term upstream).
+      scalars: ``(2,)`` f32 ``[base, alpha]`` where ``base`` already folds
+        the teleport term and any dangling-mass share computed by Gopher.
+
+    Returns:
+      ``(n,)`` f32 updated ranks, padding frozen at 0.
+    """
+    live = out_deg >= 0.0
+    safe_deg = jnp.where(out_deg > 0.0, out_deg, 1.0)
+    contrib = jnp.where(out_deg > 0.0, ranks / safe_deg, 0.0)
+    new_ranks = pagerank_step_pallas(adj, contrib, scalars)
+    return jnp.where(live, new_ranks, 0.0)
+
+
+def pagerank_local(adj, out_deg, scalars, *, iters):
+    """BlockRank local phase: run ``iters`` PageRank iterations in-block.
+
+    Ranks start uniform at ``1/n_total`` over live vertices, where
+    ``n_total`` is recovered from ``scalars``: the caller passes
+    ``base = (1 - alpha) / n_total`` — exactly the classic teleport term —
+    so ``n_total = (1 - alpha) / base``.
+
+    Returns the converged (after ``iters`` steps) in-block ranks.
+    """
+    base, alpha = scalars[0], scalars[1]
+    n_total = (1.0 - alpha) / base
+    live = out_deg >= 0.0
+    ranks0 = jnp.where(live, 1.0 / n_total, 0.0)
+
+    def body(ranks, _):
+        return pagerank_step(adj, ranks, out_deg, scalars), None
+
+    ranks, _ = jax.lax.scan(body, ranks0, None, length=iters)
+    return ranks
+
+
+def sssp_relax(weights, dist, *, sweeps):
+    """``sweeps`` min-plus relaxation sweeps over a padded weight block.
+
+    Args:
+      weights: ``(n, n)`` f32, ``weights[i, j]`` = weight of edge j->i,
+        ``+inf`` for non-edges and anything touching padding.
+      dist: ``(n,)`` f32 tentative distances (``+inf`` = unreached).
+
+    Returns:
+      ``(n,)`` f32 improved distances. With ``sweeps >= n_live - 1`` this
+      is the full shortest-path closure within the block.
+    """
+
+    def body(d, _):
+        return minplus_relax_pallas(weights, d), None
+
+    dist, _ = jax.lax.scan(body, dist, None, length=sweeps)
+    return dist
+
+
+def cc_flood(adj, labels, *, sweeps):
+    """``sweeps`` max-label flood steps over a padded adjacency block.
+
+    Padding rows have all-zero adjacency, so their labels never change and
+    never propagate (the Rust side seeds padding labels with ``-inf``).
+    """
+
+    def body(lab, _):
+        return maxprop_step_pallas(adj, lab), None
+
+    labels, _ = jax.lax.scan(body, labels, None, length=sweeps)
+    return labels

@@ -1,0 +1,139 @@
+//! Ablations called out in DESIGN.md §6:
+//!
+//! * **A1 partitioner** (§4.3): hash vs range vs multilevel — edge cut,
+//!   CC supersteps, messages. The paper's co-design argument is that
+//!   locality-preserving partitioning is what gives sub-graphs their
+//!   power; hashing degenerates sub-graphs toward single vertices.
+//! * **A2 BlockRank** (§5.3): classic-PR-with-convergence (uniform seed)
+//!   vs BlockRank seeding — supersteps to convergence.
+//! * **A3 XLA kernel**: scalar vs AOT-XLA per-sub-graph PageRank inner
+//!   loop (requires `make artifacts`).
+
+mod common;
+
+use std::sync::Arc;
+
+use goffish::algos::blockrank::BlockRankSg;
+use goffish::algos::cc::CcSg;
+use goffish::algos::pagerank::{PageRankSg, RankKernel};
+use goffish::bench::{fmt_secs, measure, Table};
+use goffish::gofs::subgraph::discover;
+use goffish::gopher::{run, GopherConfig};
+use goffish::partition::{
+    HashPartitioner, MultilevelPartitioner, Partitioner, RangePartitioner,
+};
+use goffish::runtime::XlaEngine;
+
+fn main() {
+    ablation_partitioner();
+    ablation_blockrank();
+    ablation_xla_kernel();
+}
+
+fn ablation_partitioner() {
+    let g = goffish::graph::gen::rn_analog(common::scale(), 11);
+    let mut t = Table::new(
+        "A1: partitioning strategy (CC on RN analog)",
+        &["strategy", "cut%", "subgraphs", "supersteps", "messages", "compute"],
+    );
+    let strategies: Vec<Box<dyn Partitioner>> = vec![
+        Box::new(MultilevelPartitioner::default()),
+        Box::new(HashPartitioner::default()),
+        Box::new(RangePartitioner),
+    ];
+    let mut cut_multilevel = f64::NAN;
+    let mut ss_multilevel = 0usize;
+    let mut ss_hash = 0usize;
+    for s in strategies {
+        let parts = s.partition(&g, common::K);
+        let m = parts.metrics(&g);
+        let dg = discover(&g, &parts).unwrap();
+        let res = run(&dg, &CcSg, &GopherConfig::default()).unwrap();
+        if s.name() == "multilevel" {
+            cut_multilevel = m.cut_fraction;
+            ss_multilevel = res.metrics.num_supersteps();
+        }
+        if s.name() == "hash" {
+            ss_hash = res.metrics.num_supersteps();
+        }
+        t.row(&[
+            s.name().to_string(),
+            format!("{:.1}", m.cut_fraction * 100.0),
+            dg.num_subgraphs().to_string(),
+            res.metrics.num_supersteps().to_string(),
+            res.metrics.total_messages().to_string(),
+            fmt_secs(res.metrics.compute_seconds),
+        ]);
+    }
+    t.print();
+    assert!(cut_multilevel < 0.2, "multilevel cut should be small");
+    assert!(
+        ss_multilevel <= ss_hash,
+        "locality partitioning must not need more supersteps"
+    );
+    println!("A1 assertions OK (multilevel cut {:.1}%)", cut_multilevel * 100.0);
+}
+
+fn ablation_blockrank() {
+    let g = goffish::graph::gen::lj_analog(common::scale() * 0.5, 33);
+    let parts = MultilevelPartitioner::default().partition(&g, common::K);
+    let dg = discover(&g, &parts).unwrap();
+    let directory: Vec<u32> = dg.partitions.iter().map(|p| p.len() as u32).collect();
+    let cfg = GopherConfig { max_supersteps: 500, ..Default::default() };
+
+    let mut t = Table::new("A2: BlockRank vs classic PR convergence (LJ analog)", &[
+        "variant",
+        "supersteps",
+        "messages",
+        "compute",
+    ]);
+    let mut steps = Vec::new();
+    for (label, seeded) in [("classic (uniform seed)", false), ("blockrank (seeded)", true)] {
+        let mut prog = BlockRankSg::new(&directory);
+        prog.seed_with_blockrank = seeded;
+        prog.eps = 1e-8;
+        let res = run(&dg, &prog, &cfg).unwrap();
+        steps.push(res.metrics.num_supersteps());
+        t.row(&[
+            label.to_string(),
+            res.metrics.num_supersteps().to_string(),
+            res.metrics.total_messages().to_string(),
+            fmt_secs(res.metrics.compute_seconds),
+        ]);
+    }
+    t.print();
+    assert!(steps[1] <= steps[0], "BlockRank seeding must not converge slower");
+    println!("A2 assertions OK ({} -> {} supersteps)", steps[0], steps[1]);
+}
+
+fn ablation_xla_kernel() {
+    let engine = match XlaEngine::load_default() {
+        Ok(e) => Arc::new(e),
+        Err(e) => {
+            println!("\nA3 skipped: {e:#} (run `make artifacts`)");
+            return;
+        }
+    };
+    let g = goffish::graph::gen::lj_analog(common::scale() * 0.5, 33);
+    let parts = MultilevelPartitioner::default().partition(&g, common::K);
+    let dg = discover(&g, &parts).unwrap();
+    let cfg = GopherConfig::default();
+
+    let mut t = Table::new(
+        "A3: per-sub-graph PR inner loop, scalar vs XLA (LJ analog)",
+        &["kernel", "median_run", "supersteps"],
+    );
+    for (label, kernel) in [
+        ("scalar", RankKernel::Scalar),
+        ("xla", RankKernel::Xla(engine.clone())),
+    ] {
+        let m = measure(1, 3, || {
+            let prog = PageRankSg { supersteps: 10, kernel: kernel.clone() };
+            let res = run(&dg, &prog, &cfg).unwrap();
+            assert_eq!(res.metrics.num_supersteps(), 10);
+        });
+        t.row(&[label.to_string(), fmt_secs(m.median), "10".to_string()]);
+    }
+    t.print();
+    println!("A3 emitted (see EXPERIMENTS.md §Perf for interpretation)");
+}

@@ -1,0 +1,89 @@
+//! Fig 4(c): superstep counts, Gopher vs the vertex baseline.
+//!
+//! Paper reference: CC on RN collapses 554 -> 7; TR/LJ take 5-ish on
+//! Gopher vs 11-30 on Giraph; PageRank is fixed at 30 on both. The
+//! superstep *ratio* on traversal algorithms tracks vertex-diameter /
+//! meta-diameter, which is the abstraction's whole point (§3.3).
+
+mod common;
+
+use goffish::algos::bfs::{BfsSg, BfsVx};
+use goffish::algos::cc::{CcSg, CcVx};
+use goffish::algos::pagerank::{PageRankSg, PageRankVx, RankKernel};
+use goffish::algos::sssp::{SsspSg, SsspVx};
+use goffish::bench::Table;
+use goffish::gopher::{run, GopherConfig};
+use goffish::graph::props;
+use goffish::partition::{HashPartitioner, Partitioner};
+use goffish::pregel::{run_vertex, PregelConfig};
+
+fn main() {
+    let mut t = Table::new(
+        &format!("Fig 4(c) analog: supersteps, scale {}", common::scale()),
+        &["dataset", "algo", "gopher", "vertex", "ratio", "meta_diam", "vert_diam"],
+    );
+
+    for (name, g) in common::datasets() {
+        let (_, dg) = common::partitioned(&g);
+        let vparts = HashPartitioner::default().partition(&g, common::K);
+        let source = common::best_source(&g);
+        let gcfg = GopherConfig { cores_per_worker: 2, ..Default::default() };
+        let vcfg = PregelConfig { cores_per_worker: 2, ..Default::default() };
+        let meta_d = props::diameter_estimate(&dg.meta_graph(), 4, 5);
+        let vert_d = props::diameter_estimate(&g, 4, 9);
+
+        for algo in ["cc", "sssp", "bfs", "pagerank"] {
+            let (gss, vss) = match algo {
+                "cc" => (
+                    run(&dg, &CcSg, &gcfg).unwrap().metrics.num_supersteps(),
+                    run_vertex(&g, &vparts, &CcVx, &vcfg).unwrap().metrics.num_supersteps(),
+                ),
+                "sssp" => (
+                    run(&dg, &SsspSg { source }, &gcfg).unwrap().metrics.num_supersteps(),
+                    run_vertex(&g, &vparts, &SsspVx { source }, &vcfg)
+                        .unwrap()
+                        .metrics
+                        .num_supersteps(),
+                ),
+                "bfs" => (
+                    run(&dg, &BfsSg { source }, &gcfg).unwrap().metrics.num_supersteps(),
+                    run_vertex(&g, &vparts, &BfsVx { source }, &vcfg)
+                        .unwrap()
+                        .metrics
+                        .num_supersteps(),
+                ),
+                _ => (
+                    run(&dg, &PageRankSg { supersteps: 30, kernel: RankKernel::Scalar }, &gcfg)
+                        .unwrap()
+                        .metrics
+                        .num_supersteps(),
+                    run_vertex(&g, &vparts, &PageRankVx { supersteps: 30 }, &vcfg)
+                        .unwrap()
+                        .metrics
+                        .num_supersteps(),
+                ),
+            };
+            t.row(&[
+                name.to_string(),
+                algo.to_string(),
+                gss.to_string(),
+                vss.to_string(),
+                format!("{:.1}", vss as f64 / gss as f64),
+                meta_d.to_string(),
+                vert_d.to_string(),
+            ]);
+            if algo == "cc" && name == "RN" {
+                assert!(
+                    gss * 8 < vss,
+                    "RN CC superstep collapse missing: {gss} vs {vss}"
+                );
+            }
+            if algo == "pagerank" {
+                assert_eq!(gss, 30);
+                assert_eq!(vss, 30);
+            }
+        }
+    }
+    t.print();
+    println!("\nshape assertions OK (RN collapse present; PR fixed at 30)");
+}

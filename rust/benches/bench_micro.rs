@@ -1,0 +1,113 @@
+//! Micro-benchmarks of the L3 hot paths — the §Perf baseline numbers.
+//!
+//! * codec encode/decode throughput (GoFS slice + message wire format)
+//! * sub-graph discovery throughput
+//! * superstep overhead: an empty-compute Gopher superstep (barrier +
+//!   routing + drain, no work) — the fixed cost every superstep pays
+//! * message routing throughput (PageRank superstep on LJ analog)
+//! * thread-pool dispatch overhead
+
+mod common;
+
+use goffish::algos::pagerank::{PageRankSg, RankKernel};
+use goffish::bench::{fmt_secs, measure, Table};
+use goffish::gofs::subgraph::discover;
+use goffish::gofs::Subgraph;
+use goffish::gopher::{
+    run, GopherConfig, IncomingMessage, SubgraphContext, SubgraphProgram,
+};
+use goffish::partition::{MultilevelPartitioner, Partitioner};
+use goffish::util::codec::{Decoder, Encoder};
+use goffish::util::pool;
+
+fn main() {
+    let mut t = Table::new("L3 micro-benchmarks", &["case", "median", "note"]);
+
+    // Codec throughput.
+    let vals: Vec<u64> = (0..100_000u64).map(|i| i.wrapping_mul(0x9E3779B9)).collect();
+    let m = measure(2, 10, || {
+        let mut e = Encoder::with_capacity(vals.len() * 5);
+        for &v in &vals {
+            e.put_varint(v);
+        }
+        let bytes = e.into_bytes();
+        let mut d = Decoder::new(&bytes);
+        for _ in 0..vals.len() {
+            let _ = d.get_varint().unwrap();
+        }
+    });
+    t.row(&[
+        "codec 100k varints rt".into(),
+        fmt_secs(m.median),
+        format!("{:.0} Mops/s", 0.2 / m.median),
+    ]);
+
+    // Discovery throughput.
+    let g = goffish::graph::gen::rn_analog(common::scale(), 11);
+    let parts = MultilevelPartitioner::default().partition(&g, common::K);
+    let m = measure(1, 5, || {
+        let dg = discover(&g, &parts).unwrap();
+        assert!(dg.num_subgraphs() > 0);
+    });
+    t.row(&[
+        format!("discovery RN ({}v)", g.num_vertices()),
+        fmt_secs(m.median),
+        format!("{:.1} Mv/s", g.num_vertices() as f64 / m.median / 1e6),
+    ]);
+
+    // Empty superstep overhead.
+    struct NSteps(usize);
+    impl SubgraphProgram for NSteps {
+        type Msg = ();
+        type State = ();
+        fn init(&self, _sg: &Subgraph) {}
+        fn compute(
+            &self,
+            _s: &mut (),
+            _sg: &Subgraph,
+            ctx: &mut SubgraphContext<'_, ()>,
+            _m: &[IncomingMessage<()>],
+        ) {
+            if ctx.superstep() >= self.0 {
+                ctx.vote_to_halt();
+            }
+        }
+    }
+    let dg = discover(&g, &parts).unwrap();
+    let steps = 50;
+    let m = measure(1, 5, || {
+        let res = run(&dg, &NSteps(steps), &GopherConfig::default()).unwrap();
+        assert_eq!(res.metrics.num_supersteps(), steps);
+    });
+    t.row(&[
+        format!("empty superstep x{steps} (k={})", common::K),
+        fmt_secs(m.median),
+        format!("{} per superstep", fmt_secs(m.median / steps as f64)),
+    ]);
+
+    // PageRank superstep (message routing + compute on LJ analog).
+    let lj = goffish::graph::gen::lj_analog(common::scale(), 33);
+    let ljp = MultilevelPartitioner::default().partition(&lj, common::K);
+    let ljdg = discover(&lj, &ljp).unwrap();
+    let m = measure(1, 3, || {
+        let prog = PageRankSg { supersteps: 5, kernel: RankKernel::Scalar };
+        run(&ljdg, &prog, &GopherConfig::default()).unwrap();
+    });
+    t.row(&[
+        format!("pagerank 5 ss LJ ({}e)", lj.num_edges()),
+        fmt_secs(m.median),
+        format!("{} per superstep", fmt_secs(m.median / 5.0)),
+    ]);
+
+    // Pool dispatch overhead.
+    let m = measure(2, 10, || {
+        pool::run_indexed(4, 1000, |_| {}).unwrap();
+    });
+    t.row(&[
+        "pool 1000 empty jobs x4 cores".into(),
+        fmt_secs(m.median),
+        format!("{} per job", fmt_secs(m.median / 1000.0)),
+    ]);
+
+    t.print();
+}

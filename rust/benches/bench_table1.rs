@@ -1,0 +1,52 @@
+//! Table 1: characteristics of the evaluation dataset analogs.
+//!
+//! Paper reference (full scale):
+//!   RN  1,965,206 v   2,766,607 e   diameter 849  WCC 2,638
+//!   TR 19,442,778 v  22,782,842 e   diameter  25  WCC 1
+//!   LJ  4,847,571 v  68,475,391 e   diameter  10  WCC 1,877
+//!
+//! The analogs must preserve the *shape*: RN = sparse/huge-diameter/many
+//! WCCs, TR = hub/small-diameter/one WCC, LJ = dense/power-law/small
+//! diameter. Run: `cargo bench --bench bench_table1`.
+
+mod common;
+
+use goffish::bench::Table;
+use goffish::graph::props;
+
+fn main() {
+    let ds = common::datasets();
+    let mut t = Table::new(
+        &format!("Table 1 analog (scale {})", common::scale()),
+        &["dataset", "vertices", "edges", "diameter", "wcc", "max_degree", "paper_shape"],
+    );
+    let shapes = [
+        ("RN", "sparse, huge diameter, many WCCs"),
+        ("TR", "mega-hub, tiny diameter, 1 WCC"),
+        ("LJ", "dense power-law, tiny diameter"),
+    ];
+    let mut diameters = Vec::new();
+    for ((name, g), (_, shape)) in ds.iter().zip(shapes) {
+        let deg = props::degree_stats(g);
+        let d = props::diameter_estimate(g, 4, 9);
+        diameters.push(d);
+        t.row(&[
+            name.to_string(),
+            g.num_vertices().to_string(),
+            g.num_edges().to_string(),
+            d.to_string(),
+            props::wcc_count(g).to_string(),
+            deg.max.to_string(),
+            shape.to_string(),
+        ]);
+    }
+    t.print();
+
+    // Shape assertions (the reproduction contract).
+    let (d_rn, d_tr, d_lj) = (diameters[0], diameters[1], diameters[2]);
+    assert!(d_rn > 5 * d_tr, "RN diameter must dwarf TR ({d_rn} vs {d_tr})");
+    assert!(d_rn > 5 * d_lj, "RN diameter must dwarf LJ ({d_rn} vs {d_lj})");
+    assert_eq!(props::wcc_count(&ds[1].1), 1, "TR must be one WCC");
+    assert!(props::wcc_count(&ds[0].1) > 1, "RN must fragment");
+    println!("\nshape assertions OK");
+}

@@ -1,0 +1,94 @@
+//! Shared plumbing for the figure/table benches.
+//!
+//! Every bench reads `GOFFISH_SCALE` (default 0.2) so the whole suite
+//! can be dialled from smoke-size to laptop-max, and builds the three
+//! Table-1 dataset analogs with fixed seeds so figures are comparable
+//! across benches.
+
+use goffish::gofs::{subgraph::discover, DistributedGraph, Store};
+use goffish::graph::{gen, Graph};
+use goffish::partition::{MultilevelPartitioner, Partitioner, Partitioning};
+use std::path::PathBuf;
+
+/// Simulated host count (the paper's testbed has 12).
+pub const K: usize = 12;
+
+pub fn scale() -> f64 {
+    std::env::var("GOFFISH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.2)
+}
+
+pub fn datasets() -> Vec<(&'static str, Graph)> {
+    let s = scale();
+    vec![
+        ("RN", gen::rn_analog(s, 11)),
+        ("TR", gen::tr_analog(s, 22)),
+        ("LJ", gen::lj_analog(s, 33)),
+    ]
+}
+
+pub fn partitioned(g: &Graph) -> (Partitioning, DistributedGraph) {
+    let parts = MultilevelPartitioner::default().partition(g, K);
+    let dg = discover(g, &parts).expect("discovery");
+    (parts, dg)
+}
+
+/// Build a store in a fresh temp dir; returns it with the discovery.
+pub fn store_for(name: &str, g: &Graph, parts: &Partitioning) -> (Store, DistributedGraph, PathBuf) {
+    let root = std::env::temp_dir().join(format!(
+        "goffish_bench_{name}_{}_{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .subsec_nanos()
+    ));
+    let _ = std::fs::remove_dir_all(&root);
+    let (store, dg) = Store::create(&root, name, g, parts).expect("store");
+    (store, dg, root)
+}
+
+/// Max-out-degree vertex: a safe SSSP/BFS source on the directed analogs.
+pub fn best_source(g: &Graph) -> u32 {
+    (0..g.num_vertices() as u32)
+        .max_by_key(|&v| g.out_degree(v))
+        .unwrap_or(0)
+}
+
+/// Paper-scale vertex counts (Table 1) for volume extrapolation.
+pub fn paper_vertices(name: &str) -> f64 {
+    match name {
+        "RN" => 1_965_206.0,
+        "TR" => 19_442_778.0,
+        "LJ" => 4_847_571.0,
+        _ => 1.0,
+    }
+}
+
+/// Volume factor: how much bigger the paper's dataset is than our analog.
+/// The cluster simulation multiplies measured bytes/records/compute by
+/// this so fixed costs (seeks, barrier latency) are weighed against
+/// paper-magnitude volumes, not analog-magnitude ones (DESIGN.md §3).
+pub fn volume_factor(name: &str, g: &Graph) -> f64 {
+    (paper_vertices(name) / g.num_vertices() as f64).max(1.0)
+}
+
+/// Scale a job's per-superstep volumes (compute seconds, messages,
+/// bytes) by `f`, leaving superstep *counts* untouched. First-order
+/// extrapolation of an analog-scale run to testbed scale; superstep
+/// counts for traversal algorithms are still analog-diameter counts, so
+/// the reported speedups are *conservative* for RN (the paper's vertex
+/// diameter is ~7x our analog's).
+pub fn scale_job(m: &goffish::metrics::JobMetrics, f: f64) -> goffish::metrics::JobMetrics {
+    let mut out = m.clone();
+    for ss in &mut out.supersteps {
+        for c in &mut ss.partition_compute_seconds {
+            *c *= f;
+        }
+        ss.messages = (ss.messages as f64 * f) as u64;
+        ss.bytes = (ss.bytes as f64 * f) as u64;
+    }
+    out
+}

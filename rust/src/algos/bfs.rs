@@ -1,0 +1,210 @@
+//! Breadth-First Search levels from a source (a §5 traversal algorithm).
+//!
+//! Sub-graph centric: flood the whole sub-graph in one superstep (local
+//! BFS), push frontier levels across remote edges. Vertex-centric: one
+//! hop per superstep. Undirected view for undirected graphs, out-edges
+//! for directed ones (matching SSSP's convention).
+
+use std::collections::VecDeque;
+
+use crate::gofs::Subgraph;
+use crate::gopher::{IncomingMessage, SubgraphContext, SubgraphProgram};
+use crate::graph::csr::{Graph, VertexId};
+use crate::pregel::{VertexContext, VertexProgram};
+
+pub const UNREACHED: u32 = u32::MAX;
+
+/// Sub-graph centric BFS.
+pub struct BfsSg {
+    pub source: VertexId,
+}
+
+impl SubgraphProgram for BfsSg {
+    type Msg = (u32, u32); // (global vertex, candidate level)
+    type State = Vec<u32>; // level per local vertex
+
+    fn init(&self, sg: &Subgraph) -> Vec<u32> {
+        vec![UNREACHED; sg.num_vertices()]
+    }
+
+    fn compute(
+        &self,
+        levels: &mut Vec<u32>,
+        sg: &Subgraph,
+        ctx: &mut SubgraphContext<'_, Self::Msg>,
+        msgs: &[IncomingMessage<Self::Msg>],
+    ) {
+        let mut frontier: Vec<u32> = Vec::new();
+        if ctx.superstep() == 1 {
+            if let Some(local) = sg.local_id(self.source) {
+                levels[local as usize] = 0;
+                frontier.push(local);
+            }
+        }
+        for m in msgs {
+            let (gv, lvl) = m.payload;
+            if let Some(local) = sg.local_id(gv) {
+                if lvl < levels[local as usize] {
+                    levels[local as usize] = lvl;
+                    frontier.push(local);
+                }
+            }
+        }
+        if !frontier.is_empty() {
+            // In-memory BFS over the whole sub-graph in this superstep.
+            let undirected = !sg.local.directed();
+            let mut q: VecDeque<u32> = frontier.into_iter().collect();
+            let mut improved = vec![false; levels.len()];
+            for &v in &q {
+                improved[v as usize] = true;
+            }
+            while let Some(v) = q.pop_front() {
+                let lv = levels[v as usize];
+                let mut visit = |t: u32, levels: &mut Vec<u32>, q: &mut VecDeque<u32>, improved: &mut Vec<bool>| {
+                    if lv + 1 < levels[t as usize] {
+                        levels[t as usize] = lv + 1;
+                        improved[t as usize] = true;
+                        q.push_back(t);
+                    }
+                };
+                let outs: Vec<u32> = sg.local.out_neighbors(v).to_vec();
+                for t in outs {
+                    visit(t, levels, &mut q, &mut improved);
+                }
+                if undirected {
+                    let ins: Vec<u32> = sg.local.in_neighbors(v).to_vec();
+                    for s in ins {
+                        visit(s, levels, &mut q, &mut improved);
+                    }
+                }
+            }
+            // Boundary push.
+            let push = |r: &crate::gofs::RemoteRef,
+                        levels: &[u32],
+                        improved: &[bool],
+                        ctx: &mut SubgraphContext<'_, Self::Msg>| {
+                if improved[r.local as usize] {
+                    let lvl = levels[r.local as usize];
+                    if lvl != UNREACHED {
+                        ctx.send_to_subgraph_vertex(
+                            crate::gofs::SubgraphId {
+                                partition: r.partition,
+                                index: r.subgraph,
+                            },
+                            r.target_global,
+                            (r.target_global, lvl + 1),
+                        );
+                    }
+                }
+            };
+            for r in &sg.remote_out {
+                push(r, levels, &improved, ctx);
+            }
+            if undirected {
+                for r in &sg.remote_in {
+                    push(r, levels, &improved, ctx);
+                }
+            }
+        }
+        ctx.vote_to_halt();
+    }
+}
+
+/// Vertex-centric BFS.
+pub struct BfsVx {
+    pub source: VertexId,
+}
+
+impl VertexProgram for BfsVx {
+    type Msg = u32;
+    type Value = u32;
+
+    fn init(&self, _vertex: VertexId, _g: &Graph) -> u32 {
+        UNREACHED
+    }
+
+    fn compute(&self, value: &mut u32, ctx: &mut VertexContext<'_, u32>, msgs: &[u32]) {
+        let mut best = *value;
+        if ctx.superstep() == 1 && ctx.vertex() == self.source {
+            best = 0;
+        }
+        for &m in msgs {
+            best = best.min(m);
+        }
+        if best < *value {
+            *value = best;
+            let next = best + 1;
+            if ctx.graph().directed() {
+                ctx.send_to_all_neighbors(next);
+            } else {
+                ctx.send_to_all_undirected(next);
+            }
+        }
+        ctx.vote_to_halt();
+    }
+
+    fn combine(&self, a: &u32, b: &u32) -> Option<u32> {
+        Some(*a.min(b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::gather_vertex_values;
+    use crate::gofs::subgraph::discover;
+    use crate::gopher::{run, GopherConfig};
+    use crate::graph::{gen, props};
+    use crate::partition::{HashPartitioner, MultilevelPartitioner, Partitioner};
+    use crate::pregel::{run_vertex, PregelConfig};
+
+    #[test]
+    fn subgraph_bfs_matches_oracle() {
+        let g = gen::road(12, 0.9, 0.02, 51);
+        let parts = MultilevelPartitioner::default().partition(&g, 3);
+        let dg = discover(&g, &parts).unwrap();
+        let res = run(&dg, &BfsSg { source: 0 }, &GopherConfig::default()).unwrap();
+        let got = gather_vertex_values(&dg, &res.states);
+        let want = props::bfs_distances(&g, 0);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn vertex_bfs_matches_oracle() {
+        let g = gen::grid(7, 9);
+        let parts = HashPartitioner::default().partition(&g, 3);
+        let res = run_vertex(&g, &parts, &BfsVx { source: 5 }, &PregelConfig::default()).unwrap();
+        assert_eq!(res.values, props::bfs_distances(&g, 5));
+    }
+
+    #[test]
+    fn directed_bfs_follows_out_edges_only() {
+        // 0 -> 1 -> 2, and 3 -> 1 (unreachable from 0 in directed sense).
+        let g = crate::graph::Graph::from_edges(4, &[(0, 1), (1, 2), (3, 1)], None, true).unwrap();
+        let parts = crate::partition::Partitioning::new(2, vec![0, 0, 1, 1]);
+        let dg = discover(&g, &parts).unwrap();
+        let res = run(&dg, &BfsSg { source: 0 }, &GopherConfig::default()).unwrap();
+        let got = gather_vertex_values(&dg, &res.states);
+        assert_eq!(got, vec![0, 1, 2, UNREACHED]);
+    }
+
+    #[test]
+    fn superstep_advantage_on_chain() {
+        let g = gen::chain(100);
+        let parts = MultilevelPartitioner::default().partition(&g, 4);
+        let dg = discover(&g, &parts).unwrap();
+        let sg = run(&dg, &BfsSg { source: 0 }, &GopherConfig::default()).unwrap();
+        let vx = run_vertex(
+            &g,
+            &HashPartitioner::default().partition(&g, 4),
+            &BfsVx { source: 0 },
+            &PregelConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(
+            gather_vertex_values(&dg, &sg.states),
+            vx.values
+        );
+        assert!(sg.metrics.num_supersteps() * 5 < vx.metrics.num_supersteps());
+    }
+}

@@ -1,0 +1,101 @@
+//! Graph algorithms in both programming models (paper §5).
+//!
+//! Every algorithm ships a **sub-graph centric** (Gopher) and a
+//! **vertex-centric** (Pregel baseline) implementation so the benchmark
+//! harnesses can reproduce the paper's Gopher-vs-Giraph comparisons with
+//! everything else held equal:
+//!
+//! | algorithm | sub-graph centric | vertex centric |
+//! |---|---|---|
+//! | Max Value (Alg 1 & 2)       | [`maxvalue::MaxValueSg`] | [`maxvalue::MaxValueVx`] |
+//! | Connected Components (§5.1) | [`cc::CcSg`]             | [`cc::CcVx`] |
+//! | SSSP (Alg 3, §5.2)          | [`sssp::SsspSg`]         | [`sssp::SsspVx`] |
+//! | BFS                         | [`bfs::BfsSg`]           | [`bfs::BfsVx`] |
+//! | PageRank (§5.3)             | [`pagerank::PageRankSg`] | [`pagerank::PageRankVx`] |
+//! | BlockRank (§5.3)            | [`blockrank::BlockRankSg`] | — (paper has none) |
+//!
+//! The sub-graph PageRank/BlockRank/SSSP/CC programs can route their
+//! per-sub-graph inner loops through the AOT-compiled XLA kernels (see
+//! `runtime::programs`) — the paper §7's "fast shared-memory kernels
+//! within a sub-graph".
+
+pub mod maxvalue;
+pub mod cc;
+pub mod sssp;
+pub mod bfs;
+pub mod pagerank;
+pub mod blockrank;
+
+use crate::gofs::{DistributedGraph, SubgraphId};
+use std::collections::BTreeMap;
+
+/// Scatter per-sub-graph per-vertex vectors back to one global vector.
+///
+/// `states[sg]` must hold one value per local vertex of `sg`, in local-id
+/// order. Vertices never covered (impossible for a complete run) panic.
+pub fn gather_vertex_values<T: Copy>(
+    dg: &DistributedGraph,
+    states: &BTreeMap<SubgraphId, Vec<T>>,
+) -> Vec<T> {
+    let mut out: Vec<Option<T>> = vec![None; dg.num_global_vertices as usize];
+    for sg in dg.subgraphs() {
+        let vals = &states[&sg.id];
+        assert_eq!(vals.len(), sg.num_vertices(), "state length mismatch for {}", sg.id);
+        for (i, &v) in sg.vertices.iter().enumerate() {
+            out[v as usize] = Some(vals[i]);
+        }
+    }
+    out.into_iter()
+        .map(|v| v.expect("every vertex covered by exactly one sub-graph"))
+        .collect()
+}
+
+/// Scatter a single per-sub-graph value to every vertex of the sub-graph.
+pub fn gather_subgraph_values<T: Copy>(
+    dg: &DistributedGraph,
+    states: &BTreeMap<SubgraphId, T>,
+) -> Vec<T> {
+    let mut out: Vec<Option<T>> = vec![None; dg.num_global_vertices as usize];
+    for sg in dg.subgraphs() {
+        let val = states[&sg.id];
+        for &v in &sg.vertices {
+            out[v as usize] = Some(val);
+        }
+    }
+    out.into_iter()
+        .map(|v| v.expect("every vertex covered"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gofs::subgraph::discover;
+    use crate::graph::gen;
+    use crate::partition::{Partitioner, RangePartitioner};
+
+    #[test]
+    fn gather_round_trips_vertex_ids() {
+        let g = gen::road(10, 0.9, 0.02, 3);
+        let parts = RangePartitioner.partition(&g, 3);
+        let dg = discover(&g, &parts).unwrap();
+        let states: BTreeMap<SubgraphId, Vec<u32>> = dg
+            .subgraphs()
+            .map(|sg| (sg.id, sg.vertices.clone()))
+            .collect();
+        let gathered = gather_vertex_values(&dg, &states);
+        let expect: Vec<u32> = (0..g.num_vertices() as u32).collect();
+        assert_eq!(gathered, expect);
+    }
+
+    #[test]
+    fn gather_subgraph_uniform() {
+        let g = gen::chain(6);
+        let parts = RangePartitioner.partition(&g, 2);
+        let dg = discover(&g, &parts).unwrap();
+        let states: BTreeMap<SubgraphId, u32> =
+            dg.subgraphs().map(|sg| (sg.id, sg.id.partition)).collect();
+        let gathered = gather_subgraph_values(&dg, &states);
+        assert_eq!(gathered, vec![0, 0, 0, 1, 1, 1]);
+    }
+}

@@ -1,0 +1,325 @@
+//! PageRank (paper §5.3) — classic damped PageRank in both models.
+//!
+//! The paper's Gopher PageRank "simulates one iteration of vertex rank
+//! updates within a sub-graph per superstep, running for the same 30
+//! supersteps as Giraph": no superstep savings, which is exactly why
+//! PageRank is Gopher's weakest case (Fig 4a, LJ). We reproduce that
+//! faithfully: per superstep each sub-graph performs one rank update over
+//! its local topology; contributions across remote edges travel as
+//! messages.
+//!
+//! The per-sub-graph rank update is the numeric hot spot, and is
+//! pluggable via [`RankKernel`]:
+//! * [`RankKernel::Scalar`] — CSR in-edge loop in Rust;
+//! * [`RankKernel::Xla`] — the AOT-compiled Pallas/JAX `pagerank_step`
+//!   block kernel via PJRT (paper §7's "fast shared-memory kernels").
+//!
+//! Semantics (both models, matching Pregel's canonical PageRank): ranks
+//! start at `1/N`; each update is `0.15/N + 0.85 * Σ contribs`; dangling
+//! vertices leak mass (no redistribution), as in Pregel/Giraph.
+
+use std::sync::Arc;
+
+use crate::gofs::Subgraph;
+use crate::gopher::{IncomingMessage, SubgraphContext, SubgraphProgram};
+use crate::graph::csr::{Graph, VertexId};
+use crate::pregel::{VertexContext, VertexProgram};
+use crate::runtime::XlaEngine;
+
+pub const DEFAULT_SUPERSTEPS: usize = 30;
+pub const ALPHA: f32 = 0.85;
+
+/// Which implementation computes the per-sub-graph rank update.
+#[derive(Clone, Default)]
+pub enum RankKernel {
+    #[default]
+    Scalar,
+    /// AOT XLA executable ladder (falls back to scalar for sub-graphs
+    /// larger than the largest compiled rung).
+    Xla(Arc<XlaEngine>),
+}
+
+/// Sub-graph centric PageRank.
+pub struct PageRankSg {
+    pub supersteps: usize,
+    pub kernel: RankKernel,
+}
+
+impl Default for PageRankSg {
+    fn default() -> Self {
+        Self { supersteps: DEFAULT_SUPERSTEPS, kernel: RankKernel::Scalar }
+    }
+}
+
+/// Per-sub-graph PageRank state.
+pub struct PrState {
+    pub ranks: Vec<f32>,
+    /// Global out-degree (local + remote out-edges) per local vertex.
+    outdeg: Vec<f32>,
+    /// Padded dense in-adjacency for the XLA path (built once at init).
+    dense: Option<DenseBlock>,
+}
+
+struct DenseBlock {
+    n_pad: usize,
+    /// Service-side registered adjacency block id: the padded in-link
+    /// matrix is constant across supersteps, so it is uploaded once at
+    /// init instead of copied into every kernel call (§Perf).
+    block: u64,
+}
+
+impl PageRankSg {
+    /// One rank update over the sub-graph's *local* topology, reading
+    /// `state.ranks` (previous superstep) and writing the new ranks.
+    /// Remote contributions are added by the caller.
+    fn rank_update(&self, state: &PrState, sg: &Subgraph, base: f32) -> Vec<f32> {
+        if let (RankKernel::Xla(engine), Some(dense)) = (&self.kernel, &state.dense) {
+            let n = sg.num_vertices();
+            let mut ranks = vec![0f32; dense.n_pad];
+            ranks[..n].copy_from_slice(&state.ranks);
+            // Padding rows carry out_deg = -1 (the model's "dead" marker).
+            let mut out_deg = vec![-1f32; dense.n_pad];
+            out_deg[..n].copy_from_slice(&state.outdeg);
+            if let Ok(out) = engine.pagerank_step_cached(
+                dense.n_pad,
+                dense.block,
+                &ranks,
+                &out_deg,
+                base,
+                ALPHA,
+            ) {
+                return out[..n].to_vec();
+            }
+            // XLA failure falls through to the scalar path (correctness
+            // first; failures are surfaced by runtime's own tests).
+        }
+        // Scalar: new[u] = base + alpha * sum over local in-edges of
+        // rank[v]/outdeg[v].
+        let n = sg.num_vertices();
+        let contrib: Vec<f32> = state
+            .ranks
+            .iter()
+            .zip(&state.outdeg)
+            .map(|(&r, &d)| if d > 0.0 { r / d } else { 0.0 })
+            .collect();
+        let mut out = vec![0f32; n];
+        for (u, o) in out.iter_mut().enumerate() {
+            let mut acc = 0f32;
+            for v in sg.local.in_neighbors(u as u32) {
+                acc += contrib[*v as usize];
+            }
+            *o = base + ALPHA * acc;
+        }
+        out
+    }
+}
+
+impl SubgraphProgram for PageRankSg {
+    type Msg = (u32, f32); // (global vertex id, contribution)
+    type State = PrState;
+
+    fn init(&self, sg: &Subgraph) -> PrState {
+        let n = sg.num_vertices();
+        let mut outdeg = vec![0f32; n];
+        for (v, d) in outdeg.iter_mut().enumerate() {
+            *d = sg.local.out_degree(v as u32) as f32;
+        }
+        for r in &sg.remote_out {
+            outdeg[r.local as usize] += 1.0;
+        }
+        let dense = match &self.kernel {
+            RankKernel::Xla(engine) if n <= engine.max_rung() => {
+                let n_pad = engine.rung_for(n).expect("n <= max rung");
+                let mut adj = vec![0f32; n_pad * n_pad];
+                for (v, u, _) in sg.local.edges() {
+                    // edge v -> u: in-adjacency A[u][v] = 1
+                    adj[u as usize * n_pad + v as usize] = 1.0;
+                }
+                engine
+                    .register_block(n_pad, &adj)
+                    .ok()
+                    .map(|block| DenseBlock { n_pad, block })
+            }
+            _ => None,
+        };
+        PrState { ranks: vec![0.0; n], outdeg, dense }
+    }
+
+    fn compute(
+        &self,
+        state: &mut PrState,
+        sg: &Subgraph,
+        ctx: &mut SubgraphContext<'_, Self::Msg>,
+        msgs: &[IncomingMessage<Self::Msg>],
+    ) {
+        let n_total = sg.num_global_vertices as f32;
+        let base = (1.0 - ALPHA) / n_total;
+        let s = ctx.superstep();
+
+        if s == 1 {
+            state.ranks = vec![1.0 / n_total; sg.num_vertices()];
+        } else {
+            // Local rank update from the previous superstep's ranks…
+            let mut new_ranks = self.rank_update(state, sg, base);
+            // …plus remote contributions that arrived as messages.
+            for m in msgs {
+                let (gv, c) = m.payload;
+                if let Some(local) = sg.local_id(gv) {
+                    new_ranks[local as usize] += ALPHA * c;
+                }
+            }
+            state.ranks = new_ranks;
+        }
+
+        if s < self.supersteps {
+            // Send this superstep's contributions over remote out-edges.
+            for r in &sg.remote_out {
+                let d = state.outdeg[r.local as usize];
+                if d > 0.0 {
+                    ctx.send_to_subgraph_vertex(
+                        crate::gofs::SubgraphId {
+                            partition: r.partition,
+                            index: r.subgraph,
+                        },
+                        r.target_global,
+                        (r.target_global, state.ranks[r.local as usize] / d),
+                    );
+                }
+            }
+        } else {
+            ctx.vote_to_halt();
+        }
+    }
+}
+
+/// Vertex-centric PageRank (the Pregel canon).
+pub struct PageRankVx {
+    pub supersteps: usize,
+}
+
+impl Default for PageRankVx {
+    fn default() -> Self {
+        Self { supersteps: DEFAULT_SUPERSTEPS }
+    }
+}
+
+impl VertexProgram for PageRankVx {
+    type Msg = f32;
+    type Value = f32;
+
+    fn init(&self, _vertex: VertexId, _g: &Graph) -> f32 {
+        0.0
+    }
+
+    fn compute(&self, value: &mut f32, ctx: &mut VertexContext<'_, f32>, msgs: &[f32]) {
+        let n = ctx.num_vertices() as f32;
+        if ctx.superstep() == 1 {
+            *value = 1.0 / n;
+        } else {
+            let sum: f32 = msgs.iter().sum();
+            *value = (1.0 - ALPHA) / n + ALPHA * sum;
+        }
+        if ctx.superstep() < self.supersteps {
+            let d = ctx.out_degree() as f32;
+            if d > 0.0 {
+                ctx.send_to_all_neighbors(*value / d);
+            }
+        } else {
+            ctx.vote_to_halt();
+        }
+    }
+
+    fn combine(&self, a: &f32, b: &f32) -> Option<f32> {
+        Some(a + b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::gather_vertex_values;
+    use crate::gofs::subgraph::discover;
+    use crate::gopher::{run, GopherConfig};
+    use crate::graph::gen;
+    use crate::partition::{HashPartitioner, MultilevelPartitioner, Partitioner};
+    use crate::pregel::{run_vertex, PregelConfig};
+    use std::collections::BTreeMap;
+
+    fn sg_ranks(g: &crate::graph::Graph, k: usize, supersteps: usize) -> Vec<f32> {
+        let parts = MultilevelPartitioner::default().partition(g, k);
+        let dg = discover(g, &parts).unwrap();
+        let prog = PageRankSg { supersteps, kernel: RankKernel::Scalar };
+        let res = run(&dg, &prog, &GopherConfig::default()).unwrap();
+        let states: BTreeMap<_, Vec<f32>> =
+            res.states.into_iter().map(|(id, s)| (id, s.ranks)).collect();
+        gather_vertex_values(&dg, &states)
+    }
+
+    fn vx_ranks(g: &crate::graph::Graph, k: usize, supersteps: usize) -> Vec<f32> {
+        let parts = HashPartitioner::default().partition(g, k);
+        let res = run_vertex(g, &parts, &PageRankVx { supersteps }, &PregelConfig::default())
+            .unwrap();
+        res.values
+    }
+
+    #[test]
+    fn models_agree_on_trace_graph() {
+        let g = gen::trace(400, 15, 0.15, 9);
+        let a = sg_ranks(&g, 3, 15);
+        let b = vx_ranks(&g, 3, 15);
+        for (v, (&x, &y)) in a.iter().zip(&b).enumerate() {
+            assert!(
+                (x - y).abs() < 1e-6 * (1.0 + x.abs()),
+                "vertex {v}: sg={x} vx={y}"
+            );
+        }
+    }
+
+    #[test]
+    fn ring_converges_to_uniform() {
+        // Directed ring: perfectly symmetric, rank must be uniform 1/n.
+        let n = 24;
+        let edges: Vec<(u32, u32)> = (0..n).map(|i| (i, (i + 1) % n)).collect();
+        let g = crate::graph::Graph::from_edges(n as usize, &edges, None, true).unwrap();
+        let ranks = sg_ranks(&g, 3, 30);
+        for &r in &ranks {
+            assert!((r - 1.0 / n as f32).abs() < 1e-5, "rank {r}");
+        }
+    }
+
+    #[test]
+    fn hub_outranks_spokes() {
+        let g = gen::trace(300, 10, 0.5, 3);
+        let ranks = sg_ranks(&g, 2, 30);
+        let hub = ranks[0]; // vertex 0 is the mega-hub
+        let mean: f32 = ranks.iter().sum::<f32>() / ranks.len() as f32;
+        assert!(hub > 10.0 * mean, "hub={hub} mean={mean}");
+    }
+
+    #[test]
+    fn takes_exactly_configured_supersteps() {
+        let g = gen::social(200, 3, 0.0, 2);
+        let parts = MultilevelPartitioner::default().partition(&g, 2);
+        let dg = discover(&g, &parts).unwrap();
+        let prog = PageRankSg { supersteps: 12, kernel: RankKernel::Scalar };
+        let res = run(&dg, &prog, &GopherConfig::default()).unwrap();
+        assert_eq!(res.metrics.num_supersteps(), 12);
+        let vres = run_vertex(
+            &g,
+            &HashPartitioner::default().partition(&g, 2),
+            &PageRankVx { supersteps: 12 },
+            &PregelConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(vres.metrics.num_supersteps(), 12);
+    }
+
+    #[test]
+    fn mass_within_bounds() {
+        // With dangling leak, total mass stays in (0, 1].
+        let g = gen::social(300, 4, 0.02, 8);
+        let ranks = sg_ranks(&g, 3, 20);
+        let total: f32 = ranks.iter().sum();
+        assert!(total > 0.15 && total <= 1.0 + 1e-4, "total={total}");
+    }
+}

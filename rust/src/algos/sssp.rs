@@ -1,0 +1,357 @@
+//! Single Source Shortest Path (paper §5.2, Algorithm 3).
+//!
+//! Sub-graph centric: run Dijkstra *to completion inside the sub-graph*
+//! each superstep, seeded by the source (superstep 1) or by improved
+//! boundary distances from incoming messages; then push improved
+//! distances across remote edges. Supersteps ~ weighted meta-diameter.
+//!
+//! Vertex-centric: the classic relax-and-forward, one hop per superstep.
+//!
+//! Both honour edge weights (1.0 for unweighted graphs) and treat
+//! undirected graphs as traversable both ways.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::gofs::Subgraph;
+use crate::gopher::{IncomingMessage, SubgraphContext, SubgraphProgram};
+use crate::graph::csr::{Graph, VertexId};
+use crate::pregel::{VertexContext, VertexProgram};
+
+/// Sub-graph centric SSSP (paper Algorithm 3).
+pub struct SsspSg {
+    pub source: VertexId,
+}
+
+/// Per-sub-graph SSSP state: tentative distance per local vertex.
+pub struct SsspState {
+    pub dist: Vec<f32>,
+}
+
+/// f32 ordered for the heap (distances are never NaN).
+#[derive(PartialEq, PartialOrd)]
+struct Ord32(f32);
+impl Eq for Ord32 {}
+#[allow(clippy::derive_ord_xor_partial_ord)]
+impl Ord for Ord32 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.partial_cmp(other).unwrap()
+    }
+}
+
+impl SsspSg {
+    /// Dijkstra within the sub-graph from the open set; returns the local
+    /// vertices whose distance improved (for boundary propagation).
+    fn dijkstra(sg: &Subgraph, dist: &mut [f32], openset: Vec<u32>) -> Vec<u32> {
+        let undirected = !sg.local.directed();
+        let mut heap: BinaryHeap<Reverse<(Ord32, u32)>> = openset
+            .iter()
+            .map(|&v| Reverse((Ord32(dist[v as usize]), v)))
+            .collect();
+        let mut improved = vec![false; dist.len()];
+        for &v in &openset {
+            improved[v as usize] = true;
+        }
+        while let Some(Reverse((Ord32(d), v))) = heap.pop() {
+            if d > dist[v as usize] {
+                continue; // stale entry
+            }
+            let mut relax = |t: u32, w: f32, dist: &mut [f32], heap: &mut BinaryHeap<Reverse<(Ord32, u32)>>, improved: &mut [bool]| {
+                let nd = d + w;
+                if nd < dist[t as usize] {
+                    dist[t as usize] = nd;
+                    improved[t as usize] = true;
+                    heap.push(Reverse((Ord32(nd), t)));
+                }
+            };
+            for (t, ei) in sg.local.out_edges(v) {
+                relax(t, sg.local.weight(ei), dist, &mut heap, &mut improved);
+            }
+            if undirected {
+                for (s, ei) in sg.local.in_edges(v) {
+                    relax(s, sg.local.weight(ei), dist, &mut heap, &mut improved);
+                }
+            }
+        }
+        improved
+            .iter()
+            .enumerate()
+            .filter(|(_, &i)| i)
+            .map(|(v, _)| v as u32)
+            .collect()
+    }
+}
+
+impl SubgraphProgram for SsspSg {
+    type Msg = (u32, f32); // (global vertex id, candidate distance)
+    type State = SsspState;
+
+    fn init(&self, sg: &Subgraph) -> SsspState {
+        SsspState { dist: vec![f32::INFINITY; sg.num_vertices()] }
+    }
+
+    fn compute(
+        &self,
+        state: &mut SsspState,
+        sg: &Subgraph,
+        ctx: &mut SubgraphContext<'_, Self::Msg>,
+        msgs: &[IncomingMessage<Self::Msg>],
+    ) {
+        let mut openset: Vec<u32> = Vec::new();
+        if ctx.superstep() == 1 {
+            if let Some(local) = sg.local_id(self.source) {
+                state.dist[local as usize] = 0.0;
+                openset.push(local);
+            }
+        }
+        for m in msgs {
+            let (gv, cand) = m.payload;
+            if let Some(local) = sg.local_id(gv) {
+                if cand < state.dist[local as usize] {
+                    state.dist[local as usize] = cand;
+                    openset.push(local);
+                }
+            }
+        }
+        if !openset.is_empty() {
+            let improved = Self::dijkstra(sg, &mut state.dist, openset);
+            // Push improved distances over boundary edges.
+            let undirected = !sg.local.directed();
+            for r in &sg.remote_out {
+                if improved.binary_search(&r.local).is_ok() {
+                    let cand = state.dist[r.local as usize] + r.weight;
+                    if cand.is_finite() {
+                        ctx.send_to_subgraph_vertex(
+                            crate::gofs::SubgraphId {
+                                partition: r.partition,
+                                index: r.subgraph,
+                            }
+                            ,
+                            r.target_global,
+                            (r.target_global, cand),
+                        );
+                    }
+                }
+            }
+            if undirected {
+                for r in &sg.remote_in {
+                    if improved.binary_search(&r.local).is_ok() {
+                        let cand = state.dist[r.local as usize] + r.weight;
+                        if cand.is_finite() {
+                            ctx.send_to_subgraph_vertex(
+                                crate::gofs::SubgraphId {
+                                    partition: r.partition,
+                                    index: r.subgraph,
+                                }
+                                ,
+                                r.target_global,
+                                (r.target_global, cand),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        ctx.vote_to_halt(); // Algorithm 3 line 18: always halt, messages wake us.
+    }
+}
+
+/// Vertex-centric SSSP.
+pub struct SsspVx {
+    pub source: VertexId,
+}
+
+impl VertexProgram for SsspVx {
+    type Msg = f32;
+    type Value = f32;
+
+    fn init(&self, _vertex: VertexId, _g: &Graph) -> f32 {
+        f32::INFINITY
+    }
+
+    fn compute(
+        &self,
+        value: &mut f32,
+        ctx: &mut VertexContext<'_, f32>,
+        msgs: &[f32],
+    ) {
+        let mut best = *value;
+        if ctx.superstep() == 1 && ctx.vertex() == self.source {
+            best = 0.0;
+        }
+        for &m in msgs {
+            best = best.min(m);
+        }
+        if best < *value || (ctx.superstep() == 1 && best == 0.0) {
+            *value = best;
+            let undirected = {
+                // Graph direction decides traversal (match SsspSg).
+                !ctx_graph_directed(ctx)
+            };
+            let out: Vec<(VertexId, f32)> = ctx.out_edges_weighted();
+            for (t, w) in out {
+                ctx.send_to(t, best + w);
+            }
+            if undirected {
+                let graph = ctx_graph(ctx);
+                let v = ctx.vertex();
+                let ins: Vec<(VertexId, f32)> = graph
+                    .in_edges(v)
+                    .map(|(s, ei)| (s, graph.weight(ei)))
+                    .collect();
+                for (s, w) in ins {
+                    ctx.send_to(s, best + w);
+                }
+            }
+        }
+        ctx.vote_to_halt();
+    }
+
+    fn combine(&self, a: &f32, b: &f32) -> Option<f32> {
+        Some(a.min(*b))
+    }
+}
+
+// Context accessors that keep VertexContext's public API tight while the
+// SSSP program needs the underlying graph for undirected relaxation.
+fn ctx_graph<'a, M: Clone>(ctx: &VertexContext<'a, M>) -> &'a Graph {
+    ctx.graph()
+}
+fn ctx_graph_directed<M: Clone>(ctx: &VertexContext<'_, M>) -> bool {
+    ctx.graph().directed()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::gather_vertex_values;
+    use crate::gofs::subgraph::discover;
+    use crate::gopher::{run, GopherConfig};
+    use crate::graph::{gen, props};
+    use crate::partition::{HashPartitioner, MultilevelPartitioner, Partitioner};
+    use crate::pregel::{run_vertex, PregelConfig};
+    use std::collections::BTreeMap;
+
+    /// Single-machine Dijkstra oracle over the full graph.
+    fn oracle(g: &crate::graph::Graph, source: VertexId) -> Vec<f32> {
+        let undirected = !g.directed();
+        let n = g.num_vertices();
+        let mut dist = vec![f32::INFINITY; n];
+        dist[source as usize] = 0.0;
+        let mut heap = BinaryHeap::new();
+        heap.push(Reverse((Ord32(0.0), source)));
+        while let Some(Reverse((Ord32(d), v))) = heap.pop() {
+            if d > dist[v as usize] {
+                continue;
+            }
+            let mut relax = |t: u32, w: f32, dist: &mut Vec<f32>, heap: &mut BinaryHeap<_>| {
+                if d + w < dist[t as usize] {
+                    dist[t as usize] = d + w;
+                    heap.push(Reverse((Ord32(d + w), t)));
+                }
+            };
+            for (t, ei) in g.out_edges(v) {
+                relax(t, g.weight(ei), &mut dist, &mut heap);
+            }
+            if undirected {
+                for (s, ei) in g.in_edges(v) {
+                    relax(s, g.weight(ei), &mut dist, &mut heap);
+                }
+            }
+        }
+        dist
+    }
+
+    fn assert_dist_eq(got: &[f32], want: &[f32]) {
+        assert_eq!(got.len(), want.len());
+        for (v, (&a, &b)) in got.iter().zip(want).enumerate() {
+            if a.is_infinite() && b.is_infinite() {
+                continue;
+            }
+            assert!((a - b).abs() < 1e-4, "vertex {v}: got {a}, want {b}");
+        }
+    }
+
+    #[test]
+    fn subgraph_sssp_weighted_road() {
+        let g = gen::with_random_weights(&gen::road(14, 0.92, 0.02, 41), 1.0, 10.0, 42);
+        let parts = MultilevelPartitioner::default().partition(&g, 4);
+        let dg = discover(&g, &parts).unwrap();
+        let res = run(&dg, &SsspSg { source: 0 }, &GopherConfig::default()).unwrap();
+        let states: BTreeMap<_, Vec<f32>> =
+            res.states.into_iter().map(|(id, s)| (id, s.dist)).collect();
+        let got = gather_vertex_values(&dg, &states);
+        assert_dist_eq(&got, &oracle(&g, 0));
+    }
+
+    #[test]
+    fn vertex_sssp_matches_oracle() {
+        let g = gen::with_random_weights(&gen::grid(8, 8), 1.0, 5.0, 7);
+        let parts = HashPartitioner::default().partition(&g, 3);
+        let res = run_vertex(&g, &parts, &SsspVx { source: 0 }, &PregelConfig::default()).unwrap();
+        assert_dist_eq(&res.values, &oracle(&g, 0));
+    }
+
+    #[test]
+    fn models_agree_on_directed_trace() {
+        let g = gen::with_random_weights(&gen::trace(600, 20, 0.2, 5), 1.0, 4.0, 6);
+        let parts = MultilevelPartitioner::default().partition(&g, 3);
+        let dg = discover(&g, &parts).unwrap();
+        let sg_res = run(&dg, &SsspSg { source: 0 }, &GopherConfig::default()).unwrap();
+        let states: BTreeMap<_, Vec<f32>> =
+            sg_res.states.into_iter().map(|(id, s)| (id, s.dist)).collect();
+        let sg_dist = gather_vertex_values(&dg, &states);
+        let vx = run_vertex(
+            &g,
+            &HashPartitioner::default().partition(&g, 3),
+            &SsspVx { source: 0 },
+            &PregelConfig::default(),
+        )
+        .unwrap();
+        assert_dist_eq(&sg_dist, &vx.values);
+        assert_dist_eq(&sg_dist, &oracle(&g, 0));
+    }
+
+    #[test]
+    fn unreachable_stays_infinite() {
+        let g = crate::graph::Graph::from_edges(4, &[(0, 1)], None, false).unwrap();
+        let parts = crate::partition::Partitioning::new(2, vec![0, 0, 1, 1]);
+        let dg = discover(&g, &parts).unwrap();
+        let res = run(&dg, &SsspSg { source: 0 }, &GopherConfig::default()).unwrap();
+        let states: BTreeMap<_, Vec<f32>> =
+            res.states.into_iter().map(|(id, s)| (id, s.dist)).collect();
+        let got = gather_vertex_values(&dg, &states);
+        assert_eq!(got[0], 0.0);
+        assert_eq!(got[1], 1.0);
+        assert!(got[2].is_infinite() && got[3].is_infinite());
+    }
+
+    #[test]
+    fn subgraph_supersteps_scale_with_meta_diameter() {
+        let g = gen::chain(120);
+        let parts = MultilevelPartitioner::default().partition(&g, 4);
+        let dg = discover(&g, &parts).unwrap();
+        let sg_res = run(&dg, &SsspSg { source: 0 }, &GopherConfig::default()).unwrap();
+        let vx_res = run_vertex(
+            &g,
+            &HashPartitioner::default().partition(&g, 4),
+            &SsspVx { source: 0 },
+            &PregelConfig::default(),
+        )
+        .unwrap();
+        assert!(
+            sg_res.metrics.num_supersteps() * 5 < vx_res.metrics.num_supersteps(),
+            "sg={} vx={}",
+            sg_res.metrics.num_supersteps(),
+            vx_res.metrics.num_supersteps()
+        );
+        // BFS-distance sanity on the unweighted chain.
+        let states: BTreeMap<_, Vec<f32>> =
+            sg_res.states.into_iter().map(|(id, s)| (id, s.dist)).collect();
+        let got = gather_vertex_values(&dg, &states);
+        let bfs = props::bfs_distances(&g, 0);
+        for (v, (&a, &b)) in got.iter().zip(&bfs).enumerate() {
+            assert_eq!(a as u32, b, "vertex {v}");
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! In-crate micro/macro benchmark harness (criterion is not in the
+//! offline vendor set; DESIGN.md §3).
+//!
+//! `cargo bench` runs the `rust/benches/*.rs` binaries (harness = false),
+//! each of which uses [`measure`] / [`Table`] to print the paper's
+//! tables and figures as text.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// Timing result of a benchmark case.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub times: Vec<f64>,
+    pub median: f64,
+    pub min: f64,
+}
+
+/// Run `f` `warmup + reps` times; report stats over the last `reps`.
+pub fn measure<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let median = stats::median(&times);
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    Measurement { times, median, min }
+}
+
+/// Fixed-width text table writer for bench output (the "figure" format).
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with per-column widths; also returns the string.
+    pub fn print(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n=== {} ===\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        print!("{out}");
+        out
+    }
+}
+
+/// Format seconds in engineering units.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+/// Format a speedup factor like the paper ("81x", "1.4x", "0.4x").
+pub fn fmt_speedup(x: f64) -> String {
+    if x >= 10.0 {
+        format!("{x:.0}x")
+    } else {
+        format!("{x:.1}x")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_reps() {
+        let mut calls = 0;
+        let m = measure(2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(m.times.len(), 5);
+        assert!(m.min <= m.median);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["a", "long_header"]);
+        t.row(&["x".into(), "1".into()]);
+        t.row(&["yyyy".into(), "2".into()]);
+        let s = t.print();
+        assert!(s.contains("=== demo ==="));
+        assert!(s.contains("long_header"));
+        assert!(s.lines().count() >= 5);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_secs(2.5), "2.50s");
+        assert_eq!(fmt_secs(0.0025), "2.50ms");
+        assert_eq!(fmt_secs(0.0000025), "2.5us");
+        assert_eq!(fmt_speedup(81.4), "81x");
+        assert_eq!(fmt_speedup(1.42), "1.4x");
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn row_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["only one".into()]);
+    }
+}

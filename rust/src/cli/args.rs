@@ -1,0 +1,147 @@
+//! Tiny argument parser: `--key value`, `--flag`, and positionals.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw argv (no program name). `--key value` pairs become
+    /// options; a `--key` followed by another `--...` or end-of-args is a
+    /// boolean flag.
+    pub fn parse(argv: &[String]) -> Args {
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(key) = tok.strip_prefix("--") {
+                let next_is_value = argv
+                    .get(i + 1)
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false);
+                if next_is_value {
+                    args.options.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    args.flags.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                args.positional.push(tok.clone());
+                i += 1;
+            }
+        }
+        args
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .with_context(|| format!("missing required option --{name}"))
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .with_context(|| format!("--{name} expects an integer, got {s:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .with_context(|| format!("--{name} expects an integer, got {s:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .with_context(|| format!("--{name} expects a number, got {s:?}")),
+        }
+    }
+
+    /// First positional = subcommand.
+    pub fn command(&self) -> Result<&str> {
+        match self.positional.first() {
+            Some(c) => Ok(c.as_str()),
+            None => bail!("no command given"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn positionals_and_options() {
+        let a = parse(&["run", "--graph", "g.txt", "--k", "4", "extra"]);
+        assert_eq!(a.command().unwrap(), "run");
+        assert_eq!(a.positional, vec!["run", "extra"]);
+        assert_eq!(a.get("graph"), Some("g.txt"));
+        assert_eq!(a.get_usize("k", 0).unwrap(), 4);
+    }
+
+    #[test]
+    fn flags_detected() {
+        let a = parse(&["gen", "--verbose", "--out", "x", "--quiet"]);
+        assert!(a.flag("verbose"));
+        assert!(a.flag("quiet"));
+        assert!(!a.flag("loud"));
+        assert_eq!(a.get("out"), Some("x"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let a = parse(&["run"]);
+        assert!(a.require("graph").is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse(&["x", "--k", "four"]);
+        assert!(a.get_usize("k", 1).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["x"]);
+        assert_eq!(a.get_or("mode", "gopher"), "gopher");
+        assert_eq!(a.get_f64("p", 0.5).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn no_command() {
+        let a = parse(&[]);
+        assert!(a.command().is_err());
+    }
+}

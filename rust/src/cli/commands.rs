@@ -1,0 +1,328 @@
+//! CLI command implementations.
+//!
+//! ```text
+//! goffish gen       --kind road|trace|social|er|grid|chain --out g.txt [--scale N] [--seed S]
+//! goffish info      --graph g.txt [--directed]
+//! goffish partition --graph g.txt --k 4 [--strategy multilevel|hash|range]
+//! goffish store     --graph g.txt --k 4 --out storedir [--strategy …] [--name NAME]
+//! goffish run       --store storedir --algo cc|sssp|bfs|pagerank|blockrank|maxvalue
+//!                   [--engine gopher|vertex] [--source V] [--supersteps N]
+//!                   [--xla] [--fabric inproc|tcp] [--cores N]
+//! ```
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::algos;
+use crate::algos::pagerank::RankKernel;
+use crate::gofs::Store;
+use crate::gopher::{self, FabricKind, GopherConfig};
+use crate::graph::{gen, io, props, Graph};
+use crate::partition::{
+    HashPartitioner, MultilevelPartitioner, Partitioner, RangePartitioner,
+};
+use crate::pregel::{self, PregelConfig};
+use crate::runtime::XlaEngine;
+
+use super::args::Args;
+
+pub fn dispatch(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(&argv);
+    match args.command().unwrap_or("help") {
+        "gen" => cmd_gen(&args),
+        "info" => cmd_info(&args),
+        "partition" => cmd_partition(&args),
+        "store" => cmd_store(&args),
+        "run" => cmd_run(&args),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; try `goffish help`"),
+    }
+}
+
+const HELP: &str = r#"goffish — sub-graph centric graph analytics (GoFFish reproduction)
+
+commands:
+  gen       generate a synthetic dataset analog to an edge list
+  info      structural properties of a graph (the Table-1 row)
+  partition partition a graph and report cut metrics
+  store     build a GoFS store directory (partition + sub-graph slices)
+  run       execute an algorithm with Gopher or the vertex baseline
+  help      this message
+
+see rust/src/cli/commands.rs for per-command flags.
+"#;
+
+fn load_graph(args: &Args) -> Result<Graph> {
+    let path = args.require("graph")?;
+    io::read_edge_list(Path::new(path), args.flag("directed"))
+}
+
+fn make_partitioner(args: &Args) -> Result<Box<dyn Partitioner>> {
+    Ok(match args.get_or("strategy", "multilevel") {
+        "multilevel" => Box::new(MultilevelPartitioner::new(args.get_u64("seed", 1)?)),
+        "hash" => Box::new(HashPartitioner::new(args.get_u64("seed", 1)?)),
+        "range" => Box::new(RangePartitioner),
+        s => bail!("unknown strategy {s:?}"),
+    })
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let kind = args.get_or("kind", "road");
+    let scale = args.get_usize("scale", 100)?;
+    let seed = args.get_u64("seed", 42)?;
+    let g = match kind {
+        "road" => gen::road(scale, 0.97, 0.005, seed),
+        "trace" => gen::trace(scale * scale, scale.max(8), 0.15, seed),
+        "social" => gen::social(scale * scale, 8, 0.02, seed),
+        "er" => gen::erdos_renyi(scale * scale, args.get_f64("p", 0.001)?, true, seed),
+        "grid" => gen::grid(scale, scale),
+        "chain" => gen::chain(scale * scale),
+        k => bail!("unknown kind {k:?}"),
+    };
+    let g = if args.flag("weighted") {
+        gen::with_random_weights(&g, 1.0, 10.0, seed ^ 0x57EED)
+    } else {
+        g
+    };
+    let out = args.require("out")?;
+    io::write_edge_list(&g, Path::new(out))?;
+    println!(
+        "wrote {} ({} vertices, {} edges) to {out}",
+        kind,
+        g.num_vertices(),
+        g.num_edges()
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let g = load_graph(args)?;
+    let stats = props::degree_stats(&g);
+    println!("vertices  {}", g.num_vertices());
+    println!("edges     {}", g.num_edges());
+    println!("directed  {}", g.directed());
+    println!("weighted  {}", g.has_weights());
+    println!("wcc       {}", props::wcc_count(&g));
+    println!(
+        "diameter  {} (double-sweep estimate)",
+        props::diameter_estimate(&g, 4, 7)
+    );
+    println!(
+        "degree    min={} max={} mean={:.2}",
+        stats.min, stats.max, stats.mean
+    );
+    Ok(())
+}
+
+fn cmd_partition(args: &Args) -> Result<()> {
+    let g = load_graph(args)?;
+    let k = args.get_usize("k", 4)?;
+    let partitioner = make_partitioner(args)?;
+    let p = partitioner.partition(&g, k);
+    let m = p.metrics(&g);
+    println!("strategy     {}", partitioner.name());
+    println!("k            {k}");
+    println!("edge cut     {} ({:.1}%)", m.edge_cut, m.cut_fraction * 100.0);
+    println!("imbalance    {:.3}", m.imbalance);
+    println!("sizes        {:?}", m.sizes);
+    Ok(())
+}
+
+fn cmd_store(args: &Args) -> Result<()> {
+    let g = load_graph(args)?;
+    let k = args.get_usize("k", 4)?;
+    let out = args.require("out")?;
+    let name = args.get_or("name", "graph");
+    let partitioner = make_partitioner(args)?;
+    let p = partitioner.partition(&g, k);
+    let (store, dg) = Store::create(Path::new(out), name, &g, &p)?;
+    println!(
+        "stored {} as {} partitions / {} sub-graphs at {}",
+        name,
+        k,
+        dg.num_subgraphs(),
+        store.root().display()
+    );
+    for (i, sgs) in dg.partitions.iter().enumerate() {
+        let sizes: Vec<usize> = sgs.iter().map(|s| s.num_vertices()).collect();
+        println!("  host{i}: {} sub-graphs, sizes {:?}", sgs.len(), sizes);
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let store = Store::open(Path::new(args.require("store")?))?;
+    let algo = args.get_or("algo", "cc");
+    let engine = args.get_or("engine", "gopher");
+    let source = args.get_usize("source", 0)? as u32;
+    let supersteps = args.get_usize("supersteps", 30)?;
+    let fabric = match args.get_or("fabric", "inproc") {
+        "inproc" => FabricKind::InProc,
+        "tcp" => FabricKind::Tcp,
+        f => bail!("unknown fabric {f:?}"),
+    };
+    let cores = args.get_usize("cores", 4)?;
+    let kernel = if args.flag("xla") {
+        RankKernel::Xla(Arc::new(XlaEngine::load_default()?))
+    } else {
+        RankKernel::Scalar
+    };
+
+    if engine == "gopher" {
+        let cfg = GopherConfig { cores_per_worker: cores, fabric, ..Default::default() };
+        let metrics = match algo {
+            "cc" => gopher::run_on_store(&store, &algos::cc::CcSg, &cfg)?.metrics,
+            "maxvalue" => {
+                gopher::run_on_store(&store, &algos::maxvalue::MaxValueSg, &cfg)?.metrics
+            }
+            "bfs" => {
+                gopher::run_on_store(&store, &algos::bfs::BfsSg { source }, &cfg)?.metrics
+            }
+            "sssp" => {
+                gopher::run_on_store(&store, &algos::sssp::SsspSg { source }, &cfg)?.metrics
+            }
+            "pagerank" => {
+                let prog = algos::pagerank::PageRankSg { supersteps, kernel };
+                gopher::run_on_store(&store, &prog, &cfg)?.metrics
+            }
+            "blockrank" => {
+                let mut prog =
+                    algos::blockrank::BlockRankSg::new(&store.meta().subgraph_counts);
+                prog.kernel = kernel;
+                let cfg2 = GopherConfig { max_supersteps: 500, ..cfg };
+                gopher::run_on_store(&store, &prog, &cfg2)?.metrics
+            }
+            a => bail!("unknown algo {a:?}"),
+        };
+        println!("{}", metrics.report(&format!("gopher/{algo}")));
+    } else if engine == "vertex" {
+        // Vertex baseline reconstructs the full graph from the store.
+        let (dg, _) = store.load_all()?;
+        let g = reassemble(&dg)?;
+        let parts = HashPartitioner::default()
+            .partition(&g, store.meta().num_partitions as usize);
+        let cfg = PregelConfig { cores_per_worker: cores, fabric, ..Default::default() };
+        let metrics = match algo {
+            "cc" => pregel::run_vertex(&g, &parts, &algos::cc::CcVx, &cfg)?.metrics,
+            "maxvalue" => {
+                pregel::run_vertex(&g, &parts, &algos::maxvalue::MaxValueVx, &cfg)?.metrics
+            }
+            "bfs" => {
+                pregel::run_vertex(&g, &parts, &algos::bfs::BfsVx { source }, &cfg)?.metrics
+            }
+            "sssp" => {
+                pregel::run_vertex(&g, &parts, &algos::sssp::SsspVx { source }, &cfg)?
+                    .metrics
+            }
+            "pagerank" => {
+                let prog = algos::pagerank::PageRankVx { supersteps };
+                pregel::run_vertex(&g, &parts, &prog, &cfg)?.metrics
+            }
+            a => bail!("algo {a:?} has no vertex-centric implementation"),
+        };
+        println!("{}", metrics.report(&format!("vertex/{algo}")));
+    } else {
+        bail!("unknown engine {engine:?}");
+    }
+    Ok(())
+}
+
+/// Rebuild a global [`Graph`] from a distributed one (for the vertex
+/// baseline, which Giraph-style owns the whole edge list).
+pub fn reassemble(dg: &crate::gofs::DistributedGraph) -> Result<Graph> {
+    let mut edges = Vec::new();
+    let mut weights = Vec::new();
+    let mut weighted = false;
+    for sg in dg.subgraphs() {
+        for (u, v, ei) in sg.local.edges() {
+            edges.push((sg.vertices[u as usize], sg.vertices[v as usize]));
+            weights.push(sg.local.weight(ei));
+            weighted |= sg.local.has_weights();
+        }
+        for r in &sg.remote_out {
+            edges.push((sg.vertices[r.local as usize], r.target_global));
+            weights.push(r.weight);
+        }
+    }
+    Graph::from_edges(
+        dg.num_global_vertices as usize,
+        &edges,
+        if weighted { Some(weights) } else { None },
+        dg.directed,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_cmd(argv: &[&str]) -> Result<()> {
+        dispatch(argv.iter().map(|s| s.to_string()).collect())
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join("goffish_cli")
+            .join(format!("{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn gen_info_partition_store_run_pipeline() {
+        let dir = tmp("pipeline");
+        let graph = dir.join("g.txt");
+        let store = dir.join("store");
+        run_cmd(&["gen", "--kind", "road", "--scale", "14", "--out", graph.to_str().unwrap()])
+            .unwrap();
+        run_cmd(&["info", "--graph", graph.to_str().unwrap()]).unwrap();
+        run_cmd(&["partition", "--graph", graph.to_str().unwrap(), "--k", "3"]).unwrap();
+        run_cmd(&[
+            "store",
+            "--graph",
+            graph.to_str().unwrap(),
+            "--k",
+            "3",
+            "--out",
+            store.to_str().unwrap(),
+        ])
+        .unwrap();
+        run_cmd(&["run", "--store", store.to_str().unwrap(), "--algo", "cc"]).unwrap();
+        run_cmd(&[
+            "run",
+            "--store",
+            store.to_str().unwrap(),
+            "--algo",
+            "sssp",
+            "--engine",
+            "vertex",
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run_cmd(&["frobnicate"]).is_err());
+    }
+
+    #[test]
+    fn help_is_ok() {
+        run_cmd(&["help"]).unwrap();
+    }
+
+    #[test]
+    fn reassemble_preserves_counts() {
+        let g = crate::graph::gen::road(10, 0.9, 0.02, 3);
+        let p = MultilevelPartitioner::default().partition(&g, 3);
+        let dg = crate::gofs::subgraph::discover(&g, &p).unwrap();
+        let g2 = reassemble(&dg).unwrap();
+        assert_eq!(g2.num_vertices(), g.num_vertices());
+        assert_eq!(g2.num_edges(), g.num_edges());
+    }
+}

@@ -1,0 +1,19 @@
+//! Command-line surface (in-crate parser; no clap in the vendor set).
+//!
+//! See [`commands`] for the command list and flags.
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+
+/// Entry point used by `main.rs`; returns the process exit code.
+pub fn run(argv: Vec<String>) -> i32 {
+    match commands::dispatch(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    }
+}

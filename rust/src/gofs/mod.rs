@@ -1,0 +1,18 @@
+//! GoFS — the Graph-oriented File System (paper §4.1).
+//!
+//! A distributed, write-once-read-many graph store co-designed with the
+//! Gopher engine. Input graphs are k-way partitioned (one partition per
+//! host); within each partition the weakly-connected components — the
+//! **sub-graphs** of the paper's abstraction — are discovered and laid
+//! out as *slice files*: one topology slice per sub-graph plus separate
+//! attribute slices, in a compact binary encoding (`util::codec`, the
+//! Kryo stand-in). Remote edges resolve to a (partition, sub-graph,
+//! vertex) triple at store-build time, so no network resolution is ever
+//! needed at load or run time.
+
+pub mod subgraph;
+pub mod slice;
+pub mod store;
+
+pub use subgraph::{DistributedGraph, RemoteRef, Subgraph, SubgraphId};
+pub use store::{LoadStats, Store, StoreMeta};

@@ -1,0 +1,306 @@
+//! Slice files: the unit of GoFS storage (paper §4.1).
+//!
+//! Each sub-graph maps to one *topology slice* (local vertices, local
+//! edges, resolved remote edges) and any number of *attribute slices*
+//! (named per-vertex value arrays). Keeping topology and attributes in
+//! separate files lets an algorithm read exactly the bytes it needs —
+//! the paper's "a graph with 10 attributes … needs to only load that
+//! slice" co-design point, and the "Edge Imp." variant of Fig 4(b).
+//!
+//! Framing: `MAGIC, version, kind` header, then codec-encoded payload,
+//! then a crc32-style checksum (FNV-1a 64 truncated — no crc crate in
+//! the vendor set) so truncation/corruption is detected at load.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::graph::csr::Graph;
+use crate::util::codec::{Decoder, Encoder};
+
+use super::subgraph::{RemoteRef, Subgraph, SubgraphId};
+
+const MAGIC: &[u8; 4] = b"GFSL";
+const VERSION: u8 = 1;
+const KIND_TOPOLOGY: u8 = 0;
+const KIND_ATTRIBUTE: u8 = 1;
+
+/// FNV-1a 64-bit checksum over the payload.
+fn checksum(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn frame(kind: u8, payload: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(payload.len() + 16);
+    out.extend_from_slice(MAGIC);
+    out.push(VERSION);
+    out.push(kind);
+    let mut e = Encoder::new();
+    e.put_varint(payload.len() as u64);
+    e.put_varint(checksum(&payload));
+    out.extend_from_slice(&e.into_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+fn unframe(bytes: &[u8], want_kind: u8) -> Result<&[u8]> {
+    ensure!(bytes.len() >= 6, "slice too short ({} bytes)", bytes.len());
+    ensure!(&bytes[..4] == MAGIC, "bad slice magic");
+    ensure!(bytes[4] == VERSION, "unsupported slice version {}", bytes[4]);
+    ensure!(
+        bytes[5] == want_kind,
+        "wrong slice kind: want {want_kind}, got {}",
+        bytes[5]
+    );
+    let mut d = Decoder::new(&bytes[6..]);
+    let len = d.get_varint()? as usize;
+    let sum = d.get_varint()?;
+    let consumed = bytes.len() - 6 - d.remaining();
+    let payload = &bytes[6 + consumed..];
+    ensure!(
+        payload.len() == len,
+        "slice payload truncated: header says {len}, have {}",
+        payload.len()
+    );
+    ensure!(checksum(payload) == sum, "slice checksum mismatch (corrupted)");
+    Ok(payload)
+}
+
+fn put_remote(e: &mut Encoder, refs: &[RemoteRef]) {
+    e.put_varint(refs.len() as u64);
+    for r in refs {
+        e.put_varint(r.local as u64);
+        e.put_varint(r.target_global as u64);
+        e.put_varint(r.partition as u64);
+        e.put_varint(r.subgraph as u64);
+        e.put_f32(r.weight);
+    }
+}
+
+fn get_remote(d: &mut Decoder) -> Result<Vec<RemoteRef>> {
+    let n = d.get_varint()? as usize;
+    ensure!(n <= d.remaining(), "remote edge count {n} exceeds buffer");
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(RemoteRef {
+            local: d.get_varint()? as u32,
+            target_global: d.get_varint()? as u32,
+            partition: d.get_varint()? as u32,
+            subgraph: d.get_varint()? as u32,
+            weight: d.get_f32()?,
+        });
+    }
+    Ok(out)
+}
+
+/// Encode a sub-graph's topology slice.
+pub fn encode_topology(sg: &Subgraph) -> Vec<u8> {
+    let mut e = Encoder::with_capacity(
+        16 + sg.vertices.len() * 3 + sg.local.num_edges() * 4,
+    );
+    e.put_varint(sg.id.partition as u64);
+    e.put_varint(sg.id.index as u64);
+    e.put_varint(sg.num_global_vertices);
+    e.put_u8(sg.local.directed() as u8);
+    e.put_u8(sg.local.has_weights() as u8);
+    e.put_sorted_ids(&sg.vertices.iter().map(|&v| v as u64).collect::<Vec<_>>());
+    // Local edges, grouped by source (delta-friendly, CSR order).
+    e.put_varint(sg.local.num_edges() as u64);
+    for (u, v, ei) in sg.local.edges() {
+        e.put_varint(u as u64);
+        e.put_varint(v as u64);
+        if sg.local.has_weights() {
+            e.put_f32(sg.local.weight(ei));
+        }
+    }
+    put_remote(&mut e, &sg.remote_out);
+    put_remote(&mut e, &sg.remote_in);
+    frame(KIND_TOPOLOGY, e.into_bytes())
+}
+
+/// Decode a topology slice.
+pub fn decode_topology(bytes: &[u8]) -> Result<Subgraph> {
+    let payload = unframe(bytes, KIND_TOPOLOGY).context("topology slice")?;
+    let mut d = Decoder::new(payload);
+    let partition = d.get_varint()? as u32;
+    let index = d.get_varint()? as u32;
+    let num_global_vertices = d.get_varint()?;
+    let directed = d.get_u8()? != 0;
+    let weighted = d.get_u8()? != 0;
+    let vertices: Vec<u32> = d
+        .get_sorted_ids()?
+        .into_iter()
+        .map(|v| v as u32)
+        .collect();
+    let ne = d.get_varint()? as usize;
+    ensure!(ne <= d.remaining(), "edge count {ne} exceeds buffer");
+    let mut edges = Vec::with_capacity(ne);
+    let mut weights = if weighted { Some(Vec::with_capacity(ne)) } else { None };
+    for _ in 0..ne {
+        let u = d.get_varint()? as u32;
+        let v = d.get_varint()? as u32;
+        edges.push((u, v));
+        if let Some(w) = &mut weights {
+            w.push(d.get_f32()?);
+        }
+    }
+    let remote_out = get_remote(&mut d)?;
+    let remote_in = get_remote(&mut d)?;
+    if !d.is_at_end() {
+        bail!("topology slice has {} trailing bytes", d.remaining());
+    }
+    let local = Graph::from_edges(vertices.len(), &edges, weights, directed)?;
+    Ok(Subgraph {
+        id: SubgraphId { partition, index },
+        vertices,
+        local,
+        remote_out,
+        remote_in,
+        num_global_vertices,
+    })
+}
+
+/// Encode a named per-vertex f32 attribute slice for one sub-graph.
+pub fn encode_attribute(id: SubgraphId, name: &str, values: &[f32]) -> Vec<u8> {
+    let mut e = Encoder::with_capacity(16 + name.len() + values.len() * 4);
+    e.put_varint(id.partition as u64);
+    e.put_varint(id.index as u64);
+    e.put_str(name);
+    e.put_varint(values.len() as u64);
+    for &v in values {
+        e.put_f32(v);
+    }
+    frame(KIND_ATTRIBUTE, e.into_bytes())
+}
+
+/// Decode an attribute slice: `(id, name, values)`.
+pub fn decode_attribute(bytes: &[u8]) -> Result<(SubgraphId, String, Vec<f32>)> {
+    let payload = unframe(bytes, KIND_ATTRIBUTE).context("attribute slice")?;
+    let mut d = Decoder::new(payload);
+    let partition = d.get_varint()? as u32;
+    let index = d.get_varint()? as u32;
+    let name = d.get_str()?.to_string();
+    let n = d.get_varint()? as usize;
+    ensure!(n * 4 <= d.remaining(), "attribute count {n} exceeds buffer");
+    let mut values = Vec::with_capacity(n);
+    for _ in 0..n {
+        values.push(d.get_f32()?);
+    }
+    ensure!(d.is_at_end(), "attribute slice has trailing bytes");
+    Ok((SubgraphId { partition, index }, name, values))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gofs::subgraph::discover;
+    use crate::graph::gen;
+    use crate::partition::{Partitioner, RangePartitioner};
+
+    fn sample_subgraphs(weighted: bool) -> Vec<Subgraph> {
+        let base = gen::road(12, 0.9, 0.02, 5);
+        let g = if weighted {
+            gen::with_random_weights(&base, 1.0, 10.0, 6)
+        } else {
+            base
+        };
+        let parts = RangePartitioner.partition(&g, 3);
+        let dg = discover(&g, &parts).unwrap();
+        dg.subgraphs().cloned().collect()
+    }
+
+    fn assert_subgraph_eq(a: &Subgraph, b: &Subgraph) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.vertices, b.vertices);
+        assert_eq!(a.num_global_vertices, b.num_global_vertices);
+        assert_eq!(a.local.num_vertices(), b.local.num_vertices());
+        assert_eq!(a.local.num_edges(), b.local.num_edges());
+        let ea: Vec<_> = a.local.edges().map(|(u, v, ei)| (u, v, a.local.weight(ei))).collect();
+        let eb: Vec<_> = b.local.edges().map(|(u, v, ei)| (u, v, b.local.weight(ei))).collect();
+        assert_eq!(ea, eb);
+        assert_eq!(a.remote_out, b.remote_out);
+        assert_eq!(a.remote_in, b.remote_in);
+    }
+
+    #[test]
+    fn topology_round_trip_unweighted() {
+        for sg in sample_subgraphs(false) {
+            let bytes = encode_topology(&sg);
+            let back = decode_topology(&bytes).unwrap();
+            assert_subgraph_eq(&sg, &back);
+        }
+    }
+
+    #[test]
+    fn topology_round_trip_weighted() {
+        for sg in sample_subgraphs(true) {
+            let bytes = encode_topology(&sg);
+            let back = decode_topology(&bytes).unwrap();
+            assert_subgraph_eq(&sg, &back);
+        }
+    }
+
+    #[test]
+    fn attribute_round_trip() {
+        let id = SubgraphId { partition: 2, index: 7 };
+        let vals = vec![1.0f32, -2.5, 0.0, f32::INFINITY];
+        let bytes = encode_attribute(id, "rank", &vals);
+        let (id2, name, vals2) = decode_attribute(&bytes).unwrap();
+        assert_eq!(id2, id);
+        assert_eq!(name, "rank");
+        assert_eq!(vals2, vals);
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let sg = &sample_subgraphs(false)[0];
+        let bytes = encode_topology(sg);
+        for cut in [6, bytes.len() / 2, bytes.len() - 1] {
+            assert!(
+                decode_topology(&bytes[..cut]).is_err(),
+                "cut at {cut} must fail"
+            );
+        }
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let sg = &sample_subgraphs(false)[0];
+        let mut bytes = encode_topology(sg);
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        assert!(decode_topology(&bytes).is_err());
+    }
+
+    #[test]
+    fn wrong_kind_rejected() {
+        let bytes = encode_attribute(SubgraphId { partition: 0, index: 0 }, "x", &[1.0]);
+        assert!(decode_topology(&bytes).is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let sg = &sample_subgraphs(false)[0];
+        let mut bytes = encode_topology(sg);
+        bytes[0] = b'X';
+        assert!(decode_topology(&bytes).is_err());
+    }
+
+    #[test]
+    fn empty_subgraph_round_trip() {
+        let g = Graph::from_edges(1, &[], None, false).unwrap();
+        let sg = Subgraph {
+            id: SubgraphId { partition: 0, index: 0 },
+            vertices: vec![0],
+            local: g,
+            remote_out: vec![],
+            remote_in: vec![],
+            num_global_vertices: 1,
+        };
+        let back = decode_topology(&encode_topology(&sg)).unwrap();
+        assert_subgraph_eq(&sg, &back);
+    }
+}

@@ -1,0 +1,349 @@
+//! GoFS on-disk store: partition + discover + write slices, then load.
+//!
+//! Layout (`<root>` is the store directory, one `host<p>` subdirectory
+//! per partition — the simulated per-machine local filesystem):
+//!
+//! ```text
+//! <root>/meta.txt
+//! <root>/host0/sg_0.topo.slice
+//! <root>/host0/sg_0.attr.<name>.slice
+//! <root>/host1/…
+//! ```
+//!
+//! The store is write-once-read-many (paper §4.1): `create` builds it
+//! from a graph + partitioning, `open` + `load_partition` serve Gopher.
+//! Loading accounts files/bytes so the `sim` layer can model cluster
+//! disk/network time for the Fig-4(b) loading benchmark.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::graph::csr::Graph;
+use crate::partition::Partitioning;
+
+use super::slice;
+use super::subgraph::{discover, DistributedGraph, Subgraph, SubgraphId};
+
+/// Store-wide metadata (the `meta.txt` contents).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StoreMeta {
+    pub name: String,
+    pub num_vertices: u64,
+    pub num_edges: u64,
+    pub directed: bool,
+    pub weighted: bool,
+    pub num_partitions: u32,
+    /// Sub-graph count per partition.
+    pub subgraph_counts: Vec<u32>,
+}
+
+/// Byte/file accounting for one load (feeds `sim::disk`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LoadStats {
+    pub files: u64,
+    pub bytes: u64,
+    pub seconds: f64,
+}
+
+/// Handle to an on-disk GoFS store.
+pub struct Store {
+    root: PathBuf,
+    meta: StoreMeta,
+}
+
+impl Store {
+    /// Partition `g`, discover sub-graphs, and write the whole store.
+    pub fn create(
+        root: &Path,
+        name: &str,
+        g: &Graph,
+        parts: &Partitioning,
+    ) -> Result<(Store, DistributedGraph)> {
+        ensure!(
+            !root.exists() || fs::read_dir(root)?.next().is_none(),
+            "store root {} exists and is not empty (GoFS is write-once)",
+            root.display()
+        );
+        let dg = discover(g, parts)?;
+        fs::create_dir_all(root)?;
+        for (p, sgs) in dg.partitions.iter().enumerate() {
+            let host_dir = root.join(format!("host{p}"));
+            fs::create_dir_all(&host_dir)?;
+            for sg in sgs {
+                let bytes = slice::encode_topology(sg);
+                fs::write(host_dir.join(format!("sg_{}.topo.slice", sg.id.index)), bytes)?;
+            }
+        }
+        let meta = StoreMeta {
+            name: name.to_string(),
+            num_vertices: g.num_vertices() as u64,
+            num_edges: g.num_edges() as u64,
+            directed: g.directed(),
+            weighted: g.has_weights(),
+            num_partitions: parts.k() as u32,
+            subgraph_counts: dg.partitions.iter().map(|p| p.len() as u32).collect(),
+        };
+        write_meta(&root.join("meta.txt"), &meta)?;
+        Ok((Store { root: root.to_path_buf(), meta }, dg))
+    }
+
+    /// Open an existing store.
+    pub fn open(root: &Path) -> Result<Store> {
+        let meta = read_meta(&root.join("meta.txt"))
+            .with_context(|| format!("open store at {}", root.display()))?;
+        Ok(Store { root: root.to_path_buf(), meta })
+    }
+
+    pub fn meta(&self) -> &StoreMeta {
+        &self.meta
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn host_dir(&self, p: u32) -> PathBuf {
+        self.root.join(format!("host{p}"))
+    }
+
+    /// Load all sub-graphs of partition `p` (data-local read: only this
+    /// host's directory is touched — the GoFS co-design point).
+    pub fn load_partition(&self, p: u32) -> Result<(Vec<Subgraph>, LoadStats)> {
+        ensure!(p < self.meta.num_partitions, "partition {p} out of range");
+        let t0 = Instant::now();
+        let mut stats = LoadStats::default();
+        let count = self.meta.subgraph_counts[p as usize];
+        let mut sgs = Vec::with_capacity(count as usize);
+        for i in 0..count {
+            let path = self.host_dir(p).join(format!("sg_{i}.topo.slice"));
+            let bytes =
+                fs::read(&path).with_context(|| format!("read {}", path.display()))?;
+            stats.files += 1;
+            stats.bytes += bytes.len() as u64;
+            let sg = slice::decode_topology(&bytes)
+                .with_context(|| format!("decode {}", path.display()))?;
+            ensure!(
+                sg.id == SubgraphId { partition: p, index: i },
+                "slice {} holds wrong sub-graph {}",
+                path.display(),
+                sg.id
+            );
+            sgs.push(sg);
+        }
+        stats.seconds = t0.elapsed().as_secs_f64();
+        Ok((sgs, stats))
+    }
+
+    /// Load the entire distributed graph (all partitions).
+    pub fn load_all(&self) -> Result<(DistributedGraph, LoadStats)> {
+        let mut partitions = Vec::new();
+        let mut total = LoadStats::default();
+        for p in 0..self.meta.num_partitions {
+            let (sgs, st) = self.load_partition(p)?;
+            partitions.push(sgs);
+            total.files += st.files;
+            total.bytes += st.bytes;
+            total.seconds += st.seconds;
+        }
+        Ok((
+            DistributedGraph {
+                partitions,
+                num_global_vertices: self.meta.num_vertices,
+                directed: self.meta.directed,
+            },
+            total,
+        ))
+    }
+
+    /// Write a named per-vertex attribute for one sub-graph.
+    pub fn write_attribute(&self, id: SubgraphId, name: &str, values: &[f32]) -> Result<()> {
+        let path = self
+            .host_dir(id.partition)
+            .join(format!("sg_{}.attr.{name}.slice", id.index));
+        fs::write(&path, slice::encode_attribute(id, name, values))
+            .with_context(|| format!("write {}", path.display()))
+    }
+
+    /// Read a named attribute for one sub-graph.
+    pub fn read_attribute(&self, id: SubgraphId, name: &str) -> Result<(Vec<f32>, LoadStats)> {
+        let t0 = Instant::now();
+        let path = self
+            .host_dir(id.partition)
+            .join(format!("sg_{}.attr.{name}.slice", id.index));
+        let bytes = fs::read(&path).with_context(|| format!("read {}", path.display()))?;
+        let (got_id, got_name, values) = slice::decode_attribute(&bytes)?;
+        ensure!(got_id == id && got_name == name, "attribute slice mismatch");
+        Ok((
+            values,
+            LoadStats { files: 1, bytes: bytes.len() as u64, seconds: t0.elapsed().as_secs_f64() },
+        ))
+    }
+}
+
+fn write_meta(path: &Path, meta: &StoreMeta) -> Result<()> {
+    let counts: Vec<String> =
+        meta.subgraph_counts.iter().map(|c| c.to_string()).collect();
+    let text = format!(
+        "name={}\nvertices={}\nedges={}\ndirected={}\nweighted={}\npartitions={}\nsubgraphs={}\n",
+        meta.name,
+        meta.num_vertices,
+        meta.num_edges,
+        meta.directed,
+        meta.weighted,
+        meta.num_partitions,
+        counts.join(",")
+    );
+    fs::write(path, text).with_context(|| format!("write {}", path.display()))
+}
+
+fn read_meta(path: &Path) -> Result<StoreMeta> {
+    let text = fs::read_to_string(path)?;
+    let mut name = None;
+    let mut vertices = None;
+    let mut edges = None;
+    let mut directed = None;
+    let mut weighted = None;
+    let mut partitions = None;
+    let mut subgraphs = None;
+    for line in text.lines() {
+        let Some((k, v)) = line.split_once('=') else { continue };
+        match k {
+            "name" => name = Some(v.to_string()),
+            "vertices" => vertices = Some(v.parse()?),
+            "edges" => edges = Some(v.parse()?),
+            "directed" => directed = Some(v == "true"),
+            "weighted" => weighted = Some(v == "true"),
+            "partitions" => partitions = Some(v.parse()?),
+            "subgraphs" => {
+                subgraphs = Some(
+                    v.split(',')
+                        .filter(|s| !s.is_empty())
+                        .map(|s| s.parse::<u32>())
+                        .collect::<Result<Vec<_>, _>>()?,
+                )
+            }
+            _ => {}
+        }
+    }
+    let (Some(name), Some(num_vertices), Some(num_edges), Some(directed), Some(weighted), Some(num_partitions), Some(subgraph_counts)) =
+        (name, vertices, edges, directed, weighted, partitions, subgraphs)
+    else {
+        bail!("meta.txt missing required keys");
+    };
+    ensure!(
+        subgraph_counts.len() == num_partitions as usize,
+        "meta.txt subgraph counts do not match partition count"
+    );
+    Ok(StoreMeta {
+        name,
+        num_vertices,
+        num_edges,
+        directed,
+        weighted,
+        num_partitions,
+        subgraph_counts,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::partition::{MultilevelPartitioner, Partitioner};
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join("goffish_store_tests")
+            .join(format!("{name}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn create_open_load_round_trip() {
+        let g = gen::road(16, 0.93, 0.02, 8);
+        let parts = MultilevelPartitioner::default().partition(&g, 3);
+        let root = tmp("round_trip");
+        let (store, dg) = Store::create(&root, "rn", &g, &parts).unwrap();
+        assert_eq!(store.meta().num_partitions, 3);
+
+        let reopened = Store::open(&root).unwrap();
+        assert_eq!(reopened.meta(), store.meta());
+        let (dg2, stats) = reopened.load_all().unwrap();
+        assert_eq!(dg2.num_subgraphs(), dg.num_subgraphs());
+        assert!(stats.bytes > 0 && stats.files as usize == dg.num_subgraphs());
+        // Vertex sets identical.
+        let verts = |d: &DistributedGraph| -> Vec<Vec<u32>> {
+            d.subgraphs().map(|s| s.vertices.clone()).collect()
+        };
+        assert_eq!(verts(&dg), verts(&dg2));
+    }
+
+    #[test]
+    fn load_partition_is_data_local() {
+        let g = gen::grid(10, 10);
+        let parts = MultilevelPartitioner::default().partition(&g, 2);
+        let root = tmp("data_local");
+        let (store, _) = Store::create(&root, "grid", &g, &parts).unwrap();
+        // Remove the other host's directory: partition 0 must still load.
+        fs::remove_dir_all(root.join("host1")).unwrap();
+        assert!(store.load_partition(0).is_ok());
+        assert!(store.load_partition(1).is_err());
+    }
+
+    #[test]
+    fn write_once_enforced() {
+        let g = gen::chain(10);
+        let parts = MultilevelPartitioner::default().partition(&g, 2);
+        let root = tmp("write_once");
+        Store::create(&root, "c", &g, &parts).unwrap();
+        assert!(Store::create(&root, "c2", &g, &parts).is_err());
+    }
+
+    #[test]
+    fn attributes_round_trip() {
+        let g = gen::chain(12);
+        let parts = MultilevelPartitioner::default().partition(&g, 2);
+        let root = tmp("attrs");
+        let (store, dg) = Store::create(&root, "c", &g, &parts).unwrap();
+        let sg = dg.subgraphs().next().unwrap();
+        let vals: Vec<f32> = (0..sg.num_vertices()).map(|i| i as f32 * 0.5).collect();
+        store.write_attribute(sg.id, "rank", &vals).unwrap();
+        let (back, st) = store.read_attribute(sg.id, "rank").unwrap();
+        assert_eq!(back, vals);
+        assert_eq!(st.files, 1);
+        assert!(store.read_attribute(sg.id, "missing").is_err());
+    }
+
+    #[test]
+    fn open_missing_store_fails() {
+        assert!(Store::open(Path::new("/nonexistent/store")).is_err());
+    }
+
+    #[test]
+    fn corrupted_slice_detected_at_load() {
+        let g = gen::chain(20);
+        let parts = MultilevelPartitioner::default().partition(&g, 2);
+        let root = tmp("corrupt");
+        let (store, _) = Store::create(&root, "c", &g, &parts).unwrap();
+        // Flip a byte in one slice.
+        let slice_path = root.join("host0").join("sg_0.topo.slice");
+        let mut bytes = fs::read(&slice_path).unwrap();
+        let mid = bytes.len() - 3;
+        bytes[mid] ^= 0x55;
+        fs::write(&slice_path, bytes).unwrap();
+        assert!(store.load_partition(0).is_err());
+    }
+
+    #[test]
+    fn partition_out_of_range() {
+        let g = gen::chain(5);
+        let parts = MultilevelPartitioner::default().partition(&g, 2);
+        let root = tmp("oob");
+        let (store, _) = Store::create(&root, "c", &g, &parts).unwrap();
+        assert!(store.load_partition(5).is_err());
+    }
+}

@@ -1,0 +1,440 @@
+//! Sub-graph discovery: partitions → weakly-connected components with
+//! resolved remote edges.
+//!
+//! Definition (paper §3.2): a sub-graph `S` in partition `P_i` is a
+//! maximal set of local vertices such that every pair is connected by an
+//! undirected path through local edges, together with its boundary
+//! *remote edges*. Two sub-graphs never share a vertex; sub-graphs on the
+//! same partition sharing an edge are by definition one sub-graph.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{ensure, Result};
+
+use crate::graph::csr::{Graph, VertexId};
+use crate::partition::Partitioning;
+use crate::util::dsu::Dsu;
+
+/// Globally unique sub-graph identifier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SubgraphId {
+    pub partition: u32,
+    pub index: u32,
+}
+
+impl std::fmt::Display for SubgraphId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "P{}S{}", self.partition, self.index)
+    }
+}
+
+/// A resolved remote edge endpoint: the vertex lives on another
+/// partition, in a known sub-graph (resolved at store-build time).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RemoteRef {
+    /// Local endpoint (index into `Subgraph::vertices`).
+    pub local: u32,
+    /// Global id of the remote vertex.
+    pub target_global: VertexId,
+    /// Partition holding the remote vertex.
+    pub partition: u32,
+    /// Sub-graph index within that partition.
+    pub subgraph: u32,
+    /// Edge weight (1.0 for unweighted graphs).
+    pub weight: f32,
+}
+
+/// One sub-graph: local topology (a dense-id [`Graph`]) plus boundary
+/// remote edges in both directions.
+#[derive(Clone, Debug)]
+pub struct Subgraph {
+    pub id: SubgraphId,
+    /// Global ids of local vertices, sorted ascending; position = local id.
+    pub vertices: Vec<VertexId>,
+    /// Local topology over local ids (directed iff the source graph is).
+    pub local: Graph,
+    /// Out remote edges: local vertex -> remote target.
+    pub remote_out: Vec<RemoteRef>,
+    /// In remote edges: remote source -> local vertex (`local` field is
+    /// the local *destination*; `target_global` is the remote source).
+    pub remote_in: Vec<RemoteRef>,
+    /// |V| of the full distributed graph (PageRank et al. need it).
+    pub num_global_vertices: u64,
+}
+
+impl Subgraph {
+    pub fn num_vertices(&self) -> usize {
+        self.vertices.len()
+    }
+
+    /// Local id of a global vertex, if it lives here.
+    pub fn local_id(&self, global: VertexId) -> Option<u32> {
+        self.vertices.binary_search(&global).ok().map(|i| i as u32)
+    }
+
+    /// Global out-degree of a local vertex (local + remote out-edges):
+    /// what a vertex-centric PageRank would see.
+    pub fn global_out_degree(&self, local: u32) -> usize {
+        self.local.out_degree(local)
+            + self
+                .remote_out
+                .iter()
+                .filter(|r| r.local == local)
+                .count()
+    }
+
+    /// Distinct neighbouring sub-graphs (across remote edges, both
+    /// directions) — the meta-vertex adjacency of the paper's §3.3.
+    pub fn neighbor_subgraphs(&self) -> Vec<SubgraphId> {
+        let mut set = BTreeSet::new();
+        for r in self.remote_out.iter().chain(&self.remote_in) {
+            set.insert(SubgraphId { partition: r.partition, index: r.subgraph });
+        }
+        set.into_iter().collect()
+    }
+}
+
+/// The fully discovered distributed graph: `partitions[p]` holds the
+/// sub-graphs of partition `p`.
+#[derive(Clone, Debug)]
+pub struct DistributedGraph {
+    pub partitions: Vec<Vec<Subgraph>>,
+    pub num_global_vertices: u64,
+    pub directed: bool,
+}
+
+impl DistributedGraph {
+    pub fn num_partitions(&self) -> usize {
+        self.partitions.len()
+    }
+
+    pub fn num_subgraphs(&self) -> usize {
+        self.partitions.iter().map(|p| p.len()).sum()
+    }
+
+    pub fn subgraph(&self, id: SubgraphId) -> &Subgraph {
+        &self.partitions[id.partition as usize][id.index as usize]
+    }
+
+    /// All sub-graphs in deterministic order.
+    pub fn subgraphs(&self) -> impl Iterator<Item = &Subgraph> {
+        self.partitions.iter().flatten()
+    }
+
+    /// Meta-graph: one vertex per sub-graph, an (undirected, deduped)
+    /// edge wherever two sub-graphs share a remote edge. Its diameter
+    /// bounds traversal supersteps (paper §3.3).
+    pub fn meta_graph(&self) -> Graph {
+        let mut index: BTreeMap<SubgraphId, u32> = BTreeMap::new();
+        for sg in self.subgraphs() {
+            let next = index.len() as u32;
+            index.insert(sg.id, next);
+        }
+        let mut b = crate::graph::GraphBuilder::new(false).dedup(true);
+        b.reserve_vertices(index.len());
+        for sg in self.subgraphs() {
+            let me = index[&sg.id];
+            for nb in sg.neighbor_subgraphs() {
+                b.add_edge(me, index[&nb]);
+            }
+        }
+        b.build().expect("meta graph build")
+    }
+}
+
+/// Discover all sub-graphs of `g` under `parts`.
+///
+/// Two passes: (1) per-partition union-find over local edges assigns each
+/// vertex a `(partition, subgraph-index)`; (2) sub-graph topologies and
+/// *resolved* remote refs are materialised.
+pub fn discover(g: &Graph, parts: &Partitioning) -> Result<DistributedGraph> {
+    ensure!(
+        g.num_vertices() == parts.num_vertices(),
+        "partitioning covers {} vertices, graph has {}",
+        parts.num_vertices(),
+        g.num_vertices()
+    );
+    let n = g.num_vertices();
+    let k = parts.k();
+
+    // Pass 1: per-partition weak connectivity via one global DSU that only
+    // unions same-partition endpoints.
+    let mut dsu = Dsu::new(n);
+    for (u, v, _) in g.edges() {
+        if parts.of(u) == parts.of(v) {
+            dsu.union(u, v);
+        }
+    }
+
+    // Assign (partition, index) per DSU root, index dense per partition.
+    let mut sg_of_vertex = vec![(0u32, 0u32); n]; // (partition, subgraph idx)
+    let mut root_index: BTreeMap<(u32, u32), u32> = BTreeMap::new(); // (part, root) -> idx
+    let mut counts_per_part = vec![0u32; k];
+    for v in 0..n as u32 {
+        let p = parts.of(v);
+        let root = dsu.find(v);
+        let idx = *root_index.entry((p, root)).or_insert_with(|| {
+            let i = counts_per_part[p as usize];
+            counts_per_part[p as usize] += 1;
+            i
+        });
+        sg_of_vertex[v as usize] = (p, idx);
+    }
+
+    // Collect members per sub-graph (sorted by global id by construction).
+    let mut members: BTreeMap<(u32, u32), Vec<VertexId>> = BTreeMap::new();
+    for v in 0..n as u32 {
+        let (p, i) = sg_of_vertex[v as usize];
+        members.entry((p, i)).or_default().push(v);
+    }
+
+    // Pass 2: build each sub-graph.
+    let mut partitions: Vec<Vec<Subgraph>> = vec![Vec::new(); k];
+    for ((p, idx), verts) in &members {
+        let local_of: BTreeMap<VertexId, u32> = verts
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| (v, i as u32))
+            .collect();
+        let mut local_edges: Vec<(u32, u32)> = Vec::new();
+        let mut local_weights: Vec<f32> = Vec::new();
+        let mut remote_out: Vec<RemoteRef> = Vec::new();
+        let mut remote_in: Vec<RemoteRef> = Vec::new();
+
+        for (&gv, &lv) in &local_of {
+            for (t, ei) in g.out_edges(gv) {
+                let w = g.weight(ei);
+                match local_of.get(&t) {
+                    Some(&lt) => {
+                        local_edges.push((lv, lt));
+                        local_weights.push(w);
+                    }
+                    None => {
+                        let (tp, ti) = sg_of_vertex[t as usize];
+                        // Same-partition different-subgraph is impossible
+                        // by construction (they'd be unioned).
+                        debug_assert_ne!(tp, *p);
+                        remote_out.push(RemoteRef {
+                            local: lv,
+                            target_global: t,
+                            partition: tp,
+                            subgraph: ti,
+                            weight: w,
+                        });
+                    }
+                }
+            }
+            for (s, ei) in g.in_edges(gv) {
+                if !local_of.contains_key(&s) {
+                    let (sp, si) = sg_of_vertex[s as usize];
+                    remote_in.push(RemoteRef {
+                        local: lv,
+                        target_global: s,
+                        partition: sp,
+                        subgraph: si,
+                        weight: g.weight(ei),
+                    });
+                }
+            }
+        }
+
+        let local = Graph::from_edges(
+            verts.len(),
+            &local_edges,
+            if g.has_weights() { Some(local_weights) } else { None },
+            g.directed(),
+        )?;
+        partitions[*p as usize].push(Subgraph {
+            id: SubgraphId { partition: *p, index: *idx },
+            vertices: verts.clone(),
+            local,
+            remote_out,
+            remote_in,
+            num_global_vertices: n as u64,
+        });
+    }
+    // Sub-graphs were inserted in BTreeMap order of (p, idx): idx order OK.
+    for (p, sgs) in partitions.iter().enumerate() {
+        for (i, sg) in sgs.iter().enumerate() {
+            ensure!(
+                sg.id.partition as usize == p && sg.id.index as usize == i,
+                "sub-graph ordering invariant violated"
+            );
+        }
+    }
+
+    Ok(DistributedGraph {
+        partitions,
+        num_global_vertices: n as u64,
+        directed: g.directed(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::partition::{Partitioner, RangePartitioner};
+
+    fn two_part_fig1() -> (Graph, Partitioning) {
+        // Mirror of the paper's Fig. 1 idea: a graph split in two where one
+        // partition holds two sub-graphs and the other holds one.
+        // Partition 0: {0,1,2} chain + {3,4} pair (disconnected locally).
+        // Partition 1: {5,6,7} chain, with remote edges 2-5 and 4-6.
+        let edges = [
+            (0u32, 1u32),
+            (1, 2),
+            (3, 4),
+            (5, 6),
+            (6, 7),
+            (2, 5), // remote
+            (4, 6), // remote
+        ];
+        let g = Graph::from_edges(8, &edges, None, false).unwrap();
+        let parts = Partitioning::new(2, vec![0, 0, 0, 0, 0, 1, 1, 1]);
+        (g, parts)
+    }
+
+    #[test]
+    fn discovery_counts_and_membership() {
+        let (g, parts) = two_part_fig1();
+        let dg = discover(&g, &parts).unwrap();
+        assert_eq!(dg.num_partitions(), 2);
+        assert_eq!(dg.partitions[0].len(), 2);
+        assert_eq!(dg.partitions[1].len(), 1);
+        assert_eq!(dg.num_subgraphs(), 3);
+        // Each vertex appears in exactly one sub-graph.
+        let mut seen = vec![false; 8];
+        for sg in dg.subgraphs() {
+            for &v in &sg.vertices {
+                assert!(!seen[v as usize], "vertex {v} in two sub-graphs");
+                seen[v as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn local_topology_correct() {
+        let (g, parts) = two_part_fig1();
+        let dg = discover(&g, &parts).unwrap();
+        let sg0 = &dg.partitions[0][0]; // {0,1,2}
+        assert_eq!(sg0.vertices, vec![0, 1, 2]);
+        assert_eq!(sg0.local.num_edges(), 2);
+        let sg1 = &dg.partitions[0][1]; // {3,4}
+        assert_eq!(sg1.vertices, vec![3, 4]);
+        assert_eq!(sg1.local.num_edges(), 1);
+    }
+
+    #[test]
+    fn remote_edges_resolved() {
+        let (g, parts) = two_part_fig1();
+        let dg = discover(&g, &parts).unwrap();
+        let sg0 = &dg.partitions[0][0]; // {0,1,2} has out-remote 2->5
+        assert_eq!(sg0.remote_out.len(), 1);
+        let r = sg0.remote_out[0];
+        assert_eq!(r.target_global, 5);
+        assert_eq!(r.partition, 1);
+        assert_eq!(r.subgraph, 0);
+        assert_eq!(sg0.vertices[r.local as usize], 2);
+        // And partition 1's sub-graph sees both incoming remotes.
+        let sgr = &dg.partitions[1][0];
+        assert_eq!(sgr.remote_in.len(), 2);
+        assert_eq!(sgr.remote_out.len(), 0);
+    }
+
+    #[test]
+    fn neighbor_subgraphs_meta_adjacency() {
+        let (g, parts) = two_part_fig1();
+        let dg = discover(&g, &parts).unwrap();
+        let sg0 = &dg.partitions[0][0];
+        let sg1 = &dg.partitions[0][1];
+        let sgr = &dg.partitions[1][0];
+        assert_eq!(sg0.neighbor_subgraphs(), vec![sgr.id]);
+        assert_eq!(sg1.neighbor_subgraphs(), vec![sgr.id]);
+        assert_eq!(sgr.neighbor_subgraphs(), vec![sg0.id, sg1.id]);
+    }
+
+    #[test]
+    fn meta_graph_shape() {
+        let (g, parts) = two_part_fig1();
+        let dg = discover(&g, &parts).unwrap();
+        let meta = dg.meta_graph();
+        assert_eq!(meta.num_vertices(), 3);
+        assert_eq!(meta.num_edges(), 2); // star centred on partition 1's sg
+    }
+
+    #[test]
+    fn same_partition_subgraphs_never_share_edge() {
+        // Property from the paper: if two sub-graphs on the same partition
+        // shared an edge they'd be merged.
+        let g = gen::road(20, 0.95, 0.01, 3);
+        let parts = RangePartitioner.partition(&g, 4);
+        let dg = discover(&g, &parts).unwrap();
+        for (u, v, _) in g.edges() {
+            let (pu, su) = {
+                let sg = dg
+                    .subgraphs()
+                    .find(|sg| sg.local_id(u).is_some())
+                    .unwrap();
+                (sg.id.partition, sg.id.index)
+            };
+            let (pv, sv) = {
+                let sg = dg
+                    .subgraphs()
+                    .find(|sg| sg.local_id(v).is_some())
+                    .unwrap();
+                (sg.id.partition, sg.id.index)
+            };
+            if pu == pv {
+                assert_eq!(su, sv, "edge ({u},{v}) crosses sub-graphs within partition {pu}");
+            }
+        }
+    }
+
+    #[test]
+    fn global_out_degree_counts_remote() {
+        let (g, parts) = two_part_fig1();
+        let dg = discover(&g, &parts).unwrap();
+        let sg0 = &dg.partitions[0][0];
+        let local2 = sg0.local_id(2).unwrap();
+        // Vertex 2: no local out-edges (1->2 is incoming), one remote 2->5.
+        assert_eq!(sg0.global_out_degree(local2), 1);
+    }
+
+    #[test]
+    fn weighted_graph_preserves_weights() {
+        let g = Graph::from_edges(
+            4,
+            &[(0, 1), (1, 2), (2, 3)],
+            Some(vec![1.5, 2.5, 3.5]),
+            true,
+        )
+        .unwrap();
+        let parts = Partitioning::new(2, vec![0, 0, 1, 1]);
+        let dg = discover(&g, &parts).unwrap();
+        let sg0 = &dg.partitions[0][0];
+        let (_, ei) = sg0.local.out_edges(0).next().unwrap();
+        assert_eq!(sg0.local.weight(ei), 1.5);
+        assert_eq!(sg0.remote_out[0].weight, 2.5);
+    }
+
+    #[test]
+    fn mismatched_partitioning_rejected() {
+        let g = gen::chain(5);
+        let parts = Partitioning::new(2, vec![0, 0, 1]);
+        assert!(discover(&g, &parts).is_err());
+    }
+
+    #[test]
+    fn trivial_subgraphs_degenerate_to_vertices() {
+        // Hash-partition a chain into many parts: most sub-graphs are
+        // single vertices (the paper's degenerate case).
+        let g = gen::chain(16);
+        let parts = crate::partition::HashPartitioner::default().partition(&g, 8);
+        let dg = discover(&g, &parts).unwrap();
+        assert!(dg.num_subgraphs() >= 8);
+        let total: usize = dg.subgraphs().map(|s| s.num_vertices()).sum();
+        assert_eq!(total, 16);
+    }
+}

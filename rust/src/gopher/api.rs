@@ -1,0 +1,224 @@
+//! The sub-graph centric programming abstraction (paper §3.2).
+//!
+//! Users implement [`SubgraphProgram`]: a `compute` invoked once per
+//! sub-graph per superstep with shared-memory access to the whole
+//! sub-graph, plus the paper's messaging surface:
+//!
+//! * `SendToAllSubGraphNeighbors` → [`SubgraphContext::send_to_all_neighbors`]
+//! * `SendToSubGraph`            → [`SubgraphContext::send_to_subgraph`]
+//! * `SendToSubGraphVertex`      → [`SubgraphContext::send_to_subgraph_vertex`]
+//! * `SendToAllSubGraphs`        → [`SubgraphContext::send_to_all_subgraphs`]
+//! * `VoteToHalt`                → [`SubgraphContext::vote_to_halt`]
+
+use anyhow::Result;
+
+use crate::gofs::{Subgraph, SubgraphId};
+use crate::graph::VertexId;
+use crate::util::codec::{Decoder, Encoder};
+
+/// Wire codec for message payloads (needed because the data fabric is
+/// byte-oriented — including the in-process fabric, for honest byte
+/// accounting and a single code path with TCP).
+pub trait MsgCodec: Sized {
+    fn encode(&self, e: &mut Encoder);
+    fn decode(d: &mut Decoder) -> Result<Self>;
+}
+
+impl MsgCodec for f32 {
+    fn encode(&self, e: &mut Encoder) {
+        e.put_f32(*self);
+    }
+    fn decode(d: &mut Decoder) -> Result<Self> {
+        d.get_f32()
+    }
+}
+
+impl MsgCodec for f64 {
+    fn encode(&self, e: &mut Encoder) {
+        e.put_f64(*self);
+    }
+    fn decode(d: &mut Decoder) -> Result<Self> {
+        d.get_f64()
+    }
+}
+
+impl MsgCodec for u32 {
+    fn encode(&self, e: &mut Encoder) {
+        e.put_varint(*self as u64);
+    }
+    fn decode(d: &mut Decoder) -> Result<Self> {
+        Ok(d.get_varint()? as u32)
+    }
+}
+
+impl MsgCodec for u64 {
+    fn encode(&self, e: &mut Encoder) {
+        e.put_varint(*self);
+    }
+    fn decode(d: &mut Decoder) -> Result<Self> {
+        d.get_varint()
+    }
+}
+
+impl MsgCodec for () {
+    fn encode(&self, _e: &mut Encoder) {}
+    fn decode(_d: &mut Decoder) -> Result<Self> {
+        Ok(())
+    }
+}
+
+impl<A: MsgCodec, B: MsgCodec> MsgCodec for (A, B) {
+    fn encode(&self, e: &mut Encoder) {
+        self.0.encode(e);
+        self.1.encode(e);
+    }
+    fn decode(d: &mut Decoder) -> Result<Self> {
+        Ok((A::decode(d)?, B::decode(d)?))
+    }
+}
+
+/// An incoming data message delivered to a sub-graph at superstep start.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IncomingMessage<M> {
+    /// Target vertex (global id) when sent via `send_to_subgraph_vertex`.
+    pub vertex: Option<VertexId>,
+    pub payload: M,
+}
+
+/// Outgoing envelope collected during compute (crate-internal).
+#[derive(Clone, Debug)]
+pub(crate) struct Envelope<M> {
+    pub target: SubgraphId,
+    pub vertex: Option<VertexId>,
+    pub payload: M,
+}
+
+/// Broadcast marker used by `send_to_all_subgraphs`.
+#[derive(Clone, Debug)]
+pub(crate) enum Outgoing<M> {
+    Direct(Envelope<M>),
+    Broadcast(M),
+}
+
+/// Per-(sub-graph, superstep) execution context.
+pub struct SubgraphContext<'a, M> {
+    pub(crate) superstep: usize,
+    pub(crate) sg: &'a Subgraph,
+    pub(crate) out: Vec<Outgoing<M>>,
+    pub(crate) halted: bool,
+}
+
+impl<'a, M: Clone> SubgraphContext<'a, M> {
+    pub(crate) fn new(superstep: usize, sg: &'a Subgraph) -> Self {
+        Self { superstep, sg, out: Vec::new(), halted: false }
+    }
+
+    /// Current superstep (1-based, as in the paper's pseudocode).
+    pub fn superstep(&self) -> usize {
+        self.superstep
+    }
+
+    /// Send to a specific sub-graph (its whole-sub-graph mailbox).
+    pub fn send_to_subgraph(&mut self, target: SubgraphId, payload: M) {
+        self.out.push(Outgoing::Direct(Envelope { target, vertex: None, payload }));
+    }
+
+    /// Send to a specific vertex of a specific sub-graph.
+    pub fn send_to_subgraph_vertex(
+        &mut self,
+        target: SubgraphId,
+        vertex: VertexId,
+        payload: M,
+    ) {
+        self.out.push(Outgoing::Direct(Envelope {
+            target,
+            vertex: Some(vertex),
+            payload,
+        }));
+    }
+
+    /// Send to every neighbouring sub-graph (across remote edges, both
+    /// directions — neighbours are by definition on other partitions).
+    pub fn send_to_all_neighbors(&mut self, payload: M) {
+        for nb in self.sg.neighbor_subgraphs() {
+            self.send_to_subgraph(nb, payload.clone());
+        }
+    }
+
+    /// Global broadcast — costly, use sparingly (paper §3.2).
+    pub fn send_to_all_subgraphs(&mut self, payload: M) {
+        self.out.push(Outgoing::Broadcast(payload));
+    }
+
+    /// Vote to halt: skip this sub-graph next superstep unless messages
+    /// arrive for it.
+    pub fn vote_to_halt(&mut self) {
+        self.halted = true;
+    }
+}
+
+/// A sub-graph centric program. `State` persists across supersteps (the
+/// paper's "the method is stateful for each sub-graph").
+pub trait SubgraphProgram: Sync {
+    type Msg: MsgCodec + Clone + Send + Sync + 'static;
+    type State: Send + 'static;
+
+    /// Build the initial per-sub-graph state (before superstep 1).
+    fn init(&self, sg: &Subgraph) -> Self::State;
+
+    /// One superstep of computation on one sub-graph.
+    fn compute(
+        &self,
+        state: &mut Self::State,
+        sg: &Subgraph,
+        ctx: &mut SubgraphContext<'_, Self::Msg>,
+        msgs: &[IncomingMessage<Self::Msg>],
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gofs::subgraph::discover;
+    use crate::graph::csr::Graph;
+    use crate::partition::Partitioning;
+
+    fn sg_pair() -> crate::gofs::DistributedGraph {
+        let g = Graph::from_edges(4, &[(0, 1), (2, 3), (1, 2)], None, false).unwrap();
+        let parts = Partitioning::new(2, vec![0, 0, 1, 1]);
+        discover(&g, &parts).unwrap()
+    }
+
+    #[test]
+    fn context_collects_sends() {
+        let dg = sg_pair();
+        let sg = &dg.partitions[0][0];
+        let mut ctx = SubgraphContext::<f32>::new(1, sg);
+        ctx.send_to_all_neighbors(2.5);
+        ctx.send_to_subgraph_vertex(dg.partitions[1][0].id, 3, 1.5);
+        ctx.send_to_all_subgraphs(9.0);
+        assert_eq!(ctx.out.len(), 3); // 1 neighbour + 1 direct + 1 broadcast
+        assert!(!ctx.halted);
+        ctx.vote_to_halt();
+        assert!(ctx.halted);
+    }
+
+    #[test]
+    fn msg_codec_round_trips() {
+        fn rt<M: MsgCodec + PartialEq + std::fmt::Debug>(m: M) {
+            let mut e = Encoder::new();
+            m.encode(&mut e);
+            let bytes = e.into_bytes();
+            let mut d = Decoder::new(&bytes);
+            assert_eq!(M::decode(&mut d).unwrap(), m);
+            assert!(d.is_at_end());
+        }
+        rt(1.5f32);
+        rt(-2.5f64);
+        rt(17u32);
+        rt(u64::MAX);
+        rt(());
+        rt((42u32, 1.25f32));
+        rt((7u64, (1u32, 2.0f32)));
+    }
+}

@@ -1,0 +1,839 @@
+//! The Gopher BSP engine: manager/worker superstep loop (paper §4.2).
+//!
+//! Execution shape (one worker thread per partition/host, one manager):
+//!
+//! 1. **Load** — each worker loads its partition's sub-graphs (from a
+//!    [`crate::gofs::Store`] in `run_on_store`, data-local; or handed an
+//!    in-memory [`DistributedGraph`] in `run`).
+//! 2. **Superstep** — worker invokes `compute` on every *active*
+//!    sub-graph (not halted, or has input messages) on a core-sized
+//!    thread pool; outgoing messages are aggregated per destination host
+//!    and flushed over the data fabric, ending with an EOS marker per
+//!    peer; the worker then drains its inbox until it has EOS from every
+//!    peer (BSP delivery guarantee), and reports a *sync* to the manager.
+//! 3. **Manager** — once all workers sync, decides: if nobody sent a
+//!    message and every sub-graph voted to halt → *terminate*; else
+//!    broadcast *resume*.
+//!
+//! The data plane is byte-encoded even in-process so the TCP fabric and
+//! the byte accounting share one code path.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::gofs::{DistributedGraph, LoadStats, Store, Subgraph, SubgraphId};
+use crate::metrics::{JobMetrics, SuperstepMetrics};
+use crate::util::codec::{Decoder, Encoder};
+use crate::util::pool;
+
+use super::api::{
+    IncomingMessage, MsgCodec, Outgoing, SubgraphContext, SubgraphProgram,
+};
+use super::transport::{self, Fabric, FabricKind};
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct GopherConfig {
+    /// Compute threads per worker (paper testbed: 8 cores/host).
+    pub cores_per_worker: usize,
+    /// Data fabric between workers.
+    pub fabric: FabricKind,
+    /// Safety cap on supersteps.
+    pub max_supersteps: usize,
+    /// Flush a destination batch once it reaches this many bytes.
+    pub batch_flush_bytes: usize,
+}
+
+impl Default for GopherConfig {
+    fn default() -> Self {
+        Self {
+            cores_per_worker: 4,
+            fabric: FabricKind::InProc,
+            max_supersteps: 10_000,
+            batch_flush_bytes: 256 << 10,
+        }
+    }
+}
+
+/// Result of a Gopher job.
+pub struct RunResult<S> {
+    /// Final per-sub-graph program states.
+    pub states: BTreeMap<SubgraphId, S>,
+    pub metrics: JobMetrics,
+}
+
+// ------------------------------------------------------------ wire format
+
+const TAG_BATCH: u8 = 0;
+const TAG_EOS: u8 = 1;
+
+fn encode_batch<M: MsgCodec>(
+    envelopes: &[(u32, Option<u32>, M)],
+) -> Vec<u8> {
+    let mut e = Encoder::with_capacity(8 + envelopes.len() * 8);
+    e.put_u8(TAG_BATCH);
+    e.put_varint(envelopes.len() as u64);
+    for (sg_index, vertex, payload) in envelopes {
+        e.put_varint(*sg_index as u64);
+        match vertex {
+            Some(v) => {
+                e.put_u8(1);
+                e.put_varint(*v as u64);
+            }
+            None => e.put_u8(0),
+        }
+        payload.encode(&mut e);
+    }
+    e.into_bytes()
+}
+
+fn decode_batch<M: MsgCodec>(
+    bytes: &[u8],
+) -> Result<Vec<(u32, IncomingMessage<M>)>> {
+    let mut d = Decoder::new(bytes);
+    let tag = d.get_u8()?;
+    if tag != TAG_BATCH {
+        bail!("expected batch frame, got tag {tag}");
+    }
+    let n = d.get_varint()? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let sg_index = d.get_varint()? as u32;
+        let has_vertex = d.get_u8()? != 0;
+        let vertex = if has_vertex { Some(d.get_varint()? as u32) } else { None };
+        let payload = M::decode(&mut d)?;
+        out.push((sg_index, IncomingMessage { vertex, payload }));
+    }
+    Ok(out)
+}
+
+fn eos_frame() -> Vec<u8> {
+    vec![TAG_EOS]
+}
+
+// --------------------------------------------------------- control plane
+
+struct WorkerSync {
+    worker: u32,
+    /// Data messages sent this superstep (including self-sends).
+    sent: u64,
+    /// All local sub-graphs voted to halt and hold no pending messages.
+    quiescent: bool,
+    /// Worker failed: manager must abort the job after this superstep.
+    failed: bool,
+}
+
+enum ManagerCmd {
+    Resume,
+    Terminate,
+}
+
+// ----------------------------------------------------------- worker body
+
+struct WorkerOutput<S> {
+    states: Vec<(SubgraphId, S)>,
+    per_superstep: Vec<WorkerSuperstep>,
+    load: LoadStats,
+}
+
+struct WorkerSuperstep {
+    compute_seconds: f64,
+    unit_times: Vec<f64>,
+    messages: u64,
+    bytes: u64,
+    active_units: u64,
+}
+
+/// Worker entry point: runs the superstep loop; on error, unblocks peers
+/// (EOS) and the manager (failed sync) before surfacing the error, so a
+/// failing worker aborts the job instead of deadlocking the barrier.
+#[allow(clippy::too_many_arguments)]
+fn worker_body<P, F>(
+    program: &P,
+    fabric: F,
+    cfg: &GopherConfig,
+    subgraphs: Vec<Subgraph>,
+    load: LoadStats,
+    directory: &[u32],
+    sync_tx: Sender<WorkerSync>,
+    cmd_rx: Receiver<ManagerCmd>,
+) -> Result<WorkerOutput<P::State>>
+where
+    P: SubgraphProgram,
+    F: Fabric,
+{
+    let me = fabric.id();
+    let k = fabric.num_workers();
+    match worker_loop(program, &fabric, cfg, subgraphs, directory, &sync_tx, &cmd_rx) {
+        Ok((states, per_superstep)) => Ok(WorkerOutput { states, per_superstep, load }),
+        Err(e) => {
+            // Best-effort cleanup: peers may be blocked draining for our
+            // EOS, and the manager for our sync.
+            for p in 0..k as u32 {
+                if p != me {
+                    let _ = fabric.send(p, eos_frame());
+                }
+            }
+            let _ = sync_tx.send(WorkerSync {
+                worker: me,
+                sent: 0,
+                quiescent: true,
+                failed: true,
+            });
+            let _ = cmd_rx.recv(); // wait for terminate
+            Err(e)
+        }
+    }
+}
+
+type LoopOutput<S> = (Vec<(SubgraphId, S)>, Vec<WorkerSuperstep>);
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop<P, F>(
+    program: &P,
+    fabric: &F,
+    cfg: &GopherConfig,
+    subgraphs: Vec<Subgraph>,
+    directory: &[u32],
+    sync_tx: &Sender<WorkerSync>,
+    cmd_rx: &Receiver<ManagerCmd>,
+) -> Result<LoopOutput<P::State>>
+where
+    P: SubgraphProgram,
+    F: Fabric,
+{
+    let me = fabric.id();
+    let k = fabric.num_workers();
+    let n_local = subgraphs.len();
+
+    // Per-sub-graph mutable cells (pool jobs touch disjoint indices; the
+    // mutexes are uncontended).
+    let states: Vec<Mutex<P::State>> = subgraphs
+        .iter()
+        .map(|sg| Mutex::new(program.init(sg)))
+        .collect();
+    let halted: Vec<AtomicBool> = (0..n_local).map(|_| AtomicBool::new(false)).collect();
+    let mut inbox: Vec<Vec<IncomingMessage<P::Msg>>> =
+        (0..n_local).map(|_| Vec::new()).collect();
+
+    let mut per_superstep = Vec::new();
+    let mut superstep = 1usize;
+    // Adaptive parallelism: when the previous superstep's compute was
+    // negligible, thread fan-out costs more than it saves (CC/SSSP
+    // supersteps after the first are sync-bound — the paper's §6.3
+    // "superstep time is dominated by the synchronization overhead").
+    // See EXPERIMENTS.md §Perf for the measured effect.
+    const PARALLEL_THRESHOLD_SECONDS: f64 = 200e-6;
+    let mut last_compute = f64::INFINITY;
+
+    loop {
+        // Active set: not halted, or has input messages (paper §4.2).
+        let active: Vec<usize> = (0..n_local)
+            .filter(|&i| !halted[i].load(Ordering::Relaxed) || !inbox[i].is_empty())
+            .collect();
+
+        let cur_inbox: Vec<Vec<IncomingMessage<P::Msg>>> =
+            std::mem::replace(&mut inbox, (0..n_local).map(|_| Vec::new()).collect());
+
+        // ---- compute phase (thread pool over active sub-graphs)
+        let cores = if last_compute < PARALLEL_THRESHOLD_SECONDS {
+            1
+        } else {
+            cfg.cores_per_worker
+        };
+        let outs: Vec<Mutex<Vec<Outgoing<P::Msg>>>> =
+            (0..active.len()).map(|_| Mutex::new(Vec::new())).collect();
+        let t0 = Instant::now();
+        let unit_times = pool::run_indexed(cores, active.len(), |j| {
+            let i = active[j];
+            let sg = &subgraphs[i];
+            let mut ctx = SubgraphContext::new(superstep, sg);
+            let mut state = states[i].lock().unwrap();
+            program.compute(&mut state, sg, &mut ctx, &cur_inbox[i]);
+            halted[i].store(ctx.halted, Ordering::Relaxed);
+            *outs[j].lock().unwrap() = ctx.out;
+        })?;
+        let compute_seconds = t0.elapsed().as_secs_f64();
+        last_compute = compute_seconds;
+
+        // ---- route phase: group envelopes per destination partition
+        let mut sent_msgs = 0u64;
+        let mut sent_bytes = 0u64;
+        // pending[p] = (sg_index, vertex, payload) envelopes for worker p.
+        let mut pending: Vec<Vec<(u32, Option<u32>, P::Msg)>> =
+            (0..k).map(|_| Vec::new()).collect();
+        let mut flush = |p: usize,
+                         buf: &mut Vec<(u32, Option<u32>, P::Msg)>,
+                         inbox: &mut Vec<Vec<IncomingMessage<P::Msg>>>|
+         -> Result<u64> {
+            if buf.is_empty() {
+                return Ok(0);
+            }
+            if p as u32 == me {
+                // Self-delivery bypasses the fabric (but still counts).
+                for (sgi, vertex, payload) in buf.drain(..) {
+                    inbox[sgi as usize].push(IncomingMessage { vertex, payload });
+                }
+                return Ok(0);
+            }
+            let frame = encode_batch(&std::mem::take(buf));
+            let len = frame.len() as u64;
+            fabric.send(p as u32, frame)?;
+            Ok(len)
+        };
+
+        for cell in &outs {
+            let envs = cell.lock().unwrap();
+            for out in envs.iter() {
+                match out {
+                    Outgoing::Direct(env) => {
+                        sent_msgs += 1;
+                        let p = env.target.partition as usize;
+                        pending[p].push((env.target.index, env.vertex, env.payload.clone()));
+                        if pending[p].len() * 16 >= cfg.batch_flush_bytes {
+                            sent_bytes += flush(p, &mut pending[p], &mut inbox)?;
+                        }
+                    }
+                    Outgoing::Broadcast(m) => {
+                        for (p, &count) in directory.iter().enumerate() {
+                            for idx in 0..count {
+                                sent_msgs += 1;
+                                pending[p].push((idx, None, m.clone()));
+                            }
+                            if pending[p].len() * 16 >= cfg.batch_flush_bytes {
+                                sent_bytes += flush(p, &mut pending[p], &mut inbox)?;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        for p in 0..k {
+            let mut buf = std::mem::take(&mut pending[p]);
+            sent_bytes += flush(p, &mut buf, &mut inbox)?;
+        }
+        // End-of-superstep markers to every peer.
+        for p in 0..k as u32 {
+            if p != me {
+                fabric.send(p, eos_frame())?;
+            }
+        }
+
+        // ---- drain phase: collect batches until EOS from all peers
+        let mut eos_seen = 0usize;
+        while eos_seen < k - 1 {
+            let frame = fabric.recv()?;
+            match frame.first() {
+                Some(&TAG_EOS) => eos_seen += 1,
+                Some(&TAG_BATCH) => {
+                    for (sgi, msg) in decode_batch::<P::Msg>(&frame)? {
+                        let slot = inbox
+                            .get_mut(sgi as usize)
+                            .with_context(|| format!("message for unknown sub-graph index {sgi} on worker {me}"))?;
+                        slot.push(msg);
+                    }
+                }
+                other => bail!("bad frame tag {other:?}"),
+            }
+        }
+
+        per_superstep.push(WorkerSuperstep {
+            compute_seconds,
+            unit_times,
+            messages: sent_msgs,
+            bytes: sent_bytes,
+            active_units: active.len() as u64,
+        });
+
+        // ---- sync with the manager
+        let quiescent = (0..n_local)
+            .all(|i| halted[i].load(Ordering::Relaxed) && inbox[i].is_empty());
+        sync_tx
+            .send(WorkerSync { worker: me, sent: sent_msgs, quiescent, failed: false })
+            .map_err(|_| anyhow::anyhow!("manager hung up"))?;
+        match cmd_rx.recv().context("manager command channel closed")? {
+            ManagerCmd::Resume => superstep += 1,
+            ManagerCmd::Terminate => break,
+        }
+        if superstep > cfg.max_supersteps {
+            bail!("exceeded max_supersteps={}", cfg.max_supersteps);
+        }
+    }
+
+    let states = subgraphs
+        .iter()
+        .zip(states)
+        .map(|(sg, cell)| (sg.id, cell.into_inner().unwrap()))
+        .collect();
+    Ok((states, per_superstep))
+}
+
+// ---------------------------------------------------------------- driver
+
+enum PartitionSource<'a> {
+    InMemory(&'a DistributedGraph),
+    OnDisk(&'a Store),
+}
+
+fn run_inner<P: SubgraphProgram>(
+    source: PartitionSource<'_>,
+    program: &P,
+    cfg: &GopherConfig,
+) -> Result<RunResult<P::State>> {
+    let (k, directory): (usize, Vec<u32>) = match &source {
+        PartitionSource::InMemory(dg) => (
+            dg.num_partitions(),
+            dg.partitions.iter().map(|p| p.len() as u32).collect(),
+        ),
+        PartitionSource::OnDisk(store) => (
+            store.meta().num_partitions as usize,
+            store.meta().subgraph_counts.clone(),
+        ),
+    };
+    anyhow::ensure!(k >= 1, "no partitions");
+
+    let (sync_tx, sync_rx) = channel::<WorkerSync>();
+    let mut cmd_txs: Vec<Sender<ManagerCmd>> = Vec::with_capacity(k);
+    let mut cmd_rxs: Vec<Receiver<ManagerCmd>> = Vec::with_capacity(k);
+    for _ in 0..k {
+        let (tx, rx) = channel();
+        cmd_txs.push(tx);
+        cmd_rxs.push(rx);
+    }
+
+    // Build fabrics up front (TCP does its mesh handshake here).
+    enum Fabrics {
+        InProc(Vec<transport::InProcFabric>),
+        Tcp(Vec<transport::TcpFabric>),
+    }
+    let fabrics = match cfg.fabric {
+        FabricKind::InProc => Fabrics::InProc(transport::in_proc(k)),
+        FabricKind::Tcp => Fabrics::Tcp(transport::tcp(k)?),
+    };
+
+    let t_job = Instant::now();
+    let result: Result<(Vec<WorkerOutput<P::State>>, JobMetrics)> =
+        std::thread::scope(|scope| {
+            // ---- workers
+            let mut handles = Vec::with_capacity(k);
+            let mut spawn_worker = |p: usize, fab_any: FabricAny| {
+                let sync_tx = sync_tx.clone();
+                let cmd_rx = cmd_rxs.remove(0);
+                let source = &source;
+                let directory = &directory;
+                handles.push(scope.spawn(move || -> Result<WorkerOutput<P::State>> {
+                    let t_load = Instant::now();
+                    let loaded = match source {
+                        PartitionSource::InMemory(dg) => Ok((
+                            dg.partitions[p].clone(),
+                            LoadStats {
+                                files: 0,
+                                bytes: 0,
+                                seconds: t_load.elapsed().as_secs_f64(),
+                            },
+                        )),
+                        PartitionSource::OnDisk(store) => store.load_partition(p as u32),
+                    };
+                    let (subgraphs, load) = match loaded {
+                        Ok(x) => x,
+                        Err(e) => {
+                            // Load failure happens before the first
+                            // superstep: unblock peers (they will drain
+                            // for our EOS) and the manager, then abort.
+                            let (me, k) = match &fab_any {
+                                FabricAny::InProc(f) => (f.id(), f.num_workers()),
+                                FabricAny::Tcp(f) => (f.id(), f.num_workers()),
+                            };
+                            for peer in 0..k as u32 {
+                                if peer != me {
+                                    let _ = match &fab_any {
+                                        FabricAny::InProc(f) => f.send(peer, eos_frame()),
+                                        FabricAny::Tcp(f) => f.send(peer, eos_frame()),
+                                    };
+                                }
+                            }
+                            let _ = sync_tx.send(WorkerSync {
+                                worker: me,
+                                sent: 0,
+                                quiescent: true,
+                                failed: true,
+                            });
+                            let _ = cmd_rx.recv();
+                            return Err(e);
+                        }
+                    };
+                    match fab_any {
+                        FabricAny::InProc(f) => worker_body(
+                            program, f, cfg, subgraphs, load, directory, sync_tx, cmd_rx,
+                        ),
+                        FabricAny::Tcp(f) => worker_body(
+                            program, f, cfg, subgraphs, load, directory, sync_tx, cmd_rx,
+                        ),
+                    }
+                }));
+            };
+            enum FabricAny {
+                InProc(transport::InProcFabric),
+                Tcp(transport::TcpFabric),
+            }
+            match fabrics {
+                Fabrics::InProc(fs) => {
+                    for (p, f) in fs.into_iter().enumerate() {
+                        spawn_worker(p, FabricAny::InProc(f));
+                    }
+                }
+                Fabrics::Tcp(fs) => {
+                    for (p, f) in fs.into_iter().enumerate() {
+                        spawn_worker(p, FabricAny::Tcp(f));
+                    }
+                }
+            }
+            drop(sync_tx);
+
+            // ---- manager loop
+            let mut superstep_walls: Vec<f64> = Vec::new();
+            let mut t_step = Instant::now();
+            loop {
+                let mut sent_total = 0u64;
+                let mut all_quiescent = true;
+                let mut any_failed = false;
+                let mut seen = 0usize;
+                while seen < k {
+                    match sync_rx.recv() {
+                        Ok(s) => {
+                            sent_total += s.sent;
+                            all_quiescent &= s.quiescent;
+                            any_failed |= s.failed;
+                            seen += 1;
+                        }
+                        Err(_) => {
+                            // A worker died: surface its error via join.
+                            for h in handles {
+                                match h.join() {
+                                    Ok(Ok(_)) => {}
+                                    Ok(Err(e)) => return Err(e),
+                                    Err(p) => std::panic::resume_unwind(p),
+                                }
+                            }
+                            bail!("worker exited mid-superstep without error");
+                        }
+                    }
+                }
+                superstep_walls.push(t_step.elapsed().as_secs_f64());
+                let done = (all_quiescent && sent_total == 0) || any_failed;
+                let cmd = if done { ManagerCmd::Terminate } else { ManagerCmd::Resume };
+                for tx in &cmd_txs {
+                    // A worker that already errored may have dropped its rx.
+                    let _ = tx.send(match cmd {
+                        ManagerCmd::Terminate => ManagerCmd::Terminate,
+                        ManagerCmd::Resume => ManagerCmd::Resume,
+                    });
+                }
+                if done {
+                    break;
+                }
+                t_step = Instant::now();
+            }
+
+            // ---- join workers, merge metrics
+            let mut outputs = Vec::with_capacity(k);
+            for h in handles {
+                match h.join() {
+                    Ok(Ok(out)) => outputs.push(out),
+                    Ok(Err(e)) => return Err(e),
+                    Err(p) => std::panic::resume_unwind(p),
+                }
+            }
+            let n_steps = superstep_walls.len();
+            let mut metrics = JobMetrics {
+                load_seconds: outputs
+                    .iter()
+                    .map(|o| o.load.seconds)
+                    .fold(0.0, f64::max),
+                load_bytes: outputs.iter().map(|o| o.load.bytes).sum(),
+                load_files: outputs.iter().map(|o| o.load.files).sum(),
+                ..Default::default()
+            };
+            for s in 0..n_steps {
+                let mut sm = SuperstepMetrics::default();
+                for out in &outputs {
+                    let ws = &out.per_superstep[s];
+                    sm.partition_compute_seconds.push(ws.compute_seconds);
+                    sm.unit_times.push(ws.unit_times.clone());
+                    sm.messages += ws.messages;
+                    sm.bytes += ws.bytes;
+                    sm.active_units += ws.active_units;
+                }
+                sm.wall_seconds = superstep_walls[s];
+                metrics.compute_seconds += sm.wall_seconds;
+                metrics.supersteps.push(sm);
+            }
+            Ok((outputs, metrics))
+        });
+    let (outputs, mut metrics) = result?;
+    // Makespan sanity: compute time cannot exceed the job wall.
+    metrics.compute_seconds = metrics.compute_seconds.min(t_job.elapsed().as_secs_f64());
+
+    let mut states = BTreeMap::new();
+    for out in outputs {
+        for (id, st) in out.states {
+            states.insert(id, st);
+        }
+    }
+    Ok(RunResult { states, metrics })
+}
+
+/// Run a program over an in-memory distributed graph.
+pub fn run<P: SubgraphProgram>(
+    dg: &DistributedGraph,
+    program: &P,
+    cfg: &GopherConfig,
+) -> Result<RunResult<P::State>> {
+    run_inner(PartitionSource::InMemory(dg), program, cfg)
+}
+
+/// Run a program over an on-disk GoFS store (data-local loading; load
+/// time lands in `metrics.load_seconds` — the Fig 4(b) quantity).
+pub fn run_on_store<P: SubgraphProgram>(
+    store: &Store,
+    program: &P,
+    cfg: &GopherConfig,
+) -> Result<RunResult<P::State>> {
+    run_inner(PartitionSource::OnDisk(store), program, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gofs::subgraph::discover;
+    use crate::graph::csr::Graph;
+    use crate::graph::gen;
+    use crate::partition::{Partitioner, Partitioning, RangePartitioner};
+
+    /// Max-value program (paper Algorithm 2): the canonical example.
+    struct MaxValue;
+
+    impl SubgraphProgram for MaxValue {
+        type Msg = f32;
+        type State = f32;
+
+        fn init(&self, _sg: &Subgraph) -> f32 {
+            f32::NEG_INFINITY
+        }
+
+        fn compute(
+            &self,
+            state: &mut f32,
+            sg: &Subgraph,
+            ctx: &mut SubgraphContext<'_, f32>,
+            msgs: &[IncomingMessage<f32>],
+        ) {
+            let mut changed = false;
+            if ctx.superstep() == 1 {
+                // Local max over the sub-graph's vertex "values" (use the
+                // global vertex id as the value, like connected components).
+                *state = sg.vertices.iter().map(|&v| v as f32).fold(f32::NEG_INFINITY, f32::max);
+                changed = true;
+            }
+            for m in msgs {
+                if m.payload > *state {
+                    *state = m.payload;
+                    changed = true;
+                }
+            }
+            if changed {
+                ctx.send_to_all_neighbors(*state);
+            } else {
+                ctx.vote_to_halt();
+            }
+        }
+    }
+
+    fn run_max(
+        g: &Graph,
+        parts: Partitioning,
+        fabric: FabricKind,
+    ) -> (RunResult<f32>, usize) {
+        let dg = discover(g, &parts).unwrap();
+        let cfg = GopherConfig { fabric, cores_per_worker: 2, ..Default::default() };
+        let res = run(&dg, &MaxValue, &cfg).unwrap();
+        let steps = res.metrics.num_supersteps();
+        (res, steps)
+    }
+
+    #[test]
+    fn max_value_converges_chain() {
+        let g = gen::chain(20);
+        let parts = RangePartitioner.partition(&g, 4);
+        let (res, steps) = run_max(&g, parts, FabricKind::InProc);
+        for (_, &v) in &res.states {
+            assert_eq!(v, 19.0);
+        }
+        // 4 connected sub-graphs in a row: value 19 must flow 3 meta-hops
+        // + 1 final quiescent superstep.
+        assert!(steps >= 4 && steps <= 6, "steps={steps}");
+    }
+
+    #[test]
+    fn max_value_over_tcp_matches_in_proc() {
+        let g = gen::road(12, 0.92, 0.02, 11);
+        let parts = RangePartitioner.partition(&g, 3);
+        let (a, _) = run_max(&g, parts.clone(), FabricKind::InProc);
+        let (b, _) = run_max(&g, parts, FabricKind::Tcp);
+        let va: Vec<f32> = a.states.values().cloned().collect();
+        let vb: Vec<f32> = b.states.values().cloned().collect();
+        assert_eq!(va, vb);
+    }
+
+    #[test]
+    fn single_partition_no_messages() {
+        let g = gen::chain(10);
+        let parts = Partitioning::new(1, vec![0; 10]);
+        let (res, steps) = run_max(&g, parts, FabricKind::InProc);
+        assert_eq!(steps, 2); // compute, then quiescent vote
+        assert_eq!(*res.states.values().next().unwrap(), 9.0);
+        // Messages only to neighbours; one sub-graph has none.
+        assert_eq!(res.metrics.total_messages(), 0);
+    }
+
+    #[test]
+    fn disconnected_subgraphs_halt_independently() {
+        // Two separate chains on two partitions each.
+        let mut edges = Vec::new();
+        for i in 0..9u32 {
+            edges.push((i, i + 1));
+        }
+        for i in 10..19u32 {
+            edges.push((i, i + 1));
+        }
+        let g = Graph::from_edges(20, &edges, None, false).unwrap();
+        let assign = (0..20u32).map(|v| if v < 10 { v / 5 } else { 2 + (v - 10) / 5 }).collect();
+        let parts = Partitioning::new(4, assign);
+        let (res, _) = run_max(&g, parts, FabricKind::InProc);
+        for (id, &v) in &res.states {
+            let expect = if id.partition < 2 { 9.0 } else { 19.0 };
+            assert_eq!(v, expect, "sub-graph {id}");
+        }
+    }
+
+    #[test]
+    fn metrics_shape_consistent() {
+        let g = gen::grid(8, 8);
+        let parts = RangePartitioner.partition(&g, 2);
+        let (res, steps) = run_max(&g, parts, FabricKind::InProc);
+        assert_eq!(res.metrics.supersteps.len(), steps);
+        for sm in &res.metrics.supersteps {
+            assert_eq!(sm.partition_compute_seconds.len(), 2);
+            assert_eq!(sm.unit_times.len(), 2);
+        }
+        assert!(res.metrics.total_bytes() > 0);
+        assert!(res.metrics.makespan_seconds() > 0.0);
+    }
+
+    /// Broadcast program: superstep 1, sub-graph P0S0 broadcasts; all
+    /// sub-graphs record receipt at superstep 2.
+    struct Broadcaster;
+    impl SubgraphProgram for Broadcaster {
+        type Msg = u32;
+        type State = Vec<u32>;
+        fn init(&self, _sg: &Subgraph) -> Vec<u32> {
+            Vec::new()
+        }
+        fn compute(
+            &self,
+            state: &mut Vec<u32>,
+            sg: &Subgraph,
+            ctx: &mut SubgraphContext<'_, u32>,
+            msgs: &[IncomingMessage<u32>],
+        ) {
+            if ctx.superstep() == 1 && sg.id.partition == 0 && sg.id.index == 0 {
+                ctx.send_to_all_subgraphs(77);
+            }
+            for m in msgs {
+                state.push(m.payload);
+            }
+            ctx.vote_to_halt();
+        }
+    }
+
+    #[test]
+    fn broadcast_reaches_every_subgraph() {
+        let g = gen::road(10, 0.9, 0.02, 13);
+        let parts = RangePartitioner.partition(&g, 3);
+        let dg = discover(&g, &parts).unwrap();
+        let res = run(&dg, &Broadcaster, &GopherConfig::default()).unwrap();
+        assert!(res.states.len() >= 3);
+        for (id, st) in &res.states {
+            assert_eq!(st, &vec![77], "sub-graph {id} missed the broadcast");
+        }
+    }
+
+    /// Vertex-targeted message program: P0S0 sends to a specific vertex.
+    struct VertexPing {
+        target_sg: SubgraphId,
+        target_vertex: u32,
+    }
+    impl SubgraphProgram for VertexPing {
+        type Msg = u32;
+        type State = Vec<(Option<u32>, u32)>;
+        fn init(&self, _sg: &Subgraph) -> Self::State {
+            Vec::new()
+        }
+        fn compute(
+            &self,
+            state: &mut Self::State,
+            sg: &Subgraph,
+            ctx: &mut SubgraphContext<'_, u32>,
+            msgs: &[IncomingMessage<u32>],
+        ) {
+            if ctx.superstep() == 1 && sg.id.partition == 0 && sg.id.index == 0 {
+                ctx.send_to_subgraph_vertex(self.target_sg, self.target_vertex, 5);
+            }
+            for m in msgs {
+                state.push((m.vertex, m.payload));
+            }
+            ctx.vote_to_halt();
+        }
+    }
+
+    #[test]
+    fn vertex_targeted_delivery() {
+        let g = gen::chain(8);
+        let parts = Partitioning::new(2, vec![0, 0, 0, 0, 1, 1, 1, 1]);
+        let dg = discover(&g, &parts).unwrap();
+        let target = dg.partitions[1][0].id;
+        let prog = VertexPing { target_sg: target, target_vertex: 6 };
+        let res = run(&dg, &prog, &GopherConfig::default()).unwrap();
+        assert_eq!(res.states[&target], vec![(Some(6), 5)]);
+    }
+
+    #[test]
+    fn max_supersteps_enforced() {
+        /// Never halts, always messages.
+        struct Chatty;
+        impl SubgraphProgram for Chatty {
+            type Msg = ();
+            type State = ();
+            fn init(&self, _sg: &Subgraph) {}
+            fn compute(
+                &self,
+                _state: &mut (),
+                _sg: &Subgraph,
+                ctx: &mut SubgraphContext<'_, ()>,
+                _msgs: &[IncomingMessage<()>],
+            ) {
+                ctx.send_to_all_neighbors(());
+            }
+        }
+        let g = gen::chain(6);
+        let parts = Partitioning::new(2, vec![0, 0, 0, 1, 1, 1]);
+        let dg = discover(&g, &parts).unwrap();
+        let cfg = GopherConfig { max_supersteps: 5, ..Default::default() };
+        assert!(run(&dg, &Chatty, &cfg).is_err());
+    }
+}

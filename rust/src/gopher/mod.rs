@@ -1,0 +1,18 @@
+//! Gopher — the sub-graph centric BSP execution engine (paper §4.2).
+//!
+//! One *worker* per partition/host, one *manager*. Each superstep every
+//! worker invokes the user's [`api::SubgraphProgram::compute`] on its
+//! active sub-graphs using a core-sized thread pool, batches outgoing
+//! messages per destination host, flushes them over the data fabric
+//! ([`transport`]), and then runs the sync/resume/terminate control
+//! protocol with the manager. Messages are always *encoded* on the
+//! fabric (the in-process fabric too) so byte accounting is honest and
+//! the TCP fabric is exercised by the same code path.
+
+pub mod api;
+pub mod transport;
+pub mod engine;
+
+pub use api::{IncomingMessage, MsgCodec, SubgraphContext, SubgraphProgram};
+pub use engine::{run, run_on_store, GopherConfig, RunResult};
+pub use transport::FabricKind;

@@ -1,0 +1,291 @@
+//! Data fabrics: how worker-to-worker message batches travel.
+//!
+//! The engine talks to a [`Fabric`]: `send(to, bytes)` delivers an opaque
+//! batch to peer `to`; `recv()` blocks for the next batch addressed to
+//! this worker. Two implementations:
+//!
+//! * [`InProcFabric`] — `std::sync::mpsc` channels (the default; models
+//!   the Floe dataflow channels of the paper at zero syscall cost).
+//! * [`TcpFabric`] — real loopback TCP sockets with length-prefixed
+//!   frames, one acceptor + k-1 outbound connections per worker. This is
+//!   the fabric shape the paper's deployment used (workers on separate
+//!   hosts exchanging batches over Ethernet).
+//!
+//! Batches are already-encoded byte vectors; the engine handles batching
+//! policy, EOS markers and accounting.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+/// Which fabric to run a job on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum FabricKind {
+    #[default]
+    InProc,
+    Tcp,
+}
+
+/// A worker's handle onto the data fabric.
+pub trait Fabric: Send {
+    /// Deliver an opaque batch to worker `to`.
+    fn send(&self, to: u32, bytes: Vec<u8>) -> Result<()>;
+    /// Block until the next batch arrives.
+    fn recv(&self) -> Result<Vec<u8>>;
+    /// This worker's id.
+    fn id(&self) -> u32;
+    /// Number of workers on the fabric.
+    fn num_workers(&self) -> usize;
+}
+
+// ------------------------------------------------------------- in-process
+
+/// Build a k-worker in-process fabric.
+pub fn in_proc(k: usize) -> Vec<InProcFabric> {
+    let mut senders = Vec::with_capacity(k);
+    let mut receivers = Vec::with_capacity(k);
+    for _ in 0..k {
+        let (tx, rx) = channel::<Vec<u8>>();
+        senders.push(tx);
+        receivers.push(rx);
+    }
+    receivers
+        .into_iter()
+        .enumerate()
+        .map(|(i, rx)| InProcFabric {
+            id: i as u32,
+            peers: senders.clone(),
+            inbox: rx,
+        })
+        .collect()
+}
+
+pub struct InProcFabric {
+    id: u32,
+    peers: Vec<Sender<Vec<u8>>>,
+    inbox: Receiver<Vec<u8>>,
+}
+
+impl Fabric for InProcFabric {
+    fn send(&self, to: u32, bytes: Vec<u8>) -> Result<()> {
+        self.peers[to as usize]
+            .send(bytes)
+            .map_err(|_| anyhow::anyhow!("peer {to} hung up"))
+    }
+
+    fn recv(&self) -> Result<Vec<u8>> {
+        self.inbox.recv().context("fabric channel closed")
+    }
+
+    fn id(&self) -> u32 {
+        self.id
+    }
+
+    fn num_workers(&self) -> usize {
+        self.peers.len()
+    }
+}
+
+// -------------------------------------------------------------------- tcp
+
+/// Build a k-worker loopback TCP fabric. Each worker gets a listener on
+/// an OS-assigned port; a full mesh of connections is established before
+/// returning. Frames are `u32-le length || payload`.
+pub fn tcp(k: usize) -> Result<Vec<TcpFabric>> {
+    // Bind all listeners first so every address is known.
+    let listeners: Vec<TcpListener> = (0..k)
+        .map(|_| TcpListener::bind("127.0.0.1:0").context("bind"))
+        .collect::<Result<_>>()?;
+    let addrs: Vec<std::net::SocketAddr> =
+        listeners.iter().map(|l| l.local_addr().unwrap()).collect();
+
+    // Connect the full mesh: worker i dials every j (including none to
+    // itself). Accepted sockets are matched to dialers by a hello byte
+    // carrying the dialer id.
+    let mut outs: Vec<Vec<Option<TcpStream>>> = (0..k).map(|_| (0..k).map(|_| None).collect()).collect();
+    let mut ins: Vec<Vec<Option<TcpStream>>> = (0..k).map(|_| (0..k).map(|_| None).collect()).collect();
+
+    std::thread::scope(|scope| -> Result<()> {
+        // Acceptor threads.
+        let mut handles = Vec::new();
+        for (i, listener) in listeners.iter().enumerate() {
+            handles.push(scope.spawn(move || -> Result<Vec<(u32, TcpStream)>> {
+                let mut got = Vec::new();
+                for _ in 0..k - 1 {
+                    let (mut s, _) = listener.accept().context("accept")?;
+                    let mut hello = [0u8; 4];
+                    s.read_exact(&mut hello).context("hello")?;
+                    got.push((u32::from_le_bytes(hello), s));
+                }
+                let _ = i;
+                Ok(got)
+            }));
+        }
+        // Dial from the scope's main thread.
+        for i in 0..k {
+            for (j, addr) in addrs.iter().enumerate() {
+                if i == j {
+                    continue;
+                }
+                let mut s = TcpStream::connect(addr).context("connect")?;
+                s.set_nodelay(true).ok();
+                s.write_all(&(i as u32).to_le_bytes()).context("send hello")?;
+                outs[i][j] = Some(s);
+            }
+        }
+        for (j, h) in handles.into_iter().enumerate() {
+            for (from, s) in h.join().expect("acceptor panicked")? {
+                ins[j][from as usize] = Some(s);
+            }
+        }
+        Ok(())
+    })?;
+
+    // Each worker: spawn one reader thread per inbound socket, funneling
+    // into a single mpsc inbox.
+    let mut fabrics = Vec::with_capacity(k);
+    for (i, in_row) in ins.into_iter().enumerate() {
+        let (tx, rx) = channel::<Result<Vec<u8>>>();
+        for stream in in_row.into_iter().flatten() {
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                let mut stream = stream;
+                loop {
+                    match read_frame(&mut stream) {
+                        Ok(Some(frame)) => {
+                            if tx.send(Ok(frame)).is_err() {
+                                return;
+                            }
+                        }
+                        Ok(None) => return, // clean EOF
+                        Err(e) => {
+                            let _ = tx.send(Err(e));
+                            return;
+                        }
+                    }
+                }
+            });
+        }
+        fabrics.push(TcpFabric {
+            id: i as u32,
+            outs: outs[i]
+                .iter_mut()
+                .map(|o| o.take().map(Mutex::new))
+                .collect(),
+            inbox: rx,
+            k,
+        });
+    }
+    Ok(fabrics)
+}
+
+fn read_frame(s: &mut TcpStream) -> Result<Option<Vec<u8>>> {
+    let mut len = [0u8; 4];
+    match s.read_exact(&mut len) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e.into()),
+    }
+    let n = u32::from_le_bytes(len) as usize;
+    let mut buf = vec![0u8; n];
+    s.read_exact(&mut buf).context("frame body")?;
+    Ok(Some(buf))
+}
+
+pub struct TcpFabric {
+    id: u32,
+    outs: Vec<Option<Mutex<TcpStream>>>,
+    inbox: Receiver<Result<Vec<u8>>>,
+    k: usize,
+}
+
+impl Fabric for TcpFabric {
+    fn send(&self, to: u32, bytes: Vec<u8>) -> Result<()> {
+        let Some(sock) = &self.outs[to as usize] else {
+            bail!("no socket to worker {to} (self-send goes via local buffer)");
+        };
+        let mut s = sock.lock().unwrap();
+        s.write_all(&(bytes.len() as u32).to_le_bytes())?;
+        s.write_all(&bytes)?;
+        Ok(())
+    }
+
+    fn recv(&self) -> Result<Vec<u8>> {
+        self.inbox.recv().context("tcp inbox closed")?
+    }
+
+    fn id(&self) -> u32 {
+        self.id
+    }
+
+    fn num_workers(&self) -> usize {
+        self.k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exercise(fabrics: Vec<impl Fabric + 'static>) {
+        let k = fabrics.len();
+        std::thread::scope(|scope| {
+            for f in fabrics {
+                scope.spawn(move || {
+                    let me = f.id();
+                    // Send one tagged batch to every peer.
+                    for to in 0..k as u32 {
+                        if to != me {
+                            f.send(to, vec![me as u8, to as u8, 0xAB]).unwrap();
+                        }
+                    }
+                    // Receive k-1 batches addressed to me.
+                    for _ in 0..k - 1 {
+                        let b = f.recv().unwrap();
+                        assert_eq!(b.len(), 3);
+                        assert_eq!(b[1], me as u8, "batch misrouted");
+                        assert_eq!(b[2], 0xAB);
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn in_proc_mesh_routes_correctly() {
+        exercise(in_proc(4));
+    }
+
+    #[test]
+    fn tcp_mesh_routes_correctly() {
+        exercise(tcp(3).unwrap());
+    }
+
+    #[test]
+    fn tcp_large_frame() {
+        let fabrics = tcp(2).unwrap();
+        let payload = vec![0x5Au8; 1 << 20];
+        let expect = payload.clone();
+        let mut it = fabrics.into_iter();
+        let a = it.next().unwrap();
+        let b = it.next().unwrap();
+        std::thread::scope(|scope| {
+            scope.spawn(move || a.send(1, payload).unwrap());
+            let got = b.recv().unwrap();
+            assert_eq!(got, expect);
+        });
+    }
+
+    #[test]
+    fn in_proc_ids_and_size() {
+        let f = in_proc(5);
+        assert_eq!(f.len(), 5);
+        for (i, fab) in f.iter().enumerate() {
+            assert_eq!(fab.id(), i as u32);
+            assert_eq!(fab.num_workers(), 5);
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! Incremental graph builder (dedup, id remapping, weight attachment).
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use super::csr::{Graph, VertexId};
+
+/// Accumulates edges (with optional external string/u64 ids) and builds an
+/// immutable [`Graph`] with dense internal ids.
+pub struct GraphBuilder {
+    directed: bool,
+    dedup: bool,
+    edges: Vec<(VertexId, VertexId)>,
+    weights: Vec<f32>,
+    weighted: bool,
+    /// External id -> dense id (only used via `add_edge_ext`).
+    ext_ids: HashMap<u64, VertexId>,
+    /// Dense id -> external id, parallel to growth of `ext_ids`.
+    ext_rev: Vec<u64>,
+    num_vertices: usize,
+}
+
+impl GraphBuilder {
+    pub fn new(directed: bool) -> Self {
+        Self {
+            directed,
+            dedup: false,
+            edges: Vec::new(),
+            weights: Vec::new(),
+            weighted: false,
+            ext_ids: HashMap::new(),
+            ext_rev: Vec::new(),
+            num_vertices: 0,
+        }
+    }
+
+    /// Drop duplicate (src,dst) pairs and self-loops at build time.
+    pub fn dedup(mut self, yes: bool) -> Self {
+        self.dedup = yes;
+        self
+    }
+
+    /// Ensure ids `0..n` exist even if isolated.
+    pub fn reserve_vertices(&mut self, n: usize) {
+        self.num_vertices = self.num_vertices.max(n);
+    }
+
+    pub fn add_edge(&mut self, u: VertexId, v: VertexId) {
+        assert!(!self.weighted, "mixing weighted and unweighted edges");
+        self.num_vertices = self.num_vertices.max(u.max(v) as usize + 1);
+        self.edges.push((u, v));
+    }
+
+    pub fn add_weighted_edge(&mut self, u: VertexId, v: VertexId, w: f32) {
+        assert!(
+            self.weights.len() == self.edges.len(),
+            "mixing weighted and unweighted edges"
+        );
+        self.weighted = true;
+        self.num_vertices = self.num_vertices.max(u.max(v) as usize + 1);
+        self.edges.push((u, v));
+        self.weights.push(w);
+    }
+
+    /// Add an edge between external (sparse) ids, remapping to dense ids.
+    pub fn add_edge_ext(&mut self, u_ext: u64, v_ext: u64) {
+        let u = self.intern(u_ext);
+        let v = self.intern(v_ext);
+        self.add_edge(u, v);
+    }
+
+    fn intern(&mut self, ext: u64) -> VertexId {
+        if let Some(&id) = self.ext_ids.get(&ext) {
+            return id;
+        }
+        let id = self.ext_rev.len() as VertexId;
+        self.ext_ids.insert(ext, id);
+        self.ext_rev.push(ext);
+        self.num_vertices = self.num_vertices.max(id as usize + 1);
+        id
+    }
+
+    /// External-id mapping table, if `add_edge_ext` was used.
+    pub fn external_ids(&self) -> &[u64] {
+        &self.ext_rev
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn build(mut self) -> Result<Graph> {
+        if self.dedup {
+            let weighted = self.weighted;
+            let mut seen = std::collections::HashSet::new();
+            let mut edges = Vec::with_capacity(self.edges.len());
+            let mut weights = Vec::new();
+            for (i, &(u, v)) in self.edges.iter().enumerate() {
+                if u == v {
+                    continue;
+                }
+                // For undirected graphs treat (u,v) and (v,u) as the same.
+                let key = if self.directed || u <= v { (u, v) } else { (v, u) };
+                if seen.insert(key) {
+                    edges.push((u, v));
+                    if weighted {
+                        weights.push(self.weights[i]);
+                    }
+                }
+            }
+            self.edges = edges;
+            self.weights = weights;
+        }
+        let w = if self.weighted { Some(self.weights) } else { None };
+        Graph::from_edges(self.num_vertices, &self.edges, w, self.directed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_simple() {
+        let mut b = GraphBuilder::new(true);
+        b.add_edge(0, 1);
+        b.add_edge(1, 2);
+        let g = b.build().unwrap();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 2);
+    }
+
+    #[test]
+    fn reserve_isolated_vertices() {
+        let mut b = GraphBuilder::new(false);
+        b.add_edge(0, 1);
+        b.reserve_vertices(10);
+        let g = b.build().unwrap();
+        assert_eq!(g.num_vertices(), 10);
+    }
+
+    #[test]
+    fn dedup_drops_duplicates_and_loops() {
+        let mut b = GraphBuilder::new(false).dedup(true);
+        b.add_edge(0, 1);
+        b.add_edge(1, 0); // same undirected edge
+        b.add_edge(0, 1); // duplicate
+        b.add_edge(2, 2); // self-loop
+        let g = b.build().unwrap();
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.num_vertices(), 3);
+    }
+
+    #[test]
+    fn dedup_directed_keeps_reciprocal() {
+        let mut b = GraphBuilder::new(true).dedup(true);
+        b.add_edge(0, 1);
+        b.add_edge(1, 0);
+        let g = b.build().unwrap();
+        assert_eq!(g.num_edges(), 2);
+    }
+
+    #[test]
+    fn external_ids_remap_densely() {
+        let mut b = GraphBuilder::new(true);
+        b.add_edge_ext(1_000_000, 42);
+        b.add_edge_ext(42, 7);
+        let g = b.build().unwrap();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(b_ext(&[1_000_000, 42, 7]), b_ext(&[1_000_000, 42, 7]));
+        fn b_ext(x: &[u64]) -> Vec<u64> {
+            x.to_vec()
+        }
+    }
+
+    #[test]
+    fn weighted_build() {
+        let mut b = GraphBuilder::new(true);
+        b.add_weighted_edge(0, 1, 2.5);
+        b.add_weighted_edge(1, 2, 1.5);
+        let g = b.build().unwrap();
+        assert!(g.has_weights());
+        let (_, ei) = g.out_edges(0).next().unwrap();
+        assert_eq!(g.weight(ei), 2.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "mixing")]
+    fn mixing_weighted_unweighted_panics() {
+        let mut b = GraphBuilder::new(true);
+        b.add_edge(0, 1);
+        b.add_weighted_edge(1, 2, 1.0);
+    }
+}

@@ -1,0 +1,293 @@
+//! Compact CSR graph.
+//!
+//! * Dense `u32` vertex ids `0..n`.
+//! * Out-adjacency and in-adjacency CSR (both always present: directed
+//!   algorithms need out-edges, GoFS sub-graph discovery and undirected
+//!   traversals need the union).
+//! * Optional per-edge f32 weights, aligned with the out-CSR; the in-CSR
+//!   carries an index back into the out-edge array so weights are never
+//!   duplicated.
+//! * Graphs are immutable after construction (the paper's GoFS is
+//!   write-once-read-many), which keeps every downstream layer copy-free.
+
+use anyhow::{ensure, Result};
+
+pub type VertexId = u32;
+
+/// Immutable CSR graph.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    directed: bool,
+    /// Out-CSR: `out_offsets[v]..out_offsets[v+1]` indexes `out_targets`.
+    out_offsets: Vec<u64>,
+    out_targets: Vec<VertexId>,
+    /// In-CSR: `in_offsets[v]..in_offsets[v+1]` indexes `in_sources`.
+    in_offsets: Vec<u64>,
+    in_sources: Vec<VertexId>,
+    /// For each in-edge, its position in the out-edge array (weight lookup).
+    in_edge_idx: Vec<u64>,
+    /// Optional weights, parallel to `out_targets`.
+    weights: Option<Vec<f32>>,
+}
+
+impl Graph {
+    /// Build from an edge list. `edges` are `(src, dst)` pairs with ids
+    /// `< num_vertices`; `weights`, when given, is parallel to `edges`.
+    pub fn from_edges(
+        num_vertices: usize,
+        edges: &[(VertexId, VertexId)],
+        weights: Option<Vec<f32>>,
+        directed: bool,
+    ) -> Result<Graph> {
+        if let Some(w) = &weights {
+            ensure!(w.len() == edges.len(), "weights/edges length mismatch");
+        }
+        let n = num_vertices;
+        for &(u, v) in edges {
+            ensure!(
+                (u as usize) < n && (v as usize) < n,
+                "edge ({u},{v}) out of range for {n} vertices"
+            );
+        }
+
+        // Counting sort into out-CSR (stable: preserves input edge order
+        // within a source, which keeps weights aligned).
+        let mut out_deg = vec![0u64; n + 1];
+        for &(u, _) in edges {
+            out_deg[u as usize + 1] += 1;
+        }
+        let mut out_offsets = out_deg;
+        for i in 0..n {
+            out_offsets[i + 1] += out_offsets[i];
+        }
+        let mut out_targets = vec![0 as VertexId; edges.len()];
+        let mut out_w = weights.as_ref().map(|_| vec![0f32; edges.len()]);
+        let mut cursor = out_offsets.clone();
+        for (i, &(u, v)) in edges.iter().enumerate() {
+            let pos = cursor[u as usize] as usize;
+            out_targets[pos] = v;
+            if let (Some(ow), Some(w)) = (&mut out_w, &weights) {
+                ow[pos] = w[i];
+            }
+            cursor[u as usize] += 1;
+        }
+
+        // In-CSR, with back-pointers into the out-edge array.
+        let mut in_deg = vec![0u64; n + 1];
+        for &t in &out_targets {
+            in_deg[t as usize + 1] += 1;
+        }
+        let mut in_offsets = in_deg;
+        for i in 0..n {
+            in_offsets[i + 1] += in_offsets[i];
+        }
+        let mut in_sources = vec![0 as VertexId; edges.len()];
+        let mut in_edge_idx = vec![0u64; edges.len()];
+        let mut icursor = in_offsets.clone();
+        for u in 0..n {
+            let (s, e) = (out_offsets[u] as usize, out_offsets[u + 1] as usize);
+            for ei in s..e {
+                let v = out_targets[ei] as usize;
+                let pos = icursor[v] as usize;
+                in_sources[pos] = u as VertexId;
+                in_edge_idx[pos] = ei as u64;
+                icursor[v] += 1;
+            }
+        }
+
+        Ok(Graph {
+            directed,
+            out_offsets,
+            out_targets,
+            in_offsets,
+            in_sources,
+            in_edge_idx,
+            weights: out_w,
+        })
+    }
+
+    pub fn directed(&self) -> bool {
+        self.directed
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.out_offsets.len() - 1
+    }
+
+    /// Number of *stored* edges (for undirected graphs each edge is
+    /// stored once; use [`Graph::undirected_neighbors`] to see both ends).
+    pub fn num_edges(&self) -> usize {
+        self.out_targets.len()
+    }
+
+    pub fn has_weights(&self) -> bool {
+        self.weights.is_some()
+    }
+
+    pub fn out_degree(&self, v: VertexId) -> usize {
+        (self.out_offsets[v as usize + 1] - self.out_offsets[v as usize]) as usize
+    }
+
+    pub fn in_degree(&self, v: VertexId) -> usize {
+        (self.in_offsets[v as usize + 1] - self.in_offsets[v as usize]) as usize
+    }
+
+    /// Out-neighbours of `v`.
+    pub fn out_neighbors(&self, v: VertexId) -> &[VertexId] {
+        let (s, e) = (
+            self.out_offsets[v as usize] as usize,
+            self.out_offsets[v as usize + 1] as usize,
+        );
+        &self.out_targets[s..e]
+    }
+
+    /// In-neighbours of `v`.
+    pub fn in_neighbors(&self, v: VertexId) -> &[VertexId] {
+        let (s, e) = (
+            self.in_offsets[v as usize] as usize,
+            self.in_offsets[v as usize + 1] as usize,
+        );
+        &self.in_sources[s..e]
+    }
+
+    /// Out-edges of `v` as `(target, edge_index)` pairs; `edge_index`
+    /// addresses [`Graph::weight`].
+    pub fn out_edges(&self, v: VertexId) -> impl Iterator<Item = (VertexId, u64)> + '_ {
+        let s = self.out_offsets[v as usize];
+        self.out_neighbors(v)
+            .iter()
+            .enumerate()
+            .map(move |(i, &t)| (t, s + i as u64))
+    }
+
+    /// In-edges of `v` as `(source, edge_index)` pairs.
+    pub fn in_edges(&self, v: VertexId) -> impl Iterator<Item = (VertexId, u64)> + '_ {
+        let (s, e) = (
+            self.in_offsets[v as usize] as usize,
+            self.in_offsets[v as usize + 1] as usize,
+        );
+        (s..e).map(move |i| (self.in_sources[i], self.in_edge_idx[i]))
+    }
+
+    /// Weight of edge `edge_index` (1.0 when the graph is unweighted).
+    pub fn weight(&self, edge_index: u64) -> f32 {
+        match &self.weights {
+            Some(w) => w[edge_index as usize],
+            None => 1.0,
+        }
+    }
+
+    /// Neighbours under the undirected view (out ∪ in). Yields duplicates
+    /// for reciprocal edge pairs; traversals treat them idempotently.
+    pub fn undirected_neighbors(&self, v: VertexId) -> impl Iterator<Item = VertexId> + '_ {
+        self.out_neighbors(v)
+            .iter()
+            .copied()
+            .chain(self.in_neighbors(v).iter().copied())
+    }
+
+    /// Undirected edges (neighbour, edge_index) across both directions.
+    pub fn undirected_edges(&self, v: VertexId) -> impl Iterator<Item = (VertexId, u64)> + '_ {
+        self.out_edges(v).chain(self.in_edges(v))
+    }
+
+    /// All stored edges as `(src, dst, edge_index)`.
+    pub fn edges(&self) -> impl Iterator<Item = (VertexId, VertexId, u64)> + '_ {
+        (0..self.num_vertices() as VertexId)
+            .flat_map(move |u| self.out_edges(u).map(move |(v, ei)| (u, v, ei)))
+    }
+
+    /// Total bytes of the topology (used by the sim disk model).
+    pub fn topology_bytes(&self) -> u64 {
+        (self.out_offsets.len() * 8
+            + self.out_targets.len() * 4
+            + self.in_offsets.len() * 8
+            + self.in_sources.len() * 4
+            + self.in_edge_idx.len() * 8
+            + self.weights.as_ref().map_or(0, |w| w.len() * 4)) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Graph {
+        // 0 -> 1 -> 3, 0 -> 2 -> 3
+        Graph::from_edges(4, &[(0, 1), (0, 2), (1, 3), (2, 3)], None, true).unwrap()
+    }
+
+    #[test]
+    fn degrees_and_neighbors() {
+        let g = diamond();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.out_degree(0), 2);
+        assert_eq!(g.in_degree(0), 0);
+        assert_eq!(g.out_neighbors(0), &[1, 2]);
+        assert_eq!(g.in_neighbors(3), &[1, 2]);
+        assert_eq!(g.out_degree(3), 0);
+    }
+
+    #[test]
+    fn weights_align_with_edges() {
+        let edges = [(2u32, 0u32), (0, 1), (1, 2)];
+        let g = Graph::from_edges(3, &edges, Some(vec![5.0, 7.0, 9.0]), true).unwrap();
+        // Find weight of edge 0->1 via out_edges.
+        let (t, ei) = g.out_edges(0).next().unwrap();
+        assert_eq!(t, 1);
+        assert_eq!(g.weight(ei), 7.0);
+        // In-edge back-pointer gives the same weight.
+        let (s, ei_in) = g.in_edges(1).next().unwrap();
+        assert_eq!(s, 0);
+        assert_eq!(g.weight(ei_in), 7.0);
+    }
+
+    #[test]
+    fn unweighted_defaults_to_one() {
+        let g = diamond();
+        for (_, _, ei) in g.edges() {
+            assert_eq!(g.weight(ei), 1.0);
+        }
+    }
+
+    #[test]
+    fn out_of_range_edge_rejected() {
+        assert!(Graph::from_edges(2, &[(0, 5)], None, true).is_err());
+    }
+
+    #[test]
+    fn weight_length_mismatch_rejected() {
+        assert!(Graph::from_edges(2, &[(0, 1)], Some(vec![]), true).is_err());
+    }
+
+    #[test]
+    fn undirected_view_sees_both_ends() {
+        let g = diamond();
+        let n0: Vec<_> = g.undirected_neighbors(3).collect();
+        assert_eq!(n0, vec![1, 2]); // in-neighbours only; no out
+        let n1: Vec<_> = g.undirected_neighbors(1).collect();
+        assert_eq!(n1, vec![3, 0]);
+    }
+
+    #[test]
+    fn edges_iterator_complete() {
+        let g = diamond();
+        let es: Vec<_> = g.edges().map(|(u, v, _)| (u, v)).collect();
+        assert_eq!(es, vec![(0, 1), (0, 2), (1, 3), (2, 3)]);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Graph::from_edges(0, &[], None, false).unwrap();
+        assert_eq!(g.num_vertices(), 0);
+        assert_eq!(g.num_edges(), 0);
+    }
+
+    #[test]
+    fn self_loop_and_multi_edge_allowed() {
+        let g = Graph::from_edges(2, &[(0, 0), (0, 1), (0, 1)], None, true).unwrap();
+        assert_eq!(g.out_degree(0), 3);
+        assert_eq!(g.in_degree(1), 2);
+    }
+}

@@ -1,0 +1,356 @@
+//! Synthetic graph generators: laptop-scale analogs of the paper's
+//! evaluation datasets (Table 1) plus classic test generators.
+//!
+//! The paper's three graphs are discriminated by diameter, degree skew
+//! and component count — the variables these generators target directly
+//! (see DESIGN.md §3):
+//!
+//! * [`road`] — RN analog: sparse 2-D lattice with dropped edges and rare
+//!   shortcuts. Uniform small degrees, *huge* diameter, many WCCs.
+//! * [`trace`] — TR analog: hub-and-spoke internet forest: a backbone
+//!   core, ISP routers under it, traceroute chains under those, plus one
+//!   mega-hub ("timeout" vertex) wired to a large share of all vertices.
+//!   Power-law-ish degrees, tiny diameter, single WCC.
+//! * [`social`] — LJ analog: preferential attachment (Barabási-Albert
+//!   style) giant component plus a dust of tiny components. Power-law
+//!   degrees, small diameter, dense.
+
+use crate::util::rng::Rng;
+
+use super::builder::GraphBuilder;
+use super::csr::{Graph, VertexId};
+
+/// RN analog: `side x side` 2-D lattice, undirected.
+///
+/// Each lattice edge survives with probability `keep` (default caller
+/// value ~0.97): dropped edges split the lattice into many components and
+/// stretch shortest paths, reproducing the California road network's
+/// huge-diameter / many-WCC shape. A sprinkle of short "highway" chords
+/// (probability `shortcut` per vertex, to a vertex a few rows away) keeps
+/// local structure road-like without collapsing the diameter.
+pub fn road(side: usize, keep: f64, shortcut: f64, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let n = side * side;
+    // "Island" vertices — disconnected spurs/roundabouts of real road
+    // data — give the RN shape its many small WCCs (the paper's RN has
+    // 2,638). Probability scales with the edge-drop rate.
+    let iso_p = (1.0 - keep) * 0.5;
+    let isolated: Vec<bool> = (0..n).map(|_| rng.chance(iso_p)).collect();
+    let mut b = GraphBuilder::new(false).dedup(true);
+    b.reserve_vertices(n);
+    let id = |r: usize, c: usize| (r * side + c) as VertexId;
+    let ok = |v: VertexId| !isolated[v as usize];
+    for r in 0..side {
+        for c in 0..side {
+            let v = id(r, c);
+            if c + 1 < side && rng.chance(keep) && ok(v) && ok(id(r, c + 1)) {
+                b.add_edge(v, id(r, c + 1));
+            }
+            if r + 1 < side && rng.chance(keep) && ok(v) && ok(id(r + 1, c)) {
+                b.add_edge(v, id(r + 1, c));
+            }
+            if rng.chance(shortcut) {
+                // Short-range chord: jump 2..5 rows/cols away ("highway").
+                let dr = rng.range_u64(2, 5) as usize;
+                let dc = rng.range_u64(0, 3) as usize;
+                let (nr, nc) = (r + dr, c + dc);
+                if nr < side && nc < side && ok(v) && ok(id(nr, nc)) {
+                    b.add_edge(v, id(nr, nc));
+                }
+            }
+        }
+    }
+    b.build().expect("road generator produced invalid graph")
+}
+
+/// TR analog: traceroute-forest with a mega-hub, directed.
+///
+/// Structure: `core` backbone routers form a random small-world ring;
+/// each remaining vertex attaches under a uniformly chosen existing
+/// vertex, building shallow trees (traceroute paths). Finally one
+/// designated vertex (id 0, the "trace timeout" marker of the paper's TR
+/// graph) receives edges from a `hub_frac` share of all vertices,
+/// giving it the O(millions)-degree shape that broke HDFS loading.
+pub fn trace(n: usize, core: usize, hub_frac: f64, seed: u64) -> Graph {
+    assert!(core >= 3 && core < n);
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::new(true).dedup(true);
+    b.reserve_vertices(n);
+    // Backbone ring + random chords (small-world core).
+    for i in 0..core {
+        b.add_edge(i as VertexId, ((i + 1) % core) as VertexId);
+        if rng.chance(0.3) {
+            let j = rng.index(core);
+            if j != i {
+                b.add_edge(i as VertexId, j as VertexId);
+            }
+        }
+    }
+    // Attach the remaining vertices under earlier ones: biased toward the
+    // core so trees stay shallow (log depth), like hop-limited traceroutes.
+    for v in core..n {
+        let parent = if rng.chance(0.5) {
+            rng.index(core)
+        } else {
+            rng.index(v)
+        };
+        b.add_edge(parent as VertexId, v as VertexId);
+    }
+    // Mega-hub: vertex 0 observes a fraction of all vertices (timeouts).
+    for v in 1..n {
+        if rng.chance(hub_frac) {
+            b.add_edge(v as VertexId, 0);
+        }
+    }
+    b.build().expect("trace generator produced invalid graph")
+}
+
+/// LJ analog: preferential-attachment giant component + component dust,
+/// directed.
+///
+/// `m` out-edges per new vertex, targets chosen by degree-proportional
+/// sampling (edge-endpoint trick). `dust_frac` of the vertices are held
+/// out of the giant component and wired into random 2..6-vertex islands,
+/// matching LiveJournal's 1877 WCCs.
+pub fn social(n: usize, m: usize, dust_frac: f64, seed: u64) -> Graph {
+    assert!(m >= 1 && n > m + 1);
+    let mut rng = Rng::new(seed);
+    let n_dust = ((n as f64) * dust_frac) as usize;
+    let n_core = n - n_dust;
+    let mut b = GraphBuilder::new(true).dedup(true);
+    b.reserve_vertices(n);
+    // Endpoint list for degree-proportional sampling.
+    let mut endpoints: Vec<VertexId> = Vec::with_capacity(2 * m * n_core);
+    // Seed clique over the first m+1 vertices.
+    for i in 0..=m {
+        for j in 0..i {
+            b.add_edge(i as VertexId, j as VertexId);
+            endpoints.push(i as VertexId);
+            endpoints.push(j as VertexId);
+        }
+    }
+    for v in (m + 1)..n_core {
+        for _ in 0..m {
+            let t = *rng.choose(&endpoints);
+            if t != v as VertexId {
+                b.add_edge(v as VertexId, t);
+                endpoints.push(v as VertexId);
+                endpoints.push(t);
+            }
+        }
+    }
+    // Dust: tiny random islands among the held-out vertices.
+    let mut v = n_core;
+    while v < n {
+        let island = (2 + rng.index(5)).min(n - v);
+        for i in 1..island {
+            b.add_edge((v + i) as VertexId, (v + rng.index(i)) as VertexId);
+        }
+        v += island;
+    }
+    b.build().expect("social generator produced invalid graph")
+}
+
+/// Erdős–Rényi G(n, p), directed or undirected (expected p·n·(n-1) edges).
+pub fn erdos_renyi(n: usize, p: f64, directed: bool, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::new(directed).dedup(true);
+    b.reserve_vertices(n);
+    // Geometric skipping for sparse p.
+    if p > 0.0 {
+        let ln_q = (1.0 - p).ln();
+        let total = (n * n) as u64;
+        let mut i: u64 = 0;
+        loop {
+            let r = rng.f64().max(1e-300);
+            let skip = if p >= 1.0 { 1 } else { (r.ln() / ln_q).floor() as u64 + 1 };
+            i += skip;
+            if i > total {
+                break;
+            }
+            let u = ((i - 1) / n as u64) as VertexId;
+            let v = ((i - 1) % n as u64) as VertexId;
+            if u != v && (directed || u < v) {
+                b.add_edge(u, v);
+            }
+        }
+    }
+    b.build().expect("erdos_renyi generator produced invalid graph")
+}
+
+/// Deterministic `rows x cols` lattice (undirected, fully connected).
+pub fn grid(rows: usize, cols: usize) -> Graph {
+    let mut b = GraphBuilder::new(false);
+    b.reserve_vertices(rows * cols);
+    let id = |r: usize, c: usize| (r * cols + c) as VertexId;
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                b.add_edge(id(r, c), id(r, c + 1));
+            }
+            if r + 1 < rows {
+                b.add_edge(id(r, c), id(r + 1, c));
+            }
+        }
+    }
+    b.build().expect("grid generator produced invalid graph")
+}
+
+/// Path graph 0-1-…-(n-1) (worst case for vertex-centric supersteps).
+pub fn chain(n: usize) -> Graph {
+    let mut b = GraphBuilder::new(false);
+    b.reserve_vertices(n);
+    for i in 0..n.saturating_sub(1) {
+        b.add_edge(i as VertexId, i as VertexId + 1);
+    }
+    b.build().expect("chain generator produced invalid graph")
+}
+
+/// Star: vertex 0 at the centre of n-1 spokes.
+pub fn star(n: usize) -> Graph {
+    let mut b = GraphBuilder::new(false);
+    b.reserve_vertices(n);
+    for i in 1..n {
+        b.add_edge(0, i as VertexId);
+    }
+    b.build().expect("star generator produced invalid graph")
+}
+
+// ----------------------------------------------------------------------
+// Evaluation dataset analogs (Table 1 of the paper, laptop scale).
+// The discriminating shape is preserved: RN = huge diameter, sparse,
+// many WCCs; TR = mega-hub, tiny diameter, 1 WCC; LJ = dense power-law,
+// tiny diameter, giant WCC + dust. `scale` = 1.0 gives the default bench
+// size (~40k/60k/30k vertices); tests use smaller scales.
+
+/// California road network analog (paper: 1.97M vertices, diam 849,
+/// 2638 WCCs).
+pub fn rn_analog(scale: f64, seed: u64) -> Graph {
+    let side = ((200.0 * scale.sqrt()) as usize).max(8);
+    road(side, 0.97, 0.003, seed)
+}
+
+/// Internet-traceroute analog (paper TR: 19.4M vertices, diam 25, 1 WCC,
+/// one O(millions)-degree vertex).
+pub fn tr_analog(scale: f64, seed: u64) -> Graph {
+    let n = ((60_000.0 * scale) as usize).max(100);
+    trace(n, (n / 400).max(10), 0.25, seed)
+}
+
+/// LiveJournal analog (paper LJ: 4.8M vertices, 68M edges, diam 10,
+/// 1877 WCCs, power-law).
+pub fn lj_analog(scale: f64, seed: u64) -> Graph {
+    let n = ((30_000.0 * scale) as usize).max(100);
+    social(n, 12, 0.02, seed)
+}
+
+/// Attach uniform random f32 weights in `[lo, hi)` to a graph's edges
+/// (used to build weighted SSSP inputs from the analogs).
+pub fn with_random_weights(g: &Graph, lo: f32, hi: f32, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let edges: Vec<(VertexId, VertexId)> = g.edges().map(|(u, v, _)| (u, v)).collect();
+    let weights: Vec<f32> = (0..edges.len())
+        .map(|_| lo + rng.f32() * (hi - lo))
+        .collect();
+    Graph::from_edges(g.num_vertices(), &edges, Some(weights), g.directed())
+        .expect("reweighting preserved validity")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::props;
+
+    #[test]
+    fn road_shape() {
+        let g = road(40, 0.97, 0.01, 1);
+        assert_eq!(g.num_vertices(), 1600);
+        // Sparse: average degree around 2 (stored edges ~ 2 per vertex).
+        let avg = g.num_edges() as f64 / g.num_vertices() as f64;
+        assert!(avg > 1.5 && avg < 2.5, "avg={avg}");
+        // Long diameter relative to size.
+        let d = props::diameter_estimate(&g, 3, 7);
+        assert!(d > 40, "road diameter estimate too small: {d}");
+    }
+
+    #[test]
+    fn road_determinism() {
+        let a = road(20, 0.95, 0.01, 7);
+        let b = road(20, 0.95, 0.01, 7);
+        assert_eq!(a.num_edges(), b.num_edges());
+        let ea: Vec<_> = a.edges().map(|(u, v, _)| (u, v)).collect();
+        let eb: Vec<_> = b.edges().map(|(u, v, _)| (u, v)).collect();
+        assert_eq!(ea, eb);
+    }
+
+    #[test]
+    fn trace_shape() {
+        let g = trace(5000, 50, 0.3, 2);
+        assert_eq!(g.num_vertices(), 5000);
+        // Mega-hub has huge in-degree.
+        let hub_deg = g.in_degree(0) + g.out_degree(0);
+        assert!(hub_deg > 1000, "hub degree {hub_deg}");
+        // Single weak component.
+        assert_eq!(props::wcc_count(&g), 1);
+        // Small diameter.
+        let d = props::diameter_estimate(&g, 3, 11);
+        assert!(d < 30, "trace diameter {d}");
+    }
+
+    #[test]
+    fn social_shape() {
+        let g = social(4000, 8, 0.02, 3);
+        assert_eq!(g.num_vertices(), 4000);
+        // Dense relative to road: avg stored degree ~= m.
+        let avg = g.num_edges() as f64 / g.num_vertices() as f64;
+        assert!(avg > 5.0, "avg={avg}");
+        // Power-law-ish: max degree far above average.
+        let max_deg = (0..g.num_vertices() as u32)
+            .map(|v| g.in_degree(v) + g.out_degree(v))
+            .max()
+            .unwrap();
+        assert!(max_deg > 100, "max_deg={max_deg}");
+        // Dust creates many components but one giant.
+        let wcc = props::wcc_count(&g);
+        assert!(wcc > 10, "wcc={wcc}");
+        // Small-world diameter on the giant component.
+        let d = props::diameter_estimate(&g, 3, 13);
+        assert!(d < 12, "social diameter {d}");
+    }
+
+    #[test]
+    fn erdos_renyi_edge_count_near_expectation() {
+        let n = 500;
+        let p = 0.01;
+        let g = erdos_renyi(n, p, true, 4);
+        let expected = (n * (n - 1)) as f64 * p;
+        let got = g.num_edges() as f64;
+        assert!(
+            (got - expected).abs() < expected * 0.25,
+            "got {got}, expected ~{expected}"
+        );
+    }
+
+    #[test]
+    fn grid_chain_star_shapes() {
+        let g = grid(5, 7);
+        assert_eq!(g.num_vertices(), 35);
+        assert_eq!(g.num_edges(), 5 * 6 + 4 * 7);
+        let c = chain(10);
+        assert_eq!(c.num_edges(), 9);
+        assert_eq!(props::diameter_estimate(&c, 2, 1), 9);
+        let s = star(11);
+        assert_eq!(s.num_edges(), 10);
+        assert_eq!(s.out_degree(0), 10);
+    }
+
+    #[test]
+    fn random_weights_in_range() {
+        let g = with_random_weights(&chain(100), 1.0, 5.0, 9);
+        assert!(g.has_weights());
+        for (_, _, ei) in g.edges() {
+            let w = g.weight(ei);
+            assert!((1.0..5.0).contains(&w));
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! Edge-list IO: the SNAP-style text format the paper's datasets ship in.
+//!
+//! Format: one `src dst [weight]` per line, `#` comments, whitespace
+//! separated. External ids may be sparse; they are remapped densely.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::builder::GraphBuilder;
+use super::csr::Graph;
+
+/// Read a (possibly weighted) edge list.
+pub fn read_edge_list(path: &Path, directed: bool) -> Result<Graph> {
+    let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut builder = GraphBuilder::new(directed);
+    let mut weighted_builder: Option<GraphBuilder> = None;
+    let mut line_no = 0usize;
+
+    for line in BufReader::new(f).lines() {
+        let line = line?;
+        line_no += 1;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let u: u64 = parts
+            .next()
+            .context("missing src")?
+            .parse()
+            .with_context(|| format!("line {line_no}: bad src"))?;
+        let v: u64 = parts
+            .next()
+            .with_context(|| format!("line {line_no}: missing dst"))?
+            .parse()
+            .with_context(|| format!("line {line_no}: bad dst"))?;
+        match parts.next() {
+            Some(wtok) => {
+                let w: f32 = wtok
+                    .parse()
+                    .with_context(|| format!("line {line_no}: bad weight"))?;
+                let wb = weighted_builder.get_or_insert_with(|| GraphBuilder::new(directed));
+                // Weighted path keeps its own builder: the format must be
+                // uniformly weighted or uniformly unweighted.
+                let ui = intern_pair(wb, u, v);
+                wb.add_weighted_edge(ui.0, ui.1, w);
+            }
+            None => {
+                builder.add_edge_ext(u, v);
+            }
+        }
+    }
+
+    if let Some(wb) = weighted_builder {
+        anyhow::ensure!(
+            builder.num_edges() == 0,
+            "mixed weighted/unweighted lines in {}",
+            path.display()
+        );
+        return wb.build();
+    }
+    builder.build()
+}
+
+fn intern_pair(_b: &mut GraphBuilder, u: u64, v: u64) -> (u32, u32) {
+    // Weighted edge lists in this repo always use dense ids (they are
+    // produced by `write_edge_list`), so no remap table is needed.
+    (u as u32, v as u32)
+}
+
+/// Write a graph back out as an edge list (weights included when present).
+pub fn write_edge_list(g: &Graph, path: &Path) -> Result<()> {
+    let f = File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(
+        w,
+        "# goffish edge list: {} vertices, {} edges, directed={}",
+        g.num_vertices(),
+        g.num_edges(),
+        g.directed()
+    )?;
+    for (u, v, ei) in g.edges() {
+        if g.has_weights() {
+            writeln!(w, "{u} {v} {}", g.weight(ei))?;
+        } else {
+            writeln!(w, "{u} {v}")?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("goffish_io_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn round_trip_unweighted() {
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)], None, true).unwrap();
+        let p = tmp("rt_unweighted.txt");
+        write_edge_list(&g, &p).unwrap();
+        let g2 = read_edge_list(&p, true).unwrap();
+        assert_eq!(g2.num_vertices(), 4);
+        assert_eq!(g2.num_edges(), 3);
+    }
+
+    #[test]
+    fn round_trip_weighted() {
+        let g = Graph::from_edges(3, &[(0, 1), (1, 2)], Some(vec![1.5, 2.5]), true).unwrap();
+        let p = tmp("rt_weighted.txt");
+        write_edge_list(&g, &p).unwrap();
+        let g2 = read_edge_list(&p, true).unwrap();
+        assert!(g2.has_weights());
+        assert_eq!(g2.num_edges(), 2);
+        let (_, ei) = g2.out_edges(0).next().unwrap();
+        assert_eq!(g2.weight(ei), 1.5);
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let p = tmp("comments.txt");
+        std::fs::write(&p, "# header\n\n0 1\n# mid\n1 2\n").unwrap();
+        let g = read_edge_list(&p, false).unwrap();
+        assert_eq!(g.num_edges(), 2);
+    }
+
+    #[test]
+    fn sparse_external_ids_remapped() {
+        let p = tmp("sparse.txt");
+        std::fs::write(&p, "1000000 5\n5 70000\n").unwrap();
+        let g = read_edge_list(&p, true).unwrap();
+        assert_eq!(g.num_vertices(), 3);
+    }
+
+    #[test]
+    fn bad_line_is_error() {
+        let p = tmp("bad.txt");
+        std::fs::write(&p, "0 x\n").unwrap();
+        assert!(read_edge_list(&p, true).is_err());
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        assert!(read_edge_list(Path::new("/nonexistent/graph.txt"), true).is_err());
+    }
+}

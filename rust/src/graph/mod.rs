@@ -1,0 +1,15 @@
+//! Graph substrate: CSR storage, builders, IO, generators, properties.
+//!
+//! Everything downstream (partitioners, GoFS, both BSP engines) works on
+//! [`csr::Graph`]: a compact CSR with dense `u32` vertex ids, optional
+//! f32 edge weights, and both out- and in-adjacency so directed and
+//! undirected views are O(1) away.
+
+pub mod csr;
+pub mod builder;
+pub mod io;
+pub mod gen;
+pub mod props;
+
+pub use builder::GraphBuilder;
+pub use csr::{Graph, VertexId};

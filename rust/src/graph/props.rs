@@ -1,0 +1,192 @@
+//! Structural graph properties: BFS, WCC count, diameter, degree stats.
+//!
+//! These are the Table-1 columns (Vertices / Edges / Diameter / WCC) plus
+//! the oracles the test suite checks engine output against.
+
+use std::collections::VecDeque;
+
+use crate::util::dsu::Dsu;
+use crate::util::rng::Rng;
+
+use super::csr::{Graph, VertexId};
+
+/// BFS hop distances from `source` over the *undirected* view;
+/// `u32::MAX` marks unreachable vertices.
+pub fn bfs_distances(g: &Graph, source: VertexId) -> Vec<u32> {
+    let mut dist = vec![u32::MAX; g.num_vertices()];
+    let mut q = VecDeque::new();
+    dist[source as usize] = 0;
+    q.push_back(source);
+    while let Some(u) = q.pop_front() {
+        let du = dist[u as usize];
+        for v in g.undirected_neighbors(u) {
+            if dist[v as usize] == u32::MAX {
+                dist[v as usize] = du + 1;
+                q.push_back(v);
+            }
+        }
+    }
+    dist
+}
+
+/// Weakly-connected-component labels (dense, `0..wcc_count`).
+pub fn wcc_labels(g: &Graph) -> Vec<u32> {
+    let mut dsu = Dsu::new(g.num_vertices());
+    for (u, v, _) in g.edges() {
+        dsu.union(u, v);
+    }
+    dsu.labels()
+}
+
+/// Number of weakly connected components.
+pub fn wcc_count(g: &Graph) -> usize {
+    let mut dsu = Dsu::new(g.num_vertices());
+    for (u, v, _) in g.edges() {
+        dsu.union(u, v);
+    }
+    dsu.components()
+}
+
+/// Eccentricity-based diameter estimate via repeated double-sweep BFS:
+/// from `sweeps` random starts, BFS to the farthest vertex, then BFS
+/// again from there; the best second-sweep eccentricity lower-bounds the
+/// true diameter tightly on real-world graphs. Exact on trees/paths.
+pub fn diameter_estimate(g: &Graph, sweeps: usize, seed: u64) -> u32 {
+    let n = g.num_vertices();
+    if n == 0 {
+        return 0;
+    }
+    let mut rng = Rng::new(seed);
+    let mut best = 0u32;
+    for _ in 0..sweeps.max(1) {
+        let s = rng.index(n) as VertexId;
+        let d1 = bfs_distances(g, s);
+        let far = argmax_finite(&d1).unwrap_or(s);
+        let d2 = bfs_distances(g, far);
+        if let Some(f2) = argmax_finite(&d2) {
+            best = best.max(d2[f2 as usize]);
+        }
+    }
+    best
+}
+
+/// Exact diameter (max finite eccentricity) — O(V·E), small graphs only.
+pub fn diameter_exact(g: &Graph) -> u32 {
+    let mut best = 0;
+    for v in 0..g.num_vertices() as VertexId {
+        let d = bfs_distances(g, v);
+        for &x in &d {
+            if x != u32::MAX {
+                best = best.max(x);
+            }
+        }
+    }
+    best
+}
+
+fn argmax_finite(dist: &[u32]) -> Option<VertexId> {
+    let mut best: Option<(u32, VertexId)> = None;
+    for (v, &d) in dist.iter().enumerate() {
+        if d != u32::MAX && best.map_or(true, |(bd, _)| d > bd) {
+            best = Some((d, v as VertexId));
+        }
+    }
+    best.map(|(_, v)| v)
+}
+
+/// Degree distribution stats over total (in+out) degree.
+#[derive(Clone, Copy, Debug)]
+pub struct DegreeStats {
+    pub min: usize,
+    pub max: usize,
+    pub mean: f64,
+}
+
+pub fn degree_stats(g: &Graph) -> DegreeStats {
+    let n = g.num_vertices();
+    if n == 0 {
+        return DegreeStats { min: 0, max: 0, mean: 0.0 };
+    }
+    let mut min = usize::MAX;
+    let mut max = 0usize;
+    let mut sum = 0usize;
+    for v in 0..n as VertexId {
+        let d = g.out_degree(v) + g.in_degree(v);
+        min = min.min(d);
+        max = max.max(d);
+        sum += d;
+    }
+    DegreeStats { min, max, mean: sum as f64 / n as f64 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn bfs_on_chain() {
+        let g = gen::chain(5);
+        let d = bfs_distances(&g, 0);
+        assert_eq!(d, vec![0, 1, 2, 3, 4]);
+        let d2 = bfs_distances(&g, 2);
+        assert_eq!(d2, vec![2, 1, 0, 1, 2]);
+    }
+
+    #[test]
+    fn bfs_unreachable_marked() {
+        let g = Graph::from_edges(4, &[(0, 1)], None, false).unwrap();
+        let d = bfs_distances(&g, 0);
+        assert_eq!(d[1], 1);
+        assert_eq!(d[2], u32::MAX);
+        assert_eq!(d[3], u32::MAX);
+    }
+
+    #[test]
+    fn bfs_follows_undirected_view_on_directed_graph() {
+        let g = Graph::from_edges(3, &[(1, 0), (1, 2)], None, true).unwrap();
+        let d = bfs_distances(&g, 0);
+        assert_eq!(d, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn wcc_counts() {
+        let g = Graph::from_edges(6, &[(0, 1), (1, 2), (3, 4)], None, false).unwrap();
+        assert_eq!(wcc_count(&g), 3); // {0,1,2}, {3,4}, {5}
+        let labels = wcc_labels(&g);
+        assert_eq!(labels[0], labels[2]);
+        assert_eq!(labels[3], labels[4]);
+        assert_ne!(labels[0], labels[5]);
+    }
+
+    #[test]
+    fn diameter_exact_vs_estimate_on_tree() {
+        let g = gen::chain(30);
+        assert_eq!(diameter_exact(&g), 29);
+        assert_eq!(diameter_estimate(&g, 2, 5), 29); // double-sweep exact on paths
+    }
+
+    #[test]
+    fn diameter_on_grid() {
+        let g = gen::grid(6, 9);
+        assert_eq!(diameter_exact(&g), 5 + 8);
+        let est = diameter_estimate(&g, 4, 3);
+        assert!(est >= 11 && est <= 13, "est={est}");
+    }
+
+    #[test]
+    fn degree_stats_star() {
+        let g = gen::star(10);
+        let s = degree_stats(&g);
+        assert_eq!(s.max, 9);
+        assert_eq!(s.min, 1);
+        assert!((s.mean - 18.0 / 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_graph_props() {
+        let g = Graph::from_edges(0, &[], None, false).unwrap();
+        assert_eq!(wcc_count(&g), 0);
+        assert_eq!(diameter_estimate(&g, 3, 1), 0);
+    }
+}

@@ -1,0 +1,34 @@
+//! GoFFish — a sub-graph centric framework for large-scale graph analytics.
+//!
+//! Reproduction of Simmhan et al., "GoFFish: A Sub-Graph Centric Framework
+//! for Large-Scale Graph Analytics" (2013) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the GoFFish system itself: the `gofs`
+//!   distributed sub-graph aware graph store, the `gopher` sub-graph centric
+//!   BSP engine, a Giraph-like `pregel` vertex-centric baseline, graph
+//!   substrates (`graph`, `partition`), the simulated commodity cluster
+//!   (`sim`), and the benchmark/metrics machinery (`metrics`, `bench`).
+//! * **Layer 2** — JAX compute graphs for the per-sub-graph numeric hot
+//!   spots (PageRank rank updates, min-plus SSSP relaxation), lowered
+//!   ahead-of-time to HLO text (`python/compile/model.py`).
+//! * **Layer 1** — Pallas kernels implementing the blocked rank-update /
+//!   relaxation inner loops (`python/compile/kernels/`), called from L2 and
+//!   validated against pure-jnp oracles.
+//!
+//! Python never runs on the request path: `runtime` loads the AOT HLO
+//! artifacts via PJRT and executes them from Gopher's superstep hot loop.
+
+pub mod util;
+pub mod graph;
+pub mod partition;
+pub mod gofs;
+pub mod gopher;
+pub mod pregel;
+pub mod algos;
+pub mod runtime;
+pub mod sim;
+pub mod metrics;
+pub mod bench;
+pub mod cli;
+pub mod testing;

@@ -1,0 +1,6 @@
+//! GoFFish CLI entrypoint — see `cli` for the command surface.
+
+fn main() {
+    let code = goffish::cli::run(std::env::args().skip(1).collect());
+    std::process::exit(code);
+}

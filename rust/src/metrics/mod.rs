@@ -1,0 +1,146 @@
+//! Execution metrics shared by both BSP engines.
+//!
+//! Everything the paper's evaluation section plots is captured here:
+//! makespan split into load + compute (Fig 4a/4b), superstep counts
+//! (Fig 4c), per-sub-graph compute-time distributions per partition
+//! (Fig 5), and message/byte counters (the §3.3 "messages exchanged"
+//! argument).
+
+use crate::util::stats::Summary;
+
+/// Metrics for one superstep, merged across workers.
+#[derive(Clone, Debug, Default)]
+pub struct SuperstepMetrics {
+    /// Wall-clock of the whole superstep (slowest worker + sync).
+    pub wall_seconds: f64,
+    /// Per-partition: wall time of that worker's compute phase.
+    pub partition_compute_seconds: Vec<f64>,
+    /// Per-partition: per-unit (sub-graph or vertex batch) compute times.
+    pub unit_times: Vec<Vec<f64>>,
+    /// Data messages sent this superstep (all workers).
+    pub messages: u64,
+    /// Encoded data bytes sent this superstep (all workers).
+    pub bytes: u64,
+    /// Units (sub-graphs / vertices) that ran compute this superstep.
+    pub active_units: u64,
+}
+
+impl SuperstepMetrics {
+    /// Box-whisker summary of one partition's unit times (Fig 5 rows).
+    pub fn partition_summary(&self, p: usize) -> Option<Summary> {
+        Summary::from(&self.unit_times[p])
+    }
+
+    /// The straggler ratio the paper's §6.5 discusses: slowest partition
+    /// compute time / next-slowest.
+    pub fn straggler_ratio(&self) -> f64 {
+        let mut t = self.partition_compute_seconds.clone();
+        t.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        if t.len() < 2 || t[1] == 0.0 {
+            return 1.0;
+        }
+        t[0] / t[1]
+    }
+}
+
+/// Metrics for a whole job.
+#[derive(Clone, Debug, Default)]
+pub struct JobMetrics {
+    pub supersteps: Vec<SuperstepMetrics>,
+    /// Time loading the graph from storage into memory objects (Fig 4b).
+    pub load_seconds: f64,
+    /// Bytes read at load.
+    pub load_bytes: u64,
+    /// Files read at load.
+    pub load_files: u64,
+    /// Total compute wall time (sum of superstep walls).
+    pub compute_seconds: f64,
+}
+
+impl JobMetrics {
+    pub fn num_supersteps(&self) -> usize {
+        self.supersteps.len()
+    }
+
+    /// End-to-end makespan: load + compute (the Fig 4a quantity).
+    pub fn makespan_seconds(&self) -> f64 {
+        self.load_seconds + self.compute_seconds
+    }
+
+    pub fn total_messages(&self) -> u64 {
+        self.supersteps.iter().map(|s| s.messages).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.supersteps.iter().map(|s| s.bytes).sum()
+    }
+
+    /// One-line report used by examples and benches.
+    pub fn report(&self, label: &str) -> String {
+        format!(
+            "{label}: makespan={:.4}s (load={:.4}s compute={:.4}s) supersteps={} msgs={} bytes={}",
+            self.makespan_seconds(),
+            self.load_seconds,
+            self.compute_seconds,
+            self.num_supersteps(),
+            self.total_messages(),
+            self.total_bytes(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ss(walls: &[f64], msgs: u64) -> SuperstepMetrics {
+        SuperstepMetrics {
+            wall_seconds: walls.iter().cloned().fold(0.0, f64::max),
+            partition_compute_seconds: walls.to_vec(),
+            unit_times: walls.iter().map(|&w| vec![w]).collect(),
+            messages: msgs,
+            bytes: msgs * 8,
+            active_units: walls.len() as u64,
+        }
+    }
+
+    #[test]
+    fn makespan_adds_load_and_compute() {
+        let m = JobMetrics {
+            supersteps: vec![ss(&[0.1, 0.2], 5), ss(&[0.3, 0.1], 2)],
+            load_seconds: 1.0,
+            compute_seconds: 0.5,
+            ..Default::default()
+        };
+        assert!((m.makespan_seconds() - 1.5).abs() < 1e-12);
+        assert_eq!(m.total_messages(), 7);
+        assert_eq!(m.total_bytes(), 56);
+        assert_eq!(m.num_supersteps(), 2);
+    }
+
+    #[test]
+    fn straggler_ratio_identifies_slow_partition() {
+        let s = ss(&[0.1, 0.1, 0.5, 0.2], 0);
+        assert!((s.straggler_ratio() - 2.5).abs() < 1e-9);
+        let uniform = ss(&[0.1, 0.1], 0);
+        assert!((uniform.straggler_ratio() - 1.0).abs() < 1e-9);
+        let single = ss(&[0.1], 0);
+        assert_eq!(single.straggler_ratio(), 1.0);
+    }
+
+    #[test]
+    fn partition_summary_present() {
+        let s = ss(&[0.25, 0.5], 0);
+        let sum = s.partition_summary(1).unwrap();
+        assert_eq!(sum.count, 1);
+        assert_eq!(sum.median, 0.5);
+    }
+
+    #[test]
+    fn report_contains_key_fields() {
+        let m = JobMetrics::default();
+        let r = m.report("cc/rn");
+        assert!(r.contains("cc/rn"));
+        assert!(r.contains("supersteps=0"));
+    }
+}

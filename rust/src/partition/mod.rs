@@ -1,0 +1,19 @@
+//! k-way graph partitioners.
+//!
+//! GoFS distributes one partition per host (paper §4.1). The paper uses
+//! METIS; the offline testbed carries [`multilevel`], an in-crate
+//! METIS-like multilevel partitioner (heavy-edge-matching coarsening →
+//! greedy growing → FM boundary refinement) with the same objective:
+//! balance vertices per partition, minimise edge cut. [`hash`] is the
+//! Giraph default (random vertex hashing) used by the baseline engine,
+//! and [`range`] is the contiguous-id strawman.
+
+pub mod types;
+pub mod hash;
+pub mod range;
+pub mod multilevel;
+
+pub use hash::HashPartitioner;
+pub use multilevel::MultilevelPartitioner;
+pub use range::RangePartitioner;
+pub use types::{PartitionMetrics, Partitioner, Partitioning};

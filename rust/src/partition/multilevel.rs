@@ -1,0 +1,399 @@
+//! METIS-like multilevel k-way partitioner.
+//!
+//! Three phases, following Karypis & Kumar's scheme (the paper partitions
+//! with METIS; DESIGN.md §3 documents this substitution):
+//!
+//! 1. **Coarsening** — repeated heavy-edge matching collapses matched
+//!    vertex pairs into super-vertices (edge weights accumulate, vertex
+//!    weights add) until the graph is small or shrinkage stalls.
+//! 2. **Initial partitioning** — greedy graph growing on the coarsest
+//!    graph: BFS-grow each part up to the balanced vertex-weight budget,
+//!    seeding each growth from the least-attached remaining vertex.
+//! 3. **Uncoarsening + refinement** — project the assignment back level
+//!    by level, running boundary Fiduccia–Mattheyses passes (move a
+//!    boundary vertex to the neighbouring part with the best cut gain,
+//!    subject to a balance cap) at each level.
+
+use std::collections::BTreeMap;
+
+use crate::graph::csr::Graph;
+
+use super::types::{Partitioner, Partitioning};
+
+/// Stop coarsening when at most `COARSEST_PER_PART * k` vertices remain.
+const COARSEST_PER_PART: usize = 30;
+/// Give up coarsening when a level shrinks less than this factor.
+const MIN_SHRINK: f64 = 0.95;
+/// Max refinement passes per level.
+const FM_PASSES: usize = 4;
+/// Allowed imbalance during refinement (max part / ideal part).
+const BALANCE_CAP: f64 = 1.05;
+
+/// Working representation during coarsening: weighted adjacency maps.
+struct Level {
+    /// adj[v] = neighbour -> accumulated edge weight
+    adj: Vec<BTreeMap<u32, u64>>,
+    /// vertex weights (number of original vertices collapsed)
+    vw: Vec<u64>,
+    /// map from this level's vertices to the coarser level's vertices
+    /// (filled when the next level is built)
+    to_coarse: Vec<u32>,
+}
+
+pub struct MultilevelPartitioner {
+    seed: u64,
+}
+
+impl MultilevelPartitioner {
+    pub fn new(seed: u64) -> Self {
+        Self { seed }
+    }
+}
+
+impl Default for MultilevelPartitioner {
+    fn default() -> Self {
+        Self::new(1)
+    }
+}
+
+impl Partitioner for MultilevelPartitioner {
+    fn partition(&self, g: &Graph, k: usize) -> Partitioning {
+        assert!(k >= 1);
+        let n = g.num_vertices();
+        if k == 1 || n == 0 {
+            return Partitioning::new(k, vec![0; n]);
+        }
+        if n <= k {
+            return Partitioning::new(k, (0..n as u32).map(|v| v % k as u32).collect());
+        }
+
+        // Level 0 from the CSR (undirected, deduped, weight 1 per edge).
+        let mut levels: Vec<Level> = vec![level_from_graph(g)];
+
+        // Phase 1: coarsen.
+        loop {
+            let cur = levels.last().unwrap();
+            let cur_n = cur.adj.len();
+            if cur_n <= COARSEST_PER_PART * k {
+                break;
+            }
+            let (next, mapping) = coarsen_once(cur, self.seed ^ levels.len() as u64);
+            let shrink = next.adj.len() as f64 / cur_n as f64;
+            levels.last_mut().unwrap().to_coarse = mapping;
+            if shrink > MIN_SHRINK {
+                // Matching stalled (e.g. star graphs) — stop coarsening.
+                levels.push(next);
+                break;
+            }
+            levels.push(next);
+        }
+
+        // Phase 2: initial partitioning on the coarsest level.
+        let coarsest = levels.last().unwrap();
+        let mut assign = grow_initial(coarsest, k, self.seed);
+        refine(coarsest, &mut assign, k);
+
+        // Phase 3: project back and refine at each level.
+        for li in (0..levels.len() - 1).rev() {
+            let fine = &levels[li];
+            let mut fine_assign = vec![0u32; fine.adj.len()];
+            for (v, a) in fine_assign.iter_mut().enumerate() {
+                *a = assign[fine.to_coarse[v] as usize];
+            }
+            refine(fine, &mut fine_assign, k);
+            assign = fine_assign;
+        }
+
+        Partitioning::new(k, assign)
+    }
+
+    fn name(&self) -> &'static str {
+        "multilevel"
+    }
+}
+
+fn level_from_graph(g: &Graph) -> Level {
+    let n = g.num_vertices();
+    let mut adj: Vec<BTreeMap<u32, u64>> = vec![BTreeMap::new(); n];
+    for (u, v, _) in g.edges() {
+        if u == v {
+            continue;
+        }
+        *adj[u as usize].entry(v).or_insert(0) += 1;
+        *adj[v as usize].entry(u).or_insert(0) += 1;
+    }
+    Level { adj, vw: vec![1; n], to_coarse: Vec::new() }
+}
+
+/// One round of heavy-edge matching; returns the coarser level and the
+/// fine->coarse vertex mapping.
+fn coarsen_once(level: &Level, seed: u64) -> (Level, Vec<u32>) {
+    let n = level.adj.len();
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    let mut rng = crate::util::rng::Rng::new(seed);
+    rng.shuffle(&mut order);
+
+    let mut mate = vec![u32::MAX; n];
+    for &v in &order {
+        if mate[v as usize] != u32::MAX {
+            continue;
+        }
+        // Heaviest unmatched neighbour.
+        let mut best: Option<(u64, u32)> = None;
+        for (&u, &w) in &level.adj[v as usize] {
+            if mate[u as usize] == u32::MAX && u != v {
+                let cand = (w, u);
+                if best.map_or(true, |b| cand > b) {
+                    best = Some(cand);
+                }
+            }
+        }
+        match best {
+            Some((_, u)) => {
+                mate[v as usize] = u;
+                mate[u as usize] = v;
+            }
+            None => mate[v as usize] = v, // self-matched (stays single)
+        }
+    }
+
+    // Assign coarse ids.
+    let mut to_coarse = vec![u32::MAX; n];
+    let mut next = 0u32;
+    for v in 0..n as u32 {
+        if to_coarse[v as usize] != u32::MAX {
+            continue;
+        }
+        let m = mate[v as usize];
+        to_coarse[v as usize] = next;
+        if m != v && m != u32::MAX {
+            to_coarse[m as usize] = next;
+        }
+        next += 1;
+    }
+
+    // Build the coarse level.
+    let cn = next as usize;
+    let mut adj: Vec<BTreeMap<u32, u64>> = vec![BTreeMap::new(); cn];
+    let mut vw = vec![0u64; cn];
+    for v in 0..n {
+        let cv = to_coarse[v] as usize;
+        vw[cv] += level.vw[v];
+        for (&u, &w) in &level.adj[v] {
+            let cu = to_coarse[u as usize];
+            if cu as usize != cv {
+                *adj[cv].entry(cu).or_insert(0) += w;
+            }
+        }
+    }
+    // Each undirected edge was visited from both ends: halve the weights.
+    for m in &mut adj {
+        for w in m.values_mut() {
+            *w /= 2;
+        }
+    }
+    (Level { adj, vw, to_coarse: Vec::new() }, to_coarse)
+}
+
+/// Greedy graph growing: BFS-grow part after part up to the weight budget.
+fn grow_initial(level: &Level, k: usize, seed: u64) -> Vec<u32> {
+    let n = level.adj.len();
+    let total_w: u64 = level.vw.iter().sum();
+    let budget = total_w.div_ceil(k as u64);
+    let mut assign = vec![u32::MAX; n];
+    let mut rng = crate::util::rng::Rng::new(seed ^ 0xBEEF);
+    let mut unassigned = n;
+
+    for part in 0..k as u32 {
+        if unassigned == 0 {
+            break;
+        }
+        let is_last = part as usize == k - 1;
+        // Seed: a random unassigned vertex.
+        let mut seed_v = rng.index(n);
+        while assign[seed_v] != u32::MAX {
+            seed_v = (seed_v + 1) % n;
+        }
+        let mut weight = 0u64;
+        let mut frontier = std::collections::VecDeque::new();
+        frontier.push_back(seed_v as u32);
+        while weight < budget || is_last {
+            let v = match frontier.pop_front() {
+                Some(v) => v,
+                None => {
+                    // Disconnected remainder: jump to a fresh seed.
+                    match (0..n).find(|&x| assign[x] == u32::MAX) {
+                        Some(x) if weight < budget || is_last => x as u32,
+                        _ => break,
+                    }
+                }
+            };
+            if assign[v as usize] != u32::MAX {
+                continue;
+            }
+            assign[v as usize] = part;
+            weight += level.vw[v as usize];
+            unassigned -= 1;
+            if unassigned == 0 {
+                break;
+            }
+            for &u in level.adj[v as usize].keys() {
+                if assign[u as usize] == u32::MAX {
+                    frontier.push_back(u);
+                }
+            }
+            if weight >= budget && !is_last {
+                break;
+            }
+        }
+    }
+    // Sweep any stragglers into the lightest part.
+    for v in 0..n {
+        if assign[v] == u32::MAX {
+            let mut pw = vec![0u64; k];
+            for x in 0..n {
+                if assign[x] != u32::MAX {
+                    pw[assign[x] as usize] += level.vw[x];
+                }
+            }
+            let lightest = (0..k).min_by_key(|&p| pw[p]).unwrap() as u32;
+            assign[v] = lightest;
+        }
+    }
+    assign
+}
+
+/// Boundary FM refinement: greedy positive-gain moves under a balance cap.
+fn refine(level: &Level, assign: &mut [u32], k: usize) {
+    let n = level.adj.len();
+    let total_w: u64 = level.vw.iter().sum();
+    let ideal = (total_w as f64 / k as f64).max(1.0);
+    let cap = (ideal * BALANCE_CAP).ceil() as u64;
+
+    let mut part_w = vec![0u64; k];
+    for v in 0..n {
+        part_w[assign[v] as usize] += level.vw[v];
+    }
+
+    for _ in 0..FM_PASSES {
+        let mut moved = 0usize;
+        for v in 0..n {
+            let from = assign[v];
+            if level.adj[v].is_empty() {
+                continue;
+            }
+            // Connectivity of v to each adjacent part.
+            let mut conn: BTreeMap<u32, i64> = BTreeMap::new();
+            for (&u, &w) in &level.adj[v] {
+                *conn.entry(assign[u as usize]).or_insert(0) += w as i64;
+            }
+            let own = *conn.get(&from).unwrap_or(&0);
+            let best = conn
+                .iter()
+                .filter(|(&p, _)| p != from)
+                .max_by_key(|(_, &w)| w);
+            if let Some((&to, &w_to)) = best {
+                let gain = w_to - own;
+                let fits = part_w[to as usize] + level.vw[v] <= cap;
+                let frees = part_w[from as usize] > level.vw[v];
+                if gain > 0 && fits && frees {
+                    part_w[from as usize] -= level.vw[v];
+                    part_w[to as usize] += level.vw[v];
+                    assign[v] = to;
+                    moved += 1;
+                }
+            }
+        }
+        if moved == 0 {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::partition::hash::HashPartitioner;
+
+    #[test]
+    fn covers_all_vertices_once() {
+        let g = gen::grid(20, 20);
+        let p = MultilevelPartitioner::default().partition(&g, 4);
+        assert_eq!(p.num_vertices(), 400);
+        assert_eq!(p.sizes().iter().sum::<usize>(), 400);
+    }
+
+    #[test]
+    fn beats_hash_on_lattice_cut() {
+        let g = gen::grid(40, 40);
+        let ml = MultilevelPartitioner::default().partition(&g, 4).metrics(&g);
+        let h = HashPartitioner::default().partition(&g, 4).metrics(&g);
+        assert!(
+            ml.cut_fraction < h.cut_fraction / 3.0,
+            "multilevel {} vs hash {}",
+            ml.cut_fraction,
+            h.cut_fraction
+        );
+    }
+
+    #[test]
+    fn balance_within_cap() {
+        let g = gen::grid(30, 30);
+        for k in [2, 3, 4, 8] {
+            let m = MultilevelPartitioner::default().partition(&g, k).metrics(&g);
+            assert!(m.imbalance < 1.3, "k={k} imbalance={}", m.imbalance);
+        }
+    }
+
+    #[test]
+    fn chain_cut_near_optimal() {
+        let g = gen::chain(1000);
+        let m = MultilevelPartitioner::default().partition(&g, 4).metrics(&g);
+        // Optimal cut is 3; accept a small constant factor.
+        assert!(m.edge_cut <= 12, "cut={}", m.edge_cut);
+    }
+
+    #[test]
+    fn handles_disconnected_graph() {
+        // Two separate grids glued as one vertex set.
+        let mut b = crate::graph::GraphBuilder::new(false);
+        b.reserve_vertices(200);
+        for i in 0..99 {
+            b.add_edge(i, i + 1);
+        }
+        for i in 100..199 {
+            b.add_edge(i, i + 1);
+        }
+        let g = b.build().unwrap();
+        let p = MultilevelPartitioner::default().partition(&g, 2);
+        let m = p.metrics(&g);
+        assert!(m.edge_cut <= 4, "cut={}", m.edge_cut);
+        assert!(m.imbalance < 1.3, "imbalance={}", m.imbalance);
+    }
+
+    #[test]
+    fn k_one_and_tiny_graphs() {
+        let g = gen::chain(5);
+        let p1 = MultilevelPartitioner::default().partition(&g, 1);
+        assert!(p1.assignment().iter().all(|&a| a == 0));
+        let g2 = gen::chain(3);
+        let p8 = MultilevelPartitioner::default().partition(&g2, 8);
+        assert_eq!(p8.num_vertices(), 3);
+    }
+
+    #[test]
+    fn star_graph_does_not_hang() {
+        let g = gen::star(500);
+        let p = MultilevelPartitioner::default().partition(&g, 4);
+        assert_eq!(p.sizes().iter().sum::<usize>(), 500);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let g = gen::grid(15, 15);
+        let a = MultilevelPartitioner::new(9).partition(&g, 3);
+        let b = MultilevelPartitioner::new(9).partition(&g, 3);
+        assert_eq!(a.assignment(), b.assignment());
+    }
+}

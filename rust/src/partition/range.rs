@@ -1,0 +1,59 @@
+//! Range partitioner: contiguous id blocks.
+//!
+//! For generators whose ids have spatial meaning (the road lattice), this
+//! is a surprisingly strong locality baseline; for hashed/arbitrary ids it
+//! degenerates. Included as the third arm of the partitioning ablation.
+
+use crate::graph::csr::Graph;
+
+use super::types::{Partitioner, Partitioning};
+
+#[derive(Default)]
+pub struct RangePartitioner;
+
+impl Partitioner for RangePartitioner {
+    fn partition(&self, g: &Graph, k: usize) -> Partitioning {
+        assert!(k >= 1);
+        let n = g.num_vertices();
+        let per = n.div_ceil(k).max(1);
+        let assignment = (0..n).map(|v| ((v / per) as u32).min(k as u32 - 1)).collect();
+        Partitioning::new(k, assignment)
+    }
+
+    fn name(&self) -> &'static str {
+        "range"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn contiguous_blocks() {
+        let g = gen::chain(10);
+        let p = RangePartitioner.partition(&g, 2);
+        assert_eq!(p.assignment(), &[0, 0, 0, 0, 0, 1, 1, 1, 1, 1]);
+        // Chain cut by range partitioning = k-1 edges.
+        assert_eq!(p.metrics(&g).edge_cut, 1);
+    }
+
+    #[test]
+    fn uneven_division() {
+        let g = gen::chain(7);
+        let p = RangePartitioner.partition(&g, 3);
+        let sizes = p.sizes();
+        assert_eq!(sizes.iter().sum::<usize>(), 7);
+        assert!(sizes.iter().all(|&s| s >= 1));
+    }
+
+    #[test]
+    fn k_larger_than_n() {
+        let g = gen::chain(3);
+        let p = RangePartitioner.partition(&g, 8);
+        assert_eq!(p.num_vertices(), 3);
+        // All assignments within range.
+        assert!(p.assignment().iter().all(|&a| a < 8));
+    }
+}

@@ -1,0 +1,128 @@
+//! Partitioning types and quality metrics.
+
+use crate::graph::csr::{Graph, VertexId};
+
+/// A k-way assignment of vertices to partitions (hosts).
+#[derive(Clone, Debug)]
+pub struct Partitioning {
+    k: usize,
+    assignment: Vec<u32>,
+}
+
+impl Partitioning {
+    pub fn new(k: usize, assignment: Vec<u32>) -> Self {
+        debug_assert!(assignment.iter().all(|&p| (p as usize) < k));
+        Self { k, assignment }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.assignment.len()
+    }
+
+    /// Partition that vertex `v` lives on.
+    pub fn of(&self, v: VertexId) -> u32 {
+        self.assignment[v as usize]
+    }
+
+    pub fn assignment(&self) -> &[u32] {
+        &self.assignment
+    }
+
+    /// Vertices of partition `p`, in id order.
+    pub fn vertices_of(&self, p: u32) -> Vec<VertexId> {
+        self.assignment
+            .iter()
+            .enumerate()
+            .filter(|(_, &a)| a == p)
+            .map(|(v, _)| v as VertexId)
+            .collect()
+    }
+
+    /// Vertex count per partition.
+    pub fn sizes(&self) -> Vec<usize> {
+        let mut sizes = vec![0usize; self.k];
+        for &p in &self.assignment {
+            sizes[p as usize] += 1;
+        }
+        sizes
+    }
+
+    /// Quality metrics against the graph that was partitioned.
+    pub fn metrics(&self, g: &Graph) -> PartitionMetrics {
+        assert_eq!(g.num_vertices(), self.assignment.len());
+        let mut cut = 0usize;
+        for (u, v, _) in g.edges() {
+            if self.of(u) != self.of(v) {
+                cut += 1;
+            }
+        }
+        let sizes = self.sizes();
+        let max = *sizes.iter().max().unwrap_or(&0);
+        let ideal = (g.num_vertices() as f64 / self.k as f64).max(1.0);
+        PartitionMetrics {
+            edge_cut: cut,
+            cut_fraction: if g.num_edges() == 0 {
+                0.0
+            } else {
+                cut as f64 / g.num_edges() as f64
+            },
+            imbalance: max as f64 / ideal,
+            sizes,
+        }
+    }
+}
+
+/// Edge-cut and balance quality of a partitioning.
+#[derive(Clone, Debug)]
+pub struct PartitionMetrics {
+    /// Number of edges crossing partitions.
+    pub edge_cut: usize,
+    /// `edge_cut / num_edges`.
+    pub cut_fraction: f64,
+    /// `max partition size / ideal size` (1.0 = perfectly balanced).
+    pub imbalance: f64,
+    pub sizes: Vec<usize>,
+}
+
+/// A k-way partitioning strategy.
+pub trait Partitioner {
+    fn partition(&self, g: &Graph, k: usize) -> Partitioning;
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn metrics_on_manual_split() {
+        let g = gen::chain(4); // edges 0-1, 1-2, 2-3
+        let p = Partitioning::new(2, vec![0, 0, 1, 1]);
+        let m = p.metrics(&g);
+        assert_eq!(m.edge_cut, 1); // only 1-2 crosses
+        assert_eq!(m.sizes, vec![2, 2]);
+        assert!((m.imbalance - 1.0).abs() < 1e-9);
+        assert!((m.cut_fraction - 1.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vertices_of_ordered() {
+        let p = Partitioning::new(2, vec![1, 0, 1, 0]);
+        assert_eq!(p.vertices_of(0), vec![1, 3]);
+        assert_eq!(p.vertices_of(1), vec![0, 2]);
+    }
+
+    #[test]
+    fn worst_case_imbalance() {
+        let g = gen::chain(4);
+        let p = Partitioning::new(2, vec![0, 0, 0, 0]);
+        let m = p.metrics(&g);
+        assert_eq!(m.edge_cut, 0);
+        assert!((m.imbalance - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,147 @@
+//! The vertex-centric programming abstraction (Pregel §3.1 of the paper).
+
+use crate::gopher::api::MsgCodec;
+use crate::graph::csr::{Graph, VertexId};
+
+/// Per-(vertex, superstep) execution context.
+pub struct VertexContext<'a, M> {
+    pub(crate) superstep: usize,
+    pub(crate) vertex: VertexId,
+    pub(crate) graph: &'a Graph,
+    pub(crate) out: Vec<(VertexId, M)>,
+    pub(crate) halted: bool,
+}
+
+impl<'a, M: Clone> VertexContext<'a, M> {
+    pub(crate) fn new(superstep: usize, vertex: VertexId, graph: &'a Graph) -> Self {
+        Self { superstep, vertex, graph, out: Vec::new(), halted: false }
+    }
+
+    /// Current superstep (1-based).
+    pub fn superstep(&self) -> usize {
+        self.superstep
+    }
+
+    /// This vertex's global id.
+    pub fn vertex(&self) -> VertexId {
+        self.vertex
+    }
+
+    /// Total vertices in the graph.
+    pub fn num_vertices(&self) -> u64 {
+        self.graph.num_vertices() as u64
+    }
+
+    /// Out-neighbours of this vertex.
+    pub fn out_neighbors(&self) -> &[VertexId] {
+        self.graph.out_neighbors(self.vertex)
+    }
+
+    /// Out-edges with weights.
+    pub fn out_edges_weighted(&self) -> Vec<(VertexId, f32)> {
+        self.graph
+            .out_edges(self.vertex)
+            .map(|(t, ei)| (t, self.graph.weight(ei)))
+            .collect()
+    }
+
+    /// Neighbours under the undirected view (for CC-style algorithms).
+    pub fn undirected_neighbors(&self) -> Vec<VertexId> {
+        self.graph.undirected_neighbors(self.vertex).collect()
+    }
+
+    /// Out-degree of this vertex.
+    pub fn out_degree(&self) -> usize {
+        self.graph.out_degree(self.vertex)
+    }
+
+    /// The underlying (shared, read-only) graph.
+    pub fn graph(&self) -> &'a Graph {
+        self.graph
+    }
+
+    /// Send a message to a vertex (delivered next superstep).
+    pub fn send_to(&mut self, target: VertexId, payload: M) {
+        self.out.push((target, payload));
+    }
+
+    /// `SendToAllNeighbors` of the paper's Algorithm 1 (out-edges).
+    pub fn send_to_all_neighbors(&mut self, payload: M) {
+        let targets: Vec<VertexId> = self.graph.out_neighbors(self.vertex).to_vec();
+        for t in targets {
+            self.out.push((t, payload.clone()));
+        }
+    }
+
+    /// Send across the undirected view (out ∪ in neighbours).
+    pub fn send_to_all_undirected(&mut self, payload: M) {
+        let targets: Vec<VertexId> =
+            self.graph.undirected_neighbors(self.vertex).collect();
+        for t in targets {
+            self.out.push((t, payload.clone()));
+        }
+    }
+
+    /// Vote to halt (reactivated by incoming messages).
+    pub fn vote_to_halt(&mut self) {
+        self.halted = true;
+    }
+}
+
+/// A vertex-centric program.
+pub trait VertexProgram: Sync {
+    type Msg: MsgCodec + Clone + Send + Sync + 'static;
+    type Value: Clone + Send + 'static;
+
+    /// Initial vertex value (before superstep 1).
+    fn init(&self, vertex: VertexId, graph: &Graph) -> Self::Value;
+
+    /// One superstep for one vertex.
+    fn compute(
+        &self,
+        value: &mut Self::Value,
+        ctx: &mut VertexContext<'_, Self::Msg>,
+        msgs: &[Self::Msg],
+    );
+
+    /// Optional Giraph-style combiner: fold two messages headed to the
+    /// same vertex into one. Return `None` (default) to disable.
+    fn combine(&self, _a: &Self::Msg, _b: &Self::Msg) -> Option<Self::Msg> {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn context_surfaces_topology() {
+        let g = gen::chain(5); // undirected chain stored as i -> i+1
+        let mut ctx = VertexContext::<u32>::new(1, 2, &g);
+        assert_eq!(ctx.out_neighbors(), &[3]);
+        assert_eq!(ctx.undirected_neighbors(), vec![3, 1]);
+        assert_eq!(ctx.num_vertices(), 5);
+        ctx.send_to_all_undirected(9);
+        assert_eq!(ctx.out.len(), 2);
+        ctx.send_to(0, 1);
+        assert_eq!(ctx.out.last().unwrap(), &(0, 1));
+        assert!(!ctx.halted);
+        ctx.vote_to_halt();
+        assert!(ctx.halted);
+    }
+
+    #[test]
+    fn weighted_edges_surface() {
+        let g = crate::graph::csr::Graph::from_edges(
+            3,
+            &[(0, 1), (0, 2)],
+            Some(vec![1.5, 2.5]),
+            true,
+        )
+        .unwrap();
+        let ctx = VertexContext::<u32>::new(1, 0, &g);
+        assert_eq!(ctx.out_edges_weighted(), vec![(1, 1.5), (2, 2.5)]);
+    }
+}

@@ -1,0 +1,579 @@
+//! Vertex-centric BSP engine (the Giraph stand-in).
+//!
+//! Mirrors `gopher::engine` — same fabric, EOS drain, sync/resume/halt
+//! protocol — with vertices as the unit of compute and hash placement as
+//! the default. Differences that matter for the paper's comparison:
+//!
+//! * fine-grained parallelism: active vertices are processed in
+//!   core-count chunks (Giraph's vertex-level multithreading);
+//! * messages address *vertices*; routing consults the global placement
+//!   assignment (every worker holds it — Giraph does the same via its
+//!   partition owner map);
+//! * optional combiners fold same-destination-vertex messages before
+//!   they hit the wire.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::csr::{Graph, VertexId};
+use crate::metrics::{JobMetrics, SuperstepMetrics};
+use crate::partition::Partitioning;
+use crate::util::codec::{Decoder, Encoder};
+use crate::util::pool;
+
+use super::api::{VertexContext, VertexProgram};
+use crate::gopher::api::MsgCodec;
+use crate::gopher::transport::{self, Fabric, FabricKind};
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct PregelConfig {
+    pub cores_per_worker: usize,
+    pub fabric: FabricKind,
+    pub max_supersteps: usize,
+    /// Simulated load time charged to metrics (the HDFS side of Fig 4b is
+    /// modelled by `sim::disk`; the engine itself loads from memory).
+    pub load_seconds: f64,
+}
+
+impl Default for PregelConfig {
+    fn default() -> Self {
+        Self {
+            cores_per_worker: 4,
+            fabric: FabricKind::InProc,
+            max_supersteps: 10_000,
+            load_seconds: 0.0,
+        }
+    }
+}
+
+/// Result of a vertex-centric job.
+pub struct VertexRunResult<V> {
+    /// Final value per vertex (global id order).
+    pub values: Vec<V>,
+    pub metrics: JobMetrics,
+}
+
+const TAG_BATCH: u8 = 0;
+const TAG_EOS: u8 = 1;
+
+fn encode_batch<M: MsgCodec>(msgs: &[(VertexId, M)]) -> Vec<u8> {
+    let mut e = Encoder::with_capacity(8 + msgs.len() * 6);
+    e.put_u8(TAG_BATCH);
+    e.put_varint(msgs.len() as u64);
+    for (v, m) in msgs {
+        e.put_varint(*v as u64);
+        m.encode(&mut e);
+    }
+    e.into_bytes()
+}
+
+fn decode_batch<M: MsgCodec>(bytes: &[u8]) -> Result<Vec<(VertexId, M)>> {
+    let mut d = Decoder::new(bytes);
+    let tag = d.get_u8()?;
+    if tag != TAG_BATCH {
+        bail!("expected batch frame, got tag {tag}");
+    }
+    let n = d.get_varint()? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let v = d.get_varint()? as u32;
+        out.push((v, M::decode(&mut d)?));
+    }
+    Ok(out)
+}
+
+struct WorkerSync {
+    sent: u64,
+    quiescent: bool,
+    /// Worker failed: manager must abort the job after this superstep.
+    failed: bool,
+}
+
+enum ManagerCmd {
+    Resume,
+    Terminate,
+}
+
+struct WorkerSuperstep {
+    compute_seconds: f64,
+    unit_times: Vec<f64>,
+    messages: u64,
+    bytes: u64,
+    active_units: u64,
+}
+
+struct WorkerOutput<V> {
+    /// (global id, value) pairs for this worker's vertices.
+    values: Vec<(VertexId, V)>,
+    per_superstep: Vec<WorkerSuperstep>,
+}
+
+/// Worker entry point; see `gopher::engine::worker_body` for the failure
+/// protocol (EOS to peers + failed sync, so errors abort, not deadlock).
+#[allow(clippy::too_many_arguments)]
+fn worker_body<P, F>(
+    program: &P,
+    fabric: F,
+    cfg: &PregelConfig,
+    graph: &Graph,
+    parts: &Partitioning,
+    my_vertices: Vec<VertexId>,
+    sync_tx: Sender<WorkerSync>,
+    cmd_rx: Receiver<ManagerCmd>,
+) -> Result<WorkerOutput<P::Value>>
+where
+    P: VertexProgram,
+    F: Fabric,
+{
+    let me = fabric.id();
+    let k = fabric.num_workers();
+    match worker_loop(program, &fabric, cfg, graph, parts, my_vertices, &sync_tx, &cmd_rx) {
+        Ok(out) => Ok(out),
+        Err(e) => {
+            for p in 0..k as u32 {
+                if p != me {
+                    let _ = fabric.send(p, vec![TAG_EOS]);
+                }
+            }
+            let _ = sync_tx.send(WorkerSync { sent: 0, quiescent: true, failed: true });
+            let _ = cmd_rx.recv();
+            Err(e)
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop<P, F>(
+    program: &P,
+    fabric: &F,
+    cfg: &PregelConfig,
+    graph: &Graph,
+    parts: &Partitioning,
+    my_vertices: Vec<VertexId>,
+    sync_tx: &Sender<WorkerSync>,
+    cmd_rx: &Receiver<ManagerCmd>,
+) -> Result<WorkerOutput<P::Value>>
+where
+    P: VertexProgram,
+    F: Fabric,
+{
+    let me = fabric.id();
+    let k = fabric.num_workers();
+    let n_local = my_vertices.len();
+
+    // Global id -> local index (my_vertices is sorted ascending).
+    let local_of = |v: VertexId| -> Option<usize> {
+        my_vertices.binary_search(&v).ok()
+    };
+
+    let values: Vec<Mutex<P::Value>> = my_vertices
+        .iter()
+        .map(|&v| Mutex::new(program.init(v, graph)))
+        .collect();
+    let halted: Vec<AtomicBool> = (0..n_local).map(|_| AtomicBool::new(false)).collect();
+    let mut inbox: Vec<Vec<P::Msg>> = (0..n_local).map(|_| Vec::new()).collect();
+
+    let mut per_superstep = Vec::new();
+    let mut superstep = 1usize;
+    // Adaptive parallelism (see gopher::engine): skip thread fan-out when
+    // the previous superstep's compute was negligible.
+    const PARALLEL_THRESHOLD_SECONDS: f64 = 200e-6;
+    let mut last_compute = f64::INFINITY;
+
+    loop {
+        let active: Vec<usize> = (0..n_local)
+            .filter(|&i| !halted[i].load(Ordering::Relaxed) || !inbox[i].is_empty())
+            .collect();
+        let cur_inbox: Vec<Vec<P::Msg>> =
+            std::mem::replace(&mut inbox, (0..n_local).map(|_| Vec::new()).collect());
+
+        // ---- compute phase: chunked vertex-level parallelism
+        let cores_now = if last_compute < PARALLEL_THRESHOLD_SECONDS {
+            1
+        } else {
+            cfg.cores_per_worker
+        };
+        let n_chunks = cores_now.max(1).min(active.len().max(1));
+        let chunk_size = active.len().div_ceil(n_chunks.max(1)).max(1);
+        let chunk_out: Vec<Mutex<Vec<(VertexId, P::Msg)>>> =
+            (0..n_chunks).map(|_| Mutex::new(Vec::new())).collect();
+        let t0 = Instant::now();
+        let unit_times = pool::run_indexed(cores_now, n_chunks, |c| {
+            let lo = (c * chunk_size).min(active.len());
+            let hi = ((c + 1) * chunk_size).min(active.len());
+            let mut local_out = Vec::new();
+            for &i in &active[lo..hi] {
+                let v = my_vertices[i];
+                let mut ctx = VertexContext::new(superstep, v, graph);
+                let mut value = values[i].lock().unwrap();
+                program.compute(&mut value, &mut ctx, &cur_inbox[i]);
+                halted[i].store(ctx.halted, Ordering::Relaxed);
+                local_out.append(&mut ctx.out);
+            }
+            *chunk_out[c].lock().unwrap() = local_out;
+        })?;
+        let compute_seconds = t0.elapsed().as_secs_f64();
+        last_compute = compute_seconds;
+
+        // ---- route phase
+        let mut sent_msgs = 0u64;
+        let mut sent_bytes = 0u64;
+        let mut pending: Vec<Vec<(VertexId, P::Msg)>> = (0..k).map(|_| Vec::new()).collect();
+        for cell in &chunk_out {
+            for (target, m) in cell.lock().unwrap().drain(..) {
+                sent_msgs += 1;
+                pending[parts.of(target) as usize].push((target, m));
+            }
+        }
+        // Combiner: fold same-target messages per destination worker.
+        for buf in pending.iter_mut() {
+            if buf.len() < 2 {
+                continue;
+            }
+            buf.sort_by_key(|(v, _)| *v);
+            let mut folded: Vec<(VertexId, P::Msg)> = Vec::with_capacity(buf.len());
+            for (v, m) in buf.drain(..) {
+                match folded.last_mut() {
+                    Some((lv, lm)) if *lv == v => match program.combine(lm, &m) {
+                        Some(c) => *lm = c,
+                        None => folded.push((v, m)),
+                    },
+                    _ => folded.push((v, m)),
+                }
+            }
+            *buf = folded;
+        }
+        for (p, buf) in pending.iter_mut().enumerate() {
+            if buf.is_empty() {
+                continue;
+            }
+            if p as u32 == me {
+                for (v, m) in buf.drain(..) {
+                    let i = local_of(v)
+                        .with_context(|| format!("message for non-local vertex {v}"))?;
+                    inbox[i].push(m);
+                }
+            } else {
+                let frame = encode_batch(buf);
+                sent_bytes += frame.len() as u64;
+                fabric.send(p as u32, frame)?;
+                buf.clear();
+            }
+        }
+        for p in 0..k as u32 {
+            if p != me {
+                fabric.send(p, vec![TAG_EOS])?;
+            }
+        }
+
+        // ---- drain phase
+        let mut eos_seen = 0usize;
+        while eos_seen < k - 1 {
+            let frame = fabric.recv()?;
+            match frame.first() {
+                Some(&TAG_EOS) => eos_seen += 1,
+                Some(&TAG_BATCH) => {
+                    for (v, m) in decode_batch::<P::Msg>(&frame)? {
+                        let i = local_of(v)
+                            .with_context(|| format!("misrouted message for vertex {v}"))?;
+                        inbox[i].push(m);
+                    }
+                }
+                other => bail!("bad frame tag {other:?}"),
+            }
+        }
+
+        per_superstep.push(WorkerSuperstep {
+            compute_seconds,
+            unit_times,
+            messages: sent_msgs,
+            bytes: sent_bytes,
+            active_units: active.len() as u64,
+        });
+
+        let quiescent = (0..n_local)
+            .all(|i| halted[i].load(Ordering::Relaxed) && inbox[i].is_empty());
+        sync_tx
+            .send(WorkerSync { sent: sent_msgs, quiescent, failed: false })
+            .map_err(|_| anyhow::anyhow!("manager hung up"))?;
+        match cmd_rx.recv().context("manager command channel closed")? {
+            ManagerCmd::Resume => superstep += 1,
+            ManagerCmd::Terminate => break,
+        }
+        if superstep > cfg.max_supersteps {
+            bail!("exceeded max_supersteps={}", cfg.max_supersteps);
+        }
+    }
+
+    let values = my_vertices
+        .iter()
+        .zip(values)
+        .map(|(&v, cell)| (v, cell.into_inner().unwrap()))
+        .collect();
+    Ok(WorkerOutput { values, per_superstep })
+}
+
+/// Run a vertex-centric program over `graph` scattered by `parts`.
+pub fn run<P: VertexProgram>(
+    graph: &Graph,
+    parts: &Partitioning,
+    program: &P,
+    cfg: &PregelConfig,
+) -> Result<VertexRunResult<P::Value>> {
+    let k = parts.k();
+    anyhow::ensure!(k >= 1, "no partitions");
+    anyhow::ensure!(
+        parts.num_vertices() == graph.num_vertices(),
+        "partitioning does not match graph"
+    );
+
+    let (sync_tx, sync_rx) = channel::<WorkerSync>();
+    let mut cmd_txs = Vec::with_capacity(k);
+    let mut cmd_rxs = Vec::with_capacity(k);
+    for _ in 0..k {
+        let (tx, rx) = channel();
+        cmd_txs.push(tx);
+        cmd_rxs.push(rx);
+    }
+
+    enum Fabrics {
+        InProc(Vec<transport::InProcFabric>),
+        Tcp(Vec<transport::TcpFabric>),
+    }
+    let fabrics = match cfg.fabric {
+        FabricKind::InProc => Fabrics::InProc(transport::in_proc(k)),
+        FabricKind::Tcp => Fabrics::Tcp(transport::tcp(k)?),
+    };
+
+    let outputs: Result<(Vec<WorkerOutput<P::Value>>, Vec<f64>)> =
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(k);
+            enum FabricAny {
+                InProc(transport::InProcFabric),
+                Tcp(transport::TcpFabric),
+            }
+            let mut spawn_worker = |p: usize, fab: FabricAny| {
+                let sync_tx = sync_tx.clone();
+                let cmd_rx = cmd_rxs.remove(0);
+                let my_vertices = parts.vertices_of(p as u32);
+                handles.push(scope.spawn(move || match fab {
+                    FabricAny::InProc(f) => worker_body(
+                        program, f, cfg, graph, parts, my_vertices, sync_tx, cmd_rx,
+                    ),
+                    FabricAny::Tcp(f) => worker_body(
+                        program, f, cfg, graph, parts, my_vertices, sync_tx, cmd_rx,
+                    ),
+                }));
+            };
+            match fabrics {
+                Fabrics::InProc(fs) => {
+                    for (p, f) in fs.into_iter().enumerate() {
+                        spawn_worker(p, FabricAny::InProc(f));
+                    }
+                }
+                Fabrics::Tcp(fs) => {
+                    for (p, f) in fs.into_iter().enumerate() {
+                        spawn_worker(p, FabricAny::Tcp(f));
+                    }
+                }
+            }
+            drop(sync_tx);
+
+            let mut walls = Vec::new();
+            let mut t_step = Instant::now();
+            loop {
+                let mut sent_total = 0u64;
+                let mut all_quiescent = true;
+                let mut any_failed = false;
+                let mut seen = 0usize;
+                while seen < k {
+                    match sync_rx.recv() {
+                        Ok(s) => {
+                            sent_total += s.sent;
+                            all_quiescent &= s.quiescent;
+                            any_failed |= s.failed;
+                            seen += 1;
+                        }
+                        Err(_) => {
+                            for h in handles {
+                                match h.join() {
+                                    Ok(Ok(_)) => {}
+                                    Ok(Err(e)) => return Err(e),
+                                    Err(p) => std::panic::resume_unwind(p),
+                                }
+                            }
+                            bail!("worker exited mid-superstep without error");
+                        }
+                    }
+                }
+                walls.push(t_step.elapsed().as_secs_f64());
+                let done = (all_quiescent && sent_total == 0) || any_failed;
+                for tx in &cmd_txs {
+                    let _ = tx.send(if done { ManagerCmd::Terminate } else { ManagerCmd::Resume });
+                }
+                if done {
+                    break;
+                }
+                t_step = Instant::now();
+            }
+
+            let mut outs = Vec::with_capacity(k);
+            for h in handles {
+                match h.join() {
+                    Ok(Ok(o)) => outs.push(o),
+                    Ok(Err(e)) => return Err(e),
+                    Err(p) => std::panic::resume_unwind(p),
+                }
+            }
+            Ok((outs, walls))
+        });
+    let (outputs, walls) = outputs?;
+
+    // Merge values back into global id order.
+    let mut values: Vec<Option<P::Value>> = vec![None; graph.num_vertices()];
+    for out in &outputs {
+        for (v, val) in &out.values {
+            values[*v as usize] = Some(val.clone());
+        }
+    }
+    let values: Vec<P::Value> = values
+        .into_iter()
+        .map(|v| v.expect("every vertex owned by exactly one worker"))
+        .collect();
+
+    let mut metrics = JobMetrics {
+        load_seconds: cfg.load_seconds,
+        ..Default::default()
+    };
+    for s in 0..walls.len() {
+        let mut sm = SuperstepMetrics::default();
+        for out in &outputs {
+            let ws = &out.per_superstep[s];
+            sm.partition_compute_seconds.push(ws.compute_seconds);
+            sm.unit_times.push(ws.unit_times.clone());
+            sm.messages += ws.messages;
+            sm.bytes += ws.bytes;
+            sm.active_units += ws.active_units;
+        }
+        sm.wall_seconds = walls[s];
+        metrics.compute_seconds += sm.wall_seconds;
+        metrics.supersteps.push(sm);
+    }
+
+    Ok(VertexRunResult { values, metrics })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::partition::{HashPartitioner, Partitioner};
+
+    /// Max-value, vertex-centric (paper Algorithm 1).
+    struct MaxValue;
+    impl VertexProgram for MaxValue {
+        type Msg = f32;
+        type Value = f32;
+        fn init(&self, vertex: VertexId, _g: &Graph) -> f32 {
+            vertex as f32
+        }
+        fn compute(
+            &self,
+            value: &mut f32,
+            ctx: &mut VertexContext<'_, f32>,
+            msgs: &[f32],
+        ) {
+            let mut changed = ctx.superstep() == 1;
+            for &m in msgs {
+                if m > *value {
+                    *value = m;
+                    changed = true;
+                }
+            }
+            if changed {
+                ctx.send_to_all_undirected(*value);
+            } else {
+                ctx.vote_to_halt();
+            }
+        }
+        fn combine(&self, a: &f32, b: &f32) -> Option<f32> {
+            Some(a.max(*b))
+        }
+    }
+
+    #[test]
+    fn max_value_chain_takes_diameter_supersteps() {
+        let g = gen::chain(10);
+        let parts = HashPartitioner::default().partition(&g, 3);
+        let res = run(&g, &parts, &MaxValue, &PregelConfig::default()).unwrap();
+        assert!(res.values.iter().all(|&v| v == 9.0));
+        // Value must flow 9 hops: >= diameter supersteps (plus settle).
+        assert!(res.metrics.num_supersteps() >= 9, "steps={}", res.metrics.num_supersteps());
+    }
+
+    #[test]
+    fn vertex_and_values_order() {
+        let g = gen::star(7);
+        let parts = HashPartitioner::default().partition(&g, 2);
+        let res = run(&g, &parts, &MaxValue, &PregelConfig::default()).unwrap();
+        assert_eq!(res.values.len(), 7);
+        assert!(res.values.iter().all(|&v| v == 6.0));
+    }
+
+    #[test]
+    fn combiner_reduces_message_count() {
+        struct NoCombine;
+        impl VertexProgram for NoCombine {
+            type Msg = f32;
+            type Value = f32;
+            fn init(&self, v: VertexId, _g: &Graph) -> f32 {
+                v as f32
+            }
+            fn compute(&self, value: &mut f32, ctx: &mut VertexContext<'_, f32>, msgs: &[f32]) {
+                MaxValue.compute(value, ctx, msgs)
+            }
+        }
+        let g = gen::social(300, 4, 0.0, 5);
+        let parts = HashPartitioner::default().partition(&g, 2);
+        let with = run(&g, &parts, &MaxValue, &PregelConfig::default()).unwrap();
+        let without = run(&g, &parts, &NoCombine, &PregelConfig::default()).unwrap();
+        // Same answer…
+        assert_eq!(with.values, without.values);
+        // …fewer (or equal) bytes on the wire with the combiner.
+        assert!(with.metrics.total_bytes() <= without.metrics.total_bytes());
+    }
+
+    #[test]
+    fn tcp_fabric_matches_in_proc() {
+        let g = gen::grid(6, 6);
+        let parts = HashPartitioner::default().partition(&g, 3);
+        let a = run(&g, &parts, &MaxValue, &PregelConfig::default()).unwrap();
+        let cfg_tcp = PregelConfig { fabric: FabricKind::Tcp, ..Default::default() };
+        let b = run(&g, &parts, &MaxValue, &cfg_tcp).unwrap();
+        assert_eq!(a.values, b.values);
+    }
+
+    #[test]
+    fn single_worker() {
+        let g = gen::chain(6);
+        let parts = crate::partition::Partitioning::new(1, vec![0; 6]);
+        let res = run(&g, &parts, &MaxValue, &PregelConfig::default()).unwrap();
+        assert!(res.values.iter().all(|&v| v == 5.0));
+    }
+
+    #[test]
+    fn metrics_superstep_structure() {
+        let g = gen::chain(8);
+        let parts = HashPartitioner::default().partition(&g, 2);
+        let res = run(&g, &parts, &MaxValue, &PregelConfig::default()).unwrap();
+        for sm in &res.metrics.supersteps {
+            assert_eq!(sm.partition_compute_seconds.len(), 2);
+        }
+        assert!(res.metrics.total_messages() > 0);
+    }
+}

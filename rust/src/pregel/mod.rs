@@ -1,0 +1,17 @@
+//! Vertex-centric BSP baseline — the Apache Giraph stand-in.
+//!
+//! Same manager/worker BSP skeleton as Gopher (shared fabric, EOS
+//! protocol, halting rule) but the unit of computation is a single
+//! vertex: `compute(value, vertex-context, messages)`, messages address
+//! vertices, and vertices are scattered by hash (the Giraph default the
+//! paper compares against). Supports optional Giraph-style combiners.
+//!
+//! This engine exists so every benchmark can run the *same algorithm* in
+//! both models on the same simulated cluster and reproduce the paper's
+//! Gopher-vs-Giraph comparisons (Figs 4a/4c).
+
+pub mod api;
+pub mod engine;
+
+pub use api::{VertexContext, VertexProgram};
+pub use engine::{run as run_vertex, PregelConfig, VertexRunResult};

@@ -1,0 +1,419 @@
+//! The XLA kernel engine: manifest-driven executable ladder + service
+//! thread (see module docs in `runtime/mod.rs` for the thread model).
+//!
+//! Artifact contract (shared with `python/compile/aot.py` and
+//! `python/compile/model.py`):
+//!
+//! * `pagerank_step(adj[n,n], ranks[n], out_deg[n], scalars[2]) -> ranks[n]`
+//! * `pagerank_local(adj[n,n], out_deg[n], scalars[2]) -> ranks[n]`
+//!   (`iters` compiled in; manifest column 4)
+//! * `sssp_relax(weights[n,n], dist[n]) -> dist[n]` (`sweeps` compiled in)
+//! * `cc_flood(adj[n,n], labels[n]) -> labels[n]` (`sweeps` compiled in)
+//!
+//! All matrices are row-major in-link oriented (`A[i][j] = edge j->i`);
+//! padding rows are marked by `out_deg = -1` / `+inf` weights / zero
+//! adjacency respectively (see model.py docstring).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Sender};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+pub const KERNEL_PAGERANK_STEP: &str = "pagerank_step";
+pub const KERNEL_PAGERANK_LOCAL: &str = "pagerank_local";
+pub const KERNEL_SSSP_RELAX: &str = "sssp_relax";
+pub const KERNEL_CC_FLOOD: &str = "cc_flood";
+
+/// One manifest entry.
+#[derive(Clone, Debug)]
+struct ManifestEntry {
+    kernel: String,
+    file: String,
+    rung: usize,
+    loops: usize,
+}
+
+fn parse_manifest(dir: &Path) -> Result<Vec<ManifestEntry>> {
+    let path = dir.join("manifest.txt");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("read {} (run `make artifacts`)", path.display()))?;
+    let mut entries = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        if parts.len() != 4 {
+            bail!("manifest line {}: expected 4 fields, got {}", i + 1, parts.len());
+        }
+        entries.push(ManifestEntry {
+            kernel: parts[0].to_string(),
+            file: parts[1].to_string(),
+            rung: parts[2].parse().context("manifest rung")?,
+            loops: parts[3].parse().context("manifest loops")?,
+        });
+    }
+    if entries.is_empty() {
+        bail!("manifest at {} is empty", path.display());
+    }
+    Ok(entries)
+}
+
+// ------------------------------------------------------------- service
+
+struct Arg {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+/// A call argument: fresh host data, or a previously registered constant
+/// block (the per-sub-graph adjacency, which never changes between
+/// supersteps — caching it server-side removes an O(n_pad^2) copy +
+/// literal build from every kernel call; see EXPERIMENTS.md §Perf).
+enum CallArg {
+    Fresh(Arg),
+    Cached(u64),
+}
+
+enum Request {
+    Call {
+        kernel: String,
+        rung: usize,
+        args: Vec<CallArg>,
+        reply: Sender<Result<Vec<f32>>>,
+    },
+    Register {
+        arg: Arg,
+        reply: Sender<Result<u64>>,
+    },
+}
+
+fn service_loop(
+    dir: PathBuf,
+    entries: Vec<ManifestEntry>,
+    init_tx: Sender<Result<()>>,
+    req_rx: std::sync::mpsc::Receiver<Request>,
+) {
+    // Own the (!Send) PJRT client on this thread.
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            let _ = init_tx.send(Err(anyhow!("PJRT CPU client: {e}")));
+            return;
+        }
+    };
+    let _ = init_tx.send(Ok(()));
+
+    let index: BTreeMap<(String, usize), ManifestEntry> = entries
+        .into_iter()
+        .map(|e| ((e.kernel.clone(), e.rung), e))
+        .collect();
+    // Lazy executable cache: compile each (kernel, rung) on first use.
+    let mut exes: BTreeMap<(String, usize), xla::PjRtLoadedExecutable> = BTreeMap::new();
+    // Registered constant blocks (adjacency matrices etc.).
+    let mut blocks: BTreeMap<u64, xla::Literal> = BTreeMap::new();
+    let mut next_block: u64 = 1;
+
+    fn build_literal(a: &Arg) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&a.data);
+        if a.dims.len() == 1 {
+            Ok(lit)
+        } else {
+            lit.reshape(&a.dims).map_err(|e| anyhow!("reshape: {e}"))
+        }
+    }
+
+    while let Ok(req) = req_rx.recv() {
+        match req {
+            Request::Register { arg, reply } => {
+                let result = build_literal(&arg).map(|lit| {
+                    let id = next_block;
+                    next_block += 1;
+                    blocks.insert(id, lit);
+                    id
+                });
+                let _ = reply.send(result);
+            }
+            Request::Call { kernel, rung, args, reply } => {
+                let key = (kernel.clone(), rung);
+                let result = (|| -> Result<Vec<f32>> {
+                    if !exes.contains_key(&key) {
+                        let entry = index.get(&key).ok_or_else(|| {
+                            anyhow!("no artifact for {kernel} rung {rung}")
+                        })?;
+                        let path = dir.join(&entry.file);
+                        let proto = xla::HloModuleProto::from_text_file(
+                            path.to_str().context("artifact path not UTF-8")?,
+                        )
+                        .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+                        let comp = xla::XlaComputation::from_proto(&proto);
+                        let exe = client
+                            .compile(&comp)
+                            .map_err(|e| anyhow!("compile {}: {e}", path.display()))?;
+                        exes.insert(key.clone(), exe);
+                    }
+                    let exe = &exes[&key];
+                    // Resolve args: fresh literals are built here; cached
+                    // blocks are borrowed from the registry.
+                    let mut fresh: Vec<xla::Literal> = Vec::new();
+                    for a in &args {
+                        if let CallArg::Fresh(arg) = a {
+                            fresh.push(build_literal(arg)?);
+                        }
+                    }
+                    let mut fresh_it = fresh.iter();
+                    let literals: Vec<&xla::Literal> = args
+                        .iter()
+                        .map(|a| -> Result<&xla::Literal> {
+                            match a {
+                                CallArg::Fresh(_) => Ok(fresh_it.next().unwrap()),
+                                CallArg::Cached(id) => blocks
+                                    .get(id)
+                                    .ok_or_else(|| anyhow!("unknown block {id}")),
+                            }
+                        })
+                        .collect::<Result<_>>()?;
+                    let out = exe
+                        .execute::<&xla::Literal>(&literals)
+                        .map_err(|e| anyhow!("execute {kernel}: {e}"))?[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| anyhow!("to_literal: {e}"))?;
+                    // aot.py lowers with return_tuple=True: unwrap.
+                    let inner =
+                        out.to_tuple1().map_err(|e| anyhow!("to_tuple1: {e}"))?;
+                    inner.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))
+                })();
+                // Receiver gone = caller aborted; nothing to do.
+                let _ = reply.send(result);
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------- engine
+
+/// Shared handle to the XLA kernel service. `Send + Sync`; clone the
+/// `Arc<XlaEngine>` into every Gopher worker.
+pub struct XlaEngine {
+    tx: Sender<Request>,
+    rungs: Vec<usize>,
+    loops: BTreeMap<String, usize>,
+}
+
+impl XlaEngine {
+    /// Load the artifact manifest and start the service thread. Fails
+    /// fast if the manifest is missing or the PJRT client cannot start.
+    pub fn load(artifacts_dir: &Path) -> Result<XlaEngine> {
+        let entries = parse_manifest(artifacts_dir)?;
+        let mut rungs: Vec<usize> = entries.iter().map(|e| e.rung).collect();
+        rungs.sort_unstable();
+        rungs.dedup();
+        let loops = entries
+            .iter()
+            .map(|e| (e.kernel.clone(), e.loops))
+            .collect();
+
+        let (init_tx, init_rx) = channel();
+        let (req_tx, req_rx) = channel::<Request>();
+        let dir = artifacts_dir.to_path_buf();
+        std::thread::Builder::new()
+            .name("xla-service".to_string())
+            .spawn(move || service_loop(dir, entries, init_tx, req_rx))
+            .context("spawn xla service thread")?;
+        init_rx
+            .recv()
+            .context("xla service thread died during init")??;
+        Ok(XlaEngine { tx: req_tx, rungs, loops })
+    }
+
+    /// Load from the default artifacts directory.
+    pub fn load_default() -> Result<XlaEngine> {
+        Self::load(&super::default_artifacts_dir())
+    }
+
+    /// Smallest compiled block size >= `n`.
+    pub fn rung_for(&self, n: usize) -> Option<usize> {
+        self.rungs.iter().copied().find(|&r| r >= n)
+    }
+
+    /// Largest compiled block size.
+    pub fn max_rung(&self) -> usize {
+        *self.rungs.last().unwrap_or(&0)
+    }
+
+    /// Compile-time inner-loop count for a kernel (e.g. sweeps per
+    /// `sssp_relax` call).
+    pub fn loops(&self, kernel: &str) -> usize {
+        self.loops.get(kernel).copied().unwrap_or(1)
+    }
+
+    fn call(&self, kernel: &str, rung: usize, args: Vec<CallArg>) -> Result<Vec<f32>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Call { kernel: kernel.to_string(), rung, args, reply })
+            .map_err(|_| anyhow!("xla service thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("xla service dropped request"))?
+    }
+
+    /// Register a constant block (e.g. a sub-graph's padded dense
+    /// adjacency) with the service; the returned id can replace the
+    /// matrix argument in `*_cached` calls, eliminating the per-call
+    /// O(n_pad^2) copy + literal construction.
+    pub fn register_block(&self, n_pad: usize, matrix: &[f32]) -> Result<u64> {
+        if matrix.len() != n_pad * n_pad {
+            bail!("matrix has {} elements, want {}", matrix.len(), n_pad * n_pad);
+        }
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Register {
+                arg: Arg {
+                    data: matrix.to_vec(),
+                    dims: vec![n_pad as i64, n_pad as i64],
+                },
+                reply,
+            })
+            .map_err(|_| anyhow!("xla service thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("xla service dropped request"))?
+    }
+
+    /// `pagerank_step` with a pre-registered adjacency block.
+    pub fn pagerank_step_cached(
+        &self,
+        n_pad: usize,
+        block: u64,
+        ranks: &[f32],
+        out_deg: &[f32],
+        base: f32,
+        alpha: f32,
+    ) -> Result<Vec<f32>> {
+        if ranks.len() != n_pad || out_deg.len() != n_pad {
+            bail!("vector length mismatch for rung {n_pad}");
+        }
+        self.call(
+            KERNEL_PAGERANK_STEP,
+            n_pad,
+            vec![
+                CallArg::Cached(block),
+                CallArg::Fresh(Arg { data: ranks.to_vec(), dims: vec![n_pad as i64] }),
+                CallArg::Fresh(Arg { data: out_deg.to_vec(), dims: vec![n_pad as i64] }),
+                CallArg::Fresh(Arg { data: vec![base, alpha], dims: vec![2] }),
+            ],
+        )
+    }
+
+    /// One damped PageRank iteration over a padded dense block.
+    /// `out_deg` must mark padding rows with `-1.0`.
+    pub fn pagerank_step(
+        &self,
+        n_pad: usize,
+        adj: &[f32],
+        ranks: &[f32],
+        out_deg: &[f32],
+        base: f32,
+        alpha: f32,
+    ) -> Result<Vec<f32>> {
+        self.check_block(n_pad, adj, &[ranks, out_deg])?;
+        self.call(
+            KERNEL_PAGERANK_STEP,
+            n_pad,
+            vec![
+                CallArg::Fresh(Arg { data: adj.to_vec(), dims: vec![n_pad as i64, n_pad as i64] }),
+                CallArg::Fresh(Arg { data: ranks.to_vec(), dims: vec![n_pad as i64] }),
+                CallArg::Fresh(Arg { data: out_deg.to_vec(), dims: vec![n_pad as i64] }),
+                CallArg::Fresh(Arg { data: vec![base, alpha], dims: vec![2] }),
+            ],
+        )
+    }
+
+    /// BlockRank local phase: `loops("pagerank_local")` iterations from a
+    /// uniform start. `base` must be `(1-alpha)/n_total`.
+    pub fn pagerank_local(
+        &self,
+        n_pad: usize,
+        adj: &[f32],
+        out_deg: &[f32],
+        base: f32,
+        alpha: f32,
+    ) -> Result<Vec<f32>> {
+        self.check_block(n_pad, adj, &[out_deg])?;
+        self.call(
+            KERNEL_PAGERANK_LOCAL,
+            n_pad,
+            vec![
+                CallArg::Fresh(Arg { data: adj.to_vec(), dims: vec![n_pad as i64, n_pad as i64] }),
+                CallArg::Fresh(Arg { data: out_deg.to_vec(), dims: vec![n_pad as i64] }),
+                CallArg::Fresh(Arg { data: vec![base, alpha], dims: vec![2] }),
+            ],
+        )
+    }
+
+    /// `loops("sssp_relax")` min-plus sweeps over a padded weight block.
+    pub fn sssp_relax(&self, n_pad: usize, weights: &[f32], dist: &[f32]) -> Result<Vec<f32>> {
+        self.check_block(n_pad, weights, &[dist])?;
+        self.call(
+            KERNEL_SSSP_RELAX,
+            n_pad,
+            vec![
+                CallArg::Fresh(Arg { data: weights.to_vec(), dims: vec![n_pad as i64, n_pad as i64] }),
+                CallArg::Fresh(Arg { data: dist.to_vec(), dims: vec![n_pad as i64] }),
+            ],
+        )
+    }
+
+    /// `loops("cc_flood")` max-label flood steps over a padded block.
+    pub fn cc_flood(&self, n_pad: usize, adj: &[f32], labels: &[f32]) -> Result<Vec<f32>> {
+        self.check_block(n_pad, adj, &[labels])?;
+        self.call(
+            KERNEL_CC_FLOOD,
+            n_pad,
+            vec![
+                CallArg::Fresh(Arg { data: adj.to_vec(), dims: vec![n_pad as i64, n_pad as i64] }),
+                CallArg::Fresh(Arg { data: labels.to_vec(), dims: vec![n_pad as i64] }),
+            ],
+        )
+    }
+
+    fn check_block(&self, n_pad: usize, matrix: &[f32], vecs: &[&[f32]]) -> Result<()> {
+        if !self.rungs.contains(&n_pad) {
+            bail!("block size {n_pad} is not a compiled rung {:?}", self.rungs);
+        }
+        if matrix.len() != n_pad * n_pad {
+            bail!("matrix has {} elements, want {}", matrix.len(), n_pad * n_pad);
+        }
+        for v in vecs {
+            if v.len() != n_pad {
+                bail!("vector has {} elements, want {n_pad}", v.len());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parse_rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("gf_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "bad line\n").unwrap();
+        assert!(parse_manifest(&dir).is_err());
+        std::fs::write(dir.join("manifest.txt"), "").unwrap();
+        assert!(parse_manifest(&dir).is_err());
+        std::fs::write(dir.join("manifest.txt"), "pagerank_step f.hlo.txt 64 1\n").unwrap();
+        let e = parse_manifest(&dir).unwrap();
+        assert_eq!(e.len(), 1);
+        assert_eq!(e[0].rung, 64);
+    }
+
+    #[test]
+    fn missing_dir_fails_fast() {
+        assert!(XlaEngine::load(Path::new("/nonexistent/artifacts")).is_err());
+    }
+
+    // Engine-vs-scalar numeric tests live in rust/tests/xla_runtime.rs
+    // (they need `make artifacts` to have run).
+}

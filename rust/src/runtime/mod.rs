@@ -1,0 +1,26 @@
+//! XLA/PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from Gopher's hot path.
+//!
+//! Python never runs here — the artifacts are compiled once at build
+//! time (`make artifacts`) and the Rust binary is self-contained.
+//!
+//! Thread-model note: the `xla` crate's `PjRtClient` is `Rc`-based
+//! (!Send), while Gopher workers are OS threads. [`XlaEngine`] therefore
+//! runs a dedicated *service thread* that owns the client and the
+//! compiled-executable cache; workers talk to it through a channel. XLA's
+//! CPU backend parallelises inside a single execute call, so one service
+//! thread does not serialise the math — and it mirrors the deployment
+//! the paper's §7 envisions (one accelerator context per host).
+
+pub mod engine;
+
+pub use engine::{XlaEngine, KERNEL_CC_FLOOD, KERNEL_PAGERANK_LOCAL, KERNEL_PAGERANK_STEP, KERNEL_SSSP_RELAX};
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: `$GOFFISH_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("GOFFISH_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

@@ -1,0 +1,68 @@
+//! Spinning-disk cost model (SATA HDD of the paper's testbed).
+
+/// Sequential-read oriented disk model: each file costs one seek plus
+/// streaming at the sequential bandwidth — exactly the trade GoFS's
+//  slice layout optimises ("balance the disk latency (# of unique files
+//  read) against sequential bytes read", paper §4.3).
+#[derive(Clone, Copy, Debug)]
+pub struct DiskModel {
+    /// Average seek + rotational latency per file open (seconds).
+    pub seek_seconds: f64,
+    /// Sequential read bandwidth (bytes/second).
+    pub seq_bytes_per_sec: f64,
+    /// Per-record CPU cost of materialising storage bytes into memory
+    /// objects (seconds/record) — deserialization, allocation. This is
+    /// what blows up Giraph's load on the TR mega-hub (paper §6.3).
+    pub per_record_seconds: f64,
+}
+
+impl Default for DiskModel {
+    /// 1 TB SATA HDD circa 2013: ~10 ms seek, ~100 MB/s sequential.
+    fn default() -> Self {
+        Self {
+            seek_seconds: 0.010,
+            seq_bytes_per_sec: 100e6,
+            per_record_seconds: 2e-7,
+        }
+    }
+}
+
+impl DiskModel {
+    /// Time to read `files` files totalling `bytes`, materialising
+    /// `records` objects.
+    pub fn read_seconds(&self, files: u64, bytes: u64, records: u64) -> f64 {
+        self.seek_seconds * files as f64
+            + bytes as f64 / self.seq_bytes_per_sec
+            + self.per_record_seconds * records as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_time_components() {
+        let d = DiskModel::default();
+        // 1 file, 100 MB, no records: 10ms + 1s.
+        let t = d.read_seconds(1, 100_000_000, 0);
+        assert!((t - 1.01).abs() < 1e-9, "{t}");
+    }
+
+    #[test]
+    fn many_small_files_pay_seeks() {
+        let d = DiskModel::default();
+        let few = d.read_seconds(1, 1_000_000, 0);
+        let many = d.read_seconds(1000, 1_000_000, 0);
+        assert!(many > few * 100.0);
+    }
+
+    #[test]
+    fn record_overhead_dominates_hub() {
+        // The TR mega-hub: millions of edge records on one vertex.
+        let d = DiskModel::default();
+        let normal = d.read_seconds(1, 10_000_000, 100_000);
+        let hub = d.read_seconds(1, 10_000_000, 50_000_000);
+        assert!(hub > normal * 10.0, "hub={hub} normal={normal}");
+    }
+}

@@ -1,0 +1,68 @@
+//! Gigabit-Ethernet cost model (the paper's interconnect).
+
+/// Latency + bandwidth network model for batched message transfer.
+#[derive(Clone, Copy, Debug)]
+pub struct NetModel {
+    /// One-way latency per batch/frame (seconds).
+    pub latency_seconds: f64,
+    /// Usable bandwidth (bytes/second).
+    pub bytes_per_sec: f64,
+    /// Per-message CPU cost (serialise + route + deliver).
+    pub per_message_seconds: f64,
+}
+
+impl Default for NetModel {
+    /// GbE on commodity switches: ~100 µs effective latency, ~117 MB/s
+    /// usable, ~0.2 µs per message of CPU.
+    fn default() -> Self {
+        Self {
+            latency_seconds: 100e-6,
+            bytes_per_sec: 117e6,
+            per_message_seconds: 2e-7,
+        }
+    }
+}
+
+impl NetModel {
+    /// Time for one host to ship `bytes` in `batches` frames carrying
+    /// `messages` messages.
+    pub fn transfer_seconds(&self, batches: u64, bytes: u64, messages: u64) -> f64 {
+        self.latency_seconds * batches as f64
+            + bytes as f64 / self.bytes_per_sec
+            + self.per_message_seconds * messages as f64
+    }
+
+    /// Barrier synchronisation cost for `k` workers + manager (gather
+    /// syncs, scatter resumes — two sequentialised rounds of control
+    /// messages, paper §4.2).
+    pub fn barrier_seconds(&self, k: usize) -> f64 {
+        2.0 * self.latency_seconds * (k as f64).max(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bandwidth_term() {
+        let n = NetModel::default();
+        let t = n.transfer_seconds(1, 117_000_000, 0);
+        assert!((t - 1.0001).abs() < 1e-3, "{t}");
+    }
+
+    #[test]
+    fn message_cpu_matters_for_chatty_workloads() {
+        let n = NetModel::default();
+        // Same bytes, 10M tiny messages vs 100 big ones.
+        let chatty = n.transfer_seconds(1, 80_000_000, 10_000_000);
+        let batched = n.transfer_seconds(1, 80_000_000, 100);
+        assert!(chatty > batched * 2.0);
+    }
+
+    #[test]
+    fn barrier_scales_with_workers() {
+        let n = NetModel::default();
+        assert!(n.barrier_seconds(12) > n.barrier_seconds(2));
+    }
+}

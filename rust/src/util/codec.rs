@@ -1,0 +1,319 @@
+//! Compact binary codec for GoFS slice files (the Kryo stand-in).
+//!
+//! LEB128 varints, zigzag for signed values, delta encoding for sorted id
+//! runs, length-prefixed strings and f32/f64 little-endian. The framing is
+//! deliberately tiny: GoFS is write-once-read-many, so there is no need
+//! for schema evolution machinery — a magic + version header per file is
+//! enough (see `gofs::slice`).
+
+use anyhow::{bail, Result};
+
+/// Append-only encoder over a byte buffer.
+#[derive(Default)]
+pub struct Encoder {
+    buf: Vec<u8>,
+}
+
+impl Encoder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { buf: Vec::with_capacity(cap) }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// LEB128 unsigned varint (1..10 bytes).
+    pub fn put_varint(&mut self, mut v: u64) {
+        loop {
+            let byte = (v & 0x7f) as u8;
+            v >>= 7;
+            if v == 0 {
+                self.buf.push(byte);
+                return;
+            }
+            self.buf.push(byte | 0x80);
+        }
+    }
+
+    /// Zigzag-encoded signed varint.
+    pub fn put_signed(&mut self, v: i64) {
+        self.put_varint(((v << 1) ^ (v >> 63)) as u64);
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.put_varint(v.len() as u64);
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn put_str(&mut self, v: &str) {
+        self.put_bytes(v.as_bytes());
+    }
+
+    /// Delta-encode a *sorted* run of ids: first absolute, then gaps.
+    /// Falls back to an error in debug builds if unsorted.
+    pub fn put_sorted_ids(&mut self, ids: &[u64]) {
+        self.put_varint(ids.len() as u64);
+        let mut prev = 0u64;
+        for (i, &id) in ids.iter().enumerate() {
+            debug_assert!(i == 0 || id >= prev, "ids must be sorted");
+            self.put_varint(if i == 0 { id } else { id - prev });
+            prev = id;
+        }
+    }
+
+    /// Unsorted id list (plain varints).
+    pub fn put_ids(&mut self, ids: &[u64]) {
+        self.put_varint(ids.len() as u64);
+        for &id in ids {
+            self.put_varint(id);
+        }
+    }
+}
+
+/// Cursor-based decoder over a byte slice.
+pub struct Decoder<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Decoder<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_at_end(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8> {
+        if self.pos >= self.buf.len() {
+            bail!("codec: unexpected end of buffer at {}", self.pos);
+        }
+        let v = self.buf[self.pos];
+        self.pos += 1;
+        Ok(v)
+    }
+
+    pub fn get_varint(&mut self) -> Result<u64> {
+        let mut v = 0u64;
+        let mut shift = 0u32;
+        loop {
+            let byte = self.get_u8()?;
+            if shift >= 64 {
+                bail!("codec: varint overflow");
+            }
+            // The 10th byte may only carry the final bit.
+            if shift == 63 && (byte & 0x7e) != 0 {
+                bail!("codec: varint overflow");
+            }
+            v |= ((byte & 0x7f) as u64) << shift;
+            if byte & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+        }
+    }
+
+    pub fn get_signed(&mut self) -> Result<i64> {
+        let v = self.get_varint()?;
+        Ok(((v >> 1) as i64) ^ -((v & 1) as i64))
+    }
+
+    pub fn get_f32(&mut self) -> Result<f32> {
+        let bytes = self.get_raw(4)?;
+        Ok(f32::from_le_bytes(bytes.try_into().unwrap()))
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64> {
+        let bytes = self.get_raw(8)?;
+        Ok(f64::from_le_bytes(bytes.try_into().unwrap()))
+    }
+
+    fn get_raw(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!("codec: need {} bytes, have {}", n, self.remaining());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.get_varint()? as usize;
+        self.get_raw(n)
+    }
+
+    pub fn get_str(&mut self) -> Result<&'a str> {
+        Ok(std::str::from_utf8(self.get_bytes()?)?)
+    }
+
+    pub fn get_sorted_ids(&mut self) -> Result<Vec<u64>> {
+        let n = self.get_varint()? as usize;
+        if n > self.remaining() {
+            // Each id takes >= 1 byte; cheap corruption guard before alloc.
+            bail!("codec: id run length {} exceeds buffer", n);
+        }
+        let mut ids = Vec::with_capacity(n);
+        let mut prev = 0u64;
+        for i in 0..n {
+            let d = self.get_varint()?;
+            prev = if i == 0 { d } else { prev.checked_add(d).ok_or_else(|| anyhow::anyhow!("codec: id overflow"))? };
+            ids.push(prev);
+        }
+        Ok(ids)
+    }
+
+    pub fn get_ids(&mut self) -> Result<Vec<u64>> {
+        let n = self.get_varint()? as usize;
+        if n > self.remaining() {
+            bail!("codec: id list length {} exceeds buffer", n);
+        }
+        let mut ids = Vec::with_capacity(n);
+        for _ in 0..n {
+            ids.push(self.get_varint()?);
+        }
+        Ok(ids)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn varint_round_trip_edges() {
+        let vals = [0u64, 1, 127, 128, 16383, 16384, u32::MAX as u64, u64::MAX];
+        let mut e = Encoder::new();
+        for &v in &vals {
+            e.put_varint(v);
+        }
+        let bytes = e.into_bytes();
+        let mut d = Decoder::new(&bytes);
+        for &v in &vals {
+            assert_eq!(d.get_varint().unwrap(), v);
+        }
+        assert!(d.is_at_end());
+    }
+
+    #[test]
+    fn signed_round_trip() {
+        let vals = [0i64, 1, -1, 63, -64, i64::MAX, i64::MIN];
+        let mut e = Encoder::new();
+        for &v in &vals {
+            e.put_signed(v);
+        }
+        let bytes = e.into_bytes();
+        let mut d = Decoder::new(&bytes);
+        for &v in &vals {
+            assert_eq!(d.get_signed().unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn floats_and_strings_round_trip() {
+        let mut e = Encoder::new();
+        e.put_f32(3.5);
+        e.put_f64(-1.25e300);
+        e.put_str("goffish");
+        e.put_str("");
+        let bytes = e.into_bytes();
+        let mut d = Decoder::new(&bytes);
+        assert_eq!(d.get_f32().unwrap(), 3.5);
+        assert_eq!(d.get_f64().unwrap(), -1.25e300);
+        assert_eq!(d.get_str().unwrap(), "goffish");
+        assert_eq!(d.get_str().unwrap(), "");
+    }
+
+    #[test]
+    fn sorted_ids_delta_round_trip() {
+        let ids = vec![5u64, 5, 9, 100, 100_000, u64::MAX / 2];
+        let mut e = Encoder::new();
+        e.put_sorted_ids(&ids);
+        let bytes = e.into_bytes();
+        let mut d = Decoder::new(&bytes);
+        assert_eq!(d.get_sorted_ids().unwrap(), ids);
+    }
+
+    #[test]
+    fn truncated_buffer_errors() {
+        let mut e = Encoder::new();
+        e.put_str("hello world");
+        let bytes = e.into_bytes();
+        for cut in 0..bytes.len() {
+            let mut d = Decoder::new(&bytes[..cut]);
+            assert!(d.get_str().is_err(), "cut={cut} should fail");
+        }
+    }
+
+    #[test]
+    fn corrupted_length_detected_before_alloc() {
+        let mut e = Encoder::new();
+        e.put_varint(u64::MAX); // absurd element count
+        let bytes = e.into_bytes();
+        let mut d = Decoder::new(&bytes);
+        assert!(d.get_sorted_ids().is_err());
+    }
+
+    #[test]
+    fn varint_overflow_rejected() {
+        // 11 continuation bytes can't be a valid u64.
+        let bytes = [0xffu8; 11];
+        let mut d = Decoder::new(&bytes);
+        assert!(d.get_varint().is_err());
+    }
+
+    #[test]
+    fn fuzz_round_trip_mixed() {
+        let mut rng = Rng::new(0xC0DEC);
+        for _ in 0..200 {
+            let n = rng.index(50);
+            let vals: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            let svals: Vec<i64> =
+                (0..n).map(|_| rng.next_u64() as i64).collect();
+            let mut e = Encoder::new();
+            for (&u, &s) in vals.iter().zip(&svals) {
+                e.put_varint(u);
+                e.put_signed(s);
+                e.put_f32(u as f32);
+            }
+            let bytes = e.into_bytes();
+            let mut d = Decoder::new(&bytes);
+            for (&u, &s) in vals.iter().zip(&svals) {
+                assert_eq!(d.get_varint().unwrap(), u);
+                assert_eq!(d.get_signed().unwrap(), s);
+                assert_eq!(d.get_f32().unwrap(), u as f32);
+            }
+            assert!(d.is_at_end());
+        }
+    }
+}

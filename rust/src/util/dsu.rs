@@ -1,0 +1,148 @@
+//! Union-find (disjoint-set union) with path halving + union by size.
+//!
+//! Used for sub-graph discovery in GoFS partitions (`gofs::subgraph`) and
+//! as the ground-truth component oracle in tests and `graph::props`.
+
+/// Disjoint-set over `0..n`.
+#[derive(Clone, Debug)]
+pub struct Dsu {
+    parent: Vec<u32>,
+    size: Vec<u32>,
+    components: usize,
+}
+
+impl Dsu {
+    pub fn new(n: usize) -> Self {
+        Self {
+            parent: (0..n as u32).collect(),
+            size: vec![1; n],
+            components: n,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.parent.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parent.is_empty()
+    }
+
+    /// Number of disjoint components.
+    pub fn components(&self) -> usize {
+        self.components
+    }
+
+    /// Find with path halving.
+    pub fn find(&mut self, mut x: u32) -> u32 {
+        while self.parent[x as usize] != x {
+            let gp = self.parent[self.parent[x as usize] as usize];
+            self.parent[x as usize] = gp;
+            x = gp;
+        }
+        x
+    }
+
+    /// Union by size; returns true if the two were in different sets.
+    pub fn union(&mut self, a: u32, b: u32) -> bool {
+        let (mut ra, mut rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return false;
+        }
+        if self.size[ra as usize] < self.size[rb as usize] {
+            std::mem::swap(&mut ra, &mut rb);
+        }
+        self.parent[rb as usize] = ra;
+        self.size[ra as usize] += self.size[rb as usize];
+        self.components -= 1;
+        true
+    }
+
+    pub fn same(&mut self, a: u32, b: u32) -> bool {
+        self.find(a) == self.find(b)
+    }
+
+    /// Size of the component containing `x`.
+    pub fn component_size(&mut self, x: u32) -> usize {
+        let r = self.find(x);
+        self.size[r as usize] as usize
+    }
+
+    /// Dense relabeling: maps each vertex to a component index in
+    /// `0..components()`, in order of first appearance.
+    pub fn labels(&mut self) -> Vec<u32> {
+        let n = self.parent.len();
+        let mut label = vec![u32::MAX; n];
+        let mut next = 0u32;
+        let mut out = Vec::with_capacity(n);
+        for v in 0..n as u32 {
+            let r = self.find(v) as usize;
+            if label[r] == u32::MAX {
+                label[r] = next;
+                next += 1;
+            }
+            out.push(label[r]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn basic_union_find() {
+        let mut d = Dsu::new(5);
+        assert_eq!(d.components(), 5);
+        assert!(d.union(0, 1));
+        assert!(d.union(1, 2));
+        assert!(!d.union(0, 2));
+        assert_eq!(d.components(), 3);
+        assert!(d.same(0, 2));
+        assert!(!d.same(0, 3));
+        assert_eq!(d.component_size(1), 3);
+    }
+
+    #[test]
+    fn labels_are_dense_and_consistent() {
+        let mut d = Dsu::new(6);
+        d.union(0, 3);
+        d.union(4, 5);
+        let labels = d.labels();
+        assert_eq!(labels.len(), 6);
+        assert_eq!(labels[0], labels[3]);
+        assert_eq!(labels[4], labels[5]);
+        assert_ne!(labels[0], labels[4]);
+        let max = *labels.iter().max().unwrap() as usize;
+        assert_eq!(max + 1, d.components());
+    }
+
+    #[test]
+    fn chain_union_single_component() {
+        let n = 1000;
+        let mut d = Dsu::new(n);
+        for i in 0..n - 1 {
+            d.union(i as u32, i as u32 + 1);
+        }
+        assert_eq!(d.components(), 1);
+        assert_eq!(d.component_size(0), n);
+    }
+
+    #[test]
+    fn random_unions_match_component_count_invariant() {
+        let mut rng = Rng::new(99);
+        let n = 200;
+        let mut d = Dsu::new(n);
+        let mut merges = 0;
+        for _ in 0..500 {
+            let a = rng.index(n) as u32;
+            let b = rng.index(n) as u32;
+            if d.union(a, b) {
+                merges += 1;
+            }
+        }
+        assert_eq!(d.components(), n - merges);
+    }
+}

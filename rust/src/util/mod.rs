@@ -1,0 +1,11 @@
+//! Shared substrates: PRNG, binary codec, union-find, thread pool, stats.
+//!
+//! The offline vendor set has no `rand`/`serde`/`rayon`, so these are
+//! implemented in-crate (see DESIGN.md §3). Everything here is dependency
+//! free and unit-tested in place.
+
+pub mod rng;
+pub mod codec;
+pub mod dsu;
+pub mod pool;
+pub mod stats;

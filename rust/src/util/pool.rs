@@ -1,0 +1,172 @@
+//! Core-sized worker thread pool for per-sub-graph compute dispatch.
+//!
+//! The paper's Gopher worker "uses a thread pool optimized for multi-core
+//! CPUs to invoke the Compute on each sub-graph" (§4.2). This pool runs a
+//! batch of indexed jobs and blocks until all complete (scoped fork-join —
+//! exactly the superstep shape), capturing per-job wall time so the
+//! metrics layer can build the Fig-5 straggler distributions.
+
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+/// Number of jobs below which we skip thread spawn entirely.
+const INLINE_THRESHOLD: usize = 2;
+
+fn panic_msg(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+/// Run `jobs` indexed tasks on up to `cores` threads; returns per-job
+/// elapsed seconds. `f(i)` must be safe to call concurrently for
+/// distinct `i`. A panicking job is converted into an `Err` (after all
+/// other jobs finish), so BSP workers can abort cleanly rather than
+/// deadlock the superstep barrier.
+pub fn run_indexed<F>(cores: usize, jobs: usize, f: F) -> Result<Vec<f64>>
+where
+    F: Fn(usize) + Sync,
+{
+    let mut times = vec![0.0f64; jobs];
+    if jobs == 0 {
+        return Ok(times);
+    }
+    let threads = cores.max(1).min(jobs);
+    if threads == 1 || jobs < INLINE_THRESHOLD {
+        for (i, t) in times.iter_mut().enumerate() {
+            let t0 = Instant::now();
+            if let Err(p) = std::panic::catch_unwind(AssertUnwindSafe(|| f(i))) {
+                bail!("compute job {i} panicked: {}", panic_msg(p));
+            }
+            *t = t0.elapsed().as_secs_f64();
+        }
+        return Ok(times);
+    }
+
+    let next = Arc::new(AtomicUsize::new(0));
+    let first_panic: Mutex<Option<(usize, String)>> = Mutex::new(None);
+    // Unsafe-free sharing of the times buffer: each worker writes only the
+    // slot it claimed, communicated back via a channel.
+    let (tx, rx) = std::sync::mpsc::channel::<(usize, f64)>();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let next = Arc::clone(&next);
+            let tx = tx.clone();
+            let f = &f;
+            let first_panic = &first_panic;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= jobs {
+                    return;
+                }
+                let t0 = Instant::now();
+                match std::panic::catch_unwind(AssertUnwindSafe(|| f(i))) {
+                    Ok(()) => {
+                        let _ = tx.send((i, t0.elapsed().as_secs_f64()));
+                    }
+                    Err(p) => {
+                        let mut slot = first_panic.lock().unwrap();
+                        if slot.is_none() {
+                            *slot = Some((i, panic_msg(p)));
+                        }
+                    }
+                }
+            });
+        }
+        drop(tx);
+        for (i, dt) in rx {
+            times[i] = dt;
+        }
+    });
+    if let Some((i, msg)) = first_panic.into_inner().unwrap() {
+        bail!("compute job {i} panicked: {msg}");
+    }
+    Ok(times)
+}
+
+/// Detected hardware parallelism (fallback 4).
+pub fn num_cores() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn all_jobs_run_exactly_once() {
+        let counter = AtomicU64::new(0);
+        let hits: Vec<AtomicU64> = (0..100).map(|_| AtomicU64::new(0)).collect();
+        let times = run_indexed(4, 100, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+            counter.fetch_add(1, Ordering::SeqCst);
+        })
+        .unwrap();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+        assert_eq!(times.len(), 100);
+        assert!(times.iter().all(|&t| t >= 0.0));
+    }
+
+    #[test]
+    fn zero_jobs_ok() {
+        let times = run_indexed(4, 0, |_| panic!("should not run")).unwrap();
+        assert!(times.is_empty());
+    }
+
+    #[test]
+    fn single_core_sequential() {
+        let order = std::sync::Mutex::new(Vec::new());
+        run_indexed(1, 10, |i| order.lock().unwrap().push(i)).unwrap();
+        assert_eq!(*order.lock().unwrap(), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn more_threads_than_jobs() {
+        let counter = AtomicU64::new(0);
+        run_indexed(64, 3, |_| {
+            counter.fetch_add(1, Ordering::SeqCst);
+        })
+        .unwrap();
+        assert_eq!(counter.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn times_capture_work() {
+        let times = run_indexed(2, 4, |_| {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        })
+        .unwrap();
+        assert!(times.iter().all(|&t| t >= 0.004), "{times:?}");
+    }
+
+    #[test]
+    fn panicking_job_becomes_error() {
+        let err = run_indexed(4, 8, |i| {
+            if i == 5 {
+                panic!("boom {i}");
+            }
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("boom 5"), "{err}");
+        // Sequential path too.
+        let err = run_indexed(1, 2, |i| {
+            if i == 1 {
+                panic!("seq");
+            }
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("panicked"));
+    }
+}

@@ -1,0 +1,141 @@
+//! Summary statistics for metrics and the Fig-5 box-whisker harness.
+
+/// Five-number summary (+ mean/count) of a sample, as used by the paper's
+/// Fig. 5 box-and-whiskers plots of per-sub-graph compute times.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub min: f64,
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub max: f64,
+    pub mean: f64,
+}
+
+impl Summary {
+    /// Compute from an unsorted sample; returns `None` for empty input.
+    pub fn from(sample: &[f64]) -> Option<Summary> {
+        if sample.is_empty() {
+            return None;
+        }
+        let mut s: Vec<f64> = sample.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = s.iter().sum::<f64>() / s.len() as f64;
+        Some(Summary {
+            count: s.len(),
+            min: s[0],
+            q1: quantile(&s, 0.25),
+            median: quantile(&s, 0.5),
+            q3: quantile(&s, 0.75),
+            max: s[s.len() - 1],
+            mean,
+        })
+    }
+
+    /// Render as the row format used by the bench harnesses.
+    pub fn row(&self) -> String {
+        format!(
+            "n={:<6} min={:<10.6} q1={:<10.6} med={:<10.6} q3={:<10.6} max={:<10.6} mean={:.6}",
+            self.count, self.min, self.q1, self.median, self.q3, self.max, self.mean
+        )
+    }
+}
+
+/// Linear-interpolated quantile of a *sorted* sample, `q` in `[0, 1]`.
+pub fn quantile(sorted: &[f64], q: f64) -> f64 {
+    debug_assert!(!sorted.is_empty());
+    debug_assert!((0.0..=1.0).contains(&q));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Median of an unsorted sample (convenience for the bench harness).
+pub fn median(sample: &[f64]) -> f64 {
+    let mut s = sample.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile(&s, 0.5)
+}
+
+/// Pearson correlation of two equal-length samples (used to check the
+/// paper's R^2=0.9999 diameter-vs-speedup claim in bench_fig4a).
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut vx = 0.0;
+    let mut vy = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        cov += (x - mx) * (y - my);
+        vx += (x - mx) * (x - mx);
+        vy += (y - my) * (y - my);
+    }
+    if vx == 0.0 || vy == 0.0 {
+        return 0.0;
+    }
+    cov / (vx * vy).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_known_sample() {
+        let s = Summary::from(&[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.q1, 2.0);
+        assert_eq!(s.q3, 4.0);
+        assert_eq!(s.mean, 3.0);
+    }
+
+    #[test]
+    fn summary_empty_is_none() {
+        assert!(Summary::from(&[]).is_none());
+    }
+
+    #[test]
+    fn summary_single_element() {
+        let s = Summary::from(&[7.5]).unwrap();
+        assert_eq!(s.min, 7.5);
+        assert_eq!(s.q1, 7.5);
+        assert_eq!(s.max, 7.5);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let s = [0.0, 10.0];
+        assert_eq!(quantile(&s, 0.5), 5.0);
+        assert_eq!(quantile(&s, 0.25), 2.5);
+    }
+
+    #[test]
+    fn median_unsorted() {
+        assert_eq!(median(&[9.0, 1.0, 5.0]), 5.0);
+        assert_eq!(median(&[4.0, 1.0, 3.0, 2.0]), 2.5);
+    }
+
+    #[test]
+    fn pearson_perfect_correlation() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        let yneg = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&xs, &yneg) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_constant_is_zero() {
+        assert_eq!(pearson(&[1.0, 1.0, 1.0], &[1.0, 2.0, 3.0]), 0.0);
+    }
+}

@@ -1,0 +1,133 @@
+//! Gopher-vs-Pregel result parity on randomized graphs: both engines
+//! must compute identical answers for every algorithm (the paper's
+//! comparison is only meaningful because the *answers* agree).
+
+use std::collections::BTreeMap;
+
+use goffish::algos::bfs::{BfsSg, BfsVx};
+use goffish::algos::cc::{CcSg, CcVx};
+use goffish::algos::pagerank::{PageRankSg, PageRankVx, RankKernel};
+use goffish::algos::sssp::{SsspSg, SsspVx};
+use goffish::algos::{gather_subgraph_values, gather_vertex_values};
+use goffish::gofs::subgraph::discover;
+use goffish::gopher::{run, GopherConfig};
+use goffish::graph::gen;
+use goffish::graph::Graph;
+use goffish::partition::{HashPartitioner, MultilevelPartitioner, Partitioner};
+use goffish::pregel::{run_vertex, PregelConfig};
+use goffish::util::rng::Rng;
+
+fn random_graph(rng: &mut Rng) -> Graph {
+    match rng.index(4) {
+        0 => gen::road(8 + rng.index(10), 0.85 + rng.f64() * 0.14, 0.02, rng.next_u64()),
+        1 => gen::social(100 + rng.index(300), 2 + rng.index(4), rng.f64() * 0.1, rng.next_u64()),
+        2 => gen::trace(100 + rng.index(400), 10 + rng.index(20), rng.f64() * 0.4, rng.next_u64()),
+        _ => gen::erdos_renyi(50 + rng.index(150), 0.02, rng.chance(0.5), rng.next_u64()),
+    }
+}
+
+#[test]
+fn cc_parity_randomized() {
+    let mut rng = Rng::new(2024);
+    for case in 0..8 {
+        let g = random_graph(&mut rng);
+        let k = 2 + rng.index(3);
+        let parts = MultilevelPartitioner::new(case).partition(&g, k);
+        let dg = discover(&g, &parts).unwrap();
+        let sg = gather_subgraph_values(
+            &dg,
+            &run(&dg, &CcSg, &GopherConfig::default()).unwrap().states,
+        );
+        let vx = run_vertex(
+            &g,
+            &HashPartitioner::default().partition(&g, k),
+            &CcVx,
+            &PregelConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(sg, vx.values, "case {case}: CC labels diverge");
+    }
+}
+
+#[test]
+fn bfs_parity_randomized() {
+    let mut rng = Rng::new(777);
+    for case in 0..8 {
+        let g = random_graph(&mut rng);
+        let k = 2 + rng.index(3);
+        let source = rng.index(g.num_vertices()) as u32;
+        let parts = MultilevelPartitioner::new(case).partition(&g, k);
+        let dg = discover(&g, &parts).unwrap();
+        let sg = gather_vertex_values(
+            &dg,
+            &run(&dg, &BfsSg { source }, &GopherConfig::default())
+                .unwrap()
+                .states,
+        );
+        let vx = run_vertex(
+            &g,
+            &HashPartitioner::default().partition(&g, k),
+            &BfsVx { source },
+            &PregelConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(sg, vx.values, "case {case}: BFS levels diverge (src {source})");
+    }
+}
+
+#[test]
+fn sssp_parity_randomized() {
+    let mut rng = Rng::new(31337);
+    for case in 0..6 {
+        let g0 = random_graph(&mut rng);
+        let g = gen::with_random_weights(&g0, 0.5, 9.5, rng.next_u64());
+        let k = 2 + rng.index(3);
+        let source = rng.index(g.num_vertices()) as u32;
+        let parts = MultilevelPartitioner::new(case).partition(&g, k);
+        let dg = discover(&g, &parts).unwrap();
+        let res = run(&dg, &SsspSg { source }, &GopherConfig::default()).unwrap();
+        let states: BTreeMap<_, Vec<f32>> =
+            res.states.into_iter().map(|(id, s)| (id, s.dist)).collect();
+        let sg = gather_vertex_values(&dg, &states);
+        let vx = run_vertex(
+            &g,
+            &HashPartitioner::default().partition(&g, k),
+            &SsspVx { source },
+            &PregelConfig::default(),
+        )
+        .unwrap();
+        for (v, (&a, &b)) in sg.iter().zip(&vx.values).enumerate() {
+            let ok = (a.is_infinite() && b.is_infinite()) || (a - b).abs() < 1e-3;
+            assert!(ok, "case {case} vertex {v}: sg={a} vx={b}");
+        }
+    }
+}
+
+#[test]
+fn pagerank_parity_randomized() {
+    let mut rng = Rng::new(555);
+    for case in 0..5 {
+        let g = random_graph(&mut rng);
+        let k = 2 + rng.index(3);
+        let parts = MultilevelPartitioner::new(case).partition(&g, k);
+        let dg = discover(&g, &parts).unwrap();
+        let prog = PageRankSg { supersteps: 12, kernel: RankKernel::Scalar };
+        let res = run(&dg, &prog, &GopherConfig::default()).unwrap();
+        let states: BTreeMap<_, Vec<f32>> =
+            res.states.into_iter().map(|(id, s)| (id, s.ranks)).collect();
+        let sg = gather_vertex_values(&dg, &states);
+        let vx = run_vertex(
+            &g,
+            &HashPartitioner::default().partition(&g, k),
+            &PageRankVx { supersteps: 12 },
+            &PregelConfig::default(),
+        )
+        .unwrap();
+        for (v, (&a, &b)) in sg.iter().zip(&vx.values).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-5 + 1e-3 * b.abs(),
+                "case {case} vertex {v}: sg={a} vx={b}"
+            );
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! Failure injection: the system must fail *loudly and cleanly* — no
+//! deadlocks, no silent corruption — when programs panic, slices rot,
+//! or inputs are malformed.
+
+use std::path::PathBuf;
+
+use goffish::gofs::{subgraph::discover, Store, Subgraph};
+use goffish::gopher::{
+    run, run_on_store, GopherConfig, IncomingMessage, SubgraphContext, SubgraphProgram,
+};
+use goffish::graph::gen;
+use goffish::partition::{MultilevelPartitioner, Partitioner, Partitioning};
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join("goffish_failures")
+        .join(format!("{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Panics while computing one specific sub-graph at superstep 2.
+struct PanicsOnPartition(u32);
+
+impl SubgraphProgram for PanicsOnPartition {
+    type Msg = u32;
+    type State = ();
+
+    fn init(&self, _sg: &Subgraph) {}
+
+    fn compute(
+        &self,
+        _state: &mut (),
+        sg: &Subgraph,
+        ctx: &mut SubgraphContext<'_, u32>,
+        _msgs: &[IncomingMessage<u32>],
+    ) {
+        if ctx.superstep() == 2 && sg.id.partition == self.0 {
+            panic!("injected compute failure on partition {}", self.0);
+        }
+        // Keep everyone active so the panic partition is reached.
+        if ctx.superstep() < 3 {
+            ctx.send_to_all_neighbors(1);
+        } else {
+            ctx.vote_to_halt();
+        }
+    }
+}
+
+#[test]
+fn compute_panic_aborts_job_without_deadlock() {
+    let g = gen::road(12, 0.92, 0.02, 61);
+    let parts = MultilevelPartitioner::default().partition(&g, 3);
+    let dg = discover(&g, &parts).unwrap();
+    for victim in 0..3 {
+        let err = match run(&dg, &PanicsOnPartition(victim), &GopherConfig::default()) {
+            Err(e) => e,
+            Ok(_) => panic!("panicking program must fail the job"),
+        };
+        assert!(
+            err.to_string().contains("panicked"),
+            "error should mention the panic: {err:#}"
+        );
+    }
+}
+
+#[test]
+fn truncated_slice_fails_load() {
+    let g = gen::chain(30);
+    let parts = MultilevelPartitioner::default().partition(&g, 2);
+    let root = tmp("truncated");
+    let (store, _) = Store::create(&root, "c", &g, &parts).unwrap();
+    let slice = root.join("host0").join("sg_0.topo.slice");
+    let bytes = std::fs::read(&slice).unwrap();
+    std::fs::write(&slice, &bytes[..bytes.len() / 2]).unwrap();
+    let err = match run_on_store(&store, &goffish::algos::cc::CcSg, &GopherConfig::default()) {
+        Err(e) => e,
+        Ok(_) => panic!("truncated slice must fail the job"),
+    };
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("truncated") || msg.contains("checksum") || msg.contains("decode"),
+        "unexpected error: {msg}"
+    );
+}
+
+#[test]
+fn missing_slice_file_fails_load() {
+    let g = gen::chain(20);
+    let parts = MultilevelPartitioner::default().partition(&g, 2);
+    let root = tmp("missing");
+    let (store, _) = Store::create(&root, "c", &g, &parts).unwrap();
+    std::fs::remove_file(root.join("host1").join("sg_0.topo.slice")).unwrap();
+    assert!(store.load_partition(1).is_err());
+}
+
+#[test]
+fn meta_tampering_detected() {
+    let g = gen::chain(20);
+    let parts = MultilevelPartitioner::default().partition(&g, 2);
+    let root = tmp("meta");
+    let (_, _) = Store::create(&root, "c", &g, &parts).unwrap();
+    // Claim a partition count that doesn't match the subgraph list.
+    let meta = std::fs::read_to_string(root.join("meta.txt")).unwrap();
+    let tampered = meta.replace("partitions=2", "partitions=5");
+    std::fs::write(root.join("meta.txt"), tampered).unwrap();
+    assert!(Store::open(&root).is_err());
+}
+
+/// Sends to a sub-graph index that does not exist on the target host.
+struct MisroutedSender;
+
+impl SubgraphProgram for MisroutedSender {
+    type Msg = u32;
+    type State = ();
+
+    fn init(&self, _sg: &Subgraph) {}
+
+    fn compute(
+        &self,
+        _state: &mut (),
+        sg: &Subgraph,
+        ctx: &mut SubgraphContext<'_, u32>,
+        _msgs: &[IncomingMessage<u32>],
+    ) {
+        if ctx.superstep() == 1 && sg.id.partition == 0 && sg.id.index == 0 {
+            ctx.send_to_subgraph(
+                goffish::gofs::SubgraphId { partition: 1, index: 9999 },
+                42,
+            );
+        }
+        ctx.vote_to_halt();
+    }
+}
+
+#[test]
+fn message_to_unknown_subgraph_is_an_error() {
+    let g = gen::chain(10);
+    let parts = Partitioning::new(2, vec![0, 0, 0, 0, 0, 1, 1, 1, 1, 1]);
+    let dg = discover(&g, &parts).unwrap();
+    let err = match run(&dg, &MisroutedSender, &GopherConfig::default()) {
+        Err(e) => e,
+        Ok(_) => panic!("misrouted message must fail"),
+    };
+    assert!(
+        format!("{err:#}").contains("unknown sub-graph"),
+        "unexpected error: {err:#}"
+    );
+}
+
+#[test]
+fn empty_partition_is_harmless() {
+    // A partitioning where one host owns nothing must still run.
+    let g = gen::chain(6);
+    let parts = Partitioning::new(3, vec![0, 0, 0, 1, 1, 1]); // host 2 empty
+    let dg = discover(&g, &parts).unwrap();
+    let res = run(&dg, &goffish::algos::cc::CcSg, &GopherConfig::default()).unwrap();
+    assert_eq!(res.states.len(), dg.num_subgraphs());
+}
+
+#[test]
+fn zero_vertex_graph_runs() {
+    let g = goffish::graph::Graph::from_edges(0, &[], None, false).unwrap();
+    let parts = Partitioning::new(1, vec![]);
+    let dg = discover(&g, &parts).unwrap();
+    let res = run(&dg, &goffish::algos::cc::CcSg, &GopherConfig::default()).unwrap();
+    assert!(res.states.is_empty());
+}

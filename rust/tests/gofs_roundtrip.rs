@@ -1,0 +1,107 @@
+//! GoFS store round-trips under randomized graphs/partitionings, and the
+//! paper's structural invariants hold after a disk round-trip.
+
+use std::path::PathBuf;
+
+use goffish::gofs::{subgraph::discover, Store};
+use goffish::graph::{gen, props, Graph};
+use goffish::partition::{
+    HashPartitioner, MultilevelPartitioner, Partitioner, RangePartitioner,
+};
+use goffish::util::rng::Rng;
+
+fn tmp(name: &str, case: usize) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join("goffish_gofs_rt")
+        .join(format!("{name}_{case}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn random_graph(rng: &mut Rng) -> Graph {
+    match rng.index(3) {
+        0 => gen::road(6 + rng.index(12), 0.8 + rng.f64() * 0.19, 0.03, rng.next_u64()),
+        1 => gen::social(80 + rng.index(200), 2 + rng.index(3), rng.f64() * 0.15, rng.next_u64()),
+        _ => gen::erdos_renyi(40 + rng.index(100), 0.03, rng.chance(0.5), rng.next_u64()),
+    }
+}
+
+#[test]
+fn randomized_store_roundtrip_preserves_structure() {
+    let mut rng = Rng::new(0xF00D);
+    for case in 0..10 {
+        let weighted = rng.chance(0.5);
+        let g0 = random_graph(&mut rng);
+        let g = if weighted {
+            gen::with_random_weights(&g0, 0.1, 9.9, rng.next_u64())
+        } else {
+            g0
+        };
+        let k = 2 + rng.index(4);
+        let parts: Box<dyn Partitioner> = match rng.index(3) {
+            0 => Box::new(HashPartitioner::new(rng.next_u64())),
+            1 => Box::new(RangePartitioner),
+            _ => Box::new(MultilevelPartitioner::new(rng.next_u64())),
+        };
+        let p = parts.partition(&g, k);
+        let root = tmp("rand", case);
+        let (store, dg) = Store::create(&root, "g", &g, &p).unwrap();
+        let (dg2, stats) = store.load_all().unwrap();
+
+        // Invariant 1: vertex partition-of-partitions.
+        let mut seen = vec![0u32; g.num_vertices()];
+        for sg in dg2.subgraphs() {
+            for &v in &sg.vertices {
+                seen[v as usize] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "case {case}: vertex coverage");
+
+        // Invariant 2: edge conservation (local + remote_out = all).
+        let local_edges: usize = dg2.subgraphs().map(|s| s.local.num_edges()).sum();
+        let remote_edges: usize = dg2.subgraphs().map(|s| s.remote_out.len()).sum();
+        assert_eq!(local_edges + remote_edges, g.num_edges(), "case {case}: edges");
+
+        // Invariant 3: remote refs resolve to the correct sub-graph.
+        for sg in dg2.subgraphs() {
+            for r in &sg.remote_out {
+                let target = &dg2.partitions[r.partition as usize][r.subgraph as usize];
+                assert!(
+                    target.local_id(r.target_global).is_some(),
+                    "case {case}: remote ref {} not in {}",
+                    r.target_global,
+                    target.id
+                );
+            }
+        }
+
+        // Invariant 4: sub-graph count bounded by WCC structure: at least
+        // the number of WCCs overall, at most the vertex count.
+        assert!(dg2.num_subgraphs() >= props::wcc_count(&g));
+        assert!(dg2.num_subgraphs() <= g.num_vertices());
+
+        // Invariant 5: byte accounting matches files on disk.
+        assert_eq!(stats.files as usize, dg.num_subgraphs());
+        assert!(stats.bytes > 0);
+    }
+}
+
+#[test]
+fn slice_bytes_scale_with_subgraph_size() {
+    // GoFS co-design: per-slice cost tracks topology size, so loading a
+    // single attribute/topology slice touches only the needed bytes.
+    let g = gen::road(30, 0.95, 0.01, 5);
+    let parts = MultilevelPartitioner::default().partition(&g, 2);
+    let root = tmp("scale", 0);
+    let (store, dg) = Store::create(&root, "g", &g, &parts).unwrap();
+    let (_, stats) = store.load_all().unwrap();
+    // Compact codec: under ~12 bytes per vertex+edge at this density.
+    let entities = g.num_vertices() + g.num_edges() * 2;
+    assert!(
+        stats.bytes < (entities * 12) as u64,
+        "bytes={} entities={}",
+        stats.bytes,
+        entities
+    );
+    let _ = dg;
+}

@@ -1,0 +1,112 @@
+//! Full-pipeline integration: generate → partition → GoFS store →
+//! Gopher run from disk → verify results + metrics, over temp dirs.
+
+use std::path::PathBuf;
+
+use goffish::algos::cc::{count_components, CcSg};
+use goffish::algos::sssp::SsspSg;
+use goffish::algos::{gather_subgraph_values, gather_vertex_values};
+use goffish::gofs::Store;
+use goffish::gopher::{run_on_store, FabricKind, GopherConfig};
+use goffish::graph::{gen, props};
+use goffish::partition::{MultilevelPartitioner, Partitioner};
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join("goffish_integration")
+        .join(format!("{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn pipeline_cc_from_disk() {
+    let g = gen::road(24, 0.92, 0.015, 101);
+    let parts = MultilevelPartitioner::default().partition(&g, 4);
+    let root = tmp("cc");
+    let (store, dg) = Store::create(&root, "rn-analog", &g, &parts).unwrap();
+
+    // Run entirely from disk (data-local load) like a real deployment.
+    let res = run_on_store(&store, &CcSg, &GopherConfig::default()).unwrap();
+    assert!(res.metrics.load_bytes > 0);
+    assert!(res.metrics.load_files as usize == dg.num_subgraphs());
+    assert!(res.metrics.load_seconds > 0.0);
+
+    let labels = gather_subgraph_values(&dg, &res.states);
+    assert_eq!(count_components(&labels), props::wcc_count(&g));
+    for (u, v, _) in g.edges() {
+        assert_eq!(labels[u as usize], labels[v as usize]);
+    }
+}
+
+#[test]
+fn pipeline_sssp_from_disk_over_tcp() {
+    let g = gen::with_random_weights(&gen::road(16, 0.94, 0.02, 7), 1.0, 8.0, 9);
+    let parts = MultilevelPartitioner::default().partition(&g, 3);
+    let root = tmp("sssp_tcp");
+    let (store, dg) = Store::create(&root, "rn-w", &g, &parts).unwrap();
+    let cfg = GopherConfig { fabric: FabricKind::Tcp, ..Default::default() };
+    let res = run_on_store(&store, &SsspSg { source: 0 }, &cfg).unwrap();
+    let states: std::collections::BTreeMap<_, Vec<f32>> =
+        res.states.into_iter().map(|(id, s)| (id, s.dist)).collect();
+    let dist = gather_vertex_values(&dg, &states);
+    // Spot-check against BFS reachability (weights >= 1 so reachable
+    // vertices have finite distance, unreachable infinite).
+    let bfs = props::bfs_distances(&g, 0);
+    for v in 0..g.num_vertices() {
+        assert_eq!(
+            dist[v].is_finite(),
+            bfs[v] != u32::MAX,
+            "vertex {v}: dist={} bfs={}",
+            dist[v],
+            bfs[v]
+        );
+        if bfs[v] != u32::MAX {
+            assert!(dist[v] >= bfs[v] as f32 * 0.99, "distance below hop bound");
+        }
+    }
+}
+
+#[test]
+fn store_reopen_preserves_everything() {
+    let g = gen::trace(800, 25, 0.2, 3);
+    let parts = MultilevelPartitioner::default().partition(&g, 3);
+    let root = tmp("reopen");
+    let (_, dg) = Store::create(&root, "tr", &g, &parts).unwrap();
+
+    let store2 = Store::open(&root).unwrap();
+    let (dg2, _) = store2.load_all().unwrap();
+    assert_eq!(dg.num_subgraphs(), dg2.num_subgraphs());
+    assert_eq!(dg.num_global_vertices, dg2.num_global_vertices);
+    // Remote refs resolve identically.
+    for (a, b) in dg.subgraphs().zip(dg2.subgraphs()) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.vertices, b.vertices);
+        assert_eq!(a.remote_out.len(), b.remote_out.len());
+        assert_eq!(a.neighbor_subgraphs(), b.neighbor_subgraphs());
+    }
+    // Meta graphs match too.
+    assert_eq!(dg.meta_graph().num_edges(), dg2.meta_graph().num_edges());
+}
+
+#[test]
+fn metrics_account_supersteps_and_bytes() {
+    let g = gen::grid(20, 20);
+    let parts = MultilevelPartitioner::default().partition(&g, 4);
+    let root = tmp("metrics");
+    let (store, _) = Store::create(&root, "grid", &g, &parts).unwrap();
+    let res = run_on_store(&store, &CcSg, &GopherConfig::default()).unwrap();
+    let m = &res.metrics;
+    assert!(m.num_supersteps() >= 2);
+    assert!(m.total_messages() > 0);
+    assert!(m.total_bytes() > 0);
+    assert!(m.compute_seconds > 0.0);
+    for ss in &m.supersteps {
+        assert_eq!(ss.partition_compute_seconds.len(), 4);
+    }
+    // Superstep 1 runs every sub-graph.
+    assert_eq!(
+        m.supersteps[0].active_units,
+        store.meta().subgraph_counts.iter().map(|&c| c as u64).sum::<u64>()
+    );
+}

@@ -1,0 +1,217 @@
+//! Property tests over coordinator invariants (routing, discovery,
+//! partitioning, codec) using the in-crate `testing::prop` harness.
+
+use goffish::algos::cc::CcSg;
+use goffish::algos::gather_subgraph_values;
+use goffish::gofs::subgraph::discover;
+use goffish::gopher::{run, GopherConfig};
+use goffish::graph::{gen, props, Graph};
+use goffish::partition::{HashPartitioner, MultilevelPartitioner, Partitioner, Partitioning};
+use goffish::testing::prop;
+use goffish::util::codec::{Decoder, Encoder};
+use goffish::util::rng::Rng;
+
+fn arbitrary_graph(rng: &mut Rng) -> Graph {
+    let n = 2 + rng.index(120);
+    let density = rng.f64() * 0.1;
+    gen::erdos_renyi(n, density, rng.chance(0.5), rng.next_u64())
+}
+
+fn arbitrary_partitioning(rng: &mut Rng, g: &Graph) -> Partitioning {
+    let k = 1 + rng.index(5);
+    match rng.index(2) {
+        0 => HashPartitioner::new(rng.next_u64()).partition(g, k),
+        _ => MultilevelPartitioner::new(rng.next_u64()).partition(g, k),
+    }
+}
+
+#[test]
+fn prop_partitioners_cover_each_vertex_once() {
+    prop(
+        "partition covers vertices exactly once",
+        40,
+        |rng| {
+            let g = arbitrary_graph(rng);
+            let p = arbitrary_partitioning(rng, &g);
+            (g.num_vertices(), p)
+        },
+        |(n, p)| {
+            if p.num_vertices() != *n {
+                return Err(format!("covers {} of {n}", p.num_vertices()));
+            }
+            if p.sizes().iter().sum::<usize>() != *n {
+                return Err("sizes don't sum to n".into());
+            }
+            if p.assignment().iter().any(|&a| a as usize >= p.k()) {
+                return Err("assignment out of range".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_subgraph_discovery_is_partition_refinement() {
+    prop(
+        "sub-graphs refine partitions and preserve edges",
+        30,
+        |rng| {
+            let g = arbitrary_graph(rng);
+            let p = arbitrary_partitioning(rng, &g);
+            let dg = discover(&g, &p).unwrap();
+            (g, p, dg)
+        },
+        |(g, p, dg)| {
+            // Each sub-graph's vertices all belong to its partition.
+            for sg in dg.subgraphs() {
+                for &v in &sg.vertices {
+                    if p.of(v) != sg.id.partition {
+                        return Err(format!("vertex {v} outside partition"));
+                    }
+                }
+            }
+            // Edge conservation.
+            let local: usize = dg.subgraphs().map(|s| s.local.num_edges()).sum();
+            let remote: usize = dg.subgraphs().map(|s| s.remote_out.len()).sum();
+            if local + remote != g.num_edges() {
+                return Err(format!(
+                    "edges {} != local {local} + remote {remote}",
+                    g.num_edges()
+                ));
+            }
+            // Remote edges really cross partitions.
+            for sg in dg.subgraphs() {
+                for r in &sg.remote_out {
+                    if r.partition == sg.id.partition {
+                        return Err("remote edge within partition".into());
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cc_equals_ground_truth_wcc() {
+    prop(
+        "engine CC == union-find WCC",
+        15,
+        |rng| {
+            let g = arbitrary_graph(rng);
+            let p = arbitrary_partitioning(rng, &g);
+            (g, p)
+        },
+        |(g, p)| {
+            let dg = discover(g, p).map_err(|e| e.to_string())?;
+            let res =
+                run(&dg, &CcSg, &GopherConfig::default()).map_err(|e| e.to_string())?;
+            let labels = gather_subgraph_values(&dg, &res.states);
+            let truth = props::wcc_labels(g);
+            // Labels must induce exactly the same partition as truth.
+            for (u, v, _) in g.edges() {
+                if labels[u as usize] != labels[v as usize] {
+                    return Err(format!("edge ({u},{v}) split by labels"));
+                }
+            }
+            let distinct =
+                |xs: &[u32]| xs.iter().collect::<std::collections::HashSet<_>>().len();
+            if distinct(&labels) != distinct(&truth) {
+                return Err(format!(
+                    "{} components vs truth {}",
+                    distinct(&labels),
+                    distinct(&truth)
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_codec_round_trips_arbitrary_sequences() {
+    #[derive(Debug)]
+    struct Case {
+        ops: Vec<(u8, u64)>,
+    }
+    prop(
+        "codec round-trip",
+        200,
+        |rng| {
+            let n = rng.index(40);
+            Case {
+                ops: (0..n).map(|_| (rng.index(4) as u8, rng.next_u64())).collect(),
+            }
+        },
+        |case| {
+            let mut e = Encoder::new();
+            for &(kind, v) in &case.ops {
+                match kind {
+                    0 => e.put_varint(v),
+                    1 => e.put_signed(v as i64),
+                    2 => e.put_f64(f64::from_bits(v | 1)), // avoid NaN compares
+                    _ => e.put_str(&format!("{v:x}")),
+                }
+            }
+            let bytes = e.into_bytes();
+            let mut d = Decoder::new(&bytes);
+            for &(kind, v) in &case.ops {
+                match kind {
+                    0 => {
+                        if d.get_varint().map_err(|e| e.to_string())? != v {
+                            return Err("varint mismatch".into());
+                        }
+                    }
+                    1 => {
+                        if d.get_signed().map_err(|e| e.to_string())? != v as i64 {
+                            return Err("signed mismatch".into());
+                        }
+                    }
+                    2 => {
+                        let got = d.get_f64().map_err(|e| e.to_string())?;
+                        let want = f64::from_bits(v | 1);
+                        if got.to_bits() != want.to_bits() && !(got.is_nan() && want.is_nan()) {
+                            return Err("f64 mismatch".into());
+                        }
+                    }
+                    _ => {
+                        if d.get_str().map_err(|e| e.to_string())? != format!("{v:x}") {
+                            return Err("str mismatch".into());
+                        }
+                    }
+                }
+            }
+            if !d.is_at_end() {
+                return Err("trailing bytes".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_meta_graph_diameter_bounds_cc_supersteps() {
+    // The paper's superstep bound: traversal supersteps <= meta-diameter
+    // + constant. Verify on random road graphs.
+    prop(
+        "CC supersteps bounded by meta-diameter + 2",
+        8,
+        |rng| {
+            let g = gen::road(6 + rng.index(10), 0.85 + rng.f64() * 0.14, 0.02, rng.next_u64());
+            let p = MultilevelPartitioner::new(rng.next_u64()).partition(&g, 2 + rng.index(3));
+            (g, p)
+        },
+        |(g, p)| {
+            let dg = discover(g, p).map_err(|e| e.to_string())?;
+            let meta = dg.meta_graph();
+            let d = props::diameter_exact(&meta) as usize;
+            let res =
+                run(&dg, &CcSg, &GopherConfig::default()).map_err(|e| e.to_string())?;
+            let steps = res.metrics.num_supersteps();
+            if steps > d + 2 {
+                return Err(format!("steps={steps} meta-diameter={d}"));
+            }
+            Ok(())
+        },
+    );
+}
