@@ -91,7 +91,8 @@ fn main() -> anyhow::Result<()> {
                     (gres.metrics, vres.metrics, parity)
                 }
                 _ => {
-                    let prog = PageRankSg { supersteps: 30, kernel: RankKernel::Scalar };
+                    let prog =
+                        PageRankSg { supersteps: 30, kernel: RankKernel::Scalar, epsilon: None };
                     let gres = run_on_store(&store, &prog, &gcfg)?;
                     let vres =
                         run_vertex(g, &vparts, &PageRankVx { supersteps: 30 }, &vcfg)?;

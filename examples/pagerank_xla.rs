@@ -47,7 +47,7 @@ fn main() -> anyhow::Result<()> {
 
     // PageRank: scalar vs XLA kernels must agree.
     let ranks = |kernel: RankKernel| -> anyhow::Result<(Vec<f32>, f64)> {
-        let prog = PageRankSg { supersteps: 30, kernel };
+        let prog = PageRankSg { supersteps: 30, kernel, epsilon: None };
         let res = run(&dg, &prog, &GopherConfig::default())?;
         let wall = res.metrics.compute_seconds;
         let states: BTreeMap<_, Vec<f32>> =

@@ -128,7 +128,7 @@ fn ablation_xla_kernel() {
         ("xla", RankKernel::Xla(engine.clone())),
     ] {
         let m = measure(1, 3, || {
-            let prog = PageRankSg { supersteps: 10, kernel: kernel.clone() };
+            let prog = PageRankSg { supersteps: 10, kernel: kernel.clone(), epsilon: None };
             let res = run(&dg, &prog, &cfg).unwrap();
             assert_eq!(res.metrics.num_supersteps(), 10);
         });

@@ -100,7 +100,7 @@ fn main() {
                 _ => (
                     run_on_store(
                         &store,
-                        &PageRankSg { supersteps: 30, kernel: RankKernel::Scalar },
+                        &PageRankSg { supersteps: 30, kernel: RankKernel::Scalar, epsilon: None },
                         &gcfg,
                     )
                     .unwrap()

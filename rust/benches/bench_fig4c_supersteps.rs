@@ -53,10 +53,14 @@ fn main() {
                         .num_supersteps(),
                 ),
                 _ => (
-                    run(&dg, &PageRankSg { supersteps: 30, kernel: RankKernel::Scalar }, &gcfg)
-                        .unwrap()
-                        .metrics
-                        .num_supersteps(),
+                    run(
+                        &dg,
+                        &PageRankSg { supersteps: 30, kernel: RankKernel::Scalar, epsilon: None },
+                        &gcfg,
+                    )
+                    .unwrap()
+                    .metrics
+                    .num_supersteps(),
                     run_vertex(&g, &vparts, &PageRankVx { supersteps: 30 }, &vcfg)
                         .unwrap()
                         .metrics

@@ -20,7 +20,7 @@ fn main() {
         // Two supersteps: superstep 1 initialises; superstep 2 is the
         // first real rank update (the paper plots "the first superstep"
         // of actual PageRank compute).
-        let prog = PageRankSg { supersteps: 2, kernel: RankKernel::Scalar };
+        let prog = PageRankSg { supersteps: 2, kernel: RankKernel::Scalar, epsilon: None };
         let res = run(&dg, &prog, &gcfg).unwrap();
         let ss = &res.metrics.supersteps[1];
 

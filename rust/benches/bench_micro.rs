@@ -20,12 +20,31 @@ use goffish::partition::{MultilevelPartitioner, Partitioner};
 use goffish::util::codec::{Decoder, Encoder};
 use goffish::util::pool;
 
+/// `GOFFISH_BENCH_QUICK=1` shrinks warmups/reps to CI-smoke size — the
+/// harness still exercises every case, it just stops measuring
+/// carefully (the CI job only guards against perf-harness rot).
+fn quick() -> bool {
+    matches!(
+        std::env::var("GOFFISH_BENCH_QUICK").as_deref(),
+        Ok(v) if !v.is_empty() && v != "0"
+    )
+}
+
+fn reps(warmup: usize, reps: usize) -> (usize, usize) {
+    if quick() {
+        (0, 1)
+    } else {
+        (warmup, reps)
+    }
+}
+
 fn main() {
     let mut t = Table::new("L3 micro-benchmarks", &["case", "median", "note"]);
 
     // Codec throughput.
     let vals: Vec<u64> = (0..100_000u64).map(|i| i.wrapping_mul(0x9E3779B9)).collect();
-    let m = measure(2, 10, || {
+    let (w, r) = reps(2, 10);
+    let m = measure(w, r, || {
         let mut e = Encoder::with_capacity(vals.len() * 5);
         for &v in &vals {
             e.put_varint(v);
@@ -45,7 +64,8 @@ fn main() {
     // Discovery throughput.
     let g = goffish::graph::gen::rn_analog(common::scale(), 11);
     let parts = MultilevelPartitioner::default().partition(&g, common::K);
-    let m = measure(1, 5, || {
+    let (w, r) = reps(1, 5);
+    let m = measure(w, r, || {
         let dg = discover(&g, &parts).unwrap();
         assert!(dg.num_subgraphs() > 0);
     });
@@ -74,8 +94,9 @@ fn main() {
         }
     }
     let dg = discover(&g, &parts).unwrap();
-    let steps = 50;
-    let m = measure(1, 5, || {
+    let steps = if quick() { 5 } else { 50 };
+    let (w, r) = reps(1, 5);
+    let m = measure(w, r, || {
         let res = run(&dg, &NSteps(steps), &GopherConfig::default()).unwrap();
         assert_eq!(res.metrics.num_supersteps(), steps);
     });
@@ -89,8 +110,9 @@ fn main() {
     let lj = goffish::graph::gen::lj_analog(common::scale(), 33);
     let ljp = MultilevelPartitioner::default().partition(&lj, common::K);
     let ljdg = discover(&lj, &ljp).unwrap();
-    let m = measure(1, 3, || {
-        let prog = PageRankSg { supersteps: 5, kernel: RankKernel::Scalar };
+    let (w, r) = reps(1, 3);
+    let m = measure(w, r, || {
+        let prog = PageRankSg { supersteps: 5, kernel: RankKernel::Scalar, epsilon: None };
         run(&ljdg, &prog, &GopherConfig::default()).unwrap();
     });
     t.row(&[
@@ -100,7 +122,8 @@ fn main() {
     ]);
 
     // Pool dispatch overhead.
-    let m = measure(2, 10, || {
+    let (w, r) = reps(2, 10);
+    let m = measure(w, r, || {
         pool::run_indexed(4, 1000, |_| {}).unwrap();
     });
     t.row(&[

@@ -108,6 +108,11 @@ impl SubgraphProgram for BfsSg {
         }
         ctx.vote_to_halt();
     }
+
+    /// Candidate levels for the same target vertex fold by min.
+    fn combine(&self, a: &Self::Msg, b: &Self::Msg) -> Option<Self::Msg> {
+        Some(if a.1 <= b.1 { *a } else { *b })
+    }
 }
 
 /// Vertex-centric BFS.

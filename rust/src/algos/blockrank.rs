@@ -388,7 +388,7 @@ mod tests {
         // Classic 60-superstep PageRank as the fixpoint reference.
         let parts = MultilevelPartitioner::default().partition(&g, 3);
         let dg = discover(&g, &parts).unwrap();
-        let prog = PageRankSg { supersteps: 60, kernel: RankKernel::Scalar };
+        let prog = PageRankSg { supersteps: 60, kernel: RankKernel::Scalar, epsilon: None };
         let res = run(&dg, &prog, &GopherConfig::default()).unwrap();
         let states: BTreeMap<_, Vec<f32>> =
             res.states.into_iter().map(|(id, s)| (id, s.ranks)).collect();

@@ -49,6 +49,12 @@ impl SubgraphProgram for CcSg {
             ctx.vote_to_halt();
         }
     }
+
+    /// Labels bound for the same sub-graph mailbox fold by max — the
+    /// receiver's flood keeps the maximum anyway.
+    fn combine(&self, a: &u32, b: &u32) -> Option<u32> {
+        Some(*a.max(b))
+    }
 }
 
 /// Vertex-centric Connected Components (HCC).

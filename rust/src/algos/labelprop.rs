@@ -1,0 +1,283 @@
+//! Label Propagation (community detection) — the coordinator-layer
+//! showcase algorithm.
+//!
+//! Synchronous label propagation (Raghavan et al. 2007) over the
+//! undirected view: every vertex starts with its own label and each
+//! round adopts the most frequent label among its neighbours (smallest
+//! label wins ties; a vertex keeps its label when it is already among
+//! the most frequent — the standard oscillation damper). One Gopher
+//! superstep = one global round: local vertices read their neighbours'
+//! previous-round labels directly from sub-graph memory, and boundary
+//! labels travel as `(vertex, label)` messages, cached by the receiver —
+//! so the result is exactly partition-independent synchronous LP.
+//!
+//! **Termination is aggregator-driven**: every sub-graph reports its
+//! per-round change count into the global [`AGG_CHANGES`] sum; when the
+//! folded count hits zero, every sub-graph observes it on the same
+//! superstep and votes to halt — no fixed round count, no extra
+//! message round-trips. Synchronous LP can two-cycle on bipartite
+//! structures, so [`LabelPropSg::max_rounds`] caps the run.
+
+use std::collections::HashMap;
+
+use crate::coordinator::{AggOp, AggregatorSpec};
+use crate::gofs::Subgraph;
+use crate::gopher::{IncomingMessage, SubgraphContext, SubgraphProgram};
+
+/// Name of the global changed-labels-this-round aggregator (Sum).
+pub const AGG_CHANGES: &str = "lp_changes";
+
+/// Sub-graph centric synchronous label propagation.
+pub struct LabelPropSg {
+    /// Hard cap on propagation rounds (sync LP can oscillate).
+    pub max_rounds: usize,
+}
+
+impl Default for LabelPropSg {
+    fn default() -> Self {
+        Self { max_rounds: 50 }
+    }
+}
+
+/// Per-sub-graph LP state.
+pub struct LpState {
+    /// Current label per local vertex.
+    pub labels: Vec<u32>,
+    /// Last known label of each remote boundary neighbour (global id).
+    remote_labels: HashMap<u32, u32>,
+    /// Remote neighbours per local vertex (undirected view; repeats
+    /// model parallel edges, matching the local frequency counting).
+    remote_adj: Vec<Vec<u32>>,
+    /// Local vertices with at least one remote edge, with the sub-graphs
+    /// each must notify: (local vertex, neighbour sub-graph ids).
+    boundary: Vec<(u32, Vec<crate::gofs::SubgraphId>)>,
+}
+
+impl LabelPropSg {
+    /// One synchronous LP round over the local vertices; returns how
+    /// many labels changed and the per-vertex changed mask.
+    fn round(&self, st: &mut LpState, sg: &Subgraph) -> (u64, Vec<bool>) {
+        let n = sg.num_vertices();
+        let old = st.labels.clone();
+        let mut changes = 0u64;
+        let mut mask = vec![false; n];
+        let mut freq: HashMap<u32, u32> = HashMap::new();
+        for v in 0..n as u32 {
+            freq.clear();
+            for &nb in sg.local.out_neighbors(v) {
+                *freq.entry(old[nb as usize]).or_insert(0) += 1;
+            }
+            for &nb in sg.local.in_neighbors(v) {
+                *freq.entry(old[nb as usize]).or_insert(0) += 1;
+            }
+            for &gnb in &st.remote_adj[v as usize] {
+                if let Some(&l) = st.remote_labels.get(&gnb) {
+                    *freq.entry(l).or_insert(0) += 1;
+                }
+            }
+            if freq.is_empty() {
+                continue; // isolated vertex keeps its own label
+            }
+            let best_count = *freq.values().max().unwrap();
+            let current = old[v as usize];
+            // Keep the current label when it is already maximal.
+            if freq.get(&current).copied().unwrap_or(0) == best_count {
+                continue;
+            }
+            let best_label = freq
+                .iter()
+                .filter(|(_, &c)| c == best_count)
+                .map(|(&l, _)| l)
+                .min()
+                .unwrap();
+            st.labels[v as usize] = best_label;
+            mask[v as usize] = true;
+            changes += 1;
+        }
+        (changes, mask)
+    }
+}
+
+impl SubgraphProgram for LabelPropSg {
+    type Msg = (u32, u32); // (global vertex id, its new label)
+    type State = LpState;
+
+    fn init(&self, sg: &Subgraph) -> LpState {
+        let n = sg.num_vertices();
+        let mut remote_adj: Vec<Vec<u32>> = vec![Vec::new(); n];
+        let mut notify: Vec<Vec<crate::gofs::SubgraphId>> = vec![Vec::new(); n];
+        for r in sg.remote_out.iter().chain(&sg.remote_in) {
+            remote_adj[r.local as usize].push(r.target_global);
+            let id = crate::gofs::SubgraphId {
+                partition: r.partition,
+                index: r.subgraph,
+            };
+            let list = &mut notify[r.local as usize];
+            if !list.contains(&id) {
+                list.push(id);
+            }
+        }
+        let boundary = notify
+            .into_iter()
+            .enumerate()
+            .filter(|(_, ids)| !ids.is_empty())
+            .map(|(v, ids)| (v as u32, ids))
+            .collect();
+        LpState {
+            labels: sg.vertices.clone(),
+            remote_labels: HashMap::new(),
+            remote_adj,
+            boundary,
+        }
+    }
+
+    fn compute(
+        &self,
+        st: &mut LpState,
+        sg: &Subgraph,
+        ctx: &mut SubgraphContext<'_, Self::Msg>,
+        msgs: &[IncomingMessage<Self::Msg>],
+    ) {
+        for m in msgs {
+            let (gv, label) = m.payload;
+            st.remote_labels.insert(gv, label);
+        }
+        let s = ctx.superstep();
+
+        // Round 1 only establishes boundary labels; propagation starts
+        // once every sub-graph knows its remote neighbourhood.
+        let (changes, changed_mask) = if s == 1 {
+            (sg.num_vertices() as u64, None)
+        } else {
+            let (changes, mask) = self.round(st, sg);
+            (changes, Some(mask))
+        };
+
+        let slot = ctx.aggregator(AGG_CHANGES).expect("registered aggregator");
+        ctx.aggregate(slot, changes as f64);
+
+        // Globally converged: the previous round changed nothing
+        // anywhere (visible to every sub-graph at once), or we hit the
+        // oscillation cap.
+        let converged = s >= 3
+            && ctx
+                .aggregated(slot)
+                .is_some_and(|global_changes| global_changes == 0.0);
+        if converged || s > self.max_rounds {
+            ctx.vote_to_halt();
+            return;
+        }
+
+        // Ship boundary labels: everything at round 1, changes after.
+        for (v, ids) in &st.boundary {
+            let changed = match &changed_mask {
+                None => true,
+                Some(mask) => mask[*v as usize],
+            };
+            if changed {
+                let payload = (sg.vertices[*v as usize], st.labels[*v as usize]);
+                for id in ids {
+                    ctx.send_to_subgraph(*id, payload);
+                }
+            }
+        }
+        // No vote_to_halt here: a sub-graph that hasn't observed global
+        // convergence stays in the active set by simply not halting —
+        // the aggregator, not message arrival, decides termination.
+    }
+
+    fn aggregators(&self) -> Vec<AggregatorSpec> {
+        vec![AggregatorSpec::new(AGG_CHANGES, AggOp::Sum)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::gather_vertex_values;
+    use crate::gofs::subgraph::discover;
+    use crate::gopher::{run, GopherConfig};
+    use crate::graph::Graph;
+    use crate::partition::{HashPartitioner, Partitioner, Partitioning};
+    use std::collections::BTreeMap;
+
+    fn lp_labels(g: &Graph, parts: Partitioning) -> (Vec<u32>, crate::metrics::JobMetrics) {
+        let dg = discover(g, &parts).unwrap();
+        let res = run(&dg, &LabelPropSg::default(), &GopherConfig::default()).unwrap();
+        let states: BTreeMap<_, Vec<u32>> =
+            res.states.into_iter().map(|(id, s)| (id, s.labels)).collect();
+        (gather_vertex_values(&dg, &states), res.metrics)
+    }
+
+    /// Two 5-cliques joined by one bridge edge.
+    fn two_cliques() -> Graph {
+        let mut edges = Vec::new();
+        for c in [0u32, 5] {
+            for i in 0..5 {
+                for j in (i + 1)..5 {
+                    edges.push((c + i, c + j));
+                }
+            }
+        }
+        edges.push((4, 5)); // bridge
+        Graph::from_edges(10, &edges, None, false).unwrap()
+    }
+
+    #[test]
+    fn cliques_converge_to_uniform_communities() {
+        let g = two_cliques();
+        let parts = Partitioning::new(2, vec![0, 0, 0, 0, 0, 1, 1, 1, 1, 1]);
+        let (labels, metrics) = lp_labels(&g, parts);
+        // Each clique settles on one label.
+        assert!(labels[0..5].iter().all(|&l| l == labels[0]), "{labels:?}");
+        assert!(labels[5..10].iter().all(|&l| l == labels[5]), "{labels:?}");
+        // Convergence came from the aggregator, well under the cap.
+        let steps = metrics.num_supersteps();
+        assert!(steps < LabelPropSg::default().max_rounds, "steps={steps}");
+        let trace = metrics.aggregator(AGG_CHANGES).expect("changes trace");
+        assert_eq!(trace.values.len(), steps);
+        assert_eq!(trace.values[steps - 2], 0.0, "{:?}", trace.values);
+    }
+
+    #[test]
+    fn result_is_partition_invariant() {
+        // One superstep == one synchronous global round regardless of
+        // how the graph is scattered, so labels must match exactly.
+        let g = crate::graph::gen::social(200, 4, 0.05, 9);
+        let single = lp_labels(&g, Partitioning::new(1, vec![0; g.num_vertices()])).0;
+        let parts3 = HashPartitioner::default().partition(&g, 3);
+        let split = lp_labels(&g, parts3).0;
+        assert_eq!(single, split);
+    }
+
+    #[test]
+    fn oscillation_capped_by_max_rounds() {
+        // A bare pair two-cycles under strict sync LP (each endpoint
+        // adopts the other's label every round), so the aggregator never
+        // sees zero changes — the max_rounds cap must terminate the job.
+        let g = Graph::from_edges(2, &[(0, 1)], None, false).unwrap();
+        let parts = Partitioning::new(2, vec![0, 1]);
+        let dg = discover(&g, &parts).unwrap();
+        let prog = LabelPropSg { max_rounds: 6 };
+        let res = run(&dg, &prog, &GopherConfig::default()).unwrap();
+        // Halts at the first superstep past the cap.
+        assert_eq!(res.metrics.num_supersteps(), 7);
+        let trace = res.metrics.aggregator(AGG_CHANGES).expect("changes trace");
+        // Every round after init flips both labels: the trace shows the
+        // oscillation the cap exists for.
+        assert!(trace.values[1..].iter().all(|&c| c == 2.0), "{:?}", trace.values);
+    }
+
+    #[test]
+    fn isolated_vertices_keep_their_labels() {
+        // Triangle {0,1,2} plus isolated vertices 3 and 4: the triangle
+        // settles on one label, the isolates keep their own.
+        let g = Graph::from_edges(5, &[(0, 1), (1, 2), (0, 2)], None, false).unwrap();
+        let parts = Partitioning::new(2, vec![0, 0, 1, 1, 1]);
+        let (labels, _) = lp_labels(&g, parts);
+        assert_eq!(labels[3], 3);
+        assert_eq!(labels[4], 4);
+        assert_eq!(labels[0], labels[1]);
+        assert_eq!(labels[1], labels[2]);
+    }
+}

@@ -51,6 +51,11 @@ impl SubgraphProgram for MaxValueSg {
             ctx.vote_to_halt();
         }
     }
+
+    /// Values bound for the same sub-graph mailbox fold by max.
+    fn combine(&self, a: &f32, b: &f32) -> Option<f32> {
+        Some(a.max(*b))
+    }
 }
 
 /// Vertex-centric Max Value (paper Algorithm 1).

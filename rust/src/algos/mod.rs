@@ -13,11 +13,15 @@
 //! | BFS                         | [`bfs::BfsSg`]           | [`bfs::BfsVx`] |
 //! | PageRank (§5.3)             | [`pagerank::PageRankSg`] | [`pagerank::PageRankVx`] |
 //! | BlockRank (§5.3)            | [`blockrank::BlockRankSg`] | — (paper has none) |
+//! | Label Propagation           | [`labelprop::LabelPropSg`] | — (coordinator showcase) |
 //!
 //! The sub-graph PageRank/BlockRank/SSSP/CC programs can route their
 //! per-sub-graph inner loops through the AOT-compiled XLA kernels (see
 //! `runtime::programs`) — the paper §7's "fast shared-memory kernels
-//! within a sub-graph".
+//! within a sub-graph". The sub-graph programs also exercise the
+//! coordinator layer: PageRank and Label Propagation terminate via
+//! global aggregators, and SSSP/CC/BFS/MaxValue/PageRank define message
+//! combiners that fold same-destination traffic before the wire.
 
 pub mod maxvalue;
 pub mod cc;
@@ -25,6 +29,7 @@ pub mod sssp;
 pub mod bfs;
 pub mod pagerank;
 pub mod blockrank;
+pub mod labelprop;
 
 use crate::gofs::{DistributedGraph, SubgraphId};
 use std::collections::BTreeMap;

@@ -154,6 +154,12 @@ impl SubgraphProgram for SsspSg {
         }
         ctx.vote_to_halt(); // Algorithm 3 line 18: always halt, messages wake us.
     }
+
+    /// Candidate distances to the same target vertex fold by min (the
+    /// receiver keeps the minimum anyway), cutting bytes on the wire.
+    fn combine(&self, a: &Self::Msg, b: &Self::Msg) -> Option<Self::Msg> {
+        Some(if a.1 <= b.1 { *a } else { *b })
+    }
 }
 
 /// Vertex-centric SSSP.

@@ -5,10 +5,17 @@
 //! goffish info      --graph g.txt [--directed]
 //! goffish partition --graph g.txt --k 4 [--strategy multilevel|hash|range]
 //! goffish store     --graph g.txt --k 4 --out storedir [--strategy …] [--name NAME]
-//! goffish run       --store storedir --algo cc|sssp|bfs|pagerank|blockrank|maxvalue
+//! goffish run       --store storedir
+//!                   --algo cc|sssp|bfs|pagerank|blockrank|maxvalue|labelprop
 //!                   [--engine gopher|vertex] [--source V] [--supersteps N]
+//!                   [--epsilon E] [--no-combine] [--max-supersteps N]
 //!                   [--xla] [--fabric inproc|tcp] [--cores N]
 //! ```
+//!
+//! Coordinator knobs: `--epsilon` switches PageRank to aggregator-driven
+//! convergence (global L1 delta < E terminates the job), `--no-combine`
+//! disables the Gopher message combiners, and aggregator traces are
+//! printed after any run that registered them.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -161,6 +168,15 @@ fn cmd_run(args: &Args) -> Result<()> {
     let engine = args.get_or("engine", "gopher");
     let source = args.get_usize("source", 0)? as u32;
     let supersteps = args.get_usize("supersteps", 30)?;
+    let max_supersteps = args.get_usize("max-supersteps", 10_000)?;
+    let epsilon = match args.get("epsilon") {
+        Some(s) => Some(
+            s.parse::<f32>()
+                .with_context(|| format!("--epsilon expects a number, got {s:?}"))?,
+        ),
+        None => None,
+    };
+    let combiners = !args.flag("no-combine");
     let fabric = match args.get_or("fabric", "inproc") {
         "inproc" => FabricKind::InProc,
         "tcp" => FabricKind::Tcp,
@@ -174,7 +190,13 @@ fn cmd_run(args: &Args) -> Result<()> {
     };
 
     if engine == "gopher" {
-        let cfg = GopherConfig { cores_per_worker: cores, fabric, ..Default::default() };
+        let cfg = GopherConfig {
+            cores_per_worker: cores,
+            fabric,
+            combiners,
+            max_supersteps,
+            ..Default::default()
+        };
         let metrics = match algo {
             "cc" => gopher::run_on_store(&store, &algos::cc::CcSg, &cfg)?.metrics,
             "maxvalue" => {
@@ -187,7 +209,11 @@ fn cmd_run(args: &Args) -> Result<()> {
                 gopher::run_on_store(&store, &algos::sssp::SsspSg { source }, &cfg)?.metrics
             }
             "pagerank" => {
-                let prog = algos::pagerank::PageRankSg { supersteps, kernel };
+                let prog = algos::pagerank::PageRankSg { supersteps, kernel, epsilon };
+                gopher::run_on_store(&store, &prog, &cfg)?.metrics
+            }
+            "labelprop" => {
+                let prog = algos::labelprop::LabelPropSg { max_rounds: supersteps };
                 gopher::run_on_store(&store, &prog, &cfg)?.metrics
             }
             "blockrank" => {
@@ -200,13 +226,34 @@ fn cmd_run(args: &Args) -> Result<()> {
             a => bail!("unknown algo {a:?}"),
         };
         println!("{}", metrics.report(&format!("gopher/{algo}")));
+        for trace in &metrics.aggregators {
+            println!(
+                "  aggregator {}: last={:?} over {} supersteps",
+                trace.name,
+                trace.last(),
+                trace.values.len()
+            );
+        }
     } else if engine == "vertex" {
+        // Coordinator knobs are Gopher-only: fail loudly instead of
+        // silently running the baseline in the wrong mode.
+        if epsilon.is_some() {
+            bail!("--epsilon is only supported by the gopher engine");
+        }
+        if !combiners {
+            bail!("--no-combine is only supported by the gopher engine");
+        }
         // Vertex baseline reconstructs the full graph from the store.
         let (dg, _) = store.load_all()?;
         let g = reassemble(&dg)?;
         let parts = HashPartitioner::default()
             .partition(&g, store.meta().num_partitions as usize);
-        let cfg = PregelConfig { cores_per_worker: cores, fabric, ..Default::default() };
+        let cfg = PregelConfig {
+            cores_per_worker: cores,
+            fabric,
+            max_supersteps,
+            ..Default::default()
+        };
         let metrics = match algo {
             "cc" => pregel::run_vertex(&g, &parts, &algos::cc::CcVx, &cfg)?.metrics,
             "maxvalue" => {
@@ -304,6 +351,60 @@ mod tests {
             "vertex",
         ])
         .unwrap();
+        // Coordinator knobs: combiner off, aggregator-driven PageRank,
+        // and the label-propagation showcase.
+        run_cmd(&[
+            "run",
+            "--store",
+            store.to_str().unwrap(),
+            "--algo",
+            "sssp",
+            "--no-combine",
+        ])
+        .unwrap();
+        run_cmd(&[
+            "run",
+            "--store",
+            store.to_str().unwrap(),
+            "--algo",
+            "pagerank",
+            "--epsilon",
+            "0.01",
+            "--supersteps",
+            "60",
+        ])
+        .unwrap();
+        run_cmd(&["run", "--store", store.to_str().unwrap(), "--algo", "labelprop"])
+            .unwrap();
+    }
+
+    #[test]
+    fn bad_epsilon_rejected() {
+        let dir = tmp("badeps");
+        let graph = dir.join("g.txt");
+        let store = dir.join("store");
+        run_cmd(&["gen", "--kind", "chain", "--scale", "4", "--out", graph.to_str().unwrap()])
+            .unwrap();
+        run_cmd(&[
+            "store",
+            "--graph",
+            graph.to_str().unwrap(),
+            "--k",
+            "2",
+            "--out",
+            store.to_str().unwrap(),
+        ])
+        .unwrap();
+        let err = run_cmd(&[
+            "run",
+            "--store",
+            store.to_str().unwrap(),
+            "--algo",
+            "pagerank",
+            "--epsilon",
+            "not-a-number",
+        ]);
+        assert!(err.is_err());
     }
 
     #[test]

@@ -1,1 +1,287 @@
-// paper's L3 coordination contribution
+//! Coordinator layer: superstep-synchronized **global aggregators**
+//! (the paper's §4.2 manager-side coordination contribution).
+//!
+//! A program registers named aggregators ([`AggregatorSpec`]) — each a
+//! commutative monoid over `f64` ([`AggOp`]: sum / min / max / count, or
+//! a user-supplied fold with its identity). During a superstep every
+//! compute unit folds contributions into a worker-local partial vector;
+//! at the sync barrier each worker ships its partial to the manager,
+//! whose [`Coordinator`] folds the partials into one global vector and
+//! re-broadcasts it with the *resume* command. Programs read the folded
+//! values at the **next** superstep (classic Pregel aggregator
+//! visibility), which is exactly what convergence-driven termination
+//! needs: report a residual this superstep, observe the global residual
+//! next superstep, vote to halt when it drops under a threshold.
+//!
+//! The per-superstep global values are also recorded as
+//! [`AggregatorTrace`]s and surfaced through
+//! [`crate::metrics::JobMetrics::aggregators`], so benches and the CLI
+//! can plot convergence curves without re-running the job.
+//!
+//! Why monoids over `f64`: folds must be insensitive to worker count and
+//! fold order (workers sync in arbitrary order), so associativity +
+//! commutativity + identity are the contract; `f64` keeps the control
+//! plane schema-free while covering counts, residuals, and extrema. The
+//! design is engine-agnostic — `gopher::engine` threads it through its
+//! manager/worker protocol, and nothing here depends on Gopher types.
+
+/// A commutative monoid over `f64`: the fold applied worker-side per
+/// contribution and manager-side across workers.
+#[derive(Clone, Copy, Debug)]
+pub enum AggOp {
+    /// `a + b`, identity `0.0`.
+    Sum,
+    /// `min(a, b)`, identity `+inf`.
+    Min,
+    /// `max(a, b)`, identity `-inf`.
+    Max,
+    /// `a + b`, identity `0.0` — semantically "number of events"; kept
+    /// distinct from [`AggOp::Sum`] so traces self-describe.
+    Count,
+    /// User-defined monoid: `fold` must be associative and commutative
+    /// with `identity` as its neutral element.
+    Custom { identity: f64, fold: fn(f64, f64) -> f64 },
+}
+
+impl AggOp {
+    /// The monoid's neutral element.
+    pub fn identity(&self) -> f64 {
+        match self {
+            AggOp::Sum | AggOp::Count => 0.0,
+            AggOp::Min => f64::INFINITY,
+            AggOp::Max => f64::NEG_INFINITY,
+            AggOp::Custom { identity, .. } => *identity,
+        }
+    }
+
+    /// Fold two values.
+    pub fn fold(&self, a: f64, b: f64) -> f64 {
+        match self {
+            AggOp::Sum | AggOp::Count => a + b,
+            AggOp::Min => a.min(b),
+            AggOp::Max => a.max(b),
+            AggOp::Custom { fold, .. } => fold(a, b),
+        }
+    }
+}
+
+/// One named aggregator slot registered by a program.
+#[derive(Clone, Debug)]
+pub struct AggregatorSpec {
+    pub name: &'static str,
+    pub op: AggOp,
+}
+
+impl AggregatorSpec {
+    pub fn new(name: &'static str, op: AggOp) -> AggregatorSpec {
+        AggregatorSpec { name, op }
+    }
+}
+
+/// The registry of aggregators for one job (shared by every worker and
+/// the manager; slot order is the wire order of partial vectors).
+#[derive(Clone, Debug, Default)]
+pub struct Aggregators {
+    specs: Vec<AggregatorSpec>,
+}
+
+impl Aggregators {
+    pub fn new(specs: Vec<AggregatorSpec>) -> Aggregators {
+        Aggregators { specs }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn specs(&self) -> &[AggregatorSpec] {
+        &self.specs
+    }
+
+    /// Slot index of a named aggregator.
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.specs.iter().position(|s| s.name == name)
+    }
+
+    /// A fresh partial vector holding every slot's identity.
+    pub fn identity_values(&self) -> Vec<f64> {
+        self.specs.iter().map(|s| s.op.identity()).collect()
+    }
+
+    /// Fold a contribution vector into an accumulator, slot-wise. Short
+    /// contributions (e.g. from a failed worker) fold what they carry.
+    pub fn fold_into(&self, acc: &mut [f64], contrib: &[f64]) {
+        for (i, &c) in contrib.iter().enumerate() {
+            if i < acc.len() {
+                acc[i] = self.specs[i].op.fold(acc[i], c);
+            }
+        }
+    }
+}
+
+/// Per-superstep global values of one aggregator across a whole job.
+#[derive(Clone, Debug)]
+pub struct AggregatorTrace {
+    pub name: String,
+    /// `values[s]` = folded global value at the end of superstep `s+1`.
+    pub values: Vec<f64>,
+}
+
+impl AggregatorTrace {
+    /// The final folded value (None for a job with zero supersteps).
+    pub fn last(&self) -> Option<f64> {
+        self.values.last().copied()
+    }
+}
+
+/// Manager-side state: folds worker partials at each superstep barrier
+/// and keeps the full per-superstep history.
+#[derive(Clone, Debug)]
+pub struct Coordinator {
+    aggs: Aggregators,
+    history: Vec<Vec<f64>>,
+}
+
+impl Coordinator {
+    pub fn new(aggs: Aggregators) -> Coordinator {
+        Coordinator { aggs, history: Vec::new() }
+    }
+
+    pub fn aggregators(&self) -> &Aggregators {
+        &self.aggs
+    }
+
+    /// Fold one superstep's worker partials into the global vector,
+    /// record it in the history, and return it (the manager broadcasts
+    /// the returned vector with the resume command).
+    pub fn fold_superstep(&mut self, partials: &[Vec<f64>]) -> Vec<f64> {
+        let mut acc = self.aggs.identity_values();
+        for p in partials {
+            self.aggs.fold_into(&mut acc, p);
+        }
+        self.history.push(acc.clone());
+        acc
+    }
+
+    /// Global values per completed superstep (same order as folded).
+    pub fn history(&self) -> &[Vec<f64>] {
+        &self.history
+    }
+
+    /// Convert the history into per-aggregator traces for `JobMetrics`.
+    pub fn into_traces(self) -> Vec<AggregatorTrace> {
+        let mut traces: Vec<AggregatorTrace> = self
+            .aggs
+            .specs
+            .iter()
+            .map(|s| AggregatorTrace { name: s.name.to_string(), values: Vec::new() })
+            .collect();
+        for step in &self.history {
+            for (i, &v) in step.iter().enumerate() {
+                traces[i].values.push(v);
+            }
+        }
+        traces
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ops_fold_with_identities() {
+        for op in [AggOp::Sum, AggOp::Min, AggOp::Max, AggOp::Count] {
+            assert_eq!(op.fold(op.identity(), 3.5), 3.5, "{op:?}");
+            assert_eq!(op.fold(3.5, op.identity()), 3.5, "{op:?}");
+        }
+        assert_eq!(AggOp::Sum.fold(2.0, 3.0), 5.0);
+        assert_eq!(AggOp::Min.fold(2.0, 3.0), 2.0);
+        assert_eq!(AggOp::Max.fold(2.0, 3.0), 3.0);
+        assert_eq!(AggOp::Count.fold(4.0, 1.0), 5.0);
+    }
+
+    #[test]
+    fn custom_monoid() {
+        fn product(a: f64, b: f64) -> f64 {
+            a * b
+        }
+        let op = AggOp::Custom { identity: 1.0, fold: product };
+        assert_eq!(op.identity(), 1.0);
+        assert_eq!(op.fold(op.identity(), 6.0), 6.0);
+        assert_eq!(op.fold(2.0, 3.0), 6.0);
+    }
+
+    fn two_aggs() -> Aggregators {
+        Aggregators::new(vec![
+            AggregatorSpec::new("delta", AggOp::Sum),
+            AggregatorSpec::new("coldest", AggOp::Min),
+        ])
+    }
+
+    #[test]
+    fn registry_lookup_and_identities() {
+        let aggs = two_aggs();
+        assert_eq!(aggs.len(), 2);
+        assert!(!aggs.is_empty());
+        assert_eq!(aggs.index_of("delta"), Some(0));
+        assert_eq!(aggs.index_of("coldest"), Some(1));
+        assert_eq!(aggs.index_of("missing"), None);
+        let ids = aggs.identity_values();
+        assert_eq!(ids[0], 0.0);
+        assert!(ids[1].is_infinite() && ids[1] > 0.0);
+    }
+
+    #[test]
+    fn fold_into_is_slotwise_and_tolerates_short_vectors() {
+        let aggs = two_aggs();
+        let mut acc = aggs.identity_values();
+        aggs.fold_into(&mut acc, &[2.0, 5.0]);
+        aggs.fold_into(&mut acc, &[3.0, 1.0]);
+        assert_eq!(acc, vec![5.0, 1.0]);
+        // A failed worker ships an empty partial: a no-op.
+        aggs.fold_into(&mut acc, &[]);
+        assert_eq!(acc, vec![5.0, 1.0]);
+    }
+
+    #[test]
+    fn coordinator_folds_and_traces() {
+        let mut c = Coordinator::new(two_aggs());
+        let g1 = c.fold_superstep(&[vec![1.0, 9.0], vec![2.0, 4.0]]);
+        assert_eq!(g1, vec![3.0, 4.0]);
+        let g2 = c.fold_superstep(&[vec![0.5, 7.0]]);
+        assert_eq!(g2, vec![0.5, 7.0]);
+        assert_eq!(c.history().len(), 2);
+        let traces = c.into_traces();
+        assert_eq!(traces.len(), 2);
+        assert_eq!(traces[0].name, "delta");
+        assert_eq!(traces[0].values, vec![3.0, 0.5]);
+        assert_eq!(traces[1].values, vec![4.0, 7.0]);
+        assert_eq!(traces[0].last(), Some(0.5));
+    }
+
+    #[test]
+    fn fold_order_does_not_matter() {
+        let aggs = two_aggs();
+        let parts = [vec![1.0, 3.0], vec![4.0, 2.0], vec![2.0, 8.0]];
+        let mut a = Coordinator::new(aggs.clone());
+        let mut b = Coordinator::new(aggs);
+        let fwd = a.fold_superstep(&parts);
+        let rev: Vec<Vec<f64>> = parts.iter().rev().cloned().collect();
+        let bwd = b.fold_superstep(&rev);
+        assert_eq!(fwd, bwd);
+    }
+
+    #[test]
+    fn empty_registry_is_free() {
+        let mut c = Coordinator::new(Aggregators::default());
+        assert!(c.aggregators().is_empty());
+        let g = c.fold_superstep(&[Vec::new(), Vec::new()]);
+        assert!(g.is_empty());
+        assert!(c.into_traces().is_empty());
+    }
+}

@@ -9,9 +9,20 @@
 //! * `SendToSubGraphVertex`      → [`SubgraphContext::send_to_subgraph_vertex`]
 //! * `SendToAllSubGraphs`        → [`SubgraphContext::send_to_all_subgraphs`]
 //! * `VoteToHalt`                → [`SubgraphContext::vote_to_halt`]
+//!
+//! plus the coordinator surface (paper §4.2's manager-side layer):
+//!
+//! * [`SubgraphProgram::aggregators`] registers global aggregators;
+//!   [`SubgraphContext::aggregate`] contributes to them and
+//!   [`SubgraphContext::aggregated`] reads the previous superstep's
+//!   folded global values (Pregel aggregator visibility).
+//! * [`SubgraphProgram::combine`] is the Giraph-style message combiner:
+//!   same-destination messages are folded in the transport batching path
+//!   before they hit the wire (see `transport::Batcher`).
 
 use anyhow::Result;
 
+use crate::coordinator::{Aggregators, AggregatorSpec};
 use crate::gofs::{Subgraph, SubgraphId};
 use crate::graph::VertexId;
 use crate::util::codec::{Decoder, Encoder};
@@ -106,16 +117,54 @@ pub struct SubgraphContext<'a, M> {
     pub(crate) sg: &'a Subgraph,
     pub(crate) out: Vec<Outgoing<M>>,
     pub(crate) halted: bool,
+    /// Aggregator registry for this job (empty when none registered).
+    pub(crate) aggs: &'a Aggregators,
+    /// Previous superstep's folded global values (None at superstep 1:
+    /// nothing has crossed the barrier yet).
+    pub(crate) agg_global: Option<&'a [f64]>,
+    /// This unit's contributions, folded locally as they arrive.
+    pub(crate) agg_local: Vec<f64>,
 }
 
 impl<'a, M: Clone> SubgraphContext<'a, M> {
-    pub(crate) fn new(superstep: usize, sg: &'a Subgraph) -> Self {
-        Self { superstep, sg, out: Vec::new(), halted: false }
+    pub(crate) fn new(
+        superstep: usize,
+        sg: &'a Subgraph,
+        aggs: &'a Aggregators,
+        agg_global: Option<&'a [f64]>,
+    ) -> Self {
+        Self {
+            superstep,
+            sg,
+            out: Vec::new(),
+            halted: false,
+            aggs,
+            agg_global,
+            agg_local: aggs.identity_values(),
+        }
     }
 
     /// Current superstep (1-based, as in the paper's pseudocode).
     pub fn superstep(&self) -> usize {
         self.superstep
+    }
+
+    /// Slot index of a named aggregator registered by the program.
+    pub fn aggregator(&self, name: &str) -> Option<usize> {
+        self.aggs.index_of(name)
+    }
+
+    /// Contribute to aggregator slot `idx`; contributions fold with the
+    /// slot's monoid, worker-locally first and globally at the barrier.
+    pub fn aggregate(&mut self, idx: usize, value: f64) {
+        let op = self.aggs.specs()[idx].op;
+        self.agg_local[idx] = op.fold(self.agg_local[idx], value);
+    }
+
+    /// The global value of aggregator slot `idx` folded at the end of
+    /// the *previous* superstep. `None` during superstep 1.
+    pub fn aggregated(&self, idx: usize) -> Option<f64> {
+        self.agg_global.map(|g| g[idx])
     }
 
     /// Send to a specific sub-graph (its whole-sub-graph mailbox).
@@ -174,6 +223,23 @@ pub trait SubgraphProgram: Sync {
         ctx: &mut SubgraphContext<'_, Self::Msg>,
         msgs: &[IncomingMessage<Self::Msg>],
     );
+
+    /// Global aggregators this program uses. Folded by the manager at
+    /// every superstep barrier; read back via
+    /// [`SubgraphContext::aggregated`] the following superstep.
+    fn aggregators(&self) -> Vec<AggregatorSpec> {
+        Vec::new()
+    }
+
+    /// Giraph-style combiner: fold two payloads bound for the same
+    /// destination (same sub-graph mailbox, or same target vertex) into
+    /// one before they are encoded onto the wire. Return `None`
+    /// (default) to disable combining for this program. The fold must be
+    /// associative and commutative, and the receiver's `compute` must
+    /// treat a folded message like the sequence it replaces.
+    fn combine(&self, _a: &Self::Msg, _b: &Self::Msg) -> Option<Self::Msg> {
+        None
+    }
 }
 
 #[cfg(test)]
@@ -193,7 +259,8 @@ mod tests {
     fn context_collects_sends() {
         let dg = sg_pair();
         let sg = &dg.partitions[0][0];
-        let mut ctx = SubgraphContext::<f32>::new(1, sg);
+        let aggs = Aggregators::default();
+        let mut ctx = SubgraphContext::<f32>::new(1, sg, &aggs, None);
         ctx.send_to_all_neighbors(2.5);
         ctx.send_to_subgraph_vertex(dg.partitions[1][0].id, 3, 1.5);
         ctx.send_to_all_subgraphs(9.0);
@@ -201,6 +268,34 @@ mod tests {
         assert!(!ctx.halted);
         ctx.vote_to_halt();
         assert!(ctx.halted);
+    }
+
+    #[test]
+    fn context_aggregator_surface() {
+        use crate::coordinator::AggOp;
+        let dg = sg_pair();
+        let sg = &dg.partitions[0][0];
+        let aggs = Aggregators::new(vec![
+            AggregatorSpec::new("delta", AggOp::Sum),
+            AggregatorSpec::new("low", AggOp::Min),
+        ]);
+
+        // Superstep 1: nothing folded yet; contributions fold locally.
+        let mut ctx = SubgraphContext::<f32>::new(1, sg, &aggs, None);
+        assert_eq!(ctx.aggregator("delta"), Some(0));
+        assert_eq!(ctx.aggregator("nope"), None);
+        assert_eq!(ctx.aggregated(0), None);
+        ctx.aggregate(0, 2.0);
+        ctx.aggregate(0, 3.0);
+        ctx.aggregate(1, 7.0);
+        ctx.aggregate(1, 4.0);
+        assert_eq!(ctx.agg_local, vec![5.0, 4.0]);
+
+        // Superstep 2: folded globals are visible.
+        let global = vec![5.0, 4.0];
+        let ctx2 = SubgraphContext::<f32>::new(2, sg, &aggs, Some(&global));
+        assert_eq!(ctx2.aggregated(0), Some(5.0));
+        assert_eq!(ctx2.aggregated(1), Some(4.0));
     }
 
     #[test]

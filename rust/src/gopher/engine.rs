@@ -11,9 +11,17 @@
 //!    and flushed over the data fabric, ending with an EOS marker per
 //!    peer; the worker then drains its inbox until it has EOS from every
 //!    peer (BSP delivery guarantee), and reports a *sync* to the manager.
-//! 3. **Manager** — once all workers sync, decides: if nobody sent a
-//!    message and every sub-graph voted to halt → *terminate*; else
-//!    broadcast *resume*.
+//! 3. **Manager** — once all workers sync, folds the workers' partial
+//!    aggregator vectors into the global values (the coordinator layer,
+//!    paper §4.2), then decides: if nobody sent a message and every
+//!    sub-graph voted to halt → *terminate*; else broadcast *resume*
+//!    carrying the folded global aggregates, which programs read the
+//!    next superstep via [`SubgraphContext::aggregated`].
+//!
+//! The route phase runs outgoing envelopes through the transport
+//! [`transport::Batcher`], which folds same-destination messages with
+//! the program's combiner before anything is encoded — the Giraph-style
+//! communication reduction, applied at the sub-graph granularity.
 //!
 //! The data plane is byte-encoded even in-process so the TCP fabric and
 //! the byte accounting share one code path.
@@ -26,6 +34,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::coordinator::{Aggregators, Coordinator};
 use crate::gofs::{DistributedGraph, LoadStats, Store, Subgraph, SubgraphId};
 use crate::metrics::{JobMetrics, SuperstepMetrics};
 use crate::util::codec::{Decoder, Encoder};
@@ -47,6 +56,9 @@ pub struct GopherConfig {
     pub max_supersteps: usize,
     /// Flush a destination batch once it reaches this many bytes.
     pub batch_flush_bytes: usize,
+    /// Fold same-destination messages with the program's combiner before
+    /// they hit the wire (no-op for programs without a combiner).
+    pub combiners: bool,
 }
 
 impl Default for GopherConfig {
@@ -56,6 +68,7 @@ impl Default for GopherConfig {
             fabric: FabricKind::InProc,
             max_supersteps: 10_000,
             batch_flush_bytes: 256 << 10,
+            combiners: true,
         }
     }
 }
@@ -126,10 +139,13 @@ struct WorkerSync {
     quiescent: bool,
     /// Worker failed: manager must abort the job after this superstep.
     failed: bool,
+    /// Worker-local partial aggregator values for this superstep.
+    agg: Vec<f64>,
 }
 
 enum ManagerCmd {
-    Resume,
+    /// Continue with the globally folded aggregator values.
+    Resume(Vec<f64>),
     Terminate,
 }
 
@@ -147,6 +163,8 @@ struct WorkerSuperstep {
     messages: u64,
     bytes: u64,
     active_units: u64,
+    /// Messages eliminated by the combiner before encoding.
+    combined: u64,
 }
 
 /// Worker entry point: runs the superstep loop; on error, unblocks peers
@@ -157,6 +175,7 @@ fn worker_body<P, F>(
     program: &P,
     fabric: F,
     cfg: &GopherConfig,
+    aggs: &Aggregators,
     subgraphs: Vec<Subgraph>,
     load: LoadStats,
     directory: &[u32],
@@ -169,7 +188,7 @@ where
 {
     let me = fabric.id();
     let k = fabric.num_workers();
-    match worker_loop(program, &fabric, cfg, subgraphs, directory, &sync_tx, &cmd_rx) {
+    match worker_loop(program, &fabric, cfg, aggs, subgraphs, directory, &sync_tx, &cmd_rx) {
         Ok((states, per_superstep)) => Ok(WorkerOutput { states, per_superstep, load }),
         Err(e) => {
             // Best-effort cleanup: peers may be blocked draining for our
@@ -184,6 +203,7 @@ where
                 sent: 0,
                 quiescent: true,
                 failed: true,
+                agg: Vec::new(),
             });
             let _ = cmd_rx.recv(); // wait for terminate
             Err(e)
@@ -198,6 +218,7 @@ fn worker_loop<P, F>(
     program: &P,
     fabric: &F,
     cfg: &GopherConfig,
+    aggs: &Aggregators,
     subgraphs: Vec<Subgraph>,
     directory: &[u32],
     sync_tx: &Sender<WorkerSync>,
@@ -223,6 +244,9 @@ where
 
     let mut per_superstep = Vec::new();
     let mut superstep = 1usize;
+    // Folded global aggregator values from the previous superstep's
+    // barrier (None before the first barrier).
+    let mut agg_global: Option<Vec<f64>> = None;
     // Adaptive parallelism: when the previous superstep's compute was
     // negligible, thread fan-out costs more than it saves (CC/SSSP
     // supersteps after the first are sync-bound — the paper's §6.3
@@ -246,67 +270,82 @@ where
         } else {
             cfg.cores_per_worker
         };
-        let outs: Vec<Mutex<Vec<Outgoing<P::Msg>>>> =
-            (0..active.len()).map(|_| Mutex::new(Vec::new())).collect();
+        // Each unit's compute yields (outgoing envelopes, aggregator
+        // contributions); both are harvested after the pool joins.
+        type UnitOut<M> = (Vec<Outgoing<M>>, Vec<f64>);
+        let outs: Vec<Mutex<UnitOut<P::Msg>>> = (0..active.len())
+            .map(|_| Mutex::new((Vec::new(), Vec::new())))
+            .collect();
         let t0 = Instant::now();
         let unit_times = pool::run_indexed(cores, active.len(), |j| {
             let i = active[j];
             let sg = &subgraphs[i];
-            let mut ctx = SubgraphContext::new(superstep, sg);
+            let mut ctx =
+                SubgraphContext::new(superstep, sg, aggs, agg_global.as_deref());
             let mut state = states[i].lock().unwrap();
             program.compute(&mut state, sg, &mut ctx, &cur_inbox[i]);
             halted[i].store(ctx.halted, Ordering::Relaxed);
-            *outs[j].lock().unwrap() = ctx.out;
+            *outs[j].lock().unwrap() = (ctx.out, ctx.agg_local);
         })?;
         let compute_seconds = t0.elapsed().as_secs_f64();
         last_compute = compute_seconds;
 
-        // ---- route phase: group envelopes per destination partition
+        // ---- route phase: batch per destination through the combining
+        // transport batcher, folding aggregator partials as we harvest.
         let mut sent_msgs = 0u64;
         let mut sent_bytes = 0u64;
-        // pending[p] = (sg_index, vertex, payload) envelopes for worker p.
-        let mut pending: Vec<Vec<(u32, Option<u32>, P::Msg)>> =
-            (0..k).map(|_| Vec::new()).collect();
-        let mut flush = |p: usize,
-                         buf: &mut Vec<(u32, Option<u32>, P::Msg)>,
-                         inbox: &mut Vec<Vec<IncomingMessage<P::Msg>>>|
+        let mut agg_partial = aggs.identity_values();
+        let mut batcher: transport::Batcher<P::Msg> =
+            transport::Batcher::new(k, cfg.batch_flush_bytes, cfg.combiners);
+        let combine = |a: &P::Msg, b: &P::Msg| program.combine(a, b);
+        let deliver = |p: usize,
+                       batch: Vec<(u32, Option<u32>, P::Msg)>,
+                       inbox: &mut Vec<Vec<IncomingMessage<P::Msg>>>|
          -> Result<u64> {
-            if buf.is_empty() {
+            if batch.is_empty() {
                 return Ok(0);
             }
             if p as u32 == me {
                 // Self-delivery bypasses the fabric (but still counts).
-                for (sgi, vertex, payload) in buf.drain(..) {
+                for (sgi, vertex, payload) in batch {
                     inbox[sgi as usize].push(IncomingMessage { vertex, payload });
                 }
                 return Ok(0);
             }
-            let frame = encode_batch(&std::mem::take(buf));
+            let frame = encode_batch(&batch);
             let len = frame.len() as u64;
             fabric.send(p as u32, frame)?;
             Ok(len)
         };
 
         for cell in &outs {
-            let envs = cell.lock().unwrap();
+            let guard = cell.lock().unwrap();
+            let (envs, partial) = &*guard;
+            aggs.fold_into(&mut agg_partial, partial);
             for out in envs.iter() {
                 match out {
                     Outgoing::Direct(env) => {
                         sent_msgs += 1;
                         let p = env.target.partition as usize;
-                        pending[p].push((env.target.index, env.vertex, env.payload.clone()));
-                        if pending[p].len() * 16 >= cfg.batch_flush_bytes {
-                            sent_bytes += flush(p, &mut pending[p], &mut inbox)?;
+                        if let Some(batch) = batcher.push(
+                            p,
+                            env.target.index,
+                            env.vertex,
+                            env.payload.clone(),
+                            &combine,
+                        ) {
+                            sent_bytes += deliver(p, batch, &mut inbox)?;
                         }
                     }
                     Outgoing::Broadcast(m) => {
                         for (p, &count) in directory.iter().enumerate() {
                             for idx in 0..count {
                                 sent_msgs += 1;
-                                pending[p].push((idx, None, m.clone()));
-                            }
-                            if pending[p].len() * 16 >= cfg.batch_flush_bytes {
-                                sent_bytes += flush(p, &mut pending[p], &mut inbox)?;
+                                if let Some(batch) =
+                                    batcher.push(p, idx, None, m.clone(), &combine)
+                                {
+                                    sent_bytes += deliver(p, batch, &mut inbox)?;
+                                }
                             }
                         }
                     }
@@ -314,9 +353,10 @@ where
             }
         }
         for p in 0..k {
-            let mut buf = std::mem::take(&mut pending[p]);
-            sent_bytes += flush(p, &mut buf, &mut inbox)?;
+            let batch = batcher.take(p);
+            sent_bytes += deliver(p, batch, &mut inbox)?;
         }
+        let combined = batcher.combined;
         // End-of-superstep markers to every peer.
         for p in 0..k as u32 {
             if p != me {
@@ -348,16 +388,26 @@ where
             messages: sent_msgs,
             bytes: sent_bytes,
             active_units: active.len() as u64,
+            combined,
         });
 
         // ---- sync with the manager
         let quiescent = (0..n_local)
             .all(|i| halted[i].load(Ordering::Relaxed) && inbox[i].is_empty());
         sync_tx
-            .send(WorkerSync { worker: me, sent: sent_msgs, quiescent, failed: false })
+            .send(WorkerSync {
+                worker: me,
+                sent: sent_msgs,
+                quiescent,
+                failed: false,
+                agg: agg_partial,
+            })
             .map_err(|_| anyhow::anyhow!("manager hung up"))?;
         match cmd_rx.recv().context("manager command channel closed")? {
-            ManagerCmd::Resume => superstep += 1,
+            ManagerCmd::Resume(globals) => {
+                agg_global = Some(globals);
+                superstep += 1;
+            }
             ManagerCmd::Terminate => break,
         }
         if superstep > cfg.max_supersteps {
@@ -397,6 +447,10 @@ fn run_inner<P: SubgraphProgram>(
     };
     anyhow::ensure!(k >= 1, "no partitions");
 
+    // Coordinator layer: one registry shared by workers, one folding
+    // coordinator owned by the manager.
+    let aggs = Aggregators::new(program.aggregators());
+
     let (sync_tx, sync_rx) = channel::<WorkerSync>();
     let mut cmd_txs: Vec<Sender<ManagerCmd>> = Vec::with_capacity(k);
     let mut cmd_rxs: Vec<Receiver<ManagerCmd>> = Vec::with_capacity(k);
@@ -426,6 +480,7 @@ fn run_inner<P: SubgraphProgram>(
                 let cmd_rx = cmd_rxs.remove(0);
                 let source = &source;
                 let directory = &directory;
+                let aggs = &aggs;
                 handles.push(scope.spawn(move || -> Result<WorkerOutput<P::State>> {
                     let t_load = Instant::now();
                     let loaded = match source {
@@ -462,6 +517,7 @@ fn run_inner<P: SubgraphProgram>(
                                 sent: 0,
                                 quiescent: true,
                                 failed: true,
+                                agg: Vec::new(),
                             });
                             let _ = cmd_rx.recv();
                             return Err(e);
@@ -469,10 +525,12 @@ fn run_inner<P: SubgraphProgram>(
                     };
                     match fab_any {
                         FabricAny::InProc(f) => worker_body(
-                            program, f, cfg, subgraphs, load, directory, sync_tx, cmd_rx,
+                            program, f, cfg, aggs, subgraphs, load, directory, sync_tx,
+                            cmd_rx,
                         ),
                         FabricAny::Tcp(f) => worker_body(
-                            program, f, cfg, subgraphs, load, directory, sync_tx, cmd_rx,
+                            program, f, cfg, aggs, subgraphs, load, directory, sync_tx,
+                            cmd_rx,
                         ),
                     }
                 }));
@@ -495,13 +553,15 @@ fn run_inner<P: SubgraphProgram>(
             }
             drop(sync_tx);
 
-            // ---- manager loop
+            // ---- manager loop (sync barrier + coordinator fold)
+            let mut coordinator = Coordinator::new(aggs.clone());
             let mut superstep_walls: Vec<f64> = Vec::new();
             let mut t_step = Instant::now();
             loop {
                 let mut sent_total = 0u64;
                 let mut all_quiescent = true;
                 let mut any_failed = false;
+                let mut partials: Vec<Vec<f64>> = Vec::with_capacity(k);
                 let mut seen = 0usize;
                 while seen < k {
                     match sync_rx.recv() {
@@ -509,6 +569,7 @@ fn run_inner<P: SubgraphProgram>(
                             sent_total += s.sent;
                             all_quiescent &= s.quiescent;
                             any_failed |= s.failed;
+                            partials.push(s.agg);
                             seen += 1;
                         }
                         Err(_) => {
@@ -525,13 +586,14 @@ fn run_inner<P: SubgraphProgram>(
                     }
                 }
                 superstep_walls.push(t_step.elapsed().as_secs_f64());
+                let globals = coordinator.fold_superstep(&partials);
                 let done = (all_quiescent && sent_total == 0) || any_failed;
-                let cmd = if done { ManagerCmd::Terminate } else { ManagerCmd::Resume };
                 for tx in &cmd_txs {
                     // A worker that already errored may have dropped its rx.
-                    let _ = tx.send(match cmd {
-                        ManagerCmd::Terminate => ManagerCmd::Terminate,
-                        ManagerCmd::Resume => ManagerCmd::Resume,
+                    let _ = tx.send(if done {
+                        ManagerCmd::Terminate
+                    } else {
+                        ManagerCmd::Resume(globals.clone())
                     });
                 }
                 if done {
@@ -568,11 +630,13 @@ fn run_inner<P: SubgraphProgram>(
                     sm.messages += ws.messages;
                     sm.bytes += ws.bytes;
                     sm.active_units += ws.active_units;
+                    sm.combined_messages += ws.combined;
                 }
                 sm.wall_seconds = superstep_walls[s];
                 metrics.compute_seconds += sm.wall_seconds;
                 metrics.supersteps.push(sm);
             }
+            metrics.aggregators = coordinator.into_traces();
             Ok((outputs, metrics))
         });
     let (outputs, mut metrics) = result?;
@@ -651,6 +715,10 @@ mod tests {
             } else {
                 ctx.vote_to_halt();
             }
+        }
+
+        fn combine(&self, a: &f32, b: &f32) -> Option<f32> {
+            Some(a.max(*b))
         }
     }
 
@@ -810,6 +878,103 @@ mod tests {
         let prog = VertexPing { target_sg: target, target_vertex: 6 };
         let res = run(&dg, &prog, &GopherConfig::default()).unwrap();
         assert_eq!(res.states[&target], vec![(Some(6), 5)]);
+    }
+
+    #[test]
+    fn combiners_cut_bytes_without_changing_results() {
+        // Star split by range: worker 1 holds 10 singleton sub-graphs
+        // whose superstep-1 messages all target the hub sub-graph on
+        // worker 0 — guaranteed cross-worker combining for MaxValue.
+        let g = gen::star(20);
+        let parts = RangePartitioner.partition(&g, 2);
+        let dg = discover(&g, &parts).unwrap();
+        let on = run(&dg, &MaxValue, &GopherConfig::default()).unwrap();
+        let off_cfg = GopherConfig { combiners: false, ..Default::default() };
+        let off = run(&dg, &MaxValue, &off_cfg).unwrap();
+        let a: Vec<f32> = on.states.values().cloned().collect();
+        let b: Vec<f32> = off.states.values().cloned().collect();
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&v| v == 19.0));
+        assert_eq!(off.metrics.total_combined(), 0);
+        assert!(on.metrics.total_combined() > 0, "no combining happened");
+        assert!(
+            on.metrics.total_bytes() < off.metrics.total_bytes(),
+            "combined run must ship fewer bytes: {} vs {}",
+            on.metrics.total_bytes(),
+            off.metrics.total_bytes()
+        );
+    }
+
+    /// Registers a Sum aggregator counting active sub-graphs; every
+    /// sub-graph keeps itself alive with a self-send until the global
+    /// count has been observed for `stop_after` supersteps.
+    struct CountedRounds {
+        stop_after: usize,
+    }
+
+    impl SubgraphProgram for CountedRounds {
+        type Msg = ();
+        type State = ();
+
+        fn init(&self, _sg: &Subgraph) {}
+
+        fn aggregators(&self) -> Vec<crate::coordinator::AggregatorSpec> {
+            vec![crate::coordinator::AggregatorSpec::new(
+                "active",
+                crate::coordinator::AggOp::Sum,
+            )]
+        }
+
+        fn compute(
+            &self,
+            _state: &mut (),
+            sg: &Subgraph,
+            ctx: &mut SubgraphContext<'_, ()>,
+            _msgs: &[IncomingMessage<()>],
+        ) {
+            let slot = ctx.aggregator("active").expect("registered");
+            ctx.aggregate(slot, 1.0);
+            if ctx.superstep() == 1 {
+                // Aggregator visibility: nothing folded before barrier 1.
+                assert_eq!(ctx.aggregated(slot), None);
+            } else {
+                // Every sub-graph was active every previous superstep.
+                assert!(ctx.aggregated(slot).is_some());
+            }
+            if ctx.superstep() >= self.stop_after {
+                ctx.vote_to_halt();
+            } else {
+                ctx.send_to_subgraph(sg.id, ());
+            }
+        }
+    }
+
+    #[test]
+    fn aggregators_fold_across_workers_and_trace_in_metrics() {
+        let g = gen::road(10, 0.9, 0.02, 17);
+        let parts = RangePartitioner.partition(&g, 3);
+        let dg = discover(&g, &parts).unwrap();
+        let n_sg = dg.num_subgraphs() as f64;
+        let res = run(&dg, &CountedRounds { stop_after: 4 }, &GopherConfig::default())
+            .unwrap();
+        assert_eq!(res.metrics.num_supersteps(), 4);
+        let trace = res.metrics.aggregator("active").expect("trace recorded");
+        assert_eq!(trace.values.len(), 4);
+        for v in &trace.values {
+            assert_eq!(*v, n_sg, "every sub-graph contributes 1 per superstep");
+        }
+    }
+
+    #[test]
+    fn aggregators_fold_over_tcp_fabric_too() {
+        let g = gen::chain(9);
+        let parts = RangePartitioner.partition(&g, 3);
+        let dg = discover(&g, &parts).unwrap();
+        let cfg = GopherConfig { fabric: FabricKind::Tcp, ..Default::default() };
+        let res = run(&dg, &CountedRounds { stop_after: 3 }, &cfg).unwrap();
+        let trace = res.metrics.aggregator("active").expect("trace recorded");
+        assert_eq!(trace.values.len(), 3);
+        assert!(trace.values.iter().all(|&v| v == dg.num_subgraphs() as f64));
     }
 
     #[test]

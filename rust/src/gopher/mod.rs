@@ -8,6 +8,12 @@
 //! protocol with the manager. Messages are always *encoded* on the
 //! fabric (the in-process fabric too) so byte accounting is honest and
 //! the TCP fabric is exercised by the same code path.
+//!
+//! The coordinator layer rides the same barrier: programs register
+//! global aggregators ([`crate::coordinator`]) that workers report into
+//! at sync and the manager folds and re-broadcasts with *resume*, and
+//! may define a message combiner that the transport batching path uses
+//! to fold same-destination messages before they are encoded.
 
 pub mod api;
 pub mod transport;

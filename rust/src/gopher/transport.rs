@@ -11,9 +11,13 @@
 //!   the fabric shape the paper's deployment used (workers on separate
 //!   hosts exchanging batches over Ethernet).
 //!
-//! Batches are already-encoded byte vectors; the engine handles batching
-//! policy, EOS markers and accounting.
+//! Batches are already-encoded byte vectors; the engine handles EOS
+//! markers and byte accounting, while [`Batcher`] implements the
+//! batching *policy*: per-destination accumulation with optional
+//! Giraph-style message combining (fold same-destination messages
+//! before the `batch_flush_bytes` flush ever encodes them).
 
+use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -39,6 +43,87 @@ pub trait Fabric: Send {
     fn id(&self) -> u32;
     /// Number of workers on the fabric.
     fn num_workers(&self) -> usize;
+}
+
+// --------------------------------------------------------------- batching
+
+/// An outgoing envelope before encoding: destination sub-graph index on
+/// the target worker, optional target vertex, payload.
+pub(crate) type PendingEnvelope<M> = (u32, Option<u32>, M);
+
+/// Rough encoded size of one envelope (varints + small payload): the
+/// flush threshold converts `batch_flush_bytes` into an envelope count.
+const ENVELOPE_BYTES_ESTIMATE: usize = 16;
+
+/// Per-destination batch accumulator with optional message combining.
+///
+/// The engine pushes every outgoing envelope through here. When
+/// combining is on, an envelope whose `(sub-graph, vertex)` key already
+/// has a pending envelope for the same destination worker is folded
+/// into it via the program's combiner — so the wire (and the local
+/// inbox) sees one message where Giraph without a combiner would see
+/// many. `push` returns a full batch once a destination crosses the
+/// flush threshold; `take` drains what remains at superstep end.
+pub(crate) struct Batcher<M> {
+    flush_envelopes: usize,
+    combining: bool,
+    pending: Vec<Vec<PendingEnvelope<M>>>,
+    /// Per destination: (sub-graph, vertex) -> slot in `pending`.
+    slots: Vec<HashMap<(u32, Option<u32>), usize>>,
+    /// Messages eliminated by combining (for `JobMetrics`).
+    pub combined: u64,
+}
+
+impl<M> Batcher<M> {
+    pub fn new(num_workers: usize, flush_bytes: usize, combining: bool) -> Batcher<M> {
+        Batcher {
+            flush_envelopes: (flush_bytes / ENVELOPE_BYTES_ESTIMATE).max(1),
+            combining,
+            pending: (0..num_workers).map(|_| Vec::new()).collect(),
+            slots: (0..num_workers).map(|_| HashMap::new()).collect(),
+            combined: 0,
+        }
+    }
+
+    /// Queue an envelope for worker `to`, combining when possible.
+    /// Returns a batch to deliver when `to`'s buffer is full.
+    pub fn push<C>(
+        &mut self,
+        to: usize,
+        sg_index: u32,
+        vertex: Option<u32>,
+        payload: M,
+        combine: C,
+    ) -> Option<Vec<PendingEnvelope<M>>>
+    where
+        C: Fn(&M, &M) -> Option<M>,
+    {
+        if self.combining {
+            let key = (sg_index, vertex);
+            if let Some(&slot) = self.slots[to].get(&key) {
+                let folded = combine(&self.pending[to][slot].2, &payload);
+                if let Some(m) = folded {
+                    self.pending[to][slot].2 = m;
+                    self.combined += 1;
+                    return None;
+                }
+            } else {
+                self.slots[to].insert(key, self.pending[to].len());
+            }
+        }
+        self.pending[to].push((sg_index, vertex, payload));
+        if self.pending[to].len() >= self.flush_envelopes {
+            self.slots[to].clear();
+            return Some(std::mem::take(&mut self.pending[to]));
+        }
+        None
+    }
+
+    /// Drain the remaining envelopes for worker `to`.
+    pub fn take(&mut self, to: usize) -> Vec<PendingEnvelope<M>> {
+        self.slots[to].clear();
+        std::mem::take(&mut self.pending[to])
+    }
 }
 
 // ------------------------------------------------------------- in-process
@@ -287,5 +372,56 @@ mod tests {
             assert_eq!(fab.id(), i as u32);
             assert_eq!(fab.num_workers(), 5);
         }
+    }
+
+    fn max_combine(a: &u32, b: &u32) -> Option<u32> {
+        Some(*a.max(b))
+    }
+
+    #[test]
+    fn batcher_combines_same_destination() {
+        let mut b = Batcher::<u32>::new(2, 1 << 20, true);
+        assert!(b.push(1, 0, None, 5, max_combine).is_none());
+        assert!(b.push(1, 0, None, 9, max_combine).is_none());
+        assert!(b.push(1, 0, None, 7, max_combine).is_none());
+        // Different vertex key: not combined with the mailbox messages.
+        assert!(b.push(1, 0, Some(3), 2, max_combine).is_none());
+        assert_eq!(b.combined, 2);
+        let batch = b.take(1);
+        assert_eq!(batch, vec![(0, None, 9), (0, Some(3), 2)]);
+        assert!(b.take(1).is_empty());
+        assert!(b.take(0).is_empty());
+    }
+
+    #[test]
+    fn batcher_without_combining_keeps_every_message() {
+        let mut b = Batcher::<u32>::new(1, 1 << 20, false);
+        for v in [5u32, 9, 7] {
+            assert!(b.push(0, 0, None, v, max_combine).is_none());
+        }
+        assert_eq!(b.combined, 0);
+        assert_eq!(b.take(0).len(), 3);
+    }
+
+    #[test]
+    fn batcher_respects_none_combiner() {
+        let none = |_: &u32, _: &u32| -> Option<u32> { None };
+        let mut b = Batcher::<u32>::new(1, 1 << 20, true);
+        assert!(b.push(0, 2, None, 1, none).is_none());
+        assert!(b.push(0, 2, None, 2, none).is_none());
+        assert_eq!(b.combined, 0);
+        assert_eq!(b.take(0).len(), 2);
+    }
+
+    #[test]
+    fn batcher_flushes_at_threshold() {
+        // flush_bytes 32 -> 2 envelopes per batch.
+        let mut b = Batcher::<u32>::new(1, 32, true);
+        assert!(b.push(0, 0, None, 1, max_combine).is_none());
+        let batch = b.push(0, 1, None, 2, max_combine).expect("flush at threshold");
+        assert_eq!(batch.len(), 2);
+        // Post-flush, the same keys accumulate fresh (slots were cleared).
+        assert!(b.push(0, 0, None, 3, max_combine).is_none());
+        assert_eq!(b.take(0), vec![(0, None, 3)]);
     }
 }

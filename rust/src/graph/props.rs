@@ -87,7 +87,7 @@ pub fn diameter_exact(g: &Graph) -> u32 {
 fn argmax_finite(dist: &[u32]) -> Option<VertexId> {
     let mut best: Option<(u32, VertexId)> = None;
     for (v, &d) in dist.iter().enumerate() {
-        if d != u32::MAX && best.map_or(true, |(bd, _)| d > bd) {
+        if d != u32::MAX && best.is_none_or(|(bd, _)| d > bd) {
             best = Some((d, v as VertexId));
         }
     }

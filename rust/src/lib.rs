@@ -23,6 +23,7 @@ pub mod util;
 pub mod graph;
 pub mod partition;
 pub mod gofs;
+pub mod coordinator;
 pub mod gopher;
 pub mod pregel;
 pub mod algos;

@@ -3,9 +3,11 @@
 //! Everything the paper's evaluation section plots is captured here:
 //! makespan split into load + compute (Fig 4a/4b), superstep counts
 //! (Fig 4c), per-sub-graph compute-time distributions per partition
-//! (Fig 5), and message/byte counters (the §3.3 "messages exchanged"
-//! argument).
+//! (Fig 5), message/byte counters (the §3.3 "messages exchanged"
+//! argument), combiner savings, and per-superstep global aggregator
+//! traces from the coordinator layer.
 
+use crate::coordinator::AggregatorTrace;
 use crate::util::stats::Summary;
 
 /// Metrics for one superstep, merged across workers.
@@ -23,6 +25,9 @@ pub struct SuperstepMetrics {
     pub bytes: u64,
     /// Units (sub-graphs / vertices) that ran compute this superstep.
     pub active_units: u64,
+    /// Messages eliminated by combiners before encoding (these are
+    /// counted in `messages` but never hit the wire).
+    pub combined_messages: u64,
 }
 
 impl SuperstepMetrics {
@@ -55,6 +60,9 @@ pub struct JobMetrics {
     pub load_files: u64,
     /// Total compute wall time (sum of superstep walls).
     pub compute_seconds: f64,
+    /// Per-superstep global aggregator values (coordinator layer), one
+    /// trace per aggregator the program registered.
+    pub aggregators: Vec<AggregatorTrace>,
 }
 
 impl JobMetrics {
@@ -75,16 +83,29 @@ impl JobMetrics {
         self.supersteps.iter().map(|s| s.bytes).sum()
     }
 
+    /// Messages folded away by combiners across the whole job.
+    pub fn total_combined(&self) -> u64 {
+        self.supersteps.iter().map(|s| s.combined_messages).sum()
+    }
+
+    /// The trace of a named global aggregator, if the program registered
+    /// one under that name.
+    pub fn aggregator(&self, name: &str) -> Option<&AggregatorTrace> {
+        self.aggregators.iter().find(|t| t.name == name)
+    }
+
     /// One-line report used by examples and benches.
     pub fn report(&self, label: &str) -> String {
         format!(
-            "{label}: makespan={:.4}s (load={:.4}s compute={:.4}s) supersteps={} msgs={} bytes={}",
+            "{label}: makespan={:.4}s (load={:.4}s compute={:.4}s) supersteps={} \
+             msgs={} bytes={} combined={}",
             self.makespan_seconds(),
             self.load_seconds,
             self.compute_seconds,
             self.num_supersteps(),
             self.total_messages(),
             self.total_bytes(),
+            self.total_combined(),
         )
     }
 }
@@ -101,6 +122,7 @@ mod tests {
             messages: msgs,
             bytes: msgs * 8,
             active_units: walls.len() as u64,
+            combined_messages: msgs / 2,
         }
     }
 
@@ -115,7 +137,24 @@ mod tests {
         assert!((m.makespan_seconds() - 1.5).abs() < 1e-12);
         assert_eq!(m.total_messages(), 7);
         assert_eq!(m.total_bytes(), 56);
+        assert_eq!(m.total_combined(), 3);
         assert_eq!(m.num_supersteps(), 2);
+    }
+
+    #[test]
+    fn aggregator_traces_surface_by_name() {
+        let m = JobMetrics {
+            aggregators: vec![crate::coordinator::AggregatorTrace {
+                name: "pr_l1_delta".to_string(),
+                values: vec![0.5, 0.1, 0.01],
+            }],
+            ..Default::default()
+        };
+        let t = m.aggregator("pr_l1_delta").expect("trace present");
+        assert_eq!(t.values.len(), 3);
+        assert_eq!(t.last(), Some(0.01));
+        assert!(m.aggregator("missing").is_none());
+        assert!(m.report("x").contains("combined=0"));
     }
 
     #[test]

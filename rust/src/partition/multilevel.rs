@@ -143,7 +143,7 @@ fn coarsen_once(level: &Level, seed: u64) -> (Level, Vec<u32>) {
         for (&u, &w) in &level.adj[v as usize] {
             if mate[u as usize] == u32::MAX && u != v {
                 let cand = (w, u);
-                if best.map_or(true, |b| cand > b) {
+                if best.is_none_or(|b| cand > b) {
                     best = Some(cand);
                 }
             }

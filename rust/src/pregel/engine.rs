@@ -105,6 +105,8 @@ struct WorkerSuperstep {
     messages: u64,
     bytes: u64,
     active_units: u64,
+    /// Messages eliminated by the combiner before encoding.
+    combined: u64,
 }
 
 struct WorkerOutput<V> {
@@ -231,10 +233,12 @@ where
             }
         }
         // Combiner: fold same-target messages per destination worker.
+        let mut combined = 0u64;
         for buf in pending.iter_mut() {
             if buf.len() < 2 {
                 continue;
             }
+            let before = buf.len();
             buf.sort_by_key(|(v, _)| *v);
             let mut folded: Vec<(VertexId, P::Msg)> = Vec::with_capacity(buf.len());
             for (v, m) in buf.drain(..) {
@@ -246,6 +250,7 @@ where
                     _ => folded.push((v, m)),
                 }
             }
+            combined += (before - folded.len()) as u64;
             *buf = folded;
         }
         for (p, buf) in pending.iter_mut().enumerate() {
@@ -294,6 +299,7 @@ where
             messages: sent_msgs,
             bytes: sent_bytes,
             active_units: active.len() as u64,
+            combined,
         });
 
         let quiescent = (0..n_local)
@@ -459,6 +465,7 @@ pub fn run<P: VertexProgram>(
             sm.messages += ws.messages;
             sm.bytes += ws.bytes;
             sm.active_units += ws.active_units;
+            sm.combined_messages += ws.combined;
         }
         sm.wall_seconds = walls[s];
         metrics.compute_seconds += sm.wall_seconds;

@@ -140,6 +140,7 @@ mod tests {
                 messages: msgs,
                 bytes,
                 active_units: 2,
+                combined_messages: 0,
             });
             m.compute_seconds += w;
         }

@@ -1,6 +1,11 @@
 //! Gopher-vs-Pregel result parity on randomized graphs: both engines
 //! must compute identical answers for every algorithm (the paper's
 //! comparison is only meaningful because the *answers* agree).
+//!
+//! The combiner tests double as the coordinator-layer acceptance: with
+//! combiners enabled on both engines the answers still agree, and the
+//! combiner-enabled Gopher runs ship strictly fewer bytes than
+//! combiner-disabled ones (asserted on `JobMetrics`).
 
 use std::collections::BTreeMap;
 
@@ -104,6 +109,81 @@ fn sssp_parity_randomized() {
 }
 
 #[test]
+fn cc_combiner_parity_and_byte_reduction() {
+    // Hash-scattered chain: many tiny sub-graphs per worker, so several
+    // same-worker sub-graphs flood labels toward one remote mailbox —
+    // exactly what the combiner folds.
+    let g = gen::chain(60);
+    let parts = HashPartitioner::default().partition(&g, 3);
+    let dg = discover(&g, &parts).unwrap();
+
+    let with = run(&dg, &CcSg, &GopherConfig::default()).unwrap();
+    let without_cfg = GopherConfig { combiners: false, ..Default::default() };
+    let without = run(&dg, &CcSg, &without_cfg).unwrap();
+
+    // Combiners enabled on BOTH engines: answers agree everywhere.
+    let sg_labels = gather_subgraph_values(&dg, &with.states);
+    let vx = run_vertex(&g, &parts, &CcVx, &PregelConfig::default()).unwrap();
+    assert_eq!(sg_labels, vx.values, "gopher+combiner vs pregel+combiner");
+    assert_eq!(sg_labels, gather_subgraph_values(&dg, &without.states));
+
+    // And the combiner strictly reduces bytes on the wire.
+    assert!(with.metrics.total_combined() > 0, "combiner never fired");
+    assert_eq!(without.metrics.total_combined(), 0);
+    assert!(
+        with.metrics.total_bytes() < without.metrics.total_bytes(),
+        "combined CC bytes {} must be < uncombined {}",
+        with.metrics.total_bytes(),
+        without.metrics.total_bytes()
+    );
+    // The pregel baseline combines too (its own fold path).
+    assert!(vx.metrics.total_combined() > 0);
+}
+
+#[test]
+fn sssp_combiner_parity_and_byte_reduction() {
+    let g0 = gen::social(400, 5, 0.0, 77);
+    let g = gen::with_random_weights(&g0, 0.5, 4.5, 78);
+    let k = 3;
+    let parts = HashPartitioner::default().partition(&g, k);
+    let dg = discover(&g, &parts).unwrap();
+    let source = (0..g.num_vertices() as u32)
+        .max_by_key(|&v| g.out_degree(v))
+        .unwrap_or(0);
+
+    let with = run(&dg, &SsspSg { source }, &GopherConfig::default()).unwrap();
+    let without_cfg = GopherConfig { combiners: false, ..Default::default() };
+    let without = run(&dg, &SsspSg { source }, &without_cfg).unwrap();
+
+    let dist = |res: goffish::gopher::RunResult<goffish::algos::sssp::SsspState>| {
+        let states: BTreeMap<_, Vec<f32>> =
+            res.states.into_iter().map(|(id, s)| (id, s.dist)).collect();
+        gather_vertex_values(&dg, &states)
+    };
+    let with_bytes = with.metrics.total_bytes();
+    let with_combined = with.metrics.total_combined();
+    let without_bytes = without.metrics.total_bytes();
+    let a = dist(with);
+    let b = dist(without);
+    for (v, (&x, &y)) in a.iter().zip(&b).enumerate() {
+        let ok = (x.is_infinite() && y.is_infinite()) || (x - y).abs() < 1e-4;
+        assert!(ok, "vertex {v}: with-combiner {x} vs without {y}");
+    }
+    // Combiner-enabled vs pregel baseline (also combiner-enabled).
+    let vx = run_vertex(&g, &parts, &SsspVx { source }, &PregelConfig::default()).unwrap();
+    for (v, (&x, &y)) in a.iter().zip(&vx.values).enumerate() {
+        let ok = (x.is_infinite() && y.is_infinite()) || (x - y).abs() < 1e-3;
+        assert!(ok, "vertex {v}: gopher {x} vs pregel {y}");
+    }
+
+    assert!(with_combined > 0, "combiner never fired");
+    assert!(
+        with_bytes < without_bytes,
+        "combined SSSP bytes {with_bytes} must be < uncombined {without_bytes}"
+    );
+}
+
+#[test]
 fn pagerank_parity_randomized() {
     let mut rng = Rng::new(555);
     for case in 0..5 {
@@ -111,7 +191,7 @@ fn pagerank_parity_randomized() {
         let k = 2 + rng.index(3);
         let parts = MultilevelPartitioner::new(case).partition(&g, k);
         let dg = discover(&g, &parts).unwrap();
-        let prog = PageRankSg { supersteps: 12, kernel: RankKernel::Scalar };
+        let prog = PageRankSg { supersteps: 12, kernel: RankKernel::Scalar, epsilon: None };
         let res = run(&dg, &prog, &GopherConfig::default()).unwrap();
         let states: BTreeMap<_, Vec<f32>> =
             res.states.into_iter().map(|(id, s)| (id, s.ranks)).collect();
