@@ -1,18 +1,17 @@
 //! Quickstart: the GoFFish API in ~40 lines.
 //!
-//! Generate a small road network, partition it, build a GoFS store, run
-//! sub-graph centric Connected Components with Gopher, and print the
-//! component count plus job metrics.
+//! Generate a small road network, partition it, build a GoFS store, and
+//! run Connected Components through the unified job layer — once per
+//! engine — printing the component count plus job metrics.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use goffish::algos::cc::{count_components, CcSg};
-use goffish::algos::gather_subgraph_values;
+use goffish::algos::cc::count_components;
 use goffish::gofs::Store;
-use goffish::gopher::{run_on_store, GopherConfig};
 use goffish::graph::{gen, props};
+use goffish::job::{EngineKind, Job, JobSource};
 use goffish::partition::{MultilevelPartitioner, Partitioner};
 
 fn main() -> anyhow::Result<()> {
@@ -34,14 +33,30 @@ fn main() -> anyhow::Result<()> {
         store.meta().num_partitions
     );
 
-    // 4. Run sub-graph centric Connected Components with Gopher.
-    let res = run_on_store(&store, &CcSg, &GopherConfig::default())?;
+    // 4. One job description, any engine, any source: Connected
+    //    Components with Gopher against the on-disk store…
+    let job = Job::builder().algo("cc").engine(EngineKind::Gopher).build()?;
+    let out = job.run(JobSource::Store(&store))?;
 
-    // 5. Inspect results.
-    let labels = gather_subgraph_values(&dg, &res.states);
-    println!("components: {} (ground truth {})", count_components(&labels), props::wcc_count(&g));
-    println!("{}", res.metrics.report("quickstart/cc"));
+    // 5. …with uniform per-vertex output.
+    let labels: Vec<u32> = out.values.iter().map(|&(_, l)| l as u32).collect();
+    println!(
+        "components: {} (ground truth {})",
+        count_components(&labels),
+        props::wcc_count(&g)
+    );
+    println!("{}", out.metrics.report("quickstart/cc/gopher"));
     assert_eq!(count_components(&labels), props::wcc_count(&g));
+
+    // 6. The vertex-centric baseline is one builder knob away and must
+    //    agree per vertex.
+    let vout = Job::builder()
+        .algo("cc")
+        .engine(EngineKind::Vertex)
+        .build()?
+        .run(JobSource::Store(&store))?;
+    println!("{}", vout.metrics.report("quickstart/cc/vertex"));
+    assert_eq!(out.values, vout.values);
     println!("OK");
     Ok(())
 }

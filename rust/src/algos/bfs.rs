@@ -113,6 +113,16 @@ impl SubgraphProgram for BfsSg {
     fn combine(&self, a: &Self::Msg, b: &Self::Msg) -> Option<Self::Msg> {
         Some(if a.1 <= b.1 { *a } else { *b })
     }
+
+    /// Per-vertex BFS level ([`UNREACHED`] stays the raw sentinel so
+    /// both engines emit identical values).
+    fn emit(&self, levels: &Vec<u32>, sg: &Subgraph) -> Vec<(VertexId, f64)> {
+        sg.vertices
+            .iter()
+            .zip(levels)
+            .map(|(&v, &l)| (v, l as f64))
+            .collect()
+    }
 }
 
 /// Vertex-centric BFS.
@@ -150,6 +160,10 @@ impl VertexProgram for BfsVx {
 
     fn combine(&self, a: &u32, b: &u32) -> Option<u32> {
         Some(*a.min(b))
+    }
+
+    fn emit(&self, vertex: VertexId, value: &u32) -> Vec<(VertexId, f64)> {
+        vec![(vertex, *value as f64)]
     }
 }
 

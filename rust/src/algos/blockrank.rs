@@ -30,6 +30,7 @@ use anyhow::Result;
 
 use crate::gofs::{Subgraph, SubgraphId};
 use crate::gopher::{IncomingMessage, MsgCodec, SubgraphContext, SubgraphProgram};
+use crate::graph::VertexId;
 use crate::util::codec::{Decoder, Encoder};
 
 use super::pagerank::{RankKernel, ALPHA};
@@ -348,6 +349,15 @@ impl SubgraphProgram for BlockRankSg {
                 );
             }
         }
+    }
+
+    /// Per-vertex final rank.
+    fn emit(&self, state: &BrState, sg: &Subgraph) -> Vec<(VertexId, f64)> {
+        sg.vertices
+            .iter()
+            .zip(&state.ranks)
+            .map(|(&v, &r)| (v, r as f64))
+            .collect()
     }
 }
 

@@ -55,6 +55,11 @@ impl SubgraphProgram for CcSg {
     fn combine(&self, a: &u32, b: &u32) -> Option<u32> {
         Some(*a.max(b))
     }
+
+    /// Per-vertex component label (uniform across the sub-graph).
+    fn emit(&self, state: &u32, sg: &Subgraph) -> Vec<(VertexId, f64)> {
+        sg.vertices.iter().map(|&v| (v, *state as f64)).collect()
+    }
 }
 
 /// Vertex-centric Connected Components (HCC).
@@ -90,6 +95,10 @@ impl VertexProgram for CcVx {
 
     fn combine(&self, a: &u32, b: &u32) -> Option<u32> {
         Some(*a.max(b))
+    }
+
+    fn emit(&self, vertex: VertexId, value: &u32) -> Vec<(VertexId, f64)> {
+        vec![(vertex, *value as f64)]
     }
 }
 

@@ -23,6 +23,8 @@ use std::collections::HashMap;
 use crate::coordinator::{AggOp, AggregatorSpec};
 use crate::gofs::Subgraph;
 use crate::gopher::{IncomingMessage, SubgraphContext, SubgraphProgram};
+use crate::graph::csr::{Graph, VertexId};
+use crate::pregel::{VertexContext, VertexProgram};
 
 /// Name of the global changed-labels-this-round aggregator (Sum).
 pub const AGG_CHANGES: &str = "lp_changes";
@@ -189,6 +191,100 @@ impl SubgraphProgram for LabelPropSg {
     fn aggregators(&self) -> Vec<AggregatorSpec> {
         vec![AggregatorSpec::new(AGG_CHANGES, AggOp::Sum)]
     }
+
+    /// Per-vertex community label.
+    fn emit(&self, state: &LpState, sg: &Subgraph) -> Vec<(VertexId, f64)> {
+        sg.vertices
+            .iter()
+            .zip(&state.labels)
+            .map(|(&v, &l)| (v, l as f64))
+            .collect()
+    }
+}
+
+/// Vertex-centric synchronous label propagation: the same rule and the
+/// same aggregator-driven termination, over the pregel baseline — the
+/// coordinator layer now rides both engines, so the unified job layer
+/// can run `labelprop` on either and get identical labels.
+///
+/// Every active vertex re-announces its label each superstep (there is
+/// no receiver-side cache here, unlike [`LabelPropSg`]): superstep 1
+/// only establishes neighbour labels, and superstep `s ≥ 2` computes
+/// synchronous round `s − 1`, exactly in phase with the sub-graph
+/// version — including the change accounting that feeds the global
+/// [`AGG_CHANGES`] sum, so both engines halt on the same superstep.
+pub struct LabelPropVx {
+    /// Hard cap on propagation rounds (sync LP can oscillate).
+    pub max_rounds: usize,
+}
+
+impl Default for LabelPropVx {
+    fn default() -> Self {
+        Self { max_rounds: 50 }
+    }
+}
+
+impl VertexProgram for LabelPropVx {
+    type Msg = u32; // the sender's current label
+    type Value = u32;
+
+    fn init(&self, vertex: VertexId, _g: &Graph) -> u32 {
+        vertex
+    }
+
+    fn compute(&self, value: &mut u32, ctx: &mut VertexContext<'_, u32>, msgs: &[u32]) {
+        let slot = ctx.aggregator(AGG_CHANGES).expect("registered aggregator");
+        let s = ctx.superstep();
+        // Superstep 1 mirrors the sub-graph version's bootstrap round
+        // (label announcement only), including its change accounting.
+        let changed = if s == 1 {
+            true
+        } else {
+            let mut freq: HashMap<u32, u32> = HashMap::new();
+            for &m in msgs {
+                *freq.entry(m).or_insert(0) += 1;
+            }
+            let current = *value;
+            match freq.values().max().copied() {
+                // Isolated vertex: keeps its own label forever.
+                None => false,
+                // Keep the current label when it is already maximal
+                // (the standard oscillation damper).
+                Some(best) if freq.get(&current).copied().unwrap_or(0) == best => false,
+                Some(best) => {
+                    *value = freq
+                        .iter()
+                        .filter(|(_, &c)| c == best)
+                        .map(|(&l, _)| l)
+                        .min()
+                        .unwrap();
+                    true
+                }
+            }
+        };
+        ctx.aggregate(slot, if changed { 1.0 } else { 0.0 });
+
+        // Globally converged: the round before last changed nothing
+        // anywhere (every vertex observes this on the same superstep),
+        // or we hit the oscillation cap.
+        let converged = s >= 3
+            && ctx
+                .aggregated(slot)
+                .is_some_and(|global_changes| global_changes == 0.0);
+        if converged || s > self.max_rounds {
+            ctx.vote_to_halt();
+            return;
+        }
+        ctx.send_to_all_undirected(*value);
+    }
+
+    fn aggregators(&self) -> Vec<AggregatorSpec> {
+        vec![AggregatorSpec::new(AGG_CHANGES, AggOp::Sum)]
+    }
+
+    fn emit(&self, vertex: VertexId, value: &u32) -> Vec<(VertexId, f64)> {
+        vec![(vertex, *value as f64)]
+    }
 }
 
 #[cfg(test)]
@@ -237,6 +333,25 @@ mod tests {
         let trace = metrics.aggregator(AGG_CHANGES).expect("changes trace");
         assert_eq!(trace.values.len(), steps);
         assert_eq!(trace.values[steps - 2], 0.0, "{:?}", trace.values);
+    }
+
+    #[test]
+    fn vertex_engine_matches_subgraph_engine() {
+        use crate::pregel::{run_vertex, PregelConfig};
+        // Sync LP is engine-independent: the pregel implementation
+        // (aggregator-terminated, like the Gopher one) must produce the
+        // same labels in the same number of supersteps.
+        let g = crate::graph::gen::social(200, 4, 0.05, 9);
+        let parts = HashPartitioner::default().partition(&g, 3);
+        let (sg_labels, sg_metrics) = lp_labels(&g, parts.clone());
+        let vx = run_vertex(&g, &parts, &LabelPropVx::default(), &PregelConfig::default())
+            .unwrap();
+        assert_eq!(sg_labels, vx.values);
+        assert_eq!(sg_metrics.num_supersteps(), vx.metrics.num_supersteps());
+        // The vertex engine's coordinator recorded the same change trace.
+        let sg_trace = sg_metrics.aggregator(AGG_CHANGES).expect("gopher trace");
+        let vx_trace = vx.metrics.aggregator(AGG_CHANGES).expect("pregel trace");
+        assert_eq!(sg_trace.values, vx_trace.values);
     }
 
     #[test]

@@ -56,6 +56,11 @@ impl SubgraphProgram for MaxValueSg {
     fn combine(&self, a: &f32, b: &f32) -> Option<f32> {
         Some(a.max(*b))
     }
+
+    /// Per-vertex converged max (uniform across the sub-graph).
+    fn emit(&self, state: &f32, sg: &Subgraph) -> Vec<(VertexId, f64)> {
+        sg.vertices.iter().map(|&v| (v, *state as f64)).collect()
+    }
 }
 
 /// Vertex-centric Max Value (paper Algorithm 1).
@@ -91,6 +96,10 @@ impl VertexProgram for MaxValueVx {
 
     fn combine(&self, a: &f32, b: &f32) -> Option<f32> {
         Some(a.max(*b))
+    }
+
+    fn emit(&self, vertex: VertexId, value: &f32) -> Vec<(VertexId, f64)> {
+        vec![(vertex, *value as f64)]
     }
 }
 

@@ -13,7 +13,7 @@
 //! | BFS                         | [`bfs::BfsSg`]           | [`bfs::BfsVx`] |
 //! | PageRank (§5.3)             | [`pagerank::PageRankSg`] | [`pagerank::PageRankVx`] |
 //! | BlockRank (§5.3)            | [`blockrank::BlockRankSg`] | — (paper has none) |
-//! | Label Propagation           | [`labelprop::LabelPropSg`] | — (coordinator showcase) |
+//! | Label Propagation           | [`labelprop::LabelPropSg`] | [`labelprop::LabelPropVx`] |
 //!
 //! The sub-graph PageRank/BlockRank/SSSP/CC programs can route their
 //! per-sub-graph inner loops through the AOT-compiled XLA kernels (see
@@ -22,6 +22,11 @@
 //! coordinator layer: PageRank and Label Propagation terminate via
 //! global aggregators, and SSSP/CC/BFS/MaxValue/PageRank define message
 //! combiners that fold same-destination traffic before the wire.
+//!
+//! Every program also implements the `emit` hook of its engine trait,
+//! and [`registry`] maps algorithm names + [`registry::AlgoParams`] to
+//! runnable jobs on either engine — the single dispatch surface behind
+//! [`crate::job::Job`] and the CLI.
 
 pub mod maxvalue;
 pub mod cc;
@@ -30,6 +35,7 @@ pub mod bfs;
 pub mod pagerank;
 pub mod blockrank;
 pub mod labelprop;
+pub mod registry;
 
 use crate::gofs::{DistributedGraph, SubgraphId};
 use std::collections::BTreeMap;

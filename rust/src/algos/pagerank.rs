@@ -249,6 +249,15 @@ impl SubgraphProgram for PageRankSg {
     fn combine(&self, a: &Self::Msg, b: &Self::Msg) -> Option<Self::Msg> {
         Some((a.0, a.1 + b.1))
     }
+
+    /// Per-vertex final rank.
+    fn emit(&self, state: &PrState, sg: &Subgraph) -> Vec<(VertexId, f64)> {
+        sg.vertices
+            .iter()
+            .zip(&state.ranks)
+            .map(|(&v, &r)| (v, r as f64))
+            .collect()
+    }
 }
 
 /// Vertex-centric PageRank (the Pregel canon).
@@ -290,6 +299,10 @@ impl VertexProgram for PageRankVx {
 
     fn combine(&self, a: &f32, b: &f32) -> Option<f32> {
         Some(a + b)
+    }
+
+    fn emit(&self, vertex: VertexId, value: &f32) -> Vec<(VertexId, f64)> {
+        vec![(vertex, *value as f64)]
     }
 }
 

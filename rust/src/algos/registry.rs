@@ -1,0 +1,342 @@
+//! Algorithm registry: the single name → runnable-job mapping shared by
+//! the CLI and the unified job layer ([`crate::job`]).
+//!
+//! Each [`AlgoEntry`] binds an algorithm name to up to two monomorphic
+//! run functions — one per engine — that construct the concrete program
+//! from engine-agnostic [`AlgoParams`], execute it, and return the
+//! uniform [`JobOutput`]. This is what collapses the CLI's historical
+//! twin `match algo { … }` blocks into one registry-driven path: adding
+//! an algorithm is a one-file change (the program) plus one entry here,
+//! with no CLI edits.
+//!
+//! The entry's `gopher`/`vertex` options double as the capability
+//! matrix: [`crate::job::JobBuilder::build`] rejects an engine the
+//! entry does not implement with a typed error, before anything runs.
+
+use anyhow::Result;
+
+use crate::algos;
+use crate::algos::pagerank::RankKernel;
+use crate::gofs::{DistributedGraph, Store};
+use crate::gopher::{self, GopherConfig, SubgraphProgram};
+use crate::graph::{Graph, VertexId};
+use crate::job::JobOutput;
+use crate::partition::Partitioning;
+use crate::pregel::{self, PregelConfig, VertexProgram};
+
+/// Engine-agnostic algorithm parameters. Each run function picks out
+/// the fields its program needs and ignores the rest (exactly like CLI
+/// flags: `--source` does nothing for PageRank).
+#[derive(Clone)]
+pub struct AlgoParams {
+    /// Source vertex (BFS / SSSP).
+    pub source: VertexId,
+    /// Fixed iteration count (PageRank) or round cap (label propagation).
+    pub supersteps: usize,
+    /// Aggregator-driven PageRank convergence threshold (Gopher only;
+    /// the job builder rejects it on the vertex engine).
+    pub epsilon: Option<f32>,
+    /// Numeric kernel for the rank-update hot loops.
+    pub kernel: RankKernel,
+}
+
+impl Default for AlgoParams {
+    fn default() -> Self {
+        Self {
+            source: 0,
+            supersteps: algos::pagerank::DEFAULT_SUPERSTEPS,
+            epsilon: None,
+            kernel: RankKernel::Scalar,
+        }
+    }
+}
+
+/// Where a Gopher run reads its sub-graphs from.
+pub enum GopherTarget<'a> {
+    /// An already-discovered in-memory distributed graph.
+    Mem(&'a DistributedGraph),
+    /// An on-disk GoFS store (data-local loading).
+    Disk(&'a Store),
+}
+
+impl GopherTarget<'_> {
+    /// Sub-graph count per partition (BlockRank's block directory).
+    pub fn directory(&self) -> Vec<u32> {
+        match self {
+            GopherTarget::Mem(dg) => {
+                dg.partitions.iter().map(|p| p.len() as u32).collect()
+            }
+            GopherTarget::Disk(store) => store.meta().subgraph_counts.clone(),
+        }
+    }
+}
+
+/// Boxed-free job factory for the Gopher engine (plain fn pointers:
+/// every entry is a monomorphic wrapper around the generic engine).
+pub type GopherRunFn =
+    fn(&AlgoParams, &GopherTarget<'_>, &GopherConfig) -> Result<JobOutput>;
+
+/// Job factory for the vertex engine.
+pub type VertexRunFn =
+    fn(&AlgoParams, &Graph, &Partitioning, &PregelConfig) -> Result<JobOutput>;
+
+/// One registered algorithm.
+pub struct AlgoEntry {
+    pub name: &'static str,
+    /// One-line description (`goffish help`-style listings).
+    pub description: &'static str,
+    /// Sub-graph centric implementation, if any.
+    pub gopher: Option<GopherRunFn>,
+    /// Vertex-centric implementation, if any.
+    pub vertex: Option<VertexRunFn>,
+}
+
+/// Run a sub-graph program against either target and wrap the result.
+fn run_sg<P: SubgraphProgram>(
+    target: &GopherTarget<'_>,
+    prog: &P,
+    cfg: &GopherConfig,
+) -> Result<JobOutput> {
+    let res = match target {
+        GopherTarget::Mem(dg) => gopher::run(dg, prog, cfg)?,
+        GopherTarget::Disk(store) => gopher::run_on_store(store, prog, cfg)?,
+    };
+    Ok(JobOutput::from_gopher(res))
+}
+
+/// Run a vertex program and wrap the result (per-vertex emit included).
+fn run_vx<P: VertexProgram>(
+    g: &Graph,
+    parts: &Partitioning,
+    prog: &P,
+    cfg: &PregelConfig,
+) -> Result<JobOutput> {
+    let res = pregel::run_vertex(g, parts, prog, cfg)?;
+    Ok(JobOutput::from_vertex(prog, res))
+}
+
+// ------------------------------------------------------ per-algo run fns
+
+fn gopher_cc(
+    _p: &AlgoParams,
+    t: &GopherTarget<'_>,
+    cfg: &GopherConfig,
+) -> Result<JobOutput> {
+    run_sg(t, &algos::cc::CcSg, cfg)
+}
+
+fn vertex_cc(
+    _p: &AlgoParams,
+    g: &Graph,
+    parts: &Partitioning,
+    cfg: &PregelConfig,
+) -> Result<JobOutput> {
+    run_vx(g, parts, &algos::cc::CcVx, cfg)
+}
+
+fn gopher_maxvalue(
+    _p: &AlgoParams,
+    t: &GopherTarget<'_>,
+    cfg: &GopherConfig,
+) -> Result<JobOutput> {
+    run_sg(t, &algos::maxvalue::MaxValueSg, cfg)
+}
+
+fn vertex_maxvalue(
+    _p: &AlgoParams,
+    g: &Graph,
+    parts: &Partitioning,
+    cfg: &PregelConfig,
+) -> Result<JobOutput> {
+    run_vx(g, parts, &algos::maxvalue::MaxValueVx, cfg)
+}
+
+fn gopher_bfs(
+    p: &AlgoParams,
+    t: &GopherTarget<'_>,
+    cfg: &GopherConfig,
+) -> Result<JobOutput> {
+    run_sg(t, &algos::bfs::BfsSg { source: p.source }, cfg)
+}
+
+fn vertex_bfs(
+    p: &AlgoParams,
+    g: &Graph,
+    parts: &Partitioning,
+    cfg: &PregelConfig,
+) -> Result<JobOutput> {
+    run_vx(g, parts, &algos::bfs::BfsVx { source: p.source }, cfg)
+}
+
+fn gopher_sssp(
+    p: &AlgoParams,
+    t: &GopherTarget<'_>,
+    cfg: &GopherConfig,
+) -> Result<JobOutput> {
+    run_sg(t, &algos::sssp::SsspSg { source: p.source }, cfg)
+}
+
+fn vertex_sssp(
+    p: &AlgoParams,
+    g: &Graph,
+    parts: &Partitioning,
+    cfg: &PregelConfig,
+) -> Result<JobOutput> {
+    run_vx(g, parts, &algos::sssp::SsspVx { source: p.source }, cfg)
+}
+
+fn gopher_pagerank(
+    p: &AlgoParams,
+    t: &GopherTarget<'_>,
+    cfg: &GopherConfig,
+) -> Result<JobOutput> {
+    let prog = algos::pagerank::PageRankSg {
+        supersteps: p.supersteps,
+        kernel: p.kernel.clone(),
+        epsilon: p.epsilon,
+    };
+    run_sg(t, &prog, cfg)
+}
+
+fn vertex_pagerank(
+    p: &AlgoParams,
+    g: &Graph,
+    parts: &Partitioning,
+    cfg: &PregelConfig,
+) -> Result<JobOutput> {
+    run_vx(g, parts, &algos::pagerank::PageRankVx { supersteps: p.supersteps }, cfg)
+}
+
+fn gopher_blockrank(
+    p: &AlgoParams,
+    t: &GopherTarget<'_>,
+    cfg: &GopherConfig,
+) -> Result<JobOutput> {
+    let mut prog = algos::blockrank::BlockRankSg::new(&t.directory());
+    prog.kernel = p.kernel.clone();
+    // BlockRank is convergence-driven: cap its superstep budget (the
+    // seed CLI hard-coded 500) unless the caller asked for even less.
+    let cfg2 = GopherConfig {
+        max_supersteps: cfg.max_supersteps.min(500),
+        ..cfg.clone()
+    };
+    run_sg(t, &prog, &cfg2)
+}
+
+fn gopher_labelprop(
+    p: &AlgoParams,
+    t: &GopherTarget<'_>,
+    cfg: &GopherConfig,
+) -> Result<JobOutput> {
+    run_sg(t, &algos::labelprop::LabelPropSg { max_rounds: p.supersteps }, cfg)
+}
+
+fn vertex_labelprop(
+    p: &AlgoParams,
+    g: &Graph,
+    parts: &Partitioning,
+    cfg: &PregelConfig,
+) -> Result<JobOutput> {
+    run_vx(g, parts, &algos::labelprop::LabelPropVx { max_rounds: p.supersteps }, cfg)
+}
+
+// --------------------------------------------------------------- entries
+
+static ENTRIES: &[AlgoEntry] = &[
+    AlgoEntry {
+        name: "cc",
+        description: "connected components (HCC max-label flood, paper §5.1)",
+        gopher: Some(gopher_cc),
+        vertex: Some(vertex_cc),
+    },
+    AlgoEntry {
+        name: "maxvalue",
+        description: "max vertex value (the paper's Algorithms 1 & 2)",
+        gopher: Some(gopher_maxvalue),
+        vertex: Some(vertex_maxvalue),
+    },
+    AlgoEntry {
+        name: "bfs",
+        description: "breadth-first levels from --source",
+        gopher: Some(gopher_bfs),
+        vertex: Some(vertex_bfs),
+    },
+    AlgoEntry {
+        name: "sssp",
+        description: "single-source shortest paths from --source (Alg 3)",
+        gopher: Some(gopher_sssp),
+        vertex: Some(vertex_sssp),
+    },
+    AlgoEntry {
+        name: "pagerank",
+        description: "damped PageRank; --epsilon enables aggregator convergence",
+        gopher: Some(gopher_pagerank),
+        vertex: Some(vertex_pagerank),
+    },
+    AlgoEntry {
+        name: "blockrank",
+        description: "BlockRank warm-started convergent PageRank (paper §5.3)",
+        gopher: Some(gopher_blockrank),
+        vertex: None, // the paper has no vertex-centric BlockRank
+    },
+    AlgoEntry {
+        name: "labelprop",
+        description: "synchronous label propagation, aggregator-terminated",
+        gopher: Some(gopher_labelprop),
+        vertex: Some(vertex_labelprop),
+    },
+];
+
+/// All registered algorithms, in display order.
+pub fn entries() -> &'static [AlgoEntry] {
+    ENTRIES
+}
+
+/// Look an algorithm up by name.
+pub fn find(name: &str) -> Option<&'static AlgoEntry> {
+    ENTRIES.iter().find(|e| e.name == name)
+}
+
+/// Registered algorithm names (for error messages and help output).
+pub fn names() -> Vec<&'static str> {
+    ENTRIES.iter().map(|e| e.name).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(find("cc").is_some());
+        assert!(find("pagerank").is_some());
+        assert!(find("frobnicate").is_none());
+        assert_eq!(names().len(), ENTRIES.len());
+    }
+
+    #[test]
+    fn capability_matrix_shape() {
+        // Every algorithm has a sub-graph centric implementation; only
+        // blockrank lacks a vertex-centric one.
+        for e in entries() {
+            assert!(e.gopher.is_some(), "{} missing gopher impl", e.name);
+            if e.name == "blockrank" {
+                assert!(e.vertex.is_none());
+            } else {
+                assert!(e.vertex.is_some(), "{} missing vertex impl", e.name);
+            }
+        }
+    }
+
+    #[test]
+    fn directory_matches_distributed_graph() {
+        use crate::gofs::subgraph::discover;
+        use crate::partition::{Partitioner, RangePartitioner};
+        let g = crate::graph::gen::chain(12);
+        let parts = RangePartitioner.partition(&g, 3);
+        let dg = discover(&g, &parts).unwrap();
+        let dir = GopherTarget::Mem(&dg).directory();
+        assert_eq!(dir.len(), 3);
+        assert_eq!(dir.iter().sum::<u32>() as usize, dg.num_subgraphs());
+    }
+}

@@ -160,6 +160,15 @@ impl SubgraphProgram for SsspSg {
     fn combine(&self, a: &Self::Msg, b: &Self::Msg) -> Option<Self::Msg> {
         Some(if a.1 <= b.1 { *a } else { *b })
     }
+
+    /// Per-vertex tentative distance (`+inf` for unreachable vertices).
+    fn emit(&self, state: &SsspState, sg: &Subgraph) -> Vec<(VertexId, f64)> {
+        sg.vertices
+            .iter()
+            .zip(&state.dist)
+            .map(|(&v, &d)| (v, d as f64))
+            .collect()
+    }
 }
 
 /// Vertex-centric SSSP.
@@ -215,6 +224,10 @@ impl VertexProgram for SsspVx {
 
     fn combine(&self, a: &f32, b: &f32) -> Option<f32> {
         Some(a.min(*b))
+    }
+
+    fn emit(&self, vertex: VertexId, value: &f32) -> Vec<(VertexId, f64)> {
+        vec![(vertex, *value as f64)]
     }
 }
 

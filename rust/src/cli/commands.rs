@@ -6,31 +6,35 @@
 //! goffish partition --graph g.txt --k 4 [--strategy multilevel|hash|range]
 //! goffish store     --graph g.txt --k 4 --out storedir [--strategy …] [--name NAME]
 //! goffish run       --store storedir
-//!                   --algo cc|sssp|bfs|pagerank|blockrank|maxvalue|labelprop
+//!                   --algo <any algos::registry entry>
 //!                   [--engine gopher|vertex] [--source V] [--supersteps N]
 //!                   [--epsilon E] [--no-combine] [--max-supersteps N]
 //!                   [--xla] [--fabric inproc|tcp] [--cores N]
+//!                   [--output values.tsv]
 //! ```
 //!
-//! Coordinator knobs: `--epsilon` switches PageRank to aggregator-driven
-//! convergence (global L1 delta < E terminates the job), `--no-combine`
-//! disables the Gopher message combiners, and aggregator traces are
-//! printed after any run that registered them.
+//! `run` is a thin shell over the unified job layer: flags are handed
+//! to [`Job::builder`], validation (unknown algorithms, engine/knob
+//! mismatches like `--epsilon` on the vertex engine) happens in
+//! `build()` with typed errors, and the algorithm dispatch itself lives
+//! in [`crate::algos::registry`] — adding an algorithm requires no CLI
+//! edits beyond its registry entry. `--output` dumps the uniform
+//! `JobOutput::values` as `vertex<TAB>value` lines.
 
 use std::path::Path;
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::algos;
 use crate::algos::pagerank::RankKernel;
+use crate::algos::registry;
 use crate::gofs::Store;
-use crate::gopher::{self, FabricKind, GopherConfig};
+use crate::gopher::FabricKind;
 use crate::graph::{gen, io, props, Graph};
+use crate::job::{EngineKind, Job, JobSource};
 use crate::partition::{
     HashPartitioner, MultilevelPartitioner, Partitioner, RangePartitioner,
 };
-use crate::pregel::{self, PregelConfig};
 use crate::runtime::XlaEngine;
 
 use super::args::Args;
@@ -43,6 +47,7 @@ pub fn dispatch(argv: Vec<String>) -> Result<()> {
         "partition" => cmd_partition(&args),
         "store" => cmd_store(&args),
         "run" => cmd_run(&args),
+        "algos" => cmd_algos(),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
             Ok(())
@@ -59,6 +64,7 @@ commands:
   partition partition a graph and report cut metrics
   store     build a GoFS store directory (partition + sub-graph slices)
   run       execute an algorithm with Gopher or the vertex baseline
+  algos     list registered algorithms and their engine support
   help      this message
 
 see rust/src/cli/commands.rs for per-command flags.
@@ -162,13 +168,40 @@ fn cmd_store(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_algos() -> Result<()> {
+    println!("algorithm   engines        description");
+    for e in registry::entries() {
+        let engines = match (e.gopher.is_some(), e.vertex.is_some()) {
+            (true, true) => "gopher+vertex",
+            (true, false) => "gopher",
+            (false, true) => "vertex",
+            (false, false) => "-",
+        };
+        println!("{:<11} {:<14} {}", e.name, engines, e.description);
+    }
+    Ok(())
+}
+
+/// The single algorithm dispatch path: flags → `Job::builder()` →
+/// registry-driven run. No per-algorithm logic lives here.
 fn cmd_run(args: &Args) -> Result<()> {
     let store = Store::open(Path::new(args.require("store")?))?;
     let algo = args.get_or("algo", "cc");
-    let engine = args.get_or("engine", "gopher");
-    let source = args.get_usize("source", 0)? as u32;
-    let supersteps = args.get_usize("supersteps", 30)?;
-    let max_supersteps = args.get_usize("max-supersteps", 10_000)?;
+    let engine = match args.get_or("engine", "gopher") {
+        "gopher" => EngineKind::Gopher,
+        "vertex" => EngineKind::Vertex,
+        e => bail!("unknown engine {e:?}"),
+    };
+    let fabric = match args.get_or("fabric", "inproc") {
+        "inproc" => FabricKind::InProc,
+        "tcp" => FabricKind::Tcp,
+        f => bail!("unknown fabric {f:?}"),
+    };
+    let kernel = if args.flag("xla") {
+        RankKernel::Xla(Arc::new(XlaEngine::load_default()?))
+    } else {
+        RankKernel::Scalar
+    };
     let epsilon = match args.get("epsilon") {
         Some(s) => Some(
             s.parse::<f32>()
@@ -176,132 +209,54 @@ fn cmd_run(args: &Args) -> Result<()> {
         ),
         None => None,
     };
-    let combiners = !args.flag("no-combine");
-    let fabric = match args.get_or("fabric", "inproc") {
-        "inproc" => FabricKind::InProc,
-        "tcp" => FabricKind::Tcp,
-        f => bail!("unknown fabric {f:?}"),
-    };
-    let cores = args.get_usize("cores", 4)?;
-    let kernel = if args.flag("xla") {
-        RankKernel::Xla(Arc::new(XlaEngine::load_default()?))
-    } else {
-        RankKernel::Scalar
-    };
 
-    if engine == "gopher" {
-        let cfg = GopherConfig {
-            cores_per_worker: cores,
-            fabric,
-            combiners,
-            max_supersteps,
-            ..Default::default()
-        };
-        let metrics = match algo {
-            "cc" => gopher::run_on_store(&store, &algos::cc::CcSg, &cfg)?.metrics,
-            "maxvalue" => {
-                gopher::run_on_store(&store, &algos::maxvalue::MaxValueSg, &cfg)?.metrics
-            }
-            "bfs" => {
-                gopher::run_on_store(&store, &algos::bfs::BfsSg { source }, &cfg)?.metrics
-            }
-            "sssp" => {
-                gopher::run_on_store(&store, &algos::sssp::SsspSg { source }, &cfg)?.metrics
-            }
-            "pagerank" => {
-                let prog = algos::pagerank::PageRankSg { supersteps, kernel, epsilon };
-                gopher::run_on_store(&store, &prog, &cfg)?.metrics
-            }
-            "labelprop" => {
-                let prog = algos::labelprop::LabelPropSg { max_rounds: supersteps };
-                gopher::run_on_store(&store, &prog, &cfg)?.metrics
-            }
-            "blockrank" => {
-                let mut prog =
-                    algos::blockrank::BlockRankSg::new(&store.meta().subgraph_counts);
-                prog.kernel = kernel;
-                let cfg2 = GopherConfig { max_supersteps: 500, ..cfg };
-                gopher::run_on_store(&store, &prog, &cfg2)?.metrics
-            }
-            a => bail!("unknown algo {a:?}"),
-        };
-        println!("{}", metrics.report(&format!("gopher/{algo}")));
-        for trace in &metrics.aggregators {
-            println!(
-                "  aggregator {}: last={:?} over {} supersteps",
-                trace.name,
-                trace.last(),
-                trace.values.len()
-            );
-        }
-    } else if engine == "vertex" {
-        // Coordinator knobs are Gopher-only: fail loudly instead of
-        // silently running the baseline in the wrong mode.
-        if epsilon.is_some() {
-            bail!("--epsilon is only supported by the gopher engine");
-        }
-        if !combiners {
-            bail!("--no-combine is only supported by the gopher engine");
-        }
-        // Vertex baseline reconstructs the full graph from the store.
-        let (dg, _) = store.load_all()?;
-        let g = reassemble(&dg)?;
-        let parts = HashPartitioner::default()
-            .partition(&g, store.meta().num_partitions as usize);
-        let cfg = PregelConfig {
-            cores_per_worker: cores,
-            fabric,
-            max_supersteps,
-            ..Default::default()
-        };
-        let metrics = match algo {
-            "cc" => pregel::run_vertex(&g, &parts, &algos::cc::CcVx, &cfg)?.metrics,
-            "maxvalue" => {
-                pregel::run_vertex(&g, &parts, &algos::maxvalue::MaxValueVx, &cfg)?.metrics
-            }
-            "bfs" => {
-                pregel::run_vertex(&g, &parts, &algos::bfs::BfsVx { source }, &cfg)?.metrics
-            }
-            "sssp" => {
-                pregel::run_vertex(&g, &parts, &algos::sssp::SsspVx { source }, &cfg)?
-                    .metrics
-            }
-            "pagerank" => {
-                let prog = algos::pagerank::PageRankVx { supersteps };
-                pregel::run_vertex(&g, &parts, &prog, &cfg)?.metrics
-            }
-            a => bail!("algo {a:?} has no vertex-centric implementation"),
-        };
-        println!("{}", metrics.report(&format!("vertex/{algo}")));
-    } else {
-        bail!("unknown engine {engine:?}");
+    let mut builder = Job::builder()
+        .algo(algo)
+        .engine(engine)
+        .fabric(fabric)
+        .cores(args.get_usize("cores", 4)?)
+        .source_vertex(args.get_usize("source", 0)? as u32)
+        .supersteps(args.get_usize("supersteps", 30)?)
+        .max_supersteps(args.get_usize("max-supersteps", 10_000)?)
+        .kernel(kernel);
+    if let Some(eps) = epsilon {
+        builder = builder.epsilon(eps);
+    }
+    if args.flag("no-combine") {
+        builder = builder.combiners(false);
+    }
+    // Knob/engine validation happens here, with typed errors (e.g.
+    // `--epsilon` or `--no-combine` on the vertex engine).
+    let job = builder.build()?;
+
+    let out = job.run(JobSource::Store(&store))?;
+    println!("{}", out.metrics.report(&format!("{engine}/{algo}")));
+    for trace in &out.aggregators {
+        println!(
+            "  aggregator {}: last={:?} over {} supersteps",
+            trace.name,
+            trace.last(),
+            trace.values.len()
+        );
+    }
+    if let Some(path) = args.get("output") {
+        write_values_tsv(Path::new(path), &out.values)?;
+        println!("wrote {} vertex values to {path}", out.values.len());
     }
     Ok(())
 }
 
-/// Rebuild a global [`Graph`] from a distributed one (for the vertex
-/// baseline, which Giraph-style owns the whole edge list).
-pub fn reassemble(dg: &crate::gofs::DistributedGraph) -> Result<Graph> {
-    let mut edges = Vec::new();
-    let mut weights = Vec::new();
-    let mut weighted = false;
-    for sg in dg.subgraphs() {
-        for (u, v, ei) in sg.local.edges() {
-            edges.push((sg.vertices[u as usize], sg.vertices[v as usize]));
-            weights.push(sg.local.weight(ei));
-            weighted |= sg.local.has_weights();
-        }
-        for r in &sg.remote_out {
-            edges.push((sg.vertices[r.local as usize], r.target_global));
-            weights.push(r.weight);
-        }
+/// Dump per-vertex job values as `vertex<TAB>value` lines.
+fn write_values_tsv(path: &Path, values: &[(u32, f64)]) -> Result<()> {
+    use std::io::Write;
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = std::io::BufWriter::new(file);
+    for (v, x) in values {
+        writeln!(w, "{v}\t{x}")?;
     }
-    Graph::from_edges(
-        dg.num_global_vertices as usize,
-        &edges,
-        if weighted { Some(weights) } else { None },
-        dg.directed,
-    )
+    w.flush()?;
+    Ok(())
 }
 
 #[cfg(test)]
@@ -352,7 +307,7 @@ mod tests {
         ])
         .unwrap();
         // Coordinator knobs: combiner off, aggregator-driven PageRank,
-        // and the label-propagation showcase.
+        // and label propagation — on both engines now.
         run_cmd(&[
             "run",
             "--store",
@@ -376,6 +331,17 @@ mod tests {
         .unwrap();
         run_cmd(&["run", "--store", store.to_str().unwrap(), "--algo", "labelprop"])
             .unwrap();
+        run_cmd(&[
+            "run",
+            "--store",
+            store.to_str().unwrap(),
+            "--algo",
+            "labelprop",
+            "--engine",
+            "vertex",
+        ])
+        .unwrap();
+        run_cmd(&["algos"]).unwrap();
     }
 
     #[test]
@@ -408,6 +374,125 @@ mod tests {
     }
 
     #[test]
+    fn vertex_engine_rejects_gopher_knobs() {
+        let dir = tmp("vxknobs");
+        let graph = dir.join("g.txt");
+        let store = dir.join("store");
+        run_cmd(&["gen", "--kind", "chain", "--scale", "3", "--out", graph.to_str().unwrap()])
+            .unwrap();
+        run_cmd(&[
+            "store",
+            "--graph",
+            graph.to_str().unwrap(),
+            "--k",
+            "2",
+            "--out",
+            store.to_str().unwrap(),
+        ])
+        .unwrap();
+        // Typed build-time rejections from the job layer.
+        assert!(run_cmd(&[
+            "run",
+            "--store",
+            store.to_str().unwrap(),
+            "--algo",
+            "pagerank",
+            "--engine",
+            "vertex",
+            "--epsilon",
+            "0.1",
+        ])
+        .is_err());
+        assert!(run_cmd(&[
+            "run",
+            "--store",
+            store.to_str().unwrap(),
+            "--algo",
+            "cc",
+            "--engine",
+            "vertex",
+            "--no-combine",
+        ])
+        .is_err());
+        // blockrank has no vertex implementation.
+        assert!(run_cmd(&[
+            "run",
+            "--store",
+            store.to_str().unwrap(),
+            "--algo",
+            "blockrank",
+            "--engine",
+            "vertex",
+        ])
+        .is_err());
+        // Unknown algorithm names fail through the registry.
+        assert!(run_cmd(&[
+            "run",
+            "--store",
+            store.to_str().unwrap(),
+            "--algo",
+            "frobnicate",
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn output_tsv_matches_golden() {
+        // Fixed-seed chain(16): one component, HCC labels every vertex
+        // with the max id 15 — the golden file is fully determined.
+        let dir = tmp("tsv");
+        let graph = dir.join("g.txt");
+        let store = dir.join("store");
+        let out = dir.join("cc.tsv");
+        run_cmd(&[
+            "gen", "--kind", "chain", "--scale", "4", "--seed", "7", "--out",
+            graph.to_str().unwrap(),
+        ])
+        .unwrap();
+        run_cmd(&[
+            "store",
+            "--graph",
+            graph.to_str().unwrap(),
+            "--k",
+            "2",
+            "--out",
+            store.to_str().unwrap(),
+        ])
+        .unwrap();
+        run_cmd(&[
+            "run",
+            "--store",
+            store.to_str().unwrap(),
+            "--algo",
+            "cc",
+            "--engine",
+            "gopher",
+            "--output",
+            out.to_str().unwrap(),
+        ])
+        .unwrap();
+        let got = std::fs::read_to_string(&out).unwrap();
+        let golden: String = (0..16).map(|v| format!("{v}\t15\n")).collect();
+        assert_eq!(got, golden);
+
+        // The vertex engine writes the identical file.
+        let out_vx = dir.join("cc_vx.tsv");
+        run_cmd(&[
+            "run",
+            "--store",
+            store.to_str().unwrap(),
+            "--algo",
+            "cc",
+            "--engine",
+            "vertex",
+            "--output",
+            out_vx.to_str().unwrap(),
+        ])
+        .unwrap();
+        assert_eq!(std::fs::read_to_string(&out_vx).unwrap(), golden);
+    }
+
+    #[test]
     fn unknown_command_errors() {
         assert!(run_cmd(&["frobnicate"]).is_err());
     }
@@ -415,15 +500,5 @@ mod tests {
     #[test]
     fn help_is_ok() {
         run_cmd(&["help"]).unwrap();
-    }
-
-    #[test]
-    fn reassemble_preserves_counts() {
-        let g = crate::graph::gen::road(10, 0.9, 0.02, 3);
-        let p = MultilevelPartitioner::default().partition(&g, 3);
-        let dg = crate::gofs::subgraph::discover(&g, &p).unwrap();
-        let g2 = reassemble(&dg).unwrap();
-        assert_eq!(g2.num_vertices(), g.num_vertices());
-        assert_eq!(g2.num_edges(), g.num_edges());
     }
 }

@@ -14,5 +14,5 @@ pub mod subgraph;
 pub mod slice;
 pub mod store;
 
-pub use subgraph::{DistributedGraph, RemoteRef, Subgraph, SubgraphId};
+pub use subgraph::{reassemble, DistributedGraph, RemoteRef, Subgraph, SubgraphId};
 pub use store::{LoadStats, Store, StoreMeta};

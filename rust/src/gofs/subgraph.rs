@@ -270,6 +270,33 @@ pub fn discover(g: &Graph, parts: &Partitioning) -> Result<DistributedGraph> {
     })
 }
 
+/// Rebuild a global [`Graph`] from a distributed one — the inverse of
+/// [`discover`]. The vertex-centric baseline (which, Giraph-style, owns
+/// the whole edge list) and the unified job layer's store→vertex path
+/// use this to turn GoFS data back into a flat graph.
+pub fn reassemble(dg: &DistributedGraph) -> Result<Graph> {
+    let mut edges = Vec::new();
+    let mut weights = Vec::new();
+    let mut weighted = false;
+    for sg in dg.subgraphs() {
+        for (u, v, ei) in sg.local.edges() {
+            edges.push((sg.vertices[u as usize], sg.vertices[v as usize]));
+            weights.push(sg.local.weight(ei));
+            weighted |= sg.local.has_weights();
+        }
+        for r in &sg.remote_out {
+            edges.push((sg.vertices[r.local as usize], r.target_global));
+            weights.push(r.weight);
+        }
+    }
+    Graph::from_edges(
+        dg.num_global_vertices as usize,
+        &edges,
+        if weighted { Some(weights) } else { None },
+        dg.directed,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -424,6 +451,18 @@ mod tests {
         let g = gen::chain(5);
         let parts = Partitioning::new(2, vec![0, 0, 1]);
         assert!(discover(&g, &parts).is_err());
+    }
+
+    #[test]
+    fn reassemble_preserves_counts_and_weights() {
+        let g = gen::with_random_weights(&gen::road(10, 0.9, 0.02, 3), 1.0, 5.0, 4);
+        let p = crate::partition::MultilevelPartitioner::default().partition(&g, 3);
+        let dg = discover(&g, &p).unwrap();
+        let g2 = reassemble(&dg).unwrap();
+        assert_eq!(g2.num_vertices(), g.num_vertices());
+        assert_eq!(g2.num_edges(), g.num_edges());
+        assert_eq!(g2.directed(), g.directed());
+        assert_eq!(g2.has_weights(), g.has_weights());
     }
 
     #[test]

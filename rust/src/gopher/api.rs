@@ -240,6 +240,17 @@ pub trait SubgraphProgram: Sync {
     fn combine(&self, _a: &Self::Msg, _b: &Self::Msg) -> Option<Self::Msg> {
         None
     }
+
+    /// Per-vertex result extraction for the unified job layer
+    /// ([`crate::job`]): map the final sub-graph state to
+    /// `(global vertex id, value)` pairs. The engine harvests these after
+    /// the last superstep and surfaces them, sorted by vertex id, as
+    /// `RunResult::values` / `JobOutput::values` — the uniform output
+    /// shape shared with the vertex engine. The default (empty) opts the
+    /// program out of per-vertex output.
+    fn emit(&self, _state: &Self::State, _sg: &Subgraph) -> Vec<(VertexId, f64)> {
+        Vec::new()
+    }
 }
 
 #[cfg(test)]

@@ -36,6 +36,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{Aggregators, Coordinator};
 use crate::gofs::{DistributedGraph, LoadStats, Store, Subgraph, SubgraphId};
+use crate::graph::VertexId;
 use crate::metrics::{JobMetrics, SuperstepMetrics};
 use crate::util::codec::{Decoder, Encoder};
 use crate::util::pool;
@@ -77,6 +78,10 @@ impl Default for GopherConfig {
 pub struct RunResult<S> {
     /// Final per-sub-graph program states.
     pub states: BTreeMap<SubgraphId, S>,
+    /// Per-vertex values harvested via [`SubgraphProgram::emit`] after
+    /// the final superstep, sorted by global vertex id (empty for
+    /// programs that keep the default no-op emit).
+    pub values: Vec<(VertexId, f64)>,
     pub metrics: JobMetrics,
 }
 
@@ -153,11 +158,17 @@ enum ManagerCmd {
 
 struct WorkerOutput<S> {
     states: Vec<(SubgraphId, S)>,
+    /// Per-vertex values from the program's `emit` hook (this worker's
+    /// sub-graphs only; the driver merges and sorts).
+    emitted: Vec<(VertexId, f64)>,
     per_superstep: Vec<WorkerSuperstep>,
     load: LoadStats,
 }
 
 struct WorkerSuperstep {
+    /// Wall clock of this worker's whole superstep (compute + route +
+    /// drain), measured worker-side so superstep 1 never includes load.
+    wall_seconds: f64,
     compute_seconds: f64,
     unit_times: Vec<f64>,
     messages: u64,
@@ -189,7 +200,9 @@ where
     let me = fabric.id();
     let k = fabric.num_workers();
     match worker_loop(program, &fabric, cfg, aggs, subgraphs, directory, &sync_tx, &cmd_rx) {
-        Ok((states, per_superstep)) => Ok(WorkerOutput { states, per_superstep, load }),
+        Ok((states, emitted, per_superstep)) => {
+            Ok(WorkerOutput { states, emitted, per_superstep, load })
+        }
         Err(e) => {
             // Best-effort cleanup: peers may be blocked draining for our
             // EOS, and the manager for our sync.
@@ -211,7 +224,11 @@ where
     }
 }
 
-type LoopOutput<S> = (Vec<(SubgraphId, S)>, Vec<WorkerSuperstep>);
+type LoopOutput<S> = (
+    Vec<(SubgraphId, S)>,
+    Vec<(VertexId, f64)>,
+    Vec<WorkerSuperstep>,
+);
 
 #[allow(clippy::too_many_arguments)]
 fn worker_loop<P, F>(
@@ -256,6 +273,7 @@ where
     let mut last_compute = f64::INFINITY;
 
     loop {
+        let t_step = Instant::now();
         // Active set: not halted, or has input messages (paper §4.2).
         let active: Vec<usize> = (0..n_local)
             .filter(|&i| !halted[i].load(Ordering::Relaxed) || !inbox[i].is_empty())
@@ -383,6 +401,7 @@ where
         }
 
         per_superstep.push(WorkerSuperstep {
+            wall_seconds: t_step.elapsed().as_secs_f64(),
             compute_seconds,
             unit_times,
             messages: sent_msgs,
@@ -415,12 +434,14 @@ where
         }
     }
 
-    let states = subgraphs
-        .iter()
-        .zip(states)
-        .map(|(sg, cell)| (sg.id, cell.into_inner().unwrap()))
-        .collect();
-    Ok((states, per_superstep))
+    let mut out_states = Vec::with_capacity(subgraphs.len());
+    let mut emitted: Vec<(VertexId, f64)> = Vec::new();
+    for (sg, cell) in subgraphs.iter().zip(states) {
+        let state = cell.into_inner().unwrap();
+        emitted.extend(program.emit(&state, sg));
+        out_states.push((sg.id, state));
+    }
+    Ok((out_states, emitted, per_superstep))
 }
 
 // ---------------------------------------------------------------- driver
@@ -470,7 +491,6 @@ fn run_inner<P: SubgraphProgram>(
         FabricKind::Tcp => Fabrics::Tcp(transport::tcp(k)?),
     };
 
-    let t_job = Instant::now();
     let result: Result<(Vec<WorkerOutput<P::State>>, JobMetrics)> =
         std::thread::scope(|scope| {
             // ---- workers
@@ -555,8 +575,6 @@ fn run_inner<P: SubgraphProgram>(
 
             // ---- manager loop (sync barrier + coordinator fold)
             let mut coordinator = Coordinator::new(aggs.clone());
-            let mut superstep_walls: Vec<f64> = Vec::new();
-            let mut t_step = Instant::now();
             loop {
                 let mut sent_total = 0u64;
                 let mut all_quiescent = true;
@@ -585,7 +603,6 @@ fn run_inner<P: SubgraphProgram>(
                         }
                     }
                 }
-                superstep_walls.push(t_step.elapsed().as_secs_f64());
                 let globals = coordinator.fold_superstep(&partials);
                 let done = (all_quiescent && sent_total == 0) || any_failed;
                 for tx in &cmd_txs {
@@ -599,7 +616,6 @@ fn run_inner<P: SubgraphProgram>(
                 if done {
                     break;
                 }
-                t_step = Instant::now();
             }
 
             // ---- join workers, merge metrics
@@ -611,7 +627,10 @@ fn run_inner<P: SubgraphProgram>(
                     Err(p) => std::panic::resume_unwind(p),
                 }
             }
-            let n_steps = superstep_walls.len();
+            // Workers superstep in lockstep (the barrier), so every
+            // output holds the same number of per-superstep records.
+            let n_steps =
+                outputs.first().map(|o| o.per_superstep.len()).unwrap_or(0);
             let mut metrics = JobMetrics {
                 load_seconds: outputs
                     .iter()
@@ -631,25 +650,29 @@ fn run_inner<P: SubgraphProgram>(
                     sm.bytes += ws.bytes;
                     sm.active_units += ws.active_units;
                     sm.combined_messages += ws.combined;
+                    // Superstep wall = the slowest worker's own clock
+                    // (starts after load, so `makespan_seconds` never
+                    // double-counts `load_seconds` — see metrics docs).
+                    sm.wall_seconds = sm.wall_seconds.max(ws.wall_seconds);
                 }
-                sm.wall_seconds = superstep_walls[s];
                 metrics.compute_seconds += sm.wall_seconds;
                 metrics.supersteps.push(sm);
             }
             metrics.aggregators = coordinator.into_traces();
             Ok((outputs, metrics))
         });
-    let (outputs, mut metrics) = result?;
-    // Makespan sanity: compute time cannot exceed the job wall.
-    metrics.compute_seconds = metrics.compute_seconds.min(t_job.elapsed().as_secs_f64());
+    let (outputs, metrics) = result?;
 
     let mut states = BTreeMap::new();
+    let mut values: Vec<(VertexId, f64)> = Vec::new();
     for out in outputs {
+        values.extend(out.emitted);
         for (id, st) in out.states {
             states.insert(id, st);
         }
     }
-    Ok(RunResult { states, metrics })
+    values.sort_by_key(|&(v, _)| v);
+    Ok(RunResult { states, values, metrics })
 }
 
 /// Run a program over an in-memory distributed graph.

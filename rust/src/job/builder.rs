@@ -1,0 +1,304 @@
+//! [`JobBuilder`]: fluent job description with build-time validation.
+//!
+//! The builder accepts every knob either engine understands and defers
+//! nothing to run time that can be checked up front: unknown algorithm
+//! names, engines an algorithm does not implement, and Gopher-only
+//! knobs on the vertex engine all fail [`JobBuilder::build`] with a
+//! typed [`JobError`] (the CLI's old scattered `bail!`s, promoted to an
+//! API contract).
+
+use std::fmt;
+
+use crate::algos::pagerank::RankKernel;
+use crate::algos::registry::{self, AlgoParams};
+use crate::gopher::FabricKind;
+use crate::graph::VertexId;
+
+use super::Job;
+
+/// Which BSP engine executes the job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// The sub-graph centric Gopher engine (paper §4.2).
+    Gopher,
+    /// The vertex-centric Giraph-style baseline.
+    Vertex,
+}
+
+impl fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            EngineKind::Gopher => "gopher",
+            EngineKind::Vertex => "vertex",
+        })
+    }
+}
+
+/// Build-time job validation failure.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobError {
+    /// [`JobBuilder::algo`] was never called.
+    MissingAlgo,
+    /// No registry entry under this name.
+    UnknownAlgo {
+        algo: String,
+        /// The names that *are* registered.
+        known: Vec<&'static str>,
+    },
+    /// The algorithm has no implementation for the requested engine.
+    UnsupportedEngine { algo: String, engine: EngineKind },
+    /// The knob is not meaningful on the requested engine.
+    IncompatibleKnob {
+        knob: &'static str,
+        engine: EngineKind,
+        hint: &'static str,
+    },
+}
+
+impl fmt::Display for JobError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JobError::MissingAlgo => {
+                write!(f, "no algorithm named; call JobBuilder::algo(...)")
+            }
+            JobError::UnknownAlgo { algo, known } => {
+                write!(f, "unknown algorithm {algo:?}; known: {}", known.join(", "))
+            }
+            JobError::UnsupportedEngine { algo, engine } => {
+                write!(f, "algorithm {algo:?} has no {engine}-engine implementation")
+            }
+            JobError::IncompatibleKnob { knob, engine, hint } => {
+                write!(
+                    f,
+                    "knob `{knob}` is not supported on the {engine} engine ({hint})"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for JobError {}
+
+/// Fluent description of a job; see [`crate::job`] for the
+/// engine/knob compatibility matrix that [`JobBuilder::build`] enforces.
+#[derive(Clone)]
+pub struct JobBuilder {
+    algo: Option<String>,
+    engine: EngineKind,
+    fabric: FabricKind,
+    cores: usize,
+    combiners: Option<bool>,
+    epsilon: Option<f32>,
+    max_supersteps: usize,
+    supersteps: usize,
+    source_vertex: VertexId,
+    kernel: RankKernel,
+}
+
+impl Default for JobBuilder {
+    fn default() -> Self {
+        Self {
+            algo: None,
+            engine: EngineKind::Gopher,
+            fabric: FabricKind::InProc,
+            cores: 4,
+            combiners: None,
+            epsilon: None,
+            max_supersteps: 10_000,
+            supersteps: crate::algos::pagerank::DEFAULT_SUPERSTEPS,
+            source_vertex: 0,
+            kernel: RankKernel::Scalar,
+        }
+    }
+}
+
+impl JobBuilder {
+    /// Algorithm name (a [`crate::algos::registry`] entry). Required.
+    pub fn algo(mut self, name: impl Into<String>) -> Self {
+        self.algo = Some(name.into());
+        self
+    }
+
+    /// Engine to run on (default: [`EngineKind::Gopher`]).
+    pub fn engine(mut self, engine: EngineKind) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Data fabric between workers (default: in-process).
+    pub fn fabric(mut self, fabric: FabricKind) -> Self {
+        self.fabric = fabric;
+        self
+    }
+
+    /// Compute threads per worker (default: 4).
+    pub fn cores(mut self, cores: usize) -> Self {
+        self.cores = cores;
+        self
+    }
+
+    /// Enable/disable message combiners. Gopher-only when `false`
+    /// (default: enabled on both engines).
+    pub fn combiners(mut self, on: bool) -> Self {
+        self.combiners = Some(on);
+        self
+    }
+
+    /// Aggregator-driven PageRank convergence threshold. Gopher-only.
+    pub fn epsilon(mut self, eps: f32) -> Self {
+        self.epsilon = Some(eps);
+        self
+    }
+
+    /// Safety cap on supersteps (default: 10 000).
+    pub fn max_supersteps(mut self, n: usize) -> Self {
+        self.max_supersteps = n;
+        self
+    }
+
+    /// Fixed iteration count (PageRank) / round cap (label propagation).
+    pub fn supersteps(mut self, n: usize) -> Self {
+        self.supersteps = n;
+        self
+    }
+
+    /// Source vertex for traversal algorithms (BFS, SSSP; default 0).
+    pub fn source_vertex(mut self, v: VertexId) -> Self {
+        self.source_vertex = v;
+        self
+    }
+
+    /// Numeric kernel for rank-update hot loops (scalar or AOT XLA).
+    pub fn kernel(mut self, kernel: RankKernel) -> Self {
+        self.kernel = kernel;
+        self
+    }
+
+    /// Validate the description against the registry and the engine
+    /// compatibility matrix, producing a runnable [`Job`].
+    pub fn build(self) -> Result<Job, JobError> {
+        let name = self.algo.ok_or(JobError::MissingAlgo)?;
+        let entry = registry::find(&name).ok_or_else(|| JobError::UnknownAlgo {
+            algo: name.clone(),
+            known: registry::names(),
+        })?;
+        let supported = match self.engine {
+            EngineKind::Gopher => entry.gopher.is_some(),
+            EngineKind::Vertex => entry.vertex.is_some(),
+        };
+        if !supported {
+            return Err(JobError::UnsupportedEngine { algo: name, engine: self.engine });
+        }
+        if self.engine == EngineKind::Vertex {
+            if self.epsilon.is_some() {
+                return Err(JobError::IncompatibleKnob {
+                    knob: "epsilon",
+                    engine: self.engine,
+                    hint: "aggregator-driven PageRank convergence is Gopher-only",
+                });
+            }
+            if self.combiners == Some(false) {
+                return Err(JobError::IncompatibleKnob {
+                    knob: "combiners",
+                    engine: self.engine,
+                    hint: "the vertex baseline always folds same-target messages; \
+                           only Gopher can disable its combiner",
+                });
+            }
+        }
+        Ok(Job {
+            entry,
+            engine: self.engine,
+            params: AlgoParams {
+                source: self.source_vertex,
+                supersteps: self.supersteps,
+                epsilon: self.epsilon,
+                kernel: self.kernel,
+            },
+            fabric: self.fabric,
+            cores: self.cores,
+            combiners: self.combiners.unwrap_or(true),
+            max_supersteps: self.max_supersteps,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_a_default_gopher_job() {
+        let job = Job::builder().algo("cc").build().unwrap();
+        assert_eq!(job.algo_name(), "cc");
+        assert_eq!(job.engine(), EngineKind::Gopher);
+        assert!(job.combiners);
+    }
+
+    #[test]
+    fn missing_and_unknown_algos_are_typed() {
+        assert_eq!(Job::builder().build().unwrap_err(), JobError::MissingAlgo);
+        match Job::builder().algo("nope").build().unwrap_err() {
+            JobError::UnknownAlgo { algo, known } => {
+                assert_eq!(algo, "nope");
+                assert!(known.contains(&"pagerank"));
+            }
+            other => panic!("wrong error: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn vertex_engine_rejects_gopher_knobs_at_build_time() {
+        let err = Job::builder()
+            .algo("pagerank")
+            .engine(EngineKind::Vertex)
+            .epsilon(1e-3)
+            .build()
+            .unwrap_err();
+        assert!(
+            matches!(err, JobError::IncompatibleKnob { knob: "epsilon", .. }),
+            "{err}"
+        );
+        let err = Job::builder()
+            .algo("cc")
+            .engine(EngineKind::Vertex)
+            .combiners(false)
+            .build()
+            .unwrap_err();
+        assert!(
+            matches!(err, JobError::IncompatibleKnob { knob: "combiners", .. }),
+            "{err}"
+        );
+        // Explicitly *enabling* combiners is fine anywhere.
+        assert!(Job::builder()
+            .algo("cc")
+            .engine(EngineKind::Vertex)
+            .combiners(true)
+            .build()
+            .is_ok());
+        // And both knobs are fine on Gopher.
+        assert!(Job::builder()
+            .algo("pagerank")
+            .epsilon(1e-3)
+            .combiners(false)
+            .build()
+            .is_ok());
+    }
+
+    #[test]
+    fn unsupported_engine_is_typed() {
+        let err = Job::builder()
+            .algo("blockrank")
+            .engine(EngineKind::Vertex)
+            .build()
+            .unwrap_err();
+        assert_eq!(
+            err,
+            JobError::UnsupportedEngine {
+                algo: "blockrank".to_string(),
+                engine: EngineKind::Vertex
+            }
+        );
+        assert!(format!("{err}").contains("blockrank"));
+    }
+}

@@ -1,0 +1,299 @@
+//! The unified job layer: one builder-driven entry point over both
+//! engines (the §3.2 "single programming abstraction" made concrete at
+//! the API surface).
+//!
+//! Historically the crate exposed two disjoint run surfaces —
+//! `gopher::run`/`run_on_store` returning per-sub-graph states, and
+//! `pregel::run_vertex` returning a per-vertex value vector — with
+//! engine-specific knobs validated ad hoc in the CLI. This module
+//! replaces all of that as the way to run anything:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the xla rpath in this image)
+//! use goffish::graph::gen;
+//! use goffish::job::{EngineKind, Job, JobSource};
+//! use goffish::partition::MultilevelPartitioner;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let g = gen::road(40, 0.95, 0.01, 42);
+//! let out = Job::builder()
+//!     .algo("cc")
+//!     .engine(EngineKind::Gopher)
+//!     .cores(4)
+//!     .build()?                       // knob/engine validation happens HERE
+//!     .run(JobSource::Graph {
+//!         graph: &g,
+//!         partitioner: &MultilevelPartitioner::default(),
+//!         partitions: 4,
+//!     })?;
+//! println!("{} vertex values, {} supersteps",
+//!          out.values.len(), out.metrics.num_supersteps());
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! # Engine / knob compatibility matrix
+//!
+//! Validated by [`JobBuilder::build`], which returns a typed
+//! [`JobError`] instead of failing mid-run:
+//!
+//! | knob                  | Gopher | Vertex | on violation |
+//! |-----------------------|--------|--------|--------------|
+//! | `algo(...)`           | per [`crate::algos::registry`] entry | per entry | [`JobError::UnsupportedEngine`] (e.g. `blockrank` is Gopher-only) |
+//! | `epsilon(...)`        | ✓ (aggregator-driven PageRank convergence) | ✗ | [`JobError::IncompatibleKnob`] |
+//! | `combiners(false)`    | ✓ (disables the transport batcher fold) | ✗ (the baseline always folds) | [`JobError::IncompatibleKnob`] |
+//! | `fabric` / `cores` / `max_supersteps` | ✓ | ✓ | — |
+//! | `supersteps` / `source_vertex` / `kernel` | ✓ | ✓ (kernel is Gopher-only at run time, ignored by vertex programs) | — |
+//!
+//! # Sources
+//!
+//! A built [`Job`] runs against any [`JobSource`]:
+//!
+//! * [`JobSource::InMemory`] — an already-discovered
+//!   [`DistributedGraph`]. The vertex engine reassembles it via
+//!   [`crate::gofs::reassemble`] and hash-scatters, Giraph-style.
+//! * [`JobSource::Store`] — an on-disk GoFS [`Store`]; data-local
+//!   loading on Gopher, reassemble + hash scatter on the vertex engine.
+//! * [`JobSource::Graph`] — a full [`Graph`] plus a partitioner; the
+//!   job layer partitions (and, for Gopher, discovers sub-graphs)
+//!   before running.
+//!
+//! # Output
+//!
+//! Both engines land in one [`JobOutput`]: per-vertex `values` (from
+//! the programs' `emit` hooks, sorted by global vertex id), the full
+//! [`JobMetrics`], and the coordinator's per-superstep aggregator
+//! traces.
+
+mod builder;
+
+pub use builder::{EngineKind, JobBuilder, JobError};
+
+use anyhow::Result;
+
+use crate::algos::registry::GopherTarget;
+use crate::coordinator::AggregatorTrace;
+use crate::gofs::{self, DistributedGraph, Store};
+use crate::gopher::{self, FabricKind, GopherConfig};
+use crate::graph::{Graph, VertexId};
+use crate::metrics::JobMetrics;
+use crate::partition::{HashPartitioner, Partitioner};
+use crate::pregel::{self, PregelConfig, VertexProgram};
+
+/// The uniform result of any job, on any engine, from any source.
+pub struct JobOutput {
+    /// Per-vertex result values from the program's `emit` hook, sorted
+    /// by global vertex id. Empty only for programs that keep the
+    /// default no-op emit (none of the built-in algorithms do).
+    pub values: Vec<(VertexId, f64)>,
+    /// Full execution metrics (supersteps, bytes, walls, traces).
+    pub metrics: JobMetrics,
+    /// Per-superstep global aggregator traces (coordinator layer), one
+    /// per aggregator the program registered. Mirrors
+    /// `metrics.aggregators` for direct access.
+    pub aggregators: Vec<AggregatorTrace>,
+}
+
+impl JobOutput {
+    /// Wrap a Gopher engine result (values already harvested + sorted
+    /// by the engine).
+    pub(crate) fn from_gopher<S>(res: gopher::RunResult<S>) -> JobOutput {
+        JobOutput {
+            values: res.values,
+            aggregators: res.metrics.aggregators.clone(),
+            metrics: res.metrics,
+        }
+    }
+
+    /// Wrap a vertex engine result, emitting per-vertex values in
+    /// global id order (the engine already merges values that way).
+    pub(crate) fn from_vertex<P: VertexProgram>(
+        prog: &P,
+        res: pregel::VertexRunResult<P::Value>,
+    ) -> JobOutput {
+        let mut values = Vec::with_capacity(res.values.len());
+        for (v, val) in res.values.iter().enumerate() {
+            values.extend(prog.emit(v as VertexId, val));
+        }
+        JobOutput {
+            values,
+            aggregators: res.metrics.aggregators.clone(),
+            metrics: res.metrics,
+        }
+    }
+}
+
+/// What a [`Job`] runs against.
+pub enum JobSource<'a> {
+    /// An already-discovered in-memory distributed graph.
+    InMemory(&'a DistributedGraph),
+    /// An on-disk GoFS store.
+    Store(&'a Store),
+    /// A full graph plus a partitioner to scatter it with.
+    Graph {
+        graph: &'a Graph,
+        partitioner: &'a dyn Partitioner,
+        partitions: usize,
+    },
+}
+
+/// A validated, runnable job. Construct via [`Job::builder`]; all
+/// knob/engine compatibility checks already passed in
+/// [`JobBuilder::build`], so [`Job::run`] only surfaces execution
+/// errors.
+pub struct Job {
+    pub(crate) entry: &'static crate::algos::registry::AlgoEntry,
+    pub(crate) engine: EngineKind,
+    pub(crate) params: crate::algos::registry::AlgoParams,
+    pub(crate) fabric: FabricKind,
+    pub(crate) cores: usize,
+    pub(crate) combiners: bool,
+    pub(crate) max_supersteps: usize,
+}
+
+impl std::fmt::Debug for Job {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Job")
+            .field("algo", &self.entry.name)
+            .field("engine", &self.engine)
+            .field("fabric", &self.fabric)
+            .field("cores", &self.cores)
+            .field("combiners", &self.combiners)
+            .field("max_supersteps", &self.max_supersteps)
+            .finish_non_exhaustive()
+    }
+}
+
+impl Job {
+    /// Start describing a job.
+    pub fn builder() -> JobBuilder {
+        JobBuilder::default()
+    }
+
+    /// The registered algorithm name this job will run.
+    pub fn algo_name(&self) -> &'static str {
+        self.entry.name
+    }
+
+    /// The engine this job will run on.
+    pub fn engine(&self) -> EngineKind {
+        self.engine
+    }
+
+    /// Execute against a source. The same built job can run against
+    /// several sources (it holds no per-run state).
+    pub fn run(&self, source: JobSource<'_>) -> Result<JobOutput> {
+        match self.engine {
+            EngineKind::Gopher => {
+                let cfg = GopherConfig {
+                    cores_per_worker: self.cores,
+                    fabric: self.fabric,
+                    combiners: self.combiners,
+                    max_supersteps: self.max_supersteps,
+                    ..Default::default()
+                };
+                let run = self.entry.gopher.expect("validated at build time");
+                match source {
+                    JobSource::InMemory(dg) => {
+                        run(&self.params, &GopherTarget::Mem(dg), &cfg)
+                    }
+                    JobSource::Store(store) => {
+                        run(&self.params, &GopherTarget::Disk(store), &cfg)
+                    }
+                    JobSource::Graph { graph, partitioner, partitions } => {
+                        let parts = partitioner.partition(graph, partitions);
+                        let dg = gofs::subgraph::discover(graph, &parts)?;
+                        run(&self.params, &GopherTarget::Mem(&dg), &cfg)
+                    }
+                }
+            }
+            EngineKind::Vertex => {
+                let cfg = PregelConfig {
+                    cores_per_worker: self.cores,
+                    fabric: self.fabric,
+                    max_supersteps: self.max_supersteps,
+                    ..Default::default()
+                };
+                let run = self.entry.vertex.expect("validated at build time");
+                match source {
+                    JobSource::Graph { graph, partitioner, partitions } => {
+                        let parts = partitioner.partition(graph, partitions);
+                        run(&self.params, graph, &parts, &cfg)
+                    }
+                    JobSource::Store(store) => {
+                        // Giraph-style: rebuild the flat edge list from
+                        // the store and hash-scatter it.
+                        let (dg, _) = store.load_all()?;
+                        let g = gofs::reassemble(&dg)?;
+                        let parts = HashPartitioner::default()
+                            .partition(&g, store.meta().num_partitions as usize);
+                        run(&self.params, &g, &parts, &cfg)
+                    }
+                    JobSource::InMemory(dg) => {
+                        let g = gofs::reassemble(dg)?;
+                        let parts = HashPartitioner::default()
+                            .partition(&g, dg.num_partitions().max(1));
+                        run(&self.params, &g, &parts, &cfg)
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::partition::MultilevelPartitioner;
+
+    #[test]
+    fn graph_source_runs_both_engines() {
+        let g = gen::road(10, 0.9, 0.02, 5);
+        let part = MultilevelPartitioner::default();
+        let source = || JobSource::Graph {
+            graph: &g,
+            partitioner: &part,
+            partitions: 2,
+        };
+        let a = Job::builder()
+            .algo("cc")
+            .build()
+            .unwrap()
+            .run(source())
+            .unwrap();
+        let b = Job::builder()
+            .algo("cc")
+            .engine(EngineKind::Vertex)
+            .build()
+            .unwrap()
+            .run(source())
+            .unwrap();
+        assert_eq!(a.values.len(), g.num_vertices());
+        assert_eq!(a.values, b.values);
+        // values are sorted by global vertex id on both engines.
+        for (i, &(v, _)) in a.values.iter().enumerate() {
+            assert_eq!(v as usize, i);
+        }
+    }
+
+    #[test]
+    fn output_mirrors_aggregator_traces() {
+        let g = gen::social(120, 3, 0.0, 8);
+        let part = MultilevelPartitioner::default();
+        let out = Job::builder()
+            .algo("pagerank")
+            .epsilon(0.05)
+            .supersteps(60)
+            .build()
+            .unwrap()
+            .run(JobSource::Graph { graph: &g, partitioner: &part, partitions: 2 })
+            .unwrap();
+        assert!(!out.aggregators.is_empty());
+        assert_eq!(out.aggregators.len(), out.metrics.aggregators.len());
+        assert_eq!(
+            out.aggregators[0].values,
+            out.metrics.aggregators[0].values
+        );
+    }
+}

@@ -6,9 +6,11 @@
 //!
 //! * **Layer 3 (this crate)** — the GoFFish system itself: the `gofs`
 //!   distributed sub-graph aware graph store, the `gopher` sub-graph centric
-//!   BSP engine, a Giraph-like `pregel` vertex-centric baseline, graph
-//!   substrates (`graph`, `partition`), the simulated commodity cluster
-//!   (`sim`), and the benchmark/metrics machinery (`metrics`, `bench`).
+//!   BSP engine, a Giraph-like `pregel` vertex-centric baseline, the unified
+//!   `job` layer (one builder-driven entry point + `algos::registry` over
+//!   both engines), graph substrates (`graph`, `partition`), the simulated
+//!   commodity cluster (`sim`), and the benchmark/metrics machinery
+//!   (`metrics`, `bench`).
 //! * **Layer 2** — JAX compute graphs for the per-sub-graph numeric hot
 //!   spots (PageRank rank updates, min-plus SSSP relaxation), lowered
 //!   ahead-of-time to HLO text (`python/compile/model.py`).
@@ -27,6 +29,7 @@ pub mod coordinator;
 pub mod gopher;
 pub mod pregel;
 pub mod algos;
+pub mod job;
 pub mod runtime;
 pub mod sim;
 pub mod metrics;

@@ -13,7 +13,10 @@ use crate::util::stats::Summary;
 /// Metrics for one superstep, merged across workers.
 #[derive(Clone, Debug, Default)]
 pub struct SuperstepMetrics {
-    /// Wall-clock of the whole superstep (slowest worker + sync).
+    /// Wall-clock of the whole superstep: the slowest worker's own
+    /// clock over compute + route + drain, measured worker-side. For
+    /// superstep 1 this starts *after* that worker finished loading, so
+    /// load time is never folded into a superstep wall.
     pub wall_seconds: f64,
     /// Per-partition: wall time of that worker's compute phase.
     pub partition_compute_seconds: Vec<f64>,
@@ -58,7 +61,15 @@ pub struct JobMetrics {
     pub load_bytes: u64,
     /// Files read at load.
     pub load_files: u64,
-    /// Total compute wall time (sum of superstep walls).
+    /// Total compute wall time: Σ over supersteps of
+    /// [`SuperstepMetrics::wall_seconds`]. Because superstep walls are
+    /// accounted per-superstep on the worker side (the clock starts
+    /// after the worker's load completes), `load_seconds` and
+    /// `compute_seconds` are disjoint and [`JobMetrics::makespan_seconds`]
+    /// adds them without double counting — the engines used to measure
+    /// superstep 1 from the manager (whose clock started before workers
+    /// finished loading) and papered over the overshoot with a
+    /// `min(compute, job wall)` clamp.
     pub compute_seconds: f64,
     /// Per-superstep global aggregator values (coordinator layer), one
     /// trace per aggregator the program registered.

@@ -1,5 +1,13 @@
 //! The vertex-centric programming abstraction (Pregel §3.1 of the paper).
+//!
+//! Since the unified job layer landed, this surface mirrors the Gopher
+//! one where the models overlap: programs may register global
+//! aggregators ([`VertexProgram::aggregators`], folded by the engine's
+//! manager at every barrier — the same [`crate::coordinator`] machinery
+//! Gopher uses), define message combiners, and emit per-vertex result
+//! values ([`VertexProgram::emit`]) for `JobOutput::values`.
 
+use crate::coordinator::{AggregatorSpec, Aggregators};
 use crate::gopher::api::MsgCodec;
 use crate::graph::csr::{Graph, VertexId};
 
@@ -10,11 +18,32 @@ pub struct VertexContext<'a, M> {
     pub(crate) graph: &'a Graph,
     pub(crate) out: Vec<(VertexId, M)>,
     pub(crate) halted: bool,
+    /// Aggregator registry for this job (empty when none registered).
+    pub(crate) aggs: &'a Aggregators,
+    /// Previous superstep's folded global values (None at superstep 1).
+    pub(crate) agg_global: Option<&'a [f64]>,
+    /// This vertex's contributions, folded locally as they arrive.
+    pub(crate) agg_local: Vec<f64>,
 }
 
 impl<'a, M: Clone> VertexContext<'a, M> {
-    pub(crate) fn new(superstep: usize, vertex: VertexId, graph: &'a Graph) -> Self {
-        Self { superstep, vertex, graph, out: Vec::new(), halted: false }
+    pub(crate) fn new(
+        superstep: usize,
+        vertex: VertexId,
+        graph: &'a Graph,
+        aggs: &'a Aggregators,
+        agg_global: Option<&'a [f64]>,
+    ) -> Self {
+        Self {
+            superstep,
+            vertex,
+            graph,
+            out: Vec::new(),
+            halted: false,
+            aggs,
+            agg_global,
+            agg_local: aggs.identity_values(),
+        }
     }
 
     /// Current superstep (1-based).
@@ -86,6 +115,24 @@ impl<'a, M: Clone> VertexContext<'a, M> {
     pub fn vote_to_halt(&mut self) {
         self.halted = true;
     }
+
+    /// Slot index of a named aggregator registered by the program.
+    pub fn aggregator(&self, name: &str) -> Option<usize> {
+        self.aggs.index_of(name)
+    }
+
+    /// Contribute to aggregator slot `idx`; contributions fold with the
+    /// slot's monoid, worker-locally first and globally at the barrier.
+    pub fn aggregate(&mut self, idx: usize, value: f64) {
+        let op = self.aggs.specs()[idx].op;
+        self.agg_local[idx] = op.fold(self.agg_local[idx], value);
+    }
+
+    /// The global value of aggregator slot `idx` folded at the end of
+    /// the *previous* superstep. `None` during superstep 1.
+    pub fn aggregated(&self, idx: usize) -> Option<f64> {
+        self.agg_global.map(|g| g[idx])
+    }
 }
 
 /// A vertex-centric program.
@@ -109,6 +156,22 @@ pub trait VertexProgram: Sync {
     fn combine(&self, _a: &Self::Msg, _b: &Self::Msg) -> Option<Self::Msg> {
         None
     }
+
+    /// Global aggregators this program uses. Folded by the engine's
+    /// manager at every superstep barrier (the coordinator layer shared
+    /// with Gopher); read back via [`VertexContext::aggregated`] the
+    /// following superstep.
+    fn aggregators(&self) -> Vec<AggregatorSpec> {
+        Vec::new()
+    }
+
+    /// Per-vertex result extraction for the unified job layer
+    /// ([`crate::job`]): map this vertex's final value to
+    /// `(global vertex id, value)` pairs (usually exactly one). The
+    /// default (empty) opts the program out of per-vertex output.
+    fn emit(&self, _vertex: VertexId, _value: &Self::Value) -> Vec<(VertexId, f64)> {
+        Vec::new()
+    }
 }
 
 #[cfg(test)]
@@ -119,7 +182,8 @@ mod tests {
     #[test]
     fn context_surfaces_topology() {
         let g = gen::chain(5); // undirected chain stored as i -> i+1
-        let mut ctx = VertexContext::<u32>::new(1, 2, &g);
+        let aggs = Aggregators::default();
+        let mut ctx = VertexContext::<u32>::new(1, 2, &g, &aggs, None);
         assert_eq!(ctx.out_neighbors(), &[3]);
         assert_eq!(ctx.undirected_neighbors(), vec![3, 1]);
         assert_eq!(ctx.num_vertices(), 5);
@@ -141,7 +205,35 @@ mod tests {
             true,
         )
         .unwrap();
-        let ctx = VertexContext::<u32>::new(1, 0, &g);
+        let aggs = Aggregators::default();
+        let ctx = VertexContext::<u32>::new(1, 0, &g, &aggs, None);
         assert_eq!(ctx.out_edges_weighted(), vec![(1, 1.5), (2, 2.5)]);
+    }
+
+    #[test]
+    fn context_aggregator_surface() {
+        use crate::coordinator::AggOp;
+        let g = gen::chain(3);
+        let aggs = Aggregators::new(vec![
+            AggregatorSpec::new("delta", AggOp::Sum),
+            AggregatorSpec::new("low", AggOp::Min),
+        ]);
+
+        // Superstep 1: nothing folded yet; contributions fold locally.
+        let mut ctx = VertexContext::<u32>::new(1, 0, &g, &aggs, None);
+        assert_eq!(ctx.aggregator("delta"), Some(0));
+        assert_eq!(ctx.aggregator("nope"), None);
+        assert_eq!(ctx.aggregated(0), None);
+        ctx.aggregate(0, 2.0);
+        ctx.aggregate(0, 3.0);
+        ctx.aggregate(1, 7.0);
+        ctx.aggregate(1, 4.0);
+        assert_eq!(ctx.agg_local, vec![5.0, 4.0]);
+
+        // Superstep 2: folded globals are visible.
+        let global = vec![5.0, 4.0];
+        let ctx2 = VertexContext::<u32>::new(2, 0, &g, &aggs, Some(&global));
+        assert_eq!(ctx2.aggregated(0), Some(5.0));
+        assert_eq!(ctx2.aggregated(1), Some(4.0));
     }
 }

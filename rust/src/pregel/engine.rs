@@ -10,7 +10,13 @@
 //!   assignment (every worker holds it — Giraph does the same via its
 //!   partition owner map);
 //! * optional combiners fold same-destination-vertex messages before
-//!   they hit the wire.
+//!   they hit the wire;
+//! * the coordinator layer rides the same barrier as in Gopher:
+//!   programs register global aggregators, workers report partial
+//!   vectors with their sync, and the manager folds and re-broadcasts
+//!   the globals with *resume* (read back one superstep later via
+//!   [`VertexContext::aggregated`]); the per-superstep traces land in
+//!   `JobMetrics::aggregators` exactly as on the sub-graph engine.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -19,6 +25,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::coordinator::{Aggregators, Coordinator};
 use crate::graph::csr::{Graph, VertexId};
 use crate::metrics::{JobMetrics, SuperstepMetrics};
 use crate::partition::Partitioning;
@@ -92,14 +99,20 @@ struct WorkerSync {
     quiescent: bool,
     /// Worker failed: manager must abort the job after this superstep.
     failed: bool,
+    /// Worker-local partial aggregator values for this superstep.
+    agg: Vec<f64>,
 }
 
 enum ManagerCmd {
-    Resume,
+    /// Continue with the globally folded aggregator values.
+    Resume(Vec<f64>),
     Terminate,
 }
 
 struct WorkerSuperstep {
+    /// Wall clock of this worker's whole superstep (compute + route +
+    /// drain), measured worker-side so superstep 1 never includes load.
+    wall_seconds: f64,
     compute_seconds: f64,
     unit_times: Vec<f64>,
     messages: u64,
@@ -122,6 +135,7 @@ fn worker_body<P, F>(
     program: &P,
     fabric: F,
     cfg: &PregelConfig,
+    aggs: &Aggregators,
     graph: &Graph,
     parts: &Partitioning,
     my_vertices: Vec<VertexId>,
@@ -134,7 +148,8 @@ where
 {
     let me = fabric.id();
     let k = fabric.num_workers();
-    match worker_loop(program, &fabric, cfg, graph, parts, my_vertices, &sync_tx, &cmd_rx) {
+    match worker_loop(program, &fabric, cfg, aggs, graph, parts, my_vertices, &sync_tx, &cmd_rx)
+    {
         Ok(out) => Ok(out),
         Err(e) => {
             for p in 0..k as u32 {
@@ -142,7 +157,12 @@ where
                     let _ = fabric.send(p, vec![TAG_EOS]);
                 }
             }
-            let _ = sync_tx.send(WorkerSync { sent: 0, quiescent: true, failed: true });
+            let _ = sync_tx.send(WorkerSync {
+                sent: 0,
+                quiescent: true,
+                failed: true,
+                agg: Vec::new(),
+            });
             let _ = cmd_rx.recv();
             Err(e)
         }
@@ -154,6 +174,7 @@ fn worker_loop<P, F>(
     program: &P,
     fabric: &F,
     cfg: &PregelConfig,
+    aggs: &Aggregators,
     graph: &Graph,
     parts: &Partitioning,
     my_vertices: Vec<VertexId>,
@@ -182,12 +203,16 @@ where
 
     let mut per_superstep = Vec::new();
     let mut superstep = 1usize;
+    // Folded global aggregator values from the previous superstep's
+    // barrier (None before the first barrier).
+    let mut agg_global: Option<Vec<f64>> = None;
     // Adaptive parallelism (see gopher::engine): skip thread fan-out when
     // the previous superstep's compute was negligible.
     const PARALLEL_THRESHOLD_SECONDS: f64 = 200e-6;
     let mut last_compute = f64::INFINITY;
 
     loop {
+        let t_step = Instant::now();
         let active: Vec<usize> = (0..n_local)
             .filter(|&i| !halted[i].load(Ordering::Relaxed) || !inbox[i].is_empty())
             .collect();
@@ -202,32 +227,42 @@ where
         };
         let n_chunks = cores_now.max(1).min(active.len().max(1));
         let chunk_size = active.len().div_ceil(n_chunks.max(1)).max(1);
-        let chunk_out: Vec<Mutex<Vec<(VertexId, P::Msg)>>> =
-            (0..n_chunks).map(|_| Mutex::new(Vec::new())).collect();
+        // Each chunk yields (outgoing messages, folded aggregator
+        // contributions); both are harvested after the pool joins.
+        type ChunkOut<M> = (Vec<(VertexId, M)>, Vec<f64>);
+        let chunk_out: Vec<Mutex<ChunkOut<P::Msg>>> = (0..n_chunks)
+            .map(|_| Mutex::new((Vec::new(), Vec::new())))
+            .collect();
         let t0 = Instant::now();
         let unit_times = pool::run_indexed(cores_now, n_chunks, |c| {
             let lo = (c * chunk_size).min(active.len());
             let hi = ((c + 1) * chunk_size).min(active.len());
             let mut local_out = Vec::new();
+            let mut local_agg = aggs.identity_values();
             for &i in &active[lo..hi] {
                 let v = my_vertices[i];
-                let mut ctx = VertexContext::new(superstep, v, graph);
+                let mut ctx =
+                    VertexContext::new(superstep, v, graph, aggs, agg_global.as_deref());
                 let mut value = values[i].lock().unwrap();
                 program.compute(&mut value, &mut ctx, &cur_inbox[i]);
                 halted[i].store(ctx.halted, Ordering::Relaxed);
                 local_out.append(&mut ctx.out);
+                aggs.fold_into(&mut local_agg, &ctx.agg_local);
             }
-            *chunk_out[c].lock().unwrap() = local_out;
+            *chunk_out[c].lock().unwrap() = (local_out, local_agg);
         })?;
         let compute_seconds = t0.elapsed().as_secs_f64();
         last_compute = compute_seconds;
 
-        // ---- route phase
+        // ---- route phase (folding aggregator partials as we harvest)
         let mut sent_msgs = 0u64;
         let mut sent_bytes = 0u64;
+        let mut agg_partial = aggs.identity_values();
         let mut pending: Vec<Vec<(VertexId, P::Msg)>> = (0..k).map(|_| Vec::new()).collect();
         for cell in &chunk_out {
-            for (target, m) in cell.lock().unwrap().drain(..) {
+            let mut guard = cell.lock().unwrap();
+            aggs.fold_into(&mut agg_partial, &guard.1);
+            for (target, m) in guard.0.drain(..) {
                 sent_msgs += 1;
                 pending[parts.of(target) as usize].push((target, m));
             }
@@ -294,6 +329,7 @@ where
         }
 
         per_superstep.push(WorkerSuperstep {
+            wall_seconds: t_step.elapsed().as_secs_f64(),
             compute_seconds,
             unit_times,
             messages: sent_msgs,
@@ -305,10 +341,18 @@ where
         let quiescent = (0..n_local)
             .all(|i| halted[i].load(Ordering::Relaxed) && inbox[i].is_empty());
         sync_tx
-            .send(WorkerSync { sent: sent_msgs, quiescent, failed: false })
+            .send(WorkerSync {
+                sent: sent_msgs,
+                quiescent,
+                failed: false,
+                agg: agg_partial,
+            })
             .map_err(|_| anyhow::anyhow!("manager hung up"))?;
         match cmd_rx.recv().context("manager command channel closed")? {
-            ManagerCmd::Resume => superstep += 1,
+            ManagerCmd::Resume(globals) => {
+                agg_global = Some(globals);
+                superstep += 1;
+            }
             ManagerCmd::Terminate => break,
         }
         if superstep > cfg.max_supersteps {
@@ -338,6 +382,10 @@ pub fn run<P: VertexProgram>(
         "partitioning does not match graph"
     );
 
+    // Coordinator layer: one registry shared by workers, one folding
+    // coordinator owned by the manager (mirrors gopher::engine).
+    let aggs = Aggregators::new(program.aggregators());
+
     let (sync_tx, sync_rx) = channel::<WorkerSync>();
     let mut cmd_txs = Vec::with_capacity(k);
     let mut cmd_rxs = Vec::with_capacity(k);
@@ -356,23 +404,28 @@ pub fn run<P: VertexProgram>(
         FabricKind::Tcp => Fabrics::Tcp(transport::tcp(k)?),
     };
 
-    let outputs: Result<(Vec<WorkerOutput<P::Value>>, Vec<f64>)> =
-        std::thread::scope(|scope| {
+    let outputs: Result<(
+        Vec<WorkerOutput<P::Value>>,
+        Vec<crate::coordinator::AggregatorTrace>,
+    )> = std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(k);
             enum FabricAny {
                 InProc(transport::InProcFabric),
                 Tcp(transport::TcpFabric),
             }
+            let aggs_ref = &aggs;
             let mut spawn_worker = |p: usize, fab: FabricAny| {
                 let sync_tx = sync_tx.clone();
                 let cmd_rx = cmd_rxs.remove(0);
                 let my_vertices = parts.vertices_of(p as u32);
                 handles.push(scope.spawn(move || match fab {
                     FabricAny::InProc(f) => worker_body(
-                        program, f, cfg, graph, parts, my_vertices, sync_tx, cmd_rx,
+                        program, f, cfg, aggs_ref, graph, parts, my_vertices, sync_tx,
+                        cmd_rx,
                     ),
                     FabricAny::Tcp(f) => worker_body(
-                        program, f, cfg, graph, parts, my_vertices, sync_tx, cmd_rx,
+                        program, f, cfg, aggs_ref, graph, parts, my_vertices, sync_tx,
+                        cmd_rx,
                     ),
                 }));
             };
@@ -390,12 +443,13 @@ pub fn run<P: VertexProgram>(
             }
             drop(sync_tx);
 
-            let mut walls = Vec::new();
-            let mut t_step = Instant::now();
+            // ---- manager loop (sync barrier + coordinator fold)
+            let mut coordinator = Coordinator::new(aggs.clone());
             loop {
                 let mut sent_total = 0u64;
                 let mut all_quiescent = true;
                 let mut any_failed = false;
+                let mut partials: Vec<Vec<f64>> = Vec::with_capacity(k);
                 let mut seen = 0usize;
                 while seen < k {
                     match sync_rx.recv() {
@@ -403,6 +457,7 @@ pub fn run<P: VertexProgram>(
                             sent_total += s.sent;
                             all_quiescent &= s.quiescent;
                             any_failed |= s.failed;
+                            partials.push(s.agg);
                             seen += 1;
                         }
                         Err(_) => {
@@ -417,15 +472,19 @@ pub fn run<P: VertexProgram>(
                         }
                     }
                 }
-                walls.push(t_step.elapsed().as_secs_f64());
+                let globals = coordinator.fold_superstep(&partials);
                 let done = (all_quiescent && sent_total == 0) || any_failed;
                 for tx in &cmd_txs {
-                    let _ = tx.send(if done { ManagerCmd::Terminate } else { ManagerCmd::Resume });
+                    // A worker that already errored may have dropped its rx.
+                    let _ = tx.send(if done {
+                        ManagerCmd::Terminate
+                    } else {
+                        ManagerCmd::Resume(globals.clone())
+                    });
                 }
                 if done {
                     break;
                 }
-                t_step = Instant::now();
             }
 
             let mut outs = Vec::with_capacity(k);
@@ -436,9 +495,9 @@ pub fn run<P: VertexProgram>(
                     Err(p) => std::panic::resume_unwind(p),
                 }
             }
-            Ok((outs, walls))
+            Ok((outs, coordinator.into_traces()))
         });
-    let (outputs, walls) = outputs?;
+    let (outputs, traces) = outputs?;
 
     // Merge values back into global id order.
     let mut values: Vec<Option<P::Value>> = vec![None; graph.num_vertices()];
@@ -454,9 +513,11 @@ pub fn run<P: VertexProgram>(
 
     let mut metrics = JobMetrics {
         load_seconds: cfg.load_seconds,
+        aggregators: traces,
         ..Default::default()
     };
-    for s in 0..walls.len() {
+    let n_steps = outputs.first().map(|o| o.per_superstep.len()).unwrap_or(0);
+    for s in 0..n_steps {
         let mut sm = SuperstepMetrics::default();
         for out in &outputs {
             let ws = &out.per_superstep[s];
@@ -466,8 +527,9 @@ pub fn run<P: VertexProgram>(
             sm.bytes += ws.bytes;
             sm.active_units += ws.active_units;
             sm.combined_messages += ws.combined;
+            // Slowest worker's own superstep clock (see metrics docs).
+            sm.wall_seconds = sm.wall_seconds.max(ws.wall_seconds);
         }
-        sm.wall_seconds = walls[s];
         metrics.compute_seconds += sm.wall_seconds;
         metrics.supersteps.push(sm);
     }

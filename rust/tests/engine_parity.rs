@@ -18,6 +18,7 @@ use goffish::gofs::subgraph::discover;
 use goffish::gopher::{run, GopherConfig};
 use goffish::graph::gen;
 use goffish::graph::Graph;
+use goffish::job::{EngineKind, Job, JobSource};
 use goffish::partition::{HashPartitioner, MultilevelPartitioner, Partitioner};
 use goffish::pregel::{run_vertex, PregelConfig};
 use goffish::util::rng::Rng;
@@ -181,6 +182,43 @@ fn sssp_combiner_parity_and_byte_reduction() {
         with_bytes < without_bytes,
         "combined SSSP bytes {with_bytes} must be < uncombined {without_bytes}"
     );
+}
+
+/// Unified-output parity: the new `JobOutput::values` surface must agree
+/// across engines per vertex — the old parity tests compared engine-
+/// native result shapes; this one exercises the emit→values path both
+/// engines now share.
+#[test]
+fn job_output_values_agree_across_engines() {
+    let g0 = gen::social(300, 4, 0.02, 41);
+    let g = gen::with_random_weights(&g0, 0.5, 4.5, 43);
+    let part = MultilevelPartitioner::default();
+    let run_job = |algo: &str, engine: EngineKind| {
+        Job::builder()
+            .algo(algo)
+            .engine(engine)
+            .supersteps(12)
+            .source_vertex(0)
+            .build()
+            .unwrap()
+            .run(JobSource::Graph { graph: &g, partitioner: &part, partitions: 3 })
+            .unwrap()
+    };
+    for algo in ["cc", "sssp", "pagerank"] {
+        let a = run_job(algo, EngineKind::Gopher).values;
+        let b = run_job(algo, EngineKind::Vertex).values;
+        assert_eq!(a.len(), g.num_vertices(), "{algo}: gopher emit coverage");
+        assert_eq!(b.len(), g.num_vertices(), "{algo}: vertex emit coverage");
+        for (&(va, xa), &(vb, xb)) in a.iter().zip(&b) {
+            assert_eq!(va, vb, "{algo}: vertex id order diverges");
+            let ok = if algo == "pagerank" {
+                (xa - xb).abs() < 1e-5 + 1e-3 * xb.abs()
+            } else {
+                (xa.is_infinite() && xb.is_infinite()) || (xa - xb).abs() < 1e-3
+            };
+            assert!(ok, "{algo} vertex {va}: gopher={xa} vertex-engine={xb}");
+        }
+    }
 }
 
 #[test]
