@@ -1,68 +1,119 @@
 //! Fig 4(b): graph loading time from disk to memory objects.
 //!
-//! Three systems per dataset:
-//! * **GoFS**      — measured data-local slice load (all slices: topology
-//!   + 10 per-vertex attribute slices, emulating an attributed graph) and
-//!   the simulated 12-host cluster time;
-//! * **GoFS Edge Imp.** — the paper's load improvement: read only the
-//!   topology slice (the "only loads the slice it needs" co-design win);
-//! * **HDFS (sim)** — Giraph's loading path: block-random placement, so
-//!   ~11/12 of the bytes cross the network, plus per-record
-//!   materialisation — including the TR mega-hub pathology (798 s vs
+//! Measured series per dataset (all with topology + 10 per-vertex
+//! attribute slices, emulating an attributed graph):
+//! * **v1 seq**  — slice format v1, strictly sequential load (the
+//!   pre-GoFS-v2 behaviour);
+//! * **v2 seq**  — columnar v2 slices, still sequential (isolates the
+//!   codec effect);
+//! * **v2 par**  — v2 with the parallel load path: one loader thread per
+//!   partition, worker pool over slices within each (the shipping
+//!   default). Asserted faster than v1 sequential on every dataset.
+//! * **projection** — full attribute load vs `attr0`-only, in bytes:
+//!   the paper's "10 attributes, load one" scenario. Asserted strictly
+//!   smaller.
+//!
+//! Simulated series (12-host cluster, spinning-disk model):
+//! * **GoFS (sim)**      — data-local slice load, slowest host gates;
+//! * **GoFS Edge Imp. (sim)** — topology slices only (the paper's load
+//!   improvement);
+//! * **HDFS (sim)**      — Giraph's loading path: block-random
+//!   placement (~11/12 of bytes cross the network) plus per-record
+//!   materialisation, including the TR mega-hub pathology (798 s vs
 //!   38 s in the paper).
 //!
 //! Expected shape: GoFS ≪ HDFS everywhere; the gap explodes on TR; Edge
-//! Imp. < full GoFS.
+//! Imp. < full GoFS; v2 parallel < v1 sequential; projected < full.
 
 mod common;
 
-use goffish::bench::{fmt_secs, Table};
+use goffish::bench::{fmt_secs, measure, JsonEmitter, Table};
+use goffish::gofs::{AttrProjection, LoadOptions, SliceFormat, Store};
 use goffish::graph::props;
 use goffish::sim::{self, ClusterSpec};
 
 const ATTRS: usize = 10;
 
+/// Write the 10 synthetic attribute slices the paper's ingest carries.
+fn write_attrs(store: &Store, dg: &goffish::gofs::DistributedGraph) {
+    for sg in dg.subgraphs() {
+        let vals: Vec<f32> = (0..sg.num_vertices()).map(|i| i as f32).collect();
+        for a in 0..ATTRS {
+            store.write_attribute(sg.id, &format!("attr{a}"), &vals).unwrap();
+        }
+    }
+}
+
 fn main() {
+    let mut json = JsonEmitter::from_env("fig4b_loading", common::scale());
     let spec = ClusterSpec::default();
     let mut t = Table::new(
         &format!("Fig 4(b) analog: loading time, scale {}", common::scale()),
-        &["dataset", "gofs_meas", "gofs_sim", "edgeimp_sim", "hdfs_sim", "hdfs/gofs"],
+        &[
+            "dataset", "v1_seq", "v2_seq", "v2_par", "v1/v2", "proj/full",
+            "gofs_sim", "edgeimp_sim", "hdfs_sim", "hdfs/gofs",
+        ],
     );
 
     for (name, g) in common::datasets() {
         let (parts, dg) = common::partitioned(&g);
-        let (store, _, _root) = common::store_for(name, &g, &parts);
-        let vf = common::volume_factor(name, &g);
+        let (store_v1, _, _root1) = common::store_for_fmt(name, &g, &parts, SliceFormat::V1);
+        let (store_v2, _, _root2) = common::store_for_fmt(name, &g, &parts, SliceFormat::V2);
+        write_attrs(&store_v1, &dg);
+        write_attrs(&store_v2, &dg);
 
-        // Attribute slices: 10 named f32 attributes per sub-graph, so the
-        // full load is topology + attributes like the paper's ingest.
-        for sg in dg.subgraphs() {
-            for a in 0..ATTRS {
-                let vals: Vec<f32> = (0..sg.num_vertices()).map(|i| i as f32).collect();
-                store
-                    .write_attribute(sg.id, &format!("attr{a}"), &vals)
-                    .unwrap();
-            }
+        // ---- measured loads (topology + all 10 attributes). Fixed
+        // 3-rep minimums even in quick mode: the v2-beats-v1 assertion
+        // below needs more than one noisy sample.
+        let full_seq = LoadOptions {
+            attributes: AttrProjection::All,
+            sequential: true,
+            ..Default::default()
+        };
+        let full_par =
+            LoadOptions { attributes: AttrProjection::All, ..Default::default() };
+        let mut m_v1_seq = measure(1, 3, || {
+            store_v1.load_all_with(&full_seq).unwrap();
+        });
+        let m_v2_seq = measure(1, 3, || {
+            store_v2.load_all_with(&full_seq).unwrap();
+        });
+        let mut m_v2_par = measure(1, 3, || {
+            store_v2.load_all_with(&full_par).unwrap();
+        });
+        if m_v2_par.min >= m_v1_seq.min {
+            // A shared CI runner can smear a 3-rep minimum; escalate to
+            // 10 reps before letting the shape assertion below decide.
+            m_v1_seq = measure(1, 10, || {
+                store_v1.load_all_with(&full_seq).unwrap();
+            });
+            m_v2_par = measure(1, 10, || {
+                store_v2.load_all_with(&full_par).unwrap();
+            });
         }
 
-        // Measured GoFS load (topology; attributes measured separately).
-        let t0 = std::time::Instant::now();
-        let (_, topo_stats) = store.load_all().unwrap();
+        // ---- projection: bytes touched, full vs one-of-ten attributes.
+        let (_, _, st_full) = store_v2.load_all_with(&full_par).unwrap();
+        let proj = LoadOptions {
+            attributes: AttrProjection::Only(vec!["attr0".into()]),
+            ..Default::default()
+        };
+        let (_, _, st_proj) = store_v2.load_all_with(&proj).unwrap();
+
+        // ---- simulated cluster times (per-host stats from the store).
+        let vf = common::volume_factor(name, &g);
         let mut attr_bytes = 0u64;
         let mut attr_files = 0u64;
         for sg in dg.subgraphs() {
             for a in 0..ATTRS {
-                let (_, st) = store.read_attribute(sg.id, &format!("attr{a}")).unwrap();
+                let (_, st) = store_v2.read_attribute(sg.id, &format!("attr{a}")).unwrap();
                 attr_bytes += st.bytes;
                 attr_files += st.files;
             }
         }
-        let gofs_measured = t0.elapsed().as_secs_f64();
-
-        // Simulated cluster times.
         let per_host_full: Vec<(u64, u64, u64)> = (0..common::K as u32)
             .map(|p| {
-                let (sgs, st) = store.load_partition(p).unwrap();
+                let (sgs, st) = store_v2.load_partition(p).unwrap();
                 let records: u64 = sgs
                     .iter()
                     .map(|s| (s.num_vertices() * (1 + ATTRS) + s.local.num_edges()) as u64)
@@ -78,7 +129,7 @@ fn main() {
             .collect();
         let per_host_topo: Vec<(u64, u64, u64)> = (0..common::K as u32)
             .map(|p| {
-                let (sgs, st) = store.load_partition(p).unwrap();
+                let (sgs, st) = store_v2.load_partition(p).unwrap();
                 let records: u64 = sgs
                     .iter()
                     .map(|s| (s.num_vertices() + s.local.num_edges()) as u64)
@@ -89,8 +140,7 @@ fn main() {
         let gofs_sim = sim::cluster::gofs_load_seconds(&spec, &per_host_full);
         let edgeimp_sim = sim::cluster::gofs_load_seconds(&spec, &per_host_topo);
 
-        let total_bytes: u64 =
-            per_host_full.iter().map(|x| x.1).sum::<u64>();
+        let total_bytes: u64 = per_host_full.iter().map(|x| x.1).sum::<u64>();
         let records =
             ((g.num_vertices() * (1 + ATTRS) + g.num_edges()) as f64 * vf) as u64;
         let max_deg = (props::degree_stats(&g).max as f64 * vf) as u64;
@@ -98,17 +148,66 @@ fn main() {
 
         t.row(&[
             name.to_string(),
-            fmt_secs(gofs_measured),
+            fmt_secs(m_v1_seq.min),
+            fmt_secs(m_v2_seq.min),
+            fmt_secs(m_v2_par.min),
+            format!("{:.2}x", m_v1_seq.min / m_v2_par.min),
+            format!("{:.2}", st_proj.bytes as f64 / st_full.bytes as f64),
             fmt_secs(gofs_sim),
             fmt_secs(edgeimp_sim),
             fmt_secs(hdfs_sim),
             format!("{:.1}x", hdfs_sim / gofs_sim),
         ]);
 
+        json.emit(name, "v1_sequential_seconds", m_v1_seq.min);
+        json.emit(name, "v2_sequential_seconds", m_v2_seq.min);
+        json.emit(name, "v2_parallel_seconds", m_v2_par.min);
+        json.emit(name, "full_load_bytes", st_full.bytes as f64);
+        json.emit(name, "projected_load_bytes", st_proj.bytes as f64);
+        json.emit(name, "gofs_sim_seconds", gofs_sim);
+        json.emit(name, "edgeimp_sim_seconds", edgeimp_sim);
+        json.emit(name, "hdfs_sim_seconds", hdfs_sim);
+        json.emit(name, "hdfs_over_gofs", hdfs_sim / gofs_sim);
+
+        // Forward-looking design point for the trend file (ROADMAP): if
+        // the 10 attribute columns were packed as sections of ONE slice
+        // per sub-graph, a projected reader would open topo + one packed
+        // file and *skip* 9 of 10 value sections in place. Modeled from
+        // the measured per-host volumes via the section-skip disk model.
+        let packed_proj_sim = per_host_topo
+            .iter()
+            .zip(0..common::K as u32)
+            .map(|(&(topo_files, topo_bytes, records), p)| {
+                let sgs = store_v2.meta().subgraph_counts[p as usize] as u64;
+                spec.disk.projected_read_seconds(
+                    topo_files + sgs,
+                    topo_bytes + (attr_bytes as f64 * vf) as u64 / (ATTRS as u64 * common::K as u64),
+                    records,
+                    9 * sgs,
+                )
+            })
+            .fold(0.0f64, f64::max);
+        json.emit(name, "v2_packed_projection_sim_seconds", packed_proj_sim);
+
+        // Shape assertions (the acceptance criteria of GoFS v2).
         assert!(hdfs_sim > gofs_sim, "{name}: GoFS must beat HDFS load");
         assert!(edgeimp_sim <= gofs_sim, "{name}: Edge Imp. must not regress");
-        let _ = topo_stats;
+        assert!(
+            m_v2_par.min < m_v1_seq.min,
+            "{name}: v2 parallel load ({}) must beat v1 sequential ({})",
+            fmt_secs(m_v2_par.min),
+            fmt_secs(m_v1_seq.min)
+        );
+        assert!(
+            st_proj.bytes < st_full.bytes,
+            "{name}: projected load ({} B) must read strictly fewer bytes than full ({} B)",
+            st_proj.bytes,
+            st_full.bytes
+        );
     }
     t.print();
-    println!("\nshape assertions OK (GoFS < HDFS; Edge Imp. <= GoFS)");
+    json.finish();
+    println!(
+        "\nshape assertions OK (GoFS < HDFS; Edge Imp. <= GoFS; v2 par < v1 seq; projected < full)"
+    );
 }

@@ -10,7 +10,7 @@
 mod common;
 
 use goffish::algos::pagerank::{PageRankSg, RankKernel};
-use goffish::bench::{fmt_secs, measure, Table};
+use goffish::bench::{fmt_secs, measure, JsonEmitter, Table};
 use goffish::gofs::subgraph::discover;
 use goffish::gofs::Subgraph;
 use goffish::gopher::{
@@ -39,6 +39,7 @@ fn reps(warmup: usize, reps: usize) -> (usize, usize) {
 }
 
 fn main() {
+    let mut json = JsonEmitter::from_env("micro", common::scale());
     let mut t = Table::new("L3 micro-benchmarks", &["case", "median", "note"]);
 
     // Codec throughput.
@@ -60,6 +61,7 @@ fn main() {
         fmt_secs(m.median),
         format!("{:.0} Mops/s", 0.2 / m.median),
     ]);
+    json.emit("-", "codec_100k_varints_seconds", m.median);
 
     // Discovery throughput.
     let g = goffish::graph::gen::rn_analog(common::scale(), 11);
@@ -74,6 +76,7 @@ fn main() {
         fmt_secs(m.median),
         format!("{:.1} Mv/s", g.num_vertices() as f64 / m.median / 1e6),
     ]);
+    json.emit("RN", "discovery_seconds", m.median);
 
     // Empty superstep overhead.
     struct NSteps(usize);
@@ -105,6 +108,7 @@ fn main() {
         fmt_secs(m.median),
         format!("{} per superstep", fmt_secs(m.median / steps as f64)),
     ]);
+    json.emit("RN", "empty_superstep_seconds", m.median / steps as f64);
 
     // PageRank superstep (message routing + compute on LJ analog).
     let lj = goffish::graph::gen::lj_analog(common::scale(), 33);
@@ -120,6 +124,7 @@ fn main() {
         fmt_secs(m.median),
         format!("{} per superstep", fmt_secs(m.median / 5.0)),
     ]);
+    json.emit("LJ", "pagerank_superstep_seconds", m.median / 5.0);
 
     // Pool dispatch overhead.
     let (w, r) = reps(2, 10);
@@ -131,6 +136,8 @@ fn main() {
         fmt_secs(m.median),
         format!("{} per job", fmt_secs(m.median / 1000.0)),
     ]);
+    json.emit("-", "pool_dispatch_seconds_per_job", m.median / 1000.0);
 
     t.print();
+    json.finish();
 }

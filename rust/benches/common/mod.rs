@@ -5,7 +5,7 @@
 //! Table-1 dataset analogs with fixed seeds so figures are comparable
 //! across benches.
 
-use goffish::gofs::{subgraph::discover, DistributedGraph, Store};
+use goffish::gofs::{subgraph::discover, DistributedGraph, SliceFormat, Store};
 use goffish::graph::{gen, Graph};
 use goffish::partition::{MultilevelPartitioner, Partitioner, Partitioning};
 use std::path::PathBuf;
@@ -37,8 +37,19 @@ pub fn partitioned(g: &Graph) -> (Partitioning, DistributedGraph) {
 
 /// Build a store in a fresh temp dir; returns it with the discovery.
 pub fn store_for(name: &str, g: &Graph, parts: &Partitioning) -> (Store, DistributedGraph, PathBuf) {
+    store_for_fmt(name, g, parts, SliceFormat::default())
+}
+
+/// Build a store in a fresh temp dir with an explicit slice format (the
+/// Fig-4(b) bench compares v1 and v2 stores of the same graph).
+pub fn store_for_fmt(
+    name: &str,
+    g: &Graph,
+    parts: &Partitioning,
+    format: SliceFormat,
+) -> (Store, DistributedGraph, PathBuf) {
     let root = std::env::temp_dir().join(format!(
-        "goffish_bench_{name}_{}_{}",
+        "goffish_bench_{name}_{format}_{}_{}",
         std::process::id(),
         std::time::SystemTime::now()
             .duration_since(std::time::UNIX_EPOCH)
@@ -46,7 +57,7 @@ pub fn store_for(name: &str, g: &Graph, parts: &Partitioning) -> (Store, Distrib
             .subsec_nanos()
     ));
     let _ = std::fs::remove_dir_all(&root);
-    let (store, dg) = Store::create(&root, name, g, parts).expect("store");
+    let (store, dg) = Store::create_with_format(&root, name, g, parts, format).expect("store");
     (store, dg, root)
 }
 

@@ -3,8 +3,12 @@
 //!
 //! `cargo bench` runs the `rust/benches/*.rs` binaries (harness = false),
 //! each of which uses [`measure`] / [`Table`] to print the paper's
-//! tables and figures as text.
+//! tables and figures as text — and, when `GOFFISH_BENCH_JSON` names a
+//! file, appends machine-readable result rows through [`JsonEmitter`]
+//! so CI can record the perf trajectory (`BENCH_PR*.json` artifacts)
+//! instead of scrolling text tables.
 
+use std::path::PathBuf;
 use std::time::Instant;
 
 use crate::util::stats;
@@ -85,6 +89,94 @@ impl Table {
     }
 }
 
+/// Machine-readable benchmark rows, one JSON object per line:
+/// `{"bench": …, "dataset": …, "metric": …, "value": …, "scale": …}`.
+///
+/// The env var `GOFFISH_BENCH_JSON` names the append-target file; CI
+/// collects the lines from every bench binary into one JSON array
+/// (`jq -s`) and uploads it as the `BENCH_PR*.json` trend artifact.
+/// Without the env var the emitter is a no-op, so local `cargo bench`
+/// output is unchanged.
+pub struct JsonEmitter {
+    bench: String,
+    scale: f64,
+    path: Option<PathBuf>,
+    rows: Vec<String>,
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render an f64 as a JSON number (`null` for non-finite values, which
+/// JSON cannot carry).
+fn json_number(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+impl JsonEmitter {
+    /// Emitter writing to `path` (or collecting rows invisibly if
+    /// `None`).
+    pub fn new(path: Option<PathBuf>, bench: &str, scale: f64) -> Self {
+        Self { bench: bench.to_string(), scale, path, rows: Vec::new() }
+    }
+
+    /// Emitter targeting the `GOFFISH_BENCH_JSON` file, if set.
+    pub fn from_env(bench: &str, scale: f64) -> Self {
+        Self::new(std::env::var_os("GOFFISH_BENCH_JSON").map(PathBuf::from), bench, scale)
+    }
+
+    /// Record one datum of the current bench run.
+    pub fn emit(&mut self, dataset: &str, metric: &str, value: f64) {
+        self.rows.push(format!(
+            "{{\"bench\":\"{}\",\"dataset\":\"{}\",\"metric\":\"{}\",\"value\":{},\"scale\":{}}}",
+            json_escape(&self.bench),
+            json_escape(dataset),
+            json_escape(metric),
+            json_number(value),
+            json_number(self.scale),
+        ));
+    }
+
+    /// Rows collected so far (test/inspection surface).
+    pub fn rows(&self) -> &[String] {
+        &self.rows
+    }
+
+    /// Append all collected rows to the target file. IO failure is
+    /// reported on stderr but never fails the bench itself.
+    pub fn finish(self) {
+        let Some(path) = self.path else { return };
+        let write = || -> std::io::Result<()> {
+            use std::io::Write;
+            let mut f = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&path)?;
+            for row in &self.rows {
+                writeln!(f, "{row}")?;
+            }
+            f.flush()
+        };
+        if let Err(e) = write() {
+            eprintln!("bench: failed to append JSON rows to {}: {e}", path.display());
+        }
+    }
+}
+
 /// Format seconds in engineering units.
 pub fn fmt_secs(s: f64) -> String {
     if s >= 1.0 {
@@ -143,5 +235,51 @@ mod tests {
     fn row_arity_checked() {
         let mut t = Table::new("x", &["a", "b"]);
         t.row(&["only one".into()]);
+    }
+
+    #[test]
+    fn json_rows_schema_and_append() {
+        let path = std::env::temp_dir()
+            .join(format!("goffish_bench_json_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+
+        let mut e = JsonEmitter::new(Some(path.clone()), "fig4b_loading", 0.05);
+        e.emit("RN", "v2_parallel_seconds", 0.125);
+        e.emit("TR", "full_load_bytes", 4096.0);
+        assert_eq!(e.rows().len(), 2);
+        assert_eq!(
+            e.rows()[0],
+            "{\"bench\":\"fig4b_loading\",\"dataset\":\"RN\",\
+             \"metric\":\"v2_parallel_seconds\",\"value\":0.125,\"scale\":0.05}"
+        );
+        e.finish();
+
+        // A second emitter appends (several bench binaries, one file).
+        let mut e2 = JsonEmitter::new(Some(path.clone()), "micro", 0.05);
+        e2.emit("-", "codec_rt_seconds", 0.5);
+        e2.finish();
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for line in &lines {
+            assert!(line.starts_with("{\"bench\":\"") && line.ends_with('}'), "{line}");
+            for key in ["\"bench\":", "\"dataset\":", "\"metric\":", "\"value\":", "\"scale\":"] {
+                assert!(line.contains(key), "{line} missing {key}");
+            }
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn json_escaping_and_nonfinite_values() {
+        let mut e = JsonEmitter::new(None, "weird\"bench\\", 0.1);
+        e.emit("d\n", "m", f64::NAN);
+        assert_eq!(
+            e.rows()[0],
+            "{\"bench\":\"weird\\\"bench\\\\\",\"dataset\":\"d\\u000a\",\
+             \"metric\":\"m\",\"value\":null,\"scale\":0.1}"
+        );
+        e.finish(); // no path: a no-op
     }
 }

@@ -85,6 +85,20 @@ impl Args {
         }
     }
 
+    /// Comma-separated list option: `--load-attributes a,b` → `["a",
+    /// "b"]`; a missing option is the empty list.
+    pub fn get_list(&self, name: &str) -> Vec<String> {
+        self.get(name)
+            .map(|s| {
+                s.split(',')
+                    .map(str::trim)
+                    .filter(|t| !t.is_empty())
+                    .map(str::to_string)
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
     /// First positional = subcommand.
     pub fn command(&self) -> Result<&str> {
         match self.positional.first() {
@@ -143,5 +157,12 @@ mod tests {
     fn no_command() {
         let a = parse(&[]);
         assert!(a.command().is_err());
+    }
+
+    #[test]
+    fn list_options() {
+        let a = parse(&["run", "--load-attributes", "a, b,,c"]);
+        assert_eq!(a.get_list("load-attributes"), vec!["a", "b", "c"]);
+        assert!(a.get_list("missing").is_empty());
     }
 }

@@ -5,13 +5,20 @@
 //! goffish info      --graph g.txt [--directed]
 //! goffish partition --graph g.txt --k 4 [--strategy multilevel|hash|range]
 //! goffish store     --graph g.txt --k 4 --out storedir [--strategy …] [--name NAME]
+//!                   [--format v1|v2] [--attrs N]
 //! goffish run       --store storedir
 //!                   --algo <any algos::registry entry>
 //!                   [--engine gopher|vertex] [--source V] [--supersteps N]
 //!                   [--epsilon E] [--no-combine] [--max-supersteps N]
 //!                   [--xla] [--fabric inproc|tcp] [--cores N]
-//!                   [--output values.tsv]
+//!                   [--load-attributes a,b] [--output values.tsv]
 //! ```
+//!
+//! `store --format` picks the slice framing (v2 columnar default; v1 for
+//! compat tooling) and `--attrs N` writes N synthetic per-vertex
+//! attribute slices (`attr0..attrN-1`, value = global vertex id) so the
+//! paper's "10 attributes, load one" scenario is reproducible from the
+//! CLI: `run --load-attributes attr0` then loads exactly that slice.
 //!
 //! `run` is a thin shell over the unified job layer: flags are handed
 //! to [`Job::builder`], validation (unknown algorithms, engine/knob
@@ -28,7 +35,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::algos::pagerank::RankKernel;
 use crate::algos::registry;
-use crate::gofs::Store;
+use crate::gofs::{SliceFormat, Store};
 use crate::gopher::FabricKind;
 use crate::graph::{gen, io, props, Graph};
 use crate::job::{EngineKind, Job, JobSource};
@@ -151,14 +158,28 @@ fn cmd_store(args: &Args) -> Result<()> {
     let k = args.get_usize("k", 4)?;
     let out = args.require("out")?;
     let name = args.get_or("name", "graph");
+    let fmt_arg = args.get_or("format", "v2");
+    let format = SliceFormat::parse(fmt_arg)
+        .with_context(|| format!("--format expects v1 or v2, got {fmt_arg:?}"))?;
+    let num_attrs = args.get_usize("attrs", 0)?;
     let partitioner = make_partitioner(args)?;
     let p = partitioner.partition(&g, k);
-    let (store, dg) = Store::create(Path::new(out), name, &g, &p)?;
+    let (store, dg) = Store::create_with_format(Path::new(out), name, &g, &p, format)?;
+    // Synthetic attribute slices for projection experiments: attrN holds
+    // each vertex's global id (deterministic, so v1/v2 outputs compare).
+    for sg in dg.subgraphs() {
+        let vals: Vec<f32> = sg.vertices.iter().map(|&v| v as f32).collect();
+        for a in 0..num_attrs {
+            store.write_attribute(sg.id, &format!("attr{a}"), &vals)?;
+        }
+    }
     println!(
-        "stored {} as {} partitions / {} sub-graphs at {}",
+        "stored {} ({}) as {} partitions / {} sub-graphs / {} attribute slices at {}",
         name,
+        format,
         k,
         dg.num_subgraphs(),
+        dg.num_subgraphs() * num_attrs,
         store.root().display()
     );
     for (i, sgs) in dg.partitions.iter().enumerate() {
@@ -218,7 +239,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         .source_vertex(args.get_usize("source", 0)? as u32)
         .supersteps(args.get_usize("supersteps", 30)?)
         .max_supersteps(args.get_usize("max-supersteps", 10_000)?)
-        .kernel(kernel);
+        .kernel(kernel)
+        .load_attributes(args.get_list("load-attributes"));
     if let Some(eps) = epsilon {
         builder = builder.epsilon(eps);
     }
@@ -490,6 +512,69 @@ mod tests {
         ])
         .unwrap();
         assert_eq!(std::fs::read_to_string(&out_vx).unwrap(), golden);
+    }
+
+    #[test]
+    fn v1_v2_and_projected_runs_agree() {
+        let dir = tmp("fmt_parity");
+        let graph = dir.join("g.txt");
+        run_cmd(&[
+            "gen", "--kind", "chain", "--scale", "4", "--seed", "7", "--out",
+            graph.to_str().unwrap(),
+        ])
+        .unwrap();
+        for fmt in ["v1", "v2"] {
+            let store = dir.join(format!("store-{fmt}"));
+            run_cmd(&[
+                "store",
+                "--graph",
+                graph.to_str().unwrap(),
+                "--k",
+                "2",
+                "--format",
+                fmt,
+                "--attrs",
+                "3",
+                "--out",
+                store.to_str().unwrap(),
+            ])
+            .unwrap();
+        }
+        let golden: String = (0..16).map(|v| format!("{v}\t15\n")).collect();
+        let v1_out = dir.join("v1.tsv");
+        let v2_out = dir.join("v2.tsv");
+        let proj_out = dir.join("v2-proj.tsv");
+        run_cmd(&[
+            "run", "--store", dir.join("store-v1").to_str().unwrap(),
+            "--algo", "cc", "--output", v1_out.to_str().unwrap(),
+        ])
+        .unwrap();
+        run_cmd(&[
+            "run", "--store", dir.join("store-v2").to_str().unwrap(),
+            "--algo", "cc", "--output", v2_out.to_str().unwrap(),
+        ])
+        .unwrap();
+        run_cmd(&[
+            "run", "--store", dir.join("store-v2").to_str().unwrap(),
+            "--algo", "cc", "--load-attributes", "attr0",
+            "--output", proj_out.to_str().unwrap(),
+        ])
+        .unwrap();
+        assert_eq!(std::fs::read_to_string(&v1_out).unwrap(), golden);
+        assert_eq!(std::fs::read_to_string(&v2_out).unwrap(), golden);
+        assert_eq!(std::fs::read_to_string(&proj_out).unwrap(), golden);
+
+        // Unknown formats and undeclared attributes fail loudly.
+        assert!(run_cmd(&[
+            "store", "--graph", graph.to_str().unwrap(), "--k", "2",
+            "--format", "v3", "--out", dir.join("store-v3").to_str().unwrap(),
+        ])
+        .is_err());
+        assert!(run_cmd(&[
+            "run", "--store", dir.join("store-v2").to_str().unwrap(),
+            "--algo", "cc", "--load-attributes", "nope",
+        ])
+        .is_err());
     }
 
     #[test]

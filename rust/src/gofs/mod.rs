@@ -14,5 +14,8 @@ pub mod subgraph;
 pub mod slice;
 pub mod store;
 
-pub use subgraph::{reassemble, DistributedGraph, RemoteRef, Subgraph, SubgraphId};
-pub use store::{LoadStats, Store, StoreMeta};
+pub use slice::SliceFormat;
+pub use subgraph::{
+    reassemble, DistributedGraph, PartitionAttributes, RemoteRef, Subgraph, SubgraphId,
+};
+pub use store::{AttrProjection, LoadOptions, LoadStats, Store, StoreMeta};

@@ -7,11 +7,23 @@
 //! the paper's "a graph with 10 attributes … needs to only load that
 //! slice" co-design point, and the "Edge Imp." variant of Fig 4(b).
 //!
-//! Framing: `MAGIC, version, kind` header, then codec-encoded payload,
-//! then a crc32-style checksum (FNV-1a 64 truncated — no crc crate in
-//! the vendor set) so truncation/corruption is detected at load.
+//! Two on-disk framings share the `MAGIC, version, kind` header and are
+//! dispatched on the version byte at decode time:
+//!
+//! * **v1** — codec-encoded payload (varints, delta ids) followed by a
+//!   single whole-payload FNV-1a 64 checksum. Compact, but strictly
+//!   sequential to decode and all-or-nothing to validate.
+//! * **v2** (default) — fixed-width little-endian *columnar sections*
+//!   (vertex ids, CSR offsets, edge targets, weights, remote-ref
+//!   tables) behind a section directory in the header. Every section
+//!   carries its own FNV checksum, so a section can be validated and
+//!   decoded independently — corruption errors name the section, and a
+//!   reader that skips a section never pays to checksum it.
+//!
+//! v1 encoding is frozen: stores written by older code stay loadable
+//! byte-for-byte (pinned by a golden test in `tests/gofs_roundtrip.rs`).
 
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::graph::csr::Graph;
 use crate::util::codec::{Decoder, Encoder};
@@ -19,11 +31,47 @@ use crate::util::codec::{Decoder, Encoder};
 use super::subgraph::{RemoteRef, Subgraph, SubgraphId};
 
 const MAGIC: &[u8; 4] = b"GFSL";
-const VERSION: u8 = 1;
+const VERSION_V1: u8 = 1;
+const VERSION_V2: u8 = 2;
 const KIND_TOPOLOGY: u8 = 0;
 const KIND_ATTRIBUTE: u8 = 1;
 
-/// FNV-1a 64-bit checksum over the payload.
+/// On-disk slice framing. v2 (columnar sections) is the default; v1
+/// remains writable for compatibility tooling and readable forever.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SliceFormat {
+    /// Sequential codec payload + whole-payload checksum.
+    V1,
+    /// Columnar fixed-width sections + per-section checksums.
+    #[default]
+    V2,
+}
+
+impl SliceFormat {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SliceFormat::V1 => "v1",
+            SliceFormat::V2 => "v2",
+        }
+    }
+
+    /// Parse a CLI/meta spelling ("v1"/"v2").
+    pub fn parse(s: &str) -> Option<SliceFormat> {
+        match s {
+            "v1" => Some(SliceFormat::V1),
+            "v2" => Some(SliceFormat::V2),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for SliceFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// FNV-1a 64-bit checksum over a byte run.
 fn checksum(bytes: &[u8]) -> u64 {
     let mut h = 0xcbf29ce484222325u64;
     for &b in bytes {
@@ -33,10 +81,12 @@ fn checksum(bytes: &[u8]) -> u64 {
     h
 }
 
-fn frame(kind: u8, payload: Vec<u8>) -> Vec<u8> {
+// ------------------------------------------------------------- v1 framing
+
+fn frame_v1(kind: u8, payload: Vec<u8>) -> Vec<u8> {
     let mut out = Vec::with_capacity(payload.len() + 16);
     out.extend_from_slice(MAGIC);
-    out.push(VERSION);
+    out.push(VERSION_V1);
     out.push(kind);
     let mut e = Encoder::new();
     e.put_varint(payload.len() as u64);
@@ -46,10 +96,10 @@ fn frame(kind: u8, payload: Vec<u8>) -> Vec<u8> {
     out
 }
 
-fn unframe(bytes: &[u8], want_kind: u8) -> Result<&[u8]> {
+fn unframe_v1(bytes: &[u8], want_kind: u8) -> Result<&[u8]> {
     ensure!(bytes.len() >= 6, "slice too short ({} bytes)", bytes.len());
     ensure!(&bytes[..4] == MAGIC, "bad slice magic");
-    ensure!(bytes[4] == VERSION, "unsupported slice version {}", bytes[4]);
+    ensure!(bytes[4] == VERSION_V1, "unsupported slice version {}", bytes[4]);
     ensure!(
         bytes[5] == want_kind,
         "wrong slice kind: want {want_kind}, got {}",
@@ -69,7 +119,220 @@ fn unframe(bytes: &[u8], want_kind: u8) -> Result<&[u8]> {
     Ok(payload)
 }
 
-fn put_remote(e: &mut Encoder, refs: &[RemoteRef]) {
+// ------------------------------------------------------------- v2 framing
+
+/// Section ids of the v2 columnar layout.
+const SEC_META: u8 = 0;
+const SEC_VERTICES: u8 = 1;
+const SEC_OFFSETS: u8 = 2;
+const SEC_TARGETS: u8 = 3;
+const SEC_WEIGHTS: u8 = 4;
+const SEC_REMOTE_OUT: u8 = 5;
+const SEC_REMOTE_IN: u8 = 6;
+const SEC_VALUES: u8 = 7;
+
+fn section_name(id: u8) -> &'static str {
+    match id {
+        SEC_META => "meta",
+        SEC_VERTICES => "vertices",
+        SEC_OFFSETS => "offsets",
+        SEC_TARGETS => "targets",
+        SEC_WEIGHTS => "weights",
+        SEC_REMOTE_OUT => "remote_out",
+        SEC_REMOTE_IN => "remote_in",
+        SEC_VALUES => "values",
+        _ => "unknown",
+    }
+}
+
+/// v2 header: `MAGIC, version, kind, nsections`, then one 20-byte
+/// directory entry per section (`id u8, pad[3], len u64 LE, fnv u64
+/// LE`), then the section bodies back to back in directory order.
+const V2_HEADER_LEN: usize = 7;
+const V2_DIR_ENTRY_LEN: usize = 20;
+
+fn frame_v2(kind: u8, sections: &[(u8, Vec<u8>)]) -> Vec<u8> {
+    let body: usize = sections.iter().map(|(_, b)| b.len()).sum();
+    let mut out =
+        Vec::with_capacity(V2_HEADER_LEN + sections.len() * V2_DIR_ENTRY_LEN + body);
+    out.extend_from_slice(MAGIC);
+    out.push(VERSION_V2);
+    out.push(kind);
+    out.push(sections.len() as u8);
+    for (id, body) in sections {
+        out.push(*id);
+        out.extend_from_slice(&[0u8; 3]);
+        out.extend_from_slice(&(body.len() as u64).to_le_bytes());
+        out.extend_from_slice(&checksum(body).to_le_bytes());
+    }
+    for (_, body) in sections {
+        out.extend_from_slice(body);
+    }
+    out
+}
+
+/// Parsed (but not yet checksum-validated) v2 section table.
+struct SectionTable<'a> {
+    entries: Vec<(u8, &'a [u8], u64)>,
+}
+
+impl<'a> SectionTable<'a> {
+    /// Fetch one section, validating *only its own* checksum — untouched
+    /// sections are never checksummed (the skip-what-you-don't-read
+    /// property of the v2 layout).
+    fn get(&self, id: u8) -> Result<&'a [u8]> {
+        let &(_, body, sum) = self
+            .entries
+            .iter()
+            .find(|(i, _, _)| *i == id)
+            .ok_or_else(|| anyhow!("slice missing section `{}`", section_name(id)))?;
+        ensure!(
+            checksum(body) == sum,
+            "slice section `{}` corrupt (checksum mismatch)",
+            section_name(id)
+        );
+        Ok(body)
+    }
+}
+
+fn unframe_v2(bytes: &[u8], want_kind: u8) -> Result<SectionTable<'_>> {
+    ensure!(bytes.len() >= V2_HEADER_LEN, "slice too short ({} bytes)", bytes.len());
+    ensure!(&bytes[..4] == MAGIC, "bad slice magic");
+    ensure!(bytes[4] == VERSION_V2, "unsupported slice version {}", bytes[4]);
+    ensure!(
+        bytes[5] == want_kind,
+        "wrong slice kind: want {want_kind}, got {}",
+        bytes[5]
+    );
+    let n = bytes[6] as usize;
+    let dir_end = V2_HEADER_LEN + n * V2_DIR_ENTRY_LEN;
+    ensure!(bytes.len() >= dir_end, "slice truncated inside section directory");
+    let mut entries = Vec::with_capacity(n);
+    let mut off = dir_end;
+    for s in 0..n {
+        let e = V2_HEADER_LEN + s * V2_DIR_ENTRY_LEN;
+        let id = bytes[e];
+        let len = u64::from_le_bytes(bytes[e + 4..e + 12].try_into().unwrap()) as usize;
+        let sum = u64::from_le_bytes(bytes[e + 12..e + 20].try_into().unwrap());
+        ensure!(
+            bytes.len() - off >= len,
+            "slice section `{}` truncated: directory says {len} bytes, {} remain",
+            section_name(id),
+            bytes.len() - off
+        );
+        entries.push((id, &bytes[off..off + len], sum));
+        off += len;
+    }
+    ensure!(
+        off == bytes.len(),
+        "slice has {} trailing bytes after last section",
+        bytes.len() - off
+    );
+    Ok(SectionTable { entries })
+}
+
+/// Section layout of a v2 slice: `(name, byte range)` per directory
+/// entry, in file order. Test/tooling surface (per-section corruption
+/// drills, layout dumps).
+pub fn section_ranges(bytes: &[u8]) -> Result<Vec<(&'static str, std::ops::Range<usize>)>> {
+    ensure!(bytes.len() >= V2_HEADER_LEN, "slice too short");
+    ensure!(&bytes[..4] == MAGIC, "bad slice magic");
+    ensure!(bytes[4] == VERSION_V2, "not a v2 slice (version {})", bytes[4]);
+    let table = unframe_v2(bytes, bytes[5])?;
+    let mut off = V2_HEADER_LEN + table.entries.len() * V2_DIR_ENTRY_LEN;
+    let mut out = Vec::with_capacity(table.entries.len());
+    for (id, body, _) in &table.entries {
+        out.push((section_name(*id), off..off + body.len()));
+        off += body.len();
+    }
+    Ok(out)
+}
+
+// -------------------------------------------- fixed-width column helpers
+
+fn put_u32s(out: &mut Vec<u8>, vals: impl Iterator<Item = u32>) {
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn get_u32s(body: &[u8], section: u8) -> Result<Vec<u32>> {
+    ensure!(
+        body.len() % 4 == 0,
+        "section `{}` length {} not a multiple of 4",
+        section_name(section),
+        body.len()
+    );
+    Ok(body
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+fn get_u64s(body: &[u8], section: u8) -> Result<Vec<u64>> {
+    ensure!(
+        body.len() % 8 == 0,
+        "section `{}` length {} not a multiple of 8",
+        section_name(section),
+        body.len()
+    );
+    Ok(body
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+fn get_f32s(body: &[u8], section: u8) -> Result<Vec<f32>> {
+    ensure!(
+        body.len() % 4 == 0,
+        "section `{}` length {} not a multiple of 4",
+        section_name(section),
+        body.len()
+    );
+    Ok(body
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+/// Fixed 20-byte remote-ref record: `local, target_global, partition,
+/// subgraph` (u32 LE) + `weight` (f32 LE).
+const REMOTE_RECORD_LEN: usize = 20;
+
+fn encode_remote_v2(refs: &[RemoteRef]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(refs.len() * REMOTE_RECORD_LEN);
+    for r in refs {
+        out.extend_from_slice(&r.local.to_le_bytes());
+        out.extend_from_slice(&r.target_global.to_le_bytes());
+        out.extend_from_slice(&r.partition.to_le_bytes());
+        out.extend_from_slice(&r.subgraph.to_le_bytes());
+        out.extend_from_slice(&r.weight.to_le_bytes());
+    }
+    out
+}
+
+fn decode_remote_v2(body: &[u8], section: u8) -> Result<Vec<RemoteRef>> {
+    ensure!(
+        body.len() % REMOTE_RECORD_LEN == 0,
+        "section `{}` length {} not a multiple of {REMOTE_RECORD_LEN}",
+        section_name(section),
+        body.len()
+    );
+    Ok(body
+        .chunks_exact(REMOTE_RECORD_LEN)
+        .map(|c| RemoteRef {
+            local: u32::from_le_bytes(c[0..4].try_into().unwrap()),
+            target_global: u32::from_le_bytes(c[4..8].try_into().unwrap()),
+            partition: u32::from_le_bytes(c[8..12].try_into().unwrap()),
+            subgraph: u32::from_le_bytes(c[12..16].try_into().unwrap()),
+            weight: f32::from_le_bytes(c[16..20].try_into().unwrap()),
+        })
+        .collect())
+}
+
+// ------------------------------------------------------------ v1 payload
+
+fn put_remote_v1(e: &mut Encoder, refs: &[RemoteRef]) {
     e.put_varint(refs.len() as u64);
     for r in refs {
         e.put_varint(r.local as u64);
@@ -80,7 +343,7 @@ fn put_remote(e: &mut Encoder, refs: &[RemoteRef]) {
     }
 }
 
-fn get_remote(d: &mut Decoder) -> Result<Vec<RemoteRef>> {
+fn get_remote_v1(d: &mut Decoder) -> Result<Vec<RemoteRef>> {
     let n = d.get_varint()? as usize;
     ensure!(n <= d.remaining(), "remote edge count {n} exceeds buffer");
     let mut out = Vec::with_capacity(n);
@@ -96,8 +359,7 @@ fn get_remote(d: &mut Decoder) -> Result<Vec<RemoteRef>> {
     Ok(out)
 }
 
-/// Encode a sub-graph's topology slice.
-pub fn encode_topology(sg: &Subgraph) -> Vec<u8> {
+fn encode_topology_v1(sg: &Subgraph) -> Vec<u8> {
     let mut e = Encoder::with_capacity(
         16 + sg.vertices.len() * 3 + sg.local.num_edges() * 4,
     );
@@ -116,14 +378,13 @@ pub fn encode_topology(sg: &Subgraph) -> Vec<u8> {
             e.put_f32(sg.local.weight(ei));
         }
     }
-    put_remote(&mut e, &sg.remote_out);
-    put_remote(&mut e, &sg.remote_in);
-    frame(KIND_TOPOLOGY, e.into_bytes())
+    put_remote_v1(&mut e, &sg.remote_out);
+    put_remote_v1(&mut e, &sg.remote_in);
+    frame_v1(KIND_TOPOLOGY, e.into_bytes())
 }
 
-/// Decode a topology slice.
-pub fn decode_topology(bytes: &[u8]) -> Result<Subgraph> {
-    let payload = unframe(bytes, KIND_TOPOLOGY).context("topology slice")?;
+fn decode_topology_v1(bytes: &[u8]) -> Result<Subgraph> {
+    let payload = unframe_v1(bytes, KIND_TOPOLOGY).context("topology slice")?;
     let mut d = Decoder::new(payload);
     let partition = d.get_varint()? as u32;
     let index = d.get_varint()? as u32;
@@ -147,8 +408,8 @@ pub fn decode_topology(bytes: &[u8]) -> Result<Subgraph> {
             w.push(d.get_f32()?);
         }
     }
-    let remote_out = get_remote(&mut d)?;
-    let remote_in = get_remote(&mut d)?;
+    let remote_out = get_remote_v1(&mut d)?;
+    let remote_in = get_remote_v1(&mut d)?;
     if !d.is_at_end() {
         bail!("topology slice has {} trailing bytes", d.remaining());
     }
@@ -163,8 +424,181 @@ pub fn decode_topology(bytes: &[u8]) -> Result<Subgraph> {
     })
 }
 
-/// Encode a named per-vertex f32 attribute slice for one sub-graph.
-pub fn encode_attribute(id: SubgraphId, name: &str, values: &[f32]) -> Vec<u8> {
+// ------------------------------------------------------------ v2 payload
+
+/// v2 topology meta section: `partition u32, index u32, nverts u32,
+/// nedges u64, n_remote_out u32, n_remote_in u32, num_global u64,
+/// flags u8 (bit0 directed, bit1 weighted)`.
+const TOPO_META_LEN: usize = 37;
+
+fn encode_topology_v2(sg: &Subgraph) -> Vec<u8> {
+    let n = sg.local.num_vertices();
+    let ne = sg.local.num_edges();
+    let weighted = sg.local.has_weights();
+
+    let mut meta = Vec::with_capacity(TOPO_META_LEN);
+    meta.extend_from_slice(&sg.id.partition.to_le_bytes());
+    meta.extend_from_slice(&sg.id.index.to_le_bytes());
+    meta.extend_from_slice(&(n as u32).to_le_bytes());
+    meta.extend_from_slice(&(ne as u64).to_le_bytes());
+    meta.extend_from_slice(&(sg.remote_out.len() as u32).to_le_bytes());
+    meta.extend_from_slice(&(sg.remote_in.len() as u32).to_le_bytes());
+    meta.extend_from_slice(&sg.num_global_vertices.to_le_bytes());
+    meta.push((sg.local.directed() as u8) | ((weighted as u8) << 1));
+
+    let mut verts = Vec::with_capacity(n * 4);
+    put_u32s(&mut verts, sg.vertices.iter().copied());
+
+    // CSR columns: offsets (n+1 × u64), targets (ne × u32), weights.
+    let mut offsets = Vec::with_capacity((n + 1) * 8);
+    let mut targets = Vec::with_capacity(ne * 4);
+    let mut wcol = Vec::with_capacity(if weighted { ne * 4 } else { 0 });
+    let mut acc = 0u64;
+    offsets.extend_from_slice(&acc.to_le_bytes());
+    for v in 0..n as u32 {
+        for (t, ei) in sg.local.out_edges(v) {
+            targets.extend_from_slice(&t.to_le_bytes());
+            if weighted {
+                wcol.extend_from_slice(&sg.local.weight(ei).to_le_bytes());
+            }
+            acc += 1;
+        }
+        offsets.extend_from_slice(&acc.to_le_bytes());
+    }
+
+    let mut sections = vec![
+        (SEC_META, meta),
+        (SEC_VERTICES, verts),
+        (SEC_OFFSETS, offsets),
+        (SEC_TARGETS, targets),
+    ];
+    if weighted {
+        sections.push((SEC_WEIGHTS, wcol));
+    }
+    sections.push((SEC_REMOTE_OUT, encode_remote_v2(&sg.remote_out)));
+    sections.push((SEC_REMOTE_IN, encode_remote_v2(&sg.remote_in)));
+    frame_v2(KIND_TOPOLOGY, &sections)
+}
+
+fn decode_topology_v2(bytes: &[u8]) -> Result<Subgraph> {
+    let table = unframe_v2(bytes, KIND_TOPOLOGY).context("topology slice")?;
+
+    let meta = table.get(SEC_META)?;
+    ensure!(
+        meta.len() == TOPO_META_LEN,
+        "section `meta` has {} bytes, expected {TOPO_META_LEN}",
+        meta.len()
+    );
+    let partition = u32::from_le_bytes(meta[0..4].try_into().unwrap());
+    let index = u32::from_le_bytes(meta[4..8].try_into().unwrap());
+    let n = u32::from_le_bytes(meta[8..12].try_into().unwrap()) as usize;
+    let ne = u64::from_le_bytes(meta[12..20].try_into().unwrap()) as usize;
+    let n_remote_out = u32::from_le_bytes(meta[20..24].try_into().unwrap()) as usize;
+    let n_remote_in = u32::from_le_bytes(meta[24..28].try_into().unwrap()) as usize;
+    let num_global_vertices = u64::from_le_bytes(meta[28..36].try_into().unwrap());
+    let flags = meta[36];
+    let directed = flags & 1 != 0;
+    let weighted = flags & 2 != 0;
+
+    let vertices = get_u32s(table.get(SEC_VERTICES)?, SEC_VERTICES)?;
+    ensure!(
+        vertices.len() == n,
+        "section `vertices` holds {} ids, meta says {n}",
+        vertices.len()
+    );
+    ensure!(
+        vertices.windows(2).all(|w| w[0] < w[1]),
+        "section `vertices` ids not strictly ascending"
+    );
+
+    let offsets = get_u64s(table.get(SEC_OFFSETS)?, SEC_OFFSETS)?;
+    ensure!(
+        offsets.len() == n + 1,
+        "section `offsets` holds {} entries, expected {}",
+        offsets.len(),
+        n + 1
+    );
+    ensure!(
+        offsets[0] == 0 && offsets[n] as usize == ne,
+        "section `offsets` endpoints inconsistent with meta"
+    );
+    ensure!(
+        offsets.windows(2).all(|w| w[0] <= w[1]),
+        "section `offsets` not monotone"
+    );
+
+    let targets = get_u32s(table.get(SEC_TARGETS)?, SEC_TARGETS)?;
+    ensure!(
+        targets.len() == ne,
+        "section `targets` holds {} edges, meta says {ne}",
+        targets.len()
+    );
+
+    let weights = if weighted {
+        let w = get_f32s(table.get(SEC_WEIGHTS)?, SEC_WEIGHTS)?;
+        ensure!(
+            w.len() == ne,
+            "section `weights` holds {} entries, meta says {ne}",
+            w.len()
+        );
+        Some(w)
+    } else {
+        None
+    };
+
+    let mut edges = Vec::with_capacity(ne);
+    for v in 0..n {
+        for i in offsets[v] as usize..offsets[v + 1] as usize {
+            edges.push((v as u32, targets[i]));
+        }
+    }
+
+    let remote_out = decode_remote_v2(table.get(SEC_REMOTE_OUT)?, SEC_REMOTE_OUT)?;
+    ensure!(
+        remote_out.len() == n_remote_out,
+        "section `remote_out` holds {} refs, meta says {n_remote_out}",
+        remote_out.len()
+    );
+    let remote_in = decode_remote_v2(table.get(SEC_REMOTE_IN)?, SEC_REMOTE_IN)?;
+    ensure!(
+        remote_in.len() == n_remote_in,
+        "section `remote_in` holds {} refs, meta says {n_remote_in}",
+        remote_in.len()
+    );
+
+    let local = Graph::from_edges(n, &edges, weights, directed)?;
+    Ok(Subgraph {
+        id: SubgraphId { partition, index },
+        vertices,
+        local,
+        remote_out,
+        remote_in,
+        num_global_vertices,
+    })
+}
+
+// ------------------------------------------------------------ public API
+
+/// Encode a sub-graph's topology slice in the given format.
+pub fn encode_topology(sg: &Subgraph, format: SliceFormat) -> Vec<u8> {
+    match format {
+        SliceFormat::V1 => encode_topology_v1(sg),
+        SliceFormat::V2 => encode_topology_v2(sg),
+    }
+}
+
+/// Decode a topology slice of either format (version-byte dispatch).
+pub fn decode_topology(bytes: &[u8]) -> Result<Subgraph> {
+    ensure!(bytes.len() >= 6, "slice too short ({} bytes)", bytes.len());
+    ensure!(&bytes[..4] == MAGIC, "bad slice magic");
+    match bytes[4] {
+        VERSION_V1 => decode_topology_v1(bytes),
+        VERSION_V2 => decode_topology_v2(bytes),
+        v => bail!("unsupported slice version {v}"),
+    }
+}
+
+fn encode_attribute_v1(id: SubgraphId, name: &str, values: &[f32]) -> Vec<u8> {
     let mut e = Encoder::with_capacity(16 + name.len() + values.len() * 4);
     e.put_varint(id.partition as u64);
     e.put_varint(id.index as u64);
@@ -173,12 +607,11 @@ pub fn encode_attribute(id: SubgraphId, name: &str, values: &[f32]) -> Vec<u8> {
     for &v in values {
         e.put_f32(v);
     }
-    frame(KIND_ATTRIBUTE, e.into_bytes())
+    frame_v1(KIND_ATTRIBUTE, e.into_bytes())
 }
 
-/// Decode an attribute slice: `(id, name, values)`.
-pub fn decode_attribute(bytes: &[u8]) -> Result<(SubgraphId, String, Vec<f32>)> {
-    let payload = unframe(bytes, KIND_ATTRIBUTE).context("attribute slice")?;
+fn decode_attribute_v1(bytes: &[u8]) -> Result<(SubgraphId, String, Vec<f32>)> {
+    let payload = unframe_v1(bytes, KIND_ATTRIBUTE).context("attribute slice")?;
     let mut d = Decoder::new(payload);
     let partition = d.get_varint()? as u32;
     let index = d.get_varint()? as u32;
@@ -193,12 +626,81 @@ pub fn decode_attribute(bytes: &[u8]) -> Result<(SubgraphId, String, Vec<f32>)> 
     Ok((SubgraphId { partition, index }, name, values))
 }
 
+/// v2 attribute meta section: `partition u32, index u32, count u32,
+/// name_len u32, name bytes`.
+fn encode_attribute_v2(id: SubgraphId, name: &str, values: &[f32]) -> Vec<u8> {
+    let mut meta = Vec::with_capacity(16 + name.len());
+    meta.extend_from_slice(&id.partition.to_le_bytes());
+    meta.extend_from_slice(&id.index.to_le_bytes());
+    meta.extend_from_slice(&(values.len() as u32).to_le_bytes());
+    meta.extend_from_slice(&(name.len() as u32).to_le_bytes());
+    meta.extend_from_slice(name.as_bytes());
+
+    let mut vals = Vec::with_capacity(values.len() * 4);
+    for &v in values {
+        vals.extend_from_slice(&v.to_le_bytes());
+    }
+    frame_v2(KIND_ATTRIBUTE, &[(SEC_META, meta), (SEC_VALUES, vals)])
+}
+
+fn decode_attribute_v2(bytes: &[u8]) -> Result<(SubgraphId, String, Vec<f32>)> {
+    let table = unframe_v2(bytes, KIND_ATTRIBUTE).context("attribute slice")?;
+    let meta = table.get(SEC_META)?;
+    ensure!(meta.len() >= 16, "section `meta` has {} bytes, need >= 16", meta.len());
+    let partition = u32::from_le_bytes(meta[0..4].try_into().unwrap());
+    let index = u32::from_le_bytes(meta[4..8].try_into().unwrap());
+    let count = u32::from_le_bytes(meta[8..12].try_into().unwrap()) as usize;
+    let name_len = u32::from_le_bytes(meta[12..16].try_into().unwrap()) as usize;
+    ensure!(
+        meta.len() == 16 + name_len,
+        "section `meta` has {} bytes, expected {}",
+        meta.len(),
+        16 + name_len
+    );
+    let name = std::str::from_utf8(&meta[16..])
+        .context("attribute name not utf-8")?
+        .to_string();
+    let values = get_f32s(table.get(SEC_VALUES)?, SEC_VALUES)?;
+    ensure!(
+        values.len() == count,
+        "section `values` holds {} entries, meta says {count}",
+        values.len()
+    );
+    Ok((SubgraphId { partition, index }, name, values))
+}
+
+/// Encode a named per-vertex f32 attribute slice for one sub-graph.
+pub fn encode_attribute(
+    id: SubgraphId,
+    name: &str,
+    values: &[f32],
+    format: SliceFormat,
+) -> Vec<u8> {
+    match format {
+        SliceFormat::V1 => encode_attribute_v1(id, name, values),
+        SliceFormat::V2 => encode_attribute_v2(id, name, values),
+    }
+}
+
+/// Decode an attribute slice of either format: `(id, name, values)`.
+pub fn decode_attribute(bytes: &[u8]) -> Result<(SubgraphId, String, Vec<f32>)> {
+    ensure!(bytes.len() >= 6, "slice too short ({} bytes)", bytes.len());
+    ensure!(&bytes[..4] == MAGIC, "bad slice magic");
+    match bytes[4] {
+        VERSION_V1 => decode_attribute_v1(bytes),
+        VERSION_V2 => decode_attribute_v2(bytes),
+        v => bail!("unsupported slice version {v}"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::gofs::subgraph::discover;
     use crate::graph::gen;
     use crate::partition::{Partitioner, RangePartitioner};
+
+    const BOTH: [SliceFormat; 2] = [SliceFormat::V1, SliceFormat::V2];
 
     fn sample_subgraphs(weighted: bool) -> Vec<Subgraph> {
         let base = gen::road(12, 0.9, 0.02, 5);
@@ -227,80 +729,154 @@ mod tests {
 
     #[test]
     fn topology_round_trip_unweighted() {
-        for sg in sample_subgraphs(false) {
-            let bytes = encode_topology(&sg);
-            let back = decode_topology(&bytes).unwrap();
-            assert_subgraph_eq(&sg, &back);
+        for fmt in BOTH {
+            for sg in sample_subgraphs(false) {
+                let bytes = encode_topology(&sg, fmt);
+                let back = decode_topology(&bytes).unwrap();
+                assert_subgraph_eq(&sg, &back);
+            }
         }
     }
 
     #[test]
     fn topology_round_trip_weighted() {
+        for fmt in BOTH {
+            for sg in sample_subgraphs(true) {
+                let bytes = encode_topology(&sg, fmt);
+                let back = decode_topology(&bytes).unwrap();
+                assert_subgraph_eq(&sg, &back);
+            }
+        }
+    }
+
+    #[test]
+    fn v1_and_v2_decode_identically() {
         for sg in sample_subgraphs(true) {
-            let bytes = encode_topology(&sg);
-            let back = decode_topology(&bytes).unwrap();
-            assert_subgraph_eq(&sg, &back);
+            let a = decode_topology(&encode_topology(&sg, SliceFormat::V1)).unwrap();
+            let b = decode_topology(&encode_topology(&sg, SliceFormat::V2)).unwrap();
+            assert_subgraph_eq(&a, &b);
         }
     }
 
     #[test]
     fn attribute_round_trip() {
-        let id = SubgraphId { partition: 2, index: 7 };
-        let vals = vec![1.0f32, -2.5, 0.0, f32::INFINITY];
-        let bytes = encode_attribute(id, "rank", &vals);
-        let (id2, name, vals2) = decode_attribute(&bytes).unwrap();
-        assert_eq!(id2, id);
-        assert_eq!(name, "rank");
-        assert_eq!(vals2, vals);
+        for fmt in BOTH {
+            let id = SubgraphId { partition: 2, index: 7 };
+            let vals = vec![1.0f32, -2.5, 0.0, f32::INFINITY];
+            let bytes = encode_attribute(id, "rank", &vals, fmt);
+            let (id2, name, vals2) = decode_attribute(&bytes).unwrap();
+            assert_eq!(id2, id);
+            assert_eq!(name, "rank");
+            assert_eq!(vals2, vals);
+        }
     }
 
     #[test]
     fn truncation_detected() {
-        let sg = &sample_subgraphs(false)[0];
-        let bytes = encode_topology(sg);
-        for cut in [6, bytes.len() / 2, bytes.len() - 1] {
-            assert!(
-                decode_topology(&bytes[..cut]).is_err(),
-                "cut at {cut} must fail"
-            );
+        for fmt in BOTH {
+            let sg = &sample_subgraphs(false)[0];
+            let bytes = encode_topology(sg, fmt);
+            for cut in [6, bytes.len() / 2, bytes.len() - 1] {
+                assert!(
+                    decode_topology(&bytes[..cut]).is_err(),
+                    "{fmt}: cut at {cut} must fail"
+                );
+            }
         }
     }
 
     #[test]
     fn corruption_detected() {
-        let sg = &sample_subgraphs(false)[0];
-        let mut bytes = encode_topology(sg);
-        let mid = bytes.len() / 2;
-        bytes[mid] ^= 0xff;
-        assert!(decode_topology(&bytes).is_err());
+        for fmt in BOTH {
+            let sg = &sample_subgraphs(false)[0];
+            let mut bytes = encode_topology(sg, fmt);
+            let mid = bytes.len() / 2;
+            bytes[mid] ^= 0xff;
+            assert!(decode_topology(&bytes).is_err(), "{fmt}");
+        }
+    }
+
+    #[test]
+    fn v2_corruption_errors_name_the_section() {
+        let sg = &sample_subgraphs(true)[0];
+        let bytes = encode_topology(sg, SliceFormat::V2);
+        let sections = section_ranges(&bytes).unwrap();
+        assert!(sections.iter().any(|(n, _)| *n == "weights"));
+        for (name, range) in sections {
+            if range.is_empty() {
+                continue;
+            }
+            let mut bad = bytes.clone();
+            bad[range.start + range.len() / 2] ^= 0x55;
+            let err = decode_topology(&bad).unwrap_err();
+            assert!(
+                format!("{err:#}").contains(name),
+                "flipping `{name}` produced error not naming it: {err:#}"
+            );
+        }
     }
 
     #[test]
     fn wrong_kind_rejected() {
-        let bytes = encode_attribute(SubgraphId { partition: 0, index: 0 }, "x", &[1.0]);
-        assert!(decode_topology(&bytes).is_err());
+        for fmt in BOTH {
+            let bytes =
+                encode_attribute(SubgraphId { partition: 0, index: 0 }, "x", &[1.0], fmt);
+            assert!(decode_topology(&bytes).is_err(), "{fmt}");
+        }
     }
 
     #[test]
-    fn bad_magic_rejected() {
+    fn bad_magic_and_version_rejected() {
         let sg = &sample_subgraphs(false)[0];
-        let mut bytes = encode_topology(sg);
+        let mut bytes = encode_topology(sg, SliceFormat::V2);
         bytes[0] = b'X';
+        assert!(decode_topology(&bytes).is_err());
+        let mut bytes = encode_topology(sg, SliceFormat::V2);
+        bytes[4] = 9;
         assert!(decode_topology(&bytes).is_err());
     }
 
     #[test]
     fn empty_subgraph_round_trip() {
-        let g = Graph::from_edges(1, &[], None, false).unwrap();
-        let sg = Subgraph {
-            id: SubgraphId { partition: 0, index: 0 },
-            vertices: vec![0],
-            local: g,
-            remote_out: vec![],
-            remote_in: vec![],
-            num_global_vertices: 1,
-        };
-        let back = decode_topology(&encode_topology(&sg)).unwrap();
-        assert_subgraph_eq(&sg, &back);
+        for fmt in BOTH {
+            let g = Graph::from_edges(1, &[], None, false).unwrap();
+            let sg = Subgraph {
+                id: SubgraphId { partition: 0, index: 0 },
+                vertices: vec![0],
+                local: g,
+                remote_out: vec![],
+                remote_in: vec![],
+                num_global_vertices: 1,
+            };
+            let back = decode_topology(&encode_topology(&sg, fmt)).unwrap();
+            assert_subgraph_eq(&sg, &back);
+        }
+    }
+
+    #[test]
+    fn format_parse_display_round_trip() {
+        assert_eq!(SliceFormat::parse("v1"), Some(SliceFormat::V1));
+        assert_eq!(SliceFormat::parse("v2"), Some(SliceFormat::V2));
+        assert_eq!(SliceFormat::parse("v3"), None);
+        assert_eq!(SliceFormat::default(), SliceFormat::V2);
+        for fmt in BOTH {
+            assert_eq!(SliceFormat::parse(fmt.as_str()), Some(fmt));
+        }
+    }
+
+    #[test]
+    fn section_ranges_cover_v2_file_exactly() {
+        let sg = &sample_subgraphs(true)[0];
+        let bytes = encode_topology(sg, SliceFormat::V2);
+        let sections = section_ranges(&bytes).unwrap();
+        // Directory order, contiguous, ending at EOF.
+        let mut pos = V2_HEADER_LEN + sections.len() * V2_DIR_ENTRY_LEN;
+        for (_, r) in &sections {
+            assert_eq!(r.start, pos);
+            pos = r.end;
+        }
+        assert_eq!(pos, bytes.len());
+        // v1 slices are not sectioned.
+        assert!(section_ranges(&encode_topology(sg, SliceFormat::V1)).is_err());
     }
 }

@@ -11,21 +11,36 @@
 //! ```
 //!
 //! The store is write-once-read-many (paper §4.1): `create` builds it
-//! from a graph + partitioning, `open` + `load_partition` serve Gopher.
-//! Loading accounts files/bytes so the `sim` layer can model cluster
-//! disk/network time for the Fig-4(b) loading benchmark.
+//! from a graph + partitioning (slice format v2 by default, v1 via
+//! [`Store::create_with_format`]), `open` + the load paths serve Gopher.
+//!
+//! Loading is parallel at two levels, mirroring the paper's cluster:
+//! [`Store::load_all`] runs one loader thread per partition (each
+//! simulated host reads only its own directory, concurrently — the
+//! "maximizes cumulative disk read bandwidth" co-design point), and
+//! within a partition a worker pool decodes sub-graph slices in
+//! parallel. [`LoadOptions`] selects sequential loading (for A/B
+//! benchmarking) and **attribute projection**: the paper's "graph with
+//! 10 attributes … only loads the slice it needs" scenario, where a job
+//! declares the attributes it reads and the load path touches only
+//! those slice files.
 
+use std::collections::BTreeMap;
 use std::fs;
 use std::path::{Path, PathBuf};
+use std::sync::Mutex;
 use std::time::Instant;
 
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::graph::csr::Graph;
 use crate::partition::Partitioning;
+use crate::util::pool;
 
-use super::slice;
-use super::subgraph::{discover, DistributedGraph, Subgraph, SubgraphId};
+use super::slice::{self, SliceFormat};
+use super::subgraph::{
+    discover, DistributedGraph, PartitionAttributes, Subgraph, SubgraphId,
+};
 
 /// Store-wide metadata (the `meta.txt` contents).
 #[derive(Clone, Debug, PartialEq)]
@@ -38,14 +53,52 @@ pub struct StoreMeta {
     pub num_partitions: u32,
     /// Sub-graph count per partition.
     pub subgraph_counts: Vec<u32>,
+    /// Slice format the store was written with (v1 when the key is
+    /// absent from `meta.txt` — stores written before the format knob).
+    pub format: SliceFormat,
 }
 
 /// Byte/file accounting for one load (feeds `sim::disk`).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct LoadStats {
+    /// Slice files opened — summed across parallel load units.
     pub files: u64,
+    /// Bytes read — summed across parallel load units.
     pub bytes: u64,
+    /// Wall-clock seconds of the load. For the (default) parallel
+    /// multi-partition load this is the **max** across partitions (each
+    /// simulated host loads its own slices concurrently, so the slowest
+    /// host gates the job), *not* the sum of per-partition times; a
+    /// `LoadOptions { sequential: true, .. }` load reports the sum,
+    /// which *is* its wall clock.
     pub seconds: f64,
+}
+
+/// Which attribute slices a load touches (the projection).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum AttrProjection {
+    /// Topology only — no attribute slice is opened.
+    #[default]
+    None,
+    /// Every attribute slice present in the host directory.
+    All,
+    /// Exactly the named attributes; a missing slice is an error.
+    Only(Vec<String>),
+}
+
+/// Knobs for [`Store::load_partition_with`] / [`Store::load_all_with`].
+#[derive(Clone, Debug, Default)]
+pub struct LoadOptions {
+    /// Attribute projection (default: topology only).
+    pub attributes: AttrProjection,
+    /// Load strictly sequentially (one slice at a time, one partition at
+    /// a time) — the pre-v2 behaviour, kept for A/B benchmarking and the
+    /// parallel-equivalence tests.
+    pub sequential: bool,
+    /// Decode threads per partition (0 = auto: detected cores for a
+    /// single-partition load, 1 when partitions already load in
+    /// parallel).
+    pub cores: usize,
 }
 
 /// Handle to an on-disk GoFS store.
@@ -54,13 +107,41 @@ pub struct Store {
     meta: StoreMeta,
 }
 
+/// What one slice-load job produced (crate-internal).
+enum Loaded {
+    Topo(u32, Subgraph),
+    Attr(u32, String, Vec<f32>),
+}
+
+/// One planned slice read.
+enum SlicePlan {
+    Topo { index: u32, path: PathBuf },
+    Attr { index: u32, name: String, path: PathBuf },
+}
+
+/// Result slot of one parallel slice-load job.
+type LoadCell = Mutex<Option<Result<(Loaded, u64)>>>;
+
 impl Store {
-    /// Partition `g`, discover sub-graphs, and write the whole store.
+    /// Partition `g`, discover sub-graphs, and write the whole store in
+    /// the default slice format (v2).
     pub fn create(
         root: &Path,
         name: &str,
         g: &Graph,
         parts: &Partitioning,
+    ) -> Result<(Store, DistributedGraph)> {
+        Self::create_with_format(root, name, g, parts, SliceFormat::default())
+    }
+
+    /// Partition `g`, discover sub-graphs, and write the whole store in
+    /// an explicit slice format.
+    pub fn create_with_format(
+        root: &Path,
+        name: &str,
+        g: &Graph,
+        parts: &Partitioning,
+        format: SliceFormat,
     ) -> Result<(Store, DistributedGraph)> {
         ensure!(
             !root.exists() || fs::read_dir(root)?.next().is_none(),
@@ -73,7 +154,7 @@ impl Store {
             let host_dir = root.join(format!("host{p}"));
             fs::create_dir_all(&host_dir)?;
             for sg in sgs {
-                let bytes = slice::encode_topology(sg);
+                let bytes = slice::encode_topology(sg, format);
                 fs::write(host_dir.join(format!("sg_{}.topo.slice", sg.id.index)), bytes)?;
             }
         }
@@ -85,6 +166,7 @@ impl Store {
             weighted: g.has_weights(),
             num_partitions: parts.k() as u32,
             subgraph_counts: dg.partitions.iter().map(|p| p.len() as u32).collect(),
+            format,
         };
         write_meta(&root.join("meta.txt"), &meta)?;
         Ok((Store { root: root.to_path_buf(), meta }, dg))
@@ -109,44 +191,180 @@ impl Store {
         self.root.join(format!("host{p}"))
     }
 
+    fn attr_path(&self, p: u32, index: u32, name: &str) -> PathBuf {
+        self.host_dir(p).join(format!("sg_{index}.attr.{name}.slice"))
+    }
+
     /// Load all sub-graphs of partition `p` (data-local read: only this
-    /// host's directory is touched — the GoFS co-design point).
+    /// host's directory is touched — the GoFS co-design point). Topology
+    /// only, slices decoded in parallel.
     pub fn load_partition(&self, p: u32) -> Result<(Vec<Subgraph>, LoadStats)> {
-        ensure!(p < self.meta.num_partitions, "partition {p} out of range");
-        let t0 = Instant::now();
-        let mut stats = LoadStats::default();
-        let count = self.meta.subgraph_counts[p as usize];
-        let mut sgs = Vec::with_capacity(count as usize);
-        for i in 0..count {
-            let path = self.host_dir(p).join(format!("sg_{i}.topo.slice"));
-            let bytes =
-                fs::read(&path).with_context(|| format!("read {}", path.display()))?;
-            stats.files += 1;
-            stats.bytes += bytes.len() as u64;
-            let sg = slice::decode_topology(&bytes)
-                .with_context(|| format!("decode {}", path.display()))?;
-            ensure!(
-                sg.id == SubgraphId { partition: p, index: i },
-                "slice {} holds wrong sub-graph {}",
-                path.display(),
-                sg.id
-            );
-            sgs.push(sg);
-        }
-        stats.seconds = t0.elapsed().as_secs_f64();
+        let (sgs, _, stats) = self.load_partition_with(p, &LoadOptions::default())?;
         Ok((sgs, stats))
     }
 
-    /// Load the entire distributed graph (all partitions).
+    /// Load partition `p` with explicit options: attribute projection
+    /// and sequential/parallel decode. The returned
+    /// [`PartitionAttributes`] is indexed by sub-graph index and holds
+    /// exactly the projected columns.
+    pub fn load_partition_with(
+        &self,
+        p: u32,
+        opts: &LoadOptions,
+    ) -> Result<(Vec<Subgraph>, PartitionAttributes, LoadStats)> {
+        ensure!(p < self.meta.num_partitions, "partition {p} out of range");
+        let t0 = Instant::now();
+        let count = self.meta.subgraph_counts[p as usize] as usize;
+        let host = self.host_dir(p);
+
+        // Plan every slice file this load touches — the projection *is*
+        // the plan: undeclared attribute slices are never opened.
+        let mut plans: Vec<SlicePlan> = (0..count)
+            .map(|i| SlicePlan::Topo {
+                index: i as u32,
+                path: host.join(format!("sg_{i}.topo.slice")),
+            })
+            .collect();
+        match &opts.attributes {
+            AttrProjection::None => {}
+            AttrProjection::Only(names) => {
+                for i in 0..count as u32 {
+                    for name in names {
+                        plans.push(SlicePlan::Attr {
+                            index: i,
+                            name: name.clone(),
+                            path: self.attr_path(p, i, name),
+                        });
+                    }
+                }
+            }
+            AttrProjection::All => {
+                let mut found: Vec<(u32, String)> = Vec::new();
+                for entry in fs::read_dir(&host)
+                    .with_context(|| format!("list {}", host.display()))?
+                {
+                    let fname = entry?.file_name().to_string_lossy().into_owned();
+                    if let Some((idx, name)) = parse_attr_filename(&fname) {
+                        if (idx as usize) < count {
+                            found.push((idx, name));
+                        }
+                    }
+                }
+                found.sort();
+                plans.extend(found.into_iter().map(|(index, name)| {
+                    let path = self.attr_path(p, index, &name);
+                    SlicePlan::Attr { index, name, path }
+                }));
+            }
+        }
+
+        // Decode the planned slices on a worker pool (sub-graph slices
+        // are independent files — the v2 point that each is validated
+        // and decoded on its own).
+        let cores = if opts.sequential {
+            1
+        } else if opts.cores == 0 {
+            pool::num_cores()
+        } else {
+            opts.cores
+        };
+        let cells: Vec<LoadCell> = (0..plans.len()).map(|_| Mutex::new(None)).collect();
+        pool::run_indexed(cores, plans.len(), |j| {
+            let r = load_one(&plans[j], p);
+            *cells[j].lock().unwrap() = Some(r);
+        })?;
+
+        let mut stats = LoadStats::default();
+        let mut sgs: Vec<Option<Subgraph>> = (0..count).map(|_| None).collect();
+        let mut attrs: PartitionAttributes = vec![BTreeMap::new(); count];
+        for cell in cells {
+            let result = cell
+                .into_inner()
+                .unwrap()
+                .expect("pool runs every load job");
+            let (loaded, bytes) = result?;
+            stats.files += 1;
+            stats.bytes += bytes;
+            match loaded {
+                Loaded::Topo(i, sg) => sgs[i as usize] = Some(sg),
+                Loaded::Attr(i, name, vals) => {
+                    attrs[i as usize].insert(name, vals);
+                }
+            }
+        }
+        let sgs: Vec<Subgraph> = sgs
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| s.ok_or_else(|| anyhow!("sub-graph {i} never loaded")))
+            .collect::<Result<_>>()?;
+        stats.seconds = t0.elapsed().as_secs_f64();
+        Ok((sgs, attrs, stats))
+    }
+
+    /// Load the entire distributed graph (all partitions, one loader
+    /// thread per partition).
     pub fn load_all(&self) -> Result<(DistributedGraph, LoadStats)> {
-        let mut partitions = Vec::new();
+        let (dg, _, stats) = self.load_all_with(&LoadOptions::default())?;
+        Ok((dg, stats))
+    }
+
+    /// Load every partition with explicit options. Unless
+    /// `opts.sequential`, partitions load on one thread each — the
+    /// paper's per-host parallel ingest — and `LoadStats::seconds`
+    /// reports the slowest partition (the parallel load's wall clock);
+    /// a sequential load reports the sum (its wall clock). `files` and
+    /// `bytes` are sums either way.
+    pub fn load_all_with(
+        &self,
+        opts: &LoadOptions,
+    ) -> Result<(DistributedGraph, Vec<PartitionAttributes>, LoadStats)> {
+        let k = self.meta.num_partitions;
+        let results: Vec<Result<(Vec<Subgraph>, PartitionAttributes, LoadStats)>> =
+            if opts.sequential || k <= 1 {
+                (0..k).map(|p| self.load_partition_with(p, opts)).collect()
+            } else {
+                // One loader thread per partition; within each, default
+                // to single-threaded decode so the two levels don't
+                // oversubscribe the machine.
+                let per_part = LoadOptions {
+                    cores: opts.cores.max(1),
+                    ..opts.clone()
+                };
+                std::thread::scope(|scope| {
+                    let handles: Vec<_> = (0..k)
+                        .map(|p| {
+                            let per_part = &per_part;
+                            scope.spawn(move || self.load_partition_with(p, per_part))
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| match h.join() {
+                            Ok(r) => r,
+                            Err(payload) => std::panic::resume_unwind(payload),
+                        })
+                        .collect()
+                })
+            };
+
+        let parallel = !opts.sequential && k > 1;
+        let mut partitions = Vec::with_capacity(k as usize);
+        let mut attrs = Vec::with_capacity(k as usize);
         let mut total = LoadStats::default();
-        for p in 0..self.meta.num_partitions {
-            let (sgs, st) = self.load_partition(p)?;
+        for r in results {
+            let (sgs, pa, st) = r?;
             partitions.push(sgs);
+            attrs.push(pa);
             total.files += st.files;
             total.bytes += st.bytes;
-            total.seconds += st.seconds;
+            // Honest wall clock either way: hosts load concurrently on
+            // the parallel path (slowest host gates), one after another
+            // on the sequential path (times add up).
+            total.seconds = if parallel {
+                total.seconds.max(st.seconds)
+            } else {
+                total.seconds + st.seconds
+            };
         }
         Ok((
             DistributedGraph {
@@ -154,25 +372,23 @@ impl Store {
                 num_global_vertices: self.meta.num_vertices,
                 directed: self.meta.directed,
             },
+            attrs,
             total,
         ))
     }
 
-    /// Write a named per-vertex attribute for one sub-graph.
+    /// Write a named per-vertex attribute for one sub-graph (in the
+    /// store's slice format).
     pub fn write_attribute(&self, id: SubgraphId, name: &str, values: &[f32]) -> Result<()> {
-        let path = self
-            .host_dir(id.partition)
-            .join(format!("sg_{}.attr.{name}.slice", id.index));
-        fs::write(&path, slice::encode_attribute(id, name, values))
+        let path = self.attr_path(id.partition, id.index, name);
+        fs::write(&path, slice::encode_attribute(id, name, values, self.meta.format))
             .with_context(|| format!("write {}", path.display()))
     }
 
     /// Read a named attribute for one sub-graph.
     pub fn read_attribute(&self, id: SubgraphId, name: &str) -> Result<(Vec<f32>, LoadStats)> {
         let t0 = Instant::now();
-        let path = self
-            .host_dir(id.partition)
-            .join(format!("sg_{}.attr.{name}.slice", id.index));
+        let path = self.attr_path(id.partition, id.index, name);
         let bytes = fs::read(&path).with_context(|| format!("read {}", path.display()))?;
         let (got_id, got_name, values) = slice::decode_attribute(&bytes)?;
         ensure!(got_id == id && got_name == name, "attribute slice mismatch");
@@ -183,18 +399,57 @@ impl Store {
     }
 }
 
+/// Read + decode + verify one planned slice.
+fn load_one(plan: &SlicePlan, p: u32) -> Result<(Loaded, u64)> {
+    match plan {
+        SlicePlan::Topo { index, path } => {
+            let bytes =
+                fs::read(path).with_context(|| format!("read {}", path.display()))?;
+            let sg = slice::decode_topology(&bytes)
+                .with_context(|| format!("decode {}", path.display()))?;
+            ensure!(
+                sg.id == SubgraphId { partition: p, index: *index },
+                "slice {} holds wrong sub-graph {}",
+                path.display(),
+                sg.id
+            );
+            Ok((Loaded::Topo(*index, sg), bytes.len() as u64))
+        }
+        SlicePlan::Attr { index, name, path } => {
+            let bytes = fs::read(path)
+                .with_context(|| format!("read attribute slice {}", path.display()))?;
+            let (id, got_name, values) = slice::decode_attribute(&bytes)
+                .with_context(|| format!("decode {}", path.display()))?;
+            ensure!(
+                id == SubgraphId { partition: p, index: *index } && got_name == *name,
+                "attribute slice mismatch at {}",
+                path.display()
+            );
+            Ok((Loaded::Attr(*index, name.clone(), values), bytes.len() as u64))
+        }
+    }
+}
+
+/// Parse `sg_<idx>.attr.<name>.slice` file names.
+fn parse_attr_filename(fname: &str) -> Option<(u32, String)> {
+    let rest = fname.strip_prefix("sg_")?.strip_suffix(".slice")?;
+    let (idx, name) = rest.split_once(".attr.")?;
+    Some((idx.parse().ok()?, name.to_string()))
+}
+
 fn write_meta(path: &Path, meta: &StoreMeta) -> Result<()> {
     let counts: Vec<String> =
         meta.subgraph_counts.iter().map(|c| c.to_string()).collect();
     let text = format!(
-        "name={}\nvertices={}\nedges={}\ndirected={}\nweighted={}\npartitions={}\nsubgraphs={}\n",
+        "name={}\nvertices={}\nedges={}\ndirected={}\nweighted={}\npartitions={}\nsubgraphs={}\nformat={}\n",
         meta.name,
         meta.num_vertices,
         meta.num_edges,
         meta.directed,
         meta.weighted,
         meta.num_partitions,
-        counts.join(",")
+        counts.join(","),
+        meta.format
     );
     fs::write(path, text).with_context(|| format!("write {}", path.display()))
 }
@@ -208,6 +463,9 @@ fn read_meta(path: &Path) -> Result<StoreMeta> {
     let mut weighted = None;
     let mut partitions = None;
     let mut subgraphs = None;
+    // Stores written before the format knob carry no `format=` key and
+    // are v1 by construction.
+    let mut format = SliceFormat::V1;
     for line in text.lines() {
         let Some((k, v)) = line.split_once('=') else { continue };
         match k {
@@ -224,6 +482,10 @@ fn read_meta(path: &Path) -> Result<StoreMeta> {
                         .map(|s| s.parse::<u32>())
                         .collect::<Result<Vec<_>, _>>()?,
                 )
+            }
+            "format" => {
+                format = SliceFormat::parse(v)
+                    .ok_or_else(|| anyhow!("meta.txt has unknown slice format {v:?}"))?
             }
             _ => {}
         }
@@ -245,6 +507,7 @@ fn read_meta(path: &Path) -> Result<StoreMeta> {
         weighted,
         num_partitions,
         subgraph_counts,
+        format,
     })
 }
 
@@ -264,22 +527,57 @@ mod tests {
 
     #[test]
     fn create_open_load_round_trip() {
-        let g = gen::road(16, 0.93, 0.02, 8);
-        let parts = MultilevelPartitioner::default().partition(&g, 3);
-        let root = tmp("round_trip");
-        let (store, dg) = Store::create(&root, "rn", &g, &parts).unwrap();
-        assert_eq!(store.meta().num_partitions, 3);
+        for fmt in [SliceFormat::V1, SliceFormat::V2] {
+            let g = gen::road(16, 0.93, 0.02, 8);
+            let parts = MultilevelPartitioner::default().partition(&g, 3);
+            let root = tmp(&format!("round_trip_{fmt}"));
+            let (store, dg) = Store::create_with_format(&root, "rn", &g, &parts, fmt).unwrap();
+            assert_eq!(store.meta().num_partitions, 3);
+            assert_eq!(store.meta().format, fmt);
 
-        let reopened = Store::open(&root).unwrap();
-        assert_eq!(reopened.meta(), store.meta());
-        let (dg2, stats) = reopened.load_all().unwrap();
-        assert_eq!(dg2.num_subgraphs(), dg.num_subgraphs());
-        assert!(stats.bytes > 0 && stats.files as usize == dg.num_subgraphs());
-        // Vertex sets identical.
-        let verts = |d: &DistributedGraph| -> Vec<Vec<u32>> {
-            d.subgraphs().map(|s| s.vertices.clone()).collect()
-        };
-        assert_eq!(verts(&dg), verts(&dg2));
+            let reopened = Store::open(&root).unwrap();
+            assert_eq!(reopened.meta(), store.meta());
+            let (dg2, stats) = reopened.load_all().unwrap();
+            assert_eq!(dg2.num_subgraphs(), dg.num_subgraphs());
+            assert!(stats.bytes > 0 && stats.files as usize == dg.num_subgraphs());
+            // Vertex sets identical.
+            let verts = |d: &DistributedGraph| -> Vec<Vec<u32>> {
+                d.subgraphs().map(|s| s.vertices.clone()).collect()
+            };
+            assert_eq!(verts(&dg), verts(&dg2));
+        }
+    }
+
+    #[test]
+    fn default_format_is_v2() {
+        let g = gen::chain(8);
+        let parts = MultilevelPartitioner::default().partition(&g, 2);
+        let root = tmp("default_v2");
+        let (store, _) = Store::create(&root, "c", &g, &parts).unwrap();
+        assert_eq!(store.meta().format, SliceFormat::V2);
+        // The version byte on disk says so too.
+        let bytes = fs::read(root.join("host0").join("sg_0.topo.slice")).unwrap();
+        assert_eq!(bytes[4], 2);
+    }
+
+    #[test]
+    fn meta_without_format_key_reads_as_v1() {
+        let g = gen::chain(8);
+        let parts = MultilevelPartitioner::default().partition(&g, 2);
+        let root = tmp("legacy_meta");
+        Store::create_with_format(&root, "c", &g, &parts, SliceFormat::V1).unwrap();
+        // Strip the format line, as a pre-knob store would look.
+        let meta_path = root.join("meta.txt");
+        let text: String = fs::read_to_string(&meta_path)
+            .unwrap()
+            .lines()
+            .filter(|l| !l.starts_with("format="))
+            .map(|l| format!("{l}\n"))
+            .collect();
+        fs::write(&meta_path, text).unwrap();
+        let store = Store::open(&root).unwrap();
+        assert_eq!(store.meta().format, SliceFormat::V1);
+        assert!(store.load_all().is_ok());
     }
 
     #[test]
@@ -305,17 +603,93 @@ mod tests {
 
     #[test]
     fn attributes_round_trip() {
-        let g = gen::chain(12);
+        for fmt in [SliceFormat::V1, SliceFormat::V2] {
+            let g = gen::chain(12);
+            let parts = MultilevelPartitioner::default().partition(&g, 2);
+            let root = tmp(&format!("attrs_{fmt}"));
+            let (store, dg) = Store::create_with_format(&root, "c", &g, &parts, fmt).unwrap();
+            let sg = dg.subgraphs().next().unwrap();
+            let vals: Vec<f32> = (0..sg.num_vertices()).map(|i| i as f32 * 0.5).collect();
+            store.write_attribute(sg.id, "rank", &vals).unwrap();
+            let (back, st) = store.read_attribute(sg.id, "rank").unwrap();
+            assert_eq!(back, vals);
+            assert_eq!(st.files, 1);
+            assert!(store.read_attribute(sg.id, "missing").is_err());
+        }
+    }
+
+    #[test]
+    fn projection_loads_declared_attributes_only() {
+        let g = gen::road(14, 0.9, 0.02, 9);
         let parts = MultilevelPartitioner::default().partition(&g, 2);
-        let root = tmp("attrs");
-        let (store, dg) = Store::create(&root, "c", &g, &parts).unwrap();
-        let sg = dg.subgraphs().next().unwrap();
-        let vals: Vec<f32> = (0..sg.num_vertices()).map(|i| i as f32 * 0.5).collect();
-        store.write_attribute(sg.id, "rank", &vals).unwrap();
-        let (back, st) = store.read_attribute(sg.id, "rank").unwrap();
-        assert_eq!(back, vals);
-        assert_eq!(st.files, 1);
-        assert!(store.read_attribute(sg.id, "missing").is_err());
+        let root = tmp("projection");
+        let (store, dg) = Store::create(&root, "g", &g, &parts).unwrap();
+        for sg in dg.subgraphs() {
+            for a in 0..4 {
+                let vals: Vec<f32> =
+                    sg.vertices.iter().map(|&v| v as f32 + a as f32).collect();
+                store.write_attribute(sg.id, &format!("attr{a}"), &vals).unwrap();
+            }
+        }
+
+        let full = LoadOptions { attributes: AttrProjection::All, ..Default::default() };
+        let only = LoadOptions {
+            attributes: AttrProjection::Only(vec!["attr1".into()]),
+            ..Default::default()
+        };
+        let none = LoadOptions::default();
+        let (_, attrs_full, st_full) = store.load_all_with(&full).map(flatten3).unwrap();
+        let (_, attrs_only, st_only) = store.load_all_with(&only).map(flatten3).unwrap();
+        let (_, attrs_none, st_none) = store.load_all_with(&none).map(flatten3).unwrap();
+
+        // The projection is visible in bytes touched, strictly ordered.
+        assert!(st_none.bytes < st_only.bytes, "{} vs {}", st_none.bytes, st_only.bytes);
+        assert!(st_only.bytes < st_full.bytes, "{} vs {}", st_only.bytes, st_full.bytes);
+        // And in which columns came back.
+        for (i, sg) in dg.subgraphs().enumerate() {
+            assert_eq!(attrs_full[i].len(), 4);
+            assert_eq!(attrs_only[i].len(), 1);
+            assert!(attrs_none[i].is_empty());
+            let col = &attrs_only[i]["attr1"];
+            let want: Vec<f32> = sg.vertices.iter().map(|&v| v as f32 + 1.0).collect();
+            assert_eq!(col, &want);
+        }
+        // Declaring a missing attribute is an error, not a silent skip.
+        let bad = LoadOptions {
+            attributes: AttrProjection::Only(vec!["nope".into()]),
+            ..Default::default()
+        };
+        assert!(store.load_partition_with(0, &bad).is_err());
+    }
+
+    /// Flatten per-partition attribute maps into sub-graph order for
+    /// easy comparison with `dg.subgraphs()`.
+    fn flatten3(
+        x: (DistributedGraph, Vec<PartitionAttributes>, LoadStats),
+    ) -> (DistributedGraph, PartitionAttributes, LoadStats) {
+        let (dg, attrs, st) = x;
+        (dg, attrs.into_iter().flatten().collect(), st)
+    }
+
+    #[test]
+    fn parallel_and_sequential_loads_agree() {
+        let g = gen::road(18, 0.92, 0.02, 21);
+        let parts = MultilevelPartitioner::default().partition(&g, 4);
+        let root = tmp("par_eq_seq");
+        let (store, _) = Store::create(&root, "g", &g, &parts).unwrap();
+        let seq = LoadOptions { sequential: true, ..Default::default() };
+        let (dg_s, _, st_s) = store.load_all_with(&seq).unwrap();
+        let (dg_p, _, st_p) = store.load_all_with(&LoadOptions::default()).unwrap();
+        assert_eq!(st_s.files, st_p.files);
+        assert_eq!(st_s.bytes, st_p.bytes);
+        let shape = |d: &DistributedGraph| -> Vec<(Vec<u32>, usize, usize, usize)> {
+            d.subgraphs()
+                .map(|s| {
+                    (s.vertices.clone(), s.local.num_edges(), s.remote_out.len(), s.remote_in.len())
+                })
+                .collect()
+        };
+        assert_eq!(shape(&dg_s), shape(&dg_p));
     }
 
     #[test]
@@ -325,17 +699,19 @@ mod tests {
 
     #[test]
     fn corrupted_slice_detected_at_load() {
-        let g = gen::chain(20);
-        let parts = MultilevelPartitioner::default().partition(&g, 2);
-        let root = tmp("corrupt");
-        let (store, _) = Store::create(&root, "c", &g, &parts).unwrap();
-        // Flip a byte in one slice.
-        let slice_path = root.join("host0").join("sg_0.topo.slice");
-        let mut bytes = fs::read(&slice_path).unwrap();
-        let mid = bytes.len() - 3;
-        bytes[mid] ^= 0x55;
-        fs::write(&slice_path, bytes).unwrap();
-        assert!(store.load_partition(0).is_err());
+        for fmt in [SliceFormat::V1, SliceFormat::V2] {
+            let g = gen::chain(20);
+            let parts = MultilevelPartitioner::default().partition(&g, 2);
+            let root = tmp(&format!("corrupt_{fmt}"));
+            let (store, _) = Store::create_with_format(&root, "c", &g, &parts, fmt).unwrap();
+            // Flip a byte in one slice.
+            let slice_path = root.join("host0").join("sg_0.topo.slice");
+            let mut bytes = fs::read(&slice_path).unwrap();
+            let mid = bytes.len() - 3;
+            bytes[mid] ^= 0x55;
+            fs::write(&slice_path, bytes).unwrap();
+            assert!(store.load_partition(0).is_err(), "{fmt}");
+        }
     }
 
     #[test]
@@ -345,5 +721,17 @@ mod tests {
         let root = tmp("oob");
         let (store, _) = Store::create(&root, "c", &g, &parts).unwrap();
         assert!(store.load_partition(5).is_err());
+    }
+
+    #[test]
+    fn attr_filename_parsing() {
+        assert_eq!(parse_attr_filename("sg_3.attr.rank.slice"), Some((3, "rank".into())));
+        assert_eq!(
+            parse_attr_filename("sg_0.attr.with.dots.slice"),
+            Some((0, "with.dots".into()))
+        );
+        assert_eq!(parse_attr_filename("sg_0.topo.slice"), None);
+        assert_eq!(parse_attr_filename("meta.txt"), None);
+        assert_eq!(parse_attr_filename("sg_x.attr.rank.slice"), None);
     }
 }

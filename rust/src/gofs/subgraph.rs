@@ -15,6 +15,12 @@ use crate::graph::csr::{Graph, VertexId};
 use crate::partition::Partitioning;
 use crate::util::dsu::Dsu;
 
+/// Attribute columns loaded alongside one partition's sub-graphs
+/// (`Store::load_partition_with` with a non-empty projection): indexed
+/// by sub-graph index within the partition; each map is attribute name
+/// → per-local-vertex f32 column, aligned with `Subgraph::vertices`.
+pub type PartitionAttributes = Vec<BTreeMap<String, Vec<f32>>>;
+
 /// Globally unique sub-graph identifier.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct SubgraphId {

@@ -20,6 +20,8 @@
 //!   same-destination messages are folded in the transport batching path
 //!   before they hit the wire (see `transport::Batcher`).
 
+use std::collections::BTreeMap;
+
 use anyhow::Result;
 
 use crate::coordinator::{Aggregators, AggregatorSpec};
@@ -124,6 +126,11 @@ pub struct SubgraphContext<'a, M> {
     pub(crate) agg_global: Option<&'a [f64]>,
     /// This unit's contributions, folded locally as they arrive.
     pub(crate) agg_local: Vec<f64>,
+    /// Attribute columns projected in at load time
+    /// (`Job::builder().load_attributes(...)` on a store-backed run);
+    /// `None` when no columns were loaded for this sub-graph (no
+    /// projection declared, or an in-memory source).
+    pub(crate) attrs: Option<&'a BTreeMap<String, Vec<f32>>>,
 }
 
 impl<'a, M: Clone> SubgraphContext<'a, M> {
@@ -132,6 +139,7 @@ impl<'a, M: Clone> SubgraphContext<'a, M> {
         sg: &'a Subgraph,
         aggs: &'a Aggregators,
         agg_global: Option<&'a [f64]>,
+        attrs: Option<&'a BTreeMap<String, Vec<f32>>>,
     ) -> Self {
         Self {
             superstep,
@@ -141,12 +149,22 @@ impl<'a, M: Clone> SubgraphContext<'a, M> {
             aggs,
             agg_global,
             agg_local: aggs.identity_values(),
+            attrs,
         }
     }
 
     /// Current superstep (1-based, as in the paper's pseudocode).
     pub fn superstep(&self) -> usize {
         self.superstep
+    }
+
+    /// A projected per-vertex attribute column (local-vertex order,
+    /// aligned with `Subgraph::vertices`). `None` unless the job loaded
+    /// the attribute from a GoFS store via
+    /// `Job::builder().load_attributes(...)` — the projection is the
+    /// load-path contract: undeclared attributes were never read.
+    pub fn attribute(&self, name: &str) -> Option<&[f32]> {
+        self.attrs.and_then(|m| m.get(name)).map(|v| v.as_slice())
     }
 
     /// Slot index of a named aggregator registered by the program.
@@ -271,7 +289,8 @@ mod tests {
         let dg = sg_pair();
         let sg = &dg.partitions[0][0];
         let aggs = Aggregators::default();
-        let mut ctx = SubgraphContext::<f32>::new(1, sg, &aggs, None);
+        let mut ctx = SubgraphContext::<f32>::new(1, sg, &aggs, None, None);
+        assert_eq!(ctx.attribute("anything"), None);
         ctx.send_to_all_neighbors(2.5);
         ctx.send_to_subgraph_vertex(dg.partitions[1][0].id, 3, 1.5);
         ctx.send_to_all_subgraphs(9.0);
@@ -292,7 +311,7 @@ mod tests {
         ]);
 
         // Superstep 1: nothing folded yet; contributions fold locally.
-        let mut ctx = SubgraphContext::<f32>::new(1, sg, &aggs, None);
+        let mut ctx = SubgraphContext::<f32>::new(1, sg, &aggs, None, None);
         assert_eq!(ctx.aggregator("delta"), Some(0));
         assert_eq!(ctx.aggregator("nope"), None);
         assert_eq!(ctx.aggregated(0), None);
@@ -304,9 +323,21 @@ mod tests {
 
         // Superstep 2: folded globals are visible.
         let global = vec![5.0, 4.0];
-        let ctx2 = SubgraphContext::<f32>::new(2, sg, &aggs, Some(&global));
+        let ctx2 = SubgraphContext::<f32>::new(2, sg, &aggs, Some(&global), None);
         assert_eq!(ctx2.aggregated(0), Some(5.0));
         assert_eq!(ctx2.aggregated(1), Some(4.0));
+    }
+
+    #[test]
+    fn context_exposes_projected_attributes() {
+        let dg = sg_pair();
+        let sg = &dg.partitions[0][0];
+        let aggs = Aggregators::default();
+        let mut cols = BTreeMap::new();
+        cols.insert("rank".to_string(), vec![0.5f32, 1.5]);
+        let ctx = SubgraphContext::<f32>::new(1, sg, &aggs, None, Some(&cols));
+        assert_eq!(ctx.attribute("rank"), Some(&[0.5f32, 1.5][..]));
+        assert_eq!(ctx.attribute("missing"), None);
     }
 
     #[test]

@@ -93,6 +93,7 @@ pub struct JobBuilder {
     supersteps: usize,
     source_vertex: VertexId,
     kernel: RankKernel,
+    load_attributes: Vec<String>,
 }
 
 impl Default for JobBuilder {
@@ -108,6 +109,7 @@ impl Default for JobBuilder {
             supersteps: crate::algos::pagerank::DEFAULT_SUPERSTEPS,
             source_vertex: 0,
             kernel: RankKernel::Scalar,
+            load_attributes: Vec::new(),
         }
     }
 }
@@ -174,6 +176,20 @@ impl JobBuilder {
         self
     }
 
+    /// Attribute projection for store-backed Gopher runs: the load path
+    /// reads exactly these attribute slices alongside topology (paper
+    /// §4.1's "a graph with 10 attributes … only loads the slice it
+    /// needs"), exposing them via `SubgraphContext::attribute`.
+    /// Gopher-only; a no-op for in-memory sources.
+    pub fn load_attributes<I, S>(mut self, names: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        self.load_attributes = names.into_iter().map(Into::into).collect();
+        self
+    }
+
     /// Validate the description against the registry and the engine
     /// compatibility matrix, producing a runnable [`Job`].
     pub fn build(self) -> Result<Job, JobError> {
@@ -205,6 +221,14 @@ impl JobBuilder {
                            only Gopher can disable its combiner",
                 });
             }
+            if !self.load_attributes.is_empty() {
+                return Err(JobError::IncompatibleKnob {
+                    knob: "load_attributes",
+                    engine: self.engine,
+                    hint: "attribute projection is a GoFS/Gopher load-path feature; \
+                           the vertex baseline reassembles the whole graph",
+                });
+            }
         }
         Ok(Job {
             entry,
@@ -219,6 +243,7 @@ impl JobBuilder {
             cores: self.cores,
             combiners: self.combiners.unwrap_or(true),
             max_supersteps: self.max_supersteps,
+            load_attributes: self.load_attributes,
         })
     }
 }
@@ -269,6 +294,29 @@ mod tests {
             matches!(err, JobError::IncompatibleKnob { knob: "combiners", .. }),
             "{err}"
         );
+        let err = Job::builder()
+            .algo("cc")
+            .engine(EngineKind::Vertex)
+            .load_attributes(["rank"])
+            .build()
+            .unwrap_err();
+        assert!(
+            matches!(err, JobError::IncompatibleKnob { knob: "load_attributes", .. }),
+            "{err}"
+        );
+        // An *empty* projection is the default and fine anywhere.
+        assert!(Job::builder()
+            .algo("cc")
+            .engine(EngineKind::Vertex)
+            .load_attributes(Vec::<String>::new())
+            .build()
+            .is_ok());
+        // And the projection is fine on Gopher.
+        assert!(Job::builder()
+            .algo("cc")
+            .load_attributes(["rank", "weight"])
+            .build()
+            .is_ok());
         // Explicitly *enabling* combiners is fine anywhere.
         assert!(Job::builder()
             .algo("cc")

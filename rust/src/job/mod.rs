@@ -44,6 +44,7 @@
 //! | `combiners(false)`    | ✓ (disables the transport batcher fold) | ✗ (the baseline always folds) | [`JobError::IncompatibleKnob`] |
 //! | `fabric` / `cores` / `max_supersteps` | ✓ | ✓ | — |
 //! | `supersteps` / `source_vertex` / `kernel` | ✓ | ✓ (kernel is Gopher-only at run time, ignored by vertex programs) | — |
+//! | `load_attributes(...)` | ✓ (store-backed loads read exactly the declared attribute slices) | ✗ (the baseline reassembles the whole graph) | [`JobError::IncompatibleKnob`] |
 //!
 //! # Sources
 //!
@@ -73,7 +74,7 @@ use anyhow::Result;
 
 use crate::algos::registry::GopherTarget;
 use crate::coordinator::AggregatorTrace;
-use crate::gofs::{self, DistributedGraph, Store};
+use crate::gofs::{self, AttrProjection, DistributedGraph, Store};
 use crate::gopher::{self, FabricKind, GopherConfig};
 use crate::graph::{Graph, VertexId};
 use crate::metrics::JobMetrics;
@@ -149,6 +150,7 @@ pub struct Job {
     pub(crate) cores: usize,
     pub(crate) combiners: bool,
     pub(crate) max_supersteps: usize,
+    pub(crate) load_attributes: Vec<String>,
 }
 
 impl std::fmt::Debug for Job {
@@ -190,6 +192,11 @@ impl Job {
                     fabric: self.fabric,
                     combiners: self.combiners,
                     max_supersteps: self.max_supersteps,
+                    load_attributes: if self.load_attributes.is_empty() {
+                        AttrProjection::None
+                    } else {
+                        AttrProjection::Only(self.load_attributes.clone())
+                    },
                     ..Default::default()
                 };
                 let run = self.entry.gopher.expect("validated at build time");
@@ -275,6 +282,38 @@ mod tests {
         for (i, &(v, _)) in a.values.iter().enumerate() {
             assert_eq!(v as usize, i);
         }
+    }
+
+    #[test]
+    fn projected_store_run_matches_unprojected() {
+        let g = gen::road(12, 0.9, 0.02, 7);
+        let part = MultilevelPartitioner::default();
+        let parts = part.partition(&g, 2);
+        let root = std::env::temp_dir()
+            .join("goffish_job_tests")
+            .join(format!("projected_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let (store, dg) = Store::create(&root, "g", &g, &parts).unwrap();
+        for sg in dg.subgraphs() {
+            let vals: Vec<f32> = sg.vertices.iter().map(|&v| v as f32).collect();
+            store.write_attribute(sg.id, "rank", &vals).unwrap();
+        }
+        let plain = Job::builder()
+            .algo("cc")
+            .build()
+            .unwrap()
+            .run(JobSource::Store(&store))
+            .unwrap();
+        let projected = Job::builder()
+            .algo("cc")
+            .load_attributes(["rank"])
+            .build()
+            .unwrap()
+            .run(JobSource::Store(&store))
+            .unwrap();
+        // Same answers; the projected run read the extra attribute slices.
+        assert_eq!(plain.values, projected.values);
+        assert!(projected.metrics.load_bytes > plain.metrics.load_bytes);
     }
 
     #[test]

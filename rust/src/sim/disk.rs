@@ -27,6 +27,10 @@ impl Default for DiskModel {
     }
 }
 
+/// Cost of skipping forward inside an already-open file, relative to a
+/// cold per-file seek: no directory lookup and a short head movement.
+const INTRA_FILE_SEEK_FRACTION: f64 = 0.25;
+
 impl DiskModel {
     /// Time to read `files` files totalling `bytes`, materialising
     /// `records` objects.
@@ -34,6 +38,22 @@ impl DiskModel {
         self.seek_seconds * files as f64
             + bytes as f64 / self.seq_bytes_per_sec
             + self.per_record_seconds * records as f64
+    }
+
+    /// Projected read over v2 slices: the section directory lets a
+    /// reader seek past sections it does not need (unwanted attribute
+    /// columns, weights on an unweighted run), so `bytes` counts only
+    /// the sections actually streamed and each skipped byte-run costs an
+    /// intra-file seek instead of bandwidth.
+    pub fn projected_read_seconds(
+        &self,
+        files: u64,
+        bytes: u64,
+        records: u64,
+        skipped_sections: u64,
+    ) -> f64 {
+        self.read_seconds(files, bytes, records)
+            + self.seek_seconds * INTRA_FILE_SEEK_FRACTION * skipped_sections as f64
     }
 }
 
@@ -55,6 +75,19 @@ mod tests {
         let few = d.read_seconds(1, 1_000_000, 0);
         let many = d.read_seconds(1000, 1_000_000, 0);
         assert!(many > few * 100.0);
+    }
+
+    #[test]
+    fn projected_read_beats_full_read() {
+        // 100 slice files of 1 MB each; a projection streams 1/10 of the
+        // bytes and pays one intra-file skip per file instead.
+        let d = DiskModel::default();
+        let full = d.read_seconds(100, 100_000_000, 0);
+        let projected = d.projected_read_seconds(100, 10_000_000, 0, 100);
+        assert!(projected < full, "projected={projected} full={full}");
+        // Skips are not free: same bytes + skips costs more than plain.
+        let plain = d.read_seconds(100, 10_000_000, 0);
+        assert!(projected > plain);
     }
 
     #[test]

@@ -1,9 +1,15 @@
 //! GoFS store round-trips under randomized graphs/partitionings, and the
-//! paper's structural invariants hold after a disk round-trip.
+//! paper's structural invariants hold after a disk round-trip — plus the
+//! slice-v2 guarantees: v1↔v2 cross-version compat (v1 bytes pinned by a
+//! golden), per-section corruption detection, parallel/sequential load
+//! equivalence, and strictly-fewer-bytes attribute projection.
 
 use std::path::PathBuf;
 
-use goffish::gofs::{subgraph::discover, Store};
+use goffish::gofs::{
+    slice, subgraph::discover, AttrProjection, DistributedGraph, LoadOptions,
+    SliceFormat, Store, Subgraph, SubgraphId,
+};
 use goffish::graph::{gen, props, Graph};
 use goffish::partition::{
     HashPartitioner, MultilevelPartitioner, Partitioner, RangePartitioner,
@@ -44,8 +50,9 @@ fn randomized_store_roundtrip_preserves_structure() {
             _ => Box::new(MultilevelPartitioner::new(rng.next_u64())),
         };
         let p = parts.partition(&g, k);
+        let fmt = if rng.chance(0.5) { SliceFormat::V1 } else { SliceFormat::V2 };
         let root = tmp("rand", case);
-        let (store, dg) = Store::create(&root, "g", &g, &p).unwrap();
+        let (store, dg) = Store::create_with_format(&root, "g", &g, &p, fmt).unwrap();
         let (dg2, stats) = store.load_all().unwrap();
 
         // Invariant 1: vertex partition-of-partitions.
@@ -83,6 +90,161 @@ fn randomized_store_roundtrip_preserves_structure() {
         // Invariant 5: byte accounting matches files on disk.
         assert_eq!(stats.files as usize, dg.num_subgraphs());
         assert!(stats.bytes > 0);
+    }
+}
+
+fn subgraph_shapes(d: &DistributedGraph) -> Vec<(Vec<u32>, Vec<(u32, u32, f32)>, usize, usize)> {
+    d.subgraphs()
+        .map(|s| {
+            let edges: Vec<(u32, u32, f32)> = s
+                .local
+                .edges()
+                .map(|(u, v, ei)| (u, v, s.local.weight(ei)))
+                .collect();
+            (s.vertices.clone(), edges, s.remote_out.len(), s.remote_in.len())
+        })
+        .collect()
+}
+
+#[test]
+fn v1_and_v2_stores_load_identically() {
+    // The same graph + partitioning written in both formats must read
+    // back as the same distributed graph, edge for edge.
+    let g = gen::with_random_weights(&gen::road(16, 0.92, 0.02, 31), 0.5, 9.5, 13);
+    let p = MultilevelPartitioner::default().partition(&g, 3);
+    let (store_v1, _) = Store::create_with_format(&tmp("xver_v1", 0), "g", &g, &p, SliceFormat::V1).unwrap();
+    let (store_v2, _) = Store::create_with_format(&tmp("xver_v2", 0), "g", &g, &p, SliceFormat::V2).unwrap();
+    let (dg1, st1) = store_v1.load_all().unwrap();
+    let (dg2, st2) = store_v2.load_all().unwrap();
+    assert_eq!(subgraph_shapes(&dg1), subgraph_shapes(&dg2));
+    assert_eq!(st1.files, st2.files);
+    // And each decoder accepts the other writer's sub-graphs directly.
+    for sg in dg1.subgraphs() {
+        let via_v2 = slice::decode_topology(&slice::encode_topology(sg, SliceFormat::V2)).unwrap();
+        assert_eq!(via_v2.vertices, sg.vertices);
+    }
+}
+
+#[test]
+fn v1_encoding_is_frozen_byte_for_byte() {
+    // Golden bytes computed independently (Python replica of the v1
+    // codec): any drift in the v1 writer would orphan existing stores.
+    let local = Graph::from_edges(2, &[(0, 1)], None, false).unwrap();
+    let sg = Subgraph {
+        id: SubgraphId { partition: 0, index: 0 },
+        vertices: vec![0, 1],
+        local,
+        remote_out: vec![],
+        remote_in: vec![],
+        num_global_vertices: 2,
+    };
+    let golden: Vec<u8> = vec![
+        71, 70, 83, 76, // "GFSL"
+        1, 0, // version 1, kind topology
+        13, // payload length (varint)
+        134, 206, 142, 172, 148, 179, 219, 182, 67, // FNV-1a 64 (varint)
+        0, 0, 2, 0, 0, // id, |V| global, directed, weighted
+        2, 0, 1, // sorted vertex ids (delta)
+        1, 0, 1, // one edge (0, 1)
+        0, 0, // no remote out / in
+    ];
+    assert_eq!(slice::encode_topology(&sg, SliceFormat::V1), golden);
+    let back = slice::decode_topology(&golden).unwrap();
+    assert_eq!(back.vertices, vec![0, 1]);
+    assert_eq!(back.local.num_edges(), 1);
+}
+
+#[test]
+fn v2_per_section_corruption_names_the_section() {
+    // Weighted graph with cross-partition edges: every section of the
+    // v2 layout is non-empty. Flip one byte inside each section and the
+    // decode error must name exactly that section.
+    let g = gen::with_random_weights(&gen::road(14, 0.9, 0.02, 17), 1.0, 5.0, 3);
+    let p = RangePartitioner.partition(&g, 3);
+    let dg = discover(&g, &p).unwrap();
+    let sg = dg
+        .subgraphs()
+        .find(|s| {
+            s.local.num_edges() > 0 && (!s.remote_out.is_empty() || !s.remote_in.is_empty())
+        })
+        .expect("a boundary sub-graph with local edges");
+    let bytes = slice::encode_topology(sg, SliceFormat::V2);
+    let sections = slice::section_ranges(&bytes).unwrap();
+    let names: Vec<&str> = sections.iter().map(|(n, _)| *n).collect();
+    for want in ["meta", "vertices", "offsets", "targets", "weights", "remote_out", "remote_in"] {
+        assert!(names.contains(&want), "missing section {want} in {names:?}");
+    }
+    let mut checked = 0;
+    for (name, range) in sections {
+        if range.is_empty() {
+            continue;
+        }
+        let mut bad = bytes.clone();
+        bad[range.start + range.len() / 2] ^= 0xff;
+        let err = slice::decode_topology(&bad).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains(name), "corrupting `{name}` gave: {msg}");
+        checked += 1;
+    }
+    assert!(checked >= 6, "only {checked} sections exercised");
+
+    // Truncation inside the last section is named too.
+    let err = slice::decode_topology(&bytes[..bytes.len() - 1]).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("truncated") || format!("{err:#}").contains("trailing"),
+        "{err:#}"
+    );
+}
+
+#[test]
+fn parallel_and_sequential_load_all_agree() {
+    let g = gen::social(300, 3, 0.05, 41);
+    let p = MultilevelPartitioner::default().partition(&g, 4);
+    let (store, _) = Store::create(&tmp("parseq", 0), "g", &g, &p).unwrap();
+    let seq = LoadOptions { sequential: true, ..Default::default() };
+    let (dg_seq, _, st_seq) = store.load_all_with(&seq).unwrap();
+    let (dg_par, _, st_par) = store.load_all_with(&LoadOptions::default()).unwrap();
+    assert_eq!(subgraph_shapes(&dg_seq), subgraph_shapes(&dg_par));
+    assert_eq!(st_seq.files, st_par.files);
+    assert_eq!(st_seq.bytes, st_par.bytes);
+}
+
+#[test]
+fn projected_attribute_load_reads_strictly_fewer_bytes() {
+    // The paper's scenario: ten attributes on disk, the job needs one.
+    let g = gen::road(12, 0.9, 0.02, 19);
+    let p = MultilevelPartitioner::default().partition(&g, 2);
+    let (store, dg) = Store::create(&tmp("proj", 0), "g", &g, &p).unwrap();
+    for sg in dg.subgraphs() {
+        let vals: Vec<f32> = sg.vertices.iter().map(|&v| v as f32).collect();
+        for a in 0..10 {
+            store.write_attribute(sg.id, &format!("attr{a}"), &vals).unwrap();
+        }
+    }
+    let full = LoadOptions { attributes: AttrProjection::All, ..Default::default() };
+    let one = LoadOptions {
+        attributes: AttrProjection::Only(vec!["attr3".into()]),
+        ..Default::default()
+    };
+    let (_, attrs_full, st_full) = store.load_all_with(&full).unwrap();
+    let (_, attrs_one, st_one) = store.load_all_with(&one).unwrap();
+    assert!(
+        st_one.bytes < st_full.bytes,
+        "projected {} B must be < full {} B",
+        st_one.bytes,
+        st_full.bytes
+    );
+    // The projected load still yields correct, aligned columns.
+    let n_sgs = dg.num_subgraphs();
+    assert_eq!(attrs_full.iter().map(|p| p.len()).sum::<usize>(), n_sgs);
+    assert_eq!(attrs_one.iter().map(|p| p.len()).sum::<usize>(), n_sgs);
+    for (p_idx, part) in attrs_one.iter().enumerate() {
+        for (i, cols) in part.iter().enumerate() {
+            let sg = &dg.partitions[p_idx][i];
+            assert_eq!(cols.len(), 1);
+            let want: Vec<f32> = sg.vertices.iter().map(|&v| v as f32).collect();
+            assert_eq!(cols["attr3"], want);
+        }
     }
 }
 
