@@ -28,6 +28,7 @@ use std::collections::HashMap;
 
 use anyhow::Result;
 
+use crate::ckpt::StateCodec;
 use crate::gofs::{Subgraph, SubgraphId};
 use crate::gopher::{IncomingMessage, MsgCodec, SubgraphContext, SubgraphProgram};
 use crate::graph::VertexId;
@@ -208,6 +209,33 @@ pub struct BrState {
     last_sent: Vec<f32>,
     /// Superstep at which this block last changed materially.
     pub converged_at: Option<usize>,
+}
+
+/// Checkpoint codec for [`BrState`]: everything is plain run-state
+/// (the frozen-contribution caches included), so the default hooks
+/// apply. The `remote_in` map serializes in key order — see the
+/// [`StateCodec`] determinism contract.
+impl StateCodec for BrState {
+    fn encode_state(&self, e: &mut crate::util::codec::Encoder) {
+        self.ranks.encode_state(e);
+        self.localpr.encode_state(e);
+        self.outdeg.encode_state(e);
+        self.rows.encode_state(e);
+        self.remote_in.encode_state(e);
+        self.last_sent.encode_state(e);
+        self.converged_at.encode_state(e);
+    }
+    fn decode_state(d: &mut crate::util::codec::Decoder) -> Result<Self> {
+        Ok(BrState {
+            ranks: Vec::<f32>::decode_state(d)?,
+            localpr: Vec::<f32>::decode_state(d)?,
+            outdeg: Vec::<f32>::decode_state(d)?,
+            rows: Vec::<(u32, u32, f32)>::decode_state(d)?,
+            remote_in: HashMap::<(u32, u32), f32>::decode_state(d)?,
+            last_sent: Vec::<f32>::decode_state(d)?,
+            converged_at: Option::<usize>::decode_state(d)?,
+        })
+    }
 }
 
 impl SubgraphProgram for BlockRankSg {

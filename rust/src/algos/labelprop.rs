@@ -20,6 +20,7 @@
 
 use std::collections::HashMap;
 
+use crate::ckpt::StateCodec;
 use crate::coordinator::{AggOp, AggregatorSpec};
 use crate::gofs::Subgraph;
 use crate::gopher::{IncomingMessage, SubgraphContext, SubgraphProgram};
@@ -53,6 +54,25 @@ pub struct LpState {
     /// Local vertices with at least one remote edge, with the sub-graphs
     /// each must notify: (local vertex, neighbour sub-graph ids).
     boundary: Vec<(u32, Vec<crate::gofs::SubgraphId>)>,
+}
+
+/// Checkpoint codec for [`LpState`]: only the propagation state
+/// (labels + cached boundary labels) is serialized — `remote_adj` and
+/// `boundary` derive from topology, so [`LabelPropSg::restore_state`]
+/// rebuilds them via `init` (decoding alone leaves them empty).
+impl StateCodec for LpState {
+    fn encode_state(&self, e: &mut crate::util::codec::Encoder) {
+        self.labels.encode_state(e);
+        self.remote_labels.encode_state(e);
+    }
+    fn decode_state(d: &mut crate::util::codec::Decoder) -> anyhow::Result<Self> {
+        Ok(LpState {
+            labels: Vec::<u32>::decode_state(d)?,
+            remote_labels: HashMap::<u32, u32>::decode_state(d)?,
+            remote_adj: Vec::new(),
+            boundary: Vec::new(),
+        })
+    }
 }
 
 impl LabelPropSg {
@@ -199,6 +219,22 @@ impl SubgraphProgram for LabelPropSg {
             .zip(&state.labels)
             .map(|(&v, &l)| (v, l as f64))
             .collect()
+    }
+
+    /// Checkpoint restore override: decode the propagation state, then
+    /// rebuild the topology-derived remote adjacency / boundary lists
+    /// via `init` — they are identical for the same sub-graph, so the
+    /// restored state is bit-exact.
+    fn restore_state(
+        &self,
+        sg: &Subgraph,
+        d: &mut crate::util::codec::Decoder,
+    ) -> anyhow::Result<LpState> {
+        let saved = LpState::decode_state(d)?;
+        let mut fresh = self.init(sg);
+        fresh.labels = saved.labels;
+        fresh.remote_labels = saved.remote_labels;
+        Ok(fresh)
     }
 }
 

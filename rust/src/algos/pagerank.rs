@@ -29,6 +29,7 @@
 
 use std::sync::Arc;
 
+use crate::ckpt::StateCodec;
 use crate::coordinator::{AggOp, AggregatorSpec};
 use crate::gofs::Subgraph;
 use crate::gopher::{IncomingMessage, SubgraphContext, SubgraphProgram};
@@ -88,6 +89,26 @@ struct DenseBlock {
     /// matrix is constant across supersteps, so it is uploaded once at
     /// init instead of copied into every kernel call (§Perf).
     block: u64,
+}
+
+/// Checkpoint codec for [`PrState`] — satisfies the `State: StateCodec`
+/// bound, but [`PageRankSg`] overrides *both* checkpoint hooks to
+/// persist only the ranks: out-degrees recompute identically from
+/// topology, and the XLA `dense` block is a registered service handle
+/// that cannot survive a process restart (decoding alone yields
+/// `dense: None`, i.e. the scalar path).
+impl StateCodec for PrState {
+    fn encode_state(&self, e: &mut crate::util::codec::Encoder) {
+        self.ranks.encode_state(e);
+        self.outdeg.encode_state(e);
+    }
+    fn decode_state(d: &mut crate::util::codec::Decoder) -> anyhow::Result<Self> {
+        Ok(PrState {
+            ranks: Vec::<f32>::decode_state(d)?,
+            outdeg: Vec::<f32>::decode_state(d)?,
+            dense: None,
+        })
+    }
 }
 
 impl PageRankSg {
@@ -248,6 +269,29 @@ impl SubgraphProgram for PageRankSg {
     /// `ALPHA * c` per message, so a pre-summed message is equivalent).
     fn combine(&self, a: &Self::Msg, b: &Self::Msg) -> Option<Self::Msg> {
         Some((a.0, a.1 + b.1))
+    }
+
+    /// Checkpoint save override: persist only the ranks — out-degrees
+    /// and the XLA dense block are rebuilt from topology on restore, so
+    /// serializing them would only double the snapshot's states bytes.
+    fn save_state(&self, state: &PrState, e: &mut crate::util::codec::Encoder) {
+        state.ranks.encode_state(e);
+    }
+
+    /// Checkpoint restore override: decode the serialized ranks, then
+    /// re-run `init` so out-degrees are recomputed (identically — the
+    /// restored state is bit-exact) and the XLA dense adjacency block
+    /// (a service handle that cannot be persisted) is re-registered
+    /// for the resumed process.
+    fn restore_state(
+        &self,
+        sg: &Subgraph,
+        d: &mut crate::util::codec::Decoder,
+    ) -> anyhow::Result<PrState> {
+        let ranks = Vec::<f32>::decode_state(d)?;
+        let mut fresh = self.init(sg);
+        fresh.ranks = ranks;
+        Ok(fresh)
     }
 
     /// Per-vertex final rank.

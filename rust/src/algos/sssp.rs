@@ -13,6 +13,7 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
+use crate::ckpt::StateCodec;
 use crate::gofs::Subgraph;
 use crate::gopher::{IncomingMessage, SubgraphContext, SubgraphProgram};
 use crate::graph::csr::{Graph, VertexId};
@@ -26,6 +27,17 @@ pub struct SsspSg {
 /// Per-sub-graph SSSP state: tentative distance per local vertex.
 pub struct SsspState {
     pub dist: Vec<f32>,
+}
+
+/// Value-only state: the distance vector round-trips bit-exactly
+/// (`f32` LE, `+inf` included), so the default checkpoint hooks apply.
+impl StateCodec for SsspState {
+    fn encode_state(&self, e: &mut crate::util::codec::Encoder) {
+        self.dist.encode_state(e);
+    }
+    fn decode_state(d: &mut crate::util::codec::Decoder) -> anyhow::Result<Self> {
+        Ok(SsspState { dist: Vec::<f32>::decode_state(d)? })
+    }
 }
 
 /// f32 ordered for the heap (distances are never NaN).

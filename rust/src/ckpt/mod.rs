@@ -1,0 +1,971 @@
+//! Checkpoint/recovery subsystem — superstep snapshots co-designed with
+//! GoFS (the fault-tolerance layer Pregel-family systems pair with
+//! synchronous barriers).
+//!
+//! # What gets persisted
+//!
+//! Every `every` supersteps, at the barrier **after** the superstep's
+//! drain phase, each worker writes one *partition snapshot* file — its
+//! per-unit program states (via the programs'
+//! `save_state`/`restore_state` hooks, see [`StateCodec`]), halted
+//! flags, and the in-flight message queues destined for the next
+//! superstep — and the manager, once every worker has synced cleanly,
+//! writes the *coordinator snapshot* (the full per-superstep global
+//! aggregator history) and **commits** the epoch by atomically
+//! rewriting the manifest. Both engines (`gopher` and `pregel`) thread
+//! the same machinery through their barrier.
+//!
+//! # On-disk layout
+//!
+//! The files reuse the GoFS v2 sectioned framing ([`crate::gofs::section`]):
+//! a version byte, a section directory, and a per-section FNV checksum,
+//! so corruption errors name the rotten section and `store verify` can
+//! scrub a checkpoint directory exactly like a store.
+//!
+//! ```text
+//! <dir>/MANIFEST             label, partitions, committed epoch list
+//! <dir>/epoch_4/part_0.ckpt  partition snapshot (sections: meta, states, halted, inbox)
+//! <dir>/epoch_4/part_1.ckpt
+//! <dir>/epoch_4/coord.ckpt   coordinator snapshot (sections: meta, agg_history)
+//! ```
+//!
+//! # Commit and recovery semantics
+//!
+//! A torn write can never be resumed from: snapshot files land via
+//! write-to-temp + rename, and an epoch exists only once the manifest
+//! (itself renamed into place) lists it — a crash mid-epoch leaves the
+//! manifest pointing at the previous committed epoch. The reader walks
+//! the committed epochs newest-first and checksum-validates every file,
+//! falling back to the previous epoch when the latest has rotted. The
+//! last [`KEEP_EPOCHS`] epochs are retained; older ones are pruned at
+//! commit.
+//!
+//! # Determinism
+//!
+//! Recovery parity (a resumed job's `JobOutput` byte-identical to an
+//! uninterrupted run) requires deterministic replay, which the engines
+//! guarantee by sender-tagging message frames and stably sorting each
+//! unit's inbox by sender before compute, and by folding worker
+//! aggregator partials in worker order at the barrier. Checkpoint
+//! encodings are deterministic too ([`StateCodec`] serializes maps in
+//! key order), so identical runs write identical snapshot bytes.
+
+mod state;
+
+pub use state::StateCodec;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::gofs::section;
+use crate::gopher::api::MsgCodec;
+use crate::util::codec::{Decoder, Encoder};
+
+/// Checkpoint file magic ("GoFFish ChecKpoint").
+pub const MAGIC: &[u8; 4] = b"GFCK";
+/// Checkpoint format version byte.
+pub const VERSION: u8 = 1;
+/// Committed epochs retained per directory (older ones are pruned at
+/// commit; 2 = latest + the fallback for a rotted latest).
+pub const KEEP_EPOCHS: usize = 2;
+
+const KIND_PARTITION: u8 = 0;
+const KIND_COORD: u8 = 1;
+
+const SEC_META: u8 = 0;
+const SEC_STATES: u8 = 1;
+const SEC_HALTED: u8 = 2;
+const SEC_INBOX: u8 = 3;
+const SEC_AGG_HISTORY: u8 = 4;
+
+fn section_name(id: u8) -> &'static str {
+    match id {
+        SEC_META => "meta",
+        SEC_STATES => "states",
+        SEC_HALTED => "halted",
+        SEC_INBOX => "inbox",
+        SEC_AGG_HISTORY => "agg_history",
+        _ => "unknown",
+    }
+}
+
+// ------------------------------------------------------------- knob types
+
+/// Engine-side checkpointing knob (built by the job layer from
+/// `JobBuilder::checkpoint_every` / `checkpoint_dir`).
+#[derive(Clone, Debug)]
+pub struct CheckpointConfig {
+    /// Snapshot every N supersteps (>= 1).
+    pub every: usize,
+    /// Checkpoint directory (shared by all workers + the manager).
+    pub dir: PathBuf,
+    /// Job identity recorded in the manifest: `algo/engine` plus every
+    /// result-affecting knob (see `JobBuilder::label`); resume refuses
+    /// a directory written by a different job *or* different
+    /// parameters.
+    pub label: String,
+}
+
+/// A validated resume target: resolved by the job layer (falling back
+/// past corrupt epochs) and handed to the engine.
+#[derive(Clone, Debug)]
+pub struct ResumePoint {
+    pub dir: PathBuf,
+    /// The committed epoch (= superstep) to restart after.
+    pub epoch: u64,
+}
+
+/// Failure-injection testing hook: the named worker aborts at the start
+/// of the named superstep, exactly like a killed host.
+#[derive(Clone, Copy, Debug)]
+pub struct FailPoint {
+    pub superstep: usize,
+    pub worker: u32,
+}
+
+/// One queued in-flight message as both engines hold it worker-side:
+/// the sending worker (the stable-sort key that makes replay
+/// deterministic), the optional target vertex (Gopher's
+/// `send_to_subgraph_vertex`; unused by the vertex engine), and the
+/// payload.
+#[derive(Clone, Debug)]
+pub struct InboxEntry<M> {
+    pub sender: u32,
+    pub vertex: Option<u32>,
+    pub payload: M,
+}
+
+// ----------------------------------------------------- partition snapshot
+
+/// A decoded partition snapshot.
+pub struct PartitionSnapshot<S, M> {
+    pub epoch: u64,
+    pub partition: u32,
+    /// Per-unit restored program state (sub-graph or vertex order).
+    pub states: Vec<S>,
+    pub halted: Vec<bool>,
+    /// Per-unit queued messages for superstep `epoch + 1`.
+    pub inbox: Vec<Vec<InboxEntry<M>>>,
+}
+
+const PART_META_LEN: usize = 16;
+
+/// Encode one worker's barrier snapshot. `save_state` writes unit `i`'s
+/// program state (the `SubgraphProgram::save_state` /
+/// `VertexProgram::save_state` hook), `halted(i)` reports its vote.
+pub fn encode_partition<M: MsgCodec>(
+    epoch: u64,
+    partition: u32,
+    n_units: usize,
+    mut save_state: impl FnMut(usize, &mut Encoder),
+    halted: impl Fn(usize) -> bool,
+    inbox: &[Vec<InboxEntry<M>>],
+) -> Vec<u8> {
+    debug_assert_eq!(inbox.len(), n_units);
+    let mut meta = Vec::with_capacity(PART_META_LEN);
+    meta.extend_from_slice(&epoch.to_le_bytes());
+    meta.extend_from_slice(&partition.to_le_bytes());
+    meta.extend_from_slice(&(n_units as u32).to_le_bytes());
+
+    let mut se = Encoder::new();
+    for i in 0..n_units {
+        save_state(i, &mut se);
+    }
+
+    let halted_col: Vec<u8> = (0..n_units).map(|i| halted(i) as u8).collect();
+
+    let mut ie = Encoder::new();
+    for unit in inbox {
+        ie.put_varint(unit.len() as u64);
+        for m in unit {
+            ie.put_varint(m.sender as u64);
+            match m.vertex {
+                Some(v) => {
+                    ie.put_u8(1);
+                    ie.put_varint(v as u64);
+                }
+                None => ie.put_u8(0),
+            }
+            m.payload.encode(&mut ie);
+        }
+    }
+
+    section::frame(
+        MAGIC,
+        VERSION,
+        KIND_PARTITION,
+        &[
+            (SEC_META, meta),
+            (SEC_STATES, se.into_bytes()),
+            (SEC_HALTED, halted_col),
+            (SEC_INBOX, ie.into_bytes()),
+        ],
+    )
+}
+
+/// Decode one worker's snapshot, validating it against the run being
+/// resumed. `restore_state` rebuilds unit `i`'s program state (the
+/// programs' `restore_state` hook). `R` is a named generic (not `impl
+/// Trait`) so engine call sites can turbofish `S`/`M`.
+pub fn decode_partition<S, M, R>(
+    bytes: &[u8],
+    expect_epoch: u64,
+    expect_partition: u32,
+    expect_units: usize,
+    mut restore_state: R,
+) -> Result<PartitionSnapshot<S, M>>
+where
+    M: MsgCodec,
+    R: FnMut(usize, &mut Decoder) -> Result<S>,
+{
+    let table = section::unframe(bytes, MAGIC, VERSION, KIND_PARTITION, section_name)
+        .context("partition snapshot")?;
+
+    let meta = table.get(SEC_META)?;
+    ensure!(
+        meta.len() == PART_META_LEN,
+        "section `meta` has {} bytes, expected {PART_META_LEN}",
+        meta.len()
+    );
+    let epoch = u64::from_le_bytes(meta[0..8].try_into().unwrap());
+    let partition = u32::from_le_bytes(meta[8..12].try_into().unwrap());
+    let n_units = u32::from_le_bytes(meta[12..16].try_into().unwrap()) as usize;
+    ensure!(
+        epoch == expect_epoch,
+        "snapshot is for epoch {epoch}, resuming epoch {expect_epoch}"
+    );
+    ensure!(
+        partition == expect_partition,
+        "snapshot holds partition {partition}, expected {expect_partition}"
+    );
+    ensure!(
+        n_units == expect_units,
+        "snapshot holds {n_units} units, this worker owns {expect_units} \
+         (resume must use the same store/partitioning as the original run)"
+    );
+
+    let mut sd = Decoder::new(table.get(SEC_STATES)?);
+    let mut states = Vec::with_capacity(n_units);
+    for i in 0..n_units {
+        states.push(
+            restore_state(i, &mut sd)
+                .with_context(|| format!("restore state of unit {i}"))?,
+        );
+    }
+    ensure!(
+        sd.is_at_end(),
+        "section `states` has {} trailing bytes",
+        sd.remaining()
+    );
+
+    let halted_col = table.get(SEC_HALTED)?;
+    ensure!(
+        halted_col.len() == n_units,
+        "section `halted` has {} flags, expected {n_units}",
+        halted_col.len()
+    );
+    let halted: Vec<bool> = halted_col.iter().map(|&b| b != 0).collect();
+
+    let mut id = Decoder::new(table.get(SEC_INBOX)?);
+    let mut inbox = Vec::with_capacity(n_units);
+    for _ in 0..n_units {
+        let n = id.get_varint()? as usize;
+        let mut unit = Vec::with_capacity(n.min(id.remaining() + 1));
+        for _ in 0..n {
+            let sender = id.get_varint()? as u32;
+            let vertex = if id.get_u8()? != 0 {
+                Some(id.get_varint()? as u32)
+            } else {
+                None
+            };
+            unit.push(InboxEntry { sender, vertex, payload: M::decode(&mut id)? });
+        }
+        inbox.push(unit);
+    }
+    ensure!(
+        id.is_at_end(),
+        "section `inbox` has {} trailing bytes",
+        id.remaining()
+    );
+
+    Ok(PartitionSnapshot { epoch, partition, states, halted, inbox })
+}
+
+// --------------------------------------------------- coordinator snapshot
+
+/// The manager-side snapshot: the coordinator's full per-superstep
+/// global aggregator history (entry `s` = globals folded at barrier
+/// `s+1`). Its last entry is what resumed workers observe as the
+/// previous barrier's globals.
+pub struct CoordSnapshot {
+    pub epoch: u64,
+    pub history: Vec<Vec<f64>>,
+}
+
+const COORD_META_LEN: usize = 16;
+
+pub fn encode_coordinator(epoch: u64, naggs: usize, history: &[Vec<f64>]) -> Vec<u8> {
+    let mut meta = Vec::with_capacity(COORD_META_LEN);
+    meta.extend_from_slice(&epoch.to_le_bytes());
+    meta.extend_from_slice(&(naggs as u32).to_le_bytes());
+    meta.extend_from_slice(&(history.len() as u32).to_le_bytes());
+    let mut col = Vec::with_capacity(history.len() * naggs * 8);
+    for step in history {
+        debug_assert_eq!(step.len(), naggs);
+        for &v in step {
+            col.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    section::frame(
+        MAGIC,
+        VERSION,
+        KIND_COORD,
+        &[(SEC_META, meta), (SEC_AGG_HISTORY, col)],
+    )
+}
+
+pub fn decode_coordinator(bytes: &[u8], expect_naggs: usize) -> Result<CoordSnapshot> {
+    let table = section::unframe(bytes, MAGIC, VERSION, KIND_COORD, section_name)
+        .context("coordinator snapshot")?;
+    let meta = table.get(SEC_META)?;
+    ensure!(
+        meta.len() == COORD_META_LEN,
+        "section `meta` has {} bytes, expected {COORD_META_LEN}",
+        meta.len()
+    );
+    let epoch = u64::from_le_bytes(meta[0..8].try_into().unwrap());
+    let naggs = u32::from_le_bytes(meta[8..12].try_into().unwrap()) as usize;
+    let nsteps = u32::from_le_bytes(meta[12..16].try_into().unwrap()) as usize;
+    ensure!(
+        naggs == expect_naggs,
+        "snapshot folded {naggs} aggregators, program registers {expect_naggs}"
+    );
+    let col = table.get(SEC_AGG_HISTORY)?;
+    ensure!(
+        col.len() == nsteps * naggs * 8,
+        "section `agg_history` has {} bytes, expected {}",
+        col.len(),
+        nsteps * naggs * 8
+    );
+    let mut history = Vec::with_capacity(nsteps);
+    for s in 0..nsteps {
+        let row = &col[s * naggs * 8..(s + 1) * naggs * 8];
+        history.push(
+            row.chunks_exact(8)
+                .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                .collect(),
+        );
+    }
+    Ok(CoordSnapshot { epoch, history })
+}
+
+// --------------------------------------------------------------- manifest
+
+/// The commit record of a checkpoint directory: only epochs listed here
+/// are recoverable (the atomic-rename commit point).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    /// Job identity (`algo/engine` + result-affecting knobs).
+    pub label: String,
+    pub partitions: u32,
+    /// Committed epochs, ascending.
+    pub epochs: Vec<u64>,
+}
+
+fn manifest_path(dir: &Path) -> PathBuf {
+    dir.join("MANIFEST")
+}
+
+fn epoch_dir(dir: &Path, epoch: u64) -> PathBuf {
+    dir.join(format!("epoch_{epoch}"))
+}
+
+/// Durable write-then-rename: the payload is fsynced before the rename
+/// and the containing directory after it (best-effort — not every
+/// platform lets a directory be opened), so a machine death right
+/// after "commit" cannot leave a zero-length or partial file behind
+/// the rename.
+fn persist(tmp: &Path, dst: &Path, bytes: &[u8]) -> Result<()> {
+    {
+        use std::io::Write;
+        let mut f =
+            fs::File::create(tmp).with_context(|| format!("create {}", tmp.display()))?;
+        f.write_all(bytes)
+            .with_context(|| format!("write {}", tmp.display()))?;
+        f.sync_all()
+            .with_context(|| format!("sync {}", tmp.display()))?;
+    }
+    fs::rename(tmp, dst).with_context(|| format!("commit {}", dst.display()))?;
+    if let Some(parent) = dst.parent() {
+        if let Ok(d) = fs::File::open(parent) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+fn write_manifest(dir: &Path, m: &Manifest) -> Result<()> {
+    let epochs: Vec<String> = m.epochs.iter().map(|e| e.to_string()).collect();
+    let text = format!(
+        "label={}\npartitions={}\nepochs={}\n",
+        m.label,
+        m.partitions,
+        epochs.join(",")
+    );
+    persist(&dir.join("MANIFEST.tmp"), &manifest_path(dir), text.as_bytes())
+}
+
+fn read_manifest(dir: &Path) -> Result<Manifest> {
+    let path = manifest_path(dir);
+    let text = fs::read_to_string(&path)
+        .with_context(|| format!("read {}", path.display()))?;
+    let mut label = None;
+    let mut partitions = None;
+    let mut epochs = None;
+    for line in text.lines() {
+        let Some((k, v)) = line.split_once('=') else { continue };
+        match k {
+            "label" => label = Some(v.to_string()),
+            "partitions" => partitions = Some(v.parse()?),
+            "epochs" => {
+                epochs = Some(
+                    v.split(',')
+                        .filter(|s| !s.is_empty())
+                        .map(|s| s.parse::<u64>())
+                        .collect::<Result<Vec<_>, _>>()?,
+                )
+            }
+            _ => {}
+        }
+    }
+    let (Some(label), Some(partitions), Some(epochs)) = (label, partitions, epochs)
+    else {
+        bail!("{} missing required keys", path.display());
+    };
+    Ok(Manifest { label, partitions, epochs })
+}
+
+// ----------------------------------------------------------------- writer
+
+/// Writes epoch snapshots and commits them through the manifest.
+/// Workers call [`CheckpointWriter::write_partition`] concurrently; only
+/// the manager calls [`CheckpointWriter::commit`].
+pub struct CheckpointWriter {
+    dir: PathBuf,
+    manifest: Mutex<Manifest>,
+}
+
+impl CheckpointWriter {
+    /// Open (or initialize) a checkpoint directory. An existing
+    /// directory must belong to the same job (`label`) and cluster
+    /// shape (`partitions`). With `continue_epochs` (a resumed job
+    /// committing back into the directory it resumed from) the
+    /// committed-epoch history is kept so new epochs extend it; a fresh
+    /// run (`continue_epochs: false`) *resets* any stale epoch list —
+    /// otherwise the old run's higher-numbered epochs would outrank
+    /// every new one at prune time, and a later resume would restore
+    /// the previous run's state.
+    pub fn create(
+        dir: &Path,
+        label: &str,
+        partitions: u32,
+        continue_epochs: bool,
+    ) -> Result<CheckpointWriter> {
+        fs::create_dir_all(dir)
+            .with_context(|| format!("create checkpoint dir {}", dir.display()))?;
+        let manifest = if manifest_path(dir).exists() {
+            let mut m = read_manifest(dir)?;
+            ensure!(
+                m.label == label,
+                "checkpoint dir {} belongs to job {:?}, not {:?}",
+                dir.display(),
+                m.label,
+                label
+            );
+            ensure!(
+                m.partitions == partitions,
+                "checkpoint dir {} was written with {} partitions, job has {}",
+                dir.display(),
+                m.partitions,
+                partitions
+            );
+            if !continue_epochs && !m.epochs.is_empty() {
+                let stale = std::mem::take(&mut m.epochs);
+                write_manifest(dir, &m)?;
+                for e in stale {
+                    let _ = fs::remove_dir_all(epoch_dir(dir, e));
+                }
+            }
+            m
+        } else {
+            let m = Manifest {
+                label: label.to_string(),
+                partitions,
+                epochs: Vec::new(),
+            };
+            write_manifest(dir, &m)?;
+            m
+        };
+        Ok(CheckpointWriter { dir: dir.to_path_buf(), manifest: Mutex::new(manifest) })
+    }
+
+    /// Durably (temp + fsync + rename) write worker `p`'s snapshot for
+    /// `epoch`. Returns the byte count (the checkpoint-size metric).
+    pub fn write_partition(&self, epoch: u64, p: u32, bytes: &[u8]) -> Result<u64> {
+        let dir = epoch_dir(&self.dir, epoch);
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("create {}", dir.display()))?;
+        persist(
+            &dir.join(format!("part_{p}.ckpt.tmp")),
+            &dir.join(format!("part_{p}.ckpt")),
+            bytes,
+        )?;
+        Ok(bytes.len() as u64)
+    }
+
+    /// Commit `epoch`: write the coordinator snapshot, list the epoch in
+    /// the manifest (the atomic commit point), and prune epochs beyond
+    /// [`KEEP_EPOCHS`]. Call only after every worker's
+    /// [`CheckpointWriter::write_partition`] for this epoch succeeded.
+    pub fn commit(&self, epoch: u64, coord_bytes: &[u8]) -> Result<()> {
+        let dir = epoch_dir(&self.dir, epoch);
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("create {}", dir.display()))?;
+        persist(&dir.join("coord.ckpt.tmp"), &dir.join("coord.ckpt"), coord_bytes)?;
+
+        let mut m = self.manifest.lock().unwrap();
+        if !m.epochs.contains(&epoch) {
+            m.epochs.push(epoch);
+            m.epochs.sort_unstable();
+        }
+        let pruned: Vec<u64> = if m.epochs.len() > KEEP_EPOCHS {
+            m.epochs.drain(..m.epochs.len() - KEEP_EPOCHS).collect()
+        } else {
+            Vec::new()
+        };
+        write_manifest(&self.dir, &m)?;
+        drop(m);
+        // Old epochs are already uncommitted (manifest rewritten), so
+        // pruning them is best-effort cleanup.
+        for e in pruned {
+            let _ = fs::remove_dir_all(epoch_dir(&self.dir, e));
+        }
+        Ok(())
+    }
+}
+
+// ----------------------------------------------------------------- reader
+
+/// Reads committed epochs, newest-first, with checksum validation and
+/// fallback past corrupt epochs.
+pub struct CheckpointReader {
+    dir: PathBuf,
+    manifest: Manifest,
+}
+
+impl CheckpointReader {
+    pub fn open(dir: &Path) -> Result<CheckpointReader> {
+        let manifest = read_manifest(dir)
+            .with_context(|| format!("open checkpoint dir {}", dir.display()))?;
+        Ok(CheckpointReader { dir: dir.to_path_buf(), manifest })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Path of worker `p`'s snapshot in `epoch` (workers read their own
+    /// file, data-local style).
+    pub fn partition_path(&self, epoch: u64, p: u32) -> PathBuf {
+        epoch_dir(&self.dir, epoch).join(format!("part_{p}.ckpt"))
+    }
+
+    /// Checksum-scrub every file of a committed epoch — including each
+    /// file's kind byte, the one header byte no section checksum
+    /// covers, so a rotted kind falls back like any other corruption
+    /// instead of surviving validation and failing mid-resume. The
+    /// error names the corrupt file and section.
+    pub fn validate_epoch(&self, epoch: u64) -> Result<()> {
+        ensure!(
+            self.manifest.epochs.contains(&epoch),
+            "epoch {epoch} is not committed in {}",
+            self.dir.display()
+        );
+        let mut paths: Vec<(PathBuf, u8)> = (0..self.manifest.partitions)
+            .map(|p| (self.partition_path(epoch, p), KIND_PARTITION))
+            .collect();
+        paths.push((epoch_dir(&self.dir, epoch).join("coord.ckpt"), KIND_COORD));
+        for (path, kind) in paths {
+            let bytes =
+                fs::read(&path).with_context(|| format!("read {}", path.display()))?;
+            let report = scrub_file_of_kind(&bytes, kind)
+                .with_context(|| format!("scrub {}", path.display()))?;
+            for (name, clean) in report {
+                ensure!(
+                    clean,
+                    "checkpoint file {}: section `{name}` corrupt (checksum mismatch)",
+                    path.display()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// The newest committed epoch that validates end to end, falling
+    /// back past corrupt epochs (the torn-write / bit-rot recovery
+    /// rule). Errors only when no committed epoch survives.
+    pub fn latest_valid(&self) -> Result<u64> {
+        if self.manifest.epochs.is_empty() {
+            bail!("no committed epoch in {}", self.dir.display());
+        }
+        let mut last_err = None;
+        for &e in self.manifest.epochs.iter().rev() {
+            match self.validate_epoch(e) {
+                Ok(()) => return Ok(e),
+                Err(err) => last_err = Some(err),
+            }
+        }
+        Err(anyhow!(
+            "no valid committed epoch in {}: {:#}",
+            self.dir.display(),
+            last_err.expect("at least one epoch was checked")
+        ))
+    }
+
+    /// Load the coordinator snapshot of a committed epoch.
+    pub fn load_coordinator(&self, epoch: u64, expect_naggs: usize) -> Result<CoordSnapshot> {
+        let path = epoch_dir(&self.dir, epoch).join("coord.ckpt");
+        let bytes = fs::read(&path).with_context(|| format!("read {}", path.display()))?;
+        let snap = decode_coordinator(&bytes, expect_naggs)
+            .with_context(|| format!("decode {}", path.display()))?;
+        ensure!(
+            snap.epoch == epoch,
+            "coordinator snapshot at {} is for epoch {}, expected {epoch}",
+            path.display(),
+            snap.epoch
+        );
+        Ok(snap)
+    }
+}
+
+// --------------------------------------------------------- engine helpers
+//
+// Both engines thread identical checkpoint plumbing through their
+// drivers; these helpers keep the shape (and the validation it
+// performs) in one place so the engines cannot drift apart — the
+// recovery-parity contract depends on them staying in lockstep.
+
+/// Build the epoch writer for a run, continuing the directory's history
+/// only when the run resumes from that same directory (canonicalized
+/// comparison) — any other run starts the history fresh.
+pub fn create_writer(
+    ck: &CheckpointConfig,
+    resume: Option<&ResumePoint>,
+    partitions: u32,
+) -> Result<CheckpointWriter> {
+    ensure!(ck.every >= 1, "checkpoint every must be >= 1");
+    let continuing = resume.is_some_and(|r| {
+        // Created before the comparison so `same_dir` can canonicalize
+        // both sides.
+        let _ = fs::create_dir_all(&ck.dir);
+        same_dir(&r.dir, &ck.dir)
+    });
+    CheckpointWriter::create(&ck.dir, &ck.label, partitions, continuing)
+}
+
+/// Per-worker resume instructions, derived from [`open_resume`]'s
+/// result by [`worker_resume`]: the worker's snapshot file in the
+/// epoch being resumed, plus the globals folded at that epoch's
+/// barrier (what the worker observes as the previous barrier's
+/// aggregates).
+pub struct WorkerResume {
+    pub path: PathBuf,
+    pub epoch: u64,
+    pub globals: Vec<f64>,
+}
+
+/// Build worker `p`'s resume instructions (shared by both engines).
+pub fn worker_resume(
+    reader: &CheckpointReader,
+    coord: &CoordSnapshot,
+    p: u32,
+) -> WorkerResume {
+    WorkerResume {
+        path: reader.partition_path(coord.epoch, p),
+        epoch: coord.epoch,
+        globals: coord.history.last().cloned().unwrap_or_default(),
+    }
+}
+
+/// Open a resume target and load its coordinator snapshot, validating
+/// the cluster shape and aggregator count against the resuming run.
+pub fn open_resume(
+    rp: &ResumePoint,
+    partitions: usize,
+    naggs: usize,
+) -> Result<(CheckpointReader, CoordSnapshot)> {
+    let reader = CheckpointReader::open(&rp.dir)?;
+    ensure!(
+        reader.manifest().partitions as usize == partitions,
+        "checkpoint at {} was written with {} partitions, this run has {partitions}",
+        rp.dir.display(),
+        reader.manifest().partitions
+    );
+    let coord = reader.load_coordinator(rp.epoch, naggs)?;
+    ensure!(
+        coord.history.len() == rp.epoch as usize,
+        "coordinator snapshot covers {} supersteps, expected {}",
+        coord.history.len(),
+        rp.epoch
+    );
+    Ok((reader, coord))
+}
+
+// ------------------------------------------------------------------ scrub
+
+/// Per-section checksum report for one checkpoint file, validating the
+/// kind byte (the one header byte no section checksum covers) against
+/// what the file's place in the epoch layout says it must be.
+fn scrub_file_of_kind(bytes: &[u8], want_kind: u8) -> Result<Vec<(&'static str, bool)>> {
+    Ok(section::unframe(bytes, MAGIC, VERSION, want_kind, section_name)?.scrub())
+}
+
+/// Whether two paths name the same directory, resolving symlinks and
+/// relative spellings when both exist (falling back to lexical
+/// equality). Guards the continue-vs-reset decision in
+/// [`CheckpointWriter::create`] callers: a resume back into
+/// `./ckpt` spelled as `ckpt` must not be mistaken for a fresh run.
+pub fn same_dir(a: &Path, b: &Path) -> bool {
+    match (fs::canonicalize(a), fs::canonicalize(b)) {
+        (Ok(ca), Ok(cb)) => ca == cb,
+        _ => a == b,
+    }
+}
+
+pub use crate::gofs::section::ScrubSummary;
+
+/// Full checksum scrub of every committed epoch in a checkpoint
+/// directory — the checkpoint half of `store verify` (the store half is
+/// [`crate::gofs::Store::scrub`]; both accumulate the shared
+/// [`ScrubSummary`]).
+pub fn scrub_dir(dir: &Path) -> Result<ScrubSummary> {
+    let reader = CheckpointReader::open(dir)?;
+    let mut sum = ScrubSummary::default();
+    for &e in &reader.manifest.epochs {
+        let mut paths: Vec<(String, PathBuf, u8)> = (0..reader.manifest.partitions)
+            .map(|p| {
+                (
+                    format!("epoch_{e}/part_{p}.ckpt"),
+                    reader.partition_path(e, p),
+                    KIND_PARTITION,
+                )
+            })
+            .collect();
+        paths.push((
+            format!("epoch_{e}/coord.ckpt"),
+            epoch_dir(dir, e).join("coord.ckpt"),
+            KIND_COORD,
+        ));
+        for (rel, path, kind) in paths {
+            match fs::read(&path) {
+                Ok(bytes) => sum.record(&rel, scrub_file_of_kind(&bytes, kind)),
+                Err(err) => sum.record_unreadable(&rel, err),
+            }
+        }
+    }
+    Ok(sum)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join("goffish_ckpt_tests")
+            .join(format!("{name}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn sample_inbox() -> Vec<Vec<InboxEntry<f32>>> {
+        vec![
+            vec![
+                InboxEntry { sender: 1, vertex: Some(7), payload: 2.5 },
+                InboxEntry { sender: 0, vertex: None, payload: -1.0 },
+            ],
+            Vec::new(),
+            vec![InboxEntry { sender: 2, vertex: None, payload: f32::INFINITY }],
+        ]
+    }
+
+    fn sample_partition(epoch: u64, p: u32) -> Vec<u8> {
+        let states = [3.0f32, 1.5, -8.25];
+        let halted = [true, false, true];
+        encode_partition(
+            epoch,
+            p,
+            3,
+            |i, e| states[i].encode_state(e),
+            |i| halted[i],
+            &sample_inbox(),
+        )
+    }
+
+    #[test]
+    fn partition_snapshot_round_trip() {
+        let bytes = sample_partition(4, 1);
+        let snap = decode_partition::<f32, f32, _>(&bytes, 4, 1, 3, |_, d| {
+            f32::decode_state(d)
+        })
+        .unwrap();
+        assert_eq!(snap.epoch, 4);
+        assert_eq!(snap.partition, 1);
+        assert_eq!(snap.states, vec![3.0, 1.5, -8.25]);
+        assert_eq!(snap.halted, vec![true, false, true]);
+        assert_eq!(snap.inbox.len(), 3);
+        assert_eq!(snap.inbox[0].len(), 2);
+        assert_eq!(snap.inbox[0][0].sender, 1);
+        assert_eq!(snap.inbox[0][0].vertex, Some(7));
+        assert_eq!(snap.inbox[0][0].payload, 2.5);
+        assert_eq!(snap.inbox[0][1].vertex, None);
+        assert!(snap.inbox[1].is_empty());
+        assert_eq!(snap.inbox[2][0].payload, f32::INFINITY);
+        // Mismatched expectations are rejected.
+        assert!(decode_partition::<f32, f32, _>(&bytes, 5, 1, 3, |_, d| f32::decode_state(d)).is_err());
+        assert!(decode_partition::<f32, f32, _>(&bytes, 4, 2, 3, |_, d| f32::decode_state(d)).is_err());
+        assert!(decode_partition::<f32, f32, _>(&bytes, 4, 1, 2, |_, d| f32::decode_state(d)).is_err());
+    }
+
+    #[test]
+    fn coordinator_snapshot_round_trip() {
+        let history = vec![vec![1.0, f64::INFINITY], vec![0.5, 3.0], vec![0.25, 2.0]];
+        let bytes = encode_coordinator(3, 2, &history);
+        let snap = decode_coordinator(&bytes, 2).unwrap();
+        assert_eq!(snap.epoch, 3);
+        assert_eq!(snap.history, history);
+        assert!(decode_coordinator(&bytes, 1).is_err());
+        // Aggregator-free jobs have empty-but-counted history entries.
+        let bytes = encode_coordinator(2, 0, &[vec![], vec![]]);
+        let snap = decode_coordinator(&bytes, 0).unwrap();
+        assert_eq!(snap.history, vec![Vec::<f64>::new(); 2]);
+    }
+
+    #[test]
+    fn writer_commits_epochs_and_prunes() {
+        let dir = tmp("commit_prune");
+        let w = CheckpointWriter::create(&dir, "cc/gopher", 2, false).unwrap();
+        // Fresh dir: manifest exists, no committed epoch.
+        let r = CheckpointReader::open(&dir).unwrap();
+        assert!(r.latest_valid().is_err());
+
+        for epoch in [1u64, 2, 3] {
+            for p in 0..2 {
+                w.write_partition(epoch, p, &sample_partition(epoch, p)).unwrap();
+            }
+            w.commit(epoch, &encode_coordinator(epoch, 0, &vec![vec![]; epoch as usize]))
+                .unwrap();
+        }
+        let r = CheckpointReader::open(&dir).unwrap();
+        // KEEP_EPOCHS retention: epoch 1 pruned, 2 and 3 committed.
+        assert_eq!(r.manifest().epochs, vec![2, 3]);
+        assert!(!epoch_dir(&dir, 1).exists());
+        assert_eq!(r.latest_valid().unwrap(), 3);
+        assert_eq!(r.manifest().label, "cc/gopher");
+
+        // A resumed job (continue_epochs) extends the history…
+        let w2 = CheckpointWriter::create(&dir, "cc/gopher", 2, true).unwrap();
+        for p in 0..2 {
+            w2.write_partition(4, p, &sample_partition(4, p)).unwrap();
+        }
+        w2.commit(4, &encode_coordinator(4, 0, &vec![vec![]; 4])).unwrap();
+        assert_eq!(CheckpointReader::open(&dir).unwrap().manifest().epochs, vec![3, 4]);
+        // …but a different job or cluster shape is refused.
+        assert!(CheckpointWriter::create(&dir, "sssp/gopher", 2, false).is_err());
+        assert!(CheckpointWriter::create(&dir, "cc/gopher", 3, false).is_err());
+    }
+
+    #[test]
+    fn fresh_run_resets_stale_epochs() {
+        // A non-resumed run reusing a checkpoint dir must not let the
+        // previous run's higher-numbered epochs outrank (and prune) its
+        // own: the epoch history is reset at create time.
+        let dir = tmp("reset_stale");
+        let w = CheckpointWriter::create(&dir, "cc/gopher", 1, false).unwrap();
+        for epoch in [6u64, 8] {
+            w.write_partition(epoch, 0, &sample_partition(epoch, 0)).unwrap();
+            w.commit(epoch, &encode_coordinator(epoch, 0, &vec![vec![]; epoch as usize]))
+                .unwrap();
+        }
+        drop(w);
+        let w = CheckpointWriter::create(&dir, "cc/gopher", 1, false).unwrap();
+        assert!(
+            CheckpointReader::open(&dir).unwrap().latest_valid().is_err(),
+            "stale epochs must be gone before the fresh run commits"
+        );
+        assert!(!epoch_dir(&dir, 8).exists());
+        w.write_partition(2, 0, &sample_partition(2, 0)).unwrap();
+        w.commit(2, &encode_coordinator(2, 0, &vec![vec![]; 2])).unwrap();
+        let r = CheckpointReader::open(&dir).unwrap();
+        assert_eq!(r.manifest().epochs, vec![2]);
+        assert_eq!(r.latest_valid().unwrap(), 2);
+    }
+
+    #[test]
+    fn corrupt_latest_epoch_falls_back_and_names_the_section() {
+        let dir = tmp("fallback");
+        let w = CheckpointWriter::create(&dir, "cc/gopher", 1, false).unwrap();
+        for epoch in [2u64, 4] {
+            w.write_partition(epoch, 0, &sample_partition(epoch, 0)).unwrap();
+            w.commit(epoch, &encode_coordinator(epoch, 0, &vec![vec![]; epoch as usize]))
+                .unwrap();
+        }
+        let r = CheckpointReader::open(&dir).unwrap();
+        assert_eq!(r.latest_valid().unwrap(), 4);
+
+        // Flip a byte inside epoch 4's states section.
+        let path = r.partition_path(4, 0);
+        let mut bytes = fs::read(&path).unwrap();
+        let ranges = {
+            let table =
+                section::unframe(&bytes, MAGIC, VERSION, KIND_PARTITION, section_name)
+                    .unwrap();
+            table.ranges()
+        };
+        let states = ranges.iter().find(|(n, _)| *n == "states").unwrap().1.clone();
+        bytes[states.start + 1] ^= 0x55;
+        fs::write(&path, &bytes).unwrap();
+
+        // Direct validation names the section…
+        let err = r.validate_epoch(4).unwrap_err();
+        assert!(format!("{err:#}").contains("states"), "{err:#}");
+        // …and recovery falls back to the previous committed epoch.
+        assert_eq!(r.latest_valid().unwrap(), 2);
+
+        // The scrubber reports the same damage.
+        let sum = scrub_dir(&dir).unwrap();
+        assert_eq!(sum.corrupt.len(), 1);
+        assert!(sum.corrupt[0].contains("epoch_4/part_0.ckpt"), "{:?}", sum.corrupt);
+        assert!(sum.corrupt[0].contains("states"));
+        assert!(sum.files >= 4);
+
+        // Corrupting epoch 2 as well exhausts the fallback chain.
+        let path2 = r.partition_path(2, 0);
+        let mut b2 = fs::read(&path2).unwrap();
+        let last = b2.len() - 1;
+        b2[last] ^= 0xff;
+        fs::write(&path2, &b2).unwrap();
+        assert!(r.latest_valid().is_err());
+    }
+
+    #[test]
+    fn missing_manifest_is_an_error() {
+        let dir = tmp("no_manifest");
+        fs::create_dir_all(&dir).unwrap();
+        assert!(CheckpointReader::open(&dir).is_err());
+        assert!(scrub_dir(&dir).is_err());
+    }
+}

@@ -1,0 +1,284 @@
+//! [`StateCodec`] — the checkpoint serialization contract for program
+//! state.
+//!
+//! Both program traits bound their per-unit state on it
+//! (`SubgraphProgram::State`, `VertexProgram::Value`), which is what
+//! lets the default `save_state`/`restore_state` hooks work out of the
+//! box for *value-only* algorithms (states that are plain values or
+//! containers of them — CC's `u32` label, SSSP's distance vector, a
+//! vertex rank). Programs whose state embeds rebuildable machinery
+//! (e.g. PageRank's registered XLA adjacency block) override the hooks
+//! and reconstruct that part from the topology on restore.
+//!
+//! Encodings must be **deterministic**: a checkpoint participates in
+//! the byte-identical recovery-parity guarantee, so unordered
+//! containers are serialized in sorted key order.
+
+use std::collections::HashMap;
+
+use anyhow::{ensure, Result};
+
+use crate::util::codec::{Decoder, Encoder};
+
+/// Deterministic, self-delimiting binary codec for checkpointed state.
+pub trait StateCodec: Sized {
+    fn encode_state(&self, e: &mut Encoder);
+    fn decode_state(d: &mut Decoder) -> Result<Self>;
+}
+
+impl StateCodec for () {
+    fn encode_state(&self, _e: &mut Encoder) {}
+    fn decode_state(_d: &mut Decoder) -> Result<Self> {
+        Ok(())
+    }
+}
+
+impl StateCodec for bool {
+    fn encode_state(&self, e: &mut Encoder) {
+        e.put_u8(*self as u8);
+    }
+    fn decode_state(d: &mut Decoder) -> Result<Self> {
+        Ok(d.get_u8()? != 0)
+    }
+}
+
+impl StateCodec for u8 {
+    fn encode_state(&self, e: &mut Encoder) {
+        e.put_u8(*self);
+    }
+    fn decode_state(d: &mut Decoder) -> Result<Self> {
+        d.get_u8()
+    }
+}
+
+impl StateCodec for u32 {
+    fn encode_state(&self, e: &mut Encoder) {
+        e.put_varint(*self as u64);
+    }
+    fn decode_state(d: &mut Decoder) -> Result<Self> {
+        let v = d.get_varint()?;
+        ensure!(v <= u32::MAX as u64, "u32 state overflow: {v}");
+        Ok(v as u32)
+    }
+}
+
+impl StateCodec for u64 {
+    fn encode_state(&self, e: &mut Encoder) {
+        e.put_varint(*self);
+    }
+    fn decode_state(d: &mut Decoder) -> Result<Self> {
+        d.get_varint()
+    }
+}
+
+impl StateCodec for usize {
+    fn encode_state(&self, e: &mut Encoder) {
+        e.put_varint(*self as u64);
+    }
+    fn decode_state(d: &mut Decoder) -> Result<Self> {
+        Ok(d.get_varint()? as usize)
+    }
+}
+
+impl StateCodec for i64 {
+    fn encode_state(&self, e: &mut Encoder) {
+        e.put_signed(*self);
+    }
+    fn decode_state(d: &mut Decoder) -> Result<Self> {
+        d.get_signed()
+    }
+}
+
+impl StateCodec for f32 {
+    fn encode_state(&self, e: &mut Encoder) {
+        e.put_f32(*self);
+    }
+    fn decode_state(d: &mut Decoder) -> Result<Self> {
+        d.get_f32()
+    }
+}
+
+impl StateCodec for f64 {
+    fn encode_state(&self, e: &mut Encoder) {
+        e.put_f64(*self);
+    }
+    fn decode_state(d: &mut Decoder) -> Result<Self> {
+        d.get_f64()
+    }
+}
+
+impl StateCodec for String {
+    fn encode_state(&self, e: &mut Encoder) {
+        e.put_str(self);
+    }
+    fn decode_state(d: &mut Decoder) -> Result<Self> {
+        Ok(d.get_str()?.to_string())
+    }
+}
+
+impl<T: StateCodec> StateCodec for Vec<T> {
+    fn encode_state(&self, e: &mut Encoder) {
+        e.put_varint(self.len() as u64);
+        for x in self {
+            x.encode_state(e);
+        }
+    }
+    fn decode_state(d: &mut Decoder) -> Result<Self> {
+        let n = d.get_varint()? as usize;
+        // Checkpoint sections are checksum-validated before decode, so a
+        // wild length means a codec bug, not bit rot — still, cap the
+        // pre-allocation to what the buffer could plausibly hold.
+        let mut out = Vec::with_capacity(n.min(d.remaining() + 1));
+        for _ in 0..n {
+            out.push(T::decode_state(d)?);
+        }
+        Ok(out)
+    }
+}
+
+impl<T: StateCodec> StateCodec for Option<T> {
+    fn encode_state(&self, e: &mut Encoder) {
+        match self {
+            None => e.put_u8(0),
+            Some(x) => {
+                e.put_u8(1);
+                x.encode_state(e);
+            }
+        }
+    }
+    fn decode_state(d: &mut Decoder) -> Result<Self> {
+        match d.get_u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(T::decode_state(d)?)),
+            t => anyhow::bail!("bad Option state tag {t}"),
+        }
+    }
+}
+
+impl<A: StateCodec, B: StateCodec> StateCodec for (A, B) {
+    fn encode_state(&self, e: &mut Encoder) {
+        self.0.encode_state(e);
+        self.1.encode_state(e);
+    }
+    fn decode_state(d: &mut Decoder) -> Result<Self> {
+        Ok((A::decode_state(d)?, B::decode_state(d)?))
+    }
+}
+
+impl<A: StateCodec, B: StateCodec, C: StateCodec> StateCodec for (A, B, C) {
+    fn encode_state(&self, e: &mut Encoder) {
+        self.0.encode_state(e);
+        self.1.encode_state(e);
+        self.2.encode_state(e);
+    }
+    fn decode_state(d: &mut Decoder) -> Result<Self> {
+        Ok((A::decode_state(d)?, B::decode_state(d)?, C::decode_state(d)?))
+    }
+}
+
+/// Maps serialize in sorted key order — iteration order must not leak
+/// into checkpoint bytes (the determinism contract).
+impl<K, V> StateCodec for HashMap<K, V>
+where
+    K: StateCodec + Ord + Clone + std::hash::Hash + Eq,
+    V: StateCodec + Clone,
+{
+    fn encode_state(&self, e: &mut Encoder) {
+        let mut pairs: Vec<(&K, &V)> = self.iter().collect();
+        pairs.sort_by(|a, b| a.0.cmp(b.0));
+        e.put_varint(pairs.len() as u64);
+        for (k, v) in pairs {
+            k.encode_state(e);
+            v.encode_state(e);
+        }
+    }
+    fn decode_state(d: &mut Decoder) -> Result<Self> {
+        let n = d.get_varint()? as usize;
+        let mut out = HashMap::with_capacity(n.min(d.remaining() + 1));
+        for _ in 0..n {
+            let k = K::decode_state(d)?;
+            let v = V::decode_state(d)?;
+            out.insert(k, v);
+        }
+        Ok(out)
+    }
+}
+
+impl StateCodec for crate::gofs::SubgraphId {
+    fn encode_state(&self, e: &mut Encoder) {
+        e.put_varint(self.partition as u64);
+        e.put_varint(self.index as u64);
+    }
+    fn decode_state(d: &mut Decoder) -> Result<Self> {
+        Ok(crate::gofs::SubgraphId {
+            partition: d.get_varint()? as u32,
+            index: d.get_varint()? as u32,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt<T: StateCodec + PartialEq + std::fmt::Debug>(v: T) {
+        let mut e = Encoder::new();
+        v.encode_state(&mut e);
+        let bytes = e.into_bytes();
+        let mut d = Decoder::new(&bytes);
+        assert_eq!(T::decode_state(&mut d).unwrap(), v);
+        assert!(d.is_at_end(), "trailing bytes after {v:?}");
+    }
+
+    #[test]
+    fn scalar_round_trips() {
+        rt(());
+        rt(true);
+        rt(7u8);
+        rt(u32::MAX);
+        rt(u64::MAX);
+        rt(123usize);
+        rt(-42i64);
+        rt(1.5f32);
+        rt(f32::INFINITY);
+        rt(-2.5f64);
+        rt("label".to_string());
+    }
+
+    #[test]
+    fn container_round_trips() {
+        rt(vec![1u32, 2, 3]);
+        rt(Vec::<f32>::new());
+        rt(Some(vec![(1u32, 2.5f32)]));
+        rt(Option::<u32>::None);
+        rt((4u32, f32::NEG_INFINITY, vec![7u64]));
+        rt(vec![(Some(3u32), 9u32), (None, 1)]);
+        rt(crate::gofs::SubgraphId { partition: 3, index: 9 });
+    }
+
+    #[test]
+    fn hashmap_bytes_are_key_sorted() {
+        let mut a = HashMap::new();
+        let mut b = HashMap::new();
+        for (k, v) in [(5u32, 1.0f32), (1, 2.0), (9, 3.0)] {
+            a.insert(k, v);
+        }
+        for (k, v) in [(9u32, 3.0f32), (5, 1.0), (1, 2.0)] {
+            b.insert(k, v);
+        }
+        let enc = |m: &HashMap<u32, f32>| {
+            let mut e = Encoder::new();
+            m.encode_state(&mut e);
+            e.into_bytes()
+        };
+        // Insertion order must not leak into the bytes.
+        assert_eq!(enc(&a), enc(&b));
+        rt(a);
+    }
+
+    #[test]
+    fn corrupt_tags_rejected() {
+        let mut d = Decoder::new(&[9u8]);
+        assert!(Option::<u32>::decode_state(&mut d).is_err());
+    }
+}

@@ -6,12 +6,15 @@
 //! goffish partition --graph g.txt --k 4 [--strategy multilevel|hash|range]
 //! goffish store     --graph g.txt --k 4 --out storedir [--strategy …] [--name NAME]
 //!                   [--format v1|v2] [--attrs N]
+//! goffish store verify [--store storedir] [--ckpt ckptdir]
 //! goffish run       --store storedir
 //!                   --algo <any algos::registry entry>
 //!                   [--engine gopher|vertex] [--source V] [--supersteps N]
 //!                   [--epsilon E] [--no-combine] [--max-supersteps N]
 //!                   [--xla] [--fabric inproc|tcp] [--cores N]
 //!                   [--load-attributes a,b] [--output values.tsv]
+//!                   [--checkpoint-every N --checkpoint-dir D] [--resume D]
+//!                   [--kill-at S [--kill-worker W]]
 //! ```
 //!
 //! `store --format` picks the slice framing (v2 columnar default; v1 for
@@ -20,13 +23,26 @@
 //! paper's "10 attributes, load one" scenario is reproducible from the
 //! CLI: `run --load-attributes attr0` then loads exactly that slice.
 //!
+//! `store verify` is the checksum scrubber: it validates every section
+//! of every slice in a GoFS store (`--store`) and/or every snapshot of
+//! a checkpoint directory (`--ckpt`), reporting corrupt sections by
+//! name and exiting non-zero if anything rotted.
+//!
 //! `run` is a thin shell over the unified job layer: flags are handed
 //! to [`Job::builder`], validation (unknown algorithms, engine/knob
-//! mismatches like `--epsilon` on the vertex engine) happens in
+//! mismatches like `--epsilon` on the vertex engine, inconsistent
+//! checkpoint knobs, unrecoverable `--resume` targets) happens in
 //! `build()` with typed errors, and the algorithm dispatch itself lives
 //! in [`crate::algos::registry`] — adding an algorithm requires no CLI
 //! edits beyond its registry entry. `--output` dumps the uniform
 //! `JobOutput::values` as `vertex<TAB>value` lines.
+//!
+//! Fault tolerance: `--checkpoint-every N --checkpoint-dir D` snapshots
+//! every N supersteps; after a crash, `run --resume D` restarts from
+//! the latest valid committed epoch (and keeps checkpointing into `D`
+//! when `--checkpoint-every` is also given). `--kill-at S` is the
+//! failure-injection hook (kills worker `--kill-worker`, default 0, at
+//! superstep S) driving the kill-and-resume smoke tests.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -35,6 +51,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::algos::pagerank::RankKernel;
 use crate::algos::registry;
+use crate::ckpt;
 use crate::gofs::{SliceFormat, Store};
 use crate::gopher::FabricKind;
 use crate::graph::{gen, io, props, Graph};
@@ -52,6 +69,9 @@ pub fn dispatch(argv: Vec<String>) -> Result<()> {
         "gen" => cmd_gen(&args),
         "info" => cmd_info(&args),
         "partition" => cmd_partition(&args),
+        "store" if args.positional.get(1).map(String::as_str) == Some("verify") => {
+            cmd_store_verify(&args)
+        }
         "store" => cmd_store(&args),
         "run" => cmd_run(&args),
         "algos" => cmd_algos(),
@@ -66,13 +86,16 @@ pub fn dispatch(argv: Vec<String>) -> Result<()> {
 const HELP: &str = r#"goffish — sub-graph centric graph analytics (GoFFish reproduction)
 
 commands:
-  gen       generate a synthetic dataset analog to an edge list
-  info      structural properties of a graph (the Table-1 row)
-  partition partition a graph and report cut metrics
-  store     build a GoFS store directory (partition + sub-graph slices)
-  run       execute an algorithm with Gopher or the vertex baseline
-  algos     list registered algorithms and their engine support
-  help      this message
+  gen          generate a synthetic dataset analog to an edge list
+  info         structural properties of a graph (the Table-1 row)
+  partition    partition a graph and report cut metrics
+  store        build a GoFS store directory (partition + sub-graph slices)
+  store verify checksum-scrub a store (--store) and/or checkpoint dir (--ckpt)
+  run          execute an algorithm with Gopher or the vertex baseline
+               (checkpoint with --checkpoint-every/--checkpoint-dir, recover
+               with --resume)
+  algos        per-engine algorithm support matrix
+  help         this message
 
 see rust/src/cli/commands.rs for per-command flags.
 "#;
@@ -189,18 +212,61 @@ fn cmd_store(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Registry-driven per-engine support matrix: one column per engine,
+/// so a gopher-only algorithm (e.g. `blockrank`) is visible at a
+/// glance instead of hiding in a combined "engines" string.
 fn cmd_algos() -> Result<()> {
-    println!("algorithm   engines        description");
+    let mark = |present: bool| if present { "yes" } else { "-" };
+    println!("{:<11} {:<7} {:<7} description", "algorithm", "gopher", "vertex");
     for e in registry::entries() {
-        let engines = match (e.gopher.is_some(), e.vertex.is_some()) {
-            (true, true) => "gopher+vertex",
-            (true, false) => "gopher",
-            (false, true) => "vertex",
-            (false, false) => "-",
-        };
-        println!("{:<11} {:<14} {}", e.name, engines, e.description);
+        println!(
+            "{:<11} {:<7} {:<7} {}",
+            e.name,
+            mark(e.gopher.is_some()),
+            mark(e.vertex.is_some()),
+            e.description
+        );
     }
     Ok(())
+}
+
+/// `store verify`: full checksum scrub of a GoFS store
+/// ([`Store::scrub`]) and/or a checkpoint directory
+/// (`ckpt::scrub_dir`), reporting corrupt sections by name (the
+/// ROADMAP "background checksum scrubbing" item in its on-demand form).
+fn cmd_store_verify(args: &Args) -> Result<()> {
+    let store_dir = args.get("store");
+    let ckpt_dir = args.get("ckpt");
+    if store_dir.is_none() && ckpt_dir.is_none() {
+        bail!("store verify needs --store <dir> and/or --ckpt <dir>");
+    }
+    let mut sum = crate::gofs::section::ScrubSummary::default();
+
+    if let Some(root) = store_dir {
+        let store = Store::open(Path::new(root))?;
+        sum.absorb(store.scrub()?, "store ");
+        println!(
+            "store {root} ({}, {} partitions) scrubbed",
+            store.meta().format,
+            store.meta().num_partitions
+        );
+    }
+
+    if let Some(dir) = ckpt_dir {
+        sum.absorb(ckpt::scrub_dir(Path::new(dir))?, "ckpt ");
+        println!("checkpoint dir {dir} scrubbed");
+    }
+
+    println!("checked {} files / {} sections", sum.files, sum.sections);
+    if sum.is_clean() {
+        println!("all sections clean");
+        Ok(())
+    } else {
+        for c in &sum.corrupt {
+            println!("CORRUPT {c}");
+        }
+        bail!("{} corrupt section(s)", sum.corrupt.len())
+    }
 }
 
 /// The single algorithm dispatch path: flags → `Job::builder()` →
@@ -247,6 +313,28 @@ fn cmd_run(args: &Args) -> Result<()> {
     if args.flag("no-combine") {
         builder = builder.combiners(false);
     }
+    // Fault-tolerance knobs: checkpoint cadence/target, resume target,
+    // and the failure-injection hook (validated in build(), like
+    // everything else).
+    if let Some(s) = args.get("checkpoint-every") {
+        let n = s
+            .parse::<usize>()
+            .with_context(|| format!("--checkpoint-every expects an integer, got {s:?}"))?;
+        builder = builder.checkpoint_every(n);
+    }
+    if let Some(dir) = args.get("checkpoint-dir") {
+        builder = builder.checkpoint_dir(dir);
+    }
+    if let Some(dir) = args.get("resume") {
+        builder = builder.resume_from(dir);
+    }
+    if let Some(s) = args.get("kill-at") {
+        let superstep = s
+            .parse::<usize>()
+            .with_context(|| format!("--kill-at expects a superstep number, got {s:?}"))?;
+        let worker = args.get_usize("kill-worker", 0)? as u32;
+        builder = builder.kill_at(superstep, worker);
+    }
     // Knob/engine validation happens here, with typed errors (e.g.
     // `--epsilon` or `--no-combine` on the vertex engine).
     let job = builder.build()?;
@@ -259,6 +347,12 @@ fn cmd_run(args: &Args) -> Result<()> {
             trace.name,
             trace.last(),
             trace.values.len()
+        );
+    }
+    for c in &out.metrics.checkpoints {
+        println!(
+            "  checkpoint epoch {}: {:.4}s, {} bytes",
+            c.superstep, c.seconds, c.bytes
         );
     }
     if let Some(path) = args.get("output") {
@@ -575,6 +669,74 @@ mod tests {
             "--algo", "cc", "--load-attributes", "nope",
         ])
         .is_err());
+    }
+
+    #[test]
+    fn kill_resume_recovers_identical_tsv() {
+        let dir = tmp("kill_resume");
+        let graph = dir.join("g.txt");
+        let store = dir.join("store");
+        let ckpt = dir.join("ckpt");
+        run_cmd(&["gen", "--kind", "road", "--scale", "12", "--seed", "3", "--out",
+                  graph.to_str().unwrap()])
+            .unwrap();
+        run_cmd(&["store", "--graph", graph.to_str().unwrap(), "--k", "3", "--out",
+                  store.to_str().unwrap()])
+            .unwrap();
+        // Baseline: uninterrupted run.
+        let full = dir.join("full.tsv");
+        run_cmd(&["run", "--store", store.to_str().unwrap(), "--algo", "cc",
+                  "--output", full.to_str().unwrap()])
+            .unwrap();
+        // Checkpointed run killed at superstep 2 fails loudly…
+        let err = run_cmd(&["run", "--store", store.to_str().unwrap(), "--algo", "cc",
+                            "--checkpoint-every", "1",
+                            "--checkpoint-dir", ckpt.to_str().unwrap(),
+                            "--kill-at", "2"]);
+        assert!(err.is_err(), "killed run must fail");
+        assert!(format!("{:#}", err.unwrap_err()).contains("injected worker failure"));
+        // …and the resumed run produces a byte-identical TSV.
+        let resumed = dir.join("resumed.tsv");
+        run_cmd(&["run", "--store", store.to_str().unwrap(), "--algo", "cc",
+                  "--resume", ckpt.to_str().unwrap(),
+                  "--output", resumed.to_str().unwrap()])
+            .unwrap();
+        assert_eq!(
+            std::fs::read_to_string(&full).unwrap(),
+            std::fs::read_to_string(&resumed).unwrap()
+        );
+        // The scrubber passes over both the store and the checkpoints.
+        run_cmd(&["store", "verify", "--store", store.to_str().unwrap(), "--ckpt",
+                  ckpt.to_str().unwrap()])
+            .unwrap();
+        // Resuming with the wrong algorithm is a typed refusal.
+        assert!(run_cmd(&["run", "--store", store.to_str().unwrap(), "--algo", "sssp",
+                          "--resume", ckpt.to_str().unwrap()])
+            .is_err());
+    }
+
+    #[test]
+    fn store_verify_flags_corruption() {
+        let dir = tmp("verify");
+        let graph = dir.join("g.txt");
+        let store = dir.join("store");
+        run_cmd(&["gen", "--kind", "chain", "--scale", "4", "--out",
+                  graph.to_str().unwrap()])
+            .unwrap();
+        run_cmd(&["store", "--graph", graph.to_str().unwrap(), "--k", "2", "--attrs",
+                  "1", "--out", store.to_str().unwrap()])
+            .unwrap();
+        // Clean store verifies.
+        run_cmd(&["store", "verify", "--store", store.to_str().unwrap()]).unwrap();
+        // No target is an error.
+        assert!(run_cmd(&["store", "verify"]).is_err());
+        // Flip one byte in a slice body: verify fails.
+        let victim = store.join("host0").join("sg_0.topo.slice");
+        let mut bytes = std::fs::read(&victim).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x55;
+        std::fs::write(&victim, bytes).unwrap();
+        assert!(run_cmd(&["store", "verify", "--store", store.to_str().unwrap()]).is_err());
     }
 
     #[test]

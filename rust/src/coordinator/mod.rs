@@ -151,6 +151,14 @@ impl Coordinator {
         Coordinator { aggs, history: Vec::new() }
     }
 
+    /// Rebuild a coordinator from a checkpointed history (entry `s` =
+    /// globals folded at barrier `s+1`): a resumed job's traces cover
+    /// the whole run, not just the supersteps after the restart — the
+    /// recovery-parity requirement on `JobOutput::aggregators`.
+    pub fn with_history(aggs: Aggregators, history: Vec<Vec<f64>>) -> Coordinator {
+        Coordinator { aggs, history }
+    }
+
     pub fn aggregators(&self) -> &Aggregators {
         &self.aggs
     }

@@ -10,6 +10,7 @@
 //! vertex) triple at store-build time, so no network resolution is ever
 //! needed at load or run time.
 
+pub mod section;
 pub mod subgraph;
 pub mod slice;
 pub mod store;

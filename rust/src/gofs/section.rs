@@ -1,0 +1,294 @@
+//! Generic sectioned-file framing — the on-disk layout introduced by
+//! the GoFS v2 slice format, extracted so other subsystems can reuse it
+//! (the checkpoint store `crate::ckpt` is the second user).
+//!
+//! A sectioned file is `magic(4), version(1), kind(1), nsections(1)`,
+//! then one fixed 20-byte directory entry per section (`id u8, pad[3],
+//! len u64 LE, fnv u64 LE`), then the section bodies back to back in
+//! directory order. Every section carries its own FNV-1a 64 checksum,
+//! which buys two properties the whole-file-checksum v1 framing lacked:
+//!
+//! * a reader that skips a section never pays to checksum it
+//!   (projection-friendly), and
+//! * corruption errors *name* the corrupt section, so scrubbers
+//!   ([`scrub`], the `store verify` CLI) can report exactly what rotted.
+//!
+//! Callers own their magic, version byte, kind bytes, and section-id →
+//! name mapping; this module owns the layout and the checksum rules.
+
+use anyhow::{anyhow, ensure, Result};
+
+/// Fixed header: magic(4) + version + kind + nsections.
+pub const HEADER_LEN: usize = 7;
+/// One directory entry: id u8 + pad[3] + len u64 LE + fnv u64 LE.
+pub const DIR_ENTRY_LEN: usize = 20;
+
+/// Section-id → human name mapping (error messages, scrub reports).
+pub type SectionNames = fn(u8) -> &'static str;
+
+/// FNV-1a 64-bit checksum over a byte run.
+pub fn checksum(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Frame `sections` into one sectioned file.
+pub fn frame(magic: &[u8; 4], version: u8, kind: u8, sections: &[(u8, Vec<u8>)]) -> Vec<u8> {
+    let body: usize = sections.iter().map(|(_, b)| b.len()).sum();
+    let mut out = Vec::with_capacity(HEADER_LEN + sections.len() * DIR_ENTRY_LEN + body);
+    out.extend_from_slice(magic);
+    out.push(version);
+    out.push(kind);
+    out.push(sections.len() as u8);
+    for (id, body) in sections {
+        out.push(*id);
+        out.extend_from_slice(&[0u8; 3]);
+        out.extend_from_slice(&(body.len() as u64).to_le_bytes());
+        out.extend_from_slice(&checksum(body).to_le_bytes());
+    }
+    for (_, body) in sections {
+        out.extend_from_slice(body);
+    }
+    out
+}
+
+/// Parsed (but not yet checksum-validated) section table over a
+/// borrowed sectioned file.
+pub struct SectionTable<'a> {
+    bytes: &'a [u8],
+    /// `(id, body byte range, recorded checksum)` in directory order.
+    entries: Vec<(u8, std::ops::Range<usize>, u64)>,
+    names: SectionNames,
+}
+
+impl<'a> SectionTable<'a> {
+    /// Fetch one section, validating *only its own* checksum — untouched
+    /// sections are never checksummed (the skip-what-you-don't-read
+    /// property of the layout).
+    pub fn get(&self, id: u8) -> Result<&'a [u8]> {
+        let (_, range, sum) = self
+            .entries
+            .iter()
+            .find(|(i, _, _)| *i == id)
+            .ok_or_else(|| anyhow!("missing section `{}`", (self.names)(id)))?;
+        let body = &self.bytes[range.clone()];
+        ensure!(
+            checksum(body) == *sum,
+            "section `{}` corrupt (checksum mismatch)",
+            (self.names)(id)
+        );
+        Ok(body)
+    }
+
+    /// Number of sections in the directory.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// `(name, body byte range)` per section, in file order.
+    pub fn ranges(&self) -> Vec<(&'static str, std::ops::Range<usize>)> {
+        self.entries
+            .iter()
+            .map(|(id, r, _)| ((self.names)(*id), r.clone()))
+            .collect()
+    }
+
+    /// Checksum every section: `(name, clean?)` per directory entry.
+    pub fn scrub(&self) -> Vec<(&'static str, bool)> {
+        self.entries
+            .iter()
+            .map(|(id, r, sum)| {
+                ((self.names)(*id), checksum(&self.bytes[r.clone()]) == *sum)
+            })
+            .collect()
+    }
+}
+
+/// Parse the directory of a sectioned file, validating the structure
+/// (magic, version, kind, lengths) but not the per-section checksums —
+/// those are checked on [`SectionTable::get`] / [`SectionTable::scrub`].
+pub fn unframe<'a>(
+    bytes: &'a [u8],
+    magic: &[u8; 4],
+    version: u8,
+    want_kind: u8,
+    names: SectionNames,
+) -> Result<SectionTable<'a>> {
+    ensure!(bytes.len() >= HEADER_LEN, "file too short ({} bytes)", bytes.len());
+    ensure!(&bytes[..4] == magic, "bad magic");
+    ensure!(bytes[4] == version, "unsupported version {}", bytes[4]);
+    ensure!(
+        bytes[5] == want_kind,
+        "wrong file kind: want {want_kind}, got {}",
+        bytes[5]
+    );
+    let n = bytes[6] as usize;
+    let dir_end = HEADER_LEN + n * DIR_ENTRY_LEN;
+    ensure!(bytes.len() >= dir_end, "truncated inside section directory");
+    let mut entries = Vec::with_capacity(n);
+    let mut off = dir_end;
+    for s in 0..n {
+        let e = HEADER_LEN + s * DIR_ENTRY_LEN;
+        let id = bytes[e];
+        let len = u64::from_le_bytes(bytes[e + 4..e + 12].try_into().unwrap()) as usize;
+        let sum = u64::from_le_bytes(bytes[e + 12..e + 20].try_into().unwrap());
+        ensure!(
+            bytes.len() - off >= len,
+            "section `{}` truncated: directory says {len} bytes, {} remain",
+            names(id),
+            bytes.len() - off
+        );
+        entries.push((id, off..off + len, sum));
+        off += len;
+    }
+    ensure!(
+        off == bytes.len(),
+        "{} trailing bytes after last section",
+        bytes.len() - off
+    );
+    Ok(SectionTable { bytes, entries, names })
+}
+
+/// Structure-parse a sectioned file of any kind and checksum every
+/// section: `(name, clean?)` per entry. The scrubber surface behind
+/// `store verify`.
+pub fn scrub(
+    bytes: &[u8],
+    magic: &[u8; 4],
+    version: u8,
+    names: SectionNames,
+) -> Result<Vec<(&'static str, bool)>> {
+    ensure!(bytes.len() >= HEADER_LEN, "file too short ({} bytes)", bytes.len());
+    let table = unframe(bytes, magic, version, bytes[5], names)?;
+    Ok(table.scrub())
+}
+
+/// Accumulated result of a multi-file checksum scrub — shared by the
+/// GoFS store scrubber ([`crate::gofs::Store::scrub`]) and the
+/// checkpoint-directory scrubber (`crate::ckpt::scrub_dir`), merged by
+/// the `store verify` CLI.
+#[derive(Debug, Default)]
+pub struct ScrubSummary {
+    pub files: u64,
+    pub sections: u64,
+    /// Human-readable ``"<file>: section `<name>`"`` descriptions.
+    pub corrupt: Vec<String>,
+}
+
+impl ScrubSummary {
+    /// Record one file's per-section scrub report — or its structural
+    /// parse error, which counts as corruption too.
+    pub fn record(&mut self, file: &str, report: Result<Vec<(&'static str, bool)>>) {
+        self.files += 1;
+        match report {
+            Ok(entries) => {
+                for (sec, clean) in entries {
+                    self.sections += 1;
+                    if !clean {
+                        self.corrupt.push(format!("{file}: section `{sec}`"));
+                    }
+                }
+            }
+            Err(e) => self.corrupt.push(format!("{file}: {e:#}")),
+        }
+    }
+
+    /// Record a file that could not even be read.
+    pub fn record_unreadable(&mut self, file: &str, err: impl std::fmt::Display) {
+        self.files += 1;
+        self.corrupt.push(format!("{file}: unreadable ({err})"));
+    }
+
+    /// Fold another summary into this one (optionally prefixing its
+    /// corruption descriptions, e.g. with the scrubbed root).
+    pub fn absorb(&mut self, other: ScrubSummary, prefix: &str) {
+        self.files += other.files;
+        self.sections += other.sections;
+        self.corrupt
+            .extend(other.corrupt.into_iter().map(|c| format!("{prefix}{c}")));
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.corrupt.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MAGIC: &[u8; 4] = b"TEST";
+
+    fn names(id: u8) -> &'static str {
+        match id {
+            0 => "alpha",
+            1 => "beta",
+            _ => "unknown",
+        }
+    }
+
+    fn sample() -> Vec<u8> {
+        frame(
+            MAGIC,
+            1,
+            7,
+            &[(0, vec![1, 2, 3]), (1, vec![9; 40])],
+        )
+    }
+
+    #[test]
+    fn frame_unframe_round_trip() {
+        let bytes = sample();
+        let t = unframe(&bytes, MAGIC, 1, 7, names).unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.get(0).unwrap(), &[1, 2, 3]);
+        assert_eq!(t.get(1).unwrap(), &[9; 40][..]);
+        assert!(format!("{:#}", t.get(2).unwrap_err()).contains("unknown"));
+    }
+
+    #[test]
+    fn header_mismatches_rejected() {
+        let bytes = sample();
+        assert!(unframe(&bytes, b"XXXX", 1, 7, names).is_err());
+        assert!(unframe(&bytes, MAGIC, 2, 7, names).is_err());
+        assert!(unframe(&bytes, MAGIC, 1, 8, names).is_err());
+        assert!(unframe(&bytes[..5], MAGIC, 1, 7, names).is_err());
+        assert!(unframe(&bytes[..bytes.len() - 1], MAGIC, 1, 7, names).is_err());
+    }
+
+    #[test]
+    fn corruption_names_the_section() {
+        let mut bytes = sample();
+        let t = unframe(&bytes, MAGIC, 1, 7, names).unwrap();
+        let ranges = t.ranges();
+        let beta = ranges.iter().find(|(n, _)| *n == "beta").unwrap().1.clone();
+        drop(t);
+        bytes[beta.start + 5] ^= 0x55;
+        let t = unframe(&bytes, MAGIC, 1, 7, names).unwrap();
+        assert!(t.get(0).is_ok(), "untouched section still clean");
+        let err = t.get(1).unwrap_err();
+        assert!(format!("{err:#}").contains("beta"), "{err:#}");
+        let report = scrub(&bytes, MAGIC, 1, names).unwrap();
+        assert_eq!(report, vec![("alpha", true), ("beta", false)]);
+    }
+
+    #[test]
+    fn ranges_cover_file_exactly() {
+        let bytes = sample();
+        let t = unframe(&bytes, MAGIC, 1, 7, names).unwrap();
+        let mut pos = HEADER_LEN + t.len() * DIR_ENTRY_LEN;
+        for (_, r) in t.ranges() {
+            assert_eq!(r.start, pos);
+            pos = r.end;
+        }
+        assert_eq!(pos, bytes.len());
+    }
+}

@@ -23,11 +23,12 @@
 //! v1 encoding is frozen: stores written by older code stay loadable
 //! byte-for-byte (pinned by a golden test in `tests/gofs_roundtrip.rs`).
 
-use anyhow::{anyhow, bail, ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::graph::csr::Graph;
 use crate::util::codec::{Decoder, Encoder};
 
+use super::section::{self, SectionTable};
 use super::subgraph::{RemoteRef, Subgraph, SubgraphId};
 
 const MAGIC: &[u8; 4] = b"GFSL";
@@ -71,15 +72,7 @@ impl std::fmt::Display for SliceFormat {
     }
 }
 
-/// FNV-1a 64-bit checksum over a byte run.
-fn checksum(bytes: &[u8]) -> u64 {
-    let mut h = 0xcbf29ce484222325u64;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
-}
+use super::section::checksum;
 
 // ------------------------------------------------------------- v1 framing
 
@@ -145,107 +138,74 @@ fn section_name(id: u8) -> &'static str {
     }
 }
 
-/// v2 header: `MAGIC, version, kind, nsections`, then one 20-byte
-/// directory entry per section (`id u8, pad[3], len u64 LE, fnv u64
-/// LE`), then the section bodies back to back in directory order.
-const V2_HEADER_LEN: usize = 7;
-const V2_DIR_ENTRY_LEN: usize = 20;
-
+/// v2 framing is the shared sectioned-file layout ([`section`]): `MAGIC,
+/// version, kind, nsections`, then one 20-byte directory entry per
+/// section (`id u8, pad[3], len u64 LE, fnv u64 LE`), then the section
+/// bodies back to back in directory order.
 fn frame_v2(kind: u8, sections: &[(u8, Vec<u8>)]) -> Vec<u8> {
-    let body: usize = sections.iter().map(|(_, b)| b.len()).sum();
-    let mut out =
-        Vec::with_capacity(V2_HEADER_LEN + sections.len() * V2_DIR_ENTRY_LEN + body);
-    out.extend_from_slice(MAGIC);
-    out.push(VERSION_V2);
-    out.push(kind);
-    out.push(sections.len() as u8);
-    for (id, body) in sections {
-        out.push(*id);
-        out.extend_from_slice(&[0u8; 3]);
-        out.extend_from_slice(&(body.len() as u64).to_le_bytes());
-        out.extend_from_slice(&checksum(body).to_le_bytes());
-    }
-    for (_, body) in sections {
-        out.extend_from_slice(body);
-    }
-    out
-}
-
-/// Parsed (but not yet checksum-validated) v2 section table.
-struct SectionTable<'a> {
-    entries: Vec<(u8, &'a [u8], u64)>,
-}
-
-impl<'a> SectionTable<'a> {
-    /// Fetch one section, validating *only its own* checksum — untouched
-    /// sections are never checksummed (the skip-what-you-don't-read
-    /// property of the v2 layout).
-    fn get(&self, id: u8) -> Result<&'a [u8]> {
-        let &(_, body, sum) = self
-            .entries
-            .iter()
-            .find(|(i, _, _)| *i == id)
-            .ok_or_else(|| anyhow!("slice missing section `{}`", section_name(id)))?;
-        ensure!(
-            checksum(body) == sum,
-            "slice section `{}` corrupt (checksum mismatch)",
-            section_name(id)
-        );
-        Ok(body)
-    }
+    section::frame(MAGIC, VERSION_V2, kind, sections)
 }
 
 fn unframe_v2(bytes: &[u8], want_kind: u8) -> Result<SectionTable<'_>> {
-    ensure!(bytes.len() >= V2_HEADER_LEN, "slice too short ({} bytes)", bytes.len());
-    ensure!(&bytes[..4] == MAGIC, "bad slice magic");
-    ensure!(bytes[4] == VERSION_V2, "unsupported slice version {}", bytes[4]);
-    ensure!(
-        bytes[5] == want_kind,
-        "wrong slice kind: want {want_kind}, got {}",
-        bytes[5]
-    );
-    let n = bytes[6] as usize;
-    let dir_end = V2_HEADER_LEN + n * V2_DIR_ENTRY_LEN;
-    ensure!(bytes.len() >= dir_end, "slice truncated inside section directory");
-    let mut entries = Vec::with_capacity(n);
-    let mut off = dir_end;
-    for s in 0..n {
-        let e = V2_HEADER_LEN + s * V2_DIR_ENTRY_LEN;
-        let id = bytes[e];
-        let len = u64::from_le_bytes(bytes[e + 4..e + 12].try_into().unwrap()) as usize;
-        let sum = u64::from_le_bytes(bytes[e + 12..e + 20].try_into().unwrap());
-        ensure!(
-            bytes.len() - off >= len,
-            "slice section `{}` truncated: directory says {len} bytes, {} remain",
-            section_name(id),
-            bytes.len() - off
-        );
-        entries.push((id, &bytes[off..off + len], sum));
-        off += len;
-    }
-    ensure!(
-        off == bytes.len(),
-        "slice has {} trailing bytes after last section",
-        bytes.len() - off
-    );
-    Ok(SectionTable { entries })
+    section::unframe(bytes, MAGIC, VERSION_V2, want_kind, section_name)
 }
 
 /// Section layout of a v2 slice: `(name, byte range)` per directory
 /// entry, in file order. Test/tooling surface (per-section corruption
 /// drills, layout dumps).
 pub fn section_ranges(bytes: &[u8]) -> Result<Vec<(&'static str, std::ops::Range<usize>)>> {
-    ensure!(bytes.len() >= V2_HEADER_LEN, "slice too short");
+    ensure!(bytes.len() >= section::HEADER_LEN, "slice too short");
     ensure!(&bytes[..4] == MAGIC, "bad slice magic");
     ensure!(bytes[4] == VERSION_V2, "not a v2 slice (version {})", bytes[4]);
-    let table = unframe_v2(bytes, bytes[5])?;
-    let mut off = V2_HEADER_LEN + table.entries.len() * V2_DIR_ENTRY_LEN;
-    let mut out = Vec::with_capacity(table.entries.len());
-    for (id, body, _) in &table.entries {
-        out.push((section_name(*id), off..off + body.len()));
-        off += body.len();
+    Ok(unframe_v2(bytes, bytes[5])?.ranges())
+}
+
+/// What a slice file must contain, derived from its filename (the
+/// scrubber's expectation — the kind byte is the one header byte no
+/// checksum covers, so it is validated against the layout, exactly as
+/// the checkpoint scrubber does).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SliceKind {
+    Topology,
+    Attribute,
+}
+
+/// Full checksum scrub of a slice of either format: `(section name,
+/// clean?)` per section — `[("payload", _)]` for the whole-payload v1
+/// framing. Structural damage (bad magic, truncation, a kind byte that
+/// contradicts `want`) is an `Err`; bit rot inside an intact structure
+/// is a `false` entry. Feeds the `store verify` CLI subcommand.
+pub fn scrub(bytes: &[u8], want: SliceKind) -> Result<Vec<(&'static str, bool)>> {
+    let want_kind = match want {
+        SliceKind::Topology => KIND_TOPOLOGY,
+        SliceKind::Attribute => KIND_ATTRIBUTE,
+    };
+    ensure!(bytes.len() >= 6, "slice too short ({} bytes)", bytes.len());
+    ensure!(&bytes[..4] == MAGIC, "bad slice magic");
+    match bytes[4] {
+        VERSION_V1 => {
+            ensure!(
+                bytes[5] == want_kind,
+                "wrong slice kind: want {want_kind}, got {}",
+                bytes[5]
+            );
+            let mut d = Decoder::new(&bytes[6..]);
+            let len = d.get_varint()? as usize;
+            let sum = d.get_varint()?;
+            let consumed = bytes.len() - 6 - d.remaining();
+            let payload = &bytes[6 + consumed..];
+            ensure!(
+                payload.len() == len,
+                "slice payload truncated: header says {len}, have {}",
+                payload.len()
+            );
+            Ok(vec![("payload", checksum(payload) == sum)])
+        }
+        VERSION_V2 => {
+            Ok(unframe_v2(bytes, want_kind)?.scrub())
+        }
+        v => bail!("unsupported slice version {v}"),
     }
-    Ok(out)
 }
 
 // -------------------------------------------- fixed-width column helpers
@@ -870,7 +830,7 @@ mod tests {
         let bytes = encode_topology(sg, SliceFormat::V2);
         let sections = section_ranges(&bytes).unwrap();
         // Directory order, contiguous, ending at EOF.
-        let mut pos = V2_HEADER_LEN + sections.len() * V2_DIR_ENTRY_LEN;
+        let mut pos = section::HEADER_LEN + sections.len() * section::DIR_ENTRY_LEN;
         for (_, r) in &sections {
             assert_eq!(r.start, pos);
             pos = r.end;
@@ -878,5 +838,48 @@ mod tests {
         assert_eq!(pos, bytes.len());
         // v1 slices are not sectioned.
         assert!(section_ranges(&encode_topology(sg, SliceFormat::V1)).is_err());
+    }
+
+    #[test]
+    fn scrub_reports_corruption_by_section_in_both_formats() {
+        let sg = &sample_subgraphs(true)[0];
+        // Clean files scrub clean.
+        for fmt in BOTH {
+            let bytes = encode_topology(sg, fmt);
+            let report = scrub(&bytes, SliceKind::Topology).unwrap();
+            assert!(!report.is_empty());
+            assert!(report.iter().all(|(_, ok)| *ok), "{fmt}: {report:?}");
+        }
+        // v1: any payload flip lands on the single "payload" entry.
+        let mut v1 = encode_topology(sg, SliceFormat::V1);
+        let mid = v1.len() - 3;
+        v1[mid] ^= 0x55;
+        assert_eq!(
+            scrub(&v1, SliceKind::Topology).unwrap(),
+            vec![("payload", false)]
+        );
+        // v2: a flip in `targets` dirties exactly that section.
+        let v2 = encode_topology(sg, SliceFormat::V2);
+        let ranges = section_ranges(&v2).unwrap();
+        let (name, r) = ranges
+            .iter()
+            .find(|(n, r)| *n == "targets" && !r.is_empty())
+            .expect("targets section present")
+            .clone();
+        let mut bad = v2.clone();
+        bad[r.start + r.len() / 2] ^= 0x55;
+        let report = scrub(&bad, SliceKind::Topology).unwrap();
+        for (n, ok) in &report {
+            assert_eq!(*ok, *n != name, "section {n}");
+        }
+        // Structural damage is an error, not a report…
+        assert!(scrub(&v2[..5], SliceKind::Topology).is_err());
+        // …and so is a rotted kind byte — the one header byte no
+        // section checksum covers (the loader would reject it too).
+        for fmt in BOTH {
+            let mut bytes = encode_topology(sg, fmt);
+            bytes[5] = 1; // claims to be an attribute slice
+            assert!(scrub(&bytes, SliceKind::Topology).is_err(), "{fmt}");
+        }
     }
 }

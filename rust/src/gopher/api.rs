@@ -24,6 +24,7 @@ use std::collections::BTreeMap;
 
 use anyhow::Result;
 
+use crate::ckpt::StateCodec;
 use crate::coordinator::{Aggregators, AggregatorSpec};
 use crate::gofs::{Subgraph, SubgraphId};
 use crate::graph::VertexId;
@@ -226,9 +227,14 @@ impl<'a, M: Clone> SubgraphContext<'a, M> {
 
 /// A sub-graph centric program. `State` persists across supersteps (the
 /// paper's "the method is stateful for each sub-graph").
+///
+/// `State: StateCodec` is the fault-tolerance contract: it is what lets
+/// the default [`SubgraphProgram::save_state`] /
+/// [`SubgraphProgram::restore_state`] hooks checkpoint any value-only
+/// state with zero per-program code (see [`crate::ckpt`]).
 pub trait SubgraphProgram: Sync {
     type Msg: MsgCodec + Clone + Send + Sync + 'static;
-    type State: Send + 'static;
+    type State: StateCodec + Send + 'static;
 
     /// Build the initial per-sub-graph state (before superstep 1).
     fn init(&self, sg: &Subgraph) -> Self::State;
@@ -268,6 +274,28 @@ pub trait SubgraphProgram: Sync {
     /// program out of per-vertex output.
     fn emit(&self, _state: &Self::State, _sg: &Subgraph) -> Vec<(VertexId, f64)> {
         Vec::new()
+    }
+
+    /// Serialize one sub-graph's state into a checkpoint
+    /// ([`crate::ckpt`]); called at the barrier for every local
+    /// sub-graph when checkpointing is on. The default encodes the
+    /// whole state via its [`StateCodec`] impl — sufficient for
+    /// value-only algorithms. Override (with
+    /// [`SubgraphProgram::restore_state`]) to persist less, e.g. when
+    /// part of the state is rebuildable from topology.
+    fn save_state(&self, state: &Self::State, e: &mut Encoder) {
+        state.encode_state(e)
+    }
+
+    /// Rebuild one sub-graph's state from a checkpoint. Must consume
+    /// exactly the bytes the matching [`SubgraphProgram::save_state`]
+    /// wrote, and must reproduce the state *bit-exactly* (recovery
+    /// parity is a byte-identical-output guarantee). The default decodes
+    /// via [`StateCodec`]; programs whose state embeds derived machinery
+    /// (e.g. PageRank's registered XLA adjacency block) override this
+    /// and reconstruct that part from `sg`.
+    fn restore_state(&self, _sg: &Subgraph, d: &mut Decoder) -> Result<Self::State> {
+        Self::State::decode_state(d)
     }
 }
 

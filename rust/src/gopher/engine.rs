@@ -34,13 +34,14 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::ckpt::{self, InboxEntry, WorkerResume};
 use crate::coordinator::{Aggregators, Coordinator};
 use crate::gofs::{
     AttrProjection, DistributedGraph, LoadOptions, LoadStats, PartitionAttributes,
     Store, Subgraph, SubgraphId,
 };
 use crate::graph::VertexId;
-use crate::metrics::{JobMetrics, SuperstepMetrics};
+use crate::metrics::{CheckpointMetrics, JobMetrics, SuperstepMetrics};
 use crate::util::codec::{Decoder, Encoder};
 use crate::util::pool;
 
@@ -67,6 +68,16 @@ pub struct GopherConfig {
     /// slices each worker loads alongside its topology (paper §4.1's
     /// "only loads the slice it needs"). Ignored for in-memory sources.
     pub load_attributes: AttrProjection,
+    /// Barrier-synchronous checkpointing: every `every` supersteps each
+    /// worker snapshots its states/halted-flags/in-flight queues and the
+    /// manager commits the epoch (see [`crate::ckpt`]).
+    pub checkpoint: Option<ckpt::CheckpointConfig>,
+    /// Restart after a committed epoch instead of superstep 1. The run
+    /// must use the same source/partitioning as the checkpointed one.
+    pub resume: Option<ckpt::ResumePoint>,
+    /// Failure-injection testing hook: the named worker aborts at the
+    /// start of the named superstep.
+    pub fail_at: Option<ckpt::FailPoint>,
 }
 
 impl Default for GopherConfig {
@@ -78,6 +89,9 @@ impl Default for GopherConfig {
             batch_flush_bytes: 256 << 10,
             combiners: true,
             load_attributes: AttrProjection::None,
+            checkpoint: None,
+            resume: None,
+            fail_at: None,
         }
     }
 }
@@ -98,11 +112,18 @@ pub struct RunResult<S> {
 const TAG_BATCH: u8 = 0;
 const TAG_EOS: u8 = 1;
 
+/// Batch frames carry the sending worker's id so receivers can stably
+/// sort their inboxes by sender before compute — per-sender order is
+/// FIFO on every fabric, so the sort makes delivery order (and thus
+/// floating-point fold order) deterministic across runs. Deterministic
+/// replay is what makes checkpoint recovery parity byte-exact.
 fn encode_batch<M: MsgCodec>(
+    sender: u32,
     envelopes: &[(u32, Option<u32>, M)],
 ) -> Vec<u8> {
     let mut e = Encoder::with_capacity(8 + envelopes.len() * 8);
     e.put_u8(TAG_BATCH);
+    e.put_varint(sender as u64);
     e.put_varint(envelopes.len() as u64);
     for (sg_index, vertex, payload) in envelopes {
         e.put_varint(*sg_index as u64);
@@ -118,14 +139,15 @@ fn encode_batch<M: MsgCodec>(
     e.into_bytes()
 }
 
-fn decode_batch<M: MsgCodec>(
-    bytes: &[u8],
-) -> Result<Vec<(u32, IncomingMessage<M>)>> {
+type DecodedBatch<M> = (u32, Vec<(u32, Option<u32>, M)>);
+
+fn decode_batch<M: MsgCodec>(bytes: &[u8]) -> Result<DecodedBatch<M>> {
     let mut d = Decoder::new(bytes);
     let tag = d.get_u8()?;
     if tag != TAG_BATCH {
         bail!("expected batch frame, got tag {tag}");
     }
+    let sender = d.get_varint()? as u32;
     let n = d.get_varint()? as usize;
     let mut out = Vec::with_capacity(n);
     for _ in 0..n {
@@ -133,9 +155,9 @@ fn decode_batch<M: MsgCodec>(
         let has_vertex = d.get_u8()? != 0;
         let vertex = if has_vertex { Some(d.get_varint()? as u32) } else { None };
         let payload = M::decode(&mut d)?;
-        out.push((sg_index, IncomingMessage { vertex, payload }));
+        out.push((sg_index, vertex, payload));
     }
-    Ok(out)
+    Ok((sender, out))
 }
 
 fn eos_frame() -> Vec<u8> {
@@ -175,7 +197,8 @@ struct WorkerOutput<S> {
 
 struct WorkerSuperstep {
     /// Wall clock of this worker's whole superstep (compute + route +
-    /// drain), measured worker-side so superstep 1 never includes load.
+    /// drain + checkpoint), measured worker-side so superstep 1 never
+    /// includes load.
     wall_seconds: f64,
     compute_seconds: f64,
     unit_times: Vec<f64>,
@@ -184,6 +207,10 @@ struct WorkerSuperstep {
     active_units: u64,
     /// Messages eliminated by the combiner before encoding.
     combined: u64,
+    /// Wall/bytes of this worker's checkpoint write (0 on supersteps
+    /// that did not checkpoint).
+    ckpt_seconds: f64,
+    ckpt_bytes: u64,
 }
 
 /// Worker entry point: runs the superstep loop; on error, unblocks peers
@@ -199,6 +226,8 @@ fn worker_body<P, F>(
     attrs: PartitionAttributes,
     load: LoadStats,
     directory: &[u32],
+    writer: Option<&ckpt::CheckpointWriter>,
+    resume: Option<WorkerResume>,
     sync_tx: Sender<WorkerSync>,
     cmd_rx: Receiver<ManagerCmd>,
 ) -> Result<WorkerOutput<P::State>>
@@ -208,7 +237,10 @@ where
 {
     let me = fabric.id();
     let k = fabric.num_workers();
-    match worker_loop(program, &fabric, cfg, aggs, subgraphs, &attrs, directory, &sync_tx, &cmd_rx) {
+    match worker_loop(
+        program, &fabric, cfg, aggs, subgraphs, &attrs, directory, writer, resume,
+        &sync_tx, &cmd_rx,
+    ) {
         Ok((states, emitted, per_superstep)) => {
             Ok(WorkerOutput { states, emitted, per_superstep, load })
         }
@@ -248,6 +280,8 @@ fn worker_loop<P, F>(
     subgraphs: Vec<Subgraph>,
     attrs: &PartitionAttributes,
     directory: &[u32],
+    writer: Option<&ckpt::CheckpointWriter>,
+    resume: Option<WorkerResume>,
     sync_tx: &Sender<WorkerSync>,
     cmd_rx: &Receiver<ManagerCmd>,
 ) -> Result<LoopOutput<P::State>>
@@ -259,21 +293,52 @@ where
     let k = fabric.num_workers();
     let n_local = subgraphs.len();
 
+    // Fresh start, or rebuild states/halted/queues from this worker's
+    // snapshot of the epoch being resumed.
+    type Rebuilt<S, M> = (Vec<S>, Vec<bool>, Vec<Vec<InboxEntry<M>>>, usize, Option<Vec<f64>>);
+    let (init_states, init_halted, init_inbox, start_superstep, init_globals): Rebuilt<
+        P::State,
+        P::Msg,
+    > = match resume {
+        Some(r) => {
+            let bytes = std::fs::read(&r.path)
+                .with_context(|| format!("read checkpoint {}", r.path.display()))?;
+            let snap = ckpt::decode_partition::<P::State, P::Msg, _>(
+                &bytes,
+                r.epoch,
+                me,
+                n_local,
+                |i, d| program.restore_state(&subgraphs[i], d),
+            )
+            .with_context(|| format!("decode checkpoint {}", r.path.display()))?;
+            (
+                snap.states,
+                snap.halted,
+                snap.inbox,
+                r.epoch as usize + 1,
+                Some(r.globals),
+            )
+        }
+        None => (
+            subgraphs.iter().map(|sg| program.init(sg)).collect(),
+            vec![false; n_local],
+            (0..n_local).map(|_| Vec::new()).collect(),
+            1,
+            None,
+        ),
+    };
+
     // Per-sub-graph mutable cells (pool jobs touch disjoint indices; the
     // mutexes are uncontended).
-    let states: Vec<Mutex<P::State>> = subgraphs
-        .iter()
-        .map(|sg| Mutex::new(program.init(sg)))
-        .collect();
-    let halted: Vec<AtomicBool> = (0..n_local).map(|_| AtomicBool::new(false)).collect();
-    let mut inbox: Vec<Vec<IncomingMessage<P::Msg>>> =
-        (0..n_local).map(|_| Vec::new()).collect();
+    let states: Vec<Mutex<P::State>> = init_states.into_iter().map(Mutex::new).collect();
+    let halted: Vec<AtomicBool> = init_halted.into_iter().map(AtomicBool::new).collect();
+    let mut inbox: Vec<Vec<InboxEntry<P::Msg>>> = init_inbox;
 
     let mut per_superstep = Vec::new();
-    let mut superstep = 1usize;
+    let mut superstep = start_superstep;
     // Folded global aggregator values from the previous superstep's
-    // barrier (None before the first barrier).
-    let mut agg_global: Option<Vec<f64>> = None;
+    // barrier (None before the first barrier; restored on resume).
+    let mut agg_global: Option<Vec<f64>> = init_globals;
     // Adaptive parallelism: when the previous superstep's compute was
     // negligible, thread fan-out costs more than it saves (CC/SSSP
     // supersteps after the first are sync-bound — the paper's §6.3
@@ -283,14 +348,32 @@ where
     let mut last_compute = f64::INFINITY;
 
     loop {
+        // Failure injection (testing hook): die exactly like a killed
+        // host — peers and the manager are unblocked by `worker_body`'s
+        // cleanup path, and the job aborts with this error.
+        if let Some(fp) = &cfg.fail_at {
+            if superstep == fp.superstep && me == fp.worker {
+                bail!("injected worker failure: worker {me} killed at superstep {superstep}");
+            }
+        }
         let t_step = Instant::now();
+        // Deliveries of the previous superstep, stably sorted by sending
+        // worker (see `encode_batch`): deterministic replay.
+        let queued: Vec<Vec<InboxEntry<P::Msg>>> =
+            std::mem::replace(&mut inbox, (0..n_local).map(|_| Vec::new()).collect());
+        let cur_inbox: Vec<Vec<IncomingMessage<P::Msg>>> = queued
+            .into_iter()
+            .map(|mut unit| {
+                unit.sort_by_key(|m| m.sender);
+                unit.into_iter()
+                    .map(|m| IncomingMessage { vertex: m.vertex, payload: m.payload })
+                    .collect()
+            })
+            .collect();
         // Active set: not halted, or has input messages (paper §4.2).
         let active: Vec<usize> = (0..n_local)
-            .filter(|&i| !halted[i].load(Ordering::Relaxed) || !inbox[i].is_empty())
+            .filter(|&i| !halted[i].load(Ordering::Relaxed) || !cur_inbox[i].is_empty())
             .collect();
-
-        let cur_inbox: Vec<Vec<IncomingMessage<P::Msg>>> =
-            std::mem::replace(&mut inbox, (0..n_local).map(|_| Vec::new()).collect());
 
         // ---- compute phase (thread pool over active sub-graphs)
         let cores = if last_compute < PARALLEL_THRESHOLD_SECONDS {
@@ -331,7 +414,7 @@ where
         let combine = |a: &P::Msg, b: &P::Msg| program.combine(a, b);
         let deliver = |p: usize,
                        batch: Vec<(u32, Option<u32>, P::Msg)>,
-                       inbox: &mut Vec<Vec<IncomingMessage<P::Msg>>>|
+                       inbox: &mut Vec<Vec<InboxEntry<P::Msg>>>|
          -> Result<u64> {
             if batch.is_empty() {
                 return Ok(0);
@@ -339,11 +422,11 @@ where
             if p as u32 == me {
                 // Self-delivery bypasses the fabric (but still counts).
                 for (sgi, vertex, payload) in batch {
-                    inbox[sgi as usize].push(IncomingMessage { vertex, payload });
+                    inbox[sgi as usize].push(InboxEntry { sender: me, vertex, payload });
                 }
                 return Ok(0);
             }
-            let frame = encode_batch(&batch);
+            let frame = encode_batch(me, &batch);
             let len = frame.len() as u64;
             fabric.send(p as u32, frame)?;
             Ok(len)
@@ -402,14 +485,46 @@ where
             match frame.first() {
                 Some(&TAG_EOS) => eos_seen += 1,
                 Some(&TAG_BATCH) => {
-                    for (sgi, msg) in decode_batch::<P::Msg>(&frame)? {
+                    let (sender, msgs) = decode_batch::<P::Msg>(&frame)?;
+                    for (sgi, vertex, payload) in msgs {
                         let slot = inbox
                             .get_mut(sgi as usize)
                             .with_context(|| format!("message for unknown sub-graph index {sgi} on worker {me}"))?;
-                        slot.push(msg);
+                        slot.push(InboxEntry { sender, vertex, payload });
                     }
                 }
                 other => bail!("bad frame tag {other:?}"),
+            }
+        }
+
+        // ---- checkpoint phase: snapshot this worker's barrier state
+        // (states after compute, halted votes, and the queues already
+        // drained for superstep+1) before reporting the sync. The
+        // manager commits the epoch once every worker synced cleanly.
+        let mut ckpt_seconds = 0.0;
+        let mut ckpt_bytes = 0u64;
+        if let (Some(w), Some(ck)) = (writer, cfg.checkpoint.as_ref()) {
+            if superstep % ck.every == 0 {
+                let t_ck = Instant::now();
+                // Snapshot the queues in their canonical (sender-sorted)
+                // order: arrival interleaving across peers is the one
+                // nondeterministic input left, and the consumer sorts
+                // anyway, so sorting here makes identical runs write
+                // identical snapshot bytes (stable sort keeps the
+                // per-sender FIFO intact).
+                for unit in &mut inbox {
+                    unit.sort_by_key(|m| m.sender);
+                }
+                let snapshot = ckpt::encode_partition(
+                    superstep as u64,
+                    me,
+                    n_local,
+                    |i, e| program.save_state(&states[i].lock().unwrap(), e),
+                    |i| halted[i].load(Ordering::Relaxed),
+                    &inbox,
+                );
+                ckpt_bytes = w.write_partition(superstep as u64, me, &snapshot)?;
+                ckpt_seconds = t_ck.elapsed().as_secs_f64();
             }
         }
 
@@ -421,6 +536,8 @@ where
             bytes: sent_bytes,
             active_units: active.len() as u64,
             combined,
+            ckpt_seconds,
+            ckpt_bytes,
         });
 
         // ---- sync with the manager
@@ -485,6 +602,20 @@ fn run_inner<P: SubgraphProgram>(
     // coordinator owned by the manager.
     let aggs = Aggregators::new(program.aggregators());
 
+    // Checkpoint plumbing (shared helpers — see ckpt::create_writer /
+    // ckpt::open_resume): one writer shared by workers + manager, and
+    // (on resume) the coordinator snapshot of the epoch being resumed.
+    let writer = match &cfg.checkpoint {
+        Some(ck) => Some(ckpt::create_writer(ck, cfg.resume.as_ref(), k as u32)?),
+        None => None,
+    };
+    let resume_coord: Option<(ckpt::CheckpointReader, ckpt::CoordSnapshot)> =
+        match &cfg.resume {
+            Some(rp) => Some(ckpt::open_resume(rp, k, aggs.len())?),
+            None => None,
+        };
+    let base_superstep = cfg.resume.as_ref().map(|r| r.epoch as usize).unwrap_or(0);
+
     let (sync_tx, sync_rx) = channel::<WorkerSync>();
     let mut cmd_txs: Vec<Sender<ManagerCmd>> = Vec::with_capacity(k);
     let mut cmd_rxs: Vec<Receiver<ManagerCmd>> = Vec::with_capacity(k);
@@ -508,12 +639,18 @@ fn run_inner<P: SubgraphProgram>(
         std::thread::scope(|scope| {
             // ---- workers
             let mut handles = Vec::with_capacity(k);
+            let writer_ref = writer.as_ref();
+            let resume_ref = resume_coord.as_ref();
             let mut spawn_worker = |p: usize, fab_any: FabricAny| {
                 let sync_tx = sync_tx.clone();
                 let cmd_rx = cmd_rxs.remove(0);
                 let source = &source;
                 let directory = &directory;
                 let aggs = &aggs;
+                // Per-worker resume instructions (this worker's snapshot
+                // file + the globals folded at the resumed barrier).
+                let worker_resume = resume_ref
+                    .map(|(reader, coord)| ckpt::worker_resume(reader, coord, p as u32));
                 handles.push(scope.spawn(move || -> Result<WorkerOutput<P::State>> {
                     let t_load = Instant::now();
                     let loaded = match source {
@@ -570,11 +707,11 @@ fn run_inner<P: SubgraphProgram>(
                     match fab_any {
                         FabricAny::InProc(f) => worker_body(
                             program, f, cfg, aggs, subgraphs, attrs, load, directory,
-                            sync_tx, cmd_rx,
+                            writer_ref, worker_resume, sync_tx, cmd_rx,
                         ),
                         FabricAny::Tcp(f) => worker_body(
                             program, f, cfg, aggs, subgraphs, attrs, load, directory,
-                            sync_tx, cmd_rx,
+                            writer_ref, worker_resume, sync_tx, cmd_rx,
                         ),
                     }
                 }));
@@ -598,12 +735,23 @@ fn run_inner<P: SubgraphProgram>(
             drop(sync_tx);
 
             // ---- manager loop (sync barrier + coordinator fold)
-            let mut coordinator = Coordinator::new(aggs.clone());
+            let mut coordinator = match resume_ref {
+                Some((_, coord)) => {
+                    Coordinator::with_history(aggs.clone(), coord.history.clone())
+                }
+                None => Coordinator::new(aggs.clone()),
+            };
+            let mut superstep = base_superstep;
+            let mut commit_err: Option<anyhow::Error> = None;
             loop {
                 let mut sent_total = 0u64;
                 let mut all_quiescent = true;
                 let mut any_failed = false;
-                let mut partials: Vec<Vec<f64>> = Vec::with_capacity(k);
+                // Indexed by worker id, so the global fold order is
+                // independent of sync arrival order (deterministic
+                // replay; arbitrary-order folds would round f64 sums
+                // differently run to run).
+                let mut partials: Vec<Vec<f64>> = vec![Vec::new(); k];
                 let mut seen = 0usize;
                 while seen < k {
                     match sync_rx.recv() {
@@ -611,7 +759,7 @@ fn run_inner<P: SubgraphProgram>(
                             sent_total += s.sent;
                             all_quiescent &= s.quiescent;
                             any_failed |= s.failed;
-                            partials.push(s.agg);
+                            partials[s.worker as usize] = s.agg;
                             seen += 1;
                         }
                         Err(_) => {
@@ -627,8 +775,27 @@ fn run_inner<P: SubgraphProgram>(
                         }
                     }
                 }
+                superstep += 1;
                 let globals = coordinator.fold_superstep(&partials);
-                let done = (all_quiescent && sent_total == 0) || any_failed;
+                // Commit the epoch before workers proceed
+                // (barrier-synchronous checkpointing): every worker
+                // wrote its snapshot before syncing, so a clean barrier
+                // means the epoch is complete.
+                if let (Some(w), Some(ck)) = (&writer, &cfg.checkpoint) {
+                    if superstep % ck.every == 0 && !any_failed {
+                        let coord_bytes = ckpt::encode_coordinator(
+                            superstep as u64,
+                            aggs.len(),
+                            coordinator.history(),
+                        );
+                        if let Err(e) = w.commit(superstep as u64, &coord_bytes) {
+                            commit_err = Some(e);
+                        }
+                    }
+                }
+                let done = (all_quiescent && sent_total == 0)
+                    || any_failed
+                    || commit_err.is_some();
                 for tx in &cmd_txs {
                     // A worker that already errored may have dropped its rx.
                     let _ = tx.send(if done {
@@ -651,6 +818,10 @@ fn run_inner<P: SubgraphProgram>(
                     Err(p) => std::panic::resume_unwind(p),
                 }
             }
+            if let Some(e) = commit_err {
+                // The writer's own context already names the epoch/file.
+                return Err(e);
+            }
             // Workers superstep in lockstep (the barrier), so every
             // output holds the same number of per-superstep records.
             let n_steps =
@@ -666,6 +837,8 @@ fn run_inner<P: SubgraphProgram>(
             };
             for s in 0..n_steps {
                 let mut sm = SuperstepMetrics::default();
+                let mut ck_seconds = 0.0f64;
+                let mut ck_bytes = 0u64;
                 for out in &outputs {
                     let ws = &out.per_superstep[s];
                     sm.partition_compute_seconds.push(ws.compute_seconds);
@@ -678,6 +851,17 @@ fn run_inner<P: SubgraphProgram>(
                     // (starts after load, so `makespan_seconds` never
                     // double-counts `load_seconds` — see metrics docs).
                     sm.wall_seconds = sm.wall_seconds.max(ws.wall_seconds);
+                    // Checkpoint wall = slowest worker's write (writes
+                    // run concurrently); bytes are summed.
+                    ck_seconds = ck_seconds.max(ws.ckpt_seconds);
+                    ck_bytes += ws.ckpt_bytes;
+                }
+                if ck_bytes > 0 {
+                    metrics.checkpoints.push(CheckpointMetrics {
+                        superstep: base_superstep + s + 1,
+                        seconds: ck_seconds,
+                        bytes: ck_bytes,
+                    });
                 }
                 metrics.compute_seconds += sm.wall_seconds;
                 metrics.supersteps.push(sm);

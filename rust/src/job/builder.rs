@@ -8,9 +8,11 @@
 //! API contract).
 
 use std::fmt;
+use std::path::PathBuf;
 
 use crate::algos::pagerank::RankKernel;
 use crate::algos::registry::{self, AlgoParams};
+use crate::ckpt;
 use crate::gopher::FabricKind;
 use crate::graph::VertexId;
 
@@ -53,6 +55,22 @@ pub enum JobError {
         engine: EngineKind,
         hint: &'static str,
     },
+    /// Inconsistent checkpointing knobs (e.g. a cadence without a
+    /// directory, or a zero cadence).
+    CheckpointConfig { reason: &'static str },
+    /// `resume_from` names a directory with no recoverable checkpoint:
+    /// missing/unreadable manifest, no committed epoch, or every
+    /// committed epoch failed checksum validation.
+    NoCheckpoint { dir: String, reason: String },
+    /// `resume_from` names a checkpoint written by a different job:
+    /// another algorithm/engine, or the same one with different
+    /// result-affecting parameters (source, supersteps, epsilon,
+    /// combiners, kernel, cores).
+    CheckpointMismatch {
+        dir: String,
+        expected: String,
+        found: String,
+    },
 }
 
 impl fmt::Display for JobError {
@@ -71,6 +89,18 @@ impl fmt::Display for JobError {
                 write!(
                     f,
                     "knob `{knob}` is not supported on the {engine} engine ({hint})"
+                )
+            }
+            JobError::CheckpointConfig { reason } => {
+                write!(f, "invalid checkpoint configuration: {reason}")
+            }
+            JobError::NoCheckpoint { dir, reason } => {
+                write!(f, "no recoverable checkpoint in {dir}: {reason}")
+            }
+            JobError::CheckpointMismatch { dir, expected, found } => {
+                write!(
+                    f,
+                    "checkpoint in {dir} belongs to job {found:?}, not {expected:?}"
                 )
             }
         }
@@ -94,6 +124,10 @@ pub struct JobBuilder {
     source_vertex: VertexId,
     kernel: RankKernel,
     load_attributes: Vec<String>,
+    checkpoint_every: Option<usize>,
+    checkpoint_dir: Option<PathBuf>,
+    resume_from: Option<PathBuf>,
+    kill_at: Option<ckpt::FailPoint>,
 }
 
 impl Default for JobBuilder {
@@ -110,6 +144,10 @@ impl Default for JobBuilder {
             source_vertex: 0,
             kernel: RankKernel::Scalar,
             load_attributes: Vec::new(),
+            checkpoint_every: None,
+            checkpoint_dir: None,
+            resume_from: None,
+            kill_at: None,
         }
     }
 }
@@ -190,6 +228,64 @@ impl JobBuilder {
         self
     }
 
+    /// Checkpoint every `n` supersteps into
+    /// [`JobBuilder::checkpoint_dir`] (or, when resuming, back into the
+    /// [`JobBuilder::resume_from`] directory). See [`crate::ckpt`] for
+    /// the epoch layout and commit semantics.
+    pub fn checkpoint_every(mut self, n: usize) -> Self {
+        self.checkpoint_every = Some(n);
+        self
+    }
+
+    /// Directory checkpoints are written to (requires
+    /// [`JobBuilder::checkpoint_every`]).
+    pub fn checkpoint_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.checkpoint_dir = Some(dir.into());
+        self
+    }
+
+    /// Resume from the latest *valid* committed epoch in a checkpoint
+    /// directory (corrupt epochs fall back to the previous one).
+    /// Validated at build time: a directory with no recoverable epoch
+    /// is [`JobError::NoCheckpoint`], one written by a different
+    /// algorithm/engine is [`JobError::CheckpointMismatch`]. The run
+    /// must use the same source and partitioning as the original.
+    pub fn resume_from(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.resume_from = Some(dir.into());
+        self
+    }
+
+    /// Failure-injection testing hook: kill `worker` at the start of
+    /// `superstep`, exactly like a crashed host — the job aborts with an
+    /// error, after which a `resume_from` run recovers it. Drives the
+    /// kill-and-resume recovery tests and the CLI `--kill-at` flag.
+    pub fn kill_at(mut self, superstep: usize, worker: u32) -> Self {
+        self.kill_at = Some(ckpt::FailPoint { superstep, worker });
+        self
+    }
+
+    /// The checkpoint-manifest identity of this job description: the
+    /// algorithm/engine plus every knob that can change results —
+    /// source vertex, iteration counts, epsilon, combiners, kernel, and
+    /// cores (the vertex engine's chunk layout follows it). Resume
+    /// refuses a directory whose label differs, so a checkpoint can
+    /// never silently answer for different parameters.
+    fn label(&self, algo: &str) -> String {
+        format!(
+            "{algo}/{} src={} ss={} eps={} comb={} kernel={} cores={}",
+            self.engine,
+            self.source_vertex,
+            self.supersteps,
+            self.epsilon.map_or("-".to_string(), |e| e.to_string()),
+            self.combiners.unwrap_or(true),
+            match self.kernel {
+                RankKernel::Scalar => "scalar",
+                RankKernel::Xla(_) => "xla",
+            },
+            self.cores,
+        )
+    }
+
     /// Validate the description against the registry and the engine
     /// compatibility matrix, producing a runnable [`Job`].
     pub fn build(self) -> Result<Job, JobError> {
@@ -230,6 +326,57 @@ impl JobBuilder {
                 });
             }
         }
+        // ---- fault-tolerance knobs (engine-agnostic, but validated up
+        // front like everything else: bad cadences, dangling dirs, and
+        // unrecoverable resume targets all fail here, not mid-run).
+        let label = self.label(entry.name);
+        if self.checkpoint_every == Some(0) {
+            return Err(JobError::CheckpointConfig {
+                reason: "checkpoint_every must be >= 1",
+            });
+        }
+        let checkpoint = match (self.checkpoint_every, &self.checkpoint_dir) {
+            (None, None) => None,
+            (None, Some(_)) => {
+                return Err(JobError::CheckpointConfig {
+                    reason: "checkpoint_dir without checkpoint_every does nothing; \
+                             set a cadence",
+                });
+            }
+            (Some(n), Some(dir)) => Some((n, dir.clone())),
+            // A resumed job keeps checkpointing into the directory it
+            // resumed from unless told otherwise.
+            (Some(n), None) => match &self.resume_from {
+                Some(dir) => Some((n, dir.clone())),
+                None => {
+                    return Err(JobError::CheckpointConfig {
+                        reason: "checkpoint_every needs checkpoint_dir (or resume_from \
+                                 to reuse that directory)",
+                    });
+                }
+            },
+        };
+        let resume = match &self.resume_from {
+            None => None,
+            Some(dir) => {
+                let dir_str = dir.display().to_string();
+                let reader = ckpt::CheckpointReader::open(dir).map_err(|e| {
+                    JobError::NoCheckpoint { dir: dir_str.clone(), reason: format!("{e:#}") }
+                })?;
+                let found = reader.manifest().label.clone();
+                if found != label {
+                    return Err(JobError::CheckpointMismatch {
+                        dir: dir_str,
+                        expected: label,
+                        found,
+                    });
+                }
+                let epoch = reader.latest_valid().map_err(|e| {
+                    JobError::NoCheckpoint { dir: dir_str.clone(), reason: format!("{e:#}") }
+                })?;
+                Some(ckpt::ResumePoint { dir: dir.clone(), epoch })
+            }
+        };
         Ok(Job {
             entry,
             engine: self.engine,
@@ -244,6 +391,10 @@ impl JobBuilder {
             combiners: self.combiners.unwrap_or(true),
             max_supersteps: self.max_supersteps,
             load_attributes: self.load_attributes,
+            label,
+            checkpoint,
+            resume,
+            fail_at: self.kill_at,
         })
     }
 }
@@ -331,6 +482,77 @@ mod tests {
             .combiners(false)
             .build()
             .is_ok());
+    }
+
+    #[test]
+    fn checkpoint_knobs_validated_at_build_time() {
+        // Cadence without a directory (and no resume dir to reuse).
+        let err = Job::builder().algo("cc").checkpoint_every(2).build().unwrap_err();
+        assert!(matches!(err, JobError::CheckpointConfig { .. }), "{err}");
+        // Directory without a cadence.
+        let err = Job::builder()
+            .algo("cc")
+            .checkpoint_dir("/tmp/nowhere")
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, JobError::CheckpointConfig { .. }), "{err}");
+        // Zero cadence.
+        let err = Job::builder()
+            .algo("cc")
+            .checkpoint_every(0)
+            .checkpoint_dir("/tmp/nowhere")
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, JobError::CheckpointConfig { .. }), "{err}");
+        // Consistent knobs build fine (no IO happens until run).
+        assert!(Job::builder()
+            .algo("cc")
+            .checkpoint_every(2)
+            .checkpoint_dir("/tmp/nowhere")
+            .build()
+            .is_ok());
+    }
+
+    #[test]
+    fn resume_from_missing_or_empty_dir_is_typed() {
+        // A directory that does not exist.
+        let err = Job::builder()
+            .algo("cc")
+            .resume_from("/nonexistent/ckpt")
+            .build()
+            .unwrap_err();
+        match &err {
+            JobError::NoCheckpoint { dir, .. } => {
+                assert!(dir.contains("/nonexistent/ckpt"))
+            }
+            other => panic!("wrong error: {other:?}"),
+        }
+        assert!(format!("{err}").contains("no recoverable checkpoint"));
+
+        // An initialized checkpoint dir with no committed epoch.
+        let dir = std::env::temp_dir()
+            .join("goffish_job_builder")
+            .join(format!("empty_ckpt_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cc_label = Job::builder().algo("cc").label("cc");
+        crate::ckpt::CheckpointWriter::create(&dir, &cc_label, 2, false).unwrap();
+        let err = Job::builder().algo("cc").resume_from(&dir).build().unwrap_err();
+        assert!(
+            matches!(&err, JobError::NoCheckpoint { reason, .. }
+                     if reason.contains("no committed epoch")),
+            "{err}"
+        );
+        // A different algorithm — or the same one with different
+        // result-affecting knobs — is a mismatch, not a silent resume.
+        let err = Job::builder().algo("sssp").resume_from(&dir).build().unwrap_err();
+        assert!(matches!(err, JobError::CheckpointMismatch { .. }), "{err}");
+        let err = Job::builder()
+            .algo("cc")
+            .source_vertex(5)
+            .resume_from(&dir)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, JobError::CheckpointMismatch { .. }), "{err}");
     }
 
     #[test]

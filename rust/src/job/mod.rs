@@ -45,6 +45,7 @@
 //! | `fabric` / `cores` / `max_supersteps` | ✓ | ✓ | — |
 //! | `supersteps` / `source_vertex` / `kernel` | ✓ | ✓ (kernel is Gopher-only at run time, ignored by vertex programs) | — |
 //! | `load_attributes(...)` | ✓ (store-backed loads read exactly the declared attribute slices) | ✗ (the baseline reassembles the whole graph) | [`JobError::IncompatibleKnob`] |
+//! | `checkpoint_every` / `checkpoint_dir` / `resume_from` | ✓ | ✓ | [`JobError::CheckpointConfig`] (inconsistent knobs), [`JobError::NoCheckpoint`] / [`JobError::CheckpointMismatch`] (bad resume target) |
 //!
 //! # Sources
 //!
@@ -73,6 +74,7 @@ pub use builder::{EngineKind, JobBuilder, JobError};
 use anyhow::Result;
 
 use crate::algos::registry::GopherTarget;
+use crate::ckpt;
 use crate::coordinator::AggregatorTrace;
 use crate::gofs::{self, AttrProjection, DistributedGraph, Store};
 use crate::gopher::{self, FabricKind, GopherConfig};
@@ -82,6 +84,7 @@ use crate::partition::{HashPartitioner, Partitioner};
 use crate::pregel::{self, PregelConfig, VertexProgram};
 
 /// The uniform result of any job, on any engine, from any source.
+#[derive(Debug)]
 pub struct JobOutput {
     /// Per-vertex result values from the program's `emit` hook, sorted
     /// by global vertex id. Empty only for programs that keep the
@@ -151,6 +154,14 @@ pub struct Job {
     pub(crate) combiners: bool,
     pub(crate) max_supersteps: usize,
     pub(crate) load_attributes: Vec<String>,
+    /// Job identity recorded in checkpoint manifests (`algo/engine`).
+    pub(crate) label: String,
+    /// `(every, dir)` from the builder's checkpoint knobs.
+    pub(crate) checkpoint: Option<(usize, std::path::PathBuf)>,
+    /// Resolved at build time (latest valid committed epoch).
+    pub(crate) resume: Option<ckpt::ResumePoint>,
+    /// Failure-injection testing hook.
+    pub(crate) fail_at: Option<ckpt::FailPoint>,
 }
 
 impl std::fmt::Debug for Job {
@@ -183,8 +194,30 @@ impl Job {
     }
 
     /// Execute against a source. The same built job can run against
-    /// several sources (it holds no per-run state).
+    /// several sources (it holds no per-run state; a resumed job
+    /// re-resolves its epoch at each run, since an earlier run of this
+    /// same job may have committed past — and pruned — the epoch
+    /// resolved at build time).
     pub fn run(&self, source: JobSource<'_>) -> Result<JobOutput> {
+        let checkpoint = self.checkpoint.as_ref().map(|(every, dir)| {
+            ckpt::CheckpointConfig {
+                every: *every,
+                dir: dir.clone(),
+                label: self.label.clone(),
+            }
+        });
+        let resume = match &self.resume {
+            None => None,
+            Some(rp) => {
+                let reader = ckpt::CheckpointReader::open(&rp.dir)?;
+                let epoch = if reader.manifest().epochs.contains(&rp.epoch) {
+                    rp.epoch
+                } else {
+                    reader.latest_valid()?
+                };
+                Some(ckpt::ResumePoint { dir: rp.dir.clone(), epoch })
+            }
+        };
         match self.engine {
             EngineKind::Gopher => {
                 let cfg = GopherConfig {
@@ -197,6 +230,9 @@ impl Job {
                     } else {
                         AttrProjection::Only(self.load_attributes.clone())
                     },
+                    checkpoint,
+                    resume,
+                    fail_at: self.fail_at,
                     ..Default::default()
                 };
                 let run = self.entry.gopher.expect("validated at build time");
@@ -219,6 +255,9 @@ impl Job {
                     cores_per_worker: self.cores,
                     fabric: self.fabric,
                     max_supersteps: self.max_supersteps,
+                    checkpoint,
+                    resume,
+                    fail_at: self.fail_at,
                     ..Default::default()
                 };
                 let run = self.entry.vertex.expect("validated at build time");

@@ -25,6 +25,7 @@ pub mod util;
 pub mod graph;
 pub mod partition;
 pub mod gofs;
+pub mod ckpt;
 pub mod coordinator;
 pub mod gopher;
 pub mod pregel;

@@ -51,10 +51,33 @@ impl SuperstepMetrics {
     }
 }
 
+/// One committed checkpoint epoch's cost (fault-tolerance subsystem,
+/// `crate::ckpt`).
+#[derive(Clone, Debug, Default)]
+pub struct CheckpointMetrics {
+    /// Absolute superstep the epoch snapshots (resumed runs keep
+    /// counting from the restored superstep).
+    pub superstep: usize,
+    /// Wall clock of the slowest worker's snapshot write (workers write
+    /// concurrently at the barrier, so the slowest gates the superstep).
+    pub seconds: f64,
+    /// Snapshot bytes written across all workers.
+    pub bytes: u64,
+}
+
 /// Metrics for a whole job.
+///
+/// On a resumed run (`Job::builder().resume_from(...)`), `supersteps`
+/// and `checkpoints` cover only the supersteps executed *after* the
+/// restart, while `aggregators` traces are restored from the checkpoint
+/// and cover the whole logical run — that is what makes a resumed job's
+/// `JobOutput` comparable to an uninterrupted one.
 #[derive(Clone, Debug, Default)]
 pub struct JobMetrics {
     pub supersteps: Vec<SuperstepMetrics>,
+    /// Per-epoch checkpoint wall/bytes traces, one entry per superstep
+    /// that checkpointed (empty when checkpointing is off).
+    pub checkpoints: Vec<CheckpointMetrics>,
     /// Time loading the graph from storage into memory objects (Fig 4b).
     pub load_seconds: f64,
     /// Bytes read at load.
@@ -105,9 +128,20 @@ impl JobMetrics {
         self.aggregators.iter().find(|t| t.name == name)
     }
 
+    /// Total wall clock spent writing checkpoints (sum over epochs of
+    /// the slowest worker's write).
+    pub fn checkpoint_seconds(&self) -> f64 {
+        self.checkpoints.iter().map(|c| c.seconds).sum()
+    }
+
+    /// Total checkpoint bytes written across all epochs and workers.
+    pub fn checkpoint_bytes(&self) -> u64 {
+        self.checkpoints.iter().map(|c| c.bytes).sum()
+    }
+
     /// One-line report used by examples and benches.
     pub fn report(&self, label: &str) -> String {
-        format!(
+        let mut line = format!(
             "{label}: makespan={:.4}s (load={:.4}s compute={:.4}s) supersteps={} \
              msgs={} bytes={} combined={}",
             self.makespan_seconds(),
@@ -117,7 +151,16 @@ impl JobMetrics {
             self.total_messages(),
             self.total_bytes(),
             self.total_combined(),
-        )
+        );
+        if !self.checkpoints.is_empty() {
+            line.push_str(&format!(
+                " ckpt[{} epochs {:.4}s {}B]",
+                self.checkpoints.len(),
+                self.checkpoint_seconds(),
+                self.checkpoint_bytes(),
+            ));
+        }
+        line
     }
 }
 
@@ -192,5 +235,23 @@ mod tests {
         let r = m.report("cc/rn");
         assert!(r.contains("cc/rn"));
         assert!(r.contains("supersteps=0"));
+        // No checkpointing → no ckpt clause.
+        assert!(!r.contains("ckpt["));
+    }
+
+    #[test]
+    fn checkpoint_traces_aggregate_and_report() {
+        let m = JobMetrics {
+            checkpoints: vec![
+                CheckpointMetrics { superstep: 2, seconds: 0.25, bytes: 100 },
+                CheckpointMetrics { superstep: 4, seconds: 0.5, bytes: 300 },
+            ],
+            ..Default::default()
+        };
+        assert!((m.checkpoint_seconds() - 0.75).abs() < 1e-12);
+        assert_eq!(m.checkpoint_bytes(), 400);
+        let r = m.report("cc");
+        assert!(r.contains("ckpt[2 epochs"), "{r}");
+        assert!(r.contains("400B"), "{r}");
     }
 }

@@ -7,9 +7,13 @@
 //! Gopher uses), define message combiners, and emit per-vertex result
 //! values ([`VertexProgram::emit`]) for `JobOutput::values`.
 
+use anyhow::Result;
+
+use crate::ckpt::StateCodec;
 use crate::coordinator::{AggregatorSpec, Aggregators};
 use crate::gopher::api::MsgCodec;
 use crate::graph::csr::{Graph, VertexId};
+use crate::util::codec::{Decoder, Encoder};
 
 /// Per-(vertex, superstep) execution context.
 pub struct VertexContext<'a, M> {
@@ -136,9 +140,14 @@ impl<'a, M: Clone> VertexContext<'a, M> {
 }
 
 /// A vertex-centric program.
+///
+/// `Value: StateCodec` is the fault-tolerance contract shared with the
+/// Gopher surface: the default [`VertexProgram::save_state`] /
+/// [`VertexProgram::restore_state`] hooks checkpoint any value-only
+/// vertex state with zero per-program code (see [`crate::ckpt`]).
 pub trait VertexProgram: Sync {
     type Msg: MsgCodec + Clone + Send + Sync + 'static;
-    type Value: Clone + Send + 'static;
+    type Value: StateCodec + Clone + Send + 'static;
 
     /// Initial vertex value (before superstep 1).
     fn init(&self, vertex: VertexId, graph: &Graph) -> Self::Value;
@@ -171,6 +180,24 @@ pub trait VertexProgram: Sync {
     /// default (empty) opts the program out of per-vertex output.
     fn emit(&self, _vertex: VertexId, _value: &Self::Value) -> Vec<(VertexId, f64)> {
         Vec::new()
+    }
+
+    /// Serialize one vertex's value into a checkpoint
+    /// ([`crate::ckpt`]). Default: the value's [`StateCodec`] encoding.
+    fn save_state(&self, value: &Self::Value, e: &mut Encoder) {
+        value.encode_state(e)
+    }
+
+    /// Rebuild one vertex's value from a checkpoint; must consume
+    /// exactly what [`VertexProgram::save_state`] wrote and reproduce
+    /// the value bit-exactly (the recovery-parity contract).
+    fn restore_state(
+        &self,
+        _vertex: VertexId,
+        _graph: &Graph,
+        d: &mut Decoder,
+    ) -> Result<Self::Value> {
+        Self::Value::decode_state(d)
     }
 }
 

@@ -25,9 +25,10 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::ckpt::{self, InboxEntry, WorkerResume};
 use crate::coordinator::{Aggregators, Coordinator};
 use crate::graph::csr::{Graph, VertexId};
-use crate::metrics::{JobMetrics, SuperstepMetrics};
+use crate::metrics::{CheckpointMetrics, JobMetrics, SuperstepMetrics};
 use crate::partition::Partitioning;
 use crate::util::codec::{Decoder, Encoder};
 use crate::util::pool;
@@ -45,6 +46,15 @@ pub struct PregelConfig {
     /// Simulated load time charged to metrics (the HDFS side of Fig 4b is
     /// modelled by `sim::disk`; the engine itself loads from memory).
     pub load_seconds: f64,
+    /// Barrier-synchronous checkpointing (see [`crate::ckpt`] and the
+    /// matching knob on `gopher::GopherConfig`).
+    pub checkpoint: Option<ckpt::CheckpointConfig>,
+    /// Restart after a committed epoch instead of superstep 1. The run
+    /// must use the same graph/partitioning as the checkpointed one.
+    pub resume: Option<ckpt::ResumePoint>,
+    /// Failure-injection testing hook: the named worker aborts at the
+    /// start of the named superstep.
+    pub fail_at: Option<ckpt::FailPoint>,
 }
 
 impl Default for PregelConfig {
@@ -54,6 +64,9 @@ impl Default for PregelConfig {
             fabric: FabricKind::InProc,
             max_supersteps: 10_000,
             load_seconds: 0.0,
+            checkpoint: None,
+            resume: None,
+            fail_at: None,
         }
     }
 }
@@ -68,9 +81,14 @@ pub struct VertexRunResult<V> {
 const TAG_BATCH: u8 = 0;
 const TAG_EOS: u8 = 1;
 
-fn encode_batch<M: MsgCodec>(msgs: &[(VertexId, M)]) -> Vec<u8> {
+/// Batch frames carry the sending worker's id (see `gopher::engine`'s
+/// wire-format notes): receivers stably sort per-vertex inboxes by
+/// sender before compute, making delivery — and floating-point fold —
+/// order deterministic across runs (the recovery-parity requirement).
+fn encode_batch<M: MsgCodec>(sender: u32, msgs: &[(VertexId, M)]) -> Vec<u8> {
     let mut e = Encoder::with_capacity(8 + msgs.len() * 6);
     e.put_u8(TAG_BATCH);
+    e.put_varint(sender as u64);
     e.put_varint(msgs.len() as u64);
     for (v, m) in msgs {
         e.put_varint(*v as u64);
@@ -79,22 +97,24 @@ fn encode_batch<M: MsgCodec>(msgs: &[(VertexId, M)]) -> Vec<u8> {
     e.into_bytes()
 }
 
-fn decode_batch<M: MsgCodec>(bytes: &[u8]) -> Result<Vec<(VertexId, M)>> {
+fn decode_batch<M: MsgCodec>(bytes: &[u8]) -> Result<(u32, Vec<(VertexId, M)>)> {
     let mut d = Decoder::new(bytes);
     let tag = d.get_u8()?;
     if tag != TAG_BATCH {
         bail!("expected batch frame, got tag {tag}");
     }
+    let sender = d.get_varint()? as u32;
     let n = d.get_varint()? as usize;
     let mut out = Vec::with_capacity(n);
     for _ in 0..n {
         let v = d.get_varint()? as u32;
         out.push((v, M::decode(&mut d)?));
     }
-    Ok(out)
+    Ok((sender, out))
 }
 
 struct WorkerSync {
+    worker: u32,
     sent: u64,
     quiescent: bool,
     /// Worker failed: manager must abort the job after this superstep.
@@ -111,7 +131,8 @@ enum ManagerCmd {
 
 struct WorkerSuperstep {
     /// Wall clock of this worker's whole superstep (compute + route +
-    /// drain), measured worker-side so superstep 1 never includes load.
+    /// drain + checkpoint), measured worker-side so superstep 1 never
+    /// includes load.
     wall_seconds: f64,
     compute_seconds: f64,
     unit_times: Vec<f64>,
@@ -120,6 +141,10 @@ struct WorkerSuperstep {
     active_units: u64,
     /// Messages eliminated by the combiner before encoding.
     combined: u64,
+    /// Wall/bytes of this worker's checkpoint write (0 on supersteps
+    /// that did not checkpoint).
+    ckpt_seconds: f64,
+    ckpt_bytes: u64,
 }
 
 struct WorkerOutput<V> {
@@ -139,6 +164,8 @@ fn worker_body<P, F>(
     graph: &Graph,
     parts: &Partitioning,
     my_vertices: Vec<VertexId>,
+    writer: Option<&ckpt::CheckpointWriter>,
+    resume: Option<WorkerResume>,
     sync_tx: Sender<WorkerSync>,
     cmd_rx: Receiver<ManagerCmd>,
 ) -> Result<WorkerOutput<P::Value>>
@@ -148,8 +175,10 @@ where
 {
     let me = fabric.id();
     let k = fabric.num_workers();
-    match worker_loop(program, &fabric, cfg, aggs, graph, parts, my_vertices, &sync_tx, &cmd_rx)
-    {
+    match worker_loop(
+        program, &fabric, cfg, aggs, graph, parts, my_vertices, writer, resume,
+        &sync_tx, &cmd_rx,
+    ) {
         Ok(out) => Ok(out),
         Err(e) => {
             for p in 0..k as u32 {
@@ -158,6 +187,7 @@ where
                 }
             }
             let _ = sync_tx.send(WorkerSync {
+                worker: me,
                 sent: 0,
                 quiescent: true,
                 failed: true,
@@ -178,6 +208,8 @@ fn worker_loop<P, F>(
     graph: &Graph,
     parts: &Partitioning,
     my_vertices: Vec<VertexId>,
+    writer: Option<&ckpt::CheckpointWriter>,
+    resume: Option<WorkerResume>,
     sync_tx: &Sender<WorkerSync>,
     cmd_rx: &Receiver<ManagerCmd>,
 ) -> Result<WorkerOutput<P::Value>>
@@ -194,30 +226,79 @@ where
         my_vertices.binary_search(&v).ok()
     };
 
-    let values: Vec<Mutex<P::Value>> = my_vertices
-        .iter()
-        .map(|&v| Mutex::new(program.init(v, graph)))
-        .collect();
-    let halted: Vec<AtomicBool> = (0..n_local).map(|_| AtomicBool::new(false)).collect();
-    let mut inbox: Vec<Vec<P::Msg>> = (0..n_local).map(|_| Vec::new()).collect();
+    // Fresh start, or rebuild values/halted/queues from this worker's
+    // snapshot of the epoch being resumed.
+    type Rebuilt<V, M> = (Vec<V>, Vec<bool>, Vec<Vec<InboxEntry<M>>>, usize, Option<Vec<f64>>);
+    let (init_values, init_halted, init_inbox, start_superstep, init_globals): Rebuilt<
+        P::Value,
+        P::Msg,
+    > = match resume {
+        Some(r) => {
+            let bytes = std::fs::read(&r.path)
+                .with_context(|| format!("read checkpoint {}", r.path.display()))?;
+            let snap = ckpt::decode_partition::<P::Value, P::Msg, _>(
+                &bytes,
+                r.epoch,
+                me,
+                n_local,
+                |i, d| program.restore_state(my_vertices[i], graph, d),
+            )
+            .with_context(|| format!("decode checkpoint {}", r.path.display()))?;
+            (
+                snap.states,
+                snap.halted,
+                snap.inbox,
+                r.epoch as usize + 1,
+                Some(r.globals),
+            )
+        }
+        None => (
+            my_vertices.iter().map(|&v| program.init(v, graph)).collect(),
+            vec![false; n_local],
+            (0..n_local).map(|_| Vec::new()).collect(),
+            1,
+            None,
+        ),
+    };
+
+    let values: Vec<Mutex<P::Value>> = init_values.into_iter().map(Mutex::new).collect();
+    let halted: Vec<AtomicBool> = init_halted.into_iter().map(AtomicBool::new).collect();
+    let mut inbox: Vec<Vec<InboxEntry<P::Msg>>> = init_inbox;
 
     let mut per_superstep = Vec::new();
-    let mut superstep = 1usize;
+    let mut superstep = start_superstep;
     // Folded global aggregator values from the previous superstep's
-    // barrier (None before the first barrier).
-    let mut agg_global: Option<Vec<f64>> = None;
+    // barrier (None before the first barrier; restored on resume).
+    let mut agg_global: Option<Vec<f64>> = init_globals;
     // Adaptive parallelism (see gopher::engine): skip thread fan-out when
     // the previous superstep's compute was negligible.
     const PARALLEL_THRESHOLD_SECONDS: f64 = 200e-6;
     let mut last_compute = f64::INFINITY;
 
     loop {
+        // Failure injection (testing hook): die exactly like a killed
+        // host — peers and the manager are unblocked by `worker_body`'s
+        // cleanup path, and the job aborts with this error.
+        if let Some(fp) = &cfg.fail_at {
+            if superstep == fp.superstep && me == fp.worker {
+                bail!("injected worker failure: worker {me} killed at superstep {superstep}");
+            }
+        }
         let t_step = Instant::now();
-        let active: Vec<usize> = (0..n_local)
-            .filter(|&i| !halted[i].load(Ordering::Relaxed) || !inbox[i].is_empty())
-            .collect();
-        let cur_inbox: Vec<Vec<P::Msg>> =
+        // Deliveries of the previous superstep, stably sorted by sending
+        // worker (see `encode_batch`): deterministic replay.
+        let queued: Vec<Vec<InboxEntry<P::Msg>>> =
             std::mem::replace(&mut inbox, (0..n_local).map(|_| Vec::new()).collect());
+        let cur_inbox: Vec<Vec<P::Msg>> = queued
+            .into_iter()
+            .map(|mut unit| {
+                unit.sort_by_key(|m| m.sender);
+                unit.into_iter().map(|m| m.payload).collect()
+            })
+            .collect();
+        let active: Vec<usize> = (0..n_local)
+            .filter(|&i| !halted[i].load(Ordering::Relaxed) || !cur_inbox[i].is_empty())
+            .collect();
 
         // ---- compute phase: chunked vertex-level parallelism
         let cores_now = if last_compute < PARALLEL_THRESHOLD_SECONDS {
@@ -225,7 +306,12 @@ where
         } else {
             cfg.cores_per_worker
         };
-        let n_chunks = cores_now.max(1).min(active.len().max(1));
+        // Chunk layout follows the *configured* core count, never the
+        // timing-adaptive `cores_now`: per-chunk aggregator pre-folds
+        // associate along chunk boundaries, so a timing-dependent
+        // layout would make f64 aggregator sums nondeterministic — a
+        // hole in recovery parity. Only the pool's thread count adapts.
+        let n_chunks = cfg.cores_per_worker.max(1).min(active.len().max(1));
         let chunk_size = active.len().div_ceil(n_chunks.max(1)).max(1);
         // Each chunk yields (outgoing messages, folded aggregator
         // contributions); both are harvested after the pool joins.
@@ -296,10 +382,10 @@ where
                 for (v, m) in buf.drain(..) {
                     let i = local_of(v)
                         .with_context(|| format!("message for non-local vertex {v}"))?;
-                    inbox[i].push(m);
+                    inbox[i].push(InboxEntry { sender: me, vertex: None, payload: m });
                 }
             } else {
-                let frame = encode_batch(buf);
+                let frame = encode_batch(me, buf);
                 sent_bytes += frame.len() as u64;
                 fabric.send(p as u32, frame)?;
                 buf.clear();
@@ -318,13 +404,40 @@ where
             match frame.first() {
                 Some(&TAG_EOS) => eos_seen += 1,
                 Some(&TAG_BATCH) => {
-                    for (v, m) in decode_batch::<P::Msg>(&frame)? {
+                    let (sender, msgs) = decode_batch::<P::Msg>(&frame)?;
+                    for (v, m) in msgs {
                         let i = local_of(v)
                             .with_context(|| format!("misrouted message for vertex {v}"))?;
-                        inbox[i].push(m);
+                        inbox[i].push(InboxEntry { sender, vertex: None, payload: m });
                     }
                 }
                 other => bail!("bad frame tag {other:?}"),
+            }
+        }
+
+        // ---- checkpoint phase (mirrors gopher::engine: snapshot before
+        // sync; the manager commits once every worker synced cleanly).
+        let mut ckpt_seconds = 0.0;
+        let mut ckpt_bytes = 0u64;
+        if let (Some(w), Some(ck)) = (writer, cfg.checkpoint.as_ref()) {
+            if superstep % ck.every == 0 {
+                let t_ck = Instant::now();
+                // Sender-sort the queues before encoding so identical
+                // runs write identical snapshot bytes (see
+                // gopher::engine; the consumer sorts anyway).
+                for unit in &mut inbox {
+                    unit.sort_by_key(|m| m.sender);
+                }
+                let snapshot = ckpt::encode_partition(
+                    superstep as u64,
+                    me,
+                    n_local,
+                    |i, e| program.save_state(&values[i].lock().unwrap(), e),
+                    |i| halted[i].load(Ordering::Relaxed),
+                    &inbox,
+                );
+                ckpt_bytes = w.write_partition(superstep as u64, me, &snapshot)?;
+                ckpt_seconds = t_ck.elapsed().as_secs_f64();
             }
         }
 
@@ -336,12 +449,15 @@ where
             bytes: sent_bytes,
             active_units: active.len() as u64,
             combined,
+            ckpt_seconds,
+            ckpt_bytes,
         });
 
         let quiescent = (0..n_local)
             .all(|i| halted[i].load(Ordering::Relaxed) && inbox[i].is_empty());
         sync_tx
             .send(WorkerSync {
+                worker: me,
                 sent: sent_msgs,
                 quiescent,
                 failed: false,
@@ -386,6 +502,18 @@ pub fn run<P: VertexProgram>(
     // coordinator owned by the manager (mirrors gopher::engine).
     let aggs = Aggregators::new(program.aggregators());
 
+    // Checkpoint plumbing (shared helpers, identical to gopher::engine).
+    let writer = match &cfg.checkpoint {
+        Some(ck) => Some(ckpt::create_writer(ck, cfg.resume.as_ref(), k as u32)?),
+        None => None,
+    };
+    let resume_coord: Option<(ckpt::CheckpointReader, ckpt::CoordSnapshot)> =
+        match &cfg.resume {
+            Some(rp) => Some(ckpt::open_resume(rp, k, aggs.len())?),
+            None => None,
+        };
+    let base_superstep = cfg.resume.as_ref().map(|r| r.epoch as usize).unwrap_or(0);
+
     let (sync_tx, sync_rx) = channel::<WorkerSync>();
     let mut cmd_txs = Vec::with_capacity(k);
     let mut cmd_rxs = Vec::with_capacity(k);
@@ -414,18 +542,22 @@ pub fn run<P: VertexProgram>(
                 Tcp(transport::TcpFabric),
             }
             let aggs_ref = &aggs;
+            let writer_ref = writer.as_ref();
+            let resume_ref = resume_coord.as_ref();
             let mut spawn_worker = |p: usize, fab: FabricAny| {
                 let sync_tx = sync_tx.clone();
                 let cmd_rx = cmd_rxs.remove(0);
                 let my_vertices = parts.vertices_of(p as u32);
+                let worker_resume = resume_ref
+                    .map(|(reader, coord)| ckpt::worker_resume(reader, coord, p as u32));
                 handles.push(scope.spawn(move || match fab {
                     FabricAny::InProc(f) => worker_body(
-                        program, f, cfg, aggs_ref, graph, parts, my_vertices, sync_tx,
-                        cmd_rx,
+                        program, f, cfg, aggs_ref, graph, parts, my_vertices,
+                        writer_ref, worker_resume, sync_tx, cmd_rx,
                     ),
                     FabricAny::Tcp(f) => worker_body(
-                        program, f, cfg, aggs_ref, graph, parts, my_vertices, sync_tx,
-                        cmd_rx,
+                        program, f, cfg, aggs_ref, graph, parts, my_vertices,
+                        writer_ref, worker_resume, sync_tx, cmd_rx,
                     ),
                 }));
             };
@@ -444,12 +576,21 @@ pub fn run<P: VertexProgram>(
             drop(sync_tx);
 
             // ---- manager loop (sync barrier + coordinator fold)
-            let mut coordinator = Coordinator::new(aggs.clone());
+            let mut coordinator = match resume_ref {
+                Some((_, coord)) => {
+                    Coordinator::with_history(aggs.clone(), coord.history.clone())
+                }
+                None => Coordinator::new(aggs.clone()),
+            };
+            let mut superstep = base_superstep;
+            let mut commit_err: Option<anyhow::Error> = None;
             loop {
                 let mut sent_total = 0u64;
                 let mut all_quiescent = true;
                 let mut any_failed = false;
-                let mut partials: Vec<Vec<f64>> = Vec::with_capacity(k);
+                // Worker-indexed partials: fold order independent of
+                // sync arrival order (deterministic replay).
+                let mut partials: Vec<Vec<f64>> = vec![Vec::new(); k];
                 let mut seen = 0usize;
                 while seen < k {
                     match sync_rx.recv() {
@@ -457,7 +598,7 @@ pub fn run<P: VertexProgram>(
                             sent_total += s.sent;
                             all_quiescent &= s.quiescent;
                             any_failed |= s.failed;
-                            partials.push(s.agg);
+                            partials[s.worker as usize] = s.agg;
                             seen += 1;
                         }
                         Err(_) => {
@@ -472,8 +613,24 @@ pub fn run<P: VertexProgram>(
                         }
                     }
                 }
+                superstep += 1;
                 let globals = coordinator.fold_superstep(&partials);
-                let done = (all_quiescent && sent_total == 0) || any_failed;
+                // Barrier-synchronous epoch commit (see gopher::engine).
+                if let (Some(w), Some(ck)) = (&writer, &cfg.checkpoint) {
+                    if superstep % ck.every == 0 && !any_failed {
+                        let coord_bytes = ckpt::encode_coordinator(
+                            superstep as u64,
+                            aggs.len(),
+                            coordinator.history(),
+                        );
+                        if let Err(e) = w.commit(superstep as u64, &coord_bytes) {
+                            commit_err = Some(e);
+                        }
+                    }
+                }
+                let done = (all_quiescent && sent_total == 0)
+                    || any_failed
+                    || commit_err.is_some();
                 for tx in &cmd_txs {
                     // A worker that already errored may have dropped its rx.
                     let _ = tx.send(if done {
@@ -494,6 +651,10 @@ pub fn run<P: VertexProgram>(
                     Ok(Err(e)) => return Err(e),
                     Err(p) => std::panic::resume_unwind(p),
                 }
+            }
+            if let Some(e) = commit_err {
+                // The writer's own context already names the epoch/file.
+                return Err(e);
             }
             Ok((outs, coordinator.into_traces()))
         });
@@ -519,6 +680,8 @@ pub fn run<P: VertexProgram>(
     let n_steps = outputs.first().map(|o| o.per_superstep.len()).unwrap_or(0);
     for s in 0..n_steps {
         let mut sm = SuperstepMetrics::default();
+        let mut ck_seconds = 0.0f64;
+        let mut ck_bytes = 0u64;
         for out in &outputs {
             let ws = &out.per_superstep[s];
             sm.partition_compute_seconds.push(ws.compute_seconds);
@@ -529,6 +692,15 @@ pub fn run<P: VertexProgram>(
             sm.combined_messages += ws.combined;
             // Slowest worker's own superstep clock (see metrics docs).
             sm.wall_seconds = sm.wall_seconds.max(ws.wall_seconds);
+            ck_seconds = ck_seconds.max(ws.ckpt_seconds);
+            ck_bytes += ws.ckpt_bytes;
+        }
+        if ck_bytes > 0 {
+            metrics.checkpoints.push(CheckpointMetrics {
+                superstep: base_superstep + s + 1,
+                seconds: ck_seconds,
+                bytes: ck_bytes,
+            });
         }
         metrics.compute_seconds += sm.wall_seconds;
         metrics.supersteps.push(sm);

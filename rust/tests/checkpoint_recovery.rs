@@ -1,0 +1,339 @@
+//! Fault-tolerance acceptance tests: superstep checkpoints + rollback
+//! recovery must be *exact*.
+//!
+//! The contract under test (the `crate::ckpt` subsystem threaded
+//! through both engines): a job killed at superstep `k` and resumed
+//! from its latest committed checkpoint returns a `JobOutput` —
+//! per-vertex values **and** aggregator traces — identical to the same
+//! job running uninterrupted. That requires deterministic replay
+//! (sender-sorted inboxes, worker-ordered aggregator folds), exact
+//! state round-trips (`StateCodec`), and coordinator-history restore.
+
+use std::path::PathBuf;
+
+use goffish::ckpt::{CheckpointReader, CheckpointWriter};
+use goffish::gofs::{section, Store};
+use goffish::graph::gen;
+use goffish::job::{EngineKind, Job, JobBuilder, JobOutput, JobSource};
+use goffish::partition::{MultilevelPartitioner, Partitioner};
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join("goffish_ckpt_recovery")
+        .join(format!("{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Weighted multi-partition store shared by the drills (weights matter
+/// for SSSP; CC/PageRank ignore them).
+fn build_store(name: &str) -> Store {
+    let g = gen::with_random_weights(&gen::road(14, 0.92, 0.02, 41), 1.0, 10.0, 42);
+    let parts = MultilevelPartitioner::default().partition(&g, 3);
+    let (store, _) = Store::create(&tmp(name), "ft", &g, &parts).unwrap();
+    store
+}
+
+fn base_job(algo: &str, engine: EngineKind) -> JobBuilder {
+    Job::builder()
+        .algo(algo)
+        .engine(engine)
+        .supersteps(8)
+        .source_vertex(0)
+}
+
+/// Values and aggregator traces must match exactly — recovery parity is
+/// a byte-identical guarantee, not an approximate one.
+fn assert_output_identical(a: &JobOutput, b: &JobOutput, label: &str) {
+    assert_eq!(a.values, b.values, "{label}: values diverged");
+    assert_eq!(
+        a.aggregators.len(),
+        b.aggregators.len(),
+        "{label}: aggregator count diverged"
+    );
+    for (ta, tb) in a.aggregators.iter().zip(&b.aggregators) {
+        assert_eq!(ta.name, tb.name, "{label}");
+        assert_eq!(ta.values, tb.values, "{label}: trace {} diverged", ta.name);
+    }
+}
+
+/// Kill `worker` at superstep `kill_at` with checkpoints every `every`
+/// supersteps, resume, and demand output identical to an uninterrupted
+/// run.
+fn kill_and_resume_drill(
+    store: &Store,
+    algo: &str,
+    engine: EngineKind,
+    every: usize,
+    kill_at: usize,
+    worker: u32,
+) {
+    let label = format!("{algo}/{engine:?}/every{every}/kill{kill_at}");
+    let ckpt = tmp(&format!("drill_{algo}_{engine:?}_{every}_{kill_at}"));
+
+    let baseline = base_job(algo, engine)
+        .build()
+        .unwrap()
+        .run(JobSource::Store(store))
+        .unwrap();
+    assert!(
+        baseline.metrics.num_supersteps() > kill_at,
+        "{label}: drill needs a kill before natural termination \
+         (job took {} supersteps)",
+        baseline.metrics.num_supersteps()
+    );
+
+    // The killed run fails loudly with the injected error…
+    let err = base_job(algo, engine)
+        .checkpoint_every(every)
+        .checkpoint_dir(&ckpt)
+        .kill_at(kill_at, worker)
+        .build()
+        .unwrap()
+        .run(JobSource::Store(store))
+        .expect_err("killed run must fail");
+    assert!(
+        format!("{err:#}").contains("injected worker failure"),
+        "{label}: {err:#}"
+    );
+    // …having committed exactly the epochs before the kill.
+    let reader = CheckpointReader::open(&ckpt).unwrap();
+    let latest = reader.latest_valid().unwrap();
+    assert!(
+        latest as usize == kill_at - 1 || (kill_at - 1) % every != 0,
+        "{label}: latest committed epoch {latest}"
+    );
+    assert!((latest as usize) < kill_at, "{label}");
+
+    // The resumed run executes only the remaining supersteps…
+    let resumed = base_job(algo, engine)
+        .resume_from(&ckpt)
+        .build()
+        .unwrap()
+        .run(JobSource::Store(store))
+        .unwrap();
+    assert_eq!(
+        resumed.metrics.num_supersteps(),
+        baseline.metrics.num_supersteps() - latest as usize,
+        "{label}: resumed run re-executed the wrong superstep range"
+    );
+    // …but its output (values + full aggregator traces) is identical.
+    assert_output_identical(&baseline, &resumed, &label);
+}
+
+#[test]
+fn recovery_parity_cc_both_engines() {
+    let store = build_store("cc");
+    kill_and_resume_drill(&store, "cc", EngineKind::Gopher, 1, 2, 1);
+    kill_and_resume_drill(&store, "cc", EngineKind::Vertex, 1, 2, 1);
+}
+
+#[test]
+fn recovery_parity_sssp_both_engines() {
+    let store = build_store("sssp");
+    kill_and_resume_drill(&store, "sssp", EngineKind::Gopher, 1, 2, 0);
+    kill_and_resume_drill(&store, "sssp", EngineKind::Vertex, 1, 2, 0);
+}
+
+#[test]
+fn recovery_parity_pagerank_both_engines() {
+    let store = build_store("pagerank");
+    // PageRank runs exactly 8 supersteps here: kill mid-run, and also
+    // exercise a sparser checkpoint cadence (latest epoch = 4 when
+    // killed at 5 with every=2).
+    kill_and_resume_drill(&store, "pagerank", EngineKind::Gopher, 1, 3, 2);
+    kill_and_resume_drill(&store, "pagerank", EngineKind::Vertex, 1, 3, 2);
+    kill_and_resume_drill(&store, "pagerank", EngineKind::Gopher, 2, 5, 1);
+}
+
+#[test]
+fn recovery_parity_aggregator_driven_jobs() {
+    let store = build_store("aggs");
+    // Label propagation terminates via the lp_changes aggregator on
+    // both engines: the restored coordinator history must reproduce the
+    // full trace and the same termination superstep.
+    kill_and_resume_drill(&store, "labelprop", EngineKind::Gopher, 1, 2, 1);
+    kill_and_resume_drill(&store, "labelprop", EngineKind::Vertex, 1, 2, 1);
+}
+
+#[test]
+fn recovery_parity_epsilon_pagerank_aggregator_restore() {
+    // Aggregator-driven convergence (pr_l1_delta, Gopher-only): the
+    // resumed job must observe the restored global delta and halt on
+    // the same superstep with the same trace.
+    let g = gen::social(300, 4, 0.0, 31);
+    let parts = MultilevelPartitioner::default().partition(&g, 3);
+    let (store, _) = Store::create(&tmp("eps_pr"), "ft", &g, &parts).unwrap();
+    let job = || {
+        Job::builder()
+            .algo("pagerank")
+            .epsilon(0.05)
+            .supersteps(60)
+    };
+    let baseline = job().build().unwrap().run(JobSource::Store(&store)).unwrap();
+    let steps = baseline.metrics.num_supersteps();
+    assert!(steps >= 4, "drill needs room to kill at superstep 4 (got {steps})");
+
+    let ckpt = tmp("eps_pr_ckpt");
+    job()
+        .checkpoint_every(1)
+        .checkpoint_dir(&ckpt)
+        .kill_at(4, 0)
+        .build()
+        .unwrap()
+        .run(JobSource::Store(&store))
+        .expect_err("killed run must fail");
+    let resumed = job()
+        .resume_from(&ckpt)
+        .build()
+        .unwrap()
+        .run(JobSource::Store(&store))
+        .unwrap();
+    assert_output_identical(&baseline, &resumed, "pagerank+epsilon");
+    let trace = resumed
+        .metrics
+        .aggregator(goffish::algos::pagerank::AGG_L1_DELTA)
+        .expect("restored delta trace");
+    assert_eq!(trace.values.len(), steps, "trace covers the whole logical run");
+}
+
+#[test]
+fn checkpoint_metrics_recorded_and_resume_continues_checkpointing() {
+    let store = build_store("metrics");
+    let ckpt = tmp("metrics_ckpt");
+    let out = base_job("pagerank", EngineKind::Gopher)
+        .checkpoint_every(2)
+        .checkpoint_dir(&ckpt)
+        .build()
+        .unwrap()
+        .run(JobSource::Store(&store))
+        .unwrap();
+    // 8 supersteps, cadence 2 → epochs 2, 4, 6, 8.
+    let epochs: Vec<usize> = out.metrics.checkpoints.iter().map(|c| c.superstep).collect();
+    assert_eq!(epochs, vec![2, 4, 6, 8]);
+    assert!(out.metrics.checkpoint_bytes() > 0);
+    assert!(out.metrics.checkpoint_seconds() > 0.0);
+    assert!(out.metrics.report("pr").contains("ckpt[4 epochs"));
+
+    // A resumed run with a cadence (but no explicit dir) keeps
+    // committing into the directory it resumed from; epoch numbering
+    // continues from the restored superstep.
+    let killed = base_job("pagerank", EngineKind::Gopher)
+        .checkpoint_every(2)
+        .checkpoint_dir(&ckpt2(&ckpt))
+        .kill_at(5, 0)
+        .build()
+        .unwrap()
+        .run(JobSource::Store(&store));
+    killed.expect_err("killed");
+    let resumed = base_job("pagerank", EngineKind::Gopher)
+        .checkpoint_every(2)
+        .resume_from(&ckpt2(&ckpt))
+        .build()
+        .unwrap()
+        .run(JobSource::Store(&store))
+        .unwrap();
+    // Resumed from epoch 4: re-runs supersteps 5..8, checkpoints 6 and 8.
+    let epochs: Vec<usize> =
+        resumed.metrics.checkpoints.iter().map(|c| c.superstep).collect();
+    assert_eq!(epochs, vec![6, 8]);
+    let reader = CheckpointReader::open(&ckpt2(&ckpt)).unwrap();
+    assert_eq!(reader.latest_valid().unwrap(), 8);
+}
+
+fn ckpt2(base: &std::path::Path) -> PathBuf {
+    base.with_file_name(format!(
+        "{}_resume",
+        base.file_name().unwrap().to_string_lossy()
+    ))
+}
+
+#[test]
+fn corrupt_epoch_falls_back_to_previous_and_still_recovers_exactly() {
+    let store = build_store("fallback");
+    let ckpt = tmp("fallback_ckpt");
+    let baseline = base_job("pagerank", EngineKind::Gopher)
+        .build()
+        .unwrap()
+        .run(JobSource::Store(&store))
+        .unwrap();
+    base_job("pagerank", EngineKind::Gopher)
+        .checkpoint_every(1)
+        .checkpoint_dir(&ckpt)
+        .kill_at(4, 1)
+        .build()
+        .unwrap()
+        .run(JobSource::Store(&store))
+        .expect_err("killed run must fail");
+
+    // Committed epochs (retention keeps the last two): 2 and 3. Rot one
+    // section of epoch 3's worker-1 snapshot.
+    let reader = CheckpointReader::open(&ckpt).unwrap();
+    assert_eq!(reader.manifest().epochs, vec![2, 3]);
+    let victim = reader.partition_path(3, 1);
+    let mut bytes = std::fs::read(&victim).unwrap();
+    let ranges = section::unframe(
+        &bytes,
+        goffish::ckpt::MAGIC,
+        goffish::ckpt::VERSION,
+        0, // partition snapshot kind
+        |_| "section",
+    )
+    .unwrap()
+    .ranges();
+    let (_, states_range) = ranges[1].clone();
+    bytes[states_range.start + states_range.len() / 2] ^= 0x55;
+    std::fs::write(&victim, bytes).unwrap();
+
+    // Direct validation names the corrupt file; recovery silently falls
+    // back to epoch 2 and still reproduces the baseline exactly.
+    let err = reader.validate_epoch(3).unwrap_err();
+    assert!(format!("{err:#}").contains("part_1.ckpt"), "{err:#}");
+    assert_eq!(reader.latest_valid().unwrap(), 2);
+    let resumed = base_job("pagerank", EngineKind::Gopher)
+        .resume_from(&ckpt)
+        .build()
+        .unwrap()
+        .run(JobSource::Store(&store))
+        .unwrap();
+    assert_output_identical(&baseline, &resumed, "fallback");
+    // It re-ran supersteps 3..8 (6 of the 8), not just 4..8.
+    assert_eq!(resumed.metrics.num_supersteps(), 6);
+}
+
+#[test]
+fn deterministic_replay_across_identical_runs() {
+    // The underpinning of recovery parity: two identical runs produce
+    // identical outputs, including float-summing PageRank (sender-sorted
+    // inboxes + worker-ordered aggregator folds).
+    let store = build_store("determinism");
+    for engine in [EngineKind::Gopher, EngineKind::Vertex] {
+        let run = || {
+            base_job("pagerank", engine)
+                .build()
+                .unwrap()
+                .run(JobSource::Store(&store))
+                .unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_output_identical(&a, &b, &format!("determinism/{engine:?}"));
+    }
+}
+
+#[test]
+fn writer_refuses_foreign_directories_end_to_end() {
+    // A checkpoint directory carries its job identity: checkpointing a
+    // different job into it must fail before any epoch is written.
+    let store = build_store("foreign");
+    let dir = tmp("foreign_ckpt");
+    CheckpointWriter::create(&dir, "somethingelse/gopher", 3, false).unwrap();
+    let err = base_job("cc", EngineKind::Gopher)
+        .checkpoint_every(1)
+        .checkpoint_dir(&dir)
+        .build()
+        .unwrap()
+        .run(JobSource::Store(&store))
+        .expect_err("foreign dir must be refused");
+    assert!(format!("{err:#}").contains("belongs to job"), "{err:#}");
+}
