@@ -1,13 +1,15 @@
 //! Shared plumbing for the figure/table benches.
 //!
 //! Every bench reads `GOFFISH_SCALE` (default 0.2) so the whole suite
-//! can be dialled from smoke-size to laptop-max, and builds the three
-//! Table-1 dataset analogs with fixed seeds so figures are comparable
-//! across benches.
+//! can be dialled from smoke-size to laptop-max. The Table-1 dataset
+//! analogs themselves live in `goffish::testing::fixtures` (fixed
+//! seeds, shared with the integration tests) so figures are comparable
+//! across benches *and* the tests exercise the same graph families.
 
 use goffish::gofs::{subgraph::discover, DistributedGraph, SliceFormat, Store};
-use goffish::graph::{gen, Graph};
+use goffish::graph::Graph;
 use goffish::partition::{MultilevelPartitioner, Partitioner, Partitioning};
+use goffish::testing::fixtures;
 use std::path::PathBuf;
 
 /// Simulated host count (the paper's testbed has 12).
@@ -21,12 +23,7 @@ pub fn scale() -> f64 {
 }
 
 pub fn datasets() -> Vec<(&'static str, Graph)> {
-    let s = scale();
-    vec![
-        ("RN", gen::rn_analog(s, 11)),
-        ("TR", gen::tr_analog(s, 22)),
-        ("LJ", gen::lj_analog(s, 33)),
-    ]
+    fixtures::datasets(scale())
 }
 
 pub fn partitioned(g: &Graph) -> (Partitioning, DistributedGraph) {

@@ -383,29 +383,9 @@ fn epoch_dir(dir: &Path, epoch: u64) -> PathBuf {
     dir.join(format!("epoch_{epoch}"))
 }
 
-/// Durable write-then-rename: the payload is fsynced before the rename
-/// and the containing directory after it (best-effort — not every
-/// platform lets a directory be opened), so a machine death right
-/// after "commit" cannot leave a zero-length or partial file behind
-/// the rename.
-fn persist(tmp: &Path, dst: &Path, bytes: &[u8]) -> Result<()> {
-    {
-        use std::io::Write;
-        let mut f =
-            fs::File::create(tmp).with_context(|| format!("create {}", tmp.display()))?;
-        f.write_all(bytes)
-            .with_context(|| format!("write {}", tmp.display()))?;
-        f.sync_all()
-            .with_context(|| format!("sync {}", tmp.display()))?;
-    }
-    fs::rename(tmp, dst).with_context(|| format!("commit {}", dst.display()))?;
-    if let Some(parent) = dst.parent() {
-        if let Ok(d) = fs::File::open(parent) {
-            let _ = d.sync_all();
-        }
-    }
-    Ok(())
-}
+// Durable write-then-rename — now shared with the GoFS packed-partition
+// rewrite (crate::util::fsio::persist).
+use crate::util::fsio::persist;
 
 fn write_manifest(dir: &Path, m: &Manifest) -> Result<()> {
     let epochs: Vec<String> = m.epochs.iter().map(|e| e.to_string()).collect();

@@ -5,7 +5,7 @@
 //! goffish info      --graph g.txt [--directed]
 //! goffish partition --graph g.txt --k 4 [--strategy multilevel|hash|range]
 //! goffish store     --graph g.txt --k 4 --out storedir [--strategy …] [--name NAME]
-//!                   [--format v1|v2] [--attrs N]
+//!                   [--format v1|v2|v3] [--attrs N]
 //! goffish store verify [--store storedir] [--ckpt ckptdir]
 //! goffish run       --store storedir
 //!                   --algo <any algos::registry entry>
@@ -17,11 +17,14 @@
 //!                   [--kill-at S [--kill-worker W]]
 //! ```
 //!
-//! `store --format` picks the slice framing (v2 columnar default; v1 for
-//! compat tooling) and `--attrs N` writes N synthetic per-vertex
-//! attribute slices (`attr0..attrN-1`, value = global vertex id) so the
-//! paper's "10 attributes, load one" scenario is reproducible from the
-//! CLI: `run --load-attributes attr0` then loads exactly that slice.
+//! `store --format` picks the on-disk layout (v2 columnar default; v1
+//! for compat tooling; v3 packs each partition into a single
+//! seek-skippable `partition.gfsp`) and `--attrs N` writes N synthetic
+//! per-vertex attribute columns (`attr0..attrN-1`, value = global
+//! vertex id) so the paper's "10 attributes, load one" scenario is
+//! reproducible from the CLI: `run --load-attributes attr0` then reads
+//! exactly that column — on a v3 store the loader physically seeks
+//! past the other nine.
 //!
 //! `store verify` is the checksum scrubber: it validates every section
 //! of every slice in a GoFS store (`--store`) and/or every snapshot of
@@ -183,21 +186,25 @@ fn cmd_store(args: &Args) -> Result<()> {
     let name = args.get_or("name", "graph");
     let fmt_arg = args.get_or("format", "v2");
     let format = SliceFormat::parse(fmt_arg)
-        .with_context(|| format!("--format expects v1 or v2, got {fmt_arg:?}"))?;
+        .with_context(|| format!("--format expects v1, v2 or v3, got {fmt_arg:?}"))?;
     let num_attrs = args.get_usize("attrs", 0)?;
     let partitioner = make_partitioner(args)?;
     let p = partitioner.partition(&g, k);
     let (store, dg) = Store::create_with_format(Path::new(out), name, &g, &p, format)?;
-    // Synthetic attribute slices for projection experiments: attrN holds
-    // each vertex's global id (deterministic, so v1/v2 outputs compare).
+    // Synthetic attribute columns for projection experiments: attrN
+    // holds each vertex's global id (deterministic, so outputs compare
+    // across formats). One batch write: a packed store rewrites each
+    // partition file once, not once per column.
+    let mut attr_items = Vec::new();
     for sg in dg.subgraphs() {
         let vals: Vec<f32> = sg.vertices.iter().map(|&v| v as f32).collect();
         for a in 0..num_attrs {
-            store.write_attribute(sg.id, &format!("attr{a}"), &vals)?;
+            attr_items.push((sg.id, format!("attr{a}"), vals.clone()));
         }
     }
+    store.write_attributes(&attr_items)?;
     println!(
-        "stored {} ({}) as {} partitions / {} sub-graphs / {} attribute slices at {}",
+        "stored {} ({}) as {} partitions / {} sub-graphs / {} attribute columns at {}",
         name,
         format,
         k,
@@ -609,7 +616,7 @@ mod tests {
     }
 
     #[test]
-    fn v1_v2_and_projected_runs_agree() {
+    fn all_formats_and_projected_runs_agree() {
         let dir = tmp("fmt_parity");
         let graph = dir.join("g.txt");
         run_cmd(&[
@@ -617,7 +624,8 @@ mod tests {
             graph.to_str().unwrap(),
         ])
         .unwrap();
-        for fmt in ["v1", "v2"] {
+        let golden: String = (0..16).map(|v| format!("{v}\t15\n")).collect();
+        for fmt in ["v1", "v2", "v3"] {
             let store = dir.join(format!("store-{fmt}"));
             run_cmd(&[
                 "store",
@@ -633,42 +641,52 @@ mod tests {
                 store.to_str().unwrap(),
             ])
             .unwrap();
+            let out = dir.join(format!("{fmt}.tsv"));
+            run_cmd(&[
+                "run", "--store", store.to_str().unwrap(),
+                "--algo", "cc", "--output", out.to_str().unwrap(),
+            ])
+            .unwrap();
+            assert_eq!(std::fs::read_to_string(&out).unwrap(), golden, "{fmt}");
+            // The vertex engine (which reassembles the whole store)
+            // produces the identical JobOutput from every format.
+            let out_vx = dir.join(format!("{fmt}-vx.tsv"));
+            run_cmd(&[
+                "run", "--store", store.to_str().unwrap(),
+                "--algo", "cc", "--engine", "vertex",
+                "--output", out_vx.to_str().unwrap(),
+            ])
+            .unwrap();
+            assert_eq!(std::fs::read_to_string(&out_vx).unwrap(), golden, "{fmt}");
+            // The sectioned formats also run projected (v3 seeks past
+            // attr1/attr2; v2 skips their files) to identical output.
+            if fmt != "v1" {
+                let proj = dir.join(format!("{fmt}-proj.tsv"));
+                run_cmd(&[
+                    "run", "--store", store.to_str().unwrap(),
+                    "--algo", "cc", "--load-attributes", "attr0",
+                    "--output", proj.to_str().unwrap(),
+                ])
+                .unwrap();
+                assert_eq!(std::fs::read_to_string(&proj).unwrap(), golden, "{fmt}");
+            }
+            // Every format scrubs clean through `store verify`.
+            run_cmd(&["store", "verify", "--store", store.to_str().unwrap()]).unwrap();
         }
-        let golden: String = (0..16).map(|v| format!("{v}\t15\n")).collect();
-        let v1_out = dir.join("v1.tsv");
-        let v2_out = dir.join("v2.tsv");
-        let proj_out = dir.join("v2-proj.tsv");
-        run_cmd(&[
-            "run", "--store", dir.join("store-v1").to_str().unwrap(),
-            "--algo", "cc", "--output", v1_out.to_str().unwrap(),
-        ])
-        .unwrap();
-        run_cmd(&[
-            "run", "--store", dir.join("store-v2").to_str().unwrap(),
-            "--algo", "cc", "--output", v2_out.to_str().unwrap(),
-        ])
-        .unwrap();
-        run_cmd(&[
-            "run", "--store", dir.join("store-v2").to_str().unwrap(),
-            "--algo", "cc", "--load-attributes", "attr0",
-            "--output", proj_out.to_str().unwrap(),
-        ])
-        .unwrap();
-        assert_eq!(std::fs::read_to_string(&v1_out).unwrap(), golden);
-        assert_eq!(std::fs::read_to_string(&v2_out).unwrap(), golden);
-        assert_eq!(std::fs::read_to_string(&proj_out).unwrap(), golden);
 
         // Unknown formats and undeclared attributes fail loudly.
         assert!(run_cmd(&[
             "store", "--graph", graph.to_str().unwrap(), "--k", "2",
-            "--format", "v3", "--out", dir.join("store-v3").to_str().unwrap(),
+            "--format", "v9", "--out", dir.join("store-v9").to_str().unwrap(),
         ])
         .is_err());
-        assert!(run_cmd(&[
-            "run", "--store", dir.join("store-v2").to_str().unwrap(),
-            "--algo", "cc", "--load-attributes", "nope",
-        ])
-        .is_err());
+        for fmt in ["v2", "v3"] {
+            assert!(run_cmd(&[
+                "run", "--store", dir.join(format!("store-{fmt}")).to_str().unwrap(),
+                "--algo", "cc", "--load-attributes", "nope",
+            ])
+            .is_err());
+        }
     }
 
     #[test]

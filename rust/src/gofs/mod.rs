@@ -4,12 +4,16 @@
 //! Gopher engine. Input graphs are k-way partitioned (one partition per
 //! host); within each partition the weakly-connected components — the
 //! **sub-graphs** of the paper's abstraction — are discovered and laid
-//! out as *slice files*: one topology slice per sub-graph plus separate
-//! attribute slices, in a compact binary encoding (`util::codec`, the
-//! Kryo stand-in). Remote edges resolve to a (partition, sub-graph,
-//! vertex) triple at store-build time, so no network resolution is ever
-//! needed at load or run time.
+//! out on disk in one of three formats: per-sub-graph *slice files*
+//! (v1 codec payloads or v2 columnar sections; one topology slice per
+//! sub-graph plus separate attribute slices) or the v3 *packed* layout
+//! (one `partition.gfsp` per partition holding every section of every
+//! sub-graph behind a seek-skippable directory — see [`packed`]).
+//! Remote edges resolve to a (partition, sub-graph, vertex) triple at
+//! store-build time, so no network resolution is ever needed at load
+//! or run time.
 
+pub mod packed;
 pub mod section;
 pub mod subgraph;
 pub mod slice;

@@ -1,0 +1,469 @@
+//! GoFS v3 "packed" partition files: one sectioned file per partition.
+//!
+//! The v2 format made slices columnar but still spread a partition
+//! across many files (one topology slice per sub-graph plus one file
+//! per attribute column), so an `AttrProjection` saved decode work, not
+//! seeks. The packed format takes the co-design the rest of the way
+//! (paper §4.3's "balance the disk latency against sequential bytes
+//! read"): **every** section of **every** sub-graph in a partition —
+//! topology columns and attribute columns alike — lives in a single
+//! `partition.gfsp` file, fronted by a length-addressed directory. A
+//! projected load reads the directory once, then `seek`s straight past
+//! every section it does not want; nine of ten attribute columns cost
+//! one intra-file seek each instead of a file open plus streamed bytes.
+//!
+//! On-disk layout (all integers little-endian):
+//!
+//! ```text
+//! prelude (24 bytes):
+//!   magic    "GFSP"                                   4
+//!   version  3                                        1
+//!   kind     2 (KIND_PACKED)                          1
+//!   pad      0                                        2
+//!   dir_len  u64 — byte length of the directory block 8
+//!   dir_fnv  u64 — FNV-1a 64 of the directory block   8
+//! directory block (dir_len bytes):
+//!   n_entries u32
+//!   per entry (24 fixed bytes + name):
+//!     sg       u32 — owning sub-graph index
+//!     sec      u8  — section id (the v2 section namespace)
+//!     name_len u8  — attribute-name length (0 for topology sections)
+//!     pad      u16
+//!     len      u64 — body length
+//!     fnv      u64 — FNV-1a 64 of the body
+//!     name     name_len bytes (utf-8 attribute name)
+//! bodies: back to back in directory order, starting at 24 + dir_len.
+//!   entry i's body offset = 24 + dir_len + Σ len of entries < i
+//! ```
+//!
+//! Integrity is layered exactly like v2, plus one level: the directory
+//! block carries its own checksum (`dir_fnv`, validated before any
+//! offset it lists is trusted), and every section body carries an FNV
+//! that is only verified when that section is actually read — skipped
+//! sections are never checksummed, read, or decoded. Corruption
+//! reports name the sub-graph and section (`sg_3.targets`,
+//! `sg_0.attr.rank`); structural rot (magic, version, kind byte,
+//! directory) is an error naming what broke.
+
+use std::fs::File;
+use std::io::Read;
+use std::ops::Range;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use super::section::checksum;
+use super::slice;
+
+/// Packed-file magic (distinct from the `GFSL` per-sub-graph slices).
+pub const MAGIC: &[u8; 4] = b"GFSP";
+/// Version byte of the packed layout (the GoFS format lineage: v1
+/// codec slices, v2 columnar slices, v3 packed partitions).
+pub const VERSION: u8 = 3;
+/// Kind byte: a packed file holds a whole partition, not one slice.
+pub const KIND_PACKED: u8 = 2;
+/// Fixed prelude: magic + version + kind + pad + dir_len + dir_fnv.
+pub const PRELUDE_LEN: usize = 24;
+/// Fixed part of one directory entry (the attribute name follows).
+pub const ENTRY_FIXED_LEN: usize = 24;
+/// The single packed file each `host<p>/` directory holds.
+pub const PARTITION_FILE: &str = "partition.gfsp";
+
+/// One section of a packed partition file, as listed in its directory.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Entry {
+    /// Sub-graph index within the partition.
+    pub subgraph: u32,
+    /// Section id (the v2 section namespace in [`slice`]).
+    pub section: u8,
+    /// Attribute name; empty for topology sections.
+    pub name: String,
+    /// Body length in bytes (the "length-addressed" part: offsets are
+    /// prefix sums of these, so the directory fully determines what a
+    /// projected read may skip).
+    pub len: u64,
+    /// FNV-1a 64 of the body.
+    pub checksum: u64,
+    /// Absolute file offset of the body (computed while parsing).
+    pub offset: u64,
+}
+
+impl Entry {
+    /// Human label used by scrub reports and corruption errors:
+    /// `sg_<i>.<section>` for topology, `sg_<i>.attr.<name>` for
+    /// attribute columns (mirroring the v2 slice file names).
+    pub fn label(&self) -> String {
+        if self.name.is_empty() {
+            format!("sg_{}.{}", self.subgraph, slice::section_name(self.section))
+        } else {
+            format!("sg_{}.attr.{}", self.subgraph, self.name)
+        }
+    }
+
+    /// Byte range of the body within the file.
+    pub fn range(&self) -> Range<usize> {
+        self.offset as usize..(self.offset + self.len) as usize
+    }
+}
+
+/// Parsed directory of a packed partition file.
+#[derive(Clone, Debug)]
+pub struct Directory {
+    /// Entries in file order (body offsets ascending).
+    pub entries: Vec<Entry>,
+    /// Bytes of metadata in front of the bodies (prelude + directory
+    /// block); the first body starts here.
+    pub body_start: u64,
+}
+
+impl Directory {
+    /// Total body bytes the directory lists.
+    pub fn body_bytes(&self) -> u64 {
+        self.entries.iter().map(|e| e.len).sum()
+    }
+}
+
+/// Serialize a full packed partition file. Each element supplies the
+/// owning sub-graph index, section id, attribute name (empty for
+/// topology sections), and body bytes; bodies land in the given order.
+pub fn encode(sections: &[(u32, u8, String, Vec<u8>)]) -> Result<Vec<u8>> {
+    let mut dir = Vec::with_capacity(4 + sections.len() * (ENTRY_FIXED_LEN + 8));
+    dir.extend_from_slice(&(sections.len() as u32).to_le_bytes());
+    for (sg, sec, name, body) in sections {
+        ensure!(
+            name.len() <= u8::MAX as usize,
+            "attribute name {name:?} longer than 255 bytes"
+        );
+        // An empty name is the directory's topology marker, so the
+        // invariant "named ⟺ values section" is enforced at the format
+        // boundary — a nameless attribute column could never be
+        // projected, replaced, or read back.
+        ensure!(
+            (*sec == slice::SEC_VALUES) == !name.is_empty(),
+            "packed entry for sub-graph {sg}: a name must be set exactly for \
+             `values` sections (section {sec}, name {name:?})"
+        );
+        dir.extend_from_slice(&sg.to_le_bytes());
+        dir.push(*sec);
+        dir.push(name.len() as u8);
+        dir.extend_from_slice(&[0u8; 2]);
+        dir.extend_from_slice(&(body.len() as u64).to_le_bytes());
+        dir.extend_from_slice(&checksum(body).to_le_bytes());
+        dir.extend_from_slice(name.as_bytes());
+    }
+    let body_len: usize = sections.iter().map(|(_, _, _, b)| b.len()).sum();
+    let mut out = Vec::with_capacity(PRELUDE_LEN + dir.len() + body_len);
+    out.extend_from_slice(MAGIC);
+    out.push(VERSION);
+    out.push(KIND_PACKED);
+    out.extend_from_slice(&[0u8; 2]);
+    out.extend_from_slice(&(dir.len() as u64).to_le_bytes());
+    out.extend_from_slice(&checksum(&dir).to_le_bytes());
+    out.extend_from_slice(&dir);
+    for (_, _, _, body) in sections {
+        out.extend_from_slice(body);
+    }
+    Ok(out)
+}
+
+/// Validate the fixed prelude; returns `(dir_len, dir_fnv)`.
+fn parse_prelude(bytes: &[u8]) -> Result<(u64, u64)> {
+    ensure!(
+        bytes.len() >= PRELUDE_LEN,
+        "packed file too short ({} bytes)",
+        bytes.len()
+    );
+    ensure!(&bytes[..4] == MAGIC, "bad packed-file magic");
+    ensure!(
+        bytes[4] == VERSION,
+        "unsupported packed-file version {}",
+        bytes[4]
+    );
+    ensure!(
+        bytes[5] == KIND_PACKED,
+        "wrong packed-file kind byte {} (want {KIND_PACKED})",
+        bytes[5]
+    );
+    let dir_len = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+    let dir_fnv = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+    Ok((dir_len, dir_fnv))
+}
+
+/// Parse the directory out of `bytes`, which must hold at least the
+/// prelude + directory block. The directory checksum is validated
+/// before any offset it lists is trusted (a flipped byte anywhere in
+/// the directory is caught here); per-section body checksums are *not*
+/// checked — those are verified if and when a section is read.
+pub fn parse_directory(bytes: &[u8]) -> Result<Directory> {
+    let (dir_len, dir_fnv) = parse_prelude(bytes)?;
+    let dir_end = PRELUDE_LEN
+        .checked_add(usize::try_from(dir_len).ok().unwrap_or(usize::MAX))
+        .unwrap_or(usize::MAX);
+    ensure!(
+        bytes.len() >= dir_end,
+        "packed file truncated inside section directory"
+    );
+    let dir = &bytes[PRELUDE_LEN..dir_end];
+    ensure!(
+        checksum(dir) == dir_fnv,
+        "packed section directory corrupt (checksum mismatch)"
+    );
+    ensure!(dir.len() >= 4, "packed section directory too short");
+    let n = u32::from_le_bytes(dir[0..4].try_into().unwrap()) as usize;
+    // The count is untrusted until proven to fit: every entry occupies
+    // at least ENTRY_FIXED_LEN directory bytes, so an inflated count
+    // is an error here, not a count-sized allocation below.
+    ensure!(
+        n <= (dir.len() - 4) / ENTRY_FIXED_LEN,
+        "packed directory claims {n} entries, block has room for {}",
+        (dir.len() - 4) / ENTRY_FIXED_LEN
+    );
+    let mut entries = Vec::with_capacity(n);
+    let mut pos = 4usize;
+    let mut offset = dir_end as u64;
+    for i in 0..n {
+        ensure!(
+            dir.len() - pos >= ENTRY_FIXED_LEN,
+            "packed directory entry {i} truncated"
+        );
+        let e = &dir[pos..pos + ENTRY_FIXED_LEN];
+        let subgraph = u32::from_le_bytes(e[0..4].try_into().unwrap());
+        let section = e[4];
+        let name_len = e[5] as usize;
+        let len = u64::from_le_bytes(e[8..16].try_into().unwrap());
+        let sum = u64::from_le_bytes(e[16..24].try_into().unwrap());
+        pos += ENTRY_FIXED_LEN;
+        ensure!(
+            dir.len() - pos >= name_len,
+            "packed directory entry {i} name truncated"
+        );
+        let name = std::str::from_utf8(&dir[pos..pos + name_len])
+            .context("packed directory attribute name not utf-8")?
+            .to_string();
+        pos += name_len;
+        entries.push(Entry { subgraph, section, name, len, checksum: sum, offset });
+        // Listed lengths are data, not trusted input: a crafted or
+        // rotted-yet-checksum-consistent directory must surface as an
+        // error, never as wrapped offsets or a giant allocation.
+        offset = offset.checked_add(len).ok_or_else(|| {
+            anyhow!("packed directory entry {i} overflows file offsets")
+        })?;
+    }
+    ensure!(pos == dir.len(), "packed directory has trailing bytes");
+    Ok(Directory { entries, body_start: dir_end as u64 })
+}
+
+/// Parse a complete in-memory packed file: the directory, plus the
+/// structural check that the file holds exactly the bodies it lists.
+pub fn parse(bytes: &[u8]) -> Result<Directory> {
+    let dir = parse_directory(bytes)?;
+    // Cannot overflow: parse_directory accumulated the same sum with
+    // checked arithmetic. Compared for exact equality so truncated or
+    // padded bodies are structural errors.
+    let total = dir.body_start + dir.body_bytes();
+    ensure!(
+        bytes.len() as u64 == total,
+        "packed file is {} bytes, directory accounts for {total}",
+        bytes.len()
+    );
+    Ok(dir)
+}
+
+/// Read just the prelude + directory from an open file — the only
+/// metadata a seek-skipping loader touches before section bodies. The
+/// listed extents are validated against the real file size up front,
+/// so every later `seek` + read (and every `vec![0; len]` buffer) is
+/// bounded by bytes that actually exist on disk.
+pub fn read_directory(file: &mut File) -> Result<Directory> {
+    let file_len = file.metadata().context("stat packed file")?.len();
+    let mut prelude = [0u8; PRELUDE_LEN];
+    file.read_exact(&mut prelude).context("read packed prelude")?;
+    let (dir_len, _) = parse_prelude(&prelude)?;
+    ensure!(
+        dir_len <= file_len.saturating_sub(PRELUDE_LEN as u64),
+        "packed directory length {dir_len} exceeds file size {file_len}"
+    );
+    let mut buf = prelude.to_vec();
+    buf.resize(PRELUDE_LEN + dir_len as usize, 0);
+    file.read_exact(&mut buf[PRELUDE_LEN..])
+        .context("read packed directory")?;
+    let dir = parse_directory(&buf)?;
+    let total = dir
+        .body_start
+        .checked_add(dir.body_bytes())
+        .ok_or_else(|| anyhow!("packed directory overflows file offsets"))?;
+    ensure!(
+        total == file_len,
+        "packed file is {file_len} bytes, directory accounts for {total}"
+    );
+    Ok(dir)
+}
+
+/// Full checksum scrub of one packed partition file: `(label, clean?)`
+/// per directory entry. Structural damage — bad magic/version/kind
+/// byte, a corrupt or truncated directory, bodies that don't match the
+/// directory total — is an `Err` naming what broke.
+pub fn scrub(bytes: &[u8]) -> Result<Vec<(String, bool)>> {
+    let dir = parse(bytes)?;
+    Ok(dir
+        .entries
+        .iter()
+        .map(|e| (e.label(), checksum(&bytes[e.range()]) == e.checksum))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two sub-graphs' worth of fake sections plus one attribute column.
+    fn sample_sections() -> Vec<(u32, u8, String, Vec<u8>)> {
+        vec![
+            (0, 0, String::new(), vec![1, 2, 3]),
+            (0, 3, String::new(), vec![9; 40]),
+            (1, 0, String::new(), vec![7; 5]),
+            (1, 3, String::new(), vec![]),
+            (1, 7, "rank".to_string(), vec![0, 0, 128, 63]),
+        ]
+    }
+
+    #[test]
+    fn encode_parse_round_trip() {
+        let bytes = encode(&sample_sections()).unwrap();
+        let dir = parse(&bytes).unwrap();
+        assert_eq!(dir.entries.len(), 5);
+        assert_eq!(dir.entries[0].label(), "sg_0.meta");
+        assert_eq!(dir.entries[1].label(), "sg_0.targets");
+        assert_eq!(dir.entries[4].label(), "sg_1.attr.rank");
+        // Offsets are prefix sums of the listed lengths.
+        let mut pos = dir.body_start;
+        for (e, (_, _, _, body)) in dir.entries.iter().zip(sample_sections()) {
+            assert_eq!(e.offset, pos);
+            assert_eq!(e.len as usize, body.len());
+            assert_eq!(&bytes[e.range()], &body[..]);
+            pos += e.len;
+        }
+        assert_eq!(pos, bytes.len() as u64);
+        // Every body checksums clean.
+        assert!(scrub(&bytes).unwrap().iter().all(|(_, ok)| *ok));
+    }
+
+    #[test]
+    fn body_corruption_is_localized_to_its_entry() {
+        let bytes = encode(&sample_sections()).unwrap();
+        let dir = parse(&bytes).unwrap();
+        let victim = dir.entries[1].clone();
+        let mut bad = bytes.clone();
+        bad[victim.range().start + 2] ^= 0x55;
+        let report = scrub(&bad).unwrap();
+        for (label, ok) in report {
+            assert_eq!(ok, label != victim.label(), "{label}");
+        }
+    }
+
+    #[test]
+    fn directory_corruption_is_structural() {
+        let bytes = encode(&sample_sections()).unwrap();
+        // Any flip inside the directory block fails its checksum.
+        for off in [PRELUDE_LEN, PRELUDE_LEN + 7, PRELUDE_LEN + 30] {
+            let mut bad = bytes.clone();
+            bad[off] ^= 0x55;
+            let err = parse(&bad).unwrap_err();
+            assert!(format!("{err:#}").contains("directory"), "{err:#}");
+        }
+        // Magic / version / kind byte rot is named as such.
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(format!("{:#}", parse(&bad).unwrap_err()).contains("magic"));
+        let mut bad = bytes.clone();
+        bad[4] = 9;
+        assert!(format!("{:#}", parse(&bad).unwrap_err()).contains("version"));
+        let mut bad = bytes.clone();
+        bad[5] = 0;
+        assert!(format!("{:#}", parse(&bad).unwrap_err()).contains("kind"));
+    }
+
+    #[test]
+    fn truncation_detected_everywhere() {
+        let bytes = encode(&sample_sections()).unwrap();
+        for cut in [0, 5, PRELUDE_LEN, PRELUDE_LEN + 10, bytes.len() - 1] {
+            assert!(parse(&bytes[..cut]).is_err(), "cut at {cut} must fail");
+        }
+    }
+
+    #[test]
+    fn crafted_directory_lengths_are_errors_not_allocations() {
+        // A directory whose checksum is *internally consistent* but
+        // whose listed lengths are absurd (hand-crafted or a very
+        // unlucky multi-bit rot) must surface as a structural error —
+        // never wrapped offsets, out-of-bounds indexing, or a
+        // directory-driven giant allocation.
+        let bytes = encode(&sample_sections()).unwrap();
+        let dir_len =
+            u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        // Patch entry 0's `len` field (directory offset 4 + 8) and
+        // re-seal the directory checksum so only the length lies.
+        let craft = |new_len: u64| -> Vec<u8> {
+            let mut b = bytes.clone();
+            let len_at = PRELUDE_LEN + 4 + 8;
+            b[len_at..len_at + 8].copy_from_slice(&new_len.to_le_bytes());
+            let fnv = checksum(&b[PRELUDE_LEN..PRELUDE_LEN + dir_len]);
+            b[16..24].copy_from_slice(&fnv.to_le_bytes());
+            b
+        };
+        // Offsets that overflow u64.
+        let overflow = craft(u64::MAX);
+        assert!(format!("{:#}", parse(&overflow).unwrap_err()).contains("overflow"));
+        // An inflated entry count (resealed the same way) errors before
+        // any count-sized allocation happens.
+        let mut counted = bytes.clone();
+        counted[PRELUDE_LEN..PRELUDE_LEN + 4]
+            .copy_from_slice(&u32::MAX.to_le_bytes());
+        let fnv = checksum(&counted[PRELUDE_LEN..PRELUDE_LEN + dir_len]);
+        counted[16..24].copy_from_slice(&fnv.to_le_bytes());
+        let err = format!("{:#}", parse(&counted).unwrap_err());
+        assert!(err.contains("entries"), "{err}");
+        // Lengths that exceed the actual file.
+        let huge = craft(1 << 40);
+        let err = format!("{:#}", parse(&huge).unwrap_err());
+        assert!(err.contains("accounts for"), "{err}");
+        // The file-backed reader rejects it before any body read too.
+        let dir = std::env::temp_dir()
+            .join(format!("goffish_packed_craft_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(PARTITION_FILE);
+        std::fs::write(&path, &huge).unwrap();
+        let mut f = File::open(&path).unwrap();
+        assert!(read_directory(&mut f).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_file_round_trips() {
+        let bytes = encode(&[]).unwrap();
+        let dir = parse(&bytes).unwrap();
+        assert!(dir.entries.is_empty());
+        assert_eq!(dir.body_start, bytes.len() as u64);
+    }
+
+    #[test]
+    fn overlong_attribute_name_rejected() {
+        let long = "x".repeat(300);
+        assert!(encode(&[(0, 7, long, vec![1])]).is_err());
+    }
+
+    #[test]
+    fn read_directory_from_file_matches_in_memory_parse() {
+        let bytes = encode(&sample_sections()).unwrap();
+        let dir = std::env::temp_dir()
+            .join(format!("goffish_packed_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(PARTITION_FILE);
+        std::fs::write(&path, &bytes).unwrap();
+        let mut f = File::open(&path).unwrap();
+        let from_file = read_directory(&mut f).unwrap();
+        let from_mem = parse(&bytes).unwrap();
+        assert_eq!(from_file.entries, from_mem.entries);
+        assert_eq!(from_file.body_start, from_mem.body_start);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

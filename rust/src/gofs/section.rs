@@ -185,15 +185,18 @@ pub struct ScrubSummary {
 
 impl ScrubSummary {
     /// Record one file's per-section scrub report — or its structural
-    /// parse error, which counts as corruption too.
-    pub fn record(&mut self, file: &str, report: Result<Vec<(&'static str, bool)>>) {
+    /// parse error, which counts as corruption too. Section labels may
+    /// be static names (`"targets"`) or owned strings (the packed
+    /// scrubber's `sg_3.targets` style).
+    pub fn record<S: AsRef<str>>(&mut self, file: &str, report: Result<Vec<(S, bool)>>) {
         self.files += 1;
         match report {
             Ok(entries) => {
                 for (sec, clean) in entries {
                     self.sections += 1;
                     if !clean {
-                        self.corrupt.push(format!("{file}: section `{sec}`"));
+                        self.corrupt
+                            .push(format!("{file}: section `{}`", sec.as_ref()));
                     }
                 }
             }

@@ -7,18 +7,31 @@
 //! the paper's "a graph with 10 attributes … needs to only load that
 //! slice" co-design point, and the "Edge Imp." variant of Fig 4(b).
 //!
-//! Two on-disk framings share the `MAGIC, version, kind` header and are
-//! dispatched on the version byte at decode time:
+//! Three on-disk formats exist, dispatched on magic + version byte:
 //!
-//! * **v1** — codec-encoded payload (varints, delta ids) followed by a
-//!   single whole-payload FNV-1a 64 checksum. Compact, but strictly
-//!   sequential to decode and all-or-nothing to validate.
-//! * **v2** (default) — fixed-width little-endian *columnar sections*
-//!   (vertex ids, CSR offsets, edge targets, weights, remote-ref
-//!   tables) behind a section directory in the header. Every section
-//!   carries its own FNV checksum, so a section can be validated and
-//!   decoded independently — corruption errors name the section, and a
-//!   reader that skips a section never pays to checksum it.
+//! * **v1** — one `GFSL` file per slice: codec-encoded payload
+//!   (varints, delta ids) followed by a single whole-payload FNV-1a 64
+//!   checksum. Compact, but strictly sequential to decode and
+//!   all-or-nothing to validate.
+//! * **v2** (default) — one `GFSL` file per slice holding fixed-width
+//!   little-endian *columnar sections* (vertex ids, CSR offsets, edge
+//!   targets, weights, remote-ref tables) behind a section directory
+//!   in the header. Every section carries its own FNV checksum, so a
+//!   section can be validated and decoded independently — corruption
+//!   errors name the section, and a reader that skips a section never
+//!   pays to checksum it.
+//! * **v3 "packed"** ([`SliceFormat::V3Packed`]) — no per-slice files
+//!   at all: every section of every sub-graph in a partition, topology
+//!   and attribute columns alike, lives in one `partition.gfsp` file
+//!   behind a length-addressed directory, and a projected load `seek`s
+//!   past the sections it does not want. The per-sub-graph section
+//!   *bodies* are byte-identical to v2's (this module builds and
+//!   decodes them for both formats, via the crate-internal
+//!   `topology_sections` / `decode_topology_from` helpers); the packed
+//!   container layout lives in
+//!   [`crate::gofs::packed`], and because a packed store has no
+//!   per-sub-graph files, [`encode_topology`]/[`encode_attribute`] are
+//!   defined only for v1/v2 — `Store` routes v3 to the packed writer.
 //!
 //! v1 encoding is frozen: stores written by older code stay loadable
 //! byte-for-byte (pinned by a golden test in `tests/gofs_roundtrip.rs`).
@@ -37,15 +50,23 @@ const VERSION_V2: u8 = 2;
 const KIND_TOPOLOGY: u8 = 0;
 const KIND_ATTRIBUTE: u8 = 1;
 
-/// On-disk slice framing. v2 (columnar sections) is the default; v1
-/// remains writable for compatibility tooling and readable forever.
+/// On-disk store format. v2 (columnar sections) is the default; v1
+/// remains writable for compatibility tooling and readable forever;
+/// v3 packs each partition into a single seek-skippable file.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum SliceFormat {
-    /// Sequential codec payload + whole-payload checksum.
+    /// Sequential codec payload + whole-payload checksum, one file per
+    /// slice.
     V1,
-    /// Columnar fixed-width sections + per-section checksums.
+    /// Columnar fixed-width sections + per-section checksums, one file
+    /// per slice.
     #[default]
     V2,
+    /// One packed `partition.gfsp` per partition: all sub-graphs'
+    /// sections behind one length-addressed directory
+    /// ([`crate::gofs::packed`]); projected loads seek past unwanted
+    /// sections instead of reading them.
+    V3Packed,
 }
 
 impl SliceFormat {
@@ -53,14 +74,16 @@ impl SliceFormat {
         match self {
             SliceFormat::V1 => "v1",
             SliceFormat::V2 => "v2",
+            SliceFormat::V3Packed => "v3",
         }
     }
 
-    /// Parse a CLI/meta spelling ("v1"/"v2").
+    /// Parse a CLI/meta spelling ("v1"/"v2"/"v3").
     pub fn parse(s: &str) -> Option<SliceFormat> {
         match s {
             "v1" => Some(SliceFormat::V1),
             "v2" => Some(SliceFormat::V2),
+            "v3" => Some(SliceFormat::V3Packed),
             _ => None,
         }
     }
@@ -114,17 +137,18 @@ fn unframe_v1(bytes: &[u8], want_kind: u8) -> Result<&[u8]> {
 
 // ------------------------------------------------------------- v2 framing
 
-/// Section ids of the v2 columnar layout.
-const SEC_META: u8 = 0;
-const SEC_VERTICES: u8 = 1;
-const SEC_OFFSETS: u8 = 2;
-const SEC_TARGETS: u8 = 3;
-const SEC_WEIGHTS: u8 = 4;
-const SEC_REMOTE_OUT: u8 = 5;
-const SEC_REMOTE_IN: u8 = 6;
-const SEC_VALUES: u8 = 7;
+/// Section ids of the columnar layout (shared by v2 slices and the v3
+/// packed directory).
+pub(crate) const SEC_META: u8 = 0;
+pub(crate) const SEC_VERTICES: u8 = 1;
+pub(crate) const SEC_OFFSETS: u8 = 2;
+pub(crate) const SEC_TARGETS: u8 = 3;
+pub(crate) const SEC_WEIGHTS: u8 = 4;
+pub(crate) const SEC_REMOTE_OUT: u8 = 5;
+pub(crate) const SEC_REMOTE_IN: u8 = 6;
+pub(crate) const SEC_VALUES: u8 = 7;
 
-fn section_name(id: u8) -> &'static str {
+pub(crate) fn section_name(id: u8) -> &'static str {
     match id {
         SEC_META => "meta",
         SEC_VERTICES => "vertices",
@@ -391,7 +415,10 @@ fn decode_topology_v1(bytes: &[u8]) -> Result<Subgraph> {
 /// flags u8 (bit0 directed, bit1 weighted)`.
 const TOPO_META_LEN: usize = 37;
 
-fn encode_topology_v2(sg: &Subgraph) -> Vec<u8> {
+/// The columnar section bodies of one sub-graph's topology — the v2
+/// slice payload and, unchanged, the per-sub-graph unit of the v3
+/// packed layout (only the container differs between the two formats).
+pub(crate) fn topology_sections(sg: &Subgraph) -> Vec<(u8, Vec<u8>)> {
     let n = sg.local.num_vertices();
     let ne = sg.local.num_edges();
     let weighted = sg.local.has_weights();
@@ -437,13 +464,28 @@ fn encode_topology_v2(sg: &Subgraph) -> Vec<u8> {
     }
     sections.push((SEC_REMOTE_OUT, encode_remote_v2(&sg.remote_out)));
     sections.push((SEC_REMOTE_IN, encode_remote_v2(&sg.remote_in)));
-    frame_v2(KIND_TOPOLOGY, &sections)
+    sections
+}
+
+fn encode_topology_v2(sg: &Subgraph) -> Vec<u8> {
+    frame_v2(KIND_TOPOLOGY, &topology_sections(sg))
 }
 
 fn decode_topology_v2(bytes: &[u8]) -> Result<Subgraph> {
     let table = unframe_v2(bytes, KIND_TOPOLOGY).context("topology slice")?;
+    decode_topology_from(|id| table.get(id))
+}
 
-    let meta = table.get(SEC_META)?;
+/// Decode a sub-graph from its columnar sections; `get` resolves a
+/// section id to its (already checksum-verified) body. Shared by the
+/// v2 per-slice decoder and the v3 packed loader — the latter hands in
+/// closures that *borrow* section bodies straight out of a single read
+/// buffer, so nothing is copied before materialization.
+pub(crate) fn decode_topology_from<'a, F>(get: F) -> Result<Subgraph>
+where
+    F: Fn(u8) -> Result<&'a [u8]>,
+{
+    let meta = get(SEC_META)?;
     ensure!(
         meta.len() == TOPO_META_LEN,
         "section `meta` has {} bytes, expected {TOPO_META_LEN}",
@@ -460,7 +502,7 @@ fn decode_topology_v2(bytes: &[u8]) -> Result<Subgraph> {
     let directed = flags & 1 != 0;
     let weighted = flags & 2 != 0;
 
-    let vertices = get_u32s(table.get(SEC_VERTICES)?, SEC_VERTICES)?;
+    let vertices = get_u32s(get(SEC_VERTICES)?, SEC_VERTICES)?;
     ensure!(
         vertices.len() == n,
         "section `vertices` holds {} ids, meta says {n}",
@@ -471,7 +513,7 @@ fn decode_topology_v2(bytes: &[u8]) -> Result<Subgraph> {
         "section `vertices` ids not strictly ascending"
     );
 
-    let offsets = get_u64s(table.get(SEC_OFFSETS)?, SEC_OFFSETS)?;
+    let offsets = get_u64s(get(SEC_OFFSETS)?, SEC_OFFSETS)?;
     ensure!(
         offsets.len() == n + 1,
         "section `offsets` holds {} entries, expected {}",
@@ -487,7 +529,7 @@ fn decode_topology_v2(bytes: &[u8]) -> Result<Subgraph> {
         "section `offsets` not monotone"
     );
 
-    let targets = get_u32s(table.get(SEC_TARGETS)?, SEC_TARGETS)?;
+    let targets = get_u32s(get(SEC_TARGETS)?, SEC_TARGETS)?;
     ensure!(
         targets.len() == ne,
         "section `targets` holds {} edges, meta says {ne}",
@@ -495,7 +537,7 @@ fn decode_topology_v2(bytes: &[u8]) -> Result<Subgraph> {
     );
 
     let weights = if weighted {
-        let w = get_f32s(table.get(SEC_WEIGHTS)?, SEC_WEIGHTS)?;
+        let w = get_f32s(get(SEC_WEIGHTS)?, SEC_WEIGHTS)?;
         ensure!(
             w.len() == ne,
             "section `weights` holds {} entries, meta says {ne}",
@@ -513,13 +555,13 @@ fn decode_topology_v2(bytes: &[u8]) -> Result<Subgraph> {
         }
     }
 
-    let remote_out = decode_remote_v2(table.get(SEC_REMOTE_OUT)?, SEC_REMOTE_OUT)?;
+    let remote_out = decode_remote_v2(get(SEC_REMOTE_OUT)?, SEC_REMOTE_OUT)?;
     ensure!(
         remote_out.len() == n_remote_out,
         "section `remote_out` holds {} refs, meta says {n_remote_out}",
         remote_out.len()
     );
-    let remote_in = decode_remote_v2(table.get(SEC_REMOTE_IN)?, SEC_REMOTE_IN)?;
+    let remote_in = decode_remote_v2(get(SEC_REMOTE_IN)?, SEC_REMOTE_IN)?;
     ensure!(
         remote_in.len() == n_remote_in,
         "section `remote_in` holds {} refs, meta says {n_remote_in}",
@@ -540,10 +582,20 @@ fn decode_topology_v2(bytes: &[u8]) -> Result<Subgraph> {
 // ------------------------------------------------------------ public API
 
 /// Encode a sub-graph's topology slice in the given format.
+///
+/// # Panics
+///
+/// For [`SliceFormat::V3Packed`]: a packed store has no per-sub-graph
+/// slice files — its writer packs the topology sections for the whole
+/// partition into one file (see [`crate::gofs::packed`]; `Store`
+/// routes v3 there and never reaches this function).
 pub fn encode_topology(sg: &Subgraph, format: SliceFormat) -> Vec<u8> {
     match format {
         SliceFormat::V1 => encode_topology_v1(sg),
         SliceFormat::V2 => encode_topology_v2(sg),
+        SliceFormat::V3Packed => {
+            panic!("v3 packed stores have no per-sub-graph slices; use gofs::packed")
+        }
     }
 }
 
@@ -586,6 +638,23 @@ fn decode_attribute_v1(bytes: &[u8]) -> Result<(SubgraphId, String, Vec<f32>)> {
     Ok((SubgraphId { partition, index }, name, values))
 }
 
+/// Encode a bare f32 attribute column — the body of a `values`
+/// section. v2 wraps it in a sectioned slice file with a meta section;
+/// the v3 packed layout stores it directly (sub-graph index and
+/// attribute name live in the packed directory entry).
+pub(crate) fn f32_column(values: &[f32]) -> Vec<u8> {
+    let mut vals = Vec::with_capacity(values.len() * 4);
+    for &v in values {
+        vals.extend_from_slice(&v.to_le_bytes());
+    }
+    vals
+}
+
+/// Decode a bare f32 attribute column (a `values` section body).
+pub(crate) fn decode_f32_column(body: &[u8]) -> Result<Vec<f32>> {
+    get_f32s(body, SEC_VALUES)
+}
+
 /// v2 attribute meta section: `partition u32, index u32, count u32,
 /// name_len u32, name bytes`.
 fn encode_attribute_v2(id: SubgraphId, name: &str, values: &[f32]) -> Vec<u8> {
@@ -595,12 +664,7 @@ fn encode_attribute_v2(id: SubgraphId, name: &str, values: &[f32]) -> Vec<u8> {
     meta.extend_from_slice(&(values.len() as u32).to_le_bytes());
     meta.extend_from_slice(&(name.len() as u32).to_le_bytes());
     meta.extend_from_slice(name.as_bytes());
-
-    let mut vals = Vec::with_capacity(values.len() * 4);
-    for &v in values {
-        vals.extend_from_slice(&v.to_le_bytes());
-    }
-    frame_v2(KIND_ATTRIBUTE, &[(SEC_META, meta), (SEC_VALUES, vals)])
+    frame_v2(KIND_ATTRIBUTE, &[(SEC_META, meta), (SEC_VALUES, f32_column(values))])
 }
 
 fn decode_attribute_v2(bytes: &[u8]) -> Result<(SubgraphId, String, Vec<f32>)> {
@@ -630,6 +694,12 @@ fn decode_attribute_v2(bytes: &[u8]) -> Result<(SubgraphId, String, Vec<f32>)> {
 }
 
 /// Encode a named per-vertex f32 attribute slice for one sub-graph.
+///
+/// # Panics
+///
+/// For [`SliceFormat::V3Packed`], like [`encode_topology`]: attribute
+/// columns of a packed store live inside `partition.gfsp` (`Store`
+/// appends them via a directory rewrite, never through this function).
 pub fn encode_attribute(
     id: SubgraphId,
     name: &str,
@@ -639,6 +709,9 @@ pub fn encode_attribute(
     match format {
         SliceFormat::V1 => encode_attribute_v1(id, name, values),
         SliceFormat::V2 => encode_attribute_v2(id, name, values),
+        SliceFormat::V3Packed => {
+            panic!("v3 packed stores have no per-sub-graph slices; use gofs::packed")
+        }
     }
 }
 
@@ -817,11 +890,44 @@ mod tests {
     fn format_parse_display_round_trip() {
         assert_eq!(SliceFormat::parse("v1"), Some(SliceFormat::V1));
         assert_eq!(SliceFormat::parse("v2"), Some(SliceFormat::V2));
-        assert_eq!(SliceFormat::parse("v3"), None);
+        assert_eq!(SliceFormat::parse("v3"), Some(SliceFormat::V3Packed));
+        assert_eq!(SliceFormat::parse("v4"), None);
         assert_eq!(SliceFormat::default(), SliceFormat::V2);
-        for fmt in BOTH {
+        for fmt in [SliceFormat::V1, SliceFormat::V2, SliceFormat::V3Packed] {
             assert_eq!(SliceFormat::parse(fmt.as_str()), Some(fmt));
         }
+    }
+
+    #[test]
+    fn packed_sections_decode_like_v2_slices() {
+        // The packed layout reuses the v2 section bodies verbatim:
+        // decoding them through `decode_topology_from` over borrowed
+        // bodies must reproduce the sub-graph exactly.
+        for sg in sample_subgraphs(true) {
+            let sections = topology_sections(&sg);
+            let back = decode_topology_from(|id| {
+                sections
+                    .iter()
+                    .find(|(s, _)| *s == id)
+                    .map(|(_, b)| b.as_slice())
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("missing section `{}`", section_name(id))
+                    })
+            })
+            .unwrap();
+            assert_subgraph_eq(&sg, &back);
+            // And the v2 slice of the same sub-graph is these bodies,
+            // reframed.
+            let v2 = decode_topology(&encode_topology(&sg, SliceFormat::V2)).unwrap();
+            assert_subgraph_eq(&back, &v2);
+        }
+    }
+
+    #[test]
+    fn f32_column_round_trip() {
+        let vals = vec![0.0f32, -1.5, 7.25, f32::MAX];
+        assert_eq!(decode_f32_column(&f32_column(&vals)).unwrap(), vals);
+        assert!(decode_f32_column(&[1, 2, 3]).is_err());
     }
 
     #[test]

@@ -5,14 +5,24 @@
 //!
 //! ```text
 //! <root>/meta.txt
-//! <root>/host0/sg_0.topo.slice
+//! <root>/host0/sg_0.topo.slice          (v1/v2: one file per slice)
 //! <root>/host0/sg_0.attr.<name>.slice
 //! <root>/host1/…
+//!
+//! <root>/meta.txt                        (v3: one packed file per host)
+//! <root>/host0/partition.gfsp
+//! <root>/host1/partition.gfsp
 //! ```
 //!
 //! The store is write-once-read-many (paper §4.1): `create` builds it
-//! from a graph + partitioning (slice format v2 by default, v1 via
-//! [`Store::create_with_format`]), `open` + the load paths serve Gopher.
+//! from a graph + partitioning (slice format v2 by default; v1 or the
+//! v3 packed layout via [`Store::create_with_format`]), `open` + the
+//! load paths serve Gopher. A v3 store packs every sub-graph's
+//! sections — topology *and* attribute columns — into one
+//! `partition.gfsp` per host behind a length-addressed directory
+//! ([`super::packed`]), so a projected load physically `seek`s past
+//! every section it does not want instead of opening and discarding
+//! files.
 //!
 //! Loading is parallel at two levels, mirroring the paper's cluster:
 //! [`Store::load_all`] runs one loader thread per partition (each
@@ -27,6 +37,7 @@
 
 use std::collections::BTreeMap;
 use std::fs;
+use std::io::{Read, Seek, SeekFrom};
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 use std::time::Instant;
@@ -35,8 +46,11 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::graph::csr::Graph;
 use crate::partition::Partitioning;
+use crate::util::fsio;
 use crate::util::pool;
 
+use super::packed;
+use super::section::checksum;
 use super::slice::{self, SliceFormat};
 use super::subgraph::{
     discover, DistributedGraph, PartitionAttributes, Subgraph, SubgraphId,
@@ -61,9 +75,19 @@ pub struct StoreMeta {
 /// Byte/file accounting for one load (feeds `sim::disk`).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct LoadStats {
-    /// Slice files opened — summed across parallel load units.
+    /// Files opened — summed across parallel load units. Per-file
+    /// formats open one file per slice; a v3 packed partition counts
+    /// as **one** file however many sub-graphs it holds (the
+    /// seeks-vs-bytes trade the packed layout exists for).
     pub files: u64,
-    /// Bytes read — summed across parallel load units.
+    /// Bytes read — summed across parallel load units. For the
+    /// per-file formats (v1/v2) this counts whole slice files; for a
+    /// packed (v3) store it counts exactly the section bodies
+    /// streamed — the sum of the directory-listed lengths of the
+    /// sections actually read. The fixed prelude + directory (a few
+    /// hundred metadata bytes per partition, read once before any
+    /// seek) is accounted as per-file/seek overhead in
+    /// [`crate::sim::DiskModel::packed_read_seconds`], not payload.
     pub bytes: u64,
     /// Wall-clock seconds of the load. For the (default) parallel
     /// multi-partition load this is the **max** across partitions (each
@@ -99,6 +123,20 @@ pub struct LoadOptions {
     /// single-partition load, 1 when partitions already load in
     /// parallel).
     pub cores: usize,
+}
+
+impl LoadOptions {
+    /// Resolve the decode-thread count for one partition's load — the
+    /// single definition both the per-file and packed load paths use.
+    fn effective_cores(&self) -> usize {
+        if self.sequential {
+            1
+        } else if self.cores == 0 {
+            pool::num_cores()
+        } else {
+            self.cores
+        }
+    }
 }
 
 /// Handle to an on-disk GoFS store.
@@ -153,9 +191,29 @@ impl Store {
         for (p, sgs) in dg.partitions.iter().enumerate() {
             let host_dir = root.join(format!("host{p}"));
             fs::create_dir_all(&host_dir)?;
-            for sg in sgs {
-                let bytes = slice::encode_topology(sg, format);
-                fs::write(host_dir.join(format!("sg_{}.topo.slice", sg.id.index)), bytes)?;
+            if format == SliceFormat::V3Packed {
+                // One packed file per partition: every sub-graph's
+                // topology sections back to back behind one directory
+                // (attribute columns join the same file later via
+                // `write_attributes`' directory rewrite).
+                let mut sections: Vec<(u32, u8, String, Vec<u8>)> = Vec::new();
+                for sg in sgs {
+                    for (sec, body) in slice::topology_sections(sg) {
+                        sections.push((sg.id.index, sec, String::new(), body));
+                    }
+                }
+                fs::write(
+                    host_dir.join(packed::PARTITION_FILE),
+                    packed::encode(&sections)?,
+                )?;
+            } else {
+                for sg in sgs {
+                    let bytes = slice::encode_topology(sg, format);
+                    fs::write(
+                        host_dir.join(format!("sg_{}.topo.slice", sg.id.index)),
+                        bytes,
+                    )?;
+                }
             }
         }
         let meta = StoreMeta {
@@ -213,6 +271,9 @@ impl Store {
         opts: &LoadOptions,
     ) -> Result<(Vec<Subgraph>, PartitionAttributes, LoadStats)> {
         ensure!(p < self.meta.num_partitions, "partition {p} out of range");
+        if self.meta.format == SliceFormat::V3Packed {
+            return self.load_partition_packed(p, opts);
+        }
         let t0 = Instant::now();
         let count = self.meta.subgraph_counts[p as usize] as usize;
         let host = self.host_dir(p);
@@ -261,13 +322,7 @@ impl Store {
         // Decode the planned slices on a worker pool (sub-graph slices
         // are independent files — the v2 point that each is validated
         // and decoded on its own).
-        let cores = if opts.sequential {
-            1
-        } else if opts.cores == 0 {
-            pool::num_cores()
-        } else {
-            opts.cores
-        };
+        let cores = opts.effective_cores();
         let cells: Vec<LoadCell> = (0..plans.len()).map(|_| Mutex::new(None)).collect();
         pool::run_indexed(cores, plans.len(), |j| {
             let r = load_one(&plans[j], p);
@@ -297,6 +352,92 @@ impl Store {
             .enumerate()
             .map(|(i, s)| s.ok_or_else(|| anyhow!("sub-graph {i} never loaded")))
             .collect::<Result<_>>()?;
+        stats.seconds = t0.elapsed().as_secs_f64();
+        Ok((sgs, attrs, stats))
+    }
+
+    /// Packed (v3) partition load: read the directory once, then
+    /// `seek` past everything the projection does not want. Each
+    /// sub-graph's wanted sections are coalesced into contiguous runs
+    /// (topology sections are adjacent by construction) and read in
+    /// one `read_exact` each; columns are decoded *borrowing* straight
+    /// out of those run buffers. `LoadStats::bytes` counts exactly the
+    /// directory-listed lengths of the sections read — a projected
+    /// load provably touches fewer bytes than any per-file format can.
+    fn load_partition_packed(
+        &self,
+        p: u32,
+        opts: &LoadOptions,
+    ) -> Result<(Vec<Subgraph>, PartitionAttributes, LoadStats)> {
+        let t0 = Instant::now();
+        let count = self.meta.subgraph_counts[p as usize] as usize;
+        let path = self.host_dir(p).join(packed::PARTITION_FILE);
+        let dir = {
+            let mut f = fs::File::open(&path)
+                .with_context(|| format!("read {}", path.display()))?;
+            packed::read_directory(&mut f)
+                .with_context(|| format!("decode {}", path.display()))?
+        };
+
+        // The projection *is* the plan: unwanted `values` sections are
+        // never read, checksummed, or decoded — just seeked past.
+        let mut plans: Vec<Vec<packed::Entry>> = vec![Vec::new(); count];
+        for e in &dir.entries {
+            ensure!(
+                (e.subgraph as usize) < count,
+                "{} directory names sub-graph {} of {count}",
+                path.display(),
+                e.subgraph
+            );
+            let wanted = if e.name.is_empty() {
+                true // topology sections always load
+            } else {
+                match &opts.attributes {
+                    AttrProjection::None => false,
+                    AttrProjection::All => true,
+                    AttrProjection::Only(names) => names.iter().any(|n| n == &e.name),
+                }
+            };
+            if wanted {
+                plans[e.subgraph as usize].push(e.clone());
+            }
+        }
+        // A declared-but-missing attribute is an error, not a silent
+        // skip (parity with the per-file formats, where the open fails).
+        if let AttrProjection::Only(names) = &opts.attributes {
+            for name in names {
+                for (i, plan) in plans.iter().enumerate() {
+                    ensure!(
+                        plan.iter().any(|e| e.name == *name),
+                        "store has no attribute `{name}` for sub-graph {i} in {}",
+                        path.display()
+                    );
+                }
+            }
+        }
+
+        let cores = opts.effective_cores();
+        type PackedCell = Mutex<Option<Result<(Subgraph, BTreeMap<String, Vec<f32>>, u64)>>>;
+        let cells: Vec<PackedCell> = (0..count).map(|_| Mutex::new(None)).collect();
+        pool::run_indexed(cores, count, |i| {
+            let r = load_packed_subgraph(&path, p, i as u32, &plans[i]);
+            *cells[i].lock().unwrap() = Some(r);
+        })?;
+
+        // One physical file per partition, however many sub-graphs.
+        let mut stats = LoadStats { files: 1, ..Default::default() };
+        let mut sgs = Vec::with_capacity(count);
+        let mut attrs: PartitionAttributes = Vec::with_capacity(count);
+        for (i, cell) in cells.into_iter().enumerate() {
+            let (sg, cols, bytes) = cell
+                .into_inner()
+                .unwrap()
+                .expect("pool runs every load job")
+                .with_context(|| format!("load sub-graph {i} of {}", path.display()))?;
+            stats.bytes += bytes;
+            sgs.push(sg);
+            attrs.push(cols);
+        }
         stats.seconds = t0.elapsed().as_secs_f64();
         Ok((sgs, attrs, stats))
     }
@@ -378,17 +519,130 @@ impl Store {
     }
 
     /// Write a named per-vertex attribute for one sub-graph (in the
-    /// store's slice format).
+    /// store's format). Equivalent to a one-element
+    /// [`Store::write_attributes`] batch — prefer the batch when
+    /// writing many columns to a packed store (one partition-file
+    /// rewrite instead of one per column).
     pub fn write_attribute(&self, id: SubgraphId, name: &str, values: &[f32]) -> Result<()> {
-        let path = self.attr_path(id.partition, id.index, name);
-        fs::write(&path, slice::encode_attribute(id, name, values, self.meta.format))
-            .with_context(|| format!("write {}", path.display()))
+        self.write_attributes(&[(id, name.to_string(), values.to_vec())])
     }
 
-    /// Full checksum scrub of every slice file in the store: validates
+    /// Write a batch of named per-vertex attribute columns. For the
+    /// per-file formats each column lands in its own
+    /// `sg_<i>.attr.<name>.slice` file; for a packed (v3) store each
+    /// touched partition's `partition.gfsp` is rewritten **once**: the
+    /// new `values` sections are appended to its body and the
+    /// length-addressed directory is rewritten to list them (columns
+    /// re-written under an existing name are replaced, matching the
+    /// per-file formats' overwrite semantics; within one batch the
+    /// last write of a name wins). The rewrite re-verifies every
+    /// retained section's checksum (corruption is refused, never
+    /// laundered into a re-checksummed file) and commits durably —
+    /// temp file, fsync, rename ([`crate::util::fsio::persist`]) — so
+    /// neither a torn write nor a machine death can corrupt the
+    /// previous contents. Attribute names must be non-empty (the
+    /// packed directory uses the empty name as its topology marker).
+    pub fn write_attributes(&self, items: &[(SubgraphId, String, Vec<f32>)]) -> Result<()> {
+        // Validation is format-independent: an empty name is
+        // meaningless everywhere (and would collide with the packed
+        // directory's empty-name-means-topology sentinel), and an
+        // out-of-range target must fail loudly on every format — a
+        // v1/v2 store would otherwise happily write a slice file no
+        // load could ever see.
+        for (id, name, _) in items {
+            ensure!(
+                !name.is_empty(),
+                "attribute name for {id} must be non-empty"
+            );
+            ensure!(
+                id.partition < self.meta.num_partitions,
+                "partition {} out of range",
+                id.partition
+            );
+            ensure!(
+                id.index < self.meta.subgraph_counts[id.partition as usize],
+                "sub-graph {id} out of range"
+            );
+        }
+        if self.meta.format != SliceFormat::V3Packed {
+            for (id, name, values) in items {
+                let path = self.attr_path(id.partition, id.index, name);
+                fs::write(
+                    &path,
+                    slice::encode_attribute(*id, name, values, self.meta.format),
+                )
+                .with_context(|| format!("write {}", path.display()))?;
+            }
+            return Ok(());
+        }
+        let mut by_part: BTreeMap<u32, Vec<&(SubgraphId, String, Vec<f32>)>> =
+            BTreeMap::new();
+        for item in items {
+            by_part.entry(item.0.partition).or_default().push(item);
+        }
+        for (p, batch) in by_part {
+            // Within one batch, later writes win — exactly what the
+            // per-file formats do when a second fs::write overwrites
+            // the first — so the directory never lists a name twice.
+            let mut batch_last: Vec<&(SubgraphId, String, Vec<f32>)> = Vec::new();
+            for item in batch {
+                batch_last.retain(|prev| {
+                    !(prev.0.index == item.0.index && prev.1 == item.1)
+                });
+                batch_last.push(item);
+            }
+            let path = self.host_dir(p).join(packed::PARTITION_FILE);
+            let bytes =
+                fs::read(&path).with_context(|| format!("read {}", path.display()))?;
+            let dir = packed::parse(&bytes)
+                .with_context(|| format!("decode {}", path.display()))?;
+            let mut sections: Vec<(u32, u8, String, Vec<u8>)> = Vec::new();
+            for e in &dir.entries {
+                let replaced = !e.name.is_empty()
+                    && batch_last
+                        .iter()
+                        .any(|(id, n, _)| id.index == e.subgraph && *n == e.name);
+                if replaced {
+                    continue;
+                }
+                // Retained bodies are re-verified before the rewrite:
+                // recomputing a fresh checksum over rotted bytes would
+                // *launder* on-disk corruption into a file that scrubs
+                // clean forever after. Refuse instead, naming the
+                // section, and leave the original file untouched.
+                let body = &bytes[e.range()];
+                ensure!(
+                    checksum(body) == e.checksum,
+                    "section `{}` of {} corrupt (checksum mismatch); refusing to \
+                     rewrite the packed file over it",
+                    e.label(),
+                    path.display()
+                );
+                sections.push((e.subgraph, e.section, e.name.clone(), body.to_vec()));
+            }
+            for (id, name, values) in batch_last {
+                sections.push((
+                    id.index,
+                    slice::SEC_VALUES,
+                    name.clone(),
+                    slice::f32_column(values),
+                ));
+            }
+            // Durable commit (fsync before rename, like the checkpoint
+            // manifest): a machine death mid-rewrite must leave either
+            // the old packed file or the new one, never a torn file.
+            let tmp = path.with_extension("gfsp.tmp");
+            fsio::persist(&tmp, &path, &packed::encode(&sections)?)?;
+        }
+        Ok(())
+    }
+
+    /// Full checksum scrub of every data file in the store: validates
     /// every section of every topology and attribute slice (v1's
-    /// whole-payload checksum counts as one `payload` section),
-    /// reporting corrupt sections by name. The on-demand form of
+    /// whole-payload checksum counts as one `payload` section) and,
+    /// for packed stores, every section of every `partition.gfsp`
+    /// behind its directory checksum — reporting corrupt sections by
+    /// name (`sg_0.targets`, `sg_1.attr.rank`). The on-demand form of
     /// background scrubbing, surfaced as `goffish store verify`.
     pub fn scrub(&self) -> Result<super::section::ScrubSummary> {
         let mut sum = super::section::ScrubSummary::default();
@@ -399,30 +653,69 @@ impl Store {
                 .collect::<std::io::Result<Vec<_>>>()?
                 .into_iter()
                 .map(|e| e.file_name().to_string_lossy().into_owned())
-                .filter(|n| n.ends_with(".slice"))
+                .filter(|n| n.ends_with(".slice") || n == packed::PARTITION_FILE)
                 .collect();
             names.sort();
             for name in names {
                 let rel = format!("host{p}/{name}");
-                // The filename says what the file must contain; the
-                // scrub validates the kind byte against it.
-                let want = if name.contains(".topo.") {
-                    slice::SliceKind::Topology
-                } else {
-                    slice::SliceKind::Attribute
+                let bytes = match fs::read(host.join(&name)) {
+                    Ok(bytes) => bytes,
+                    Err(e) => {
+                        sum.record_unreadable(&rel, e);
+                        continue;
+                    }
                 };
-                match fs::read(host.join(&name)) {
-                    Ok(bytes) => sum.record(&rel, slice::scrub(&bytes, want)),
-                    Err(e) => sum.record_unreadable(&rel, e),
+                if name == packed::PARTITION_FILE {
+                    sum.record(&rel, packed::scrub(&bytes));
+                } else {
+                    // The filename says what the file must contain; the
+                    // scrub validates the kind byte against it.
+                    let want = if name.contains(".topo.") {
+                        slice::SliceKind::Topology
+                    } else {
+                        slice::SliceKind::Attribute
+                    };
+                    sum.record(&rel, slice::scrub(&bytes, want));
                 }
             }
         }
         Ok(sum)
     }
 
-    /// Read a named attribute for one sub-graph.
+    /// Read a named attribute for one sub-graph. On a packed store
+    /// this is the seek-skip in miniature: directory, one seek, one
+    /// section — `bytes` counts just that column.
     pub fn read_attribute(&self, id: SubgraphId, name: &str) -> Result<(Vec<f32>, LoadStats)> {
         let t0 = Instant::now();
+        if self.meta.format == SliceFormat::V3Packed {
+            let path = self.host_dir(id.partition).join(packed::PARTITION_FILE);
+            let mut f = fs::File::open(&path)
+                .with_context(|| format!("read {}", path.display()))?;
+            let dir = packed::read_directory(&mut f)
+                .with_context(|| format!("decode {}", path.display()))?;
+            let e = dir
+                .entries
+                .iter()
+                .find(|e| e.subgraph == id.index && e.name == name)
+                .ok_or_else(|| {
+                    anyhow!("no attribute `{name}` for {id} in {}", path.display())
+                })?;
+            let mut buf = vec![0u8; e.len as usize];
+            f.seek(SeekFrom::Start(e.offset))?;
+            f.read_exact(&mut buf)
+                .with_context(|| format!("read section `{}`", e.label()))?;
+            ensure!(
+                checksum(&buf) == e.checksum,
+                "section `{}` of {} corrupt (checksum mismatch)",
+                e.label(),
+                path.display()
+            );
+            let values = slice::decode_f32_column(&buf)?;
+            return Ok((
+                values,
+                LoadStats { files: 1, bytes: e.len, seconds: t0.elapsed().as_secs_f64() },
+            ));
+        }
         let path = self.attr_path(id.partition, id.index, name);
         let bytes = fs::read(&path).with_context(|| format!("read {}", path.display()))?;
         let (got_id, got_name, values) = slice::decode_attribute(&bytes)?;
@@ -463,6 +756,95 @@ fn load_one(plan: &SlicePlan, p: u32) -> Result<(Loaded, u64)> {
             Ok((Loaded::Attr(*index, name.clone(), values), bytes.len() as u64))
         }
     }
+}
+
+/// Read one sub-graph's planned sections out of a packed partition
+/// file: entries are sorted by offset, byte-adjacent ones coalesce
+/// into a single `seek` + `read_exact` run, every unwanted byte range
+/// in between is seeked past, and the decoded columns borrow straight
+/// from the run buffers (zero copies before materialization). Returns
+/// the sub-graph, its projected attribute columns, and the section
+/// bytes actually read.
+fn load_packed_subgraph(
+    path: &Path,
+    p: u32,
+    index: u32,
+    plan: &[packed::Entry],
+) -> Result<(Subgraph, BTreeMap<String, Vec<f32>>, u64)> {
+    ensure!(
+        plan.iter().any(|e| e.name.is_empty()),
+        "sub-graph {index} has no topology sections in the packed directory"
+    );
+    let mut entries: Vec<&packed::Entry> = plan.iter().collect();
+    entries.sort_by_key(|e| e.offset);
+    // Coalesce adjacent entries: (run start offset, run length, members).
+    let mut runs: Vec<(u64, u64, Vec<&packed::Entry>)> = Vec::new();
+    for e in entries {
+        let extends_last =
+            matches!(runs.last(), Some((start, len, _)) if start + len == e.offset);
+        if extends_last {
+            let (_, len, run) = runs.last_mut().unwrap();
+            *len += e.len;
+            run.push(e);
+        } else {
+            runs.push((e.offset, e.len, vec![e]));
+        }
+    }
+    let mut file =
+        fs::File::open(path).with_context(|| format!("read {}", path.display()))?;
+    let mut bufs: Vec<Vec<u8>> = Vec::with_capacity(runs.len());
+    let mut bytes = 0u64;
+    for (start, len, _) in &runs {
+        let mut buf = vec![0u8; *len as usize];
+        file.seek(SeekFrom::Start(*start))
+            .with_context(|| format!("seek to {start} in {}", path.display()))?;
+        file.read_exact(&mut buf).with_context(|| {
+            format!("read {len} bytes at {start} of {}", path.display())
+        })?;
+        bytes += len;
+        bufs.push(buf);
+    }
+    // Slice each section body out of its run buffer and verify its
+    // checksum — only sections actually read are ever checksummed.
+    let mut sections: Vec<(&packed::Entry, &[u8])> = Vec::new();
+    for ((_, _, run), buf) in runs.iter().zip(&bufs) {
+        let mut pos = 0usize;
+        for &e in run {
+            let body = &buf[pos..pos + e.len as usize];
+            pos += e.len as usize;
+            ensure!(
+                checksum(body) == e.checksum,
+                "section `{}` of {} corrupt (checksum mismatch)",
+                e.label(),
+                path.display()
+            );
+            sections.push((e, body));
+        }
+    }
+    let sg = slice::decode_topology_from(|id| {
+        sections
+            .iter()
+            .find(|(e, _)| e.name.is_empty() && e.section == id)
+            .map(|(_, b)| *b)
+            .ok_or_else(|| {
+                anyhow!("missing section `{}`", slice::section_name(id))
+            })
+    })?;
+    ensure!(
+        sg.id == SubgraphId { partition: p, index },
+        "packed sections at {} hold wrong sub-graph {}",
+        path.display(),
+        sg.id
+    );
+    let mut cols = BTreeMap::new();
+    for (e, body) in &sections {
+        if !e.name.is_empty() {
+            let values = slice::decode_f32_column(body)
+                .with_context(|| format!("decode section `{}`", e.label()))?;
+            cols.insert(e.name.clone(), values);
+        }
+    }
+    Ok((sg, cols, bytes))
 }
 
 /// Parse `sg_<idx>.attr.<name>.slice` file names.
@@ -562,7 +944,7 @@ mod tests {
 
     #[test]
     fn create_open_load_round_trip() {
-        for fmt in [SliceFormat::V1, SliceFormat::V2] {
+        for fmt in [SliceFormat::V1, SliceFormat::V2, SliceFormat::V3Packed] {
             let g = gen::road(16, 0.93, 0.02, 8);
             let parts = MultilevelPartitioner::default().partition(&g, 3);
             let root = tmp(&format!("round_trip_{fmt}"));
@@ -574,7 +956,14 @@ mod tests {
             assert_eq!(reopened.meta(), store.meta());
             let (dg2, stats) = reopened.load_all().unwrap();
             assert_eq!(dg2.num_subgraphs(), dg.num_subgraphs());
-            assert!(stats.bytes > 0 && stats.files as usize == dg.num_subgraphs());
+            // Per-file formats open one file per slice; the packed
+            // format opens exactly one file per partition.
+            let want_files = if fmt == SliceFormat::V3Packed {
+                3
+            } else {
+                dg.num_subgraphs()
+            };
+            assert!(stats.bytes > 0 && stats.files as usize == want_files, "{fmt}");
             // Vertex sets identical.
             let verts = |d: &DistributedGraph| -> Vec<Vec<u32>> {
                 d.subgraphs().map(|s| s.vertices.clone()).collect()
@@ -638,7 +1027,7 @@ mod tests {
 
     #[test]
     fn attributes_round_trip() {
-        for fmt in [SliceFormat::V1, SliceFormat::V2] {
+        for fmt in [SliceFormat::V1, SliceFormat::V2, SliceFormat::V3Packed] {
             let g = gen::chain(12);
             let parts = MultilevelPartitioner::default().partition(&g, 2);
             let root = tmp(&format!("attrs_{fmt}"));
@@ -650,6 +1039,12 @@ mod tests {
             assert_eq!(back, vals);
             assert_eq!(st.files, 1);
             assert!(store.read_attribute(sg.id, "missing").is_err());
+            // Out-of-range targets fail loudly on EVERY format — not
+            // just packed stores (a stray per-file slice would be
+            // invisible to every load).
+            assert!(store
+                .write_attribute(SubgraphId { partition: 0, index: 999 }, "x", &[1.0])
+                .is_err(), "{fmt}");
         }
     }
 
@@ -784,6 +1179,208 @@ mod tests {
         let root = tmp("oob");
         let (store, _) = Store::create(&root, "c", &g, &parts).unwrap();
         assert!(store.load_partition(5).is_err());
+    }
+
+    #[test]
+    fn packed_store_is_one_file_per_partition() {
+        let g = gen::road(14, 0.9, 0.02, 9);
+        let parts = MultilevelPartitioner::default().partition(&g, 3);
+        let root = tmp("packed_layout");
+        let (store, dg) =
+            Store::create_with_format(&root, "g", &g, &parts, SliceFormat::V3Packed).unwrap();
+        let mut items = Vec::new();
+        for sg in dg.subgraphs() {
+            let vals: Vec<f32> = sg.vertices.iter().map(|&v| v as f32).collect();
+            items.push((sg.id, "rank".to_string(), vals));
+        }
+        store.write_attributes(&items).unwrap();
+        // Each host dir holds exactly the packed file — no .slice files.
+        for p in 0..3 {
+            let names: Vec<String> = fs::read_dir(root.join(format!("host{p}")))
+                .unwrap()
+                .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+                .collect();
+            assert_eq!(names, vec![crate::gofs::packed::PARTITION_FILE.to_string()]);
+        }
+        // And it loads identically to a v2 store of the same graph.
+        let root2 = tmp("packed_layout_v2");
+        let (store2, _) =
+            Store::create_with_format(&root2, "g", &g, &parts, SliceFormat::V2).unwrap();
+        store2.write_attributes(&items).unwrap();
+        let all = LoadOptions { attributes: AttrProjection::All, ..Default::default() };
+        let (dg3, attrs3, _) = store.load_all_with(&all).unwrap();
+        let (dg2, attrs2, _) = store2.load_all_with(&all).unwrap();
+        let verts = |d: &DistributedGraph| -> Vec<Vec<u32>> {
+            d.subgraphs().map(|s| s.vertices.clone()).collect()
+        };
+        assert_eq!(verts(&dg3), verts(&dg2));
+        assert_eq!(attrs3, attrs2);
+    }
+
+    #[test]
+    fn packed_write_attribute_replaces_by_name() {
+        let g = gen::chain(12);
+        let parts = MultilevelPartitioner::default().partition(&g, 2);
+        let root = tmp("packed_replace");
+        let (store, dg) =
+            Store::create_with_format(&root, "g", &g, &parts, SliceFormat::V3Packed).unwrap();
+        let sg = dg.subgraphs().next().unwrap();
+        let v1: Vec<f32> = vec![1.0; sg.num_vertices()];
+        let v2: Vec<f32> = vec![2.0; sg.num_vertices()];
+        store.write_attribute(sg.id, "rank", &v1).unwrap();
+        store.write_attribute(sg.id, "rank", &v2).unwrap();
+        let (back, st) = store.read_attribute(sg.id, "rank").unwrap();
+        assert_eq!(back, v2);
+        assert_eq!(st.files, 1);
+        // Rewriting under the same name replaced the column in place —
+        // the directory lists it once.
+        let bytes =
+            fs::read(root.join("host0").join(crate::gofs::packed::PARTITION_FILE)).unwrap();
+        let dir = crate::gofs::packed::parse(&bytes).unwrap();
+        let ranks: Vec<_> =
+            dir.entries.iter().filter(|e| e.name == "rank").collect();
+        assert_eq!(ranks.len(), 1);
+        // Out-of-range targets are refused.
+        assert!(store
+            .write_attribute(SubgraphId { partition: 9, index: 0 }, "x", &[1.0])
+            .is_err());
+        // So is an empty attribute name — it would collide with the
+        // packed directory's empty-name-means-topology sentinel.
+        assert!(store.write_attribute(sg.id, "", &v1).is_err());
+    }
+
+    #[test]
+    fn packed_projection_seeks_past_undeclared_attributes() {
+        let g = gen::road(14, 0.9, 0.02, 9);
+        let parts = MultilevelPartitioner::default().partition(&g, 2);
+        let root = tmp("packed_projection");
+        let (store, dg) =
+            Store::create_with_format(&root, "g", &g, &parts, SliceFormat::V3Packed).unwrap();
+        let mut items = Vec::new();
+        for sg in dg.subgraphs() {
+            for a in 0..4 {
+                let vals: Vec<f32> =
+                    sg.vertices.iter().map(|&v| v as f32 + a as f32).collect();
+                items.push((sg.id, format!("attr{a}"), vals));
+            }
+        }
+        store.write_attributes(&items).unwrap();
+        let full = LoadOptions { attributes: AttrProjection::All, ..Default::default() };
+        let only = LoadOptions {
+            attributes: AttrProjection::Only(vec!["attr1".into()]),
+            ..Default::default()
+        };
+        let none = LoadOptions::default();
+        let (_, attrs_full, st_full) = store.load_all_with(&full).map(flatten3).unwrap();
+        let (_, attrs_only, st_only) = store.load_all_with(&only).map(flatten3).unwrap();
+        let (_, attrs_none, st_none) = store.load_all_with(&none).map(flatten3).unwrap();
+        assert!(st_none.bytes < st_only.bytes);
+        assert!(st_only.bytes < st_full.bytes);
+        // Exactly one file per partition, regardless of projection.
+        assert_eq!(st_full.files, 2);
+        assert_eq!(st_only.files, 2);
+        for (i, sg) in dg.subgraphs().enumerate() {
+            assert_eq!(attrs_full[i].len(), 4);
+            assert_eq!(attrs_only[i].len(), 1);
+            assert!(attrs_none[i].is_empty());
+            let want: Vec<f32> = sg.vertices.iter().map(|&v| v as f32 + 1.0).collect();
+            assert_eq!(&attrs_only[i]["attr1"], &want);
+        }
+        // Declaring a missing attribute is an error, not a silent skip.
+        let bad = LoadOptions {
+            attributes: AttrProjection::Only(vec!["nope".into()]),
+            ..Default::default()
+        };
+        assert!(store.load_partition_with(0, &bad).is_err());
+    }
+
+    #[test]
+    fn packed_rewrite_refuses_to_launder_corruption() {
+        // A rewrite re-checksums every body it copies forward; blindly
+        // recomputing FNVs over rotted bytes would turn detectable
+        // corruption into a file that scrubs clean forever after.
+        let g = gen::chain(16);
+        let parts = MultilevelPartitioner::default().partition(&g, 2);
+        let root = tmp("packed_launder");
+        let (store, dg) =
+            Store::create_with_format(&root, "g", &g, &parts, SliceFormat::V3Packed).unwrap();
+        let sg = dg.partitions[0][0].clone();
+        let victim = root.join("host0").join(crate::gofs::packed::PARTITION_FILE);
+        let mut bytes = fs::read(&victim).unwrap();
+        let last = bytes.len() - 2;
+        bytes[last] ^= 0x55;
+        fs::write(&victim, &bytes).unwrap();
+        // The write fails, names the section…
+        let err = store
+            .write_attribute(sg.id, "rank", &vec![1.0; sg.num_vertices()])
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("corrupt"), "{err:#}");
+        // …and the original (still-detectable) file is untouched.
+        assert_eq!(fs::read(&victim).unwrap(), bytes);
+        assert!(!store.scrub().unwrap().is_clean());
+        // The other partition still accepts writes.
+        let sg1 = dg.partitions[1][0].clone();
+        store
+            .write_attribute(sg1.id, "rank", &vec![1.0; sg1.num_vertices()])
+            .unwrap();
+    }
+
+    #[test]
+    fn packed_batch_duplicates_resolve_to_last_write() {
+        // Same (sub-graph, name) twice in one batch: the later column
+        // wins everywhere — matching the per-file formats, where the
+        // second fs::write overwrites the first — and the directory
+        // lists the name exactly once.
+        let g = gen::chain(10);
+        let parts = MultilevelPartitioner::default().partition(&g, 2);
+        let root = tmp("packed_dup_batch");
+        let (store, dg) =
+            Store::create_with_format(&root, "g", &g, &parts, SliceFormat::V3Packed).unwrap();
+        let sg = dg.subgraphs().next().unwrap();
+        let a = vec![1.0f32; sg.num_vertices()];
+        let b = vec![2.0f32; sg.num_vertices()];
+        store
+            .write_attributes(&[
+                (sg.id, "rank".to_string(), a),
+                (sg.id, "rank".to_string(), b.clone()),
+            ])
+            .unwrap();
+        let (direct, _) = store.read_attribute(sg.id, "rank").unwrap();
+        assert_eq!(direct, b);
+        let opts = LoadOptions {
+            attributes: AttrProjection::Only(vec!["rank".into()]),
+            ..Default::default()
+        };
+        let (_, attrs, _) = store.load_partition_with(sg.id.partition, &opts).unwrap();
+        assert_eq!(attrs[sg.id.index as usize]["rank"], b);
+        let file = fs::read(
+            root.join(format!("host{}", sg.id.partition))
+                .join(crate::gofs::packed::PARTITION_FILE),
+        )
+        .unwrap();
+        let dir = crate::gofs::packed::parse(&file).unwrap();
+        assert_eq!(dir.entries.iter().filter(|e| e.name == "rank").count(), 1);
+    }
+
+    #[test]
+    fn packed_corruption_detected_at_load_and_scrub() {
+        let g = gen::chain(20);
+        let parts = MultilevelPartitioner::default().partition(&g, 2);
+        let root = tmp("packed_corrupt");
+        let (store, _) =
+            Store::create_with_format(&root, "g", &g, &parts, SliceFormat::V3Packed).unwrap();
+        assert!(store.scrub().unwrap().is_clean());
+        let victim = root.join("host0").join(crate::gofs::packed::PARTITION_FILE);
+        let mut bytes = fs::read(&victim).unwrap();
+        let last = bytes.len() - 3;
+        bytes[last] ^= 0x55;
+        fs::write(&victim, bytes).unwrap();
+        assert!(store.load_partition(0).is_err());
+        // The untouched partition still loads.
+        assert!(store.load_partition(1).is_ok());
+        let sum = store.scrub().unwrap();
+        assert_eq!(sum.corrupt.len(), 1, "{:?}", sum.corrupt);
+        assert!(sum.corrupt[0].contains("host0/partition.gfsp"));
     }
 
     #[test]

@@ -215,10 +215,14 @@ impl JobBuilder {
     }
 
     /// Attribute projection for store-backed Gopher runs: the load path
-    /// reads exactly these attribute slices alongside topology (paper
+    /// reads exactly these attribute columns alongside topology (paper
     /// §4.1's "a graph with 10 attributes … only loads the slice it
-    /// needs"), exposing them via `SubgraphContext::attribute`.
-    /// Gopher-only; a no-op for in-memory sources.
+    /// needs"), exposing them via `SubgraphContext::attribute`. On a
+    /// per-file (v1/v2) store undeclared attribute slices are never
+    /// opened; on a packed (v3) store the loader physically `seek`s
+    /// past undeclared columns inside `partition.gfsp`, and
+    /// `JobMetrics::load_bytes` counts only the section bytes actually
+    /// streamed. Gopher-only; a no-op for in-memory sources.
     pub fn load_attributes<I, S>(mut self, names: I) -> Self
     where
         I: IntoIterator<Item = S>,

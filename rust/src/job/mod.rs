@@ -44,7 +44,7 @@
 //! | `combiners(false)`    | ✓ (disables the transport batcher fold) | ✗ (the baseline always folds) | [`JobError::IncompatibleKnob`] |
 //! | `fabric` / `cores` / `max_supersteps` | ✓ | ✓ | — |
 //! | `supersteps` / `source_vertex` / `kernel` | ✓ | ✓ (kernel is Gopher-only at run time, ignored by vertex programs) | — |
-//! | `load_attributes(...)` | ✓ (store-backed loads read exactly the declared attribute slices) | ✗ (the baseline reassembles the whole graph) | [`JobError::IncompatibleKnob`] |
+//! | `load_attributes(...)` | ✓ (store-backed loads read exactly the declared attribute columns; a packed v3 store seeks past the rest) | ✗ (the baseline reassembles the whole graph) | [`JobError::IncompatibleKnob`] |
 //! | `checkpoint_every` / `checkpoint_dir` / `resume_from` | ✓ | ✓ | [`JobError::CheckpointConfig`] (inconsistent knobs), [`JobError::NoCheckpoint`] / [`JobError::CheckpointMismatch`] (bad resume target) |
 //!
 //! # Sources

@@ -1,0 +1,112 @@
+//! Shared graph/partitioning fixtures for integration tests and
+//! benches.
+//!
+//! Before this module, every test file (and `benches/common`) carried
+//! its own ad-hoc `random_graph`/`arbitrary_partitioning` copy with
+//! slightly different mixes; failures were hard to replay across
+//! files. These builders are the union of those mixes, driven entirely
+//! by the caller's [`Rng`], so a failing case is reproducible from the
+//! seed alone (the `testing::prop` harness prints it).
+
+use crate::graph::{gen, Graph};
+use crate::partition::{
+    HashPartitioner, MultilevelPartitioner, Partitioner, Partitioning, RangePartitioner,
+};
+use crate::util::rng::Rng;
+
+/// Mixed-shape random graph: road analog, preferential-attachment
+/// social, synthetic trace (hub-heavy), or Erdős–Rényi — the graph
+/// families the paper's Table 1 datasets span. Sized for integration
+/// tests (tens to a few hundred vertices).
+pub fn random_graph(rng: &mut Rng) -> Graph {
+    match rng.index(4) {
+        0 => gen::road(6 + rng.index(12), 0.8 + rng.f64() * 0.19, 0.03, rng.next_u64()),
+        1 => gen::social(80 + rng.index(220), 2 + rng.index(3), rng.f64() * 0.15, rng.next_u64()),
+        2 => gen::trace(100 + rng.index(400), 10 + rng.index(20), rng.f64() * 0.4, rng.next_u64()),
+        _ => gen::erdos_renyi(40 + rng.index(110), 0.03, rng.chance(0.5), rng.next_u64()),
+    }
+}
+
+/// Small sparse Erdős–Rényi graph (2–121 vertices): cheap enough for
+/// hundreds of property cases.
+pub fn small_graph(rng: &mut Rng) -> Graph {
+    let n = 2 + rng.index(120);
+    gen::erdos_renyi(n, rng.f64() * 0.1, rng.chance(0.5), rng.next_u64())
+}
+
+/// Half the time, put random weights in [0.1, 9.9] on `g`.
+pub fn maybe_weighted(rng: &mut Rng, g: Graph) -> Graph {
+    if rng.chance(0.5) {
+        gen::with_random_weights(&g, 0.1, 9.9, rng.next_u64())
+    } else {
+        g
+    }
+}
+
+/// Random partitioning of `g`: hash, range, or multilevel, with
+/// 1 ≤ k ≤ 5.
+pub fn random_partitioning(rng: &mut Rng, g: &Graph) -> Partitioning {
+    let k = 1 + rng.index(5);
+    match rng.index(3) {
+        0 => HashPartitioner::new(rng.next_u64()).partition(g, k),
+        1 => RangePartitioner.partition(g, k),
+        _ => MultilevelPartitioner::new(rng.next_u64()).partition(g, k),
+    }
+}
+
+/// The three Table-1 dataset analogs at `scale`, with the fixed seeds
+/// (RN=11, TR=22, LJ=33) every figure bench uses — so numbers are
+/// comparable across benches and across CI runs.
+pub fn datasets(scale: f64) -> Vec<(&'static str, Graph)> {
+    vec![
+        ("RN", gen::rn_analog(scale, 11)),
+        ("TR", gen::tr_analog(scale, 22)),
+        ("LJ", gen::lj_analog(scale, 33)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders_are_deterministic_in_the_seed() {
+        let shape = |g: &Graph| (g.num_vertices(), g.num_edges(), g.directed());
+        let a = random_graph(&mut Rng::new(7));
+        let b = random_graph(&mut Rng::new(7));
+        assert_eq!(shape(&a), shape(&b));
+        let pa = random_partitioning(&mut Rng::new(9), &a);
+        let pb = random_partitioning(&mut Rng::new(9), &b);
+        assert_eq!(pa.assignment(), pb.assignment());
+        let sa = small_graph(&mut Rng::new(3));
+        let sb = small_graph(&mut Rng::new(3));
+        assert_eq!(shape(&sa), shape(&sb));
+    }
+
+    #[test]
+    fn datasets_carry_fixed_names_and_seeds() {
+        let d1 = datasets(0.05);
+        let d2 = datasets(0.05);
+        assert_eq!(d1.len(), 3);
+        for ((n1, g1), (n2, g2)) in d1.iter().zip(&d2) {
+            assert_eq!(n1, n2);
+            assert_eq!(g1.num_vertices(), g2.num_vertices());
+            assert_eq!(g1.num_edges(), g2.num_edges());
+        }
+        assert_eq!(
+            d1.iter().map(|(n, _)| *n).collect::<Vec<_>>(),
+            vec!["RN", "TR", "LJ"]
+        );
+    }
+
+    #[test]
+    fn partitionings_cover_all_vertices() {
+        let mut rng = Rng::new(41);
+        for _ in 0..10 {
+            let base = random_graph(&mut rng);
+            let g = maybe_weighted(&mut rng, base);
+            let p = random_partitioning(&mut rng, &g);
+            assert_eq!(p.num_vertices(), g.num_vertices());
+        }
+    }
+}

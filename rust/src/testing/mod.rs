@@ -16,6 +16,8 @@
 //! });
 //! ```
 
+pub mod fixtures;
+
 use crate::util::rng::Rng;
 
 /// Base seed; override with `GOFFISH_PROP_SEED` to replay a failure.

@@ -1,0 +1,53 @@
+//! Durable filesystem primitives shared by the subsystems that commit
+//! by rename (the checkpoint store and the GoFS packed-partition
+//! rewrite).
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Durable write-then-rename: the payload is fsynced before the rename
+/// and the containing directory after it (best-effort — not every
+/// platform lets a directory be opened), so a machine death right
+/// after "commit" cannot leave a zero-length or partial file behind
+/// the rename.
+pub fn persist(tmp: &Path, dst: &Path, bytes: &[u8]) -> Result<()> {
+    {
+        use std::io::Write;
+        let mut f =
+            fs::File::create(tmp).with_context(|| format!("create {}", tmp.display()))?;
+        f.write_all(bytes)
+            .with_context(|| format!("write {}", tmp.display()))?;
+        f.sync_all()
+            .with_context(|| format!("sync {}", tmp.display()))?;
+    }
+    fs::rename(tmp, dst).with_context(|| format!("commit {}", dst.display()))?;
+    if let Some(parent) = dst.parent() {
+        if let Ok(d) = fs::File::open(parent) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn persist_replaces_destination_atomically() {
+        let dir = std::env::temp_dir()
+            .join(format!("goffish_fsio_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let dst = dir.join("data.bin");
+        persist(&dir.join("data.tmp"), &dst, b"first").unwrap();
+        assert_eq!(fs::read(&dst).unwrap(), b"first");
+        persist(&dir.join("data.tmp"), &dst, b"second").unwrap();
+        assert_eq!(fs::read(&dst).unwrap(), b"second");
+        // The temp file never survives a successful persist.
+        assert!(!dir.join("data.tmp").exists());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -7,5 +7,6 @@
 pub mod rng;
 pub mod codec;
 pub mod dsu;
+pub mod fsio;
 pub mod pool;
 pub mod stats;

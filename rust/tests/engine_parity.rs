@@ -21,15 +21,11 @@ use goffish::graph::Graph;
 use goffish::job::{EngineKind, Job, JobSource};
 use goffish::partition::{HashPartitioner, MultilevelPartitioner, Partitioner};
 use goffish::pregel::{run_vertex, PregelConfig};
+use goffish::testing::fixtures;
 use goffish::util::rng::Rng;
 
 fn random_graph(rng: &mut Rng) -> Graph {
-    match rng.index(4) {
-        0 => gen::road(8 + rng.index(10), 0.85 + rng.f64() * 0.14, 0.02, rng.next_u64()),
-        1 => gen::social(100 + rng.index(300), 2 + rng.index(4), rng.f64() * 0.1, rng.next_u64()),
-        2 => gen::trace(100 + rng.index(400), 10 + rng.index(20), rng.f64() * 0.4, rng.next_u64()),
-        _ => gen::erdos_renyi(50 + rng.index(150), 0.02, rng.chance(0.5), rng.next_u64()),
-    }
+    fixtures::random_graph(rng)
 }
 
 #[test]

@@ -1,19 +1,23 @@
 //! GoFS store round-trips under randomized graphs/partitionings, and the
 //! paper's structural invariants hold after a disk round-trip — plus the
-//! slice-v2 guarantees: v1↔v2 cross-version compat (v1 bytes pinned by a
-//! golden), per-section corruption detection, parallel/sequential load
-//! equivalence, and strictly-fewer-bytes attribute projection.
+//! slice-v2 guarantees (v1↔v2 cross-version compat with v1 bytes pinned
+//! by a golden, per-section corruption detection, parallel/sequential
+//! load equivalence, strictly-fewer-bytes attribute projection) and the
+//! packed-v3 battery: a full corruption matrix over every section kind
+//! plus the directory and kind byte, and exact seek-skip byte
+//! accounting against the packed directory.
 
 use std::path::PathBuf;
 
 use goffish::gofs::{
-    slice, subgraph::discover, AttrProjection, DistributedGraph, LoadOptions,
+    packed, slice, subgraph::discover, AttrProjection, DistributedGraph, LoadOptions,
     SliceFormat, Store, Subgraph, SubgraphId,
 };
 use goffish::graph::{gen, props, Graph};
 use goffish::partition::{
     HashPartitioner, MultilevelPartitioner, Partitioner, RangePartitioner,
 };
+use goffish::testing::fixtures;
 use goffish::util::rng::Rng;
 
 fn tmp(name: &str, case: usize) -> PathBuf {
@@ -25,11 +29,7 @@ fn tmp(name: &str, case: usize) -> PathBuf {
 }
 
 fn random_graph(rng: &mut Rng) -> Graph {
-    match rng.index(3) {
-        0 => gen::road(6 + rng.index(12), 0.8 + rng.f64() * 0.19, 0.03, rng.next_u64()),
-        1 => gen::social(80 + rng.index(200), 2 + rng.index(3), rng.f64() * 0.15, rng.next_u64()),
-        _ => gen::erdos_renyi(40 + rng.index(100), 0.03, rng.chance(0.5), rng.next_u64()),
-    }
+    fixtures::random_graph(rng)
 }
 
 #[test]
@@ -50,7 +50,11 @@ fn randomized_store_roundtrip_preserves_structure() {
             _ => Box::new(MultilevelPartitioner::new(rng.next_u64())),
         };
         let p = parts.partition(&g, k);
-        let fmt = if rng.chance(0.5) { SliceFormat::V1 } else { SliceFormat::V2 };
+        let fmt = match rng.index(3) {
+            0 => SliceFormat::V1,
+            1 => SliceFormat::V2,
+            _ => SliceFormat::V3Packed,
+        };
         let root = tmp("rand", case);
         let (store, dg) = Store::create_with_format(&root, "g", &g, &p, fmt).unwrap();
         let (dg2, stats) = store.load_all().unwrap();
@@ -87,8 +91,14 @@ fn randomized_store_roundtrip_preserves_structure() {
         assert!(dg2.num_subgraphs() >= props::wcc_count(&g));
         assert!(dg2.num_subgraphs() <= g.num_vertices());
 
-        // Invariant 5: byte accounting matches files on disk.
-        assert_eq!(stats.files as usize, dg.num_subgraphs());
+        // Invariant 5: byte accounting matches files on disk — one
+        // file per slice (v1/v2) or one per partition (v3 packed).
+        let want_files = if fmt == SliceFormat::V3Packed {
+            dg.partitions.len()
+        } else {
+            dg.num_subgraphs()
+        };
+        assert_eq!(stats.files as usize, want_files, "case {case} ({fmt})");
         assert!(stats.bytes > 0);
     }
 }
@@ -246,6 +256,193 @@ fn projected_attribute_load_reads_strictly_fewer_bytes() {
             assert_eq!(cols["attr3"], want);
         }
     }
+}
+
+/// Build a weighted, multi-partition packed store with boundary
+/// sub-graphs and two attribute columns, so *every* section kind of
+/// the v3 layout (meta, vertices, offsets, targets, weights,
+/// remote_out, remote_in, attr values) is present and non-empty
+/// somewhere in host0's packed file.
+fn packed_store_with_all_sections(
+    tag: &str,
+) -> (Store, DistributedGraph, PathBuf) {
+    let g = gen::with_random_weights(&gen::road(14, 0.9, 0.02, 17), 1.0, 5.0, 3);
+    let p = RangePartitioner.partition(&g, 2);
+    let root = tmp(tag, 0);
+    let (store, dg) =
+        Store::create_with_format(&root, "g", &g, &p, SliceFormat::V3Packed).unwrap();
+    let mut items = Vec::new();
+    for sg in dg.subgraphs() {
+        for a in 0..2 {
+            let vals: Vec<f32> =
+                sg.vertices.iter().map(|&v| v as f32 + a as f32).collect();
+            items.push((sg.id, format!("attr{a}"), vals));
+        }
+    }
+    store.write_attributes(&items).unwrap();
+    (store, dg, root)
+}
+
+#[test]
+fn packed_corruption_matrix_names_file_and_section() {
+    // Flip one byte in EVERY section body of a packed file, and in its
+    // directory and kind byte: each flip must fail the load, and
+    // `store verify` (Store::scrub) must name the exact file and
+    // section — while the untouched partition keeps loading.
+    let (store, _, root) = packed_store_with_all_sections("packed_matrix");
+    let victim = root.join("host0").join(packed::PARTITION_FILE);
+    let clean = std::fs::read(&victim).unwrap();
+    let dir = packed::parse(&clean).unwrap();
+
+    // Every section kind of the layout is exercised at least once.
+    let labels: Vec<String> = dir.entries.iter().map(|e| e.label()).collect();
+    for want in [
+        ".meta", ".vertices", ".offsets", ".targets", ".weights",
+        ".remote_out", ".remote_in", ".attr.attr0", ".attr.attr1",
+    ] {
+        assert!(
+            labels.iter().any(|l| l.contains(want)),
+            "no section matching {want} in {labels:?}"
+        );
+    }
+
+    let all = LoadOptions { attributes: AttrProjection::All, ..Default::default() };
+    let mut flipped = 0;
+    for e in &dir.entries {
+        if e.len == 0 {
+            continue; // nothing to flip inside an empty section
+        }
+        let mut bad = clean.clone();
+        let r = e.range();
+        bad[r.start + r.len() / 2] ^= 0x55;
+        std::fs::write(&victim, &bad).unwrap();
+
+        let err = store.load_partition_with(0, &all).unwrap_err();
+        assert!(
+            format!("{err:#}").contains(&e.label()),
+            "flip in {}: load error does not name it: {err:#}",
+            e.label()
+        );
+        let sum = store.scrub().unwrap();
+        assert_eq!(sum.corrupt.len(), 1, "flip in {}: {:?}", e.label(), sum.corrupt);
+        assert!(sum.corrupt[0].contains("host0/partition.gfsp"), "{}", sum.corrupt[0]);
+        assert!(
+            sum.corrupt[0].contains(&format!("`{}`", e.label())),
+            "scrub {:?} does not name {}",
+            sum.corrupt[0],
+            e.label()
+        );
+        assert!(
+            store.load_partition_with(1, &all).is_ok(),
+            "flip in {}: untouched partition must still load",
+            e.label()
+        );
+        flipped += 1;
+    }
+    assert!(flipped >= 9, "only {flipped} sections exercised");
+
+    // Directory flips are structural: the load fails and verify blames
+    // the file's directory, before any body offset is trusted.
+    for off in [packed::PRELUDE_LEN, packed::PRELUDE_LEN + 9] {
+        let mut bad = clean.clone();
+        bad[off] ^= 0x55;
+        std::fs::write(&victim, &bad).unwrap();
+        assert!(store.load_partition_with(0, &all).is_err());
+        let sum = store.scrub().unwrap();
+        assert_eq!(sum.corrupt.len(), 1, "{:?}", sum.corrupt);
+        assert!(sum.corrupt[0].contains("host0/partition.gfsp"));
+        assert!(sum.corrupt[0].contains("directory"), "{}", sum.corrupt[0]);
+        assert!(store.load_partition_with(1, &all).is_ok());
+    }
+
+    // So is a rotted kind byte — the one prelude byte that says what
+    // the file *is*.
+    let mut bad = clean.clone();
+    bad[5] ^= 0x01;
+    std::fs::write(&victim, &bad).unwrap();
+    assert!(store.load_partition_with(0, &all).is_err());
+    let sum = store.scrub().unwrap();
+    assert_eq!(sum.corrupt.len(), 1, "{:?}", sum.corrupt);
+    assert!(sum.corrupt[0].contains("kind"), "{}", sum.corrupt[0]);
+
+    // Restored, everything is clean again.
+    std::fs::write(&victim, &clean).unwrap();
+    assert!(store.scrub().unwrap().is_clean());
+    assert!(store.load_all_with(&all).is_ok());
+}
+
+#[test]
+fn packed_projected_bytes_match_directory_and_beat_v2() {
+    // The byte-accounting contract of the packed loader: under
+    // `AttrProjection::Only`, `LoadStats.bytes` equals the *sum of the
+    // directory-listed lengths* of exactly the sections read (topology
+    // + the projected columns), and is strictly below what the v2
+    // per-file layout reads for the same projection (which pays
+    // per-file headers, section tables, and attribute meta sections).
+    let g = gen::road(12, 0.9, 0.02, 19);
+    let p = MultilevelPartitioner::default().partition(&g, 2);
+    let attrs = 10usize;
+
+    let root2 = tmp("bytes_v2", 0);
+    let (store2, dg) =
+        Store::create_with_format(&root2, "g", &g, &p, SliceFormat::V2).unwrap();
+    let root3 = tmp("bytes_v3", 0);
+    let (store3, _) =
+        Store::create_with_format(&root3, "g", &g, &p, SliceFormat::V3Packed).unwrap();
+    let mut items = Vec::new();
+    for sg in dg.subgraphs() {
+        let vals: Vec<f32> = sg.vertices.iter().map(|&v| v as f32).collect();
+        for a in 0..attrs {
+            items.push((sg.id, format!("attr{a}"), vals.clone()));
+        }
+    }
+    store2.write_attributes(&items).unwrap();
+    store3.write_attributes(&items).unwrap();
+
+    let only = LoadOptions {
+        attributes: AttrProjection::Only(vec!["attr3".into()]),
+        ..Default::default()
+    };
+    let (_, attrs3, st3) = store3.load_all_with(&only).unwrap();
+    let (_, attrs2, st2) = store2.load_all_with(&only).unwrap();
+
+    // Exact accounting, recomputed independently from the directories.
+    let mut want_bytes = 0u64;
+    for pid in 0..2u32 {
+        let bytes = std::fs::read(
+            root3.join(format!("host{pid}")).join(packed::PARTITION_FILE),
+        )
+        .unwrap();
+        for e in &packed::parse(&bytes).unwrap().entries {
+            if e.name.is_empty() || e.name == "attr3" {
+                want_bytes += e.len;
+            }
+        }
+    }
+    assert_eq!(st3.bytes, want_bytes);
+    // Strictly fewer bytes than v2's projected load of the same data…
+    assert!(
+        st3.bytes < st2.bytes,
+        "v3 projected {} B must be < v2 projected {} B",
+        st3.bytes,
+        st2.bytes
+    );
+    // …for identical answers.
+    assert_eq!(attrs3, attrs2);
+
+    // The full v3 load reads every directory-listed byte, no more.
+    let all = LoadOptions { attributes: AttrProjection::All, ..Default::default() };
+    let (_, _, st3_full) = store3.load_all_with(&all).unwrap();
+    let mut want_full = 0u64;
+    for pid in 0..2u32 {
+        let bytes = std::fs::read(
+            root3.join(format!("host{pid}")).join(packed::PARTITION_FILE),
+        )
+        .unwrap();
+        want_full += packed::parse(&bytes).unwrap().body_bytes();
+    }
+    assert_eq!(st3_full.bytes, want_full);
+    assert!(st3.bytes < st3_full.bytes);
 }
 
 #[test]

@@ -3,7 +3,7 @@
 //! engine (the labelprop-style aggregator termination acceptance test).
 
 use goffish::algos::labelprop::{LabelPropVx, AGG_CHANGES};
-use goffish::gofs::{subgraph::discover, Store};
+use goffish::gofs::{subgraph::discover, SliceFormat, Store};
 use goffish::graph::{gen, Graph};
 use goffish::job::{EngineKind, Job, JobError, JobSource};
 use goffish::partition::{HashPartitioner, MultilevelPartitioner, Partitioner};
@@ -92,6 +92,37 @@ fn all_sources_agree_on_both_engines() {
             .unwrap()
             .values
     );
+}
+
+#[test]
+fn store_formats_give_identical_job_output_on_both_engines() {
+    // Acceptance for the packed store: the same graph written as
+    // v1/v2/v3 must yield byte-identical JobOutput values through the
+    // job layer, whichever engine runs it (Gopher loads data-locally,
+    // the vertex baseline reassembles — both paths cross the format
+    // dispatch).
+    let g = gen::road(10, 0.92, 0.02, 23);
+    let parts = MultilevelPartitioner::default().partition(&g, 3);
+    let mut baseline: Option<Vec<(u32, f64)>> = None;
+    for fmt in [SliceFormat::V1, SliceFormat::V2, SliceFormat::V3Packed] {
+        let root = tmp(&format!("fmt_parity_{fmt}"));
+        let (store, _) = Store::create_with_format(&root, "g", &g, &parts, fmt).unwrap();
+        for engine in [EngineKind::Gopher, EngineKind::Vertex] {
+            let out = Job::builder()
+                .algo("cc")
+                .engine(engine)
+                .build()
+                .unwrap()
+                .run(JobSource::Store(&store))
+                .unwrap();
+            match &baseline {
+                None => baseline = Some(out.values),
+                Some(want) => {
+                    assert_eq!(&out.values, want, "{fmt}/{engine} diverges");
+                }
+            }
+        }
+    }
 }
 
 #[test]

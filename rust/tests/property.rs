@@ -1,28 +1,26 @@
 //! Property tests over coordinator invariants (routing, discovery,
-//! partitioning, codec) using the in-crate `testing::prop` harness.
+//! partitioning, codec) and the GoFS storage formats, using the
+//! in-crate `testing::prop` harness and the shared
+//! `testing::fixtures` graph builders.
 
 use goffish::algos::cc::CcSg;
 use goffish::algos::gather_subgraph_values;
 use goffish::gofs::subgraph::discover;
+use goffish::gofs::{AttrProjection, DistributedGraph, LoadOptions, SliceFormat, Store};
 use goffish::gopher::{run, GopherConfig};
 use goffish::graph::{gen, props, Graph};
-use goffish::partition::{HashPartitioner, MultilevelPartitioner, Partitioner, Partitioning};
-use goffish::testing::prop;
+use goffish::partition::{MultilevelPartitioner, Partitioner, Partitioning};
+use goffish::testing::fixtures;
+use goffish::testing::{prop, prop_with_rng};
 use goffish::util::codec::{Decoder, Encoder};
 use goffish::util::rng::Rng;
 
 fn arbitrary_graph(rng: &mut Rng) -> Graph {
-    let n = 2 + rng.index(120);
-    let density = rng.f64() * 0.1;
-    gen::erdos_renyi(n, density, rng.chance(0.5), rng.next_u64())
+    fixtures::small_graph(rng)
 }
 
 fn arbitrary_partitioning(rng: &mut Rng, g: &Graph) -> Partitioning {
-    let k = 1 + rng.index(5);
-    match rng.index(2) {
-        0 => HashPartitioner::new(rng.next_u64()).partition(g, k),
-        _ => MultilevelPartitioner::new(rng.next_u64()).partition(g, k),
-    }
+    fixtures::random_partitioning(rng, g)
 }
 
 #[test]
@@ -183,6 +181,120 @@ fn prop_codec_round_trips_arbitrary_sequences() {
             }
             if !d.is_at_end() {
                 return Err("trailing bytes".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Everything the store hands back that the engines consume, in a
+/// comparable shape: per-sub-graph vertices, weighted edge lists, and
+/// remote-ref counts.
+fn observable_shape(d: &DistributedGraph) -> Vec<(Vec<u32>, Vec<(u32, u32, f32)>, usize, usize)> {
+    d.subgraphs()
+        .map(|s| {
+            let edges: Vec<(u32, u32, f32)> = s
+                .local
+                .edges()
+                .map(|(u, v, ei)| (u, v, s.local.weight(ei)))
+                .collect();
+            (s.vertices.clone(), edges, s.remote_out.len(), s.remote_in.len())
+        })
+        .collect()
+}
+
+#[test]
+fn prop_store_formats_load_identically_under_any_projection() {
+    // The paper's storage contract, as a property: the same graph +
+    // partitioning written as v1 slices, v2 columnar slices, or a v3
+    // packed store must load back *identical* sub-graphs and attribute
+    // columns, for a random `AttrProjection`, both sequentially and on
+    // the `util::pool` parallel path. Six observations per case (3
+    // formats × 2 modes) must agree exactly.
+    prop_with_rng(
+        "v1/v2/v3 × seq/par loads agree",
+        8,
+        |rng| {
+            let base = fixtures::random_graph(rng);
+            let g = fixtures::maybe_weighted(rng, base);
+            let p = fixtures::random_partitioning(rng, &g);
+            let n_attrs = rng.index(4);
+            (g, p, n_attrs)
+        },
+        |(g, p, n_attrs), rng| {
+            let projection = match (*n_attrs, rng.index(3)) {
+                (0, _) | (_, 0) => {
+                    if rng.chance(0.5) {
+                        AttrProjection::None
+                    } else {
+                        AttrProjection::All
+                    }
+                }
+                (_, 1) => AttrProjection::All,
+                _ => {
+                    let keep: Vec<String> = (0..*n_attrs)
+                        .filter(|_| rng.chance(0.5))
+                        .map(|a| format!("attr{a}"))
+                        .collect();
+                    if keep.is_empty() {
+                        AttrProjection::None
+                    } else {
+                        AttrProjection::Only(keep)
+                    }
+                }
+            };
+            let tag = rng.next_u64();
+            let mut observations = Vec::new();
+            for fmt in [SliceFormat::V1, SliceFormat::V2, SliceFormat::V3Packed] {
+                let root = std::env::temp_dir()
+                    .join("goffish_prop_formats")
+                    .join(format!("{tag:016x}_{fmt}_{}", std::process::id()));
+                let _ = std::fs::remove_dir_all(&root);
+                let (store, dg) = Store::create_with_format(&root, "g", g, p, fmt)
+                    .map_err(|e| format!("create {fmt}: {e:#}"))?;
+                let mut items = Vec::new();
+                for sg in dg.subgraphs() {
+                    for a in 0..*n_attrs {
+                        let vals: Vec<f32> = sg
+                            .vertices
+                            .iter()
+                            .map(|&v| v as f32 * 0.5 + a as f32)
+                            .collect();
+                        items.push((sg.id, format!("attr{a}"), vals));
+                    }
+                }
+                store
+                    .write_attributes(&items)
+                    .map_err(|e| format!("attrs {fmt}: {e:#}"))?;
+                for sequential in [true, false] {
+                    let opts = LoadOptions {
+                        attributes: projection.clone(),
+                        sequential,
+                        cores: 0,
+                    };
+                    let (dg2, attrs, stats) = store
+                        .load_all_with(&opts)
+                        .map_err(|e| format!("load {fmt} seq={sequential}: {e:#}"))?;
+                    if stats.bytes == 0 {
+                        return Err(format!("{fmt}: load reported zero bytes"));
+                    }
+                    observations.push((
+                        fmt.to_string(),
+                        sequential,
+                        observable_shape(&dg2),
+                        attrs,
+                    ));
+                }
+                let _ = std::fs::remove_dir_all(&root);
+            }
+            let (_, _, shape0, attrs0) = &observations[0];
+            for (fmt, sequential, shape, attrs) in &observations[1..] {
+                if shape != shape0 {
+                    return Err(format!("{fmt} seq={sequential}: sub-graphs diverge"));
+                }
+                if attrs != attrs0 {
+                    return Err(format!("{fmt} seq={sequential}: attribute columns diverge"));
+                }
             }
             Ok(())
         },
