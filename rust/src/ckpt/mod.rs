@@ -56,7 +56,7 @@ pub use state::StateCodec;
 
 use std::fs;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
@@ -113,6 +113,7 @@ pub struct CheckpointConfig {
 /// past corrupt epochs) and handed to the engine.
 #[derive(Clone, Debug)]
 pub struct ResumePoint {
+    /// The checkpoint directory to resume from.
     pub dir: PathBuf,
     /// The committed epoch (= superstep) to restart after.
     pub epoch: u64,
@@ -122,7 +123,9 @@ pub struct ResumePoint {
 /// of the named superstep, exactly like a killed host.
 #[derive(Clone, Copy, Debug)]
 pub struct FailPoint {
+    /// Superstep at whose start the worker dies.
     pub superstep: usize,
+    /// The worker (partition id) that dies.
     pub worker: u32,
 }
 
@@ -133,8 +136,11 @@ pub struct FailPoint {
 /// payload.
 #[derive(Clone, Debug)]
 pub struct InboxEntry<M> {
+    /// The sending worker (stable-sort key for deterministic replay).
     pub sender: u32,
+    /// Optional target vertex within the receiving unit.
     pub vertex: Option<u32>,
+    /// The message payload.
     pub payload: M,
 }
 
@@ -142,10 +148,13 @@ pub struct InboxEntry<M> {
 
 /// A decoded partition snapshot.
 pub struct PartitionSnapshot<S, M> {
+    /// The committed epoch (= superstep) this snapshot captures.
     pub epoch: u64,
+    /// The partition (worker) the snapshot belongs to.
     pub partition: u32,
     /// Per-unit restored program state (sub-graph or vertex order).
     pub states: Vec<S>,
+    /// Per-unit halt votes at the snapshot barrier.
     pub halted: Vec<bool>,
     /// Per-unit queued messages for superstep `epoch + 1`.
     pub inbox: Vec<Vec<InboxEntry<M>>>,
@@ -301,12 +310,15 @@ where
 /// `s+1`). Its last entry is what resumed workers observe as the
 /// previous barrier's globals.
 pub struct CoordSnapshot {
+    /// The committed epoch (= superstep) this snapshot captures.
     pub epoch: u64,
+    /// Per-superstep global aggregator vectors.
     pub history: Vec<Vec<f64>>,
 }
 
 const COORD_META_LEN: usize = 16;
 
+/// Encode the manager's barrier snapshot (see [`CoordSnapshot`]).
 pub fn encode_coordinator(epoch: u64, naggs: usize, history: &[Vec<f64>]) -> Vec<u8> {
     let mut meta = Vec::with_capacity(COORD_META_LEN);
     meta.extend_from_slice(&epoch.to_le_bytes());
@@ -327,6 +339,8 @@ pub fn encode_coordinator(epoch: u64, naggs: usize, history: &[Vec<f64>]) -> Vec
     )
 }
 
+/// Decode a coordinator snapshot, validating the aggregator count
+/// against the resuming run's program.
 pub fn decode_coordinator(bytes: &[u8], expect_naggs: usize) -> Result<CoordSnapshot> {
     let table = section::unframe(bytes, MAGIC, VERSION, KIND_COORD, section_name)
         .context("coordinator snapshot")?;
@@ -370,6 +384,7 @@ pub fn decode_coordinator(bytes: &[u8], expect_naggs: usize) -> Result<CoordSnap
 pub struct Manifest {
     /// Job identity (`algo/engine` + result-affecting knobs).
     pub label: String,
+    /// Cluster shape the checkpoint was written with.
     pub partitions: u32,
     /// Committed epochs, ascending.
     pub epochs: Vec<u64>,
@@ -547,12 +562,14 @@ pub struct CheckpointReader {
 }
 
 impl CheckpointReader {
+    /// Open a checkpoint directory (reads its manifest).
     pub fn open(dir: &Path) -> Result<CheckpointReader> {
         let manifest = read_manifest(dir)
             .with_context(|| format!("open checkpoint dir {}", dir.display()))?;
         Ok(CheckpointReader { dir: dir.to_path_buf(), manifest })
     }
 
+    /// The directory's commit record.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
@@ -563,22 +580,23 @@ impl CheckpointReader {
         epoch_dir(&self.dir, epoch).join(format!("part_{p}.ckpt"))
     }
 
-    /// Checksum-scrub every file of a committed epoch — including each
-    /// file's kind byte, the one header byte no section checksum
-    /// covers, so a rotted kind falls back like any other corruption
-    /// instead of surviving validation and failing mid-resume. The
-    /// error names the corrupt file and section.
-    pub fn validate_epoch(&self, epoch: u64) -> Result<()> {
+    /// Read *and* checksum-scrub every file of a committed epoch in one
+    /// pass — including each file's kind byte, the one header byte no
+    /// section checksum covers, so a rotted kind falls back like any
+    /// other corruption instead of surviving validation and failing
+    /// mid-resume. The error names the corrupt file and section.
+    ///
+    /// Returning the bytes is the point: resume hands each worker its
+    /// already-validated snapshot ([`WorkerResume::bytes`]) instead of
+    /// validating the whole epoch and then re-reading every file from
+    /// disk a second time.
+    pub fn read_valid_epoch(&self, epoch: u64) -> Result<ValidatedEpoch> {
         ensure!(
             self.manifest.epochs.contains(&epoch),
             "epoch {epoch} is not committed in {}",
             self.dir.display()
         );
-        let mut paths: Vec<(PathBuf, u8)> = (0..self.manifest.partitions)
-            .map(|p| (self.partition_path(epoch, p), KIND_PARTITION))
-            .collect();
-        paths.push((epoch_dir(&self.dir, epoch).join("coord.ckpt"), KIND_COORD));
-        for (path, kind) in paths {
+        let read_checked = |path: PathBuf, kind: u8| -> Result<Vec<u8>> {
             let bytes =
                 fs::read(&path).with_context(|| format!("read {}", path.display()))?;
             let report = scrub_file_of_kind(&bytes, kind)
@@ -590,21 +608,42 @@ impl CheckpointReader {
                     path.display()
                 );
             }
+            Ok(bytes)
+        };
+        let mut partitions = Vec::with_capacity(self.manifest.partitions as usize);
+        for p in 0..self.manifest.partitions {
+            partitions
+                .push(Arc::new(read_checked(self.partition_path(epoch, p), KIND_PARTITION)?));
         }
-        Ok(())
+        let coord =
+            read_checked(epoch_dir(&self.dir, epoch).join("coord.ckpt"), KIND_COORD)?;
+        Ok(ValidatedEpoch { epoch, partitions, coord })
+    }
+
+    /// Checksum-scrub every file of a committed epoch, discarding the
+    /// bytes (see [`CheckpointReader::read_valid_epoch`]).
+    pub fn validate_epoch(&self, epoch: u64) -> Result<()> {
+        self.read_valid_epoch(epoch).map(|_| ())
     }
 
     /// The newest committed epoch that validates end to end, falling
     /// back past corrupt epochs (the torn-write / bit-rot recovery
     /// rule). Errors only when no committed epoch survives.
     pub fn latest_valid(&self) -> Result<u64> {
+        self.latest_valid_epoch().map(|e| e.epoch)
+    }
+
+    /// Like [`CheckpointReader::latest_valid`], but keeps the validated
+    /// bytes so the caller never re-reads what the scrub already pulled
+    /// off disk.
+    pub fn latest_valid_epoch(&self) -> Result<ValidatedEpoch> {
         if self.manifest.epochs.is_empty() {
             bail!("no committed epoch in {}", self.dir.display());
         }
         let mut last_err = None;
         for &e in self.manifest.epochs.iter().rev() {
-            match self.validate_epoch(e) {
-                Ok(()) => return Ok(e),
+            match self.read_valid_epoch(e) {
+                Ok(v) => return Ok(v),
                 Err(err) => last_err = Some(err),
             }
         }
@@ -656,37 +695,64 @@ pub fn create_writer(
     CheckpointWriter::create(&ck.dir, &ck.label, partitions, continuing)
 }
 
+/// A committed epoch with every snapshot file read *and*
+/// checksum-validated exactly once (see
+/// [`CheckpointReader::read_valid_epoch`]). Partition bytes are
+/// `Arc`-shared so each worker thread can hold its snapshot without
+/// copying.
+pub struct ValidatedEpoch {
+    /// The committed epoch number (= the superstep it snapshots).
+    pub epoch: u64,
+    /// Per-worker partition snapshot bytes, indexed by partition id.
+    pub partitions: Vec<Arc<Vec<u8>>>,
+    /// Coordinator snapshot bytes.
+    pub coord: Vec<u8>,
+}
+
+/// Everything [`open_resume`] loads for a resuming run: the open
+/// reader, the decoded coordinator snapshot, and the validated snapshot
+/// bytes of the epoch being resumed.
+pub struct ResumeState {
+    /// Reader over the checkpoint directory being resumed from.
+    pub reader: CheckpointReader,
+    /// Decoded coordinator snapshot (aggregator history).
+    pub coord: CoordSnapshot,
+    /// The validated epoch, bytes included.
+    pub epoch: ValidatedEpoch,
+}
+
 /// Per-worker resume instructions, derived from [`open_resume`]'s
-/// result by [`worker_resume`]: the worker's snapshot file in the
-/// epoch being resumed, plus the globals folded at that epoch's
-/// barrier (what the worker observes as the previous barrier's
+/// result by [`worker_resume`]: the worker's already-validated snapshot
+/// bytes for the epoch being resumed, plus the globals folded at that
+/// epoch's barrier (what the worker observes as the previous barrier's
 /// aggregates).
 pub struct WorkerResume {
+    /// The snapshot file the bytes came from (error context only — the
+    /// file is *not* re-read).
     pub path: PathBuf,
+    /// The worker's snapshot bytes, read + checksummed once by
+    /// [`open_resume`].
+    pub bytes: Arc<Vec<u8>>,
+    /// The epoch being resumed.
     pub epoch: u64,
+    /// Globals folded at the resumed epoch's barrier.
     pub globals: Vec<f64>,
 }
 
 /// Build worker `p`'s resume instructions (shared by both engines).
-pub fn worker_resume(
-    reader: &CheckpointReader,
-    coord: &CoordSnapshot,
-    p: u32,
-) -> WorkerResume {
+pub fn worker_resume(rs: &ResumeState, p: u32) -> WorkerResume {
     WorkerResume {
-        path: reader.partition_path(coord.epoch, p),
-        epoch: coord.epoch,
-        globals: coord.history.last().cloned().unwrap_or_default(),
+        path: rs.reader.partition_path(rs.epoch.epoch, p),
+        bytes: rs.epoch.partitions[p as usize].clone(),
+        epoch: rs.epoch.epoch,
+        globals: rs.coord.history.last().cloned().unwrap_or_default(),
     }
 }
 
-/// Open a resume target and load its coordinator snapshot, validating
-/// the cluster shape and aggregator count against the resuming run.
-pub fn open_resume(
-    rp: &ResumePoint,
-    partitions: usize,
-    naggs: usize,
-) -> Result<(CheckpointReader, CoordSnapshot)> {
+/// Open a resume target: read + checksum-validate the whole epoch in
+/// one pass, decode its coordinator snapshot, and validate the cluster
+/// shape and aggregator count against the resuming run.
+pub fn open_resume(rp: &ResumePoint, partitions: usize, naggs: usize) -> Result<ResumeState> {
     let reader = CheckpointReader::open(&rp.dir)?;
     ensure!(
         reader.manifest().partitions as usize == partitions,
@@ -694,14 +760,24 @@ pub fn open_resume(
         rp.dir.display(),
         reader.manifest().partitions
     );
-    let coord = reader.load_coordinator(rp.epoch, naggs)?;
+    let epoch = reader.read_valid_epoch(rp.epoch)?;
+    let coord_path = epoch_dir(&rp.dir, rp.epoch).join("coord.ckpt");
+    let coord = decode_coordinator(&epoch.coord, naggs)
+        .with_context(|| format!("decode {}", coord_path.display()))?;
+    ensure!(
+        coord.epoch == rp.epoch,
+        "coordinator snapshot at {} is for epoch {}, expected {}",
+        coord_path.display(),
+        coord.epoch,
+        rp.epoch
+    );
     ensure!(
         coord.history.len() == rp.epoch as usize,
         "coordinator snapshot covers {} supersteps, expected {}",
         coord.history.len(),
         rp.epoch
     );
-    Ok((reader, coord))
+    Ok(ResumeState { reader, coord, epoch })
 }
 
 // ------------------------------------------------------------------ scrub
@@ -939,6 +1015,37 @@ mod tests {
         b2[last] ^= 0xff;
         fs::write(&path2, &b2).unwrap();
         assert!(r.latest_valid().is_err());
+    }
+
+    #[test]
+    fn read_valid_epoch_hands_back_exact_file_bytes() {
+        // The resume path must decode from the bytes the validation
+        // pass already read (no second read): assert those bytes are
+        // exactly what sits on disk.
+        let dir = tmp("read_valid");
+        let w = CheckpointWriter::create(&dir, "cc/gopher", 2, false).unwrap();
+        for p in 0..2 {
+            w.write_partition(3, p, &sample_partition(3, p)).unwrap();
+        }
+        w.commit(3, &encode_coordinator(3, 0, &vec![vec![]; 3])).unwrap();
+        let r = CheckpointReader::open(&dir).unwrap();
+        let v = r.read_valid_epoch(3).unwrap();
+        assert_eq!(v.epoch, 3);
+        assert_eq!(v.partitions.len(), 2);
+        for p in 0..2u32 {
+            let disk = fs::read(r.partition_path(3, p)).unwrap();
+            assert_eq!(*v.partitions[p as usize], disk);
+        }
+        let coord_disk = fs::read(epoch_dir(&dir, 3).join("coord.ckpt")).unwrap();
+        assert_eq!(v.coord, coord_disk);
+        assert_eq!(r.latest_valid_epoch().unwrap().epoch, r.latest_valid().unwrap());
+
+        // Worker resume instructions carry the validated bytes through.
+        let rs = open_resume(&ResumePoint { dir: dir.clone(), epoch: 3 }, 2, 0).unwrap();
+        let wr = worker_resume(&rs, 1);
+        assert_eq!(wr.epoch, 3);
+        assert_eq!(*wr.bytes, fs::read(&wr.path).unwrap());
+        assert!(wr.globals.is_empty());
     }
 
     #[test]

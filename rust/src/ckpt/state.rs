@@ -22,7 +22,9 @@ use crate::util::codec::{Decoder, Encoder};
 
 /// Deterministic, self-delimiting binary codec for checkpointed state.
 pub trait StateCodec: Sized {
+    /// Append this value's deterministic encoding to `e`.
     fn encode_state(&self, e: &mut Encoder);
+    /// Decode one value from `d` (exactly what [`StateCodec::encode_state`] wrote).
     fn decode_state(d: &mut Decoder) -> Result<Self>;
 }
 

@@ -7,6 +7,8 @@
 //! goffish store     --graph g.txt --k 4 --out storedir [--strategy …] [--name NAME]
 //!                   [--format v1|v2|v3] [--attrs N]
 //! goffish store verify [--store storedir] [--ckpt ckptdir]
+//! goffish serve     --store storedir [--port P] [--workers N] [--queue N]
+//!                   [--cores N]
 //! goffish run       --store storedir
 //!                   --algo <any algos::registry entry>
 //!                   [--engine gopher|vertex] [--source V] [--supersteps N]
@@ -39,6 +41,12 @@
 //! in [`crate::algos::registry`] — adding an algorithm requires no CLI
 //! edits beyond its registry entry. `--output` dumps the uniform
 //! `JobOutput::values` as `vertex<TAB>value` lines.
+//!
+//! `serve` loads the store once and keeps it resident behind a small
+//! HTTP/1.1 job API on 127.0.0.1 (submit, poll, page results, cancel);
+//! see `docs/API.md` for the endpoint reference and
+//! [`crate::serve`] for the architecture. Results fetched with
+//! `?format=tsv` are byte-identical to `run --output` for the same job.
 //!
 //! Fault tolerance: `--checkpoint-every N --checkpoint-dir D` snapshots
 //! every N supersteps; after a crash, `run --resume D` restarts from
@@ -77,6 +85,7 @@ pub fn dispatch(argv: Vec<String>) -> Result<()> {
         }
         "store" => cmd_store(&args),
         "run" => cmd_run(&args),
+        "serve" => cmd_serve(&args),
         "algos" => cmd_algos(),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
@@ -97,6 +106,8 @@ commands:
   run          execute an algorithm with Gopher or the vertex baseline
                (checkpoint with --checkpoint-every/--checkpoint-dir, recover
                with --resume)
+  serve        resident job server: load a store once, accept jobs over
+               an HTTP API (see docs/API.md)
   algos        per-engine algorithm support matrix
   help         this message
 
@@ -366,6 +377,37 @@ fn cmd_run(args: &Args) -> Result<()> {
         write_values_tsv(Path::new(path), &out.values)?;
         println!("wrote {} vertex values to {path}", out.values.len());
     }
+    Ok(())
+}
+
+/// `serve`: load the store once, then run jobs submitted over HTTP
+/// against the resident graph until the process is killed. The two
+/// `println!`s below are the startup handshake the CI smoke waits on.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let root = args.require("store")?;
+    let resident = crate::serve::ResidentGraph::open(Path::new(root))?;
+    let port_raw = args.get_usize("port", 8080)?;
+    let port = u16::try_from(port_raw)
+        .with_context(|| format!("--port expects 0..=65535, got {port_raw}"))?;
+    let opts = crate::serve::ServeOptions {
+        port,
+        workers: args.get_usize("workers", 2)?,
+        queue: args.get_usize("queue", 16)?,
+        cores: args.get_usize("cores", 4)?,
+    };
+    println!(
+        "loaded {} ({}, {} partitions / {} sub-graphs / {} vertices / {} edges) in {:.3}s",
+        resident.store().meta().name,
+        resident.store().meta().format,
+        resident.store().meta().num_partitions,
+        resident.graph().num_subgraphs(),
+        resident.store().meta().num_vertices,
+        resident.store().meta().num_edges,
+        resident.load().seconds,
+    );
+    let server = crate::serve::Server::start(resident, &opts)?;
+    println!("serving on http://{}", server.addr());
+    server.serve_forever();
     Ok(())
 }
 

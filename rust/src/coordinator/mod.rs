@@ -24,6 +24,59 @@
 //! plane schema-free while covering counts, residuals, and extrema. The
 //! design is engine-agnostic — `gopher::engine` threads it through its
 //! manager/worker protocol, and nothing here depends on Gopher types.
+//!
+//! The barrier is also where external supervision attaches: a
+//! [`RunControl`] handle (shared atomics) lets the `serve` layer watch
+//! per-superstep progress and request cancellation, which the managers
+//! honor at the next barrier.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Shared live-control handle for one run: an external supervisor (the
+/// `serve` job registry) watches per-superstep progress and can request
+/// cancellation; both engines' managers touch it at every barrier.
+///
+/// Cloning shares the underlying atomics, so a handle kept by the
+/// supervisor observes the engine's updates. Everything is lock-free —
+/// the manager writes once per barrier, observers poll — and the type
+/// stays `Clone + Debug + Default` so the engine configs can keep their
+/// derives.
+#[derive(Clone, Debug, Default)]
+pub struct RunControl {
+    cancel: Arc<AtomicBool>,
+    superstep: Arc<AtomicUsize>,
+}
+
+impl RunControl {
+    /// Fresh handle: not cancelled, zero supersteps completed.
+    pub fn new() -> RunControl {
+        RunControl::default()
+    }
+
+    /// Request cancellation. The manager honors it at the next barrier
+    /// (so the job stops within one superstep) and the run errors out
+    /// with a "cancelled" failure instead of returning partial output.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+
+    /// Whether cancellation has been requested.
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.load(Ordering::Relaxed)
+    }
+
+    /// Manager-side: record that barrier `superstep` completed.
+    pub fn publish_superstep(&self, superstep: usize) {
+        self.superstep.store(superstep, Ordering::Relaxed);
+    }
+
+    /// Observer-side: the last completed superstep (0 before the first
+    /// barrier).
+    pub fn superstep(&self) -> usize {
+        self.superstep.load(Ordering::Relaxed)
+    }
+}
 
 /// A commutative monoid over `f64`: the fold applied worker-side per
 /// contribution and manager-side across workers.
@@ -282,6 +335,18 @@ mod tests {
         let rev: Vec<Vec<f64>> = parts.iter().rev().cloned().collect();
         let bwd = b.fold_superstep(&rev);
         assert_eq!(fwd, bwd);
+    }
+
+    #[test]
+    fn run_control_is_shared_across_clones() {
+        let ctl = RunControl::new();
+        let observer = ctl.clone();
+        assert!(!observer.is_cancelled());
+        assert_eq!(observer.superstep(), 0);
+        ctl.publish_superstep(7);
+        ctl.cancel();
+        assert!(observer.is_cancelled());
+        assert_eq!(observer.superstep(), 7);
     }
 
     #[test]

@@ -78,6 +78,11 @@ pub struct GopherConfig {
     /// Failure-injection testing hook: the named worker aborts at the
     /// start of the named superstep.
     pub fail_at: Option<ckpt::FailPoint>,
+    /// Live run-control handle: the manager publishes each completed
+    /// superstep through it and honors a cancellation request at the
+    /// next barrier (the job then errors out as cancelled). `None` for
+    /// unsupervised runs; the `serve` layer attaches one per job.
+    pub control: Option<crate::coordinator::RunControl>,
 }
 
 impl Default for GopherConfig {
@@ -92,6 +97,7 @@ impl Default for GopherConfig {
             checkpoint: None,
             resume: None,
             fail_at: None,
+            control: None,
         }
     }
 }
@@ -301,10 +307,11 @@ where
         P::Msg,
     > = match resume {
         Some(r) => {
-            let bytes = std::fs::read(&r.path)
-                .with_context(|| format!("read checkpoint {}", r.path.display()))?;
+            // The snapshot bytes were read + checksum-validated exactly
+            // once by `ckpt::open_resume`; decode straight from the
+            // shared buffer instead of re-reading the file per worker.
             let snap = ckpt::decode_partition::<P::State, P::Msg, _>(
-                &bytes,
+                &r.bytes,
                 r.epoch,
                 me,
                 n_local,
@@ -609,11 +616,10 @@ fn run_inner<P: SubgraphProgram>(
         Some(ck) => Some(ckpt::create_writer(ck, cfg.resume.as_ref(), k as u32)?),
         None => None,
     };
-    let resume_coord: Option<(ckpt::CheckpointReader, ckpt::CoordSnapshot)> =
-        match &cfg.resume {
-            Some(rp) => Some(ckpt::open_resume(rp, k, aggs.len())?),
-            None => None,
-        };
+    let resume_state: Option<ckpt::ResumeState> = match &cfg.resume {
+        Some(rp) => Some(ckpt::open_resume(rp, k, aggs.len())?),
+        None => None,
+    };
     let base_superstep = cfg.resume.as_ref().map(|r| r.epoch as usize).unwrap_or(0);
 
     let (sync_tx, sync_rx) = channel::<WorkerSync>();
@@ -640,17 +646,17 @@ fn run_inner<P: SubgraphProgram>(
             // ---- workers
             let mut handles = Vec::with_capacity(k);
             let writer_ref = writer.as_ref();
-            let resume_ref = resume_coord.as_ref();
+            let resume_ref = resume_state.as_ref();
             let mut spawn_worker = |p: usize, fab_any: FabricAny| {
                 let sync_tx = sync_tx.clone();
                 let cmd_rx = cmd_rxs.remove(0);
                 let source = &source;
                 let directory = &directory;
                 let aggs = &aggs;
-                // Per-worker resume instructions (this worker's snapshot
-                // file + the globals folded at the resumed barrier).
-                let worker_resume = resume_ref
-                    .map(|(reader, coord)| ckpt::worker_resume(reader, coord, p as u32));
+                // Per-worker resume instructions (this worker's already
+                // validated snapshot bytes + the globals folded at the
+                // resumed barrier).
+                let worker_resume = resume_ref.map(|rs| ckpt::worker_resume(rs, p as u32));
                 handles.push(scope.spawn(move || -> Result<WorkerOutput<P::State>> {
                     let t_load = Instant::now();
                     let loaded = match source {
@@ -736,13 +742,14 @@ fn run_inner<P: SubgraphProgram>(
 
             // ---- manager loop (sync barrier + coordinator fold)
             let mut coordinator = match resume_ref {
-                Some((_, coord)) => {
-                    Coordinator::with_history(aggs.clone(), coord.history.clone())
+                Some(rs) => {
+                    Coordinator::with_history(aggs.clone(), rs.coord.history.clone())
                 }
                 None => Coordinator::new(aggs.clone()),
             };
             let mut superstep = base_superstep;
             let mut commit_err: Option<anyhow::Error> = None;
+            let mut cancelled = false;
             loop {
                 let mut sent_total = 0u64;
                 let mut all_quiescent = true;
@@ -793,9 +800,18 @@ fn run_inner<P: SubgraphProgram>(
                         }
                     }
                 }
+                // Run-control hook: publish progress for external
+                // observers and honor a cancellation request — workers
+                // are terminated at this barrier, so a cancelled job
+                // stops within one superstep of the request.
+                if let Some(ctl) = &cfg.control {
+                    ctl.publish_superstep(superstep);
+                    cancelled = ctl.is_cancelled();
+                }
                 let done = (all_quiescent && sent_total == 0)
                     || any_failed
-                    || commit_err.is_some();
+                    || commit_err.is_some()
+                    || cancelled;
                 for tx in &cmd_txs {
                     // A worker that already errored may have dropped its rx.
                     let _ = tx.send(if done {
@@ -821,6 +837,9 @@ fn run_inner<P: SubgraphProgram>(
             if let Some(e) = commit_err {
                 // The writer's own context already names the epoch/file.
                 return Err(e);
+            }
+            if cancelled {
+                bail!("job cancelled at superstep {superstep}");
             }
             // Workers superstep in lockstep (the barrier), so every
             // output holds the same number of per-superstep records.

@@ -43,32 +43,52 @@ pub enum JobError {
     MissingAlgo,
     /// No registry entry under this name.
     UnknownAlgo {
+        /// The name that failed to resolve.
         algo: String,
         /// The names that *are* registered.
         known: Vec<&'static str>,
     },
     /// The algorithm has no implementation for the requested engine.
-    UnsupportedEngine { algo: String, engine: EngineKind },
+    UnsupportedEngine {
+        /// The algorithm that lacks the implementation.
+        algo: String,
+        /// The engine that was requested.
+        engine: EngineKind,
+    },
     /// The knob is not meaningful on the requested engine.
     IncompatibleKnob {
+        /// The offending builder knob.
         knob: &'static str,
+        /// The engine it is incompatible with.
         engine: EngineKind,
+        /// Why, and what to do instead.
         hint: &'static str,
     },
     /// Inconsistent checkpointing knobs (e.g. a cadence without a
     /// directory, or a zero cadence).
-    CheckpointConfig { reason: &'static str },
+    CheckpointConfig {
+        /// What is inconsistent.
+        reason: &'static str,
+    },
     /// `resume_from` names a directory with no recoverable checkpoint:
     /// missing/unreadable manifest, no committed epoch, or every
     /// committed epoch failed checksum validation.
-    NoCheckpoint { dir: String, reason: String },
+    NoCheckpoint {
+        /// The directory that was named.
+        dir: String,
+        /// Why nothing in it is recoverable.
+        reason: String,
+    },
     /// `resume_from` names a checkpoint written by a different job:
     /// another algorithm/engine, or the same one with different
     /// result-affecting parameters (source, supersteps, epsilon,
     /// combiners, kernel, cores).
     CheckpointMismatch {
+        /// The directory that was named.
         dir: String,
+        /// This job's manifest label.
         expected: String,
+        /// The label found in the directory.
         found: String,
     },
 }
@@ -128,6 +148,7 @@ pub struct JobBuilder {
     checkpoint_dir: Option<PathBuf>,
     resume_from: Option<PathBuf>,
     kill_at: Option<ckpt::FailPoint>,
+    control: Option<crate::coordinator::RunControl>,
 }
 
 impl Default for JobBuilder {
@@ -148,6 +169,7 @@ impl Default for JobBuilder {
             checkpoint_dir: None,
             resume_from: None,
             kill_at: None,
+            control: None,
         }
     }
 }
@@ -265,6 +287,18 @@ impl JobBuilder {
     /// kill-and-resume recovery tests and the CLI `--kill-at` flag.
     pub fn kill_at(mut self, superstep: usize, worker: u32) -> Self {
         self.kill_at = Some(ckpt::FailPoint { superstep, worker });
+        self
+    }
+
+    /// Attach a live run-control handle
+    /// ([`crate::coordinator::RunControl`]): the engine manager
+    /// publishes each completed superstep through it and honors a
+    /// cancellation request at the next barrier, erroring the run out
+    /// as cancelled. Not result-affecting (it is excluded from the
+    /// checkpoint label). This is how the `serve` layer supervises
+    /// resident jobs; engine-agnostic.
+    pub fn control(mut self, ctl: crate::coordinator::RunControl) -> Self {
+        self.control = Some(ctl);
         self
     }
 
@@ -399,6 +433,7 @@ impl JobBuilder {
             checkpoint,
             resume,
             fail_at: self.kill_at,
+            control: self.control,
         })
     }
 }

@@ -135,8 +135,11 @@ pub enum JobSource<'a> {
     Store(&'a Store),
     /// A full graph plus a partitioner to scatter it with.
     Graph {
+        /// The graph to run over.
         graph: &'a Graph,
+        /// Partitioner used to scatter it.
         partitioner: &'a dyn Partitioner,
+        /// Number of partitions (workers).
         partitions: usize,
     },
 }
@@ -162,6 +165,9 @@ pub struct Job {
     pub(crate) resume: Option<ckpt::ResumePoint>,
     /// Failure-injection testing hook.
     pub(crate) fail_at: Option<ckpt::FailPoint>,
+    /// Live run-control handle threaded into the engine managers
+    /// (supervised runs: progress + cancellation; see `serve`).
+    pub(crate) control: Option<crate::coordinator::RunControl>,
 }
 
 impl std::fmt::Debug for Job {
@@ -233,6 +239,7 @@ impl Job {
                     checkpoint,
                     resume,
                     fail_at: self.fail_at,
+                    control: self.control.clone(),
                     ..Default::default()
                 };
                 let run = self.entry.gopher.expect("validated at build time");
@@ -258,6 +265,7 @@ impl Job {
                     checkpoint,
                     resume,
                     fail_at: self.fail_at,
+                    control: self.control.clone(),
                     ..Default::default()
                 };
                 let run = self.entry.vertex.expect("validated at build time");

@@ -21,19 +21,39 @@
 //! Python never runs on the request path: `runtime` loads the AOT HLO
 //! artifacts via PJRT and executes them from Gopher's superstep hot loop.
 
+// Public API documentation is enforced module-by-module: modules that
+// have had a docs audit warn on any undocumented public item; the rest
+// carry an explicit allow until their audit lands. Burn-down: remove an
+// `#[allow]` below after documenting that module's public surface.
+#![warn(missing_docs)]
+
+#[allow(missing_docs)]
 pub mod util;
+#[allow(missing_docs)]
 pub mod graph;
+#[allow(missing_docs)]
 pub mod partition;
 pub mod gofs;
 pub mod ckpt;
+#[allow(missing_docs)]
 pub mod coordinator;
+#[allow(missing_docs)]
 pub mod gopher;
+#[allow(missing_docs)]
 pub mod pregel;
+#[allow(missing_docs)]
 pub mod algos;
 pub mod job;
+#[allow(missing_docs)]
 pub mod runtime;
+pub mod serve;
+#[allow(missing_docs)]
 pub mod sim;
+#[allow(missing_docs)]
 pub mod metrics;
+#[allow(missing_docs)]
 pub mod bench;
+#[allow(missing_docs)]
 pub mod cli;
+#[allow(missing_docs)]
 pub mod testing;

@@ -55,6 +55,10 @@ pub struct PregelConfig {
     /// Failure-injection testing hook: the named worker aborts at the
     /// start of the named superstep.
     pub fail_at: Option<ckpt::FailPoint>,
+    /// Live run-control handle: the manager publishes each completed
+    /// superstep through it and honors a cancellation request at the
+    /// next barrier (see the matching knob on `gopher::GopherConfig`).
+    pub control: Option<crate::coordinator::RunControl>,
 }
 
 impl Default for PregelConfig {
@@ -67,6 +71,7 @@ impl Default for PregelConfig {
             checkpoint: None,
             resume: None,
             fail_at: None,
+            control: None,
         }
     }
 }
@@ -234,10 +239,11 @@ where
         P::Msg,
     > = match resume {
         Some(r) => {
-            let bytes = std::fs::read(&r.path)
-                .with_context(|| format!("read checkpoint {}", r.path.display()))?;
+            // The snapshot bytes were read + checksum-validated exactly
+            // once by `ckpt::open_resume`; decode straight from the
+            // shared buffer instead of re-reading the file per worker.
             let snap = ckpt::decode_partition::<P::Value, P::Msg, _>(
-                &bytes,
+                &r.bytes,
                 r.epoch,
                 me,
                 n_local,
@@ -507,11 +513,10 @@ pub fn run<P: VertexProgram>(
         Some(ck) => Some(ckpt::create_writer(ck, cfg.resume.as_ref(), k as u32)?),
         None => None,
     };
-    let resume_coord: Option<(ckpt::CheckpointReader, ckpt::CoordSnapshot)> =
-        match &cfg.resume {
-            Some(rp) => Some(ckpt::open_resume(rp, k, aggs.len())?),
-            None => None,
-        };
+    let resume_state: Option<ckpt::ResumeState> = match &cfg.resume {
+        Some(rp) => Some(ckpt::open_resume(rp, k, aggs.len())?),
+        None => None,
+    };
     let base_superstep = cfg.resume.as_ref().map(|r| r.epoch as usize).unwrap_or(0);
 
     let (sync_tx, sync_rx) = channel::<WorkerSync>();
@@ -543,13 +548,12 @@ pub fn run<P: VertexProgram>(
             }
             let aggs_ref = &aggs;
             let writer_ref = writer.as_ref();
-            let resume_ref = resume_coord.as_ref();
+            let resume_ref = resume_state.as_ref();
             let mut spawn_worker = |p: usize, fab: FabricAny| {
                 let sync_tx = sync_tx.clone();
                 let cmd_rx = cmd_rxs.remove(0);
                 let my_vertices = parts.vertices_of(p as u32);
-                let worker_resume = resume_ref
-                    .map(|(reader, coord)| ckpt::worker_resume(reader, coord, p as u32));
+                let worker_resume = resume_ref.map(|rs| ckpt::worker_resume(rs, p as u32));
                 handles.push(scope.spawn(move || match fab {
                     FabricAny::InProc(f) => worker_body(
                         program, f, cfg, aggs_ref, graph, parts, my_vertices,
@@ -577,13 +581,14 @@ pub fn run<P: VertexProgram>(
 
             // ---- manager loop (sync barrier + coordinator fold)
             let mut coordinator = match resume_ref {
-                Some((_, coord)) => {
-                    Coordinator::with_history(aggs.clone(), coord.history.clone())
+                Some(rs) => {
+                    Coordinator::with_history(aggs.clone(), rs.coord.history.clone())
                 }
                 None => Coordinator::new(aggs.clone()),
             };
             let mut superstep = base_superstep;
             let mut commit_err: Option<anyhow::Error> = None;
+            let mut cancelled = false;
             loop {
                 let mut sent_total = 0u64;
                 let mut all_quiescent = true;
@@ -628,9 +633,18 @@ pub fn run<P: VertexProgram>(
                         }
                     }
                 }
+                // Run-control hook: publish progress for external
+                // observers and honor a cancellation request — workers
+                // are terminated at this barrier, so a cancelled job
+                // stops within one superstep of the request.
+                if let Some(ctl) = &cfg.control {
+                    ctl.publish_superstep(superstep);
+                    cancelled = ctl.is_cancelled();
+                }
                 let done = (all_quiescent && sent_total == 0)
                     || any_failed
-                    || commit_err.is_some();
+                    || commit_err.is_some()
+                    || cancelled;
                 for tx in &cmd_txs {
                     // A worker that already errored may have dropped its rx.
                     let _ = tx.send(if done {
@@ -655,6 +669,9 @@ pub fn run<P: VertexProgram>(
             if let Some(e) = commit_err {
                 // The writer's own context already names the epoch/file.
                 return Err(e);
+            }
+            if cancelled {
+                bail!("job cancelled at superstep {superstep}");
             }
             Ok((outs, coordinator.into_traces()))
         });

@@ -1,0 +1,302 @@
+//! Minimal HTTP/1.1 plumbing for the job server.
+//!
+//! Hand-rolled on `std::io` for the same reason the JSON layer is: no
+//! dependencies. This is deliberately not a general HTTP
+//! implementation — it supports exactly what the documented API needs:
+//!
+//! * one request per connection (`Connection: close` on every
+//!   response, so clients never have to reason about keep-alive);
+//! * `Content-Length` bodies only (no chunked transfer encoding);
+//! * percent-decoded query strings;
+//! * hard caps on request-line/header/body sizes, so a misbehaving
+//!   client cannot balloon server memory.
+
+use std::io::{BufRead, Read, Write};
+
+use anyhow::{ensure, Context, Result};
+
+/// Longest accepted request/header line, in bytes.
+const MAX_LINE: usize = 8 * 1024;
+/// Most headers accepted per request.
+const MAX_HEADERS: usize = 100;
+/// Largest accepted request body, in bytes.
+const MAX_BODY: usize = 4 * 1024 * 1024;
+
+/// One parsed HTTP request.
+#[derive(Debug)]
+pub(crate) struct Request {
+    /// Request method, as sent (`GET`, `POST`, `DELETE`, …).
+    pub method: String,
+    /// Percent-decoded path component (no query string).
+    pub path: String,
+    /// Percent-decoded query parameters, in order of appearance.
+    pub query: Vec<(String, String)>,
+    /// Raw request body (`Content-Length` bytes).
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First value of a query parameter, if present.
+    pub fn query_get(&self, key: &str) -> Option<&str> {
+        self.query
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Integer query parameter with a default; `Err` carries a
+    /// client-facing message for a 400 response.
+    pub fn query_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.query_get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| format!("query parameter {key:?} expects an integer, got {s:?}")),
+        }
+    }
+}
+
+/// Read one request from the connection. `Ok(None)` means the client
+/// closed the connection cleanly before sending anything.
+pub(crate) fn read_request(r: &mut dyn BufRead) -> Result<Option<Request>> {
+    let mut line = String::new();
+    let n = r
+        .take_line(&mut line)
+        .context("read request line")?;
+    if n == 0 {
+        return Ok(None);
+    }
+    let line = line.trim_end_matches(['\r', '\n']);
+    let mut parts = line.split(' ');
+    let method = parts.next().unwrap_or("").to_string();
+    let target = parts.next().unwrap_or("");
+    let version = parts.next().unwrap_or("");
+    ensure!(
+        !method.is_empty() && !target.is_empty() && version.starts_with("HTTP/1."),
+        "malformed request line {line:?}"
+    );
+
+    let mut content_length: usize = 0;
+    for i in 0.. {
+        ensure!(i < MAX_HEADERS, "too many request headers");
+        let mut h = String::new();
+        let n = r.take_line(&mut h).context("read header")?;
+        ensure!(n > 0, "connection closed inside headers");
+        let h = h.trim_end_matches(['\r', '\n']);
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v
+                    .trim()
+                    .parse()
+                    .with_context(|| format!("bad Content-Length {:?}", v.trim()))?;
+            }
+        }
+    }
+    ensure!(
+        content_length <= MAX_BODY,
+        "request body of {content_length} bytes exceeds the {MAX_BODY} byte cap"
+    );
+    let mut body = vec![0u8; content_length];
+    r.read_exact(&mut body).context("read request body")?;
+
+    let (raw_path, raw_query) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    let query = raw_query
+        .split('&')
+        .filter(|kv| !kv.is_empty())
+        .map(|kv| match kv.split_once('=') {
+            Some((k, v)) => (percent_decode(k), percent_decode(v)),
+            None => (percent_decode(kv), String::new()),
+        })
+        .collect();
+
+    Ok(Some(Request {
+        method,
+        path: percent_decode(raw_path),
+        query,
+        body,
+    }))
+}
+
+/// Length-capped line reader (a `read_line` that refuses to buffer an
+/// unbounded line from a hostile peer).
+trait TakeLine {
+    fn take_line(&mut self, out: &mut String) -> std::io::Result<usize>;
+}
+
+impl<R: BufRead + ?Sized> TakeLine for R {
+    fn take_line(&mut self, out: &mut String) -> std::io::Result<usize> {
+        let mut buf = Vec::new();
+        let mut limited = Read::take(&mut *self, MAX_LINE as u64 + 1);
+        let n = limited.read_until(b'\n', &mut buf)?;
+        if n > MAX_LINE {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "line too long",
+            ));
+        }
+        let s = String::from_utf8(buf).map_err(|_| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, "non-UTF-8 line")
+        })?;
+        out.push_str(&s);
+        Ok(n)
+    }
+}
+
+/// Decode `%XX` sequences and `+` (space). Invalid sequences pass
+/// through literally — the router will simply not match them.
+fn percent_decode(s: &str) -> String {
+    let b = s.as_bytes();
+    let mut out = Vec::with_capacity(b.len());
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'%' if i + 2 < b.len() => match (hexval(b[i + 1]), hexval(b[i + 2])) {
+                (Some(hi), Some(lo)) => {
+                    out.push((hi << 4) | lo);
+                    i += 3;
+                }
+                _ => {
+                    out.push(b'%');
+                    i += 1;
+                }
+            },
+            b'%' => {
+                // Too close to end-of-string to decode: pass through.
+                out.push(b'%');
+                i += 1;
+            }
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            c => {
+                out.push(c);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+fn hexval(c: u8) -> Option<u8> {
+    match c {
+        b'0'..=b'9' => Some(c - b'0'),
+        b'a'..=b'f' => Some(c - b'a' + 10),
+        b'A'..=b'F' => Some(c - b'A' + 10),
+        _ => None,
+    }
+}
+
+/// Standard reason phrase for the status codes the API uses.
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write a complete response and flush. Every response closes the
+/// connection (`Connection: close`).
+pub(crate) fn write_response(
+    w: &mut dyn Write,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+) -> std::io::Result<()> {
+    use std::fmt::Write as _;
+    let mut head = String::new();
+    let _ = write!(
+        head,
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        reason(status),
+        body.len()
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn req(raw: &str) -> Result<Option<Request>> {
+        read_request(&mut Cursor::new(raw.as_bytes().to_vec()))
+    }
+
+    #[test]
+    fn parses_get_with_query() {
+        let r = req("GET /v1/jobs/3/results?offset=10&limit=2&format=tsv HTTP/1.1\r\nHost: x\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/v1/jobs/3/results");
+        assert_eq!(r.query_get("offset"), Some("10"));
+        assert_eq!(r.query_usize("limit", 0).unwrap(), 2);
+        assert_eq!(r.query_get("format"), Some("tsv"));
+        assert_eq!(r.query_usize("missing", 7).unwrap(), 7);
+        assert!(r.query_usize("format", 0).is_err());
+        assert!(r.body.is_empty());
+    }
+
+    #[test]
+    fn parses_post_body_by_content_length() {
+        let r = req("POST /v1/jobs HTTP/1.1\r\nContent-Type: application/json\r\nContent-Length: 14\r\n\r\n{\"algo\":\"cc\"}\nEXTRA")
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.body, b"{\"algo\":\"cc\"}\n");
+    }
+
+    #[test]
+    fn percent_decoding() {
+        let r = req("GET /v1/jobs?name=a%20b+c&odd=%zz&tail=%2 HTTP/1.1\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.query_get("name"), Some("a b c"));
+        assert_eq!(r.query_get("odd"), Some("%zz"));
+        assert_eq!(r.query_get("tail"), Some("%2"));
+    }
+
+    #[test]
+    fn clean_eof_is_none() {
+        assert!(req("").unwrap().is_none());
+    }
+
+    #[test]
+    fn malformed_requests_rejected() {
+        assert!(req("GARBAGE\r\n\r\n").is_err());
+        assert!(req("GET /x HTTP/1.1\r\nContent-Length: nope\r\n\r\n").is_err());
+        assert!(req("GET /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort").is_err());
+        // Truncated mid-headers.
+        assert!(req("GET /x HTTP/1.1\r\nHost: y\r\n").is_err());
+        // Body cap.
+        let huge = format!("POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY + 1);
+        assert!(req(&huge).is_err());
+    }
+
+    #[test]
+    fn response_bytes_are_well_formed() {
+        let mut out = Vec::new();
+        write_response(&mut out, 404, "application/json", b"{\"error\":\"x\"}").unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 404 Not Found\r\n"), "{s}");
+        assert!(s.contains("Content-Length: 13\r\n"));
+        assert!(s.contains("Connection: close\r\n"));
+        assert!(s.ends_with("\r\n\r\n{\"error\":\"x\"}"));
+    }
+}

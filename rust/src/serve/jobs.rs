@@ -1,0 +1,492 @@
+//! The resident job registry: specs in, supervised executions out.
+//!
+//! A submitted job moves through a small state machine:
+//!
+//! ```text
+//!   queued ──▶ running ──▶ done
+//!     │           │    └──▶ failed
+//!     └──────────▶└───────▶ cancelled
+//! ```
+//!
+//! * **Admission is bounded.** Accepted jobs enter a
+//!   [`std::sync::mpsc::sync_channel`] whose capacity is the server's
+//!   `--queue` knob; when it is full, [`Jobs::submit`] refuses with
+//!   [`SubmitError::QueueFull`] (HTTP 503) instead of buffering
+//!   without limit.
+//! * **Validation happens at submit.** The spec is run through
+//!   [`crate::job::JobBuilder::build`] once at POST time, so unknown
+//!   algorithms and engine/knob mismatches come back as an immediate
+//!   400 with the builder's typed message — the same errors the CLI
+//!   prints — rather than a job that materializes already failed.
+//! * **Execution is supervised.** Each entry owns a
+//!   [`RunControl`]; the executor threads rebuild the job from its
+//!   spec (attaching that handle) and run it against the resident
+//!   graph. The engine managers publish the superstep through the
+//!   handle at every barrier and honor cancellation there, which is
+//!   what bounds `DELETE /v1/jobs/{id}` latency to one superstep.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::{mpsc, Arc, Mutex};
+
+use crate::coordinator::RunControl;
+use crate::job::{EngineKind, Job, JobError, JobOutput, JobSource};
+
+use super::json::JsonValue;
+use super::ResidentGraph;
+
+/// A job description as submitted over the API (`POST /v1/jobs` body).
+#[derive(Clone, Debug)]
+pub(crate) struct JobSpec {
+    /// Registered algorithm name (`algo`).
+    pub algo: String,
+    /// Engine to run on (`engine`: `"gopher"` | `"vertex"`).
+    pub engine: EngineKind,
+    /// Source vertex for BFS/SSSP (`source`).
+    pub source: u32,
+    /// Fixed iteration count / round cap (`supersteps`).
+    pub supersteps: Option<usize>,
+    /// PageRank convergence threshold (`epsilon`, Gopher only).
+    pub epsilon: Option<f32>,
+    /// Combiner toggle (`combiners`, Gopher only).
+    pub combiners: Option<bool>,
+    /// Superstep budget (`max_supersteps`).
+    pub max_supersteps: Option<usize>,
+    /// Cores per simulated worker (`cores`; defaults to the server's).
+    pub cores: usize,
+}
+
+/// A non-negative integral JSON number, or `None`.
+fn as_uint(v: &JsonValue) -> Option<u64> {
+    match v.as_f64() {
+        Some(n) if n >= 0.0 && n.fract() == 0.0 && n <= 2f64.powi(53) => {
+            Some(n as u64)
+        }
+        _ => None,
+    }
+}
+
+impl JobSpec {
+    /// Decode a spec from a request body. Errors are client-facing 400
+    /// messages. Unknown fields are rejected so that a misspelled knob
+    /// fails loudly instead of silently running with defaults.
+    pub fn from_json(v: &JsonValue, default_cores: usize) -> Result<JobSpec, String> {
+        let kvs = match v {
+            JsonValue::Obj(kvs) => kvs,
+            _ => return Err("request body must be a JSON object".to_string()),
+        };
+        let mut spec = JobSpec {
+            algo: String::new(),
+            engine: EngineKind::Gopher,
+            source: 0,
+            supersteps: None,
+            epsilon: None,
+            combiners: None,
+            max_supersteps: None,
+            cores: default_cores,
+        };
+        for (k, val) in kvs {
+            match k.as_str() {
+                "algo" => {
+                    spec.algo = val
+                        .as_str()
+                        .ok_or("field \"algo\" must be a string")?
+                        .to_string();
+                }
+                "engine" => match val.as_str() {
+                    Some("gopher") => spec.engine = EngineKind::Gopher,
+                    Some("vertex") => spec.engine = EngineKind::Vertex,
+                    _ => {
+                        return Err(
+                            "field \"engine\" must be \"gopher\" or \"vertex\"".to_string()
+                        )
+                    }
+                },
+                "source" => {
+                    spec.source = as_uint(val)
+                        .filter(|&n| n <= u64::from(u32::MAX))
+                        .ok_or("field \"source\" must be a vertex id")?
+                        as u32;
+                }
+                "supersteps" => {
+                    spec.supersteps = Some(
+                        as_uint(val).ok_or("field \"supersteps\" must be a non-negative integer")?
+                            as usize,
+                    );
+                }
+                "max_supersteps" => {
+                    spec.max_supersteps = Some(
+                        as_uint(val)
+                            .ok_or("field \"max_supersteps\" must be a non-negative integer")?
+                            as usize,
+                    );
+                }
+                "cores" => {
+                    spec.cores = as_uint(val)
+                        .filter(|&n| n >= 1)
+                        .ok_or("field \"cores\" must be a positive integer")?
+                        as usize;
+                }
+                "epsilon" => {
+                    spec.epsilon = Some(
+                        val.as_f64().ok_or("field \"epsilon\" must be a number")? as f32,
+                    );
+                }
+                "combiners" => {
+                    spec.combiners =
+                        Some(val.as_bool().ok_or("field \"combiners\" must be a boolean")?);
+                }
+                other => return Err(format!("unknown field {other:?} in job spec")),
+            }
+        }
+        if spec.algo.is_empty() {
+            return Err("field \"algo\" is required".to_string());
+        }
+        Ok(spec)
+    }
+
+    /// Build a runnable [`Job`] from this spec, attaching a supervision
+    /// handle. Called once at submit for validation (result dropped)
+    /// and again inside the executor thread that runs it.
+    pub fn build_job(&self, ctl: RunControl) -> Result<Job, JobError> {
+        let mut b = Job::builder()
+            .algo(self.algo.as_str())
+            .engine(self.engine)
+            .cores(self.cores)
+            .source_vertex(self.source)
+            .control(ctl);
+        if let Some(n) = self.supersteps {
+            b = b.supersteps(n);
+        }
+        if let Some(n) = self.max_supersteps {
+            b = b.max_supersteps(n);
+        }
+        if let Some(eps) = self.epsilon {
+            b = b.epsilon(eps);
+        }
+        if let Some(on) = self.combiners {
+            b = b.combiners(on);
+        }
+        b.build()
+    }
+}
+
+/// Lifecycle state of one registered job.
+pub(crate) enum JobState {
+    /// Accepted, waiting for an executor slot.
+    Queued,
+    /// An executor thread is running it.
+    Running,
+    /// Finished successfully; the output is held for paging.
+    Done(Box<JobOutput>),
+    /// The run errored (message retained).
+    Failed(String),
+    /// Cancelled — either dequeued-and-skipped, or stopped at a
+    /// superstep barrier mid-run.
+    Cancelled,
+}
+
+impl JobState {
+    /// Status string as reported over the API.
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done(_) => "done",
+            JobState::Failed(_) => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+}
+
+/// One registered job: immutable identity + spec, a live supervision
+/// handle, and the mutable state.
+pub(crate) struct JobEntry {
+    /// Server-assigned id (monotonic per server instance).
+    pub id: u64,
+    /// The spec as submitted (executors rebuild the job from it).
+    pub spec: JobSpec,
+    /// Supervision handle shared with the engine manager: superstep
+    /// progress out, cancellation in.
+    pub control: RunControl,
+    /// Current lifecycle state.
+    pub state: Mutex<JobState>,
+}
+
+/// Why a submit was refused.
+pub(crate) enum SubmitError {
+    /// The spec failed validation (client error → 400).
+    Invalid(String),
+    /// The admission queue is full, or the server is shutting down
+    /// (→ 503; retry later).
+    QueueFull,
+}
+
+/// What a cancel request achieved.
+pub(crate) enum CancelOutcome {
+    /// No job under that id.
+    NotFound,
+    /// Cancellation took (or will take) effect: the job was queued
+    /// (skipped outright), running (stops at the next barrier), or
+    /// already cancelled (idempotent).
+    Accepted,
+    /// The job already finished; nothing to cancel (→ 409). Carries
+    /// the terminal status name.
+    AlreadyFinished(&'static str),
+}
+
+struct Inner {
+    next_id: u64,
+    map: BTreeMap<u64, Arc<JobEntry>>,
+}
+
+/// The registry: id → entry, plus the bounded admission queue feeding
+/// the executor pool.
+pub(crate) struct Jobs {
+    inner: Mutex<Inner>,
+    tx: Mutex<Option<SyncSender<Arc<JobEntry>>>>,
+}
+
+impl Jobs {
+    /// Create a registry with an admission queue of `queue` slots.
+    /// Returns the receiver the executor pool drains.
+    pub fn new(queue: usize) -> (Jobs, Receiver<Arc<JobEntry>>) {
+        let (tx, rx) = mpsc::sync_channel(queue.max(1));
+        let jobs = Jobs {
+            inner: Mutex::new(Inner { next_id: 1, map: BTreeMap::new() }),
+            tx: Mutex::new(Some(tx)),
+        };
+        (jobs, rx)
+    }
+
+    /// Validate and enqueue a job. On success the entry is registered
+    /// (visible to `GET /v1/jobs`) and queued for execution.
+    pub fn submit(&self, spec: JobSpec) -> Result<Arc<JobEntry>, SubmitError> {
+        spec.build_job(RunControl::new())
+            .map_err(|e| SubmitError::Invalid(e.to_string()))?;
+        let entry = {
+            let mut inner = self.inner.lock().expect("jobs lock");
+            let id = inner.next_id;
+            inner.next_id += 1;
+            let entry = Arc::new(JobEntry {
+                id,
+                spec,
+                control: RunControl::new(),
+                state: Mutex::new(JobState::Queued),
+            });
+            inner.map.insert(id, entry.clone());
+            entry
+        };
+        let refused = {
+            let tx = self.tx.lock().expect("jobs tx lock");
+            match tx.as_ref() {
+                None => true, // shutting down
+                Some(tx) => tx.try_send(entry.clone()).is_err(),
+            }
+        };
+        if refused {
+            self.inner.lock().expect("jobs lock").map.remove(&entry.id);
+            return Err(SubmitError::QueueFull);
+        }
+        Ok(entry)
+    }
+
+    /// Look a job up by id.
+    pub fn get(&self, id: u64) -> Option<Arc<JobEntry>> {
+        self.inner.lock().expect("jobs lock").map.get(&id).cloned()
+    }
+
+    /// All registered jobs, in id order.
+    pub fn list(&self) -> Vec<Arc<JobEntry>> {
+        self.inner.lock().expect("jobs lock").map.values().cloned().collect()
+    }
+
+    /// Number of registered jobs.
+    pub fn count(&self) -> usize {
+        self.inner.lock().expect("jobs lock").map.len()
+    }
+
+    /// Request cancellation of a job.
+    pub fn cancel(&self, id: u64) -> CancelOutcome {
+        let Some(entry) = self.get(id) else {
+            return CancelOutcome::NotFound;
+        };
+        let mut st = entry.state.lock().expect("job state lock");
+        match &*st {
+            JobState::Queued => {
+                entry.control.cancel();
+                *st = JobState::Cancelled;
+                CancelOutcome::Accepted
+            }
+            JobState::Running => {
+                entry.control.cancel();
+                CancelOutcome::Accepted
+            }
+            JobState::Cancelled => CancelOutcome::Accepted,
+            JobState::Done(_) => CancelOutcome::AlreadyFinished("done"),
+            JobState::Failed(_) => CancelOutcome::AlreadyFinished("failed"),
+        }
+    }
+
+    /// Close the admission queue (shutdown): executors exit after
+    /// draining what was already accepted; new submits get 503.
+    pub fn close(&self) {
+        self.tx.lock().expect("jobs tx lock").take();
+    }
+}
+
+/// One executor thread: drain the admission queue until it closes.
+///
+/// The receiver sits behind a mutex so `--workers N` threads can share
+/// it; whichever thread wins the lock takes the next job. Cancelled
+/// queued entries are skipped without running.
+pub(crate) fn executor_loop(
+    rx: Arc<Mutex<Receiver<Arc<JobEntry>>>>,
+    resident: Arc<ResidentGraph>,
+) {
+    loop {
+        let next = {
+            let rx = rx.lock().expect("executor queue lock");
+            rx.recv()
+        };
+        let Ok(entry) = next else {
+            return; // queue closed: shutdown
+        };
+        {
+            let mut st = entry.state.lock().expect("job state lock");
+            if matches!(*st, JobState::Queued) {
+                *st = JobState::Running;
+            } else {
+                continue; // cancelled while queued
+            }
+        }
+        // Rebuild from the spec inside this thread (the spec is plain
+        // data; a built Job need not cross threads) with the entry's
+        // live supervision handle attached.
+        let job = match entry.spec.build_job(entry.control.clone()) {
+            Ok(job) => job,
+            Err(e) => {
+                *entry.state.lock().expect("job state lock") =
+                    JobState::Failed(e.to_string());
+                continue;
+            }
+        };
+        let outcome = job.run(JobSource::InMemory(resident.graph()));
+        let mut st = entry.state.lock().expect("job state lock");
+        *st = match outcome {
+            Ok(out) => JobState::Done(Box::new(out)),
+            Err(_) if entry.control.is_cancelled() => JobState::Cancelled,
+            Err(e) => JobState::Failed(format!("{e:#}")),
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(algo: &str) -> JobSpec {
+        JobSpec {
+            algo: algo.to_string(),
+            engine: EngineKind::Gopher,
+            source: 0,
+            supersteps: None,
+            epsilon: None,
+            combiners: None,
+            max_supersteps: None,
+            cores: 2,
+        }
+    }
+
+    #[test]
+    fn spec_decodes_and_rejects() {
+        let v = JsonValue::parse(
+            "{\"algo\":\"sssp\",\"engine\":\"vertex\",\"source\":7,\"supersteps\":5,\
+             \"max_supersteps\":100,\"cores\":3}",
+        )
+        .unwrap();
+        let s = JobSpec::from_json(&v, 4).unwrap();
+        assert_eq!(s.algo, "sssp");
+        assert_eq!(s.engine, EngineKind::Vertex);
+        assert_eq!(s.source, 7);
+        assert_eq!(s.supersteps, Some(5));
+        assert_eq!(s.max_supersteps, Some(100));
+        assert_eq!(s.cores, 3);
+
+        // Defaults: engine gopher, server cores.
+        let s = JobSpec::from_json(&JsonValue::parse("{\"algo\":\"cc\"}").unwrap(), 4)
+            .unwrap();
+        assert_eq!(s.engine, EngineKind::Gopher);
+        assert_eq!(s.cores, 4);
+
+        for bad in [
+            "[]",
+            "{}",
+            "{\"algo\":1}",
+            "{\"algo\":\"cc\",\"engine\":\"quantum\"}",
+            "{\"algo\":\"cc\",\"source\":-1}",
+            "{\"algo\":\"cc\",\"source\":1.5}",
+            "{\"algo\":\"cc\",\"cores\":0}",
+            "{\"algo\":\"cc\",\"combiners\":\"yes\"}",
+            "{\"algo\":\"cc\",\"frobnicate\":true}",
+        ] {
+            let v = JsonValue::parse(bad).unwrap();
+            assert!(JobSpec::from_json(&v, 4).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn submit_validates_through_the_builder() {
+        let (jobs, _rx) = Jobs::new(4);
+        // Unknown algorithm → Invalid with the builder's message.
+        match jobs.submit(spec("frobnicate")) {
+            Err(SubmitError::Invalid(msg)) => {
+                assert!(msg.contains("unknown algorithm"), "{msg}");
+            }
+            _ => panic!("expected Invalid"),
+        }
+        // Engine/knob mismatch (epsilon on the vertex engine).
+        let mut s = spec("pagerank");
+        s.engine = EngineKind::Vertex;
+        s.epsilon = Some(0.1);
+        assert!(matches!(jobs.submit(s), Err(SubmitError::Invalid(_))));
+        // Rejected submits never register.
+        assert_eq!(jobs.count(), 0);
+    }
+
+    #[test]
+    fn admission_queue_is_bounded() {
+        let (jobs, rx) = Jobs::new(2);
+        // No executor draining: the third accepted submit finds the
+        // 2-slot channel full.
+        assert!(jobs.submit(spec("cc")).is_ok());
+        assert!(jobs.submit(spec("cc")).is_ok());
+        assert!(matches!(jobs.submit(spec("cc")), Err(SubmitError::QueueFull)));
+        // The refused job was unregistered again.
+        assert_eq!(jobs.count(), 2);
+        assert_eq!(jobs.list().len(), 2);
+        // After shutdown, submits are refused outright.
+        jobs.close();
+        assert!(matches!(jobs.submit(spec("cc")), Err(SubmitError::QueueFull)));
+        drop(rx);
+    }
+
+    #[test]
+    fn cancel_state_machine() {
+        let (jobs, _rx) = Jobs::new(4);
+        let entry = jobs.submit(spec("cc")).unwrap();
+        assert!(matches!(jobs.cancel(99), CancelOutcome::NotFound));
+        // Queued → cancelled without running; idempotent thereafter.
+        assert!(matches!(jobs.cancel(entry.id), CancelOutcome::Accepted));
+        assert!(entry.control.is_cancelled());
+        assert!(matches!(jobs.cancel(entry.id), CancelOutcome::Accepted));
+        assert_eq!(entry.state.lock().unwrap().name(), "cancelled");
+        // Terminal states refuse.
+        *entry.state.lock().unwrap() = JobState::Failed("boom".into());
+        assert!(matches!(
+            jobs.cancel(entry.id),
+            CancelOutcome::AlreadyFinished("failed")
+        ));
+    }
+}

@@ -1,0 +1,491 @@
+//! Hand-rolled JSON — the serve layer's wire format.
+//!
+//! The crate deliberately carries no serialization dependency (the
+//! container builds offline), so the HTTP API's request/response bodies
+//! go through this ~300-line value type instead: [`JsonValue`] with a
+//! deterministic renderer and a recursive-descent parser.
+//!
+//! Two properties matter to the server and are worth naming:
+//!
+//! * **Deterministic rendering.** Objects are backed by an ordered
+//!   `Vec<(String, JsonValue)>`, not a hash map, so the same value
+//!   always renders to the same bytes — that is what makes paged
+//!   `/v1/jobs/{id}/results` responses byte-stable across requests.
+//! * **TSV-compatible numbers.** Finite numbers render through Rust's
+//!   shortest-roundtrip `{}` formatting for `f64` — the exact
+//!   formatting the CLI's `--output` TSV writer uses — so a result
+//!   value fetched over the API prints identically to the same value
+//!   in a `goffish run --output` file, and `Display → parse` recovers
+//!   the original bits. Non-finite numbers render as `null` (JSON has
+//!   no representation for them).
+//!
+//! The parser is strict enough for an API surface: it rejects trailing
+//! garbage, caps nesting depth, and understands the full escape set
+//! including `\uXXXX` surrogate pairs.
+
+use anyhow::{bail, ensure, Result};
+
+/// Maximum nesting depth the parser accepts (defense against
+/// stack-overflow via `[[[[…`).
+const MAX_DEPTH: usize = 64;
+
+/// A parsed or to-be-rendered JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JsonValue {
+    /// `null`.
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// Any JSON number (always carried as `f64`).
+    Num(f64),
+    /// A string.
+    Str(String),
+    /// An array.
+    Arr(Vec<JsonValue>),
+    /// An object. Backed by an ordered `Vec`, not a map: insertion
+    /// order is rendering order, which keeps responses byte-stable.
+    Obj(Vec<(String, JsonValue)>),
+}
+
+impl JsonValue {
+    /// Object field lookup (first match); `None` on non-objects.
+    pub fn get(&self, key: &str) -> Option<&JsonValue> {
+        match self {
+            JsonValue::Obj(kvs) => {
+                kvs.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+            }
+            _ => None,
+        }
+    }
+
+    /// The number, if this is a number.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            JsonValue::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// The string slice, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonValue::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    /// The boolean, if this is a boolean.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            JsonValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// The element slice, if this is an array.
+    pub fn as_array(&self) -> Option<&[JsonValue]> {
+        match self {
+            JsonValue::Arr(xs) => Some(xs.as_slice()),
+            _ => None,
+        }
+    }
+
+    /// Render to a compact JSON string (no whitespace).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write_into(&mut out);
+        out
+    }
+
+    fn write_into(&self, out: &mut String) {
+        match self {
+            JsonValue::Null => out.push_str("null"),
+            JsonValue::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            JsonValue::Num(n) => {
+                if n.is_finite() {
+                    out.push_str(&n.to_string());
+                } else {
+                    out.push_str("null");
+                }
+            }
+            JsonValue::Str(s) => escape_into(s, out),
+            JsonValue::Arr(xs) => {
+                out.push('[');
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write_into(out);
+                }
+                out.push(']');
+            }
+            JsonValue::Obj(kvs) => {
+                out.push('{');
+                for (i, (k, v)) in kvs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    escape_into(k, out);
+                    out.push(':');
+                    v.write_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Parse a complete JSON document (trailing garbage is an error).
+    pub fn parse(input: &str) -> Result<JsonValue> {
+        let mut p = Parser { b: input.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value(0)?;
+        p.skip_ws();
+        ensure!(
+            p.pos == p.b.len(),
+            "trailing bytes after JSON value at offset {}",
+            p.pos
+        );
+        Ok(v)
+    }
+}
+
+fn escape_into(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while matches!(self.b.get(self.pos), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        match self.peek() {
+            Some(got) if got == c => {
+                self.pos += 1;
+                Ok(())
+            }
+            got => bail!(
+                "expected {:?} at offset {}, found {:?}",
+                c as char,
+                self.pos,
+                got.map(|g| g as char)
+            ),
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<JsonValue> {
+        ensure!(depth < MAX_DEPTH, "JSON nested deeper than {MAX_DEPTH}");
+        self.skip_ws();
+        match self.peek() {
+            Some(b'n') => self.literal("null", JsonValue::Null),
+            Some(b't') => self.literal("true", JsonValue::Bool(true)),
+            Some(b'f') => self.literal("false", JsonValue::Bool(false)),
+            Some(b'"') => Ok(JsonValue::Str(self.string()?)),
+            Some(b'[') => self.array(depth),
+            Some(b'{') => self.object(depth),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            got => bail!(
+                "expected a JSON value at offset {}, found {:?}",
+                self.pos,
+                got.map(|g| g as char)
+            ),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: JsonValue) -> Result<JsonValue> {
+        if self.b[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            bail!("bad literal at offset {} (expected {word})", self.pos)
+        }
+    }
+
+    fn number(&mut self) -> Result<JsonValue> {
+        let start = self.pos;
+        while matches!(
+            self.peek(),
+            Some(b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        ) {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.b[start..self.pos]).expect("ascii");
+        match text.parse::<f64>() {
+            Ok(n) if n.is_finite() => Ok(JsonValue::Num(n)),
+            _ => bail!("bad number {text:?} at offset {start}"),
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> Result<JsonValue> {
+        self.expect(b'[')?;
+        let mut xs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(JsonValue::Arr(xs));
+        }
+        loop {
+            xs.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.pos += 1;
+                }
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(JsonValue::Arr(xs));
+                }
+                got => bail!(
+                    "expected ',' or ']' at offset {}, found {:?}",
+                    self.pos,
+                    got.map(|g| g as char)
+                ),
+            }
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<JsonValue> {
+        self.expect(b'{')?;
+        let mut kvs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(JsonValue::Obj(kvs));
+        }
+        loop {
+            self.skip_ws();
+            let k = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let v = self.value(depth + 1)?;
+            kvs.push((k, v));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.pos += 1;
+                }
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(JsonValue::Obj(kvs));
+                }
+                got => bail!(
+                    "expected ',' or '}}' at offset {}, found {:?}",
+                    self.pos,
+                    got.map(|g| g as char)
+                ),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let start = self.pos;
+            // Fast path: run of plain bytes up to the next quote/escape.
+            while matches!(self.peek(), Some(c) if c != b'"' && c != b'\\' && c >= 0x20)
+            {
+                self.pos += 1;
+            }
+            if self.pos > start {
+                let chunk = std::str::from_utf8(&self.b[start..self.pos])
+                    .map_err(|_| anyhow::anyhow!("invalid UTF-8 in string"))?;
+                out.push_str(chunk);
+            }
+            match self.peek() {
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    self.escape_into(&mut out)?;
+                }
+                Some(c) => bail!("raw control byte {c:#04x} in string"),
+                None => bail!("unterminated string"),
+            }
+        }
+    }
+
+    fn escape_into(&mut self, out: &mut String) -> Result<()> {
+        let c = match self.peek() {
+            Some(c) => c,
+            None => bail!("unterminated escape"),
+        };
+        self.pos += 1;
+        match c {
+            b'"' => out.push('"'),
+            b'\\' => out.push('\\'),
+            b'/' => out.push('/'),
+            b'b' => out.push('\u{0008}'),
+            b'f' => out.push('\u{000C}'),
+            b'n' => out.push('\n'),
+            b'r' => out.push('\r'),
+            b't' => out.push('\t'),
+            b'u' => {
+                let hi = self.hex4()?;
+                let code = if (0xD800..=0xDBFF).contains(&hi) {
+                    // Surrogate pair: a low surrogate escape must follow.
+                    ensure!(
+                        self.peek() == Some(b'\\'),
+                        "lone high surrogate \\u{hi:04x}"
+                    );
+                    self.pos += 1;
+                    self.expect(b'u')?;
+                    let lo = self.hex4()?;
+                    ensure!(
+                        (0xDC00..=0xDFFF).contains(&lo),
+                        "bad low surrogate \\u{lo:04x}"
+                    );
+                    0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                } else {
+                    ensure!(
+                        !(0xDC00..=0xDFFF).contains(&hi),
+                        "lone low surrogate \\u{hi:04x}"
+                    );
+                    hi
+                };
+                match char::from_u32(code) {
+                    Some(ch) => out.push(ch),
+                    None => bail!("invalid code point U+{code:X}"),
+                }
+            }
+            c => bail!("unknown escape \\{}", c as char),
+        }
+        Ok(())
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        let mut v: u32 = 0;
+        for _ in 0..4 {
+            let c = match self.peek() {
+                Some(c) => c,
+                None => bail!("truncated \\u escape"),
+            };
+            let d = match c {
+                b'0'..=b'9' => u32::from(c - b'0'),
+                b'a'..=b'f' => u32::from(c - b'a') + 10,
+                b'A'..=b'F' => u32::from(c - b'A') + 10,
+                _ => bail!("bad hex digit {:?} in \\u escape", c as char),
+            };
+            v = (v << 4) | d;
+            self.pos += 1;
+        }
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::JsonValue::{self, Arr, Bool, Null, Num, Obj, Str};
+
+    fn rt(v: &JsonValue) {
+        let rendered = v.render();
+        let back = JsonValue::parse(&rendered).unwrap();
+        assert_eq!(&back, v, "round-trip through {rendered}");
+        // Rendering is deterministic.
+        assert_eq!(back.render(), rendered);
+    }
+
+    #[test]
+    fn value_round_trips() {
+        rt(&Null);
+        rt(&Bool(true));
+        rt(&Num(0.0));
+        rt(&Num(-15.0));
+        rt(&Num(0.1));
+        rt(&Num(1e-12));
+        rt(&Str(String::new()));
+        rt(&Str("line\n\"quote\"\\tab\t\u{1F600}é".to_string()));
+        rt(&Arr(vec![Num(1.0), Arr(vec![]), Obj(vec![])]));
+        rt(&Obj(vec![
+            ("a".to_string(), Num(1.5)),
+            ("b".to_string(), Arr(vec![Bool(false), Null])),
+        ]));
+    }
+
+    #[test]
+    fn numbers_render_like_the_tsv_writer() {
+        // The CLI TSV writer prints values with `{}`; integral f64s must
+        // render identically here so API results diff clean against it.
+        assert_eq!(Num(15.0).render(), "15");
+        assert_eq!(Num(2.5).render(), "2.5");
+        assert_eq!(format!("{}", 15.0f64), "15");
+        // Display → parse is exact for finite doubles.
+        let x = 0.1f64 + 0.2f64;
+        let back: f64 = x.to_string().parse().unwrap();
+        assert_eq!(back.to_bits(), x.to_bits());
+    }
+
+    #[test]
+    fn non_finite_numbers_become_null() {
+        assert_eq!(Num(f64::NAN).render(), "null");
+        assert_eq!(Num(f64::INFINITY).render(), "null");
+    }
+
+    #[test]
+    fn parses_whitespace_and_escapes() {
+        let v = JsonValue::parse(
+            " { \"k\" : [ 1 , -2.5e2 , \"a\\u0041\\n\" , true , null ] } ",
+        )
+        .unwrap();
+        let arr = v.get("k").unwrap().as_array().unwrap();
+        assert_eq!(arr[0].as_f64(), Some(1.0));
+        assert_eq!(arr[1].as_f64(), Some(-250.0));
+        assert_eq!(arr[2].as_str(), Some("aA\n"));
+        assert_eq!(arr[3].as_bool(), Some(true));
+        assert_eq!(arr[4], Null);
+        // Surrogate pair → astral code point.
+        let s = JsonValue::parse("\"\\ud83d\\ude00\"").unwrap();
+        assert_eq!(s.as_str(), Some("\u{1F600}"));
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        for bad in [
+            "", "{", "[1,", "{\"a\":}", "tru", "1 2", "\"\\x\"", "\"\\u12\"",
+            "\"\\ud800\"", "nan", "1e999", "{\"a\" 1}", "\"unterminated",
+        ] {
+            assert!(JsonValue::parse(bad).is_err(), "accepted {bad:?}");
+        }
+        // Depth cap.
+        let deep = "[".repeat(100) + &"]".repeat(100);
+        assert!(JsonValue::parse(&deep).is_err());
+    }
+
+    #[test]
+    fn object_lookup_and_accessors() {
+        let v = JsonValue::parse("{\"a\":1,\"b\":\"x\"}").unwrap();
+        assert_eq!(v.get("a").and_then(JsonValue::as_f64), Some(1.0));
+        assert_eq!(v.get("b").and_then(JsonValue::as_str), Some("x"));
+        assert!(v.get("c").is_none());
+        assert!(Null.get("a").is_none());
+        assert!(Num(1.0).as_str().is_none());
+        assert!(Str("x".into()).as_array().is_none());
+    }
+}

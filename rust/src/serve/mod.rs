@@ -1,0 +1,566 @@
+//! `goffish serve` — a resident job server over loaded GoFS stores.
+//!
+//! The CLI's `run` command pays the full store load on every
+//! invocation; for the interactive regime the paper's analytics
+//! clusters actually live in (many small jobs against one big loaded
+//! graph) that is the dominant cost. This module keeps the expensive
+//! part resident and makes job submission cheap:
+//!
+//! * [`ResidentGraph`] opens a GoFS store **once**, loads every
+//!   partition into an in-memory [`DistributedGraph`], and keeps both
+//!   for the server's lifetime. Every job then runs
+//!   [`crate::job::JobSource::InMemory`] against it — no per-job disk
+//!   I/O at all.
+//! * [`Server`] accepts jobs over a minimal HTTP/1.1 API (hand-rolled
+//!   on [`std::net::TcpListener`]; the crate takes no dependencies).
+//!   Submitted specs go through the same [`crate::job::JobBuilder`]
+//!   validation as the CLI, run on a bounded executor pool, and expose
+//!   per-superstep progress, cancellation, and paged results. The full
+//!   endpoint reference lives in `docs/API.md`.
+//!
+//! Because both engines are deterministic (sender-sorted inboxes,
+//! worker-ordered folds), a job run through the server produces
+//! **byte-identical** results to the same job run cold by the CLI —
+//! `GET /v1/jobs/{id}/results?format=tsv` diffs clean against
+//! `goffish run --output`. The integration tests
+//! (`tests/serve_api.rs`) and the CI serve smoke both pin that parity.
+//!
+//! # Lifecycle and supervision
+//!
+//! Jobs are registered in an id-ordered registry and move through
+//! `queued → running → done | failed | cancelled` (see
+//! [`crate::serve`]'s `jobs` submodule). Each job carries a
+//! [`crate::coordinator::RunControl`]: the engine manager publishes
+//! the superstep through it at every barrier and honors a cancel
+//! request there, so `DELETE /v1/jobs/{id}` stops a running job within
+//! one superstep — the engine errors out with `job cancelled at
+//! superstep N` and the registry records the state as `cancelled`.
+//!
+//! # Shutdown
+//!
+//! [`Server::shutdown`] stops accepting connections, closes the
+//! admission queue (in-flight and already-queued jobs drain), and
+//! joins every thread — tests get a clean teardown; the CLI instead
+//! parks in [`Server::serve_forever`] until killed.
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::gofs::{DistributedGraph, LoadStats, Store};
+
+mod http;
+pub mod json;
+mod jobs;
+
+use http::Request;
+use jobs::{executor_loop, CancelOutcome, JobEntry, JobSpec, JobState, Jobs, SubmitError};
+use json::JsonValue;
+
+/// Idle-connection guard: a peer that stalls mid-request is dropped.
+const IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+const JSON_CT: &str = "application/json";
+const TSV_CT: &str = "text/tab-separated-values";
+
+/// A GoFS store loaded once and kept in memory for the server's
+/// lifetime. Jobs run against [`ResidentGraph::graph`] via
+/// [`crate::job::JobSource::InMemory`], so submitting a job costs no
+/// disk I/O.
+pub struct ResidentGraph {
+    store: Store,
+    graph: DistributedGraph,
+    load: LoadStats,
+}
+
+impl ResidentGraph {
+    /// Open a store directory and load every partition into memory.
+    pub fn open(root: &Path) -> Result<ResidentGraph> {
+        let store = Store::open(root)?;
+        let (graph, load) = store
+            .load_all()
+            .with_context(|| format!("load store at {}", root.display()))?;
+        Ok(ResidentGraph { store, graph, load })
+    }
+
+    /// The underlying store (metadata: name, format, counts).
+    pub fn store(&self) -> &Store {
+        &self.store
+    }
+
+    /// The loaded distributed graph every job runs against.
+    pub fn graph(&self) -> &DistributedGraph {
+        &self.graph
+    }
+
+    /// Byte/file/wall accounting of the one-time load.
+    pub fn load(&self) -> &LoadStats {
+        &self.load
+    }
+}
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// TCP port to bind on 127.0.0.1 (0 picks an ephemeral port —
+    /// read it back via [`Server::addr`]).
+    pub port: u16,
+    /// Executor threads: how many jobs run concurrently.
+    pub workers: usize,
+    /// Admission queue slots; a submit beyond this is refused with 503.
+    pub queue: usize,
+    /// Default cores-per-worker for jobs that don't specify `cores`.
+    pub cores: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions { port: 8080, workers: 2, queue: 16, cores: 4 }
+    }
+}
+
+/// Shared state every connection handler sees.
+struct Ctx {
+    jobs: Arc<Jobs>,
+    resident: Arc<ResidentGraph>,
+    default_cores: usize,
+}
+
+/// A running job server. Construct with [`Server::start`]; stop with
+/// [`Server::shutdown`] (tests) or park in [`Server::serve_forever`]
+/// (the CLI).
+pub struct Server {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    execs: Vec<JoinHandle<()>>,
+    jobs: Arc<Jobs>,
+}
+
+impl Server {
+    /// Bind 127.0.0.1:`port`, spawn the executor pool and the accept
+    /// loop, and return immediately.
+    pub fn start(resident: ResidentGraph, opts: &ServeOptions) -> Result<Server> {
+        let resident = Arc::new(resident);
+        let (jobs, rx) = Jobs::new(opts.queue);
+        let jobs = Arc::new(jobs);
+        let rx = Arc::new(Mutex::new(rx));
+        let mut execs = Vec::new();
+        for i in 0..opts.workers.max(1) {
+            let rx = rx.clone();
+            let res = resident.clone();
+            execs.push(
+                std::thread::Builder::new()
+                    .name(format!("serve-exec-{i}"))
+                    .spawn(move || executor_loop(rx, res))
+                    .context("spawn executor thread")?,
+            );
+        }
+        let listener = TcpListener::bind(("127.0.0.1", opts.port))
+            .with_context(|| format!("bind 127.0.0.1:{}", opts.port))?;
+        let addr = listener.local_addr().context("server local addr")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let ctx = Arc::new(Ctx {
+            jobs: jobs.clone(),
+            resident,
+            default_cores: opts.cores.max(1),
+        });
+        let accept = {
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name("serve-accept".to_string())
+                .spawn(move || accept_loop(&listener, &stop, &ctx))
+                .context("spawn accept thread")?
+        };
+        Ok(Server { addr, stop, accept: Some(accept), execs, jobs })
+    }
+
+    /// The bound address (resolves port 0 to the actual port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, close the admission queue, and join every
+    /// thread. Queued and running jobs drain before this returns.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake the blocking accept() with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        self.jobs.close();
+        for h in self.execs.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    /// Block this thread for the server's lifetime (the CLI's mode:
+    /// runs until the process is killed).
+    pub fn serve_forever(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(listener: &TcpListener, stop: &AtomicBool, ctx: &Arc<Ctx>) {
+    loop {
+        let conn = listener.accept();
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        if let Ok((stream, _)) = conn {
+            let ctx = ctx.clone();
+            let _ = std::thread::Builder::new()
+                .name("serve-conn".to_string())
+                .spawn(move || handle_connection(&stream, &ctx));
+        }
+    }
+}
+
+fn handle_connection(stream: &TcpStream, ctx: &Ctx) {
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let mut reader = BufReader::new(stream);
+    let (status, ctype, body) = match http::read_request(&mut reader) {
+        Ok(Some(req)) => route(&req, ctx),
+        Ok(None) => return, // peer closed without sending a request
+        Err(e) => error(400, &format!("{e:#}")),
+    };
+    let mut w = stream;
+    let _ = http::write_response(&mut w, status, ctype, &body);
+}
+
+type Reply = (u16, &'static str, Vec<u8>);
+
+/// Build an object from `(&str, value)` pairs (key order = wire order).
+fn obj(fields: Vec<(&str, JsonValue)>) -> JsonValue {
+    JsonValue::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn json_ok(status: u16, v: JsonValue) -> Reply {
+    (status, JSON_CT, v.render().into_bytes())
+}
+
+fn error(status: u16, msg: &str) -> Reply {
+    let v = obj(vec![("error", JsonValue::Str(msg.to_string()))]);
+    (status, JSON_CT, v.render().into_bytes())
+}
+
+fn route(req: &Request, ctx: &Ctx) -> Reply {
+    let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+    match (req.method.as_str(), segs.as_slice()) {
+        ("GET", ["v1", "healthz"]) => json_ok(200, health_json(ctx)),
+        ("GET", ["v1", "graphs"]) => {
+            json_ok(200, JsonValue::Arr(vec![graph_json(&ctx.resident)]))
+        }
+        ("GET", ["v1", "jobs"]) => {
+            let list = ctx.jobs.list().iter().map(|e| job_json(e)).collect();
+            json_ok(200, JsonValue::Arr(list))
+        }
+        ("POST", ["v1", "jobs"]) => post_job(req, ctx),
+        ("GET", ["v1", "jobs", id]) => with_id(id, |id| match ctx.jobs.get(id) {
+            Some(e) => json_ok(200, job_json(&e)),
+            None => error(404, &format!("no job {id}")),
+        }),
+        ("DELETE", ["v1", "jobs", id]) => with_id(id, |id| delete_job(ctx, id)),
+        ("GET", ["v1", "jobs", id, "results"]) => {
+            with_id(id, |id| job_results(req, ctx, id))
+        }
+        _ => {
+            let known = matches!(
+                segs.as_slice(),
+                ["v1", "healthz"]
+                    | ["v1", "graphs"]
+                    | ["v1", "jobs"]
+                    | ["v1", "jobs", _]
+                    | ["v1", "jobs", _, "results"]
+            );
+            if known {
+                error(405, &format!("method {} not allowed here", req.method))
+            } else {
+                error(404, &format!("no such endpoint {}", req.path))
+            }
+        }
+    }
+}
+
+fn with_id(raw: &str, f: impl FnOnce(u64) -> Reply) -> Reply {
+    match raw.parse::<u64>() {
+        Ok(id) => f(id),
+        Err(_) => error(400, &format!("job id must be an integer, got {raw:?}")),
+    }
+}
+
+fn post_job(req: &Request, ctx: &Ctx) -> Reply {
+    let text = match std::str::from_utf8(&req.body) {
+        Ok(t) => t,
+        Err(_) => return error(400, "request body must be UTF-8 JSON"),
+    };
+    let v = match JsonValue::parse(text) {
+        Ok(v) => v,
+        Err(e) => return error(400, &format!("bad JSON body: {e:#}")),
+    };
+    let spec = match JobSpec::from_json(&v, ctx.default_cores) {
+        Ok(s) => s,
+        Err(msg) => return error(400, &msg),
+    };
+    match ctx.jobs.submit(spec) {
+        Ok(entry) => json_ok(202, job_json(&entry)),
+        Err(SubmitError::Invalid(msg)) => error(400, &msg),
+        Err(SubmitError::QueueFull) => {
+            error(503, "admission queue full; retry after a job finishes")
+        }
+    }
+}
+
+fn delete_job(ctx: &Ctx, id: u64) -> Reply {
+    match ctx.jobs.cancel(id) {
+        CancelOutcome::NotFound => error(404, &format!("no job {id}")),
+        CancelOutcome::AlreadyFinished(st) => {
+            error(409, &format!("job {id} already finished ({st}); nothing to cancel"))
+        }
+        CancelOutcome::Accepted => {
+            let e = ctx.jobs.get(id).expect("cancelled job stays registered");
+            json_ok(200, job_json(&e))
+        }
+    }
+}
+
+fn job_results(req: &Request, ctx: &Ctx, id: u64) -> Reply {
+    let Some(entry) = ctx.jobs.get(id) else {
+        return error(404, &format!("no job {id}"));
+    };
+    let offset = match req.query_usize("offset", 0) {
+        Ok(v) => v,
+        Err(msg) => return error(400, &msg),
+    };
+    let limit = match req.query_usize("limit", 1000) {
+        Ok(v) => v,
+        Err(msg) => return error(400, &msg),
+    };
+    let tsv = match req.query_get("format") {
+        None | Some("json") => false,
+        Some("tsv") => true,
+        Some(f) => {
+            return error(400, &format!("unknown format {f:?} (expected json or tsv)"))
+        }
+    };
+    let st = entry.state.lock().expect("job state lock");
+    let out = match &*st {
+        JobState::Done(out) => out,
+        JobState::Failed(msg) => return error(409, &format!("job {id} failed: {msg}")),
+        other => {
+            return error(
+                409,
+                &format!("job {id} is {}; results exist only for done jobs", other.name()),
+            )
+        }
+    };
+    let total = out.values.len();
+    let lo = offset.min(total);
+    let hi = lo.saturating_add(limit).min(total);
+    let page = &out.values[lo..hi];
+    if tsv {
+        // Byte-identical to the CLI's `run --output` TSV for the same
+        // rows: `vertex<TAB>value`, `{}`-formatted.
+        use std::fmt::Write as _;
+        let mut body = String::with_capacity(page.len() * 12);
+        for (v, x) in page {
+            let _ = writeln!(body, "{v}\t{x}");
+        }
+        (200, TSV_CT, body.into_bytes())
+    } else {
+        let values = page
+            .iter()
+            .map(|&(v, x)| {
+                JsonValue::Arr(vec![JsonValue::Num(f64::from(v)), JsonValue::Num(x)])
+            })
+            .collect();
+        json_ok(
+            200,
+            obj(vec![
+                ("id", JsonValue::Num(id as f64)),
+                ("total", JsonValue::Num(total as f64)),
+                ("offset", JsonValue::Num(lo as f64)),
+                ("count", JsonValue::Num(page.len() as f64)),
+                ("values", JsonValue::Arr(values)),
+            ]),
+        )
+    }
+}
+
+fn job_json(e: &JobEntry) -> JsonValue {
+    let st = e.state.lock().expect("job state lock");
+    let mut fields = vec![
+        ("id", JsonValue::Num(e.id as f64)),
+        ("algo", JsonValue::Str(e.spec.algo.clone())),
+        ("engine", JsonValue::Str(e.spec.engine.to_string())),
+        ("status", JsonValue::Str(st.name().to_string())),
+        ("superstep", JsonValue::Num(e.control.superstep() as f64)),
+    ];
+    match &*st {
+        JobState::Done(out) => {
+            fields.push((
+                "supersteps",
+                JsonValue::Num(out.metrics.num_supersteps() as f64),
+            ));
+            fields.push((
+                "makespan_seconds",
+                JsonValue::Num(out.metrics.makespan_seconds()),
+            ));
+            fields.push(("messages", JsonValue::Num(out.metrics.total_messages() as f64)));
+            fields.push(("bytes", JsonValue::Num(out.metrics.total_bytes() as f64)));
+            fields.push(("num_values", JsonValue::Num(out.values.len() as f64)));
+        }
+        JobState::Failed(msg) => {
+            fields.push(("error", JsonValue::Str(msg.clone())));
+        }
+        _ => {}
+    }
+    obj(fields)
+}
+
+fn graph_json(r: &ResidentGraph) -> JsonValue {
+    let m = r.store().meta();
+    obj(vec![
+        ("name", JsonValue::Str(m.name.clone())),
+        ("format", JsonValue::Str(m.format.to_string())),
+        ("partitions", JsonValue::Num(f64::from(m.num_partitions))),
+        ("subgraphs", JsonValue::Num(r.graph().num_subgraphs() as f64)),
+        ("vertices", JsonValue::Num(m.num_vertices as f64)),
+        ("edges", JsonValue::Num(m.num_edges as f64)),
+        ("load_seconds", JsonValue::Num(r.load().seconds)),
+        ("load_bytes", JsonValue::Num(r.load().bytes as f64)),
+        ("load_files", JsonValue::Num(r.load().files as f64)),
+    ])
+}
+
+fn health_json(ctx: &Ctx) -> JsonValue {
+    obj(vec![
+        ("ok", JsonValue::Bool(true)),
+        ("graph", JsonValue::Str(ctx.resident.store().meta().name.clone())),
+        ("jobs", JsonValue::Num(ctx.jobs.count() as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::partition::{Partitioner, RangePartitioner};
+
+    /// A context with no executor pool: submitted jobs stay queued.
+    /// The receiver is returned so the admission channel stays open.
+    fn test_ctx(name: &str) -> (Ctx, std::sync::mpsc::Receiver<Arc<JobEntry>>) {
+        let g = gen::chain(8);
+        let parts = RangePartitioner.partition(&g, 2);
+        let root = std::env::temp_dir()
+            .join("goffish_serve_mod")
+            .join(format!("{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        Store::create(&root, "tiny", &g, &parts).unwrap();
+        let resident = ResidentGraph::open(&root).unwrap();
+        let (jobs, rx) = Jobs::new(4);
+        let ctx = Ctx {
+            jobs: Arc::new(jobs),
+            resident: Arc::new(resident),
+            default_cores: 2,
+        };
+        (ctx, rx)
+    }
+
+    fn get(path: &str) -> Request {
+        Request {
+            method: "GET".to_string(),
+            path: path.to_string(),
+            query: Vec::new(),
+            body: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn routing_table_and_error_codes() {
+        let (ctx, _rx) = test_ctx("routes");
+        let (st, _, _) = route(&get("/v1/healthz"), &ctx);
+        assert_eq!(st, 200);
+        let (st, _, body) = route(&get("/v1/graphs"), &ctx);
+        assert_eq!(st, 200);
+        let v = JsonValue::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        let g0 = &v.as_array().unwrap()[0];
+        assert_eq!(g0.get("name").unwrap().as_str(), Some("tiny"));
+        assert_eq!(g0.get("vertices").unwrap().as_f64(), Some(8.0));
+
+        // Unknown endpoint vs wrong method on a known one.
+        let (st, _, _) = route(&get("/v2/nope"), &ctx);
+        assert_eq!(st, 404);
+        let mut del = get("/v1/healthz");
+        del.method = "DELETE".to_string();
+        let (st, _, _) = route(&del, &ctx);
+        assert_eq!(st, 405);
+
+        // Non-numeric and missing job ids.
+        let (st, _, _) = route(&get("/v1/jobs/banana"), &ctx);
+        assert_eq!(st, 400);
+        let (st, _, _) = route(&get("/v1/jobs/42"), &ctx);
+        assert_eq!(st, 404);
+        let (st, _, _) = route(&get("/v1/jobs/42/results"), &ctx);
+        assert_eq!(st, 404);
+    }
+
+    #[test]
+    fn post_validation_errors_are_400s() {
+        let (ctx, _rx) = test_ctx("post400");
+        let post = |body: &str| Request {
+            method: "POST".to_string(),
+            path: "/v1/jobs".to_string(),
+            query: Vec::new(),
+            body: body.as_bytes().to_vec(),
+        };
+        let (st, _, body) = route(&post("not json"), &ctx);
+        assert_eq!(st, 400);
+        assert!(String::from_utf8(body).unwrap().contains("bad JSON body"));
+        let (st, _, _) = route(&post("{\"algo\":\"frobnicate\"}"), &ctx);
+        assert_eq!(st, 400);
+        let (st, _, _) = route(&post("{\"algo\":\"blockrank\",\"engine\":\"vertex\"}"), &ctx);
+        assert_eq!(st, 400);
+        // Nothing registered by failed submits.
+        assert_eq!(ctx.jobs.count(), 0);
+    }
+
+    #[test]
+    fn results_of_unfinished_job_conflict() {
+        let (ctx, _rx) = test_ctx("results409");
+        // Submit without any executor pool: the job stays queued.
+        let post = Request {
+            method: "POST".to_string(),
+            path: "/v1/jobs".to_string(),
+            query: Vec::new(),
+            body: b"{\"algo\":\"cc\"}".to_vec(),
+        };
+        let (st, _, body) = route(&post, &ctx);
+        assert_eq!(st, 202);
+        let v = JsonValue::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(v.get("status").unwrap().as_str(), Some("queued"));
+        let id = v.get("id").unwrap().as_f64().unwrap() as u64;
+        let (st, _, _) = route(&get(&format!("/v1/jobs/{id}/results")), &ctx);
+        assert_eq!(st, 409);
+        // Queued jobs cancel instantly.
+        let mut del = get(&format!("/v1/jobs/{id}"));
+        del.method = "DELETE".to_string();
+        let (st, _, body) = route(&del, &ctx);
+        assert_eq!(st, 200);
+        let v = JsonValue::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(v.get("status").unwrap().as_str(), Some("cancelled"));
+        // A second DELETE stays 200 (idempotent); results now 409 too.
+        let (st, _, _) = route(&del, &ctx);
+        assert_eq!(st, 200);
+    }
+}

@@ -1,0 +1,324 @@
+//! End-to-end tests of the `goffish serve` HTTP API over real sockets:
+//! an ephemeral-port server per test, byte-level result parity with
+//! direct job runs, stable paging, concurrent jobs, cancellation
+//! latency, and bounded admission.
+
+use std::fmt::Write as _;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use goffish::gofs::Store;
+use goffish::graph::gen;
+use goffish::job::{Job, JobSource};
+use goffish::partition::{Partitioner, RangePartitioner};
+use goffish::serve::json::JsonValue;
+use goffish::serve::{ResidentGraph, ServeOptions, Server};
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join("goffish_serve_api")
+        .join(format!("{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Build a chain(n) store, load it resident, and start a server on an
+/// ephemeral port. Returns the handle plus the store for solo runs.
+fn serve_chain(name: &str, n: usize, k: usize, workers: usize, queue: usize) -> (Server, Store) {
+    let g = gen::chain(n);
+    let parts = RangePartitioner.partition(&g, k);
+    let root = tmp(name);
+    let (store, _) = Store::create(&root, name, &g, &parts).unwrap();
+    let resident = ResidentGraph::open(&root).unwrap();
+    let opts = ServeOptions { port: 0, workers, queue, cores: 2 };
+    let server = Server::start(resident, &opts).unwrap();
+    (server, store)
+}
+
+/// Minimal HTTP client: one request, read to EOF (the server closes
+/// every connection), return (status, body).
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: localhost\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).unwrap();
+    let status: u16 = raw
+        .split(' ')
+        .nth(1)
+        .and_then(|t| t.parse().ok())
+        .unwrap_or_else(|| panic!("bad response {raw:?}"));
+    let body = raw
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    (status, body)
+}
+
+fn get_json(addr: SocketAddr, path: &str) -> (u16, JsonValue) {
+    let (st, body) = http(addr, "GET", path, "");
+    (st, JsonValue::parse(&body).unwrap_or_else(|e| panic!("bad JSON {body:?}: {e}")))
+}
+
+fn status_of(v: &JsonValue) -> String {
+    v.get("status").unwrap().as_str().unwrap().to_string()
+}
+
+fn superstep_of(v: &JsonValue) -> usize {
+    v.get("superstep").unwrap().as_f64().unwrap() as usize
+}
+
+/// Poll a job until its status satisfies `done`, with a hard deadline.
+fn wait_until(addr: SocketAddr, id: u64, done: impl Fn(&JsonValue) -> bool) -> JsonValue {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let (st, v) = get_json(addr, &format!("/v1/jobs/{id}"));
+        assert_eq!(st, 200);
+        if done(&v) {
+            return v;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "job {id} stuck in {:?}",
+            status_of(&v)
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+fn wait_terminal(addr: SocketAddr, id: u64) -> JsonValue {
+    wait_until(addr, id, |v| {
+        matches!(status_of(v).as_str(), "done" | "failed" | "cancelled")
+    })
+}
+
+/// Submit a job spec; expect 202 and return the assigned id.
+fn submit(addr: SocketAddr, spec: &str) -> u64 {
+    let (st, body) = http(addr, "POST", "/v1/jobs", spec);
+    assert_eq!(st, 202, "submit {spec}: {body}");
+    let v = JsonValue::parse(&body).unwrap();
+    assert_eq!(status_of(&v), "queued");
+    v.get("id").unwrap().as_f64().unwrap() as u64
+}
+
+/// The CLI `run --output` rendering of a value list.
+fn tsv_of(values: &[(u32, f64)]) -> String {
+    let mut s = String::new();
+    for (v, x) in values {
+        let _ = writeln!(s, "{v}\t{x}");
+    }
+    s
+}
+
+#[test]
+fn submitted_job_matches_direct_run_with_stable_paging() {
+    let (server, store) = serve_chain("parity", 100, 3, 1, 8);
+    let addr = server.addr();
+
+    let id = submit(addr, "{\"algo\":\"cc\",\"cores\":2}");
+    let done = wait_terminal(addr, id);
+    assert_eq!(status_of(&done), "done", "{done:?}");
+    assert_eq!(done.get("num_values").unwrap().as_f64(), Some(100.0));
+
+    // Solo run of the identical job description, straight off the store.
+    let solo = Job::builder()
+        .algo("cc")
+        .cores(2)
+        .build()
+        .unwrap()
+        .run(JobSource::Store(&store))
+        .unwrap();
+    let golden = tsv_of(&solo.values);
+
+    // Full TSV page is byte-identical to the CLI-style rendering.
+    let (st, full) = http(addr, "GET", &format!("/v1/jobs/{id}/results?limit=1000&format=tsv"), "");
+    assert_eq!(st, 200);
+    assert_eq!(full, golden);
+
+    // Two disjoint pages concatenate to the full result, and a page
+    // re-fetched is byte-identical (results are held, not recomputed).
+    let (_, page1) = http(addr, "GET", &format!("/v1/jobs/{id}/results?offset=0&limit=30&format=tsv"), "");
+    let (_, page2) = http(addr, "GET", &format!("/v1/jobs/{id}/results?offset=30&limit=1000&format=tsv"), "");
+    assert_eq!(format!("{page1}{page2}"), golden);
+    let (_, page1_again) = http(addr, "GET", &format!("/v1/jobs/{id}/results?offset=0&limit=30&format=tsv"), "");
+    assert_eq!(page1, page1_again);
+
+    // The JSON page carries the same values with paging metadata.
+    let (st, v) = get_json(addr, &format!("/v1/jobs/{id}/results?offset=98&limit=10"));
+    assert_eq!(st, 200);
+    assert_eq!(v.get("total").unwrap().as_f64(), Some(100.0));
+    assert_eq!(v.get("offset").unwrap().as_f64(), Some(98.0));
+    assert_eq!(v.get("count").unwrap().as_f64(), Some(2.0));
+    let vals = v.get("values").unwrap().as_array().unwrap();
+    assert_eq!(vals.len(), 2);
+    let last = vals[1].as_array().unwrap();
+    assert_eq!(last[0].as_f64(), Some(f64::from(solo.values[99].0)));
+    assert_eq!(last[1].as_f64(), Some(solo.values[99].1));
+
+    // Out-of-range offsets page to empty rather than erroring.
+    let (st, v) = get_json(addr, &format!("/v1/jobs/{id}/results?offset=500"));
+    assert_eq!(st, 200);
+    assert_eq!(v.get("count").unwrap().as_f64(), Some(0.0));
+
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_jobs_match_their_solo_runs() {
+    let (server, store) = serve_chain("concurrent", 2000, 4, 2, 8);
+    let addr = server.addr();
+
+    // Two jobs in flight against the one resident graph.
+    let cc = submit(addr, "{\"algo\":\"cc\"}");
+    let sssp = submit(addr, "{\"algo\":\"sssp\",\"source\":0}");
+    assert_eq!(status_of(&wait_terminal(addr, cc)), "done");
+    assert_eq!(status_of(&wait_terminal(addr, sssp)), "done");
+
+    // Both are listed, in id order.
+    let (st, list) = get_json(addr, "/v1/jobs");
+    assert_eq!(st, 200);
+    let list = list.as_array().unwrap().to_vec();
+    assert_eq!(list.len(), 2);
+    assert_eq!(list[0].get("algo").unwrap().as_str(), Some("cc"));
+    assert_eq!(list[1].get("algo").unwrap().as_str(), Some("sssp"));
+
+    // Each result is byte-identical to a solo run of the same spec
+    // (default cores = the server's 2).
+    for (id, algo) in [(cc, "cc"), (sssp, "sssp")] {
+        let solo = Job::builder()
+            .algo(algo)
+            .cores(2)
+            .build()
+            .unwrap()
+            .run(JobSource::Store(&store))
+            .unwrap();
+        let (st, got) = http(
+            addr,
+            "GET",
+            &format!("/v1/jobs/{id}/results?limit=100000&format=tsv"),
+            "",
+        );
+        assert_eq!(st, 200);
+        assert_eq!(got, tsv_of(&solo.values), "{algo}");
+    }
+
+    server.shutdown();
+}
+
+#[test]
+fn cancellation_stops_within_one_superstep() {
+    // Vertex-engine cc on a long chain needs ~n supersteps, so the job
+    // is comfortably still running when the DELETE lands.
+    let (server, _store) = serve_chain("cancel", 20_000, 4, 1, 4);
+    let addr = server.addr();
+
+    let id = submit(addr, "{\"algo\":\"cc\",\"engine\":\"vertex\"}");
+    wait_until(addr, id, |v| {
+        status_of(v) == "running" && superstep_of(v) >= 1
+    });
+
+    let (st, body) = http(addr, "DELETE", &format!("/v1/jobs/{id}"), "");
+    assert_eq!(st, 200, "{body}");
+    let at_cancel = superstep_of(&JsonValue::parse(&body).unwrap());
+
+    let fin = wait_terminal(addr, id);
+    assert_eq!(status_of(&fin), "cancelled", "{fin:?}");
+    // The engine honors the cancel at the next barrier: at most one
+    // more superstep runs after the DELETE was acknowledged.
+    let final_step = superstep_of(&fin);
+    assert!(
+        final_step <= at_cancel + 1,
+        "cancelled at {at_cancel} but ran to {final_step}"
+    );
+
+    // Results of a cancelled job are a conflict, and a repeat DELETE is
+    // idempotent while a DELETE of a finished job will 409 below.
+    let (st, _) = http(addr, "GET", &format!("/v1/jobs/{id}/results"), "");
+    assert_eq!(st, 409);
+    let (st, _) = http(addr, "DELETE", &format!("/v1/jobs/{id}"), "");
+    assert_eq!(st, 200);
+
+    server.shutdown();
+}
+
+#[test]
+fn admission_is_bounded_and_queued_jobs_cancel_without_running() {
+    // One worker, one queue slot: a long job occupies the worker, the
+    // next job the slot, and the third submit is refused with 503.
+    let (server, _store) = serve_chain("admission", 20_000, 4, 1, 1);
+    let addr = server.addr();
+
+    let long = submit(addr, "{\"algo\":\"cc\",\"engine\":\"vertex\"}");
+    wait_until(addr, long, |v| status_of(v) == "running");
+    let queued = submit(addr, "{\"algo\":\"cc\"}");
+    let (st, body) = http(addr, "POST", "/v1/jobs", "{\"algo\":\"cc\"}");
+    assert_eq!(st, 503, "{body}");
+    assert!(body.contains("admission queue full"), "{body}");
+
+    // The queued job cancels instantly, never having run a superstep.
+    let (st, body) = http(addr, "DELETE", &format!("/v1/jobs/{queued}"), "");
+    assert_eq!(st, 200);
+    let v = JsonValue::parse(&body).unwrap();
+    assert_eq!(status_of(&v), "cancelled");
+    assert_eq!(superstep_of(&v), 0);
+
+    // Cancel the long job too; once done, a DELETE is a 409.
+    let (st, _) = http(addr, "DELETE", &format!("/v1/jobs/{long}"), "");
+    assert_eq!(st, 200);
+    let fin = wait_terminal(addr, long);
+    assert_eq!(status_of(&fin), "cancelled");
+    let (st, body) = http(addr, "DELETE", &format!("/v1/jobs/{long}"), "");
+    assert_eq!(st, 409, "{body}");
+
+    server.shutdown();
+}
+
+#[test]
+fn health_graphs_and_error_paths() {
+    let (server, _store) = serve_chain("health", 64, 2, 1, 4);
+    let addr = server.addr();
+
+    let (st, v) = get_json(addr, "/v1/healthz");
+    assert_eq!(st, 200);
+    assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(v.get("graph").unwrap().as_str(), Some("health"));
+
+    let (st, v) = get_json(addr, "/v1/graphs");
+    assert_eq!(st, 200);
+    let g = &v.as_array().unwrap()[0];
+    assert_eq!(g.get("name").unwrap().as_str(), Some("health"));
+    assert_eq!(g.get("vertices").unwrap().as_f64(), Some(64.0));
+    assert_eq!(g.get("partitions").unwrap().as_f64(), Some(2.0));
+    assert_eq!(g.get("format").unwrap().as_str(), Some("v2"));
+
+    // Error surface: unknown endpoint, wrong method, bad ids, bad
+    // bodies, bad query parameters, missing jobs.
+    let (st, _) = http(addr, "GET", "/nope", "");
+    assert_eq!(st, 404);
+    let (st, _) = http(addr, "DELETE", "/v1/healthz", "");
+    assert_eq!(st, 405);
+    let (st, _) = http(addr, "GET", "/v1/jobs/banana", "");
+    assert_eq!(st, 400);
+    let (st, _) = http(addr, "GET", "/v1/jobs/7", "");
+    assert_eq!(st, 404);
+    let (st, body) = http(addr, "POST", "/v1/jobs", "{\"algo\":\"frobnicate\"}");
+    assert_eq!(st, 400);
+    assert!(body.contains("unknown algorithm"), "{body}");
+    let (st, body) = http(addr, "POST", "/v1/jobs", "not json");
+    assert_eq!(st, 400);
+    assert!(body.contains("bad JSON body"), "{body}");
+
+    // A completed job rejects malformed paging/format parameters.
+    let id = submit(addr, "{\"algo\":\"cc\"}");
+    wait_terminal(addr, id);
+    let (st, _) = http(addr, "GET", &format!("/v1/jobs/{id}/results?offset=x"), "");
+    assert_eq!(st, 400);
+    let (st, _) = http(addr, "GET", &format!("/v1/jobs/{id}/results?format=xml"), "");
+    assert_eq!(st, 400);
+
+    server.shutdown();
+}
