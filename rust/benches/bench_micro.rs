@@ -166,6 +166,50 @@ fn main() {
     json.emit("LJ", "checkpoint_overhead", overhead);
     let _ = std::fs::remove_dir_all(&ckpt_dir);
 
+    // Streaming-ingest throughput: the RN analog written out as a TSV
+    // edge list and streamed back through `goffish::ingest` at two
+    // spill-buffer sizes — one smaller than the input (forces the
+    // external-merge path: several run files per host) and one that
+    // holds every record (a single run per host). The gap between the
+    // two rows is the seek budget the buffer knob buys back.
+    let ingest_dir = std::env::temp_dir()
+        .join("goffish_bench_ingest")
+        .join(format!("micro_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&ingest_dir);
+    std::fs::create_dir_all(&ingest_dir).unwrap();
+    let list = ingest_dir.join("edges.tsv");
+    goffish::graph::io::write_edge_list(&g, &list).unwrap();
+    let spilled_bytes = g.num_edges() * 12;
+    for (tag, spill_buffer) in [
+        ("spill=input/8", (spilled_bytes / 8).max(12)),
+        ("spill=64MiB", 64usize << 20),
+    ] {
+        let opts = goffish::ingest::IngestOptions {
+            hosts: 4,
+            directed: g.directed(),
+            spill_buffer,
+            ..Default::default()
+        };
+        let root = ingest_dir.join(format!("store_{spill_buffer}"));
+        let mut last_spills = 0u64;
+        let (w, r) = reps(1, 3);
+        let m = measure(w, r, || {
+            let _ = std::fs::remove_dir_all(&root);
+            let (_, report) =
+                goffish::ingest::ingest_edge_list(&list, &root, &opts).unwrap();
+            assert_eq!(report.edges, g.num_edges() as u64);
+            last_spills = report.spills;
+        });
+        let eps = g.num_edges() as f64 / m.median;
+        t.row(&[
+            format!("ingest RN ({}e, {tag})", g.num_edges()),
+            fmt_secs(m.median),
+            format!("{:.2} Me/s, {last_spills} spills", eps / 1e6),
+        ]);
+        json.emit(&format!("RN/{tag}"), "ingest_throughput", eps);
+    }
+    let _ = std::fs::remove_dir_all(&ingest_dir);
+
     // Pool dispatch overhead.
     let (w, r) = reps(2, 10);
     let m = measure(w, r, || {

@@ -7,8 +7,12 @@
 //! goffish store     --graph g.txt --k 4 --out storedir [--strategy …] [--name NAME]
 //!                   [--format v1|v2|v3] [--attrs N]
 //! goffish store verify [--store storedir] [--ckpt ckptdir]
+//! goffish store migrate --store storedir
+//! goffish ingest    --edges edges.tsv --store storedir [--hosts H]
+//!                   [--format v1|v2|v3] [--name NAME] [--directed]
+//!                   [--spill-buffer BYTES] [--seed S]
 //! goffish serve     --store storedir [--port P] [--workers N] [--queue N]
-//!                   [--cores N]
+//!                   [--cores N] [--keep-results N]
 //! goffish run       --store storedir
 //!                   --algo <any algos::registry entry>
 //!                   [--engine gopher|vertex] [--source V] [--supersteps N]
@@ -32,6 +36,20 @@
 //! of every slice in a GoFS store (`--store`) and/or every snapshot of
 //! a checkpoint directory (`--ckpt`), reporting corrupt sections by
 //! name and exiting non-zero if anything rotted.
+//!
+//! `store migrate` rewrites a v1/v2 store as packed v3 in place
+//! ([`Store::migrate_to_packed`]) — decode *is* checksum verification,
+//! and the result is scrubbed again before the command reports clean.
+//! A v3 store is a no-op. Packed stores are the appendable ones, so
+//! migrate is the upgrade path onto `Store::append` / `goffish ingest`
+//! generations.
+//!
+//! `ingest` streams a TSV/CSV edge list into a GoFS store under a
+//! bounded memory budget (`--spill-buffer`, default 64 MiB): edges are
+//! hash-partitioned online, spilled to per-host run files as the
+//! buffer fills, and merged per host into sub-graph slices. The result
+//! is byte-identical to `gen`→`store --strategy hash` of the same
+//! list (see [`crate::ingest`] for why).
 //!
 //! `run` is a thin shell over the unified job layer: flags are handed
 //! to [`Job::builder`], validation (unknown algorithms, engine/knob
@@ -65,6 +83,7 @@ use crate::algos::registry;
 use crate::ckpt;
 use crate::gofs::{SliceFormat, Store};
 use crate::gopher::FabricKind;
+use crate::ingest::{ingest_edge_list, IngestOptions};
 use crate::graph::{gen, io, props, Graph};
 use crate::job::{EngineKind, Job, JobSource};
 use crate::partition::{
@@ -83,7 +102,11 @@ pub fn dispatch(argv: Vec<String>) -> Result<()> {
         "store" if args.positional.get(1).map(String::as_str) == Some("verify") => {
             cmd_store_verify(&args)
         }
+        "store" if args.positional.get(1).map(String::as_str) == Some("migrate") => {
+            cmd_store_migrate(&args)
+        }
         "store" => cmd_store(&args),
+        "ingest" => cmd_ingest(&args),
         "run" => cmd_run(&args),
         "serve" => cmd_serve(&args),
         "algos" => cmd_algos(),
@@ -103,6 +126,9 @@ commands:
   partition    partition a graph and report cut metrics
   store        build a GoFS store directory (partition + sub-graph slices)
   store verify checksum-scrub a store (--store) and/or checkpoint dir (--ckpt)
+  store migrate  rewrite a v1/v2 store as packed v3 in place (re-verified)
+  ingest       stream an edge list into a GoFS store with bounded memory
+               (--spill-buffer; byte-identical to the batch store path)
   run          execute an algorithm with Gopher or the vertex baseline
                (checkpoint with --checkpoint-every/--checkpoint-dir, recover
                with --resume)
@@ -287,6 +313,73 @@ fn cmd_store_verify(args: &Args) -> Result<()> {
     }
 }
 
+/// `store migrate`: in-place v1/v2 → packed v3 rewrite. Decoding every
+/// slice during the rewrite re-verifies every checksum; the resulting
+/// packed store is scrubbed once more before reporting clean.
+fn cmd_store_migrate(args: &Args) -> Result<()> {
+    let root = args.require("store")?;
+    let before = Store::open(Path::new(root))?.meta().format;
+    let store = Store::migrate_to_packed(Path::new(root))?;
+    if before == SliceFormat::V3Packed {
+        println!("store {root} is already packed (v3); nothing to migrate");
+        return Ok(());
+    }
+    let sum = store.scrub()?;
+    if !sum.is_clean() {
+        for c in &sum.corrupt {
+            println!("CORRUPT {c}");
+        }
+        bail!("{} corrupt section(s) after migration", sum.corrupt.len());
+    }
+    println!(
+        "migrated {root} from {before} to {} ({} partitions, {} files / {} sections re-verified clean)",
+        store.meta().format,
+        store.meta().num_partitions,
+        sum.files,
+        sum.sections
+    );
+    Ok(())
+}
+
+/// `ingest`: stream an edge list into a GoFS store under a bounded
+/// memory budget. The heavy lifting (online partitioning, spill/merge,
+/// incremental partition writes) lives in [`crate::ingest`].
+fn cmd_ingest(args: &Args) -> Result<()> {
+    let edges = args.require("edges")?;
+    let store_root = args.require("store")?;
+    let hosts_raw = args.get_usize("hosts", 2)?;
+    let hosts = u32::try_from(hosts_raw)
+        .with_context(|| format!("--hosts expects a small integer, got {hosts_raw}"))?;
+    let fmt_arg = args.get_or("format", "v3");
+    let format = SliceFormat::parse(fmt_arg)
+        .with_context(|| format!("--format expects v1, v2 or v3, got {fmt_arg:?}"))?;
+    let opts = IngestOptions {
+        name: args.get_or("name", "graph").to_string(),
+        hosts,
+        format,
+        directed: args.flag("directed"),
+        spill_buffer: args.get_usize("spill-buffer", 64 << 20)?,
+        seed: args.get_u64("seed", 1)?,
+    };
+    let (store, report) =
+        ingest_edge_list(Path::new(edges), Path::new(store_root), &opts)?;
+    println!(
+        "ingested {edges} into {} ({}, {} hosts): {} vertices / {} edges / {} sub-graphs in {:.3}s",
+        store.root().display(),
+        format,
+        hosts,
+        report.vertices,
+        report.edges,
+        report.subgraphs,
+        report.seconds,
+    );
+    println!(
+        "  spills {} ({} bytes over {} run files, {} byte buffer)",
+        report.spills, report.spilled_bytes, report.runs, opts.spill_buffer
+    );
+    Ok(())
+}
+
 /// The single algorithm dispatch path: flags → `Job::builder()` →
 /// registry-driven run. No per-algorithm logic lives here.
 fn cmd_run(args: &Args) -> Result<()> {
@@ -389,22 +482,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let port_raw = args.get_usize("port", 8080)?;
     let port = u16::try_from(port_raw)
         .with_context(|| format!("--port expects 0..=65535, got {port_raw}"))?;
+    let keep_results = match args.get("keep-results") {
+        None => None,
+        Some(raw) => Some(raw.parse::<usize>().with_context(|| {
+            format!("--keep-results expects a non-negative integer, got {raw:?}")
+        })?),
+    };
     let opts = crate::serve::ServeOptions {
         port,
         workers: args.get_usize("workers", 2)?,
         queue: args.get_usize("queue", 16)?,
         cores: args.get_usize("cores", 4)?,
+        keep_results,
     };
+    let snap = resident.snapshot();
     println!(
-        "loaded {} ({}, {} partitions / {} sub-graphs / {} vertices / {} edges) in {:.3}s",
-        resident.store().meta().name,
-        resident.store().meta().format,
-        resident.store().meta().num_partitions,
-        resident.graph().num_subgraphs(),
-        resident.store().meta().num_vertices,
-        resident.store().meta().num_edges,
-        resident.load().seconds,
+        "loaded {} ({}, {} partitions / {} sub-graphs / {} vertices / {} edges, generation {}) in {:.3}s",
+        snap.store().meta().name,
+        snap.store().meta().format,
+        snap.store().meta().num_partitions,
+        snap.graph().num_subgraphs(),
+        snap.store().meta().num_vertices,
+        snap.store().meta().num_edges,
+        snap.store().meta().generation,
+        snap.load().seconds,
     );
+    drop(snap);
     let server = crate::serve::Server::start(resident, &opts)?;
     println!("serving on http://{}", server.addr());
     server.serve_forever();
@@ -797,6 +900,89 @@ mod tests {
         bytes[last] ^= 0x55;
         std::fs::write(&victim, bytes).unwrap();
         assert!(run_cmd(&["store", "verify", "--store", store.to_str().unwrap()]).is_err());
+    }
+
+    #[test]
+    fn ingest_matches_batch_hash_store() {
+        // The streamed path with a spill buffer far smaller than the
+        // input must agree with `store --strategy hash` of the same
+        // list: identical cc output and a clean scrub.
+        let dir = tmp("ingest");
+        let graph = dir.join("g.txt");
+        run_cmd(&["gen", "--kind", "road", "--scale", "8", "--seed", "5", "--out",
+                  graph.to_str().unwrap()])
+            .unwrap();
+        let batch = dir.join("batch");
+        run_cmd(&["store", "--graph", graph.to_str().unwrap(), "--k", "2",
+                  "--strategy", "hash", "--seed", "1", "--format", "v3",
+                  "--out", batch.to_str().unwrap()])
+            .unwrap();
+        let streamed = dir.join("streamed");
+        run_cmd(&["ingest", "--edges", graph.to_str().unwrap(),
+                  "--store", streamed.to_str().unwrap(),
+                  "--hosts", "2", "--spill-buffer", "64"])
+            .unwrap();
+        run_cmd(&["store", "verify", "--store", streamed.to_str().unwrap()]).unwrap();
+        let a = dir.join("batch.tsv");
+        let b = dir.join("streamed.tsv");
+        run_cmd(&["run", "--store", batch.to_str().unwrap(), "--algo", "cc",
+                  "--output", a.to_str().unwrap()])
+            .unwrap();
+        run_cmd(&["run", "--store", streamed.to_str().unwrap(), "--algo", "cc",
+                  "--output", b.to_str().unwrap()])
+            .unwrap();
+        assert_eq!(
+            std::fs::read_to_string(&a).unwrap(),
+            std::fs::read_to_string(&b).unwrap()
+        );
+        // Refusals: missing inputs, bad formats, occupied target.
+        assert!(run_cmd(&["ingest", "--store", dir.join("x").to_str().unwrap()]).is_err());
+        assert!(run_cmd(&["ingest", "--edges", graph.to_str().unwrap(),
+                          "--store", dir.join("x").to_str().unwrap(),
+                          "--format", "v9"])
+            .is_err());
+        assert!(run_cmd(&["ingest", "--edges", graph.to_str().unwrap(),
+                          "--store", streamed.to_str().unwrap()])
+            .is_err());
+    }
+
+    #[test]
+    fn store_migrate_upgrades_in_place() {
+        let dir = tmp("migrate");
+        let graph = dir.join("g.txt");
+        let store = dir.join("store");
+        run_cmd(&["gen", "--kind", "chain", "--scale", "4", "--seed", "7", "--out",
+                  graph.to_str().unwrap()])
+            .unwrap();
+        run_cmd(&["store", "--graph", graph.to_str().unwrap(), "--k", "2",
+                  "--attrs", "2", "--format", "v2", "--out", store.to_str().unwrap()])
+            .unwrap();
+        let golden = dir.join("before.tsv");
+        run_cmd(&["run", "--store", store.to_str().unwrap(), "--algo", "cc",
+                  "--output", golden.to_str().unwrap()])
+            .unwrap();
+        run_cmd(&["store", "migrate", "--store", store.to_str().unwrap()]).unwrap();
+        // Format flipped on disk; superseded slice files are gone.
+        assert_eq!(
+            Store::open(&store).unwrap().meta().format,
+            SliceFormat::V3Packed
+        );
+        assert!(store.join("host0").join("partition.gfsp").exists());
+        assert!(!store.join("host0").join("sg_0.topo.slice").exists());
+        // Results (full and projected) are unchanged, and the packed
+        // store scrubs clean. Migrating again is a no-op.
+        let after = dir.join("after.tsv");
+        run_cmd(&["run", "--store", store.to_str().unwrap(), "--algo", "cc",
+                  "--load-attributes", "attr0", "--output", after.to_str().unwrap()])
+            .unwrap();
+        assert_eq!(
+            std::fs::read_to_string(&golden).unwrap(),
+            std::fs::read_to_string(&after).unwrap()
+        );
+        run_cmd(&["store", "verify", "--store", store.to_str().unwrap()]).unwrap();
+        run_cmd(&["store", "migrate", "--store", store.to_str().unwrap()]).unwrap();
+        // Missing --store is a refusal.
+        assert!(run_cmd(&["store", "migrate"]).is_err());
     }
 
     #[test]

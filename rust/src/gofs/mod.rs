@@ -12,6 +12,14 @@
 //! Remote edges resolve to a (partition, sub-graph, vertex) triple at
 //! store-build time, so no network resolution is ever needed at load
 //! or run time.
+//!
+//! Packed (v3) stores additionally mutate by **generation**:
+//! [`Store::append`] commits an [`AppendBatch`] as a new numbered
+//! generation (fresh packed files + an atomic `meta.txt` rename), open
+//! handles stay pinned to the generation they opened, and
+//! [`Store::dirty_since`] reports which sub-graphs later generations
+//! touched. See [`store`] and the streaming builder in
+//! [`crate::ingest`].
 
 // `packed` is docs-audited (see the crate-level missing_docs note in
 // lib.rs); the older per-file format modules still carry allows.
@@ -29,4 +37,4 @@ pub use slice::SliceFormat;
 pub use subgraph::{
     reassemble, DistributedGraph, PartitionAttributes, RemoteRef, Subgraph, SubgraphId,
 };
-pub use store::{AttrProjection, LoadOptions, LoadStats, Store, StoreMeta};
+pub use store::{AppendBatch, AttrProjection, LoadOptions, LoadStats, Store, StoreMeta};

@@ -24,6 +24,18 @@
 //! every section it does not want instead of opening and discarding
 //! files.
 //!
+//! Packed stores additionally relax write-once into
+//! **write-once-per-generation**: [`Store::append`] commits a batch of
+//! new vertices, new edges, and attribute updates as generation `G+1`
+//! by writing fresh `partition.g<G+1>.gfsp` files for the touched
+//! partitions and atomically renaming a new `meta.txt` over the old
+//! one. Earlier generation files are never rewritten, so a handle
+//! opened before the append (pinned at its open-time generation) keeps
+//! reading an unchanged snapshot while a fresh [`Store::open`] sees
+//! the head. Each generation records which [`SubgraphId`]s it touched
+//! in a `gen_<G>.txt` manifest; [`Store::dirty_since`] unions them so
+//! incremental re-runs can scope recompute to changed sub-graphs.
+//!
 //! Loading is parallel at two levels, mirroring the paper's cluster:
 //! [`Store::load_all`] runs one loader thread per partition (each
 //! simulated host reads only its own directory, concurrently — the
@@ -35,7 +47,7 @@
 //! declares the attributes it reads and the load path touches only
 //! those slice files.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::fs;
 use std::io::{Read, Seek, SeekFrom};
 use std::path::{Path, PathBuf};
@@ -45,7 +57,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::graph::csr::Graph;
-use crate::partition::Partitioning;
+use crate::partition::{HashPartitioner, Partitioning};
 use crate::util::fsio;
 use crate::util::pool;
 
@@ -53,7 +65,7 @@ use super::packed;
 use super::section::checksum;
 use super::slice::{self, SliceFormat};
 use super::subgraph::{
-    discover, DistributedGraph, PartitionAttributes, Subgraph, SubgraphId,
+    discover, DistributedGraph, PartitionAttributes, RemoteRef, Subgraph, SubgraphId,
 };
 
 /// Store-wide metadata (the `meta.txt` contents).
@@ -70,6 +82,11 @@ pub struct StoreMeta {
     /// Slice format the store was written with (v1 when the key is
     /// absent from `meta.txt` — stores written before the format knob).
     pub format: SliceFormat,
+    /// Mutation generation (0 when the key is absent — stores written
+    /// before stores could mutate, and every freshly created store).
+    /// Each successful [`Store::append`] bumps it by one; an open
+    /// handle is pinned to the generation it read here.
+    pub generation: u64,
 }
 
 /// Byte/file accounting for one load (feeds `sim::disk`).
@@ -139,6 +156,48 @@ impl LoadOptions {
     }
 }
 
+/// One batch of mutations for [`Store::append`]. A batch is committed
+/// atomically as a single new generation.
+#[derive(Clone, Debug, Default)]
+pub struct AppendBatch {
+    /// Number of new vertices. Global ids are assigned densely from the
+    /// store's current vertex count; each new vertex is hash-placed
+    /// (via [`HashPartitioner::bucket`]) and becomes its own singleton
+    /// sub-graph on its partition.
+    pub new_vertices: u64,
+    /// New edges over global ids — existing vertices or ones appended
+    /// by this very batch. Weights are required on a weighted store and
+    /// rejected on an unweighted one. An edge whose endpoints live in
+    /// two *different* sub-graphs of the *same* partition is rejected:
+    /// it would merge them, and append never restructures existing
+    /// sub-graphs (rebuild the store to re-discover).
+    pub edges: Vec<(u64, u64, Option<f32>)>,
+    /// Attribute columns to write or replace, exactly as
+    /// [`Store::write_attributes`] takes them — but versioned: the new
+    /// column lands in the new generation's file, so pinned handles
+    /// keep reading the old column.
+    pub attributes: Vec<(SubgraphId, String, Vec<f32>)>,
+}
+
+impl AppendBatch {
+    fn is_empty(&self) -> bool {
+        self.new_vertices == 0 && self.edges.is_empty() && self.attributes.is_empty()
+    }
+}
+
+/// Routed edge mutations for one sub-graph (append-internal). Edges
+/// are kept as global-id triples and resolved to local indices against
+/// the decoded sub-graph at rewrite time.
+#[derive(Default)]
+struct SubgraphDelta {
+    /// Both endpoints in this sub-graph.
+    local: Vec<(u64, u64, f32)>,
+    /// Source here, target on another partition.
+    remote_out: Vec<(u64, u64, f32)>,
+    /// Target here, source on another partition.
+    remote_in: Vec<(u64, u64, f32)>,
+}
+
 /// Handle to an on-disk GoFS store.
 pub struct Store {
     root: PathBuf,
@@ -189,32 +248,7 @@ impl Store {
         let dg = discover(g, parts)?;
         fs::create_dir_all(root)?;
         for (p, sgs) in dg.partitions.iter().enumerate() {
-            let host_dir = root.join(format!("host{p}"));
-            fs::create_dir_all(&host_dir)?;
-            if format == SliceFormat::V3Packed {
-                // One packed file per partition: every sub-graph's
-                // topology sections back to back behind one directory
-                // (attribute columns join the same file later via
-                // `write_attributes`' directory rewrite).
-                let mut sections: Vec<(u32, u8, String, Vec<u8>)> = Vec::new();
-                for sg in sgs {
-                    for (sec, body) in slice::topology_sections(sg) {
-                        sections.push((sg.id.index, sec, String::new(), body));
-                    }
-                }
-                fs::write(
-                    host_dir.join(packed::PARTITION_FILE),
-                    packed::encode(&sections)?,
-                )?;
-            } else {
-                for sg in sgs {
-                    let bytes = slice::encode_topology(sg, format);
-                    fs::write(
-                        host_dir.join(format!("sg_{}.topo.slice", sg.id.index)),
-                        bytes,
-                    )?;
-                }
-            }
+            write_partition_files(&root.join(format!("host{p}")), sgs, format)?;
         }
         let meta = StoreMeta {
             name: name.to_string(),
@@ -225,6 +259,7 @@ impl Store {
             num_partitions: parts.k() as u32,
             subgraph_counts: dg.partitions.iter().map(|p| p.len() as u32).collect(),
             format,
+            generation: 0,
         };
         write_meta(&root.join("meta.txt"), &meta)?;
         Ok((Store { root: root.to_path_buf(), meta }, dg))
@@ -251,6 +286,24 @@ impl Store {
 
     fn attr_path(&self, p: u32, index: u32, name: &str) -> PathBuf {
         self.host_dir(p).join(format!("sg_{index}.attr.{name}.slice"))
+    }
+
+    /// Packed partition file this handle reads for partition `p`: the
+    /// newest `partition.g<G>.gfsp` at or below the handle's pinned
+    /// generation, falling back to the generation-0
+    /// `partition.gfsp`. An append only ever creates files *above* the
+    /// pinned generation and never rewrites one at or below it, so the
+    /// path this resolves — and the bytes behind it — cannot change
+    /// underneath a running job.
+    fn packed_path(&self, p: u32) -> PathBuf {
+        let host = self.host_dir(p);
+        for g in (1..=self.meta.generation).rev() {
+            let path = host.join(generation_file(g));
+            if path.exists() {
+                return path;
+            }
+        }
+        host.join(packed::PARTITION_FILE)
     }
 
     /// Load all sub-graphs of partition `p` (data-local read: only this
@@ -371,7 +424,7 @@ impl Store {
     ) -> Result<(Vec<Subgraph>, PartitionAttributes, LoadStats)> {
         let t0 = Instant::now();
         let count = self.meta.subgraph_counts[p as usize] as usize;
-        let path = self.host_dir(p).join(packed::PARTITION_FILE);
+        let path = self.packed_path(p);
         let dir = {
             let mut f = fs::File::open(&path)
                 .with_context(|| format!("read {}", path.display()))?;
@@ -420,7 +473,8 @@ impl Store {
         type PackedCell = Mutex<Option<Result<(Subgraph, BTreeMap<String, Vec<f32>>, u64)>>>;
         let cells: Vec<PackedCell> = (0..count).map(|_| Mutex::new(None)).collect();
         pool::run_indexed(cores, count, |i| {
-            let r = load_packed_subgraph(&path, p, i as u32, &plans[i]);
+            let r =
+                load_packed_subgraph(&path, p, i as u32, &plans[i], self.meta.num_vertices);
             *cells[i].lock().unwrap() = Some(r);
         })?;
 
@@ -591,7 +645,7 @@ impl Store {
                 });
                 batch_last.push(item);
             }
-            let path = self.host_dir(p).join(packed::PARTITION_FILE);
+            let path = self.packed_path(p);
             let bytes =
                 fs::read(&path).with_context(|| format!("read {}", path.display()))?;
             let dir = packed::parse(&bytes)
@@ -653,7 +707,11 @@ impl Store {
                 .collect::<std::io::Result<Vec<_>>>()?
                 .into_iter()
                 .map(|e| e.file_name().to_string_lossy().into_owned())
-                .filter(|n| n.ends_with(".slice") || n == packed::PARTITION_FILE)
+                .filter(|n| {
+                    n.ends_with(".slice")
+                        || n == packed::PARTITION_FILE
+                        || (n.starts_with("partition.g") && n.ends_with(".gfsp"))
+                })
                 .collect();
             names.sort();
             for name in names {
@@ -665,7 +723,7 @@ impl Store {
                         continue;
                     }
                 };
-                if name == packed::PARTITION_FILE {
+                if !name.ends_with(".slice") {
                     sum.record(&rel, packed::scrub(&bytes));
                 } else {
                     // The filename says what the file must contain; the
@@ -688,7 +746,7 @@ impl Store {
     pub fn read_attribute(&self, id: SubgraphId, name: &str) -> Result<(Vec<f32>, LoadStats)> {
         let t0 = Instant::now();
         if self.meta.format == SliceFormat::V3Packed {
-            let path = self.host_dir(id.partition).join(packed::PARTITION_FILE);
+            let path = self.packed_path(id.partition);
             let mut f = fs::File::open(&path)
                 .with_context(|| format!("read {}", path.display()))?;
             let dir = packed::read_directory(&mut f)
@@ -725,6 +783,450 @@ impl Store {
             LoadStats { files: 1, bytes: bytes.len() as u64, seconds: t0.elapsed().as_secs_f64() },
         ))
     }
+
+    /// Sub-graph of every global vertex, indexed by vertex id — the
+    /// placement table [`Store::append`] routes new edges with and
+    /// incremental jobs scope their output with.
+    pub fn vertex_locations(&self) -> Result<Vec<SubgraphId>> {
+        let mut locs =
+            vec![SubgraphId { partition: 0, index: 0 }; self.meta.num_vertices as usize];
+        let opts = LoadOptions { sequential: true, cores: 1, ..Default::default() };
+        for p in 0..self.meta.num_partitions {
+            let (sgs, _, _) = self.load_partition_with(p, &opts)?;
+            for sg in &sgs {
+                for &gv in &sg.vertices {
+                    locs[gv as usize] = sg.id;
+                }
+            }
+        }
+        Ok(locs)
+    }
+
+    /// Commit `batch` as generation `G+1`. Returns the new generation.
+    ///
+    /// Only packed (v3) stores mutate — run `goffish store migrate`
+    /// first for the per-file formats. Every touched partition gets a
+    /// fresh `partition.g<G+1>.gfsp` (earlier generation files are
+    /// never rewritten); the atomic rename of `meta.txt` is the commit
+    /// point, so a crash anywhere before it leaves the old generation
+    /// fully intact and a handle opened before the append keeps
+    /// reading its pinned snapshot. Single-appender discipline is the
+    /// caller's: two concurrent appends to the same root race on the
+    /// generation number.
+    pub fn append(&mut self, batch: &AppendBatch) -> Result<u64> {
+        ensure!(
+            self.meta.format == SliceFormat::V3Packed,
+            "append requires a packed (v3) store; run `goffish store migrate` on {} first",
+            self.root.display()
+        );
+        ensure!(!batch.is_empty(), "empty append batch");
+        for &(u, v, w) in &batch.edges {
+            if self.meta.weighted {
+                ensure!(
+                    w.is_some(),
+                    "edge ({u},{v}): weighted store requires a weight on every appended edge"
+                );
+            } else {
+                ensure!(
+                    w.is_none(),
+                    "edge ({u},{v}): unweighted store cannot take a weighted edge"
+                );
+            }
+        }
+        let old_nv = self.meta.num_vertices;
+        let new_nv = old_nv + batch.new_vertices;
+        ensure!(new_nv <= u32::MAX as u64, "store would exceed u32 vertex ids");
+        for &(u, v, _) in &batch.edges {
+            ensure!(
+                u < new_nv && v < new_nv,
+                "edge ({u},{v}) out of range for {new_nv} vertices"
+            );
+        }
+
+        // Place new vertices: each becomes a singleton sub-graph on its
+        // hash partition (append never restructures existing
+        // sub-graphs, so a new vertex cannot join one even when every
+        // one of its edges points there).
+        let mut locs = self.vertex_locations()?;
+        let mut counts = self.meta.subgraph_counts.clone();
+        let hasher = HashPartitioner::default();
+        let k = self.meta.num_partitions;
+        let mut new_sgs: BTreeMap<SubgraphId, u64> = BTreeMap::new();
+        for gid in old_nv..new_nv {
+            let p = hasher.bucket(gid, k);
+            let id = SubgraphId { partition: p, index: counts[p as usize] };
+            counts[p as usize] += 1;
+            new_sgs.insert(id, gid);
+            locs.push(id);
+        }
+
+        // Validate attribute targets against the post-append shape so a
+        // batch can attach columns to the vertices it just created.
+        for (id, name, _) in &batch.attributes {
+            ensure!(!name.is_empty(), "attribute name for {id} must be non-empty");
+            ensure!(
+                id.partition < k,
+                "partition {} out of range",
+                id.partition
+            );
+            ensure!(
+                id.index < counts[id.partition as usize],
+                "sub-graph {id} out of range"
+            );
+        }
+
+        // Route edges to the sub-graphs they touch.
+        let mut deltas: BTreeMap<SubgraphId, SubgraphDelta> = BTreeMap::new();
+        for &(u, v, w) in &batch.edges {
+            let w = w.unwrap_or(1.0);
+            let (lu, lv) = (locs[u as usize], locs[v as usize]);
+            if lu == lv {
+                deltas.entry(lu).or_default().local.push((u, v, w));
+            } else if lu.partition == lv.partition {
+                bail!(
+                    "edge ({u},{v}) would merge sub-graphs {lu} and {lv}; append \
+                     never merges sub-graphs (rebuild the store to re-discover)"
+                );
+            } else {
+                deltas.entry(lu).or_default().remote_out.push((u, v, w));
+                deltas.entry(lv).or_default().remote_in.push((u, v, w));
+            }
+        }
+
+        // The dirty set this generation will record: everything whose
+        // topology or attribute bytes change.
+        let mut dirty: BTreeSet<SubgraphId> = deltas.keys().copied().collect();
+        dirty.extend(new_sgs.keys().copied());
+        dirty.extend(batch.attributes.iter().map(|(id, _, _)| *id));
+
+        let next_gen = self.meta.generation + 1;
+        let touched: BTreeSet<u32> = dirty.iter().map(|id| id.partition).collect();
+        for &p in &touched {
+            let path = self.packed_path(p);
+            let bytes =
+                fs::read(&path).with_context(|| format!("read {}", path.display()))?;
+            let dir = packed::parse(&bytes)
+                .with_context(|| format!("decode {}", path.display()))?;
+            // Every carried-forward body is re-verified first — a
+            // rewrite must never launder rotted bytes into a freshly
+            // checksummed file (same refusal as `write_attributes`).
+            for e in &dir.entries {
+                ensure!(
+                    checksum(&bytes[e.range()]) == e.checksum,
+                    "section `{}` of {} corrupt (checksum mismatch); refusing to \
+                     rewrite the packed file over it",
+                    e.label(),
+                    path.display()
+                );
+            }
+
+            // Rebuild the sub-graphs whose topology changes: existing
+            // ones decoded from the current file and extended, new
+            // singletons built from scratch.
+            let old_count = self.meta.subgraph_counts[p as usize];
+            let mut rebuilt: BTreeMap<u32, Subgraph> = BTreeMap::new();
+            for (id, delta) in deltas.iter().filter(|(id, _)| id.partition == p) {
+                if id.index >= old_count {
+                    continue; // new singleton, handled below
+                }
+                let mut sg = slice::decode_topology_from(|sec| {
+                    dir.entries
+                        .iter()
+                        .find(|e| {
+                            e.subgraph == id.index && e.name.is_empty() && e.section == sec
+                        })
+                        .map(|e| &bytes[e.range()])
+                        .ok_or_else(|| {
+                            anyhow!(
+                                "missing section `{}` for sub-graph {id}",
+                                slice::section_name(sec)
+                            )
+                        })
+                })?;
+                sg.num_global_vertices = new_nv;
+                rebuilt.insert(id.index, apply_delta(&sg, delta, &locs, new_nv)?);
+            }
+            for (&id, &gid) in new_sgs.iter().filter(|(id, _)| id.partition == p) {
+                let base = Subgraph {
+                    id,
+                    vertices: vec![gid as u32],
+                    local: Graph::from_edges(
+                        1,
+                        &[],
+                        if self.meta.weighted { Some(Vec::new()) } else { None },
+                        self.meta.directed,
+                    )?,
+                    remote_out: Vec::new(),
+                    remote_in: Vec::new(),
+                    num_global_vertices: new_nv,
+                };
+                let sg = match deltas.get(&id) {
+                    Some(delta) => apply_delta(&base, delta, &locs, new_nv)?,
+                    None => base,
+                };
+                rebuilt.insert(id.index, sg);
+            }
+
+            // Attribute columns this batch (re)writes on this
+            // partition; within one batch the last write of a name
+            // wins, exactly as in `write_attributes`.
+            let mut batch_last: Vec<&(SubgraphId, String, Vec<f32>)> = Vec::new();
+            for item in batch.attributes.iter().filter(|(id, _, _)| id.partition == p) {
+                batch_last
+                    .retain(|prev| !(prev.0.index == item.0.index && prev.1 == item.1));
+                batch_last.push(item);
+            }
+
+            // Assemble the new file: original entry order, with changed
+            // topology bodies swapped in place, replaced columns
+            // dropped (they re-enter at the end under their new
+            // bodies), then the new singletons and new columns.
+            let mut fresh: BTreeMap<(u32, u8), Vec<u8>> = BTreeMap::new();
+            for (&i, sg) in &rebuilt {
+                if i < old_count {
+                    for (sec, body) in slice::topology_sections(sg) {
+                        fresh.insert((i, sec), body);
+                    }
+                }
+            }
+            let mut sections: Vec<(u32, u8, String, Vec<u8>)> = Vec::new();
+            for e in &dir.entries {
+                if e.name.is_empty() {
+                    let body = match fresh.remove(&(e.subgraph, e.section)) {
+                        Some(body) => body,
+                        None => bytes[e.range()].to_vec(),
+                    };
+                    sections.push((e.subgraph, e.section, String::new(), body));
+                } else if batch_last
+                    .iter()
+                    .any(|(id, n, _)| id.index == e.subgraph && *n == e.name)
+                {
+                    continue;
+                } else {
+                    sections.push((
+                        e.subgraph,
+                        e.section,
+                        e.name.clone(),
+                        bytes[e.range()].to_vec(),
+                    ));
+                }
+            }
+            for (&i, sg) in rebuilt.iter().filter(|(&i, _)| i >= old_count) {
+                for (sec, body) in slice::topology_sections(sg) {
+                    sections.push((i, sec, String::new(), body));
+                }
+            }
+            for (id, name, values) in batch_last {
+                sections.push((
+                    id.index,
+                    slice::SEC_VALUES,
+                    name.clone(),
+                    slice::f32_column(values),
+                ));
+            }
+            let out = self.host_dir(p).join(generation_file(next_gen));
+            fsio::persist(
+                &out.with_extension("gfsp.tmp"),
+                &out,
+                &packed::encode(&sections)?,
+            )?;
+        }
+
+        // Manifest, then meta — the meta rename is the commit point; a
+        // crash before it leaves unreferenced g-files that no reader
+        // resolves (the pinned generation scan stops at the old head).
+        let dirty_list: Vec<String> = dirty
+            .iter()
+            .map(|id| format!("{}:{}", id.partition, id.index))
+            .collect();
+        let manifest = format!(
+            "generation={next_gen}\ndirty={}\nnew_vertices={}\nnew_edges={}\n",
+            dirty_list.join(","),
+            batch.new_vertices,
+            batch.edges.len()
+        );
+        let manifest_path = self.root.join(format!("gen_{next_gen}.txt"));
+        fsio::persist(
+            &manifest_path.with_extension("txt.tmp"),
+            &manifest_path,
+            manifest.as_bytes(),
+        )?;
+        let meta = StoreMeta {
+            num_vertices: new_nv,
+            num_edges: self.meta.num_edges + batch.edges.len() as u64,
+            subgraph_counts: counts,
+            generation: next_gen,
+            ..self.meta.clone()
+        };
+        let meta_path = self.root.join("meta.txt");
+        fsio::persist(
+            &self.root.join("meta.txt.tmp"),
+            &meta_path,
+            meta_text(&meta).as_bytes(),
+        )?;
+        self.meta = meta;
+        Ok(next_gen)
+    }
+
+    /// Union of every sub-graph touched by generations `gen+1..=head`
+    /// (sorted, deduplicated) — empty when this handle *is* at `gen`.
+    /// This is what an incremental re-run scopes its recompute to.
+    pub fn dirty_since(&self, since: u64) -> Result<Vec<SubgraphId>> {
+        ensure!(
+            since <= self.meta.generation,
+            "generation {since} is ahead of the store head {}",
+            self.meta.generation
+        );
+        let mut set = BTreeSet::new();
+        for g in since + 1..=self.meta.generation {
+            let path = self.root.join(format!("gen_{g}.txt"));
+            let text = fs::read_to_string(&path)
+                .with_context(|| format!("read generation manifest {}", path.display()))?;
+            for line in text.lines() {
+                let Some(list) = line.strip_prefix("dirty=") else { continue };
+                for item in list.split(',').filter(|s| !s.is_empty()) {
+                    let (p, i) = item.split_once(':').ok_or_else(|| {
+                        anyhow!("malformed dirty entry {item:?} in {}", path.display())
+                    })?;
+                    set.insert(SubgraphId { partition: p.parse()?, index: i.parse()? });
+                }
+            }
+        }
+        Ok(set.into_iter().collect())
+    }
+
+    /// Rewrite a v1/v2 store as packed (v3) in place, re-verifying
+    /// every checksum along the way (decode *is* verification), and
+    /// return a fresh handle. A v3 store is a no-op. Each partition's
+    /// packed file — carrying topology *and* every attribute column —
+    /// is committed tmp+rename, and the store stays a valid v1/v2
+    /// store until the final `meta.txt` rename flips the format (the
+    /// commit point); only then are the superseded `.slice` files
+    /// removed, so a crash at any step leaves a readable store.
+    pub fn migrate_to_packed(root: &Path) -> Result<Store> {
+        let store = Store::open(root)?;
+        if store.meta.format == SliceFormat::V3Packed {
+            return Ok(store);
+        }
+        let opts = LoadOptions {
+            attributes: AttrProjection::All,
+            sequential: true,
+            cores: 1,
+        };
+        for p in 0..store.meta.num_partitions {
+            let (sgs, attrs, _) = store
+                .load_partition_with(p, &opts)
+                .with_context(|| format!("migrate: load partition {p}"))?;
+            let mut sections: Vec<(u32, u8, String, Vec<u8>)> = Vec::new();
+            for (i, sg) in sgs.iter().enumerate() {
+                for (sec, body) in slice::topology_sections(sg) {
+                    sections.push((sg.id.index, sec, String::new(), body));
+                }
+                for (name, col) in &attrs[i] {
+                    sections.push((
+                        sg.id.index,
+                        slice::SEC_VALUES,
+                        name.clone(),
+                        slice::f32_column(col),
+                    ));
+                }
+            }
+            let path = store.host_dir(p).join(packed::PARTITION_FILE);
+            fsio::persist(
+                &path.with_extension("gfsp.tmp"),
+                &path,
+                &packed::encode(&sections)?,
+            )?;
+        }
+        let meta = StoreMeta { format: SliceFormat::V3Packed, ..store.meta.clone() };
+        fsio::persist(
+            &root.join("meta.txt.tmp"),
+            &root.join("meta.txt"),
+            meta_text(&meta).as_bytes(),
+        )?;
+        // Past the commit point: the .slice files are now invisible to
+        // every load path; removing them is pure cleanup and a crash
+        // here leaves harmless (still-valid) extras.
+        for p in 0..meta.num_partitions {
+            let host = store.host_dir(p);
+            for entry in fs::read_dir(&host)
+                .with_context(|| format!("list {}", host.display()))?
+            {
+                let entry = entry?;
+                if entry.file_name().to_string_lossy().ends_with(".slice") {
+                    fs::remove_file(entry.path())?;
+                }
+            }
+        }
+        Store::open(root)
+    }
+}
+
+/// Extend `base` with one sub-graph's routed edge mutations: appended
+/// local edges re-enter the (stable) CSR build after the existing
+/// ones, remote refs extend the existing vectors in batch order, and
+/// the global vertex count moves to the new generation's total.
+fn apply_delta(
+    base: &Subgraph,
+    delta: &SubgraphDelta,
+    locs: &[SubgraphId],
+    new_nv: u64,
+) -> Result<Subgraph> {
+    let weighted = base.local.has_weights();
+    let local_of = |g: u64| -> Result<u32> {
+        base.local_id(g as u32)
+            .ok_or_else(|| anyhow!("vertex {g} not in sub-graph {}", base.id))
+    };
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    let mut weights: Vec<f32> = Vec::new();
+    for (u, v, ei) in base.local.edges() {
+        edges.push((u, v));
+        if weighted {
+            weights.push(base.local.weight(ei));
+        }
+    }
+    for &(u, v, w) in &delta.local {
+        edges.push((local_of(u)?, local_of(v)?));
+        if weighted {
+            weights.push(w);
+        }
+    }
+    let local = Graph::from_edges(
+        base.vertices.len(),
+        &edges,
+        if weighted { Some(weights) } else { None },
+        base.local.directed(),
+    )?;
+    let mut remote_out = base.remote_out.clone();
+    for &(u, v, w) in &delta.remote_out {
+        let t = locs[v as usize];
+        remote_out.push(RemoteRef {
+            local: local_of(u)?,
+            target_global: v as u32,
+            partition: t.partition,
+            subgraph: t.index,
+            weight: w,
+        });
+    }
+    let mut remote_in = base.remote_in.clone();
+    for &(u, v, w) in &delta.remote_in {
+        let s = locs[u as usize];
+        remote_in.push(RemoteRef {
+            local: local_of(v)?,
+            target_global: u as u32,
+            partition: s.partition,
+            subgraph: s.index,
+            weight: w,
+        });
+    }
+    Ok(Subgraph {
+        id: base.id,
+        vertices: base.vertices.clone(),
+        local,
+        remote_out,
+        remote_in,
+        num_global_vertices: new_nv,
+    })
 }
 
 /// Read + decode + verify one planned slice.
@@ -770,6 +1272,7 @@ fn load_packed_subgraph(
     p: u32,
     index: u32,
     plan: &[packed::Entry],
+    num_global: u64,
 ) -> Result<(Subgraph, BTreeMap<String, Vec<f32>>, u64)> {
     ensure!(
         plan.iter().any(|e| e.name.is_empty()),
@@ -821,7 +1324,7 @@ fn load_packed_subgraph(
             sections.push((e, body));
         }
     }
-    let sg = slice::decode_topology_from(|id| {
+    let mut sg = slice::decode_topology_from(|id| {
         sections
             .iter()
             .find(|(e, _)| e.name.is_empty() && e.section == id)
@@ -836,6 +1339,11 @@ fn load_packed_subgraph(
         path.display(),
         sg.id
     );
+    // A sub-graph untouched since an earlier generation still carries
+    // that generation's global vertex count in its META section; the
+    // handle's pinned meta is authoritative for the snapshot being
+    // loaded (identical for a never-appended store).
+    sg.num_global_vertices = num_global;
     let mut cols = BTreeMap::new();
     for (e, body) in &sections {
         if !e.name.is_empty() {
@@ -854,11 +1362,57 @@ fn parse_attr_filename(fname: &str) -> Option<(u32, String)> {
     Some((idx.parse().ok()?, name.to_string()))
 }
 
-fn write_meta(path: &Path, meta: &StoreMeta) -> Result<()> {
+/// Write one host directory's partition files for `sgs` — the single
+/// definition of the on-disk partition layout, shared by
+/// [`Store::create_with_format`] and the streaming ingest path (which
+/// must produce byte-identical files to the batch builder).
+pub(crate) fn write_partition_files(
+    host_dir: &Path,
+    sgs: &[Subgraph],
+    format: SliceFormat,
+) -> Result<()> {
+    fs::create_dir_all(host_dir)?;
+    if format == SliceFormat::V3Packed {
+        // One packed file per partition: every sub-graph's topology
+        // sections back to back behind one directory (attribute
+        // columns join the same file later via `write_attributes`'
+        // directory rewrite).
+        let mut sections: Vec<(u32, u8, String, Vec<u8>)> = Vec::new();
+        for sg in sgs {
+            for (sec, body) in slice::topology_sections(sg) {
+                sections.push((sg.id.index, sec, String::new(), body));
+            }
+        }
+        fs::write(
+            host_dir.join(packed::PARTITION_FILE),
+            packed::encode(&sections)?,
+        )?;
+    } else {
+        for sg in sgs {
+            let bytes = slice::encode_topology(sg, format);
+            fs::write(
+                host_dir.join(format!("sg_{}.topo.slice", sg.id.index)),
+                bytes,
+            )?;
+        }
+    }
+    Ok(())
+}
+
+/// `partition.g<G>.gfsp` — the packed file a generation-`G` append
+/// writes for a touched partition (generation 0 is the bare
+/// [`packed::PARTITION_FILE`]).
+fn generation_file(g: u64) -> String {
+    format!("partition.g{g}.gfsp")
+}
+
+/// The `meta.txt` serialization (one `key=value` per line; parsers
+/// must ignore unknown keys so older readers survive newer stores).
+fn meta_text(meta: &StoreMeta) -> String {
     let counts: Vec<String> =
         meta.subgraph_counts.iter().map(|c| c.to_string()).collect();
-    let text = format!(
-        "name={}\nvertices={}\nedges={}\ndirected={}\nweighted={}\npartitions={}\nsubgraphs={}\nformat={}\n",
+    format!(
+        "name={}\nvertices={}\nedges={}\ndirected={}\nweighted={}\npartitions={}\nsubgraphs={}\nformat={}\ngeneration={}\n",
         meta.name,
         meta.num_vertices,
         meta.num_edges,
@@ -866,9 +1420,13 @@ fn write_meta(path: &Path, meta: &StoreMeta) -> Result<()> {
         meta.weighted,
         meta.num_partitions,
         counts.join(","),
-        meta.format
-    );
-    fs::write(path, text).with_context(|| format!("write {}", path.display()))
+        meta.format,
+        meta.generation
+    )
+}
+
+pub(crate) fn write_meta(path: &Path, meta: &StoreMeta) -> Result<()> {
+    fs::write(path, meta_text(meta)).with_context(|| format!("write {}", path.display()))
 }
 
 fn read_meta(path: &Path) -> Result<StoreMeta> {
@@ -883,6 +1441,9 @@ fn read_meta(path: &Path) -> Result<StoreMeta> {
     // Stores written before the format knob carry no `format=` key and
     // are v1 by construction.
     let mut format = SliceFormat::V1;
+    // Stores written before mutability carry no `generation=` key and
+    // have never been appended to.
+    let mut generation = 0u64;
     for line in text.lines() {
         let Some((k, v)) = line.split_once('=') else { continue };
         match k {
@@ -904,6 +1465,10 @@ fn read_meta(path: &Path) -> Result<StoreMeta> {
                 format = SliceFormat::parse(v)
                     .ok_or_else(|| anyhow!("meta.txt has unknown slice format {v:?}"))?
             }
+            "generation" => generation = v.parse()?,
+            // Unknown keys are ignored, not rejected: a store written
+            // by a newer build (which may add keys, as `generation=`
+            // itself once was) must stay readable by older tools.
             _ => {}
         }
     }
@@ -925,6 +1490,7 @@ fn read_meta(path: &Path) -> Result<StoreMeta> {
         num_partitions,
         subgraph_counts,
         format,
+        generation,
     })
 }
 
@@ -1393,5 +1959,231 @@ mod tests {
         assert_eq!(parse_attr_filename("sg_0.topo.slice"), None);
         assert_eq!(parse_attr_filename("meta.txt"), None);
         assert_eq!(parse_attr_filename("sg_x.attr.rank.slice"), None);
+    }
+
+    /// Everything a load can observe about a store, in deterministic
+    /// order — the equality the generation-isolation tests assert on.
+    type Observed = Vec<(
+        SubgraphId,
+        Vec<u32>,
+        Vec<(u32, u32, f32)>,
+        Vec<RemoteRef>,
+        Vec<RemoteRef>,
+        u64,
+        Vec<(String, Vec<f32>)>,
+    )>;
+
+    fn observe(store: &Store) -> Observed {
+        let opts = LoadOptions { attributes: AttrProjection::All, ..Default::default() };
+        let (dg, attrs, _) = store.load_all_with(&opts).unwrap();
+        let flat: PartitionAttributes = attrs.into_iter().flatten().collect();
+        dg.subgraphs()
+            .zip(flat)
+            .map(|(sg, cols)| {
+                (
+                    sg.id,
+                    sg.vertices.clone(),
+                    sg.local
+                        .edges()
+                        .map(|(u, v, ei)| (u, v, sg.local.weight(ei)))
+                        .collect(),
+                    sg.remote_out.clone(),
+                    sg.remote_in.clone(),
+                    sg.num_global_vertices,
+                    cols.into_iter().collect(),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn meta_tolerates_unknown_keys_and_tracks_generation() {
+        let g = gen::chain(8);
+        let parts = MultilevelPartitioner::default().partition(&g, 2);
+        let root = tmp("meta_unknown");
+        let (store, _) = Store::create(&root, "c", &g, &parts).unwrap();
+        assert_eq!(store.meta().generation, 0);
+        // A future build may add keys; today's parser must skip them —
+        // exactly how `generation=` itself stays readable by the tools
+        // that predate it (the fig4b bench and the CLI smoke both grep
+        // meta.txt line-wise and must keep working on migrated stores).
+        let meta_path = root.join("meta.txt");
+        let mut text = fs::read_to_string(&meta_path).unwrap();
+        assert!(text.contains("generation=0\n"));
+        text.push_str("future_key=whatever\n");
+        fs::write(&meta_path, text).unwrap();
+        let reopened = Store::open(&root).unwrap();
+        assert_eq!(reopened.meta(), store.meta());
+        assert!(reopened.load_all().is_ok());
+    }
+
+    #[test]
+    fn append_pins_old_handles_and_tracks_dirty() {
+        let g = gen::road(16, 0.93, 0.02, 8);
+        let parts = MultilevelPartitioner::default().partition(&g, 3);
+        let root = tmp("append_pin");
+        let (mut head, dg) =
+            Store::create_with_format(&root, "g", &g, &parts, SliceFormat::V3Packed).unwrap();
+        let pinned = Store::open(&root).unwrap();
+        let before = observe(&pinned);
+        let gen0_files: Vec<Vec<u8>> = (0..3)
+            .map(|p| {
+                fs::read(root.join(format!("host{p}")).join(packed::PARTITION_FILE)).unwrap()
+            })
+            .collect();
+
+        // An edge between two existing vertices on different partitions,
+        // plus one brand-new vertex and one attribute column.
+        let mut locs = vec![SubgraphId { partition: 0, index: 0 }; 16];
+        for sg in dg.subgraphs() {
+            for &v in &sg.vertices {
+                locs[v as usize] = sg.id;
+            }
+        }
+        let a = 0u64;
+        let b = (1..16u64)
+            .find(|&x| locs[x as usize].partition != locs[0].partition)
+            .unwrap();
+        let (src_id, dst_id) = (locs[a as usize], locs[b as usize]);
+        let src_n = dg.subgraph(src_id).num_vertices();
+        let batch = AppendBatch {
+            new_vertices: 1,
+            edges: vec![(a, b, None)],
+            attributes: vec![(src_id, "score".into(), vec![0.5; src_n])],
+        };
+        assert_eq!(head.append(&batch).unwrap(), 1);
+        assert_eq!(head.meta().generation, 1);
+        assert_eq!(head.meta().num_vertices, 17);
+
+        // The pinned handle keeps reading an unchanged snapshot — down
+        // to the bytes of its generation-0 files.
+        assert_eq!(pinned.meta().generation, 0);
+        assert_eq!(observe(&pinned), before);
+        assert!(pinned.read_attribute(src_id, "score").is_err());
+        for (p, want) in gen0_files.iter().enumerate() {
+            let got =
+                fs::read(root.join(format!("host{p}")).join(packed::PARTITION_FILE)).unwrap();
+            assert_eq!(&got, want, "generation-0 file for host{p} was rewritten");
+        }
+
+        // A fresh open sees the head: the new edge, vertex, and column.
+        let fresh = Store::open(&root).unwrap();
+        assert_eq!(fresh.meta().generation, 1);
+        let (dg_after, _) = fresh.load_all().unwrap();
+        assert!(dg_after.subgraphs().all(|s| s.num_global_vertices == 17));
+        let src_after = dg_after.subgraph(src_id);
+        assert_eq!(src_after.remote_out.len(), dg.subgraph(src_id).remote_out.len() + 1);
+        let added = *src_after.remote_out.last().unwrap();
+        assert_eq!(added.target_global, b as u32);
+        assert_eq!(added.weight, 1.0);
+        assert_eq!(
+            dg_after.subgraph(dst_id).remote_in.len(),
+            dg.subgraph(dst_id).remote_in.len() + 1
+        );
+        let new_loc = fresh.vertex_locations().unwrap()[16];
+        assert_eq!(new_loc.partition, HashPartitioner::default().bucket(16, 3));
+        assert_eq!(dg_after.subgraph(new_loc).vertices, vec![16]);
+        let (col, _) = fresh.read_attribute(src_id, "score").unwrap();
+        assert_eq!(col, vec![0.5; src_n]);
+
+        // dirty_since names exactly the touched sub-graphs.
+        let mut want = vec![src_id, dst_id, new_loc];
+        want.sort();
+        want.dedup();
+        assert_eq!(fresh.dirty_since(0).unwrap(), want);
+        assert!(fresh.dirty_since(1).unwrap().is_empty());
+        assert!(fresh.dirty_since(2).is_err());
+
+        // A second generation: dirty sets stay per-generation and
+        // union across them; the gen-1 pin stays isolated too.
+        let after_gen1 = observe(&fresh);
+        let mut head2 = Store::open(&root).unwrap();
+        let dst_n = dg.subgraph(dst_id).num_vertices();
+        head2
+            .append(&AppendBatch {
+                attributes: vec![(dst_id, "score2".into(), vec![1.0; dst_n])],
+                ..Default::default()
+            })
+            .unwrap();
+        let fresh2 = Store::open(&root).unwrap();
+        assert_eq!(fresh2.meta().generation, 2);
+        assert_eq!(fresh2.dirty_since(1).unwrap(), vec![dst_id]);
+        assert_eq!(fresh2.dirty_since(0).unwrap(), want);
+        assert_eq!(observe(&fresh), after_gen1);
+        assert!(fresh2.scrub().unwrap().is_clean());
+    }
+
+    #[test]
+    fn append_requires_packed_and_rejects_merges() {
+        let g = gen::chain(8);
+        let parts = MultilevelPartitioner::default().partition(&g, 2);
+        let root = tmp("append_guard_v2");
+        let (mut store, _) = Store::create(&root, "c", &g, &parts).unwrap();
+        let err = store
+            .append(&AppendBatch { new_vertices: 1, ..Default::default() })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("store migrate"), "{err:#}");
+
+        // Two locally disconnected chains on one partition → two
+        // sub-graphs; an edge bridging them is refused, not merged.
+        let root3 = tmp("append_guard_merge");
+        let g2 = Graph::from_edges(4, &[(0, 1), (2, 3)], None, false).unwrap();
+        let parts2 = Partitioning::new(1, vec![0, 0, 0, 0]);
+        let (mut s3, dg) =
+            Store::create_with_format(&root3, "m", &g2, &parts2, SliceFormat::V3Packed)
+                .unwrap();
+        assert_eq!(dg.partitions[0].len(), 2);
+        let err = s3
+            .append(&AppendBatch { edges: vec![(1, 2, None)], ..Default::default() })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("merge"), "{err:#}");
+        // Empty batches and weight-shape mismatches are refused.
+        assert!(s3.append(&AppendBatch::default()).is_err());
+        assert!(s3
+            .append(&AppendBatch { edges: vec![(0, 1, Some(2.0))], ..Default::default() })
+            .is_err());
+        // A multi-edge within one sub-graph is fine and visible.
+        s3.append(&AppendBatch { edges: vec![(0, 1, None)], ..Default::default() })
+            .unwrap();
+        let fresh = Store::open(&root3).unwrap();
+        assert_eq!(fresh.meta().num_edges, 3);
+        let (dg2, _) = fresh.load_all().unwrap();
+        assert_eq!(dg2.subgraphs().map(|s| s.local.num_edges()).sum::<usize>(), 3);
+    }
+
+    #[test]
+    fn migrate_rewrites_v1_and_v2_stores_as_packed() {
+        for fmt in [SliceFormat::V1, SliceFormat::V2] {
+            let g = gen::road(14, 0.9, 0.02, 9);
+            let parts = MultilevelPartitioner::default().partition(&g, 2);
+            let root = tmp(&format!("migrate_{fmt}"));
+            let (store, dg) = Store::create_with_format(&root, "g", &g, &parts, fmt).unwrap();
+            for sg in dg.subgraphs() {
+                store
+                    .write_attribute(sg.id, "rank", &vec![1.5; sg.num_vertices()])
+                    .unwrap();
+            }
+            let before = observe(&store);
+            let migrated = Store::migrate_to_packed(&root).unwrap();
+            assert_eq!(migrated.meta().format, SliceFormat::V3Packed);
+            assert_eq!(migrated.meta().generation, 0);
+            assert_eq!(observe(&migrated), before, "{fmt}");
+            assert!(migrated.scrub().unwrap().is_clean());
+            // Only packed files remain in each host directory.
+            for p in 0..2 {
+                let names: Vec<String> = fs::read_dir(root.join(format!("host{p}")))
+                    .unwrap()
+                    .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+                    .collect();
+                assert_eq!(names, vec![packed::PARTITION_FILE.to_string()], "{fmt}");
+            }
+            // Idempotent, and the migrated store can now mutate.
+            let mut again = Store::migrate_to_packed(&root).unwrap();
+            assert_eq!(observe(&again), before);
+            again
+                .append(&AppendBatch { new_vertices: 1, ..Default::default() })
+                .unwrap();
+            assert_eq!(Store::open(&root).unwrap().meta().num_vertices, 15);
+        }
     }
 }

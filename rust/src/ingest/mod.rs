@@ -1,0 +1,688 @@
+//! Streaming bulk loader: edge list → GoFS store under bounded memory.
+//!
+//! The batch path (`Graph` + a partitioner + [`Store::create`]) holds
+//! the whole graph in RAM, which caps ingestable size at memory. This
+//! module builds the *same bytes* without ever materializing the global
+//! `Graph`, in the spirit of GoFFish's `grupload` bulk loader: the edge
+//! list is streamed once, partitioned online, and spilled to per-host
+//! run files whenever a configurable buffer fills; a second streaming
+//! pass then folds each host's runs into sub-graphs and writes its
+//! partition files — one partition resident at a time.
+//!
+//! ```text
+//!  edges.tsv ──stream──▶ pass 0: intern ids · hash-bucket endpoints
+//!       │                        union same-host components (DSU)
+//!       │                        buffer (u,v,w) per destination host
+//!       │                        buffer full ─▶ spill run files
+//!       ▼
+//!  .ingest/p0_run0 p0_run1 … p1_run0 …        (arrival-ordered runs)
+//!       │
+//!       ▼                pass 1, host by host:
+//!  concat runs in order ─▶ route each edge to its sub-graph
+//!                          local CSR · remote_out · remote_in
+//!                          ─▶ host<p>/ partition files  (v1/v2/v3)
+//!       ▼
+//!  meta.txt  ─▶  Store::open
+//! ```
+//!
+//! ## Byte parity with the batch builder
+//!
+//! The acceptance bar is byte-identical stores, not merely isomorphic
+//! ones, so every ordering choice mirrors the batch pipeline:
+//!
+//! * **Dense ids** — unweighted lists intern external ids in first-
+//!   appearance order, source before target (what `GraphBuilder` does);
+//!   weighted lists use the raw ids directly with `n = max + 1`
+//!   (what `read_edge_list` does). Partitions hash the *dense* id.
+//! * **Sub-graph numbering** — sub-graph indices are assigned per
+//!   partition in order of each component's smallest vertex, and member
+//!   lists ascend, exactly like `subgraph::discover`.
+//! * **Edge order** — `Graph::from_edges` counting-sorts stably by
+//!   source, so pushing local edges in file-arrival order reproduces
+//!   the batch CSR bit-for-bit. `remote_out` is stably sorted by local
+//!   vertex and `remote_in` by (local vertex, remote global id), the
+//!   order `discover`'s CSR sweeps enumerate them in.
+//! * **Runs concatenate in arrival order** — each record is appended
+//!   to its hosts' FIFO buffers and a full buffer is flushed whole, so
+//!   reading one host's runs back-to-back *is* the external merge: no
+//!   heap, no sequence numbers, just a linear scan.
+//!
+//! ## Memory bound
+//!
+//! Pass 0 holds O(V) of id tables (intern map + DSU) plus the spill
+//! buffer; pass 1 holds one partition's edges plus O(V) routing tables.
+//! Neither pass holds the full edge list, which is what lets a spill
+//! buffer smaller than the input still produce an identical store
+//! (proven by `prop_streamed_store_equals_batch_store`).
+
+use std::collections::HashMap;
+use std::fs;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::gofs::store::{write_meta, write_partition_files};
+use crate::gofs::{SliceFormat, Store, StoreMeta, Subgraph, SubgraphId};
+use crate::gofs::subgraph::RemoteRef;
+use crate::graph::csr::Graph;
+use crate::partition::HashPartitioner;
+
+/// Knobs for one streaming ingest. The defaults match the CLI's batch
+/// `store` command (hash partitioner, seed 1, packed v3 output), so
+/// `goffish ingest` and `goffish store` agree byte-for-byte out of the
+/// box.
+#[derive(Clone, Debug)]
+pub struct IngestOptions {
+    /// Graph name recorded in `meta.txt`.
+    pub name: String,
+    /// Number of hosts/partitions to scatter vertices across.
+    pub hosts: u32,
+    /// Slice format of the written store (packed v3 by default).
+    pub format: SliceFormat,
+    /// Treat edges as directed (mirrors `read_edge_list`'s flag).
+    pub directed: bool,
+    /// Spill threshold in **bytes** of buffered edge records; when the
+    /// total across all hosts reaches it, every non-empty buffer is
+    /// flushed to a run file. Values smaller than one record still
+    /// admit one record at a time.
+    pub spill_buffer: usize,
+    /// Seed of the online [`HashPartitioner`].
+    pub seed: u64,
+}
+
+impl Default for IngestOptions {
+    fn default() -> Self {
+        Self {
+            name: "graph".to_string(),
+            hosts: 2,
+            format: SliceFormat::V3Packed,
+            directed: false,
+            spill_buffer: 64 << 20,
+            seed: 1,
+        }
+    }
+}
+
+/// What one ingest did — sizes for reporting, spill accounting for
+/// tests and the `ingest_throughput` bench row.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IngestReport {
+    /// Dense vertices in the written store.
+    pub vertices: u64,
+    /// Edge lines ingested.
+    pub edges: u64,
+    /// Sub-graphs discovered across all partitions.
+    pub subgraphs: u64,
+    /// Times the spill threshold tripped mid-stream (the final
+    /// flush-everything at end of pass 0 is not counted).
+    pub spills: u64,
+    /// Run files written across all hosts.
+    pub runs: u64,
+    /// Bytes written to run files.
+    pub spilled_bytes: u64,
+    /// Wall-clock seconds for the whole ingest.
+    pub seconds: f64,
+}
+
+/// One spilled edge record: `u:u32 v:u32 w:f32`, little-endian.
+const REC_BYTES: usize = 12;
+
+/// Per-host FIFO spill buffers plus their on-disk run files.
+struct Spiller {
+    dir: PathBuf,
+    bufs: Vec<Vec<(u32, u32, f32)>>,
+    /// Flush when this many records are buffered in total.
+    cap_records: usize,
+    buffered: usize,
+    runs: Vec<Vec<PathBuf>>,
+    spills: u64,
+    spilled_bytes: u64,
+}
+
+impl Spiller {
+    fn new(dir: PathBuf, hosts: u32, spill_buffer: usize) -> Self {
+        Self {
+            dir,
+            bufs: vec![Vec::new(); hosts as usize],
+            // However tiny the budget, admit at least one record so
+            // ingest degenerates to a run file per edge, not a hang.
+            cap_records: (spill_buffer / REC_BYTES).max(1),
+            buffered: 0,
+            runs: vec![Vec::new(); hosts as usize],
+            spills: 0,
+            spilled_bytes: 0,
+        }
+    }
+
+    fn push(&mut self, host: u32, u: u32, v: u32, w: f32) -> Result<()> {
+        self.bufs[host as usize].push((u, v, w));
+        self.buffered += 1;
+        if self.buffered >= self.cap_records {
+            self.spills += 1;
+            self.flush_all()?;
+        }
+        Ok(())
+    }
+
+    /// Flush every non-empty buffer as one new run file per host.
+    /// Flushing all hosts together keeps each host's run sequence a
+    /// clean split of its arrival order — the invariant that makes
+    /// pass 1's "merge" a plain concatenation.
+    fn flush_all(&mut self) -> Result<()> {
+        for host in 0..self.bufs.len() {
+            let buf = &self.bufs[host];
+            if buf.is_empty() {
+                continue;
+            }
+            let path = self.dir.join(format!("p{host}_run{}.tmp", self.runs[host].len()));
+            let file = fs::File::create(&path)
+                .with_context(|| format!("create ingest run {}", path.display()))?;
+            let mut out = BufWriter::new(file);
+            for &(u, v, w) in buf {
+                out.write_all(&u.to_le_bytes())?;
+                out.write_all(&v.to_le_bytes())?;
+                out.write_all(&w.to_le_bytes())?;
+            }
+            out.flush()
+                .with_context(|| format!("flush ingest run {}", path.display()))?;
+            self.spilled_bytes += (buf.len() * REC_BYTES) as u64;
+            self.runs[host].push(path);
+            self.bufs[host].clear();
+        }
+        self.buffered = 0;
+        Ok(())
+    }
+}
+
+/// Stream one run file's records through `f` in write order.
+fn for_each_record(path: &Path, mut f: impl FnMut(u32, u32, f32)) -> Result<()> {
+    let bytes =
+        fs::read(path).with_context(|| format!("read ingest run {}", path.display()))?;
+    ensure!(
+        bytes.len() % REC_BYTES == 0,
+        "torn ingest run {} ({} bytes)",
+        path.display(),
+        bytes.len()
+    );
+    for rec in bytes.chunks_exact(REC_BYTES) {
+        let u = u32::from_le_bytes(rec[0..4].try_into().unwrap());
+        let v = u32::from_le_bytes(rec[4..8].try_into().unwrap());
+        let w = f32::from_le_bytes(rec[8..12].try_into().unwrap());
+        f(u, v, w);
+    }
+    Ok(())
+}
+
+/// Union-find over dense vertex ids that grows as ids are interned
+/// (the fixed-size `util::dsu::Dsu` needs `n` up front, which a stream
+/// doesn't know). Path-halving find, union by size.
+#[derive(Default)]
+struct GrowDsu {
+    parent: Vec<u32>,
+    size: Vec<u32>,
+}
+
+impl GrowDsu {
+    fn grow(&mut self, n: usize) {
+        while self.parent.len() < n {
+            self.parent.push(self.parent.len() as u32);
+            self.size.push(1);
+        }
+    }
+
+    fn find(&mut self, mut x: u32) -> u32 {
+        while self.parent[x as usize] != x {
+            let gp = self.parent[self.parent[x as usize] as usize];
+            self.parent[x as usize] = gp;
+            x = gp;
+        }
+        x
+    }
+
+    fn union(&mut self, a: u32, b: u32) {
+        let (mut ra, mut rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return;
+        }
+        if self.size[ra as usize] < self.size[rb as usize] {
+            std::mem::swap(&mut ra, &mut rb);
+        }
+        self.parent[rb as usize] = ra;
+        self.size[ra as usize] += self.size[rb as usize];
+    }
+}
+
+/// Stream `edges` (TSV/CSV/whitespace, `src dst [weight]` per line,
+/// `#` comments and blank lines skipped) into a new GoFS store at
+/// `store_root`, never holding more than one partition plus the spill
+/// buffer in memory. Returns the opened store and an [`IngestReport`].
+///
+/// Errors carry 1-based line numbers (`line 7: bad weight`), mixed
+/// weighted/unweighted lines are rejected at the first conflict, and
+/// the root must be empty — GoFS stores are write-once per generation,
+/// and ingest always writes generation 0.
+pub fn ingest_edge_list(
+    edges: &Path,
+    store_root: &Path,
+    opts: &IngestOptions,
+) -> Result<(Store, IngestReport)> {
+    ensure!(opts.hosts >= 1, "ingest needs at least one host");
+    if store_root.exists() {
+        ensure!(
+            fs::read_dir(store_root)
+                .with_context(|| format!("read {}", store_root.display()))?
+                .next()
+                .is_none(),
+            "store root {} already exists and is not empty (GoFS stores are write-once)",
+            store_root.display()
+        );
+    }
+    let t0 = Instant::now();
+    let k = opts.hosts;
+    let hasher = HashPartitioner::new(opts.seed);
+    let tmp_dir = store_root.join(".ingest");
+    fs::create_dir_all(&tmp_dir)
+        .with_context(|| format!("create {}", tmp_dir.display()))?;
+
+    // ---- Pass 0: stream lines; intern ids, union same-host
+    // components, and spill (u, v, w) records per host.
+    let mut spiller = Spiller::new(tmp_dir.clone(), k, opts.spill_buffer);
+    let mut intern: HashMap<u64, u32> = HashMap::new();
+    let mut dsu = GrowDsu::default();
+    let mut weighted: Option<bool> = None;
+    let mut n: usize = 0;
+    let mut num_edges: u64 = 0;
+
+    let file =
+        fs::File::open(edges).with_context(|| format!("open {}", edges.display()))?;
+    let mut line_no = 0usize;
+    for line in BufReader::new(file).lines() {
+        let line = line.with_context(|| format!("read {}", edges.display()))?;
+        line_no += 1;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        // TSV, CSV, or plain whitespace: any run of separators splits.
+        let mut toks = line
+            .split(|c: char| c.is_whitespace() || c == ',')
+            .filter(|t| !t.is_empty());
+        let u_ext: u64 = toks
+            .next()
+            .unwrap_or("")
+            .parse()
+            .with_context(|| format!("line {line_no}: bad src"))?;
+        let v_ext: u64 = toks
+            .next()
+            .with_context(|| format!("line {line_no}: missing dst"))?
+            .parse()
+            .with_context(|| format!("line {line_no}: bad dst"))?;
+        // Tokens after the weight are ignored, like the batch reader.
+        let w: Option<f32> = match toks.next() {
+            Some(t) => Some(
+                t.parse()
+                    .with_context(|| format!("line {line_no}: bad weight"))?,
+            ),
+            None => None,
+        };
+        match (weighted, w.is_some()) {
+            (None, has) => weighted = Some(has),
+            (Some(want), has) if want != has => bail!(
+                "line {line_no}: mixed weighted and unweighted lines in {}",
+                edges.display()
+            ),
+            _ => {}
+        }
+
+        // Dense ids, batch-compatible: weighted lists use raw ids
+        // (n = max + 1), unweighted lists intern by first appearance,
+        // source before target.
+        let (u, v) = if weighted == Some(true) {
+            ensure!(
+                u_ext < u32::MAX as u64 && v_ext < u32::MAX as u64,
+                "line {line_no}: vertex id does not fit u32"
+            );
+            n = n.max(u_ext as usize + 1).max(v_ext as usize + 1);
+            (u_ext as u32, v_ext as u32)
+        } else {
+            let mut get = |ext: u64| -> Result<u32> {
+                if let Some(&id) = intern.get(&ext) {
+                    return Ok(id);
+                }
+                ensure!(n < u32::MAX as usize, "vertex count does not fit u32");
+                let id = n as u32;
+                intern.insert(ext, id);
+                n += 1;
+                Ok(id)
+            };
+            let u = get(u_ext)?;
+            let v = get(v_ext)?;
+            (u, v)
+        };
+
+        dsu.grow(n);
+        let (pu, pv) = (hasher.bucket(u as u64, k), hasher.bucket(v as u64, k));
+        if pu == pv {
+            dsu.union(u, v);
+        }
+        let wv = w.unwrap_or(1.0);
+        spiller.push(pu, u, v, wv)?;
+        if pv != pu {
+            spiller.push(pv, u, v, wv)?;
+        }
+        num_edges += 1;
+    }
+    let weighted = weighted.unwrap_or(false);
+    ensure!(n < u32::MAX as usize, "vertex count does not fit u32");
+    spiller.flush_all()?;
+
+    // ---- Assign sub-graphs exactly like `subgraph::discover`:
+    // indices per partition in order of each component's smallest
+    // vertex; member lists ascend by global id.
+    let mut part_of = vec![0u32; n];
+    let mut sg_of = vec![0u32; n];
+    let mut local_idx = vec![0u32; n];
+    let mut members: Vec<Vec<Vec<u32>>> = vec![Vec::new(); k as usize];
+    let mut root_index: HashMap<(u32, u32), u32> = HashMap::new();
+    for v in 0..n as u32 {
+        let p = hasher.bucket(v as u64, k);
+        part_of[v as usize] = p;
+        let root = dsu.find(v);
+        let list = &mut members[p as usize];
+        let idx = *root_index.entry((p, root)).or_insert_with(|| {
+            list.push(Vec::new());
+            (list.len() - 1) as u32
+        });
+        local_idx[v as usize] = list[idx as usize].len() as u32;
+        list[idx as usize].push(v);
+        sg_of[v as usize] = idx;
+    }
+
+    // ---- Pass 1: per host, concatenate its runs (arrival order) and
+    // route every record to its sub-graph, then build and write the
+    // partition. Only this host's edges are resident.
+    let mut subgraph_counts = Vec::with_capacity(k as usize);
+    for p in 0..k {
+        let count = members[p as usize].len();
+        let mut local_edges: Vec<Vec<(u32, u32)>> = vec![Vec::new(); count];
+        let mut local_weights: Vec<Vec<f32>> = vec![Vec::new(); count];
+        let mut remote_out: Vec<Vec<RemoteRef>> = vec![Vec::new(); count];
+        let mut remote_in: Vec<Vec<RemoteRef>> = vec![Vec::new(); count];
+        for run in &spiller.runs[p as usize] {
+            for_each_record(run, |u, v, w| {
+                let (pu, pv) = (part_of[u as usize], part_of[v as usize]);
+                let (su, sv) = (sg_of[u as usize], sg_of[v as usize]);
+                if pu == p && pv == p {
+                    // Same host ⇒ same component ⇒ same sub-graph.
+                    local_edges[su as usize]
+                        .push((local_idx[u as usize], local_idx[v as usize]));
+                    if weighted {
+                        local_weights[su as usize].push(w);
+                    }
+                } else if pu == p {
+                    remote_out[su as usize].push(RemoteRef {
+                        local: local_idx[u as usize],
+                        target_global: v,
+                        partition: pv,
+                        subgraph: sv,
+                        weight: w,
+                    });
+                } else {
+                    remote_in[sv as usize].push(RemoteRef {
+                        local: local_idx[v as usize],
+                        target_global: u,
+                        partition: pu,
+                        subgraph: su,
+                        weight: w,
+                    });
+                }
+            })?;
+        }
+        // Normalize to `discover`'s enumeration order (stable sorts
+        // keep arrival order within equal keys, which matches the
+        // batch CSR sweeps).
+        for refs in &mut remote_out {
+            refs.sort_by_key(|r| r.local);
+        }
+        for refs in &mut remote_in {
+            refs.sort_by_key(|r| (r.local, r.target_global));
+        }
+
+        let mut sgs = Vec::with_capacity(count);
+        for i in 0..count {
+            let vertices = std::mem::take(&mut members[p as usize][i]);
+            let ws = if weighted {
+                Some(std::mem::take(&mut local_weights[i]))
+            } else {
+                None
+            };
+            let local =
+                Graph::from_edges(vertices.len(), &local_edges[i], ws, opts.directed)
+                    .with_context(|| format!("partition {p} sub-graph {i}"))?;
+            sgs.push(Subgraph {
+                id: SubgraphId { partition: p, index: i as u32 },
+                vertices,
+                local,
+                remote_out: std::mem::take(&mut remote_out[i]),
+                remote_in: std::mem::take(&mut remote_in[i]),
+                num_global_vertices: n as u64,
+            });
+        }
+        write_partition_files(&store_root.join(format!("host{p}")), &sgs, opts.format)?;
+        subgraph_counts.push(count as u32);
+    }
+
+    let runs: u64 = spiller.runs.iter().map(|r| r.len() as u64).sum();
+    fs::remove_dir_all(&tmp_dir)
+        .with_context(|| format!("remove {}", tmp_dir.display()))?;
+
+    let meta = StoreMeta {
+        name: opts.name.clone(),
+        num_vertices: n as u64,
+        num_edges,
+        directed: opts.directed,
+        weighted,
+        num_partitions: k,
+        subgraph_counts: subgraph_counts.clone(),
+        format: opts.format,
+        generation: 0,
+    };
+    write_meta(&store_root.join("meta.txt"), &meta)?;
+
+    let store = Store::open(store_root)?;
+    let report = IngestReport {
+        vertices: n as u64,
+        edges: num_edges,
+        subgraphs: subgraph_counts.iter().map(|&c| c as u64).sum(),
+        spills: spiller.spills,
+        runs,
+        spilled_bytes: spiller.spilled_bytes,
+        seconds: t0.elapsed().as_secs_f64(),
+    };
+    Ok((store, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gofs::{AttrProjection, LoadOptions};
+    use crate::graph::{gen, io};
+    use crate::partition::Partitioner;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("goffish_ingest_{name}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// Batch-build and stream-build the same edge list; compare every
+    /// store file byte-for-byte.
+    fn assert_parity(g: &Graph, hosts: u32, format: SliceFormat, spill: usize, dir: &Path) {
+        let file = dir.join("edges.tsv");
+        io::write_edge_list(g, &file).unwrap();
+
+        let g2 = io::read_edge_list(&file, g.directed()).unwrap();
+        let parts = HashPartitioner::new(1).partition(&g2, hosts as usize);
+        let batch_root = dir.join("batch");
+        Store::create_with_format(&batch_root, "graph", &g2, &parts, format).unwrap();
+
+        let stream_root = dir.join("stream");
+        let (store, report) = ingest_edge_list(
+            &file,
+            &stream_root,
+            &IngestOptions {
+                hosts,
+                format,
+                directed: g.directed(),
+                spill_buffer: spill,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(report.vertices, g2.num_vertices() as u64);
+        assert_eq!(report.edges, g2.num_edges() as u64);
+        assert!(!stream_root.join(".ingest").exists());
+
+        assert_eq!(
+            fs::read_to_string(batch_root.join("meta.txt")).unwrap(),
+            fs::read_to_string(stream_root.join("meta.txt")).unwrap()
+        );
+        for p in 0..hosts {
+            let host = format!("host{p}");
+            let ls = |root: &Path| -> Vec<String> {
+                let mut v: Vec<String> = fs::read_dir(root.join(&host))
+                    .unwrap()
+                    .map(|e| e.unwrap().file_name().into_string().unwrap())
+                    .collect();
+                v.sort();
+                v
+            };
+            let names = ls(&batch_root);
+            assert_eq!(names, ls(&stream_root), "{host} file sets differ");
+            for name in &names {
+                assert_eq!(
+                    fs::read(batch_root.join(&host).join(name)).unwrap(),
+                    fs::read(stream_root.join(&host).join(name)).unwrap(),
+                    "{host}/{name} differs"
+                );
+            }
+        }
+        // And the loaded view round-trips.
+        let (dg, _, _) = store
+            .load_all_with(&LoadOptions {
+                attributes: AttrProjection::All,
+                ..Default::default()
+            })
+            .unwrap();
+        assert_eq!(dg.num_global_vertices, g2.num_vertices() as u64);
+        let loaded: usize =
+            dg.partitions.iter().flatten().map(|s| s.vertices.len()).sum();
+        assert_eq!(loaded, g2.num_vertices());
+    }
+
+    #[test]
+    fn streamed_unweighted_store_matches_batch_bytes() {
+        let dir = tmp("unweighted");
+        let g = gen::road(5, 0.9, 0.05, 11);
+        // 64-byte spill buffer ≪ input: forces many spills.
+        assert_parity(&g, 3, SliceFormat::V3Packed, 64, &dir);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn streamed_weighted_store_matches_batch_bytes_v2() {
+        let dir = tmp("weighted");
+        let g = gen::with_random_weights(&gen::road(4, 0.95, 0.08, 3), 0.5, 4.0, 9);
+        assert_parity(&g, 2, SliceFormat::V2Columnar, 48, &dir);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tiny_spill_buffer_spills_per_edge() {
+        let dir = tmp("spill");
+        let g = gen::chain(20);
+        let file = dir.join("edges.tsv");
+        io::write_edge_list(&g, &file).unwrap();
+        let (_, report) = ingest_edge_list(
+            &file,
+            &dir.join("s"),
+            &IngestOptions { hosts: 2, spill_buffer: 1, ..Default::default() },
+        )
+        .unwrap();
+        // Cap of one record: every push flushes.
+        assert!(report.spills >= report.edges, "{report:?}");
+        assert!(report.runs > 2, "{report:?}");
+        assert_eq!(report.spilled_bytes % REC_BYTES as u64, 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn csv_comments_and_blank_lines_accepted() {
+        let dir = tmp("csv");
+        let file = dir.join("edges.csv");
+        fs::write(&file, "# a comment\n0,1\n\n1,2\n2 , 3\n").unwrap();
+        let (store, report) =
+            ingest_edge_list(&file, &dir.join("s"), &IngestOptions::default()).unwrap();
+        assert_eq!(report.vertices, 4);
+        assert_eq!(report.edges, 3);
+        assert_eq!(store.meta().num_vertices, 4);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn malformed_lines_name_their_line_number() {
+        let dir = tmp("malformed");
+        let cases = [
+            ("0 1\nx 2\n", "line 2: bad src"),
+            ("0\n", "line 1: missing dst"),
+            ("# c\n0 1\n1 y\n", "line 3: bad dst"),
+            ("0 1 zz\n", "line 1: bad weight"),
+            ("0 1\n1 2 0.5\n", "line 2: mixed weighted and unweighted"),
+            ("0 1 0.5\n1 2\n", "line 2: mixed weighted and unweighted"),
+        ];
+        for (i, (text, want)) in cases.iter().enumerate() {
+            let file = dir.join(format!("edges{i}.tsv"));
+            fs::write(&file, text).unwrap();
+            let err = ingest_edge_list(&file, &dir.join(format!("s{i}")), &IngestOptions::default())
+                .unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains(want), "{msg:?} missing {want:?}");
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn refuses_nonempty_store_root() {
+        let dir = tmp("nonempty");
+        let file = dir.join("edges.tsv");
+        fs::write(&file, "0 1\n").unwrap();
+        let root = dir.join("s");
+        fs::create_dir_all(&root).unwrap();
+        fs::write(root.join("stray"), "x").unwrap();
+        let err = ingest_edge_list(&file, &root, &IngestOptions::default()).unwrap_err();
+        assert!(format!("{err:#}").contains("write-once"), "{err:#}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn weighted_raw_ids_create_isolated_singletons() {
+        // Weighted lists use raw ids; id 3 never appears, so it becomes
+        // an isolated singleton sub-graph — same as the batch reader.
+        let dir = tmp("rawids");
+        let file = dir.join("edges.tsv");
+        fs::write(&file, "0 1 1.0\n4 5 2.0\n").unwrap();
+        let (store, report) =
+            ingest_edge_list(&file, &dir.join("s"), &IngestOptions { hosts: 1, ..Default::default() })
+                .unwrap();
+        assert_eq!(report.vertices, 6);
+        assert!(store.meta().weighted);
+        let (dg, _, _) = store.load_all_with(&LoadOptions::default()).unwrap();
+        // Components {0,1}, {2}, {3}, {4,5}.
+        assert_eq!(dg.num_subgraphs(), 4);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

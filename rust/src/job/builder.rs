@@ -149,6 +149,7 @@ pub struct JobBuilder {
     resume_from: Option<PathBuf>,
     kill_at: Option<ckpt::FailPoint>,
     control: Option<crate::coordinator::RunControl>,
+    incremental_from: Option<u64>,
 }
 
 impl Default for JobBuilder {
@@ -170,6 +171,7 @@ impl Default for JobBuilder {
             resume_from: None,
             kill_at: None,
             control: None,
+            incremental_from: None,
         }
     }
 }
@@ -290,6 +292,23 @@ impl JobBuilder {
         self
     }
 
+    /// Scope the job's output to the sub-graphs mutated since store
+    /// generation `since` (see `Store::dirty_since` and
+    /// `Store::append`). The run still executes the full computation —
+    /// dirty sub-graphs can change values anywhere downstream, so
+    /// correctness demands it — but `JobOutput::values` is filtered to
+    /// vertices living in dirty sub-graphs, which is what an
+    /// incremental consumer re-ingests. When nothing changed since
+    /// `since`, the run is skipped entirely and the output is empty.
+    /// Requires a store-backed source ([`crate::job::JobSource::Store`],
+    /// where the dirty tracking lives) and the Gopher engine; not part
+    /// of the checkpoint label because the computation itself is
+    /// unchanged.
+    pub fn incremental_from(mut self, since: u64) -> Self {
+        self.incremental_from = Some(since);
+        self
+    }
+
     /// Attach a live run-control handle
     /// ([`crate::coordinator::RunControl`]): the engine manager
     /// publishes each completed superstep through it and honors a
@@ -363,6 +382,14 @@ impl JobBuilder {
                            the vertex baseline reassembles the whole graph",
                 });
             }
+            if self.incremental_from.is_some() {
+                return Err(JobError::IncompatibleKnob {
+                    knob: "incremental_from",
+                    engine: self.engine,
+                    hint: "dirty-sub-graph scoping is a GoFS/Gopher feature; the \
+                           vertex baseline has no sub-graph structure to scope by",
+                });
+            }
         }
         // ---- fault-tolerance knobs (engine-agnostic, but validated up
         // front like everything else: bad cadences, dangling dirs, and
@@ -434,6 +461,7 @@ impl JobBuilder {
             resume,
             fail_at: self.kill_at,
             control: self.control,
+            incremental_from: self.incremental_from,
         })
     }
 }
@@ -494,6 +522,18 @@ mod tests {
             matches!(err, JobError::IncompatibleKnob { knob: "load_attributes", .. }),
             "{err}"
         );
+        let err = Job::builder()
+            .algo("cc")
+            .engine(EngineKind::Vertex)
+            .incremental_from(0)
+            .build()
+            .unwrap_err();
+        assert!(
+            matches!(err, JobError::IncompatibleKnob { knob: "incremental_from", .. }),
+            "{err}"
+        );
+        // Fine on Gopher (source-kind validation happens at run time).
+        assert!(Job::builder().algo("cc").incremental_from(3).build().is_ok());
         // An *empty* projection is the default and fine anywhere.
         assert!(Job::builder()
             .algo("cc")

@@ -34,6 +34,7 @@ pub mod graph;
 #[allow(missing_docs)]
 pub mod partition;
 pub mod gofs;
+pub mod ingest;
 pub mod ckpt;
 #[allow(missing_docs)]
 pub mod coordinator;

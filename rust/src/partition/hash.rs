@@ -17,6 +17,21 @@ impl HashPartitioner {
     pub fn new(seed: u64) -> Self {
         Self { seed }
     }
+
+    /// Bucket of a single dense vertex id — the online form of
+    /// [`Partitioner::partition`], usable before any [`Graph`] exists.
+    /// The streaming ingest path assigns vertices with this as edges
+    /// arrive, and `Store::append` places new vertices with it; both
+    /// must agree bit-for-bit with the batch partitioner, so this *is*
+    /// the batch implementation.
+    pub fn bucket(&self, v: u64, k: u32) -> u32 {
+        let mut x = v ^ self.seed;
+        // Finalizer from SplitMix64: well-mixed buckets.
+        x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+        x ^= x >> 31;
+        (x % k as u64) as u32
+    }
 }
 
 impl Default for HashPartitioner {
@@ -29,14 +44,7 @@ impl Partitioner for HashPartitioner {
     fn partition(&self, g: &Graph, k: usize) -> Partitioning {
         assert!(k >= 1);
         let assignment = (0..g.num_vertices() as u64)
-            .map(|v| {
-                let mut x = v ^ self.seed;
-                // Finalizer from SplitMix64: well-mixed buckets.
-                x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-                x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
-                x ^= x >> 31;
-                (x % k as u64) as u32
-            })
+            .map(|v| self.bucket(v, k as u32))
             .collect();
         Partitioning::new(k, assignment)
     }
@@ -75,6 +83,16 @@ mod tests {
         let a = HashPartitioner::new(5).partition(&g, 3);
         let b = HashPartitioner::new(5).partition(&g, 3);
         assert_eq!(a.assignment(), b.assignment());
+    }
+
+    #[test]
+    fn bucket_matches_batch_partition() {
+        let g = gen::chain(64);
+        let p = HashPartitioner::new(7).partition(&g, 5);
+        let h = HashPartitioner::new(7);
+        for v in 0..64u64 {
+            assert_eq!(h.bucket(v, 5), p.of(v as u32));
+        }
     }
 
     #[test]

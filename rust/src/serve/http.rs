@@ -202,6 +202,7 @@ fn reason(status: u16) -> &'static str {
         404 => "Not Found",
         405 => "Method Not Allowed",
         409 => "Conflict",
+        410 => "Gone",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
         _ => "Unknown",

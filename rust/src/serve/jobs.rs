@@ -31,6 +31,7 @@ use std::sync::{mpsc, Arc, Mutex};
 
 use crate::coordinator::RunControl;
 use crate::job::{EngineKind, Job, JobError, JobOutput, JobSource};
+use crate::metrics::JobMetrics;
 
 use super::json::JsonValue;
 use super::ResidentGraph;
@@ -179,6 +180,16 @@ pub(crate) enum JobState {
     Running,
     /// Finished successfully; the output is held for paging.
     Done(Box<JobOutput>),
+    /// Finished successfully, but the per-vertex values were dropped by
+    /// result retention (`--keep-results N`): the summary metrics and
+    /// aggregator traces survive, `GET .../results` answers 410.
+    /// Reported as `done` (+ a `results_evicted` flag) over the API.
+    Evicted {
+        /// Retained execution metrics (incl. aggregator traces).
+        metrics: Box<JobMetrics>,
+        /// How many values the evicted output held.
+        num_values: usize,
+    },
     /// The run errored (message retained).
     Failed(String),
     /// Cancelled — either dequeued-and-skipped, or stopped at a
@@ -192,7 +203,7 @@ impl JobState {
         match self {
             JobState::Queued => "queued",
             JobState::Running => "running",
-            JobState::Done(_) => "done",
+            JobState::Done(_) | JobState::Evicted { .. } => "done",
             JobState::Failed(_) => "failed",
             JobState::Cancelled => "cancelled",
         }
@@ -246,6 +257,8 @@ struct Inner {
 pub(crate) struct Jobs {
     inner: Mutex<Inner>,
     tx: Mutex<Option<SyncSender<Arc<JobEntry>>>>,
+    /// Result retention cap (`--keep-results`); `None` keeps all.
+    keep: Mutex<Option<usize>>,
 }
 
 impl Jobs {
@@ -256,8 +269,42 @@ impl Jobs {
         let jobs = Jobs {
             inner: Mutex::new(Inner { next_id: 1, map: BTreeMap::new() }),
             tx: Mutex::new(Some(tx)),
+            keep: Mutex::new(None),
         };
         (jobs, rx)
+    }
+
+    /// Set the result retention cap (see [`JobState::Evicted`]).
+    pub fn set_keep_results(&self, n: Option<usize>) {
+        *self.keep.lock().expect("keep lock") = n;
+    }
+
+    /// Enforce the retention cap: while more than `keep` jobs hold full
+    /// results, the *oldest* (lowest id) done jobs drop their values —
+    /// metrics and aggregator traces are kept. Executors call this
+    /// after every job completion; with no cap set it is a no-op.
+    pub fn enforce_retention(&self) {
+        let Some(keep) = *self.keep.lock().expect("keep lock") else {
+            return;
+        };
+        // Snapshot the id-ordered entries, then evict outside any
+        // registry-wide lock (state locks nest inside nothing here).
+        let entries = self.list();
+        let holding: Vec<&Arc<JobEntry>> = entries
+            .iter()
+            .filter(|e| {
+                matches!(&*e.state.lock().expect("job state lock"), JobState::Done(_))
+            })
+            .collect();
+        for entry in holding.iter().take(holding.len().saturating_sub(keep)) {
+            let mut st = entry.state.lock().expect("job state lock");
+            if let JobState::Done(out) = &*st {
+                *st = JobState::Evicted {
+                    metrics: Box::new(out.metrics.clone()),
+                    num_values: out.values.len(),
+                };
+            }
+        }
     }
 
     /// Validate and enqueue a job. On success the entry is registered
@@ -324,7 +371,9 @@ impl Jobs {
                 CancelOutcome::Accepted
             }
             JobState::Cancelled => CancelOutcome::Accepted,
-            JobState::Done(_) => CancelOutcome::AlreadyFinished("done"),
+            JobState::Done(_) | JobState::Evicted { .. } => {
+                CancelOutcome::AlreadyFinished("done")
+            }
             JobState::Failed(_) => CancelOutcome::AlreadyFinished("failed"),
         }
     }
@@ -344,6 +393,7 @@ impl Jobs {
 pub(crate) fn executor_loop(
     rx: Arc<Mutex<Receiver<Arc<JobEntry>>>>,
     resident: Arc<ResidentGraph>,
+    registry: Arc<Jobs>,
 ) {
     loop {
         let next = {
@@ -372,13 +422,20 @@ pub(crate) fn executor_loop(
                 continue;
             }
         };
-        let outcome = job.run(JobSource::InMemory(resident.graph()));
-        let mut st = entry.state.lock().expect("job state lock");
-        *st = match outcome {
-            Ok(out) => JobState::Done(Box::new(out)),
-            Err(_) if entry.control.is_cancelled() => JobState::Cancelled,
-            Err(e) => JobState::Failed(format!("{e:#}")),
-        };
+        // The job pins the snapshot current at its start: a refresh
+        // swapping the resident graph mid-run never changes data under
+        // an executing job (generation isolation, serve-level).
+        let snapshot = resident.snapshot();
+        let outcome = job.run(JobSource::InMemory(snapshot.graph()));
+        {
+            let mut st = entry.state.lock().expect("job state lock");
+            *st = match outcome {
+                Ok(out) => JobState::Done(Box::new(out)),
+                Err(_) if entry.control.is_cancelled() => JobState::Cancelled,
+                Err(e) => JobState::Failed(format!("{e:#}")),
+            };
+        }
+        registry.enforce_retention();
     }
 }
 
@@ -488,5 +545,58 @@ mod tests {
             jobs.cancel(entry.id),
             CancelOutcome::AlreadyFinished("failed")
         ));
+    }
+
+    #[test]
+    fn retention_evicts_oldest_done_jobs_only() {
+        let (jobs, _rx) = Jobs::new(8);
+        let done = |n: usize| {
+            let mut metrics = JobMetrics::default();
+            metrics.supersteps.push(Default::default());
+            JobState::Done(Box::new(JobOutput {
+                values: (0..n as u32).map(|v| (v, 0.0)).collect(),
+                metrics,
+                aggregators: Vec::new(),
+            }))
+        };
+        let e1 = jobs.submit(spec("cc")).unwrap();
+        let e2 = jobs.submit(spec("cc")).unwrap();
+        let e3 = jobs.submit(spec("cc")).unwrap();
+        let e4 = jobs.submit(spec("cc")).unwrap();
+        *e1.state.lock().unwrap() = done(3);
+        *e2.state.lock().unwrap() = JobState::Failed("boom".into());
+        *e3.state.lock().unwrap() = done(5);
+        *e4.state.lock().unwrap() = done(7);
+
+        // No cap: everything keeps its values.
+        jobs.enforce_retention();
+        assert!(matches!(&*e1.state.lock().unwrap(), JobState::Done(_)));
+
+        // Cap 1: of the three done jobs the two oldest are evicted;
+        // the failed job is not a retention candidate at all.
+        jobs.set_keep_results(Some(1));
+        jobs.enforce_retention();
+        match &*e1.state.lock().unwrap() {
+            JobState::Evicted { metrics, num_values } => {
+                assert_eq!(*num_values, 3);
+                assert_eq!(metrics.num_supersteps(), 1);
+            }
+            other => panic!("expected e1 evicted, got {}", other.name()),
+        }
+        assert!(matches!(
+            &*e3.state.lock().unwrap(),
+            JobState::Evicted { num_values: 5, .. }
+        ));
+        assert!(matches!(&*e4.state.lock().unwrap(), JobState::Done(_)));
+        assert!(matches!(&*e2.state.lock().unwrap(), JobState::Failed(_)));
+        // Both terminal flavours still read as "done" / cancel-409.
+        assert_eq!(e1.state.lock().unwrap().name(), "done");
+        assert!(matches!(
+            jobs.cancel(e1.id),
+            CancelOutcome::AlreadyFinished("done")
+        ));
+        // Idempotent under a re-run.
+        jobs.enforce_retention();
+        assert!(matches!(&*e4.state.lock().unwrap(), JobState::Done(_)));
     }
 }

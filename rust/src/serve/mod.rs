@@ -36,6 +36,23 @@
 //! one superstep — the engine errors out with `job cancelled at
 //! superstep N` and the registry records the state as `cancelled`.
 //!
+//! # Generations, refresh, and retention
+//!
+//! Stores are mutable across *generations* (see [`crate::gofs`]):
+//! `goffish ingest`/[`Store::append`] commit new generations while a
+//! server is up. The server's snapshot is pinned — executors take the
+//! current [`ResidentState`] at job start, so an in-flight job never
+//! sees data change under it. `POST /v1/graphs/{name}/refresh` moves
+//! the resident snapshot to the store's head generation between jobs
+//! (a no-op when already at head).
+//!
+//! Long-lived servers also bound memory with `--keep-results N`
+//! ([`ServeOptions::keep_results`]): once more than `N` jobs are done,
+//! the oldest done jobs drop their per-vertex values. Their status
+//! stays `done` and their [`crate::metrics::JobMetrics`] (plus
+//! aggregator traces) remain queryable at `GET /v1/metrics`, but
+//! `GET /v1/jobs/{id}/results` answers `410 Gone`.
+//!
 //! # Shutdown
 //!
 //! [`Server::shutdown`] stops accepting connections, closes the
@@ -45,9 +62,9 @@
 
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -69,39 +86,80 @@ const IO_TIMEOUT: Duration = Duration::from_secs(30);
 const JSON_CT: &str = "application/json";
 const TSV_CT: &str = "text/tab-separated-values";
 
-/// A GoFS store loaded once and kept in memory for the server's
-/// lifetime. Jobs run against [`ResidentGraph::graph`] via
-/// [`crate::job::JobSource::InMemory`], so submitting a job costs no
-/// disk I/O.
-pub struct ResidentGraph {
+/// One loaded snapshot of a GoFS store: a store handle pinned to the
+/// generation it opened, the in-memory [`DistributedGraph`] built from
+/// it, and the load accounting. Snapshots are immutable and shared via
+/// `Arc` — a job holds the one it started with for its whole run, so a
+/// concurrent [`ResidentGraph::refresh`] never changes data under it
+/// (the serve-level face of GoFS generation isolation).
+pub struct ResidentState {
     store: Store,
     graph: DistributedGraph,
     load: LoadStats,
 }
 
-impl ResidentGraph {
-    /// Open a store directory and load every partition into memory.
-    pub fn open(root: &Path) -> Result<ResidentGraph> {
+impl ResidentState {
+    fn load(root: &Path) -> Result<ResidentState> {
         let store = Store::open(root)?;
         let (graph, load) = store
             .load_all()
             .with_context(|| format!("load store at {}", root.display()))?;
-        Ok(ResidentGraph { store, graph, load })
+        Ok(ResidentState { store, graph, load })
     }
 
-    /// The underlying store (metadata: name, format, counts).
+    /// The underlying store handle (metadata: name, format, counts,
+    /// pinned generation).
     pub fn store(&self) -> &Store {
         &self.store
     }
 
-    /// The loaded distributed graph every job runs against.
+    /// The loaded distributed graph jobs run against.
     pub fn graph(&self) -> &DistributedGraph {
         &self.graph
     }
 
-    /// Byte/file/wall accounting of the one-time load.
+    /// Byte/file/wall accounting of this snapshot's load.
     pub fn load(&self) -> &LoadStats {
         &self.load
+    }
+}
+
+/// A GoFS store loaded and kept in memory for the server's lifetime.
+/// Jobs run against the current [`ResidentState`] snapshot via
+/// [`crate::job::JobSource::InMemory`], so submitting a job costs no
+/// disk I/O. `POST /v1/graphs/{name}/refresh` swaps the snapshot to
+/// the store's head generation between jobs; executors take their
+/// snapshot at job start, so in-flight runs are untouched.
+pub struct ResidentGraph {
+    root: PathBuf,
+    state: RwLock<Arc<ResidentState>>,
+}
+
+impl ResidentGraph {
+    /// Open a store directory and load every partition into memory.
+    pub fn open(root: &Path) -> Result<ResidentGraph> {
+        let state = Arc::new(ResidentState::load(root)?);
+        Ok(ResidentGraph { root: root.to_path_buf(), state: RwLock::new(state) })
+    }
+
+    /// The current snapshot. Hold the returned `Arc` for as long as a
+    /// consistent view is needed; later refreshes don't disturb it.
+    pub fn snapshot(&self) -> Arc<ResidentState> {
+        self.state.read().expect("resident state lock").clone()
+    }
+
+    /// Re-open the store and, if its head generation moved past the
+    /// resident snapshot's, load it and swap the snapshot. Returns
+    /// `(previous_generation, head_generation)`; equal values mean the
+    /// refresh was a no-op (nothing was reloaded).
+    pub fn refresh(&self) -> Result<(u64, u64)> {
+        let pinned = self.snapshot().store().meta().generation;
+        let head = Store::open(&self.root)?.meta().generation;
+        if head != pinned {
+            let state = Arc::new(ResidentState::load(&self.root)?);
+            *self.state.write().expect("resident state lock") = state;
+        }
+        Ok((pinned, head))
     }
 }
 
@@ -117,11 +175,17 @@ pub struct ServeOptions {
     pub queue: usize,
     /// Default cores-per-worker for jobs that don't specify `cores`.
     pub cores: usize,
+    /// Result retention: keep full `JobOutput` values for at most this
+    /// many done jobs. When a job finishing pushes the count over the
+    /// cap, the oldest done jobs drop their values (status stays
+    /// `done`, metrics stay queryable, `GET .../results` turns 410).
+    /// `None` keeps everything until shutdown.
+    pub keep_results: Option<usize>,
 }
 
 impl Default for ServeOptions {
     fn default() -> ServeOptions {
-        ServeOptions { port: 8080, workers: 2, queue: 16, cores: 4 }
+        ServeOptions { port: 8080, workers: 2, queue: 16, cores: 4, keep_results: None }
     }
 }
 
@@ -149,16 +213,18 @@ impl Server {
     pub fn start(resident: ResidentGraph, opts: &ServeOptions) -> Result<Server> {
         let resident = Arc::new(resident);
         let (jobs, rx) = Jobs::new(opts.queue);
+        jobs.set_keep_results(opts.keep_results);
         let jobs = Arc::new(jobs);
         let rx = Arc::new(Mutex::new(rx));
         let mut execs = Vec::new();
         for i in 0..opts.workers.max(1) {
             let rx = rx.clone();
             let res = resident.clone();
+            let registry = jobs.clone();
             execs.push(
                 std::thread::Builder::new()
                     .name(format!("serve-exec-{i}"))
-                    .spawn(move || executor_loop(rx, res))
+                    .spawn(move || executor_loop(rx, res, registry))
                     .context("spawn executor thread")?,
             );
         }
@@ -259,7 +325,12 @@ fn route(req: &Request, ctx: &Ctx) -> Reply {
     match (req.method.as_str(), segs.as_slice()) {
         ("GET", ["v1", "healthz"]) => json_ok(200, health_json(ctx)),
         ("GET", ["v1", "graphs"]) => {
-            json_ok(200, JsonValue::Arr(vec![graph_json(&ctx.resident)]))
+            json_ok(200, JsonValue::Arr(vec![graph_json(&ctx.resident.snapshot())]))
+        }
+        ("POST", ["v1", "graphs", name, "refresh"]) => refresh_graph(ctx, name),
+        ("GET", ["v1", "metrics"]) => {
+            let list = ctx.jobs.list().iter().map(|e| metrics_json(e)).collect();
+            json_ok(200, JsonValue::Arr(list))
         }
         ("GET", ["v1", "jobs"]) => {
             let list = ctx.jobs.list().iter().map(|e| job_json(e)).collect();
@@ -279,6 +350,8 @@ fn route(req: &Request, ctx: &Ctx) -> Reply {
                 segs.as_slice(),
                 ["v1", "healthz"]
                     | ["v1", "graphs"]
+                    | ["v1", "graphs", _, "refresh"]
+                    | ["v1", "metrics"]
                     | ["v1", "jobs"]
                     | ["v1", "jobs", _]
                     | ["v1", "jobs", _, "results"]
@@ -334,6 +407,31 @@ fn delete_job(ctx: &Ctx, id: u64) -> Reply {
     }
 }
 
+/// `POST /v1/graphs/{name}/refresh`: swap the resident snapshot to the
+/// store's head generation. 404 for a name the server does not hold;
+/// in-flight jobs keep the snapshot they started with.
+fn refresh_graph(ctx: &Ctx, name: &str) -> Reply {
+    let held = ctx.resident.snapshot().store().meta().name.clone();
+    if name != held {
+        return error(404, &format!("no resident graph {name:?} (serving {held:?})"));
+    }
+    match ctx.resident.refresh() {
+        Ok((pinned, head)) => {
+            let mut fields = vec![
+                ("refreshed".to_string(), JsonValue::Bool(head != pinned)),
+                ("previous_generation".to_string(), JsonValue::Num(pinned as f64)),
+            ];
+            // Then the graph listing's fields verbatim (incl. the new
+            // generation), so clients need not re-GET /v1/graphs.
+            if let JsonValue::Obj(gf) = graph_json(&ctx.resident.snapshot()) {
+                fields.extend(gf);
+            }
+            json_ok(200, JsonValue::Obj(fields))
+        }
+        Err(e) => error(500, &format!("refresh failed: {e:#}")),
+    }
+}
+
 fn job_results(req: &Request, ctx: &Ctx, id: u64) -> Reply {
     let Some(entry) = ctx.jobs.get(id) else {
         return error(404, &format!("no job {id}"));
@@ -356,6 +454,15 @@ fn job_results(req: &Request, ctx: &Ctx, id: u64) -> Reply {
     let st = entry.state.lock().expect("job state lock");
     let out = match &*st {
         JobState::Done(out) => out,
+        JobState::Evicted { .. } => {
+            return error(
+                410,
+                &format!(
+                    "job {id}'s results were evicted by the server's \
+                     --keep-results retention; metrics remain at /v1/metrics"
+                ),
+            )
+        }
         JobState::Failed(msg) => return error(409, &format!("job {id} failed: {msg}")),
         other => {
             return error(
@@ -420,6 +527,17 @@ fn job_json(e: &JobEntry) -> JsonValue {
             fields.push(("bytes", JsonValue::Num(out.metrics.total_bytes() as f64)));
             fields.push(("num_values", JsonValue::Num(out.values.len() as f64)));
         }
+        JobState::Evicted { metrics, num_values } => {
+            fields.push(("supersteps", JsonValue::Num(metrics.num_supersteps() as f64)));
+            fields.push((
+                "makespan_seconds",
+                JsonValue::Num(metrics.makespan_seconds()),
+            ));
+            fields.push(("messages", JsonValue::Num(metrics.total_messages() as f64)));
+            fields.push(("bytes", JsonValue::Num(metrics.total_bytes() as f64)));
+            fields.push(("num_values", JsonValue::Num(*num_values as f64)));
+            fields.push(("results_evicted", JsonValue::Bool(true)));
+        }
         JobState::Failed(msg) => {
             fields.push(("error", JsonValue::Str(msg.clone())));
         }
@@ -428,11 +546,59 @@ fn job_json(e: &JobEntry) -> JsonValue {
     obj(fields)
 }
 
-fn graph_json(r: &ResidentGraph) -> JsonValue {
+/// One job's entry for `GET /v1/metrics`: identity + the full
+/// [`crate::metrics::JobMetrics`] summary and per-superstep aggregator
+/// traces. Metrics survive result eviction.
+fn metrics_json(e: &JobEntry) -> JsonValue {
+    let st = e.state.lock().expect("job state lock");
+    let mut fields = vec![
+        ("id", JsonValue::Num(e.id as f64)),
+        ("algo", JsonValue::Str(e.spec.algo.clone())),
+        ("engine", JsonValue::Str(e.spec.engine.to_string())),
+        ("status", JsonValue::Str(st.name().to_string())),
+    ];
+    let metrics = match &*st {
+        JobState::Done(out) => Some(&out.metrics),
+        JobState::Evicted { metrics, .. } => Some(&**metrics),
+        _ => None,
+    };
+    if let Some(m) = metrics {
+        let aggs = m
+            .aggregators
+            .iter()
+            .map(|t| {
+                obj(vec![
+                    ("name", JsonValue::Str(t.name.clone())),
+                    (
+                        "values",
+                        JsonValue::Arr(
+                            t.values.iter().map(|&v| JsonValue::Num(v)).collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        fields.extend([
+            ("supersteps", JsonValue::Num(m.num_supersteps() as f64)),
+            ("load_seconds", JsonValue::Num(m.load_seconds)),
+            ("load_bytes", JsonValue::Num(m.load_bytes as f64)),
+            ("compute_seconds", JsonValue::Num(m.compute_seconds)),
+            ("makespan_seconds", JsonValue::Num(m.makespan_seconds())),
+            ("messages", JsonValue::Num(m.total_messages() as f64)),
+            ("bytes", JsonValue::Num(m.total_bytes() as f64)),
+            ("combined_messages", JsonValue::Num(m.total_combined() as f64)),
+            ("aggregators", JsonValue::Arr(aggs)),
+        ]);
+    }
+    obj(fields)
+}
+
+fn graph_json(r: &ResidentState) -> JsonValue {
     let m = r.store().meta();
     obj(vec![
         ("name", JsonValue::Str(m.name.clone())),
         ("format", JsonValue::Str(m.format.to_string())),
+        ("generation", JsonValue::Num(m.generation as f64)),
         ("partitions", JsonValue::Num(f64::from(m.num_partitions))),
         ("subgraphs", JsonValue::Num(r.graph().num_subgraphs() as f64)),
         ("vertices", JsonValue::Num(m.num_vertices as f64)),
@@ -446,7 +612,7 @@ fn graph_json(r: &ResidentGraph) -> JsonValue {
 fn health_json(ctx: &Ctx) -> JsonValue {
     obj(vec![
         ("ok", JsonValue::Bool(true)),
-        ("graph", JsonValue::Str(ctx.resident.store().meta().name.clone())),
+        ("graph", JsonValue::Str(ctx.resident.snapshot().store().meta().name.clone())),
         ("jobs", JsonValue::Num(ctx.jobs.count() as f64)),
     ])
 }
@@ -562,5 +728,82 @@ mod tests {
         // A second DELETE stays 200 (idempotent); results now 409 too.
         let (st, _, _) = route(&del, &ctx);
         assert_eq!(st, 200);
+    }
+
+    #[test]
+    fn refresh_route_checks_name_and_reports_generation() {
+        let (ctx, _rx) = test_ctx("refresh");
+        let post = |path: &str| Request {
+            method: "POST".to_string(),
+            path: path.to_string(),
+            query: Vec::new(),
+            body: Vec::new(),
+        };
+        // The server holds "tiny"; any other name is a 404.
+        let (st, _, body) = route(&post("/v1/graphs/nope/refresh"), &ctx);
+        assert_eq!(st, 404);
+        assert!(String::from_utf8(body).unwrap().contains("\"tiny\""));
+        // Refreshing the held graph with no newer generation is a
+        // 200 no-op that still reports the full graph listing.
+        let (st, _, body) = route(&post("/v1/graphs/tiny/refresh"), &ctx);
+        assert_eq!(st, 200);
+        let v = JsonValue::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(v.get("refreshed").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("previous_generation").unwrap().as_f64(), Some(0.0));
+        assert_eq!(v.get("generation").unwrap().as_f64(), Some(0.0));
+        assert_eq!(v.get("name").unwrap().as_str(), Some("tiny"));
+        // GET on the refresh path is a method error, not an unknown path.
+        let (st, _, _) = route(&get("/v1/graphs/tiny/refresh"), &ctx);
+        assert_eq!(st, 405);
+    }
+
+    #[test]
+    fn metrics_route_survives_result_eviction() {
+        let (ctx, _rx) = test_ctx("metrics410");
+        let post = Request {
+            method: "POST".to_string(),
+            path: "/v1/jobs".to_string(),
+            query: Vec::new(),
+            body: b"{\"algo\":\"cc\"}".to_vec(),
+        };
+        let (st, _, body) = route(&post, &ctx);
+        assert_eq!(st, 202);
+        let v = JsonValue::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        let id = v.get("id").unwrap().as_f64().unwrap() as u64;
+
+        // Force the retention outcome directly: a done job whose
+        // values were dropped but whose metrics were kept.
+        let entry = ctx.jobs.get(id).unwrap();
+        let mut metrics = crate::metrics::JobMetrics::default();
+        metrics.aggregators.push(crate::coordinator::AggregatorTrace {
+            name: "frontier".to_string(),
+            values: vec![3.0, 1.0, 0.0],
+        });
+        *entry.state.lock().unwrap() =
+            JobState::Evicted { metrics: Box::new(metrics), num_values: 8 };
+
+        // Results are gone (410, pointing at /v1/metrics)…
+        let (st, _, body) = route(&get(&format!("/v1/jobs/{id}/results")), &ctx);
+        assert_eq!(st, 410);
+        assert!(String::from_utf8(body).unwrap().contains("/v1/metrics"));
+        // …the job listing flags the eviction but stays "done"…
+        let (st, _, body) = route(&get(&format!("/v1/jobs/{id}")), &ctx);
+        assert_eq!(st, 200);
+        let v = JsonValue::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(v.get("status").unwrap().as_str(), Some("done"));
+        assert_eq!(v.get("results_evicted").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("num_values").unwrap().as_f64(), Some(8.0));
+        // …and /v1/metrics still serves the full metric set including
+        // the per-superstep aggregator trace.
+        let (st, _, body) = route(&get("/v1/metrics"), &ctx);
+        assert_eq!(st, 200);
+        let v = JsonValue::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        let m = &v.as_array().unwrap()[0];
+        assert_eq!(m.get("status").unwrap().as_str(), Some("done"));
+        assert!(m.get("supersteps").is_some());
+        assert!(m.get("makespan_seconds").is_some());
+        let aggs = m.get("aggregators").unwrap().as_array().unwrap();
+        assert_eq!(aggs[0].get("name").unwrap().as_str(), Some("frontier"));
+        assert_eq!(aggs[0].get("values").unwrap().as_array().unwrap().len(), 3);
     }
 }

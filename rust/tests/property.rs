@@ -8,8 +8,11 @@ use goffish::algos::gather_subgraph_values;
 use goffish::gofs::subgraph::discover;
 use goffish::gofs::{AttrProjection, DistributedGraph, LoadOptions, SliceFormat, Store};
 use goffish::gopher::{run, GopherConfig};
-use goffish::graph::{gen, props, Graph};
-use goffish::partition::{MultilevelPartitioner, Partitioner, Partitioning};
+use goffish::graph::{gen, io, props, Graph};
+use goffish::ingest::{ingest_edge_list, IngestOptions};
+use goffish::partition::{
+    HashPartitioner, MultilevelPartitioner, Partitioner, Partitioning,
+};
 use goffish::testing::fixtures;
 use goffish::testing::{prop, prop_with_rng};
 use goffish::util::codec::{Decoder, Encoder};
@@ -296,6 +299,154 @@ fn prop_store_formats_load_identically_under_any_projection() {
                     return Err(format!("{fmt} seq={sequential}: attribute columns diverge"));
                 }
             }
+            Ok(())
+        },
+    );
+}
+
+/// Sorted `(file name, bytes)` listing of one directory.
+fn dir_bytes(dir: &std::path::Path) -> Result<Vec<(String, Vec<u8>)>, String> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(dir).map_err(|e| format!("{}: {e}", dir.display()))? {
+        let entry = entry.map_err(|e| e.to_string())?;
+        if entry.path().is_file() {
+            out.push((
+                entry.file_name().to_string_lossy().into_owned(),
+                std::fs::read(entry.path()).map_err(|e| e.to_string())?,
+            ));
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+#[test]
+fn prop_streamed_store_equals_batch_store() {
+    // The ingest contract as a property: streaming a random edge list
+    // through `crate::ingest` with a spill buffer far smaller than the
+    // input must produce a store *byte-identical* to the batch path
+    // (read whole graph → hash partition → Store::create) — same file
+    // set, same bytes, before and after attribute writes — and load
+    // back identically under a random AttrProjection.
+    prop_with_rng(
+        "streamed store == batch store (byte-level)",
+        8,
+        |rng| {
+            let base = fixtures::random_graph(rng);
+            let g = fixtures::maybe_weighted(rng, base);
+            let hosts = 1 + rng.index(3) as u32;
+            let spill_buffer = 1 + rng.index(64); // bytes: spills constantly
+            let seed = rng.next_u64();
+            let n_attrs = rng.index(3);
+            (g, hosts, spill_buffer, seed, n_attrs)
+        },
+        |(g, hosts, spill_buffer, seed, n_attrs), rng| {
+            if g.num_edges() == 0 {
+                return Ok(()); // an edge-list file cannot carry isolated vertices
+            }
+            let fmt = match rng.index(3) {
+                0 => SliceFormat::V1,
+                1 => SliceFormat::V2,
+                _ => SliceFormat::V3Packed,
+            };
+            let tag = rng.next_u64();
+            let base = std::env::temp_dir()
+                .join("goffish_prop_ingest")
+                .join(format!("{tag:016x}_{}", std::process::id()));
+            let _ = std::fs::remove_dir_all(&base);
+            std::fs::create_dir_all(&base).map_err(|e| e.to_string())?;
+            let list = base.join("edges.tsv");
+            io::write_edge_list(g, &list).map_err(|e| format!("write list: {e:#}"))?;
+
+            // Batch path: re-read the list (the file round-trip is the
+            // shared ground truth), hash-partition, create.
+            let g2 = io::read_edge_list(&list, g.directed())
+                .map_err(|e| format!("re-read: {e:#}"))?;
+            let p = HashPartitioner::new(*seed).partition(&g2, *hosts as usize);
+            let (batch_store, dg) =
+                Store::create_with_format(&base.join("batch"), "graph", &g2, &p, fmt)
+                    .map_err(|e| format!("batch create: {e:#}"))?;
+
+            // Streamed path: same list, same knobs, tiny spill buffer.
+            let opts = IngestOptions {
+                name: "graph".to_string(),
+                hosts: *hosts,
+                format: fmt,
+                directed: g.directed(),
+                spill_buffer: *spill_buffer,
+                seed: *seed,
+            };
+            let (streamed_store, report) =
+                ingest_edge_list(&list, &base.join("streamed"), &opts)
+                    .map_err(|e| format!("ingest: {e:#}"))?;
+            if report.edges != g2.num_edges() as u64 {
+                return Err(format!(
+                    "report counts {} edges, list has {}",
+                    report.edges,
+                    g2.num_edges()
+                ));
+            }
+
+            // Byte-identical partition files + meta, then again after
+            // writing the same attribute columns to both stores.
+            let mut attr_items = Vec::new();
+            for sg in dg.subgraphs() {
+                for a in 0..*n_attrs {
+                    let vals: Vec<f32> =
+                        sg.vertices.iter().map(|&v| v as f32 + a as f32).collect();
+                    attr_items.push((sg.id, format!("attr{a}"), vals));
+                }
+            }
+            for (label, with_attrs) in [("topology", false), ("with attrs", true)] {
+                if with_attrs {
+                    batch_store
+                        .write_attributes(&attr_items)
+                        .map_err(|e| format!("batch attrs: {e:#}"))?;
+                    streamed_store
+                        .write_attributes(&attr_items)
+                        .map_err(|e| format!("streamed attrs: {e:#}"))?;
+                }
+                for p in 0..*hosts {
+                    let host = format!("host{p}");
+                    let a = dir_bytes(&base.join("batch").join(&host))?;
+                    let b = dir_bytes(&base.join("streamed").join(&host))?;
+                    if a != b {
+                        return Err(format!("{label}: {host} files diverge ({fmt})"));
+                    }
+                }
+                let meta_a = std::fs::read(base.join("batch").join("meta.txt"))
+                    .map_err(|e| e.to_string())?;
+                let meta_b = std::fs::read(base.join("streamed").join("meta.txt"))
+                    .map_err(|e| e.to_string())?;
+                if meta_a != meta_b {
+                    return Err(format!("{label}: meta.txt diverges"));
+                }
+            }
+
+            // Loads agree under a random projection.
+            let projection = match rng.index(3) {
+                0 => AttrProjection::None,
+                1 => AttrProjection::All,
+                _ => AttrProjection::Only(vec!["attr0".to_string()]),
+            };
+            let projection = match (&projection, *n_attrs) {
+                (AttrProjection::Only(_), 0) => AttrProjection::All,
+                _ => projection,
+            };
+            let load = LoadOptions { attributes: projection, sequential: true, cores: 0 };
+            let (dg_a, attrs_a, _) = batch_store
+                .load_all_with(&load)
+                .map_err(|e| format!("batch load: {e:#}"))?;
+            let (dg_b, attrs_b, _) = streamed_store
+                .load_all_with(&load)
+                .map_err(|e| format!("streamed load: {e:#}"))?;
+            if observable_shape(&dg_a) != observable_shape(&dg_b) {
+                return Err("loaded sub-graphs diverge".into());
+            }
+            if attrs_a != attrs_b {
+                return Err("loaded attribute columns diverge".into());
+            }
+            let _ = std::fs::remove_dir_all(&base);
             Ok(())
         },
     );

@@ -8,7 +8,7 @@ use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::time::{Duration, Instant};
 
-use goffish::gofs::Store;
+use goffish::gofs::{AppendBatch, SliceFormat, Store};
 use goffish::graph::gen;
 use goffish::job::{Job, JobSource};
 use goffish::partition::{Partitioner, RangePartitioner};
@@ -31,7 +31,7 @@ fn serve_chain(name: &str, n: usize, k: usize, workers: usize, queue: usize) -> 
     let root = tmp(name);
     let (store, _) = Store::create(&root, name, &g, &parts).unwrap();
     let resident = ResidentGraph::open(&root).unwrap();
-    let opts = ServeOptions { port: 0, workers, queue, cores: 2 };
+    let opts = ServeOptions { port: 0, workers, queue, cores: 2, keep_results: None };
     let server = Server::start(resident, &opts).unwrap();
     (server, store)
 }
@@ -319,6 +319,100 @@ fn health_graphs_and_error_paths() {
     assert_eq!(st, 400);
     let (st, _) = http(addr, "GET", &format!("/v1/jobs/{id}/results?format=xml"), "");
     assert_eq!(st, 400);
+
+    server.shutdown();
+}
+
+#[test]
+fn refresh_tracks_appended_generations_and_retention_evicts() {
+    // A packed (appendable) store served with a retention cap of one
+    // held result set.
+    let g = gen::chain(64);
+    let parts = RangePartitioner.partition(&g, 2);
+    let root = tmp("genref");
+    Store::create_with_format(&root, "genref", &g, &parts, SliceFormat::V3Packed).unwrap();
+    let resident = ResidentGraph::open(&root).unwrap();
+    let opts = ServeOptions { port: 0, workers: 1, queue: 8, cores: 2, keep_results: Some(1) };
+    let server = Server::start(resident, &opts).unwrap();
+    let addr = server.addr();
+
+    let (st, v) = get_json(addr, "/v1/graphs");
+    assert_eq!(st, 200);
+    let g0 = &v.as_array().unwrap()[0];
+    assert_eq!(g0.get("generation").unwrap().as_f64(), Some(0.0));
+    assert_eq!(g0.get("vertices").unwrap().as_f64(), Some(64.0));
+
+    // Refreshing a graph the server does not hold is a 404.
+    let (st, body) = http(addr, "POST", "/v1/graphs/other/refresh", "");
+    assert_eq!(st, 404, "{body}");
+
+    // Job 1 runs against generation 0.
+    let j1 = submit(addr, "{\"algo\":\"cc\"}");
+    let done = wait_terminal(addr, j1);
+    assert_eq!(status_of(&done), "done", "{done:?}");
+    assert_eq!(done.get("num_values").unwrap().as_f64(), Some(64.0));
+    let (st, _) = http(addr, "GET", &format!("/v1/jobs/{j1}/results?format=tsv"), "");
+    assert_eq!(st, 200);
+
+    // Append a new vertex (64) plus an edge to it while the server is
+    // up. The existing endpoint must sit on a different partition than
+    // the hash-placed new vertex (same-partition cross-sub-graph edges
+    // would be a merge, which append rejects). The resident snapshot
+    // stays pinned at generation 0…
+    let new_part = goffish::partition::HashPartitioner::default().bucket(64, 2);
+    let existing: u64 = if new_part == 0 { 63 } else { 0 };
+    let mut writer = Store::open(&root).unwrap();
+    let committed = writer
+        .append(&AppendBatch {
+            new_vertices: 1,
+            edges: vec![(existing, 64, None)],
+            ..Default::default()
+        })
+        .unwrap();
+    assert_eq!(committed, 1);
+    let (_, v) = get_json(addr, "/v1/graphs");
+    assert_eq!(
+        v.as_array().unwrap()[0].get("generation").unwrap().as_f64(),
+        Some(0.0),
+        "snapshot must stay pinned until an explicit refresh"
+    );
+
+    // …until an explicit refresh swaps to the head generation.
+    let (st, body) = http(addr, "POST", "/v1/graphs/genref/refresh", "");
+    assert_eq!(st, 200, "{body}");
+    let v = JsonValue::parse(&body).unwrap();
+    assert_eq!(v.get("refreshed").unwrap().as_bool(), Some(true));
+    assert_eq!(v.get("previous_generation").unwrap().as_f64(), Some(0.0));
+    assert_eq!(v.get("generation").unwrap().as_f64(), Some(1.0));
+    assert_eq!(v.get("vertices").unwrap().as_f64(), Some(65.0));
+
+    // Job 2 sees the refreshed graph; its completion trips the
+    // retention cap and evicts job 1's values (metrics survive).
+    let j2 = submit(addr, "{\"algo\":\"cc\"}");
+    let done = wait_terminal(addr, j2);
+    assert_eq!(status_of(&done), "done", "{done:?}");
+    assert_eq!(done.get("num_values").unwrap().as_f64(), Some(65.0));
+
+    let (st, body) = http(addr, "GET", &format!("/v1/jobs/{j1}/results?format=tsv"), "");
+    assert_eq!(st, 410, "{body}");
+    let (st, v) = get_json(addr, &format!("/v1/jobs/{j1}"));
+    assert_eq!(st, 200);
+    assert_eq!(status_of(&v), "done");
+    assert_eq!(v.get("results_evicted").unwrap().as_bool(), Some(true));
+    let (st, _) = http(addr, "GET", &format!("/v1/jobs/{j2}/results?format=tsv"), "");
+    assert_eq!(st, 200, "newest done job keeps its values");
+
+    // Both jobs keep full metrics on the metrics endpoint.
+    let (st, v) = get_json(addr, "/v1/metrics");
+    assert_eq!(st, 200);
+    let rows = v.as_array().unwrap();
+    assert_eq!(rows.len(), 2);
+    for row in rows {
+        assert_eq!(row.get("status").unwrap().as_str(), Some("done"));
+        assert!(row.get("supersteps").unwrap().as_f64().unwrap() >= 1.0);
+        assert!(row.get("makespan_seconds").is_some());
+        assert!(row.get("aggregators").is_some());
+    }
 
     server.shutdown();
 }
