@@ -123,6 +123,14 @@ fn main() {
         let (_, _, st_proj) = store_v2.load_all_with(&proj).unwrap();
         let (_, _, st3_full) = store_v3.load_all_with(&full_par).unwrap();
         let (_, _, st3_proj) = store_v3.load_all_with(&proj).unwrap();
+        // The v3 loads above ride the default mmap path; repeat the
+        // projected and full loads through the seek+read path to pin
+        // the byte-accounting contract (`LoadStats.bytes` counts
+        // directory-listed section lengths on both).
+        let proj_read = LoadOptions { mmap: false, ..proj.clone() };
+        let full_read = LoadOptions { mmap: false, ..full_par.clone() };
+        let (_, _, st3_proj_read) = store_v3.load_all_with(&proj_read).unwrap();
+        let (_, _, st3_full_read) = store_v3.load_all_with(&full_read).unwrap();
 
         // ---- simulated cluster times (per-host stats from the store).
         let vf = common::volume_factor(name, &g);
@@ -224,6 +232,8 @@ fn main() {
         json.emit(name, "projected_load_bytes", st_proj.bytes as f64);
         json.emit(name, "v3_full_load_bytes", st3_full.bytes as f64);
         json.emit(name, "v3_projected_load_bytes", st3_proj.bytes as f64);
+        json.emit(name, "v3_projected_mmap_load_bytes", st3_proj.bytes as f64);
+        json.emit(name, "v3_projected_read_load_bytes", st3_proj_read.bytes as f64);
         json.emit(name, "gofs_sim_seconds", gofs_sim);
         json.emit(name, "edgeimp_sim_seconds", edgeimp_sim);
         json.emit(name, "v3_projected_sim_seconds", v3proj_sim);
@@ -260,11 +270,28 @@ fn main() {
             st3_full.bytes,
             st_full.bytes
         );
+        // Mmap-vs-read contract: identical accounting on both packed
+        // paths, and a mapped projected load still consumes strictly
+        // fewer bytes than a seek+read full v3 load.
+        assert_eq!(
+            st3_proj.bytes, st3_proj_read.bytes,
+            "{name}: mmap and seek+read projected loads must account identically"
+        );
+        assert_eq!(
+            st3_full.bytes, st3_full_read.bytes,
+            "{name}: mmap and seek+read full loads must account identically"
+        );
+        assert!(
+            st3_proj.bytes < st3_full_read.bytes,
+            "{name}: mmap-projected ({} B) must be < seek+read v3 full ({} B)",
+            st3_proj.bytes,
+            st3_full_read.bytes
+        );
     }
     t.print();
     json.finish();
     println!(
         "\nshape assertions OK (GoFS < HDFS; Edge Imp. <= GoFS; v2 par < v1 seq; \
-         v3proj bytes < v2proj bytes < full bytes)"
+         v3proj bytes < v2proj bytes < full bytes; mmap == seek+read accounting)"
     );
 }

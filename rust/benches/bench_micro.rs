@@ -127,6 +127,26 @@ fn main() {
     json.emit("LJ", "pagerank_superstep_seconds", m.median / 5.0);
     let plain_per_ss = m.median / 5.0;
 
+    // Superstep throughput, dense vs sorted vertex lookup: the plain
+    // run above already uses the dense u32 index (`GopherConfig`
+    // default); re-run with `dense_index: false` to price the
+    // sorted-fallback binary search the dense remap replaced.
+    let sorted_cfg = GopherConfig { dense_index: false, ..Default::default() };
+    let (w, r) = reps(1, 3);
+    let m_sorted = measure(w, r, || {
+        let prog = PageRankSg { supersteps: 5, kernel: RankKernel::Scalar, epsilon: None };
+        run(&ljdg, &prog, &sorted_cfg).unwrap();
+    });
+    let dense_eps = lj.num_edges() as f64 / plain_per_ss;
+    let sorted_eps = lj.num_edges() as f64 / (m_sorted.median / 5.0);
+    t.row(&[
+        "pagerank 5 ss LJ, sorted lookup".into(),
+        fmt_secs(m_sorted.median),
+        format!("{:.2} vs {:.2} Me/ss-s dense", sorted_eps / 1e6, dense_eps / 1e6),
+    ]);
+    json.emit("LJ", "superstep_throughput_dense_eps", dense_eps);
+    json.emit("LJ", "superstep_throughput_sorted_eps", sorted_eps);
+
     // Checkpoint overhead: the same PageRank run with a snapshot every
     // superstep (states + queues to disk, epoch committed at the
     // barrier) vs. the uncheckpointed baseline above.
@@ -209,6 +229,51 @@ fn main() {
         json.emit(&format!("RN/{tag}"), "ingest_throughput", eps);
     }
     let _ = std::fs::remove_dir_all(&ingest_dir);
+
+    // Mmap vs seek+read load of the same v3 packed store (RN analog +
+    // 3 attribute columns). The wall clocks are the comparison; the
+    // byte accounting is asserted identical — `LoadStats.bytes` counts
+    // directory-listed section lengths on both paths.
+    let (store_v3, _, root_v3) = common::store_for_fmt(
+        "micro_mmap",
+        &g,
+        &parts,
+        goffish::gofs::SliceFormat::V3Packed,
+    );
+    {
+        let mut items = Vec::new();
+        for sg in dg.subgraphs() {
+            let vals: Vec<f32> = (0..sg.num_vertices()).map(|i| i as f32).collect();
+            for a in 0..3 {
+                items.push((sg.id, format!("attr{a}"), vals.clone()));
+            }
+        }
+        store_v3.write_attributes(&items).unwrap();
+    }
+    let opt_map = goffish::gofs::LoadOptions::default();
+    let opt_read = goffish::gofs::LoadOptions { mmap: false, ..Default::default() };
+    let (w, r) = reps(1, 5);
+    let m_map = measure(w, r, || {
+        store_v3.load_all_with(&opt_map).unwrap();
+    });
+    let m_read = measure(w, r, || {
+        store_v3.load_all_with(&opt_read).unwrap();
+    });
+    let (_, _, st_map) = store_v3.load_all_with(&opt_map).unwrap();
+    let (_, _, st_read) = store_v3.load_all_with(&opt_read).unwrap();
+    assert_eq!(
+        st_map.bytes, st_read.bytes,
+        "mmap and seek+read loads must report identical byte accounting"
+    );
+    t.row(&[
+        format!("v3 load mmap RN ({}v)", g.num_vertices()),
+        fmt_secs(m_map.median),
+        format!("read path {}", fmt_secs(m_read.median)),
+    ]);
+    json.emit("RN", "mmap_vs_read_mmap_seconds", m_map.median);
+    json.emit("RN", "mmap_vs_read_read_seconds", m_read.median);
+    json.emit("RN", "mmap_vs_read_bytes", st_map.bytes as f64);
+    let _ = std::fs::remove_dir_all(&root_v3);
 
     // Pool dispatch overhead.
     let (w, r) = reps(2, 10);

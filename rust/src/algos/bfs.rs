@@ -36,14 +36,14 @@ impl SubgraphProgram for BfsSg {
     ) {
         let mut frontier: Vec<u32> = Vec::new();
         if ctx.superstep() == 1 {
-            if let Some(local) = sg.local_id(self.source) {
+            if let Some(local) = ctx.local_vertex(self.source) {
                 levels[local as usize] = 0;
                 frontier.push(local);
             }
         }
         for m in msgs {
             let (gv, lvl) = m.payload;
-            if let Some(local) = sg.local_id(gv) {
+            if let Some(local) = ctx.local_vertex(gv) {
                 if lvl < levels[local as usize] {
                     levels[local as usize] = lvl;
                     frontier.push(local);

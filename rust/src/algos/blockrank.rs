@@ -279,7 +279,7 @@ impl SubgraphProgram for BlockRankSg {
             match &m.payload {
                 BrMsg::Row { src, dst, w } => st.rows.push((*src, *dst, *w)),
                 BrMsg::Contrib { sender, value } => {
-                    if let Some(target) = m.vertex.and_then(|gv| sg.local_id(gv)) {
+                    if let Some(target) = m.vertex.and_then(|gv| ctx.local_vertex(gv)) {
                         st.remote_in.insert((target, *sender), *value);
                     }
                 }

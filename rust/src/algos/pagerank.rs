@@ -207,7 +207,7 @@ impl SubgraphProgram for PageRankSg {
             // …plus remote contributions that arrived as messages.
             for m in msgs {
                 let (gv, c) = m.payload;
-                if let Some(local) = sg.local_id(gv) {
+                if let Some(local) = ctx.local_vertex(gv) {
                     new_ranks[local as usize] += ALPHA * c;
                 }
             }

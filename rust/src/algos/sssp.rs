@@ -111,14 +111,14 @@ impl SubgraphProgram for SsspSg {
     ) {
         let mut openset: Vec<u32> = Vec::new();
         if ctx.superstep() == 1 {
-            if let Some(local) = sg.local_id(self.source) {
+            if let Some(local) = ctx.local_vertex(self.source) {
                 state.dist[local as usize] = 0.0;
                 openset.push(local);
             }
         }
         for m in msgs {
             let (gv, cand) = m.payload;
-            if let Some(local) = sg.local_id(gv) {
+            if let Some(local) = ctx.local_vertex(gv) {
                 if cand < state.dist[local as usize] {
                     state.dist[local as usize] = cand;
                     openset.push(local);

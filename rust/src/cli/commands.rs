@@ -17,6 +17,7 @@
 //!                   --algo <any algos::registry entry>
 //!                   [--engine gopher|vertex] [--source V] [--supersteps N]
 //!                   [--epsilon E] [--no-combine] [--max-supersteps N]
+//!                   [--no-mmap] [--no-dense-index]
 //!                   [--xla] [--fabric inproc|tcp] [--cores N]
 //!                   [--load-attributes a,b] [--output values.tsv]
 //!                   [--checkpoint-every N --checkpoint-dir D] [--resume D]
@@ -423,6 +424,16 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     if args.flag("no-combine") {
         builder = builder.combiners(false);
+    }
+    // Raw-speed knobs, on by default: `--no-mmap` forces the packed
+    // store's seek+read load path, `--no-dense-index` the sorted
+    // vertex-lookup fallback. Neither affects results (the CI smoke
+    // `cmp`s the TSVs); both exist for A/B runs and debugging.
+    if args.flag("no-mmap") {
+        builder = builder.mmap(false);
+    }
+    if args.flag("no-dense-index") {
+        builder = builder.dense_index(false);
     }
     // Fault-tolerance knobs: checkpoint cadence/target, resume target,
     // and the failure-injection hook (validated in build(), like

@@ -59,6 +59,7 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 use crate::graph::csr::Graph;
 use crate::partition::{HashPartitioner, Partitioning};
 use crate::util::fsio;
+use crate::util::mmap::Mapping;
 use crate::util::pool;
 
 use super::packed;
@@ -105,6 +106,15 @@ pub struct LoadStats {
     /// hundred metadata bytes per partition, read once before any
     /// seek) is accounted as per-file/seek overhead in
     /// [`crate::sim::DiskModel::packed_read_seconds`], not payload.
+    ///
+    /// The **mmap path counts identically**: bytes is the sum of the
+    /// directory-listed lengths of the sections the projection decodes
+    /// — *not* resident pages, not the mapped file length. Mapping the
+    /// whole file is free until a page is touched, and the decode only
+    /// touches the pages of wanted sections, so the directory-listed
+    /// sum stays the honest measure of data consumed — and it keeps
+    /// mmap-vs-read byte accounting comparable (pinned equal by
+    /// `mmap_and_read_loads_report_equal_stats`).
     pub bytes: u64,
     /// Wall-clock seconds of the load. For the (default) parallel
     /// multi-partition load this is the **max** across partitions (each
@@ -128,7 +138,7 @@ pub enum AttrProjection {
 }
 
 /// Knobs for [`Store::load_partition_with`] / [`Store::load_all_with`].
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct LoadOptions {
     /// Attribute projection (default: topology only).
     pub attributes: AttrProjection,
@@ -140,6 +150,23 @@ pub struct LoadOptions {
     /// single-partition load, 1 when partitions already load in
     /// parallel).
     pub cores: usize,
+    /// Map `partition.gfsp` with [`crate::util::mmap::Mapping`] and
+    /// decode sections straight out of the mapping (default: true).
+    /// Only the packed (v3) format has a mapped path; per-file formats
+    /// ignore the flag. `false` forces the seek+read path — kept as an
+    /// A/B knob and for the byte-accounting regression tests.
+    pub mmap: bool,
+}
+
+impl Default for LoadOptions {
+    fn default() -> Self {
+        LoadOptions {
+            attributes: AttrProjection::default(),
+            sequential: false,
+            cores: 0,
+            mmap: true,
+        }
+    }
 }
 
 impl LoadOptions {
@@ -409,14 +436,18 @@ impl Store {
         Ok((sgs, attrs, stats))
     }
 
-    /// Packed (v3) partition load: read the directory once, then
-    /// `seek` past everything the projection does not want. Each
-    /// sub-graph's wanted sections are coalesced into contiguous runs
-    /// (topology sections are adjacent by construction) and read in
-    /// one `read_exact` each; columns are decoded *borrowing* straight
-    /// out of those run buffers. `LoadStats::bytes` counts exactly the
-    /// directory-listed lengths of the sections read — a projected
-    /// load provably touches fewer bytes than any per-file format can.
+    /// Packed (v3) partition load. Default (`opts.mmap`): map the file
+    /// once and decode wanted sections *borrowing straight from the
+    /// mapping* — no seeks, no copies before materialization, and only
+    /// the pages of wanted sections plus the directory ever fault in.
+    /// With `mmap: false`: read the directory, then `seek` past
+    /// everything the projection does not want, coalescing each
+    /// sub-graph's wanted sections into contiguous runs (topology
+    /// sections are adjacent by construction) read in one `read_exact`
+    /// each. Both paths share one section decoder and report identical
+    /// `LoadStats`: `bytes` counts exactly the directory-listed
+    /// lengths of the sections decoded — a projected load provably
+    /// touches fewer bytes than any per-file format can.
     fn load_partition_packed(
         &self,
         p: u32,
@@ -425,11 +456,21 @@ impl Store {
         let t0 = Instant::now();
         let count = self.meta.subgraph_counts[p as usize] as usize;
         let path = self.packed_path(p);
-        let dir = {
-            let mut f = fs::File::open(&path)
-                .with_context(|| format!("read {}", path.display()))?;
-            packed::read_directory(&mut f)
-                .with_context(|| format!("decode {}", path.display()))?
+        let map = if opts.mmap {
+            Some(Mapping::map(&path).with_context(|| format!("map {}", path.display()))?)
+        } else {
+            None
+        };
+        let dir = match &map {
+            Some(m) => {
+                packed::parse(m).with_context(|| format!("decode {}", path.display()))?
+            }
+            None => {
+                let mut f = fs::File::open(&path)
+                    .with_context(|| format!("read {}", path.display()))?;
+                packed::read_directory(&mut f)
+                    .with_context(|| format!("decode {}", path.display()))?
+            }
         };
 
         // The projection *is* the plan: unwanted `values` sections are
@@ -473,8 +514,23 @@ impl Store {
         type PackedCell = Mutex<Option<Result<(Subgraph, BTreeMap<String, Vec<f32>>, u64)>>>;
         let cells: Vec<PackedCell> = (0..count).map(|_| Mutex::new(None)).collect();
         pool::run_indexed(cores, count, |i| {
-            let r =
-                load_packed_subgraph(&path, p, i as u32, &plans[i], self.meta.num_vertices);
+            let r = match &map {
+                Some(m) => load_packed_subgraph_mapped(
+                    &path,
+                    m,
+                    p,
+                    i as u32,
+                    &plans[i],
+                    self.meta.num_vertices,
+                ),
+                None => load_packed_subgraph(
+                    &path,
+                    p,
+                    i as u32,
+                    &plans[i],
+                    self.meta.num_vertices,
+                ),
+            };
             *cells[i].lock().unwrap() = Some(r);
         })?;
 
@@ -716,7 +772,9 @@ impl Store {
             names.sort();
             for name in names {
                 let rel = format!("host{p}/{name}");
-                let bytes = match fs::read(host.join(&name)) {
+                // Mapped where the platform allows (packed files can be
+                // large); `Mapping` degrades to a heap read elsewhere.
+                let bytes = match Mapping::map(&host.join(&name)) {
                     Ok(bytes) => bytes,
                     Err(e) => {
                         sum.record_unreadable(&rel, e);
@@ -1112,6 +1170,7 @@ impl Store {
             attributes: AttrProjection::All,
             sequential: true,
             cores: 1,
+            ..Default::default()
         };
         for p in 0..store.meta.num_partitions {
             let (sgs, attrs, _) = store
@@ -1324,6 +1383,64 @@ fn load_packed_subgraph(
             sections.push((e, body));
         }
     }
+    let (sg, cols) = decode_packed_sections(path, p, index, &sections, num_global)?;
+    Ok((sg, cols, bytes))
+}
+
+/// Mmap-path sub-graph load: section bodies are sliced straight out of
+/// the partition mapping — no seeks, no intermediate buffers; the
+/// decoded columns borrow from the mapping until materialization.
+/// Checksums and byte accounting are identical to the seek+read path:
+/// `bytes` is the sum of directory-listed lengths of the sections
+/// decoded, not resident pages (see [`LoadStats::bytes`]).
+fn load_packed_subgraph_mapped(
+    path: &Path,
+    map: &[u8],
+    p: u32,
+    index: u32,
+    plan: &[packed::Entry],
+    num_global: u64,
+) -> Result<(Subgraph, BTreeMap<String, Vec<f32>>, u64)> {
+    ensure!(
+        plan.iter().any(|e| e.name.is_empty()),
+        "sub-graph {index} has no topology sections in the packed directory"
+    );
+    let mut sections: Vec<(&packed::Entry, &[u8])> = Vec::with_capacity(plan.len());
+    let mut bytes = 0u64;
+    for e in plan {
+        // `packed::parse` already proved exact byte accounting over the
+        // mapping; the `get` guard keeps a corrupt directory panic-free.
+        let body = map.get(e.range()).ok_or_else(|| {
+            anyhow!(
+                "section `{}` of {} extends past end of file",
+                e.label(),
+                path.display()
+            )
+        })?;
+        ensure!(
+            checksum(body) == e.checksum,
+            "section `{}` of {} corrupt (checksum mismatch)",
+            e.label(),
+            path.display()
+        );
+        bytes += e.len;
+        sections.push((e, body));
+    }
+    let (sg, cols) = decode_packed_sections(path, p, index, &sections, num_global)?;
+    Ok((sg, cols, bytes))
+}
+
+/// Decode one sub-graph from its checksummed section bodies — the
+/// single decoder behind both the seek+read and mmap load paths, so
+/// byte-identical outputs across the two reduce to byte-identical
+/// section bodies (which the checksums pin).
+fn decode_packed_sections(
+    path: &Path,
+    p: u32,
+    index: u32,
+    sections: &[(&packed::Entry, &[u8])],
+    num_global: u64,
+) -> Result<(Subgraph, BTreeMap<String, Vec<f32>>)> {
     let mut sg = slice::decode_topology_from(|id| {
         sections
             .iter()
@@ -1345,14 +1462,14 @@ fn load_packed_subgraph(
     // loaded (identical for a never-appended store).
     sg.num_global_vertices = num_global;
     let mut cols = BTreeMap::new();
-    for (e, body) in &sections {
+    for (e, body) in sections {
         if !e.name.is_empty() {
             let values = slice::decode_f32_column(body)
                 .with_context(|| format!("decode section `{}`", e.label()))?;
             cols.insert(e.name.clone(), values);
         }
     }
-    Ok((sg, cols, bytes))
+    Ok((sg, cols))
 }
 
 /// Parse `sg_<idx>.attr.<name>.slice` file names.
@@ -1535,6 +1652,50 @@ mod tests {
                 d.subgraphs().map(|s| s.vertices.clone()).collect()
             };
             assert_eq!(verts(&dg), verts(&dg2));
+        }
+    }
+
+    #[test]
+    fn mmap_and_read_loads_report_equal_stats() {
+        // The LoadStats contract under mmap: `bytes` still counts the
+        // directory-listed lengths of the sections the projection
+        // decodes — not resident pages, not the mapped file length —
+        // so the mapped and seek+read paths must account identically,
+        // full and projected, and return identical graphs.
+        let g = gen::road(16, 0.93, 0.02, 21);
+        let parts = MultilevelPartitioner::default().partition(&g, 3);
+        let root = tmp("mmap_accounting");
+        let (store, dg) =
+            Store::create_with_format(&root, "rn", &g, &parts, SliceFormat::V3Packed)
+                .unwrap();
+        for sg in dg.subgraphs() {
+            for a in 0..3 {
+                let vals: Vec<f32> =
+                    sg.vertices.iter().map(|&v| v as f32 + a as f32).collect();
+                store.write_attribute(sg.id, &format!("attr{a}"), &vals).unwrap();
+            }
+        }
+        for projection in [
+            AttrProjection::None,
+            AttrProjection::All,
+            AttrProjection::Only(vec!["attr1".into()]),
+        ] {
+            let mapped = LoadOptions {
+                attributes: projection.clone(),
+                mmap: true,
+                ..Default::default()
+            };
+            let read = LoadOptions { mmap: false, ..mapped.clone() };
+            let (dg_m, attrs_m, st_m) = store.load_all_with(&mapped).unwrap();
+            let (dg_r, attrs_r, st_r) = store.load_all_with(&read).unwrap();
+            assert_eq!(st_m.bytes, st_r.bytes, "{projection:?}: equal accounting");
+            assert_eq!(st_m.files, st_r.files, "{projection:?}");
+            assert!(st_m.bytes > 0);
+            assert_eq!(attrs_m, attrs_r, "{projection:?}: identical columns");
+            let verts = |d: &DistributedGraph| -> Vec<Vec<u32>> {
+                d.subgraphs().map(|s| s.vertices.clone()).collect()
+            };
+            assert_eq!(verts(&dg_m), verts(&dg_r), "{projection:?}");
         }
     }
 

@@ -29,6 +29,7 @@ use crate::coordinator::{Aggregators, AggregatorSpec};
 use crate::gofs::{Subgraph, SubgraphId};
 use crate::graph::VertexId;
 use crate::util::codec::{Decoder, Encoder};
+use crate::util::index::VertexIndex;
 
 /// Wire codec for message payloads (needed because the data fabric is
 /// byte-oriented — including the in-process fabric, for honest byte
@@ -132,6 +133,10 @@ pub struct SubgraphContext<'a, M> {
     /// `None` when no columns were loaded for this sub-graph (no
     /// projection declared, or an in-memory source).
     pub(crate) attrs: Option<&'a BTreeMap<String, Vec<f32>>>,
+    /// Compact global-id → local-slot index built by the engine at
+    /// worker init (dense remap, or sorted fallback for sparse ids).
+    /// `None` falls back to `Subgraph::local_id`'s binary search.
+    pub(crate) index: Option<&'a VertexIndex>,
 }
 
 impl<'a, M: Clone> SubgraphContext<'a, M> {
@@ -151,12 +156,35 @@ impl<'a, M: Clone> SubgraphContext<'a, M> {
             agg_global,
             agg_local: aggs.identity_values(),
             attrs,
+            index: None,
         }
+    }
+
+    /// Attach the engine-built vertex index (builder-style, so the
+    /// `new` signature — and every test constructing a bare context —
+    /// stays unchanged).
+    pub(crate) fn with_index(mut self, index: Option<&'a VertexIndex>) -> Self {
+        self.index = index;
+        self
     }
 
     /// Current superstep (1-based, as in the paper's pseudocode).
     pub fn superstep(&self) -> usize {
         self.superstep
+    }
+
+    /// Local slot of a global vertex id within this sub-graph, or
+    /// `None` if the vertex lives elsewhere. Uses the engine's compact
+    /// [`VertexIndex`] (O(1) dense remap where ids allow) when one is
+    /// attached, falling back to [`Subgraph::local_id`]'s binary
+    /// search — the variants are interchangeable by construction, so
+    /// results never depend on which one answered.
+    #[inline]
+    pub fn local_vertex(&self, global: VertexId) -> Option<u32> {
+        match self.index {
+            Some(idx) => idx.get(global),
+            None => self.sg.local_id(global),
+        }
     }
 
     /// A projected per-vertex attribute column (local-vertex order,

@@ -29,7 +29,7 @@
 use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -43,6 +43,7 @@ use crate::gofs::{
 use crate::graph::VertexId;
 use crate::metrics::{CheckpointMetrics, JobMetrics, SuperstepMetrics};
 use crate::util::codec::{Decoder, Encoder};
+use crate::util::index::VertexIndex;
 use crate::util::pool;
 
 use super::api::{
@@ -83,6 +84,22 @@ pub struct GopherConfig {
     /// next barrier (the job then errors out as cancelled). `None` for
     /// unsupervised runs; the `serve` layer attaches one per job.
     pub control: Option<crate::coordinator::RunControl>,
+    /// Memory-map packed partition files on store-backed runs instead
+    /// of seek+read (default true; forwarded to
+    /// [`LoadOptions::mmap`]). Never affects results — pinned by the
+    /// CLI smoke's mmap/no-mmap TSV comparison.
+    pub mmap: bool,
+    /// Resolve global→local vertex ids in the compute loop through a
+    /// dense [`VertexIndex`] built at worker init (default true);
+    /// `false` forces the sorted-search fallback everywhere. Either
+    /// way results are identical — this is a lookup-mechanics knob,
+    /// kept for A/B benchmarking and the parity tests.
+    pub dense_index: bool,
+    /// Precomputed per-partition, per-sub-graph vertex indexes (the
+    /// resident `serve` store builds them once and shares them across
+    /// jobs). Used only when `dense_index` is set and the shape
+    /// matches the loaded graph; otherwise workers build their own.
+    pub vertex_indexes: Option<Arc<Vec<Vec<VertexIndex>>>>,
 }
 
 impl Default for GopherConfig {
@@ -98,6 +115,9 @@ impl Default for GopherConfig {
             resume: None,
             fail_at: None,
             control: None,
+            mmap: true,
+            dense_index: true,
+            vertex_indexes: None,
         }
     }
 }
@@ -299,6 +319,32 @@ where
     let k = fabric.num_workers();
     let n_local = subgraphs.len();
 
+    // Compact global→local vertex indexes for the compute loop: borrow
+    // the resident store's precomputed set when the shape matches
+    // (serve builds them once per snapshot and shares across jobs),
+    // else build here — one pass over each sorted vertex list.
+    // `dense_index: false` forces the sorted-search fallback, the A/B
+    // knob the parity tests exercise.
+    let built: Vec<VertexIndex>;
+    let indexes: &[VertexIndex] = match cfg.vertex_indexes.as_ref().filter(|pre| {
+        cfg.dense_index && pre.get(me as usize).is_some_and(|v| v.len() == n_local)
+    }) {
+        Some(pre) => &pre[me as usize],
+        None => {
+            built = subgraphs
+                .iter()
+                .map(|sg| {
+                    if cfg.dense_index {
+                        VertexIndex::build(&sg.vertices)
+                    } else {
+                        VertexIndex::sorted(&sg.vertices)
+                    }
+                })
+                .collect();
+            &built
+        }
+    };
+
     // Fresh start, or rebuild states/halted/queues from this worker's
     // snapshot of the epoch being resumed.
     type Rebuilt<S, M> = (Vec<S>, Vec<bool>, Vec<Vec<InboxEntry<M>>>, usize, Option<Vec<f64>>);
@@ -402,7 +448,8 @@ where
             // means "a projection loaded columns for this sub-graph".
             let unit_attrs = attrs.get(i).filter(|m| !m.is_empty());
             let mut ctx =
-                SubgraphContext::new(superstep, sg, aggs, agg_global.as_deref(), unit_attrs);
+                SubgraphContext::new(superstep, sg, aggs, agg_global.as_deref(), unit_attrs)
+                    .with_index(indexes.get(i));
             let mut state = states[i].lock().unwrap();
             program.compute(&mut state, sg, &mut ctx, &cur_inbox[i]);
             halted[i].store(ctx.halted, Ordering::Relaxed);
@@ -677,6 +724,7 @@ fn run_inner<P: SubgraphProgram>(
                             &LoadOptions {
                                 attributes: cfg.load_attributes.clone(),
                                 cores: cfg.cores_per_worker,
+                                mmap: cfg.mmap,
                                 ..Default::default()
                             },
                         ),

@@ -150,6 +150,8 @@ pub struct JobBuilder {
     kill_at: Option<ckpt::FailPoint>,
     control: Option<crate::coordinator::RunControl>,
     incremental_from: Option<u64>,
+    mmap: bool,
+    dense_index: bool,
 }
 
 impl Default for JobBuilder {
@@ -172,6 +174,8 @@ impl Default for JobBuilder {
             kill_at: None,
             control: None,
             incremental_from: None,
+            mmap: true,
+            dense_index: true,
         }
     }
 }
@@ -306,6 +310,25 @@ impl JobBuilder {
     /// unchanged.
     pub fn incremental_from(mut self, since: u64) -> Self {
         self.incremental_from = Some(since);
+        self
+    }
+
+    /// Memory-map packed partition files on store-backed runs instead
+    /// of seek+read (default: true; the CLI's `--no-mmap` flag). Not
+    /// result-affecting — both paths decode the same checksummed
+    /// sections — so it is excluded from the checkpoint label.
+    pub fn mmap(mut self, on: bool) -> Self {
+        self.mmap = on;
+        self
+    }
+
+    /// Resolve vertex lookups in the compute loop through a dense
+    /// remap index (default: true; the CLI's `--no-dense-index` flag
+    /// forces the sorted-search fallback). Not result-affecting — the
+    /// index variants are interchangeable by construction — so it is
+    /// excluded from the checkpoint label.
+    pub fn dense_index(mut self, on: bool) -> Self {
+        self.dense_index = on;
         self
     }
 
@@ -462,6 +485,9 @@ impl JobBuilder {
             fail_at: self.kill_at,
             control: self.control,
             incremental_from: self.incremental_from,
+            mmap: self.mmap,
+            dense_index: self.dense_index,
+            vertex_indexes: None,
         })
     }
 }

@@ -47,6 +47,7 @@
 //! | `load_attributes(...)` | ✓ (store-backed loads read exactly the declared attribute columns; a packed v3 store seeks past the rest) | ✗ (the baseline reassembles the whole graph) | [`JobError::IncompatibleKnob`] |
 //! | `checkpoint_every` / `checkpoint_dir` / `resume_from` | ✓ | ✓ | [`JobError::CheckpointConfig`] (inconsistent knobs), [`JobError::NoCheckpoint`] / [`JobError::CheckpointMismatch`] (bad resume target) |
 //! | `incremental_from(...)` | ✓ (store-backed sources only — checked at run time) | ✗ (no sub-graph structure to scope by) | [`JobError::IncompatibleKnob`] |
+//! | `mmap(false)` / `dense_index(false)` | ✓ | ✓ | — (never result-affecting: mmap selects the store read path, dense_index the vertex-lookup mechanics) |
 //!
 //! # Sources
 //!
@@ -172,6 +173,17 @@ pub struct Job {
     /// Live run-control handle threaded into the engine managers
     /// (supervised runs: progress + cancellation; see `serve`).
     pub(crate) control: Option<crate::coordinator::RunControl>,
+    /// Memory-map packed partition files on store-backed loads
+    /// (default true; see [`JobBuilder::mmap`]).
+    pub(crate) mmap: bool,
+    /// Dense vertex-index lookup in the compute loop (default true;
+    /// see [`JobBuilder::dense_index`]).
+    pub(crate) dense_index: bool,
+    /// Precomputed per-partition vertex indexes shared by a resident
+    /// store (see [`Job::with_vertex_indexes`]); `None` lets the
+    /// engine build its own at worker init.
+    pub(crate) vertex_indexes:
+        Option<std::sync::Arc<Vec<Vec<crate::util::index::VertexIndex>>>>,
 }
 
 impl std::fmt::Debug for Job {
@@ -201,6 +213,19 @@ impl Job {
     /// The engine this job will run on.
     pub fn engine(&self) -> EngineKind {
         self.engine
+    }
+
+    /// Attach precomputed per-partition, per-sub-graph vertex indexes
+    /// (the resident `serve` store builds them once per snapshot and
+    /// shares them across every job on it). The engine uses them only
+    /// when dense indexing is enabled and the shape matches the loaded
+    /// graph; they are never result-affecting.
+    pub fn with_vertex_indexes(
+        mut self,
+        indexes: std::sync::Arc<Vec<Vec<crate::util::index::VertexIndex>>>,
+    ) -> Self {
+        self.vertex_indexes = Some(indexes);
+        self
     }
 
     /// Execute against a source. The same built job can run against
@@ -278,6 +303,9 @@ impl Job {
                     resume,
                     fail_at: self.fail_at,
                     control: self.control.clone(),
+                    mmap: self.mmap,
+                    dense_index: self.dense_index,
+                    vertex_indexes: self.vertex_indexes.clone(),
                     ..Default::default()
                 };
                 let run = self.entry.gopher.expect("validated at build time");
@@ -304,6 +332,7 @@ impl Job {
                     resume,
                     fail_at: self.fail_at,
                     control: self.control.clone(),
+                    dense_index: self.dense_index,
                     ..Default::default()
                 };
                 let run = self.entry.vertex.expect("validated at build time");
@@ -315,7 +344,10 @@ impl Job {
                     JobSource::Store(store) => {
                         // Giraph-style: rebuild the flat edge list from
                         // the store and hash-scatter it.
-                        let (dg, _) = store.load_all()?;
+                        let (dg, _, _) = store.load_all_with(&gofs::LoadOptions {
+                            mmap: self.mmap,
+                            ..Default::default()
+                        })?;
                         let g = gofs::reassemble(&dg)?;
                         let parts = HashPartitioner::default()
                             .partition(&g, store.meta().num_partitions as usize);

@@ -31,6 +31,7 @@ use crate::graph::csr::{Graph, VertexId};
 use crate::metrics::{CheckpointMetrics, JobMetrics, SuperstepMetrics};
 use crate::partition::Partitioning;
 use crate::util::codec::{Decoder, Encoder};
+use crate::util::index::VertexIndex;
 use crate::util::pool;
 
 use super::api::{VertexContext, VertexProgram};
@@ -59,6 +60,11 @@ pub struct PregelConfig {
     /// superstep through it and honors a cancellation request at the
     /// next barrier (see the matching knob on `gopher::GopherConfig`).
     pub control: Option<crate::coordinator::RunControl>,
+    /// Resolve message targets through a dense
+    /// [`crate::util::index::VertexIndex`] instead of binary search
+    /// (default true); `false` forces the sorted fallback. Results are
+    /// identical either way — pinned by the engine parity tests.
+    pub dense_index: bool,
 }
 
 impl Default for PregelConfig {
@@ -72,6 +78,7 @@ impl Default for PregelConfig {
             resume: None,
             fail_at: None,
             control: None,
+            dense_index: true,
         }
     }
 }
@@ -226,10 +233,17 @@ where
     let k = fabric.num_workers();
     let n_local = my_vertices.len();
 
-    // Global id -> local index (my_vertices is sorted ascending).
-    let local_of = |v: VertexId| -> Option<usize> {
-        my_vertices.binary_search(&v).ok()
+    // Global id -> local index: the vertex-centric engine pays this
+    // lookup once per delivered message, so it gets the same compact
+    // index as the sub-graph engine (dense O(1) remap where the id
+    // span allows, sorted binary search otherwise or when the
+    // `dense_index` knob forces the fallback).
+    let vindex = if cfg.dense_index {
+        VertexIndex::build(&my_vertices)
+    } else {
+        VertexIndex::sorted(&my_vertices)
     };
+    let local_of = |v: VertexId| -> Option<usize> { vindex.get(v).map(|i| i as usize) };
 
     // Fresh start, or rebuild values/halted/queues from this worker's
     // snapshot of the epoch being resumed.

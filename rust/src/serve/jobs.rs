@@ -426,6 +426,9 @@ pub(crate) fn executor_loop(
         // swapping the resident graph mid-run never changes data under
         // an executing job (generation isolation, serve-level).
         let snapshot = resident.snapshot();
+        // Hand the job the snapshot's precomputed vertex indexes: repeat
+        // jobs against a resident graph skip the per-run index build.
+        let job = job.with_vertex_indexes(snapshot.vertex_indexes());
         let outcome = job.run(JobSource::InMemory(snapshot.graph()));
         {
             let mut st = entry.state.lock().expect("job state lock");

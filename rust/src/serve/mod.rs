@@ -96,6 +96,11 @@ pub struct ResidentState {
     store: Store,
     graph: DistributedGraph,
     load: LoadStats,
+    /// Per-partition, per-sub-graph vertex indexes, built once per
+    /// snapshot and shared (via [`crate::job::Job::with_vertex_indexes`])
+    /// by every job on it — repeated jobs on a resident store skip the
+    /// per-run index build entirely.
+    indexes: Arc<Vec<Vec<crate::util::index::VertexIndex>>>,
 }
 
 impl ResidentState {
@@ -104,7 +109,19 @@ impl ResidentState {
         let (graph, load) = store
             .load_all()
             .with_context(|| format!("load store at {}", root.display()))?;
-        Ok(ResidentState { store, graph, load })
+        // Mirror the graph's partition layout exactly — worker p of a
+        // job run against this snapshot indexes `indexes[p][i]` for
+        // its i-th sub-graph.
+        let indexes: Vec<Vec<crate::util::index::VertexIndex>> = graph
+            .partitions
+            .iter()
+            .map(|sgs| {
+                sgs.iter()
+                    .map(|sg| crate::util::index::VertexIndex::build(&sg.vertices))
+                    .collect()
+            })
+            .collect();
+        Ok(ResidentState { store, graph, load, indexes: Arc::new(indexes) })
     }
 
     /// The underlying store handle (metadata: name, format, counts,
@@ -121,6 +138,12 @@ impl ResidentState {
     /// Byte/file/wall accounting of this snapshot's load.
     pub fn load(&self) -> &LoadStats {
         &self.load
+    }
+
+    /// The snapshot's precomputed vertex indexes (shared by every job
+    /// run against it).
+    pub fn vertex_indexes(&self) -> Arc<Vec<Vec<crate::util::index::VertexIndex>>> {
+        self.indexes.clone()
     }
 }
 

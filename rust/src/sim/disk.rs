@@ -80,6 +80,22 @@ impl DiskModel {
             + dir_bytes as f64 / self.seq_bytes_per_sec
     }
 
+    /// Memory-mapped projected read of a GoFS v3 packed partition file:
+    /// one cold seek to open and map, the prelude + directory faulted in
+    /// (`dir_bytes`), then only the wanted sections' pages faulted
+    /// (`bytes` — directory-listed section lengths, matching
+    /// `LoadStats.bytes` accounting). Unlike
+    /// [`DiskModel::packed_read_seconds`] there is **no intra-file seek
+    /// charge per skipped run**: unwanted sections are never faulted at
+    /// all — the page cache simply skips those offsets — so the skip
+    /// penalty the seek+read path pays disappears. Records still pay the
+    /// per-record materialisation cost (checksum + decode are unchanged).
+    pub fn mmap_read_seconds(&self, dir_bytes: u64, bytes: u64, records: u64) -> f64 {
+        self.seek_seconds
+            + (dir_bytes + bytes) as f64 / self.seq_bytes_per_sec
+            + self.per_record_seconds * records as f64
+    }
+
     /// Streaming-ingest cost (`crate::ingest`): edges are parsed once,
     /// spilled to per-host run files whenever the `spill_buffer` byte
     /// budget fills, re-read per host in pass 1, and written out as
@@ -153,6 +169,25 @@ mod tests {
         // The directory is not free: same shape minus the directory
         // costs strictly less.
         assert!(packed > d.projected_read_seconds(1, 20_000_000, 0, 100));
+    }
+
+    #[test]
+    fn mmap_projection_beats_seek_read_projection() {
+        // Same packed projection as above — 1 file, 50 KB directory,
+        // 20 MB of wanted sections — but mapped: the 100 skipped runs
+        // cost nothing because their pages are never faulted.
+        let d = DiskModel::default();
+        let seek_read = d.packed_read_seconds(1, 50_000, 20_000_000, 0, 100);
+        let mapped = d.mmap_read_seconds(50_000, 20_000_000, 0);
+        assert!(mapped < seek_read, "mapped={mapped} seek_read={seek_read}");
+        // With zero skipped runs the two paths collapse to the same
+        // cost: one seek, directory + wanted bytes streamed.
+        let no_skips = d.packed_read_seconds(1, 50_000, 20_000_000, 0, 0);
+        assert!((mapped - no_skips).abs() < 1e-12, "{mapped} vs {no_skips}");
+        // Records cost the same on both paths — decode is unchanged.
+        let recs = d.mmap_read_seconds(50_000, 20_000_000, 1_000_000)
+            - d.mmap_read_seconds(50_000, 20_000_000, 0);
+        assert!((recs - d.per_record_seconds * 1e6).abs() < 1e-9);
     }
 
     #[test]

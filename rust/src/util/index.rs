@@ -1,0 +1,166 @@
+//! Compact vertex-id → local-slot lookup for the compute inner loop.
+//!
+//! Both engines store a sub-graph's vertices as a sorted `Vec<u32>` of
+//! global ids where the *position* is the local id. Resolving a global
+//! id therefore costs a binary search per message — the per-vertex
+//! overhead the GoFFish paper calls out. [`VertexIndex`] replaces it:
+//!
+//! * **Dense** — when the id span is close to the vertex count (the
+//!   common case after contiguous relabeling), a direct-indexed slot
+//!   table gives O(1) lookup: `slots[id - base]`.
+//! * **Sorted** — when ids are sparse (u32-gapped), the dense table
+//!   would waste memory, so we keep the binary search but over a copy
+//!   owned by the index, making the two variants interchangeable.
+//!
+//! The variant never affects results — only lookup mechanics — which
+//! the engine parity tests pin by running both.
+
+/// Slot sentinel for "no vertex at this id" in the dense table.
+const ABSENT: u32 = u32::MAX;
+
+/// Maps a global [`crate::graph::VertexId`] to its local slot (the
+/// position in the sub-graph's sorted vertex list).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum VertexIndex {
+    /// Direct-indexed table over the id span `[base, base + slots.len())`.
+    Dense {
+        /// Smallest global id in the set.
+        base: u32,
+        /// `slots[id - base]` is the local slot, or `u32::MAX` if absent.
+        slots: Vec<u32>,
+    },
+    /// Sorted-id fallback for sparse sets: binary search, O(log n).
+    Sorted(Vec<u32>),
+}
+
+impl VertexIndex {
+    /// Build the best index for `ids`, which must be sorted ascending
+    /// and duplicate-free (both engines' vertex lists already are).
+    /// Picks [`VertexIndex::Dense`] when the id span is at most
+    /// `4 * len + 64` — past that, the slot table's memory overhead
+    /// outweighs the O(1) lookup and we fall back to binary search.
+    pub fn build(ids: &[u32]) -> VertexIndex {
+        debug_assert!(ids.windows(2).all(|w| w[0] < w[1]), "ids must be sorted unique");
+        let (min, max) = match (ids.first(), ids.last()) {
+            (Some(&min), Some(&max)) => (min, max),
+            _ => return VertexIndex::Dense { base: 0, slots: Vec::new() },
+        };
+        let span = (max - min) as usize + 1;
+        if span <= ids.len().saturating_mul(4) + 64 {
+            let mut slots = vec![ABSENT; span];
+            for (local, &id) in ids.iter().enumerate() {
+                slots[(id - min) as usize] = local as u32;
+            }
+            VertexIndex::Dense { base: min, slots }
+        } else {
+            VertexIndex::Sorted(ids.to_vec())
+        }
+    }
+
+    /// Force the sorted-search fallback regardless of density — the
+    /// `dense_index=false` knob, kept so parity tests can pit the two
+    /// variants against each other on the same graph.
+    pub fn sorted(ids: &[u32]) -> VertexIndex {
+        debug_assert!(ids.windows(2).all(|w| w[0] < w[1]), "ids must be sorted unique");
+        VertexIndex::Sorted(ids.to_vec())
+    }
+
+    /// Local slot of `global`, or `None` if it is not in this set.
+    #[inline]
+    pub fn get(&self, global: u32) -> Option<u32> {
+        match self {
+            VertexIndex::Dense { base, slots } => {
+                let off = global.checked_sub(*base)? as usize;
+                match slots.get(off) {
+                    Some(&slot) if slot != ABSENT => Some(slot),
+                    _ => None,
+                }
+            }
+            VertexIndex::Sorted(ids) => {
+                ids.binary_search(&global).ok().map(|i| i as u32)
+            }
+        }
+    }
+
+    /// Number of vertices indexed.
+    pub fn len(&self) -> usize {
+        match self {
+            VertexIndex::Dense { slots, .. } => {
+                slots.iter().filter(|&&s| s != ABSENT).count()
+            }
+            VertexIndex::Sorted(ids) => ids.len(),
+        }
+    }
+
+    /// Whether the index is empty.
+    pub fn is_empty(&self) -> bool {
+        match self {
+            VertexIndex::Dense { slots, .. } => slots.iter().all(|&s| s == ABSENT),
+            VertexIndex::Sorted(ids) => ids.is_empty(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_ids_build_dense() {
+        let ids: Vec<u32> = (100..200).collect();
+        let idx = VertexIndex::build(&ids);
+        assert!(matches!(idx, VertexIndex::Dense { .. }));
+        for (local, &id) in ids.iter().enumerate() {
+            assert_eq!(idx.get(id), Some(local as u32));
+        }
+        assert_eq!(idx.get(99), None);
+        assert_eq!(idx.get(200), None);
+        assert_eq!(idx.get(0), None);
+        assert_eq!(idx.len(), 100);
+    }
+
+    #[test]
+    fn gapped_ids_fall_back_to_sorted() {
+        // span = 4_000_000_001 ≫ 4*3 + 64 → must not allocate a table.
+        let ids = vec![7u32, 1_000_000, 4_000_000_007];
+        let idx = VertexIndex::build(&ids);
+        assert!(matches!(idx, VertexIndex::Sorted(_)));
+        assert_eq!(idx.get(7), Some(0));
+        assert_eq!(idx.get(1_000_000), Some(1));
+        assert_eq!(idx.get(4_000_000_007), Some(2));
+        assert_eq!(idx.get(8), None);
+    }
+
+    #[test]
+    fn dense_and_sorted_agree_on_every_probe() {
+        let ids = vec![3u32, 4, 9, 10, 11, 30, 31, 40];
+        let dense = VertexIndex::build(&ids);
+        assert!(matches!(dense, VertexIndex::Dense { .. }), "span 38 fits 4*8+64");
+        let sorted = VertexIndex::sorted(&ids);
+        for probe in 0..64u32 {
+            assert_eq!(dense.get(probe), sorted.get(probe), "probe {probe}");
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton_sets() {
+        let empty = VertexIndex::build(&[]);
+        assert!(empty.is_empty());
+        assert_eq!(empty.get(0), None);
+        let one = VertexIndex::build(&[42]);
+        assert_eq!(one.get(42), Some(0));
+        assert_eq!(one.get(41), None);
+        assert_eq!(one.len(), 1);
+        assert!(!one.is_empty());
+    }
+
+    #[test]
+    fn boundary_ids_do_not_overflow() {
+        let ids = vec![u32::MAX - 2, u32::MAX - 1];
+        let idx = VertexIndex::build(&ids);
+        assert_eq!(idx.get(u32::MAX - 2), Some(0));
+        assert_eq!(idx.get(u32::MAX - 1), Some(1));
+        assert_eq!(idx.get(u32::MAX), None);
+        assert_eq!(idx.get(0), None);
+    }
+}

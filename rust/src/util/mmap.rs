@@ -1,0 +1,231 @@
+//! Read-only memory mapping with a heap fallback.
+//!
+//! [`Mapping::map`] maps a whole file `PROT_READ`/`MAP_PRIVATE` via raw
+//! `extern "C"` declarations (no libc crate — the repo vendors nothing
+//! it can avoid), and dereferences to `&[u8]` exactly like an owned
+//! buffer. On non-unix platforms, for empty files (a zero-length mmap
+//! is `EINVAL`), or whenever the syscall fails for any reason, it
+//! silently falls back to [`std::fs::read`] into a heap buffer — so
+//! every caller keeps working everywhere and the mapping is purely an
+//! optimization.
+//!
+//! Safety model: the mapping is private and read-only, so concurrent
+//! readers are fine (`Send + Sync`). GoFS never rewrites a packed file
+//! in place — updates go through tmp+rename, which replaces the
+//! directory entry while the mapped inode lives on — so a `Mapping`
+//! can never observe a torn rewrite and never SIGBUSes on truncation.
+
+use std::fs::File;
+use std::io;
+use std::ops::Deref;
+use std::path::Path;
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+    pub const MAP_FAILED: *mut c_void = usize::MAX as *mut c_void;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+/// A read-only view of a file: either a live `mmap(2)` mapping or a
+/// heap buffer read with [`std::fs::read`]. Derefs to `&[u8]` either
+/// way, so callers never branch on which one they got.
+pub enum Mapping {
+    /// A live unix memory mapping; unmapped on drop.
+    #[cfg(unix)]
+    Mapped {
+        /// Base address returned by `mmap`.
+        ptr: *mut std::os::raw::c_void,
+        /// Mapped length in bytes (the file length at map time).
+        len: usize,
+    },
+    /// Heap fallback: the whole file read into memory.
+    Heap(Vec<u8>),
+}
+
+// SAFETY: the mapping is PROT_READ + MAP_PRIVATE — no writer can exist
+// through this handle, and GoFS never mutates packed files in place —
+// so sharing the view across threads is sound.
+unsafe impl Send for Mapping {}
+unsafe impl Sync for Mapping {}
+
+impl Mapping {
+    /// Map `path` read-only, falling back to a heap read on non-unix
+    /// platforms, on empty files, or if the syscall fails.
+    pub fn map(path: &Path) -> io::Result<Mapping> {
+        #[cfg(unix)]
+        {
+            use std::os::unix::io::AsRawFd;
+            let file = File::open(path)?;
+            let len = file.metadata()?.len();
+            if len > 0 && len <= usize::MAX as u64 {
+                let len = len as usize;
+                // SAFETY: fd is a freshly opened, valid descriptor; we
+                // request a private read-only mapping of the whole file
+                // and check for MAP_FAILED before using the result.
+                let ptr = unsafe {
+                    sys::mmap(
+                        std::ptr::null_mut(),
+                        len,
+                        sys::PROT_READ,
+                        sys::MAP_PRIVATE,
+                        file.as_raw_fd(),
+                        0,
+                    )
+                };
+                if ptr != sys::MAP_FAILED && !ptr.is_null() {
+                    // POSIX keeps the mapping alive after the fd
+                    // closes; `file` dropping here is intentional.
+                    return Ok(Mapping::Mapped { ptr, len });
+                }
+            }
+            drop(file);
+        }
+        Ok(Mapping::Heap(std::fs::read(path)?))
+    }
+
+    /// Force the heap path (used by tests and the `mmap=false` load
+    /// option to keep both code paths honest).
+    pub fn read(path: &Path) -> io::Result<Mapping> {
+        Ok(Mapping::Heap(std::fs::read(path)?))
+    }
+
+    /// Whether this view is a live memory mapping (false = heap copy).
+    pub fn is_mapped(&self) -> bool {
+        match self {
+            #[cfg(unix)]
+            Mapping::Mapped { .. } => true,
+            Mapping::Heap(_) => false,
+        }
+    }
+}
+
+impl Deref for Mapping {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        match self {
+            #[cfg(unix)]
+            Mapping::Mapped { ptr, len } => {
+                // SAFETY: ptr/len describe a live PROT_READ mapping we
+                // own; it stays valid until Drop.
+                unsafe { std::slice::from_raw_parts(*ptr as *const u8, *len) }
+            }
+            Mapping::Heap(v) => v,
+        }
+    }
+}
+
+impl Drop for Mapping {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Mapping::Mapped { ptr, len } = *self {
+            // SAFETY: exactly the region mmap returned; errors on
+            // unmap are unrecoverable and ignored like libstd does.
+            unsafe {
+                sys::munmap(ptr, len);
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for Mapping {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            #[cfg(unix)]
+            Mapping::Mapped { len, .. } => {
+                f.debug_struct("Mapping::Mapped").field("len", len).finish()
+            }
+            Mapping::Heap(v) => {
+                f.debug_struct("Mapping::Heap").field("len", &v.len()).finish()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join("goffish_mmap_tests")
+            .join(format!("{}_{name}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        std::fs::write(&p, bytes).unwrap();
+        p
+    }
+
+    #[test]
+    fn mapped_bytes_equal_read_bytes() {
+        let data: Vec<u8> = (0..100_000u32).map(|i| (i % 251) as u8).collect();
+        let p = tmpfile("data.bin", &data);
+        let m = Mapping::map(&p).unwrap();
+        let r = Mapping::read(&p).unwrap();
+        assert_eq!(&m[..], &data[..]);
+        assert_eq!(&r[..], &data[..]);
+        assert!(!r.is_mapped());
+        #[cfg(unix)]
+        assert!(m.is_mapped(), "unix should produce a live mapping");
+    }
+
+    #[test]
+    fn empty_file_falls_back_to_heap() {
+        let p = tmpfile("empty.bin", b"");
+        let m = Mapping::map(&p).unwrap();
+        assert!(!m.is_mapped());
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn missing_file_is_an_error() {
+        let p = std::env::temp_dir().join("goffish_mmap_tests_no_such_file");
+        assert!(Mapping::map(&p).is_err());
+        assert!(Mapping::read(&p).is_err());
+    }
+
+    #[test]
+    fn mapping_survives_tmp_rename_replacement() {
+        // GoFS's update discipline: never rewrite in place, always
+        // tmp+rename. The old mapping must keep serving the old bytes.
+        let p = tmpfile("gen.bin", b"generation-0");
+        let m = Mapping::map(&p).unwrap();
+        let tmp = p.with_extension("tmp");
+        std::fs::write(&tmp, b"generation-1").unwrap();
+        std::fs::rename(&tmp, &p).unwrap();
+        assert_eq!(&m[..], b"generation-0");
+        let m2 = Mapping::map(&p).unwrap();
+        assert_eq!(&m2[..], b"generation-1");
+    }
+
+    #[test]
+    fn mapping_is_shareable_across_threads() {
+        let data: Vec<u8> = (0..4096u32).flat_map(|i| i.to_le_bytes()).collect();
+        let p = tmpfile("shared.bin", &data);
+        let m = std::sync::Arc::new(Mapping::map(&p).unwrap());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let m = m.clone();
+                let want = data.clone();
+                std::thread::spawn(move || assert_eq!(&m[..], &want[..]))
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

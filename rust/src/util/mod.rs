@@ -8,5 +8,7 @@ pub mod rng;
 pub mod codec;
 pub mod dsu;
 pub mod fsio;
+pub mod index;
+pub mod mmap;
 pub mod pool;
 pub mod stats;

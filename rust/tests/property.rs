@@ -212,10 +212,12 @@ fn prop_store_formats_load_identically_under_any_projection() {
     // partitioning written as v1 slices, v2 columnar slices, or a v3
     // packed store must load back *identical* sub-graphs and attribute
     // columns, for a random `AttrProjection`, both sequentially and on
-    // the `util::pool` parallel path. Six observations per case (3
-    // formats × 2 modes) must agree exactly.
+    // the `util::pool` parallel path, and (for v3, where the knob has
+    // effect) through both the mmap and the seek+read decode paths.
+    // Twelve observations per case (3 formats × 2 modes × 2 byte
+    // paths) must agree exactly.
     prop_with_rng(
-        "v1/v2/v3 × seq/par loads agree",
+        "v1/v2/v3 × seq/par × mmap/read loads agree",
         8,
         |rng| {
             let base = fixtures::random_graph(rng);
@@ -270,23 +272,28 @@ fn prop_store_formats_load_identically_under_any_projection() {
                     .write_attributes(&items)
                     .map_err(|e| format!("attrs {fmt}: {e:#}"))?;
                 for sequential in [true, false] {
-                    let opts = LoadOptions {
-                        attributes: projection.clone(),
-                        sequential,
-                        cores: 0,
-                    };
-                    let (dg2, attrs, stats) = store
-                        .load_all_with(&opts)
-                        .map_err(|e| format!("load {fmt} seq={sequential}: {e:#}"))?;
-                    if stats.bytes == 0 {
-                        return Err(format!("{fmt}: load reported zero bytes"));
+                    for mmap in [true, false] {
+                        let opts = LoadOptions {
+                            attributes: projection.clone(),
+                            sequential,
+                            cores: 0,
+                            mmap,
+                        };
+                        let (dg2, attrs, stats) = store
+                            .load_all_with(&opts)
+                            .map_err(|e| {
+                                format!("load {fmt} seq={sequential} mmap={mmap}: {e:#}")
+                            })?;
+                        if stats.bytes == 0 {
+                            return Err(format!("{fmt}: load reported zero bytes"));
+                        }
+                        observations.push((
+                            format!("{fmt} mmap={mmap}"),
+                            sequential,
+                            observable_shape(&dg2),
+                            attrs,
+                        ));
                     }
-                    observations.push((
-                        fmt.to_string(),
-                        sequential,
-                        observable_shape(&dg2),
-                        attrs,
-                    ));
                 }
                 let _ = std::fs::remove_dir_all(&root);
             }
@@ -433,7 +440,12 @@ fn prop_streamed_store_equals_batch_store() {
                 (AttrProjection::Only(_), 0) => AttrProjection::All,
                 _ => projection,
             };
-            let load = LoadOptions { attributes: projection, sequential: true, cores: 0 };
+            let load = LoadOptions {
+                attributes: projection,
+                sequential: true,
+                cores: 0,
+                ..Default::default()
+            };
             let (dg_a, attrs_a, _) = batch_store
                 .load_all_with(&load)
                 .map_err(|e| format!("batch load: {e:#}"))?;
