@@ -147,6 +147,34 @@ fn main() {
     json.emit("LJ", "superstep_throughput_dense_eps", dense_eps);
     json.emit("LJ", "superstep_throughput_sorted_eps", sorted_eps);
 
+    // Tracing overhead: the same PageRank run with span tracing on —
+    // every worker records superstep/compute/route/drain/barrier spans,
+    // the manager ckpt/commit lanes stay idle — vs. the untraced
+    // baseline above. CI asserts the ratio stays under the bound
+    // documented in docs/OBSERVABILITY.md.
+    let traced_cfg = GopherConfig {
+        trace: goffish::obs::trace::Tracer::enabled(),
+        ..Default::default()
+    };
+    let (w, r) = reps(1, 3);
+    let m_traced = measure(w, r, || {
+        let prog = PageRankSg { supersteps: 5, kernel: RankKernel::Scalar, epsilon: None };
+        run(&ljdg, &prog, &traced_cfg).unwrap();
+    });
+    assert!(
+        !traced_cfg.trace.sink().unwrap().events().is_empty(),
+        "traced bench run recorded no spans"
+    );
+    let traced_per_ss = m_traced.median / 5.0;
+    let ratio = traced_per_ss / plain_per_ss;
+    t.row(&[
+        "pagerank 5 ss LJ, tracing on".into(),
+        fmt_secs(m_traced.median),
+        format!("{} per superstep ({ratio:.3}x untraced)", fmt_secs(traced_per_ss)),
+    ]);
+    json.emit("LJ", "traced_superstep_seconds", traced_per_ss);
+    json.emit("LJ", "trace_overhead_ratio", ratio);
+
     // Checkpoint overhead: the same PageRank run with a snapshot every
     // superstep (states + queues to disk, epoch committed at the
     // barrier) vs. the uncheckpointed baseline above.

@@ -13,7 +13,10 @@
 //! writes the *coordinator snapshot* (the full per-superstep global
 //! aggregator history) and **commits** the epoch by atomically
 //! rewriting the manifest. Both engines (`gopher` and `pregel`) thread
-//! the same machinery through their barrier.
+//! the same machinery through their barrier. When a job runs with
+//! tracing ([`crate::obs::trace`]), both sides show up on the timeline:
+//! each worker's snapshot write is a `ckpt_write` span on its lane and
+//! the manager's manifest commit a `ckpt_commit` span on lane 0.
 //!
 //! # On-disk layout
 //!

@@ -10,9 +10,9 @@
 //! goffish store migrate --store storedir
 //! goffish ingest    --edges edges.tsv --store storedir [--hosts H]
 //!                   [--format v1|v2|v3] [--name NAME] [--directed]
-//!                   [--spill-buffer BYTES] [--seed S]
+//!                   [--spill-buffer BYTES] [--seed S] [--trace t.json]
 //! goffish serve     --store storedir [--port P] [--workers N] [--queue N]
-//!                   [--cores N] [--keep-results N]
+//!                   [--cores N] [--keep-results N] [--access-log]
 //! goffish run       --store storedir
 //!                   --algo <any algos::registry entry>
 //!                   [--engine gopher|vertex] [--source V] [--supersteps N]
@@ -21,8 +21,15 @@
 //!                   [--xla] [--fabric inproc|tcp] [--cores N]
 //!                   [--load-attributes a,b] [--output values.tsv]
 //!                   [--checkpoint-every N --checkpoint-dir D] [--resume D]
-//!                   [--kill-at S [--kill-worker W]]
+//!                   [--kill-at S [--kill-worker W]] [--trace t.json]
 //! ```
+//!
+//! Observability (`docs/OBSERVABILITY.md`): `run --trace t.json` and
+//! `ingest --trace t.json` write a Chrome trace-event timeline of the
+//! run (load/superstep phases per worker, checkpoints, ingest passes —
+//! open it in Perfetto); `serve --access-log` prints one line per HTTP
+//! request, and `GET /v1/metrics?format=prometheus` on a running server
+//! exposes live counters/gauges/histograms for scrapers.
 //!
 //! `store --format` picks the on-disk layout (v2 columnar default; v1
 //! for compat tooling; v3 packs each partition into a single
@@ -132,9 +139,10 @@ commands:
                (--spill-buffer; byte-identical to the batch store path)
   run          execute an algorithm with Gopher or the vertex baseline
                (checkpoint with --checkpoint-every/--checkpoint-dir, recover
-               with --resume)
+               with --resume; --trace t.json writes a Chrome-trace timeline)
   serve        resident job server: load a store once, accept jobs over
-               an HTTP API (see docs/API.md)
+               an HTTP API (see docs/API.md; --access-log prints request
+               lines, /v1/metrics?format=prometheus exposes live metrics)
   algos        per-engine algorithm support matrix
   help         this message
 
@@ -354,6 +362,7 @@ fn cmd_ingest(args: &Args) -> Result<()> {
     let fmt_arg = args.get_or("format", "v3");
     let format = SliceFormat::parse(fmt_arg)
         .with_context(|| format!("--format expects v1, v2 or v3, got {fmt_arg:?}"))?;
+    let trace_path = args.get("trace");
     let opts = IngestOptions {
         name: args.get_or("name", "graph").to_string(),
         hosts,
@@ -361,9 +370,18 @@ fn cmd_ingest(args: &Args) -> Result<()> {
         directed: args.flag("directed"),
         spill_buffer: args.get_usize("spill-buffer", 64 << 20)?,
         seed: args.get_u64("seed", 1)?,
+        trace: if trace_path.is_some() {
+            crate::obs::trace::Tracer::enabled()
+        } else {
+            crate::obs::trace::Tracer::default()
+        },
     };
     let (store, report) =
         ingest_edge_list(Path::new(edges), Path::new(store_root), &opts)?;
+    if let Some(path) = trace_path {
+        opts.trace.write_file(Path::new(path))?;
+        println!("wrote ingest trace to {path} (load it in Perfetto)");
+    }
     println!(
         "ingested {edges} into {} ({}, {} hosts): {} vertices / {} edges / {} sub-graphs in {:.3}s",
         store.root().display(),
@@ -457,12 +475,21 @@ fn cmd_run(args: &Args) -> Result<()> {
         let worker = args.get_usize("kill-worker", 0)? as u32;
         builder = builder.kill_at(superstep, worker);
     }
+    // Observability knob: record per-worker load/superstep-phase/
+    // checkpoint spans and write them as a Chrome trace-event timeline.
+    // Never affects results (spans only observe the run).
+    if let Some(path) = args.get("trace") {
+        builder = builder.trace(path);
+    }
     // Knob/engine validation happens here, with typed errors (e.g.
     // `--epsilon` or `--no-combine` on the vertex engine).
     let job = builder.build()?;
 
     let out = job.run(JobSource::Store(&store))?;
     println!("{}", out.metrics.report(&format!("{engine}/{algo}")));
+    if let Some(path) = args.get("trace") {
+        println!("wrote trace to {path} (load it in Perfetto)");
+    }
     for trace in &out.aggregators {
         println!(
             "  aggregator {}: last={:?} over {} supersteps",
@@ -505,6 +532,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue: args.get_usize("queue", 16)?,
         cores: args.get_usize("cores", 4)?,
         keep_results,
+        access_log: args.flag("access-log"),
     };
     let snap = resident.snapshot();
     println!(
@@ -621,6 +649,56 @@ mod tests {
         ])
         .unwrap();
         run_cmd(&["algos"]).unwrap();
+    }
+
+    #[test]
+    fn run_trace_flag_writes_chrome_trace() {
+        let dir = tmp("trace_flag");
+        let graph = dir.join("g.txt");
+        let store = dir.join("store");
+        let trace = dir.join("t.json");
+        run_cmd(&["gen", "--kind", "chain", "--scale", "4", "--out", graph.to_str().unwrap()])
+            .unwrap();
+        run_cmd(&[
+            "store",
+            "--graph",
+            graph.to_str().unwrap(),
+            "--k",
+            "2",
+            "--out",
+            store.to_str().unwrap(),
+        ])
+        .unwrap();
+        run_cmd(&[
+            "run",
+            "--store",
+            store.to_str().unwrap(),
+            "--algo",
+            "cc",
+            "--trace",
+            trace.to_str().unwrap(),
+        ])
+        .unwrap();
+        let text = std::fs::read_to_string(&trace).unwrap();
+        let v = crate::serve::json::JsonValue::parse(&text).unwrap();
+        let rows = v.get("traceEvents").unwrap().as_array().unwrap();
+        assert!(!rows.is_empty(), "trace file holds no events");
+        // The ingest flavour writes one too.
+        let streamed = dir.join("streamed");
+        let itrace = dir.join("ingest.json");
+        run_cmd(&[
+            "ingest",
+            "--edges",
+            graph.to_str().unwrap(),
+            "--store",
+            streamed.to_str().unwrap(),
+            "--trace",
+            itrace.to_str().unwrap(),
+        ])
+        .unwrap();
+        let text = std::fs::read_to_string(&itrace).unwrap();
+        let v = crate::serve::json::JsonValue::parse(&text).unwrap();
+        assert!(!v.get("traceEvents").unwrap().as_array().unwrap().is_empty());
     }
 
     #[test]

@@ -30,7 +30,7 @@
 //! per-superstep progress and request cancellation, which the managers
 //! honor at the next barrier.
 
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 /// Shared live-control handle for one run: an external supervisor (the
@@ -42,10 +42,21 @@ use std::sync::Arc;
 /// the manager writes once per barrier, observers poll — and the type
 /// stays `Clone + Debug + Default` so the engine configs can keep their
 /// derives.
+///
+/// Beyond the superstep number, the barrier publishes the run's
+/// cumulative message/byte counts and the just-completed superstep's
+/// straggler ratio (§6.5: slowest partition compute / next-slowest) —
+/// the live series `GET /v1/metrics?format=prometheus` exposes per
+/// running job.
 #[derive(Clone, Debug, Default)]
 pub struct RunControl {
     cancel: Arc<AtomicBool>,
     superstep: Arc<AtomicUsize>,
+    messages: Arc<AtomicU64>,
+    bytes: Arc<AtomicU64>,
+    /// Straggler ratio of the last completed superstep, stored as
+    /// `f64::to_bits` (atomics carry no floats).
+    straggler: Arc<AtomicU64>,
 }
 
 impl RunControl {
@@ -71,10 +82,39 @@ impl RunControl {
         self.superstep.store(superstep, Ordering::Relaxed);
     }
 
+    /// Manager-side: publish cumulative traffic and the completed
+    /// superstep's straggler ratio alongside the barrier.
+    pub fn publish_progress(&self, messages: u64, bytes: u64, straggler: f64) {
+        self.messages.store(messages, Ordering::Relaxed);
+        self.bytes.store(bytes, Ordering::Relaxed);
+        self.straggler.store(straggler.to_bits(), Ordering::Relaxed);
+    }
+
     /// Observer-side: the last completed superstep (0 before the first
     /// barrier).
     pub fn superstep(&self) -> usize {
         self.superstep.load(Ordering::Relaxed)
+    }
+
+    /// Observer-side: cumulative data messages sent so far.
+    pub fn messages(&self) -> u64 {
+        self.messages.load(Ordering::Relaxed)
+    }
+
+    /// Observer-side: cumulative encoded data bytes sent so far.
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    /// Observer-side: straggler ratio of the last completed superstep
+    /// (`1.0` before the first barrier: nobody has straggled yet).
+    pub fn straggler_ratio(&self) -> f64 {
+        let bits = self.straggler.load(Ordering::Relaxed);
+        if bits == 0 {
+            1.0
+        } else {
+            f64::from_bits(bits)
+        }
     }
 }
 
@@ -347,6 +387,14 @@ mod tests {
         ctl.cancel();
         assert!(observer.is_cancelled());
         assert_eq!(observer.superstep(), 7);
+        // Progress defaults: no traffic, straggler 1.0 pre-barrier.
+        assert_eq!(observer.messages(), 0);
+        assert_eq!(observer.bytes(), 0);
+        assert_eq!(observer.straggler_ratio(), 1.0);
+        ctl.publish_progress(120, 960, 2.5);
+        assert_eq!(observer.messages(), 120);
+        assert_eq!(observer.bytes(), 960);
+        assert!((observer.straggler_ratio() - 2.5).abs() < 1e-12);
     }
 
     #[test]

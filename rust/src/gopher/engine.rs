@@ -100,6 +100,14 @@ pub struct GopherConfig {
     /// jobs). Used only when `dense_index` is set and the shape
     /// matches the loaded graph; otherwise workers build their own.
     pub vertex_indexes: Option<Arc<Vec<Vec<VertexIndex>>>>,
+    /// Span tracing ([`crate::obs::trace`]): when enabled, every worker
+    /// records load + per-superstep compute/route/drain/barrier phase
+    /// spans (and checkpoint writes), the manager records epoch
+    /// commits. Default disabled: the hot path then pays one `Option`
+    /// branch per would-be span and allocates nothing (pinned by the
+    /// `trace_overhead` bench rows). Never result-affecting, so — like
+    /// `mmap`/`dense_index` — it is excluded from the checkpoint label.
+    pub trace: crate::obs::trace::Tracer,
 }
 
 impl Default for GopherConfig {
@@ -118,6 +126,7 @@ impl Default for GopherConfig {
             mmap: true,
             dense_index: true,
             vertex_indexes: None,
+            trace: crate::obs::trace::Tracer::default(),
         }
     }
 }
@@ -196,6 +205,11 @@ struct WorkerSync {
     worker: u32,
     /// Data messages sent this superstep (including self-sends).
     sent: u64,
+    /// Encoded bytes put on the fabric this superstep.
+    bytes: u64,
+    /// Wall clock of this worker's compute phase, used by the manager
+    /// to publish a live straggler ratio through `RunControl`.
+    compute_seconds: f64,
     /// All local sub-graphs voted to halt and hold no pending messages.
     quiescent: bool,
     /// Worker failed: manager must abort the job after this superstep.
@@ -281,6 +295,8 @@ where
             let _ = sync_tx.send(WorkerSync {
                 worker: me,
                 sent: 0,
+                bytes: 0,
+                compute_seconds: 0.0,
                 quiescent: true,
                 failed: true,
                 agg: Vec::new(),
@@ -400,6 +416,12 @@ where
     const PARALLEL_THRESHOLD_SECONDS: f64 = 200e-6;
     let mut last_compute = f64::INFINITY;
 
+    // Span recorder for this worker's lane (tid = worker id + 1; tid 0
+    // is the manager). `None` when tracing is disabled, in which case
+    // every would-be span below costs one `Option` branch and nothing
+    // else — no clock read, no allocation.
+    let rec = cfg.trace.recorder(me + 1);
+
     loop {
         // Failure injection (testing hook): die exactly like a killed
         // host — peers and the manager are unblocked by `worker_body`'s
@@ -410,6 +432,12 @@ where
             }
         }
         let t_step = Instant::now();
+        // The superstep span stays open through the barrier so every
+        // phase span below nests inside it (drops just before the
+        // manager's verdict is applied).
+        let span_step = rec
+            .as_ref()
+            .map(|r| r.span_n("superstep", "superstep", "superstep", superstep as f64));
         // Deliveries of the previous superstep, stably sorted by sending
         // worker (see `encode_batch`): deterministic replay.
         let queued: Vec<Vec<InboxEntry<P::Msg>>> =
@@ -440,6 +468,7 @@ where
         let outs: Vec<Mutex<UnitOut<P::Msg>>> = (0..active.len())
             .map(|_| Mutex::new((Vec::new(), Vec::new())))
             .collect();
+        let span_compute = rec.as_ref().map(|r| r.span("compute", "phase"));
         let t0 = Instant::now();
         let unit_times = pool::run_indexed(cores, active.len(), |j| {
             let i = active[j];
@@ -457,9 +486,11 @@ where
         })?;
         let compute_seconds = t0.elapsed().as_secs_f64();
         last_compute = compute_seconds;
+        drop(span_compute);
 
         // ---- route phase: batch per destination through the combining
         // transport batcher, folding aggregator partials as we harvest.
+        let span_route = rec.as_ref().map(|r| r.span("route", "phase"));
         let mut sent_msgs = 0u64;
         let mut sent_bytes = 0u64;
         let mut agg_partial = aggs.identity_values();
@@ -531,8 +562,10 @@ where
                 fabric.send(p, eos_frame())?;
             }
         }
+        drop(span_route);
 
         // ---- drain phase: collect batches until EOS from all peers
+        let span_drain = rec.as_ref().map(|r| r.span("drain", "phase"));
         let mut eos_seen = 0usize;
         while eos_seen < k - 1 {
             let frame = fabric.recv()?;
@@ -550,6 +583,7 @@ where
                 other => bail!("bad frame tag {other:?}"),
             }
         }
+        drop(span_drain);
 
         // ---- checkpoint phase: snapshot this worker's barrier state
         // (states after compute, halted votes, and the queues already
@@ -559,6 +593,7 @@ where
         let mut ckpt_bytes = 0u64;
         if let (Some(w), Some(ck)) = (writer, cfg.checkpoint.as_ref()) {
             if superstep % ck.every == 0 {
+                let _span_ckpt = rec.as_ref().map(|r| r.span("ckpt_write", "ckpt"));
                 let t_ck = Instant::now();
                 // Snapshot the queues in their canonical (sender-sorted)
                 // order: arrival interleaving across peers is the one
@@ -597,16 +632,22 @@ where
         // ---- sync with the manager
         let quiescent = (0..n_local)
             .all(|i| halted[i].load(Ordering::Relaxed) && inbox[i].is_empty());
+        let span_barrier = rec.as_ref().map(|r| r.span("barrier", "phase"));
         sync_tx
             .send(WorkerSync {
                 worker: me,
                 sent: sent_msgs,
+                bytes: sent_bytes,
+                compute_seconds,
                 quiescent,
                 failed: false,
                 agg: agg_partial,
             })
             .map_err(|_| anyhow::anyhow!("manager hung up"))?;
-        match cmd_rx.recv().context("manager command channel closed")? {
+        let cmd = cmd_rx.recv().context("manager command channel closed")?;
+        drop(span_barrier);
+        drop(span_step);
+        match cmd {
             ManagerCmd::Resume(globals) => {
                 agg_global = Some(globals);
                 superstep += 1;
@@ -706,6 +747,11 @@ fn run_inner<P: SubgraphProgram>(
                 let worker_resume = resume_ref.map(|rs| ckpt::worker_resume(rs, p as u32));
                 handles.push(scope.spawn(move || -> Result<WorkerOutput<P::State>> {
                     let t_load = Instant::now();
+                    // Load span on this worker's lane; the recorder is
+                    // dropped (flushed) before the superstep loop opens
+                    // its own recorder for the same tid.
+                    let load_rec = cfg.trace.recorder(p as u32 + 1);
+                    let load_span = load_rec.as_ref().map(|r| r.span("load", "load"));
                     let loaded = match source {
                         PartitionSource::InMemory(dg) => Ok((
                             dg.partitions[p].clone(),
@@ -750,6 +796,8 @@ fn run_inner<P: SubgraphProgram>(
                             let _ = sync_tx.send(WorkerSync {
                                 worker: me,
                                 sent: 0,
+                                bytes: 0,
+                                compute_seconds: 0.0,
                                 quiescent: true,
                                 failed: true,
                                 agg: Vec::new(),
@@ -758,6 +806,8 @@ fn run_inner<P: SubgraphProgram>(
                             return Err(e);
                         }
                     };
+                    drop(load_span);
+                    drop(load_rec);
                     match fab_any {
                         FabricAny::InProc(f) => worker_body(
                             program, f, cfg, aggs, subgraphs, attrs, load, directory,
@@ -798,8 +848,15 @@ fn run_inner<P: SubgraphProgram>(
             let mut superstep = base_superstep;
             let mut commit_err: Option<anyhow::Error> = None;
             let mut cancelled = false;
+            // Manager lane spans (tid 0) + cumulative counters for the
+            // live-progress publication below.
+            let mgr_rec = cfg.trace.recorder(0);
+            let mut cum_msgs = 0u64;
+            let mut cum_bytes = 0u64;
             loop {
                 let mut sent_total = 0u64;
+                let mut bytes_total = 0u64;
+                let mut computes = vec![0.0f64; k];
                 let mut all_quiescent = true;
                 let mut any_failed = false;
                 // Indexed by worker id, so the global fold order is
@@ -812,6 +869,8 @@ fn run_inner<P: SubgraphProgram>(
                     match sync_rx.recv() {
                         Ok(s) => {
                             sent_total += s.sent;
+                            bytes_total += s.bytes;
+                            computes[s.worker as usize] = s.compute_seconds;
                             all_quiescent &= s.quiescent;
                             any_failed |= s.failed;
                             partials[s.worker as usize] = s.agg;
@@ -838,6 +897,8 @@ fn run_inner<P: SubgraphProgram>(
                 // means the epoch is complete.
                 if let (Some(w), Some(ck)) = (&writer, &cfg.checkpoint) {
                     if superstep % ck.every == 0 && !any_failed {
+                        let _span_commit =
+                            mgr_rec.as_ref().map(|r| r.span("ckpt_commit", "ckpt"));
                         let coord_bytes = ckpt::encode_coordinator(
                             superstep as u64,
                             aggs.len(),
@@ -852,8 +913,16 @@ fn run_inner<P: SubgraphProgram>(
                 // observers and honor a cancellation request — workers
                 // are terminated at this barrier, so a cancelled job
                 // stops within one superstep of the request.
+                cum_msgs += sent_total;
+                cum_bytes += bytes_total;
                 if let Some(ctl) = &cfg.control {
                     ctl.publish_superstep(superstep);
+                    let straggler = SuperstepMetrics {
+                        partition_compute_seconds: computes,
+                        ..Default::default()
+                    }
+                    .straggler_ratio();
+                    ctl.publish_progress(cum_msgs, cum_bytes, straggler);
                     cancelled = ctl.is_cancelled();
                 }
                 let done = (all_quiescent && sent_total == 0)

@@ -90,6 +90,10 @@ pub struct IngestOptions {
     pub spill_buffer: usize,
     /// Seed of the online [`HashPartitioner`].
     pub seed: u64,
+    /// Span tracing (`ingest_pass0` / `ingest_pass1` on lane 0); a
+    /// disabled tracer (the default) costs one branch per pass. The
+    /// CLI enables it with `ingest --trace out.json`.
+    pub trace: crate::obs::trace::Tracer,
 }
 
 impl Default for IngestOptions {
@@ -101,6 +105,7 @@ impl Default for IngestOptions {
             directed: false,
             spill_buffer: 64 << 20,
             seed: 1,
+            trace: crate::obs::trace::Tracer::default(),
         }
     }
 }
@@ -286,8 +291,11 @@ pub fn ingest_edge_list(
     fs::create_dir_all(&tmp_dir)
         .with_context(|| format!("create {}", tmp_dir.display()))?;
 
+    let rec = opts.trace.recorder(0);
+
     // ---- Pass 0: stream lines; intern ids, union same-host
     // components, and spill (u, v, w) records per host.
+    let span_pass0 = rec.as_ref().map(|r| r.span("ingest_pass0", "ingest"));
     let mut spiller = Spiller::new(tmp_dir.clone(), k, opts.spill_buffer);
     let mut intern: HashMap<u64, u32> = HashMap::new();
     let mut dsu = GrowDsu::default();
@@ -377,6 +385,7 @@ pub fn ingest_edge_list(
     let weighted = weighted.unwrap_or(false);
     ensure!(n < u32::MAX as usize, "vertex count does not fit u32");
     spiller.flush_all()?;
+    drop(span_pass0);
 
     // ---- Assign sub-graphs exactly like `subgraph::discover`:
     // indices per partition in order of each component's smallest
@@ -403,6 +412,7 @@ pub fn ingest_edge_list(
     // ---- Pass 1: per host, concatenate its runs (arrival order) and
     // route every record to its sub-graph, then build and write the
     // partition. Only this host's edges are resident.
+    let span_pass1 = rec.as_ref().map(|r| r.span("ingest_pass1", "ingest"));
     let mut subgraph_counts = Vec::with_capacity(k as usize);
     for p in 0..k {
         let count = members[p as usize].len();
@@ -473,6 +483,9 @@ pub fn ingest_edge_list(
         write_partition_files(&store_root.join(format!("host{p}")), &sgs, opts.format)?;
         subgraph_counts.push(count as u32);
     }
+
+    drop(span_pass1);
+    drop(rec);
 
     let runs: u64 = spiller.runs.iter().map(|r| r.len() as u64).sum();
     fs::remove_dir_all(&tmp_dir)
@@ -617,6 +630,29 @@ mod tests {
         assert!(report.spills >= report.edges, "{report:?}");
         assert!(report.runs > 2, "{report:?}");
         assert_eq!(report.spilled_bytes % REC_BYTES as u64, 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn traced_ingest_records_both_passes() {
+        let dir = tmp("traced");
+        let file = dir.join("edges.tsv");
+        io::write_edge_list(&gen::chain(12), &file).unwrap();
+        let trace = crate::obs::trace::Tracer::enabled();
+        ingest_edge_list(
+            &file,
+            &dir.join("s"),
+            &IngestOptions { trace: trace.clone(), ..Default::default() },
+        )
+        .unwrap();
+        let events = trace.sink().unwrap().events();
+        let names: Vec<&str> = events.iter().map(|e| e.name).collect();
+        assert_eq!(names.iter().filter(|n| **n == "ingest_pass0").count(), 1, "{names:?}");
+        assert_eq!(names.iter().filter(|n| **n == "ingest_pass1").count(), 1, "{names:?}");
+        // Pass 0 finishes before pass 1 starts (sequential phases).
+        let p0 = events.iter().find(|e| e.name == "ingest_pass0").unwrap();
+        let p1 = events.iter().find(|e| e.name == "ingest_pass1").unwrap();
+        assert!(p0.ts_us + p0.dur_us <= p1.ts_us);
         let _ = fs::remove_dir_all(&dir);
     }
 

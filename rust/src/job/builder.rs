@@ -152,6 +152,7 @@ pub struct JobBuilder {
     incremental_from: Option<u64>,
     mmap: bool,
     dense_index: bool,
+    trace: Option<PathBuf>,
 }
 
 impl Default for JobBuilder {
@@ -176,6 +177,7 @@ impl Default for JobBuilder {
             incremental_from: None,
             mmap: true,
             dense_index: true,
+            trace: None,
         }
     }
 }
@@ -329,6 +331,21 @@ impl JobBuilder {
     /// excluded from the checkpoint label.
     pub fn dense_index(mut self, on: bool) -> Self {
         self.dense_index = on;
+        self
+    }
+
+    /// Record a structured span trace of the run ([`crate::obs::trace`])
+    /// and write it to `path` as Chrome trace-event JSON (loadable in
+    /// Perfetto / `chrome://tracing`; the CLI's `run --trace` flag).
+    /// Every worker records its load and per-superstep
+    /// compute/route/drain/barrier phases, plus checkpoint
+    /// writes/commits; [`crate::metrics::JobMetrics`] additionally gets
+    /// its `phases` breakdown populated. Not result-affecting — spans
+    /// only observe the run — so, like `mmap`/`dense_index`, it is
+    /// excluded from the checkpoint label. See `docs/OBSERVABILITY.md`
+    /// for the span taxonomy.
+    pub fn trace(mut self, path: impl Into<PathBuf>) -> Self {
+        self.trace = Some(path.into());
         self
     }
 
@@ -487,6 +504,7 @@ impl JobBuilder {
             incremental_from: self.incremental_from,
             mmap: self.mmap,
             dense_index: self.dense_index,
+            trace: self.trace,
             vertex_indexes: None,
         })
     }

@@ -48,6 +48,7 @@
 //! | `checkpoint_every` / `checkpoint_dir` / `resume_from` | ✓ | ✓ | [`JobError::CheckpointConfig`] (inconsistent knobs), [`JobError::NoCheckpoint`] / [`JobError::CheckpointMismatch`] (bad resume target) |
 //! | `incremental_from(...)` | ✓ (store-backed sources only — checked at run time) | ✗ (no sub-graph structure to scope by) | [`JobError::IncompatibleKnob`] |
 //! | `mmap(false)` / `dense_index(false)` | ✓ | ✓ | — (never result-affecting: mmap selects the store read path, dense_index the vertex-lookup mechanics) |
+//! | `trace(path)` | ✓ | ✓ | — (never result-affecting: spans only observe the run; writes a Chrome trace-event JSON timeline after it) |
 //!
 //! # Sources
 //!
@@ -179,6 +180,10 @@ pub struct Job {
     /// Dense vertex-index lookup in the compute loop (default true;
     /// see [`JobBuilder::dense_index`]).
     pub(crate) dense_index: bool,
+    /// Write a Chrome trace-event JSON span timeline of each run to
+    /// this path (see [`JobBuilder::trace`]); `None` leaves tracing
+    /// disabled (zero-cost in the superstep hot path).
+    pub(crate) trace: Option<std::path::PathBuf>,
     /// Precomputed per-partition vertex indexes shared by a resident
     /// store (see [`Job::with_vertex_indexes`]); `None` lets the
     /// engine build its own at worker init.
@@ -287,7 +292,16 @@ impl Job {
                 Some(ckpt::ResumePoint { dir: rp.dir.clone(), epoch })
             }
         };
-        match self.engine {
+        // One sink per run: spans from every worker/manager land in it,
+        // and the timeline is serialized after the run completes. A
+        // disabled tracer is `None` all the way down — the engines then
+        // skip every span at the cost of one branch each.
+        let tracer = if self.trace.is_some() {
+            crate::obs::trace::Tracer::enabled()
+        } else {
+            crate::obs::trace::Tracer::default()
+        };
+        let out = match self.engine {
             EngineKind::Gopher => {
                 let cfg = GopherConfig {
                     cores_per_worker: self.cores,
@@ -306,6 +320,7 @@ impl Job {
                     mmap: self.mmap,
                     dense_index: self.dense_index,
                     vertex_indexes: self.vertex_indexes.clone(),
+                    trace: tracer.clone(),
                     ..Default::default()
                 };
                 let run = self.entry.gopher.expect("validated at build time");
@@ -333,6 +348,7 @@ impl Job {
                     fail_at: self.fail_at,
                     control: self.control.clone(),
                     dense_index: self.dense_index,
+                    trace: tracer.clone(),
                     ..Default::default()
                 };
                 let run = self.entry.vertex.expect("validated at build time");
@@ -361,7 +377,13 @@ impl Job {
                     }
                 }
             }
+        };
+        let mut out = out?;
+        if let Some(path) = &self.trace {
+            tracer.write_file(path)?;
+            out.metrics.phases = tracer.phase_totals();
         }
+        Ok(out)
     }
 }
 
@@ -501,6 +523,99 @@ mod tests {
         assert!(out.values.is_empty());
         assert!(out.metrics.supersteps.is_empty());
         let _ = std::fs::remove_dir_all(&root);
+    }
+
+    /// E2E trace validity: a traced run writes a Chrome trace-event
+    /// file that (a) re-parses under the strict `serve::json` parser,
+    /// (b) carries exactly `num_supersteps()` superstep spans per
+    /// worker lane, (c) nests every phase span inside a same-lane
+    /// superstep span, and (d) keeps each lane's per-superstep phase
+    /// sums within the enclosing superstep span's duration.
+    #[test]
+    fn traced_run_writes_a_valid_chrome_trace() {
+        use crate::serve::json::JsonValue;
+
+        let g = gen::road(12, 0.9, 0.02, 11);
+        let part = MultilevelPartitioner::default();
+        let dir = std::env::temp_dir()
+            .join("goffish_job_tests")
+            .join(format!("trace_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        let partitions = 2usize;
+        let out = Job::builder()
+            .algo("cc")
+            .trace(&path)
+            .build()
+            .unwrap()
+            .run(JobSource::Graph { graph: &g, partitioner: &part, partitions })
+            .unwrap();
+        let n_ss = out.metrics.num_supersteps();
+        assert!(n_ss > 0);
+        // The report gained its per-phase breakdown.
+        assert!(out.metrics.phases.is_some());
+        assert!(out.metrics.report("cc").contains("phases["), "{}", out.metrics.report("cc"));
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = JsonValue::parse(&text).unwrap();
+        let rows = v.get("traceEvents").unwrap().as_array().unwrap();
+        assert!(!rows.is_empty());
+        // Decode (tid, name, ts, dur) tuples once.
+        let ev: Vec<(u32, String, f64, f64)> = rows
+            .iter()
+            .map(|r| {
+                (
+                    r.get("tid").unwrap().as_f64().unwrap() as u32,
+                    r.get("name").unwrap().as_str().unwrap().to_string(),
+                    r.get("ts").unwrap().as_f64().unwrap(),
+                    r.get("dur").unwrap().as_f64().unwrap(),
+                )
+            })
+            .collect();
+        for p in 0..partitions as u32 {
+            let lane = p + 1;
+            // One load span and exactly num_supersteps superstep spans
+            // per worker lane.
+            assert_eq!(
+                ev.iter().filter(|e| e.0 == lane && e.1 == "load").count(),
+                1
+            );
+            let steps: Vec<_> = ev
+                .iter()
+                .filter(|e| e.0 == lane && e.1 == "superstep")
+                .collect();
+            assert_eq!(steps.len(), n_ss, "lane {lane}");
+            // Every phase span on this lane nests inside some superstep
+            // span on the same lane.
+            for phase in ev.iter().filter(|e| {
+                e.0 == lane
+                    && matches!(e.1.as_str(), "compute" | "route" | "drain" | "barrier")
+            }) {
+                assert!(
+                    steps.iter().any(|s| phase.2 >= s.2 && phase.2 + phase.3 <= s.2 + s.3),
+                    "phase {:?} not nested in any superstep span on lane {lane}",
+                    phase
+                );
+            }
+            // Per-lane phase sums never exceed the lane's superstep walls.
+            let phase_sum: f64 = ev
+                .iter()
+                .filter(|e| {
+                    e.0 == lane
+                        && matches!(e.1.as_str(), "compute" | "route" | "drain" | "barrier")
+                })
+                .map(|e| e.3)
+                .sum();
+            let step_sum: f64 = steps.iter().map(|s| s.3).sum();
+            // +n_ss: each span duration truncates to whole microseconds,
+            // so each superstep can under-report by <1us vs its phases.
+            assert!(
+                phase_sum <= step_sum + n_ss as f64,
+                "lane {lane}: phases {phase_sum}us > supersteps {step_sum}us"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

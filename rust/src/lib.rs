@@ -52,6 +52,7 @@ pub mod serve;
 pub mod sim;
 #[allow(missing_docs)]
 pub mod metrics;
+pub mod obs;
 #[allow(missing_docs)]
 pub mod bench;
 #[allow(missing_docs)]

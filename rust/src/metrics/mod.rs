@@ -40,10 +40,12 @@ impl SuperstepMetrics {
     }
 
     /// The straggler ratio the paper's §6.5 discusses: slowest partition
-    /// compute time / next-slowest.
+    /// compute time / next-slowest. Uses IEEE total order so a NaN
+    /// partition time (a worker whose clock produced garbage) sorts
+    /// deterministically instead of panicking the metrics path.
     pub fn straggler_ratio(&self) -> f64 {
         let mut t = self.partition_compute_seconds.clone();
-        t.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        t.sort_by(|a, b| b.total_cmp(a));
         if t.len() < 2 || t[1] == 0.0 {
             return 1.0;
         }
@@ -97,6 +99,11 @@ pub struct JobMetrics {
     /// Per-superstep global aggregator values (coordinator layer), one
     /// trace per aggregator the program registered.
     pub aggregators: Vec<AggregatorTrace>,
+    /// In-superstep phase totals (compute/route/drain/barrier seconds
+    /// summed over all workers and supersteps), populated only when the
+    /// job ran with tracing (`Job::builder().trace(path)`); see
+    /// [`crate::obs::trace::PhaseTotals`].
+    pub phases: Option<crate::obs::trace::PhaseTotals>,
 }
 
 impl JobMetrics {
@@ -160,6 +167,12 @@ impl JobMetrics {
                 self.checkpoint_bytes(),
             ));
         }
+        if let Some(p) = &self.phases {
+            line.push_str(&format!(
+                " phases[compute={:.4}s route={:.4}s drain={:.4}s barrier={:.4}s]",
+                p.compute_seconds, p.route_seconds, p.drain_seconds, p.barrier_seconds,
+            ));
+        }
         line
     }
 }
@@ -221,6 +234,24 @@ mod tests {
         assert_eq!(single.straggler_ratio(), 1.0);
     }
 
+    /// Regression: a NaN partition time used to panic the
+    /// `partial_cmp().unwrap()` sort; IEEE total order sorts NaN above
+    /// every finite value, so the result is finite-or-NaN, never a
+    /// panic.
+    #[test]
+    fn straggler_ratio_survives_nan_times() {
+        let s = ss(&[0.1, f64::NAN, 0.2], 0);
+        let r = s.straggler_ratio();
+        // total_cmp puts the NaN first (descending), so the ratio is
+        // NaN/0.2 = NaN — garbage in, garbage out, but no panic.
+        assert!(r.is_nan(), "{r}");
+        let all_nan = ss(&[f64::NAN, f64::NAN], 0);
+        assert!(all_nan.straggler_ratio().is_nan());
+        // Finite inputs are unaffected by the sort change.
+        let s = ss(&[0.4, 0.1, 0.2], 0);
+        assert!((s.straggler_ratio() - 2.0).abs() < 1e-9);
+    }
+
     #[test]
     fn partition_summary_present() {
         let s = ss(&[0.25, 0.5], 0);
@@ -237,6 +268,24 @@ mod tests {
         assert!(r.contains("supersteps=0"));
         // No checkpointing → no ckpt clause.
         assert!(!r.contains("ckpt["));
+    }
+
+    #[test]
+    fn report_breaks_down_phases_when_traced() {
+        let m = JobMetrics {
+            phases: Some(crate::obs::trace::PhaseTotals {
+                compute_seconds: 0.5,
+                route_seconds: 0.25,
+                drain_seconds: 0.125,
+                barrier_seconds: 0.0625,
+            }),
+            ..Default::default()
+        };
+        let r = m.report("cc");
+        assert!(r.contains("phases[compute=0.5000s"), "{r}");
+        assert!(r.contains("barrier=0.0625s]"), "{r}");
+        // Untraced jobs keep the old line shape.
+        assert!(!JobMetrics::default().report("cc").contains("phases["));
     }
 
     #[test]

@@ -1,0 +1,33 @@
+//! Observability: structured tracing and live metrics exposition.
+//!
+//! The paper's entire evaluation (Fig 4a–c, Fig 5, §6.5's straggler
+//! analysis) is built on per-superstep, per-partition timing and
+//! message accounting. [`crate::metrics::JobMetrics`] captures all of
+//! it — but only after the job ends, as an in-memory struct. This
+//! module is the live half, in two dependency-free pieces:
+//!
+//! * [`trace`] — per-job span recording. Both engines open spans for
+//!   load, each superstep's compute/route/drain/barrier phases per
+//!   worker, and checkpoint write/commit; the ingest pipeline spans its
+//!   two passes. A [`trace::TraceSink`] serializes everything to Chrome
+//!   trace-event JSON (one `{"traceEvents":[...]}` file loadable in
+//!   Perfetto / `chrome://tracing`), rendered with the crate's own
+//!   [`crate::serve::json::JsonValue`] writer. Enabled per job via
+//!   `Job::builder().trace(path)` / CLI `run --trace out.json`; when
+//!   disabled (the default) the hot path pays one `Option` branch and
+//!   zero allocations.
+//! * [`registry`] — a process-wide registry of named counters, gauges,
+//!   and fixed-bucket histograms with Prometheus text exposition. The
+//!   serve layer registers HTTP request/latency/rejection/eviction
+//!   series and per-job engine progress (live superstep, cumulative
+//!   messages/bytes, straggler ratio — published by the engine managers
+//!   through [`crate::coordinator::RunControl`] at every barrier), and
+//!   serves it all at `GET /v1/metrics?format=prometheus`.
+//!
+//! Neither half is ever result-affecting: tracing and metrics are
+//! observation-only knobs, excluded from the checkpoint label exactly
+//! like `mmap`/`dense_index`. Naming conventions, the span taxonomy,
+//! and scrape examples live in `docs/OBSERVABILITY.md`.
+
+pub mod registry;
+pub mod trace;

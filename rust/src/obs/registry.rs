@@ -1,0 +1,391 @@
+//! Process-wide metric registry with Prometheus text exposition.
+//!
+//! Dependency-free and deliberately small: named **counters**,
+//! **gauges**, and **fixed-bucket histograms**, each series keyed by a
+//! label set. The registry renders the Prometheus text format
+//! (`# HELP` / `# TYPE` + samples) that standard scrapers ingest —
+//! the serve layer exposes it at `GET /v1/metrics?format=prometheus`.
+//!
+//! Design points:
+//!
+//! * **Byte-stable exposition.** Families live in a `BTreeMap` keyed
+//!   by metric name and series in a `BTreeMap` keyed by their rendered
+//!   label set, so two scrapes of the same state produce identical
+//!   bytes — the golden test below pins the exact format.
+//! * **Register-on-first-touch.** [`Registry::counter_add`] & friends
+//!   carry the help text; the first call for a name creates the family.
+//!   Updating a name with the wrong kind is ignored (never panics on
+//!   the serve path).
+//! * **Const-constructible.** [`global`] hands out a `'static` registry
+//!   backed by `static Registry` (const `Mutex` + `BTreeMap`), so the
+//!   HTTP layer needs no init hook. Tests that want isolation build
+//!   their own `Registry::new()`.
+//!
+//! Naming conventions (see `docs/OBSERVABILITY.md` for the full list):
+//! everything is prefixed `goffish_`, counters end in `_total`,
+//! histograms carry base-unit `_seconds`, and label cardinality is
+//! bounded (HTTP paths are normalized route patterns, never raw URLs).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Fixed latency buckets (seconds) for HTTP request histograms: spans
+/// sub-millisecond cache hits to multi-second resident-job queries.
+pub const LATENCY_BUCKETS: &[f64] = &[0.001, 0.005, 0.025, 0.1, 0.5, 2.5];
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl Kind {
+    fn name(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Series {
+    Counter(u64),
+    Gauge(f64),
+    Histogram { bounds: &'static [f64], counts: Vec<u64>, sum: f64, count: u64 },
+}
+
+struct Family {
+    help: &'static str,
+    kind: Kind,
+    /// Rendered label set (`k1="v1",k2="v2"`, insertion-key sorted by
+    /// the BTreeMap) → series.
+    series: BTreeMap<String, Series>,
+}
+
+/// A metric registry; see the module docs. Use [`global`] for the
+/// process-wide instance.
+pub struct Registry {
+    inner: Mutex<BTreeMap<&'static str, Family>>,
+}
+
+static GLOBAL: Registry = Registry::new();
+
+/// The process-wide registry every layer registers into.
+pub fn global() -> &'static Registry {
+    &GLOBAL
+}
+
+/// Render one label set as it appears inside `{}`. Values are escaped
+/// per the exposition format (`\\`, `\"`, `\n`).
+fn label_set(labels: &[(&str, &str)]) -> String {
+    let mut out = String::new();
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(k);
+        out.push_str("=\"");
+        for c in v.chars() {
+            match c {
+                '\\' => out.push_str("\\\\"),
+                '"' => out.push_str("\\\""),
+                '\n' => out.push_str("\\n"),
+                c => out.push(c),
+            }
+        }
+        out.push('"');
+    }
+    out
+}
+
+/// `f64` → exposition text: integral values drop the fraction, `+Inf`
+/// spells the histogram's last bucket bound.
+fn num(v: f64) -> String {
+    if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else {
+        v.to_string()
+    }
+}
+
+impl Registry {
+    /// An empty registry (const: usable in `static`s).
+    pub const fn new() -> Registry {
+        Registry { inner: Mutex::new(BTreeMap::new()) }
+    }
+
+    fn update(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        kind: Kind,
+        labels: &[(&str, &str)],
+        f: impl FnOnce(&mut Series),
+        init: impl FnOnce() -> Series,
+    ) {
+        let mut inner = self.inner.lock().expect("metric registry lock");
+        let fam = inner
+            .entry(name)
+            .or_insert_with(|| Family { help, kind, series: BTreeMap::new() });
+        if fam.kind != kind {
+            // A name re-registered with a different kind is a caller
+            // bug, but the serve path must never panic over telemetry:
+            // the update is dropped and the original family stands.
+            return;
+        }
+        let series = fam.series.entry(label_set(labels)).or_insert_with(init);
+        f(series);
+    }
+
+    /// Add to a counter (creating it at 0 first).
+    pub fn counter_add(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: &[(&str, &str)],
+        v: u64,
+    ) {
+        self.update(
+            name,
+            help,
+            Kind::Counter,
+            labels,
+            |s| {
+                if let Series::Counter(c) = s {
+                    *c += v;
+                }
+            },
+            || Series::Counter(0),
+        );
+    }
+
+    /// Set a counter to an absolute cumulative value — for series whose
+    /// source already accumulates (e.g. per-job message totals read
+    /// from the engine at scrape time).
+    pub fn counter_set(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: &[(&str, &str)],
+        v: u64,
+    ) {
+        self.update(
+            name,
+            help,
+            Kind::Counter,
+            labels,
+            |s| {
+                if let Series::Counter(c) = s {
+                    *c = v;
+                }
+            },
+            || Series::Counter(0),
+        );
+    }
+
+    /// Set a gauge.
+    pub fn gauge_set(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: &[(&str, &str)],
+        v: f64,
+    ) {
+        self.update(
+            name,
+            help,
+            Kind::Gauge,
+            labels,
+            |s| {
+                if let Series::Gauge(g) = s {
+                    *g = v;
+                }
+            },
+            || Series::Gauge(0.0),
+        );
+    }
+
+    /// Record one observation into a fixed-bucket histogram. `bounds`
+    /// must be ascending; an implicit `+Inf` bucket is always appended.
+    /// The bounds of the *first* observation for a series win.
+    pub fn observe(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: &[(&str, &str)],
+        bounds: &'static [f64],
+        v: f64,
+    ) {
+        self.update(
+            name,
+            help,
+            Kind::Histogram,
+            labels,
+            |s| {
+                if let Series::Histogram { bounds, counts, sum, count } = s {
+                    for (i, b) in bounds.iter().enumerate() {
+                        if v <= *b {
+                            counts[i] += 1;
+                        }
+                    }
+                    *counts.last_mut().expect("+Inf bucket") += 1;
+                    *sum += v;
+                    *count += 1;
+                }
+            },
+            || Series::Histogram {
+                bounds,
+                counts: vec![0; bounds.len() + 1],
+                sum: 0.0,
+                count: 0,
+            },
+        );
+    }
+
+    /// Render the Prometheus text exposition format (version 0.0.4).
+    pub fn render_prometheus(&self) -> String {
+        let inner = self.inner.lock().expect("metric registry lock");
+        let mut out = String::new();
+        for (name, fam) in inner.iter() {
+            out.push_str(&format!("# HELP {name} {}\n", fam.help));
+            out.push_str(&format!("# TYPE {name} {}\n", fam.kind.name()));
+            for (labels, series) in &fam.series {
+                match series {
+                    Series::Counter(c) => {
+                        if labels.is_empty() {
+                            out.push_str(&format!("{name} {c}\n"));
+                        } else {
+                            out.push_str(&format!("{name}{{{labels}}} {c}\n"));
+                        }
+                    }
+                    Series::Gauge(g) => {
+                        if labels.is_empty() {
+                            out.push_str(&format!("{name} {}\n", num(*g)));
+                        } else {
+                            out.push_str(&format!("{name}{{{labels}}} {}\n", num(*g)));
+                        }
+                    }
+                    Series::Histogram { bounds, counts, sum, count } => {
+                        for (i, c) in counts.iter().enumerate() {
+                            let le = bounds.get(i).copied().unwrap_or(f64::INFINITY);
+                            let sep = if labels.is_empty() { "" } else { "," };
+                            out.push_str(&format!(
+                                "{name}_bucket{{{labels}{sep}le=\"{}\"}} {c}\n",
+                                num(le)
+                            ));
+                        }
+                        if labels.is_empty() {
+                            out.push_str(&format!("{name}_sum {}\n", num(*sum)));
+                            out.push_str(&format!("{name}_count {count}\n"));
+                        } else {
+                            out.push_str(&format!("{name}_sum{{{labels}}} {}\n", num(*sum)));
+                            out.push_str(&format!("{name}_count{{{labels}}} {count}\n"));
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Registry {
+        Registry::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The golden test the issue asks for: exact text-format bytes for
+    /// a fixed registry.
+    #[test]
+    fn prometheus_exposition_golden_bytes() {
+        let r = Registry::new();
+        r.counter_add(
+            "goffish_http_requests_total",
+            "HTTP requests served.",
+            &[("method", "GET"), ("path", "/v1/jobs"), ("status", "200")],
+            3,
+        );
+        r.counter_add(
+            "goffish_http_requests_total",
+            "HTTP requests served.",
+            &[("method", "GET"), ("path", "/v1/jobs"), ("status", "200")],
+            2,
+        );
+        r.gauge_set("goffish_jobs", "Jobs by state.", &[("state", "running")], 2.0);
+        r.observe(
+            "goffish_http_request_seconds",
+            "Request latency.",
+            &[],
+            &[0.001, 0.01],
+            0.005,
+        );
+        let expected = "\
+# HELP goffish_http_request_seconds Request latency.
+# TYPE goffish_http_request_seconds histogram
+goffish_http_request_seconds_bucket{le=\"0.001\"} 0
+goffish_http_request_seconds_bucket{le=\"0.01\"} 1
+goffish_http_request_seconds_bucket{le=\"+Inf\"} 1
+goffish_http_request_seconds_sum 0.005
+goffish_http_request_seconds_count 1
+# HELP goffish_http_requests_total HTTP requests served.
+# TYPE goffish_http_requests_total counter
+goffish_http_requests_total{method=\"GET\",path=\"/v1/jobs\",status=\"200\"} 5
+# HELP goffish_jobs Jobs by state.
+# TYPE goffish_jobs gauge
+goffish_jobs{state=\"running\"} 2
+";
+        assert_eq!(r.render_prometheus(), expected);
+        // Byte-stable: a second render is identical.
+        assert_eq!(r.render_prometheus(), expected);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative() {
+        let r = Registry::new();
+        let b: &'static [f64] = &[0.1, 1.0];
+        for v in [0.05, 0.5, 5.0] {
+            r.observe("h_seconds", "h", &[("path", "/x")], b, v);
+        }
+        let text = r.render_prometheus();
+        assert!(text.contains("h_seconds_bucket{path=\"/x\",le=\"0.1\"} 1\n"), "{text}");
+        assert!(text.contains("h_seconds_bucket{path=\"/x\",le=\"1\"} 2\n"), "{text}");
+        assert!(text.contains("h_seconds_bucket{path=\"/x\",le=\"+Inf\"} 3\n"), "{text}");
+        assert!(text.contains("h_seconds_count{path=\"/x\"} 3\n"), "{text}");
+    }
+
+    #[test]
+    fn counter_set_and_label_escaping() {
+        let r = Registry::new();
+        r.counter_set("jobs_msgs_total", "m", &[("job", "1")], 42);
+        r.counter_set("jobs_msgs_total", "m", &[("job", "1")], 99);
+        r.gauge_set("g", "g", &[("k", "a\"b\\c\nd")], 1.0);
+        let text = r.render_prometheus();
+        assert!(text.contains("jobs_msgs_total{job=\"1\"} 99\n"), "{text}");
+        assert!(text.contains("g{k=\"a\\\"b\\\\c\\nd\"} 1\n"), "{text}");
+    }
+
+    #[test]
+    fn kind_conflicts_are_ignored_not_fatal() {
+        let r = Registry::new();
+        r.counter_add("x_total", "x", &[], 1);
+        // Re-registering the name as a gauge is dropped, not fatal.
+        r.gauge_set("x_total", "x", &[], 5.0);
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE x_total counter\n"), "{text}");
+        assert!(text.contains("x_total 1\n"), "{text}");
+    }
+
+    #[test]
+    fn global_registry_is_shared() {
+        global().counter_add("obs_registry_selftest_total", "self-test", &[], 1);
+        assert!(global().render_prometheus().contains("obs_registry_selftest_total"));
+    }
+}

@@ -1,0 +1,347 @@
+//! Span tracing with Chrome trace-event JSON output.
+//!
+//! The design keeps the disabled path free: a [`Tracer`] is an
+//! `Option<Arc<TraceSink>>`, engine call sites hold an
+//! `Option<Recorder>`, and every span open is
+//! `rec.as_ref().map(|r| r.span(...))` — one branch, no allocation,
+//! no clock read when tracing is off (the `trace_overhead` bench rows
+//! pin this). When tracing is on:
+//!
+//! * Each thread (engine worker or manager) gets its own [`Recorder`]
+//!   from [`Tracer::recorder`], buffering events locally so workers
+//!   never contend on a lock inside a superstep; the buffer drains into
+//!   the shared sink when the recorder drops (or on explicit
+//!   [`Recorder::flush`]).
+//! * [`SpanGuard`] is RAII over a monotonic [`Instant`]: opening a span
+//!   stamps the start, dropping it appends one complete (`"ph":"X"`)
+//!   event. Span names and categories are `&'static str` and the
+//!   optional argument is a fixed `(key, f64)` pair, so recording a
+//!   span allocates nothing.
+//! * [`TraceSink::to_json`] renders the standard Chrome trace-event
+//!   object — load the file in Perfetto (<https://ui.perfetto.dev>) or
+//!   `chrome://tracing`. Nesting is implicit: spans on the same `tid`
+//!   whose `[ts, ts+dur]` ranges contain one another render as a stack.
+//!
+//! The span taxonomy (who opens what, on which tid) is documented in
+//! `docs/OBSERVABILITY.md`.
+
+use std::cell::RefCell;
+use std::fmt;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::serve::json::JsonValue;
+
+/// One completed span: a Chrome trace-event `"ph":"X"` record.
+#[derive(Clone, Debug)]
+pub struct Event {
+    /// Span name (`"compute"`, `"superstep"`, …).
+    pub name: &'static str,
+    /// Category (`"phase"`, `"load"`, `"ckpt"`, `"ingest"`, …).
+    pub cat: &'static str,
+    /// Thread lane: 0 = manager, worker `p` records on `p + 1`.
+    pub tid: u32,
+    /// Microseconds since the sink's origin.
+    pub ts_us: u64,
+    /// Span duration in microseconds.
+    pub dur_us: u64,
+    /// Optional fixed argument (rendered under `"args"`).
+    pub arg: Option<(&'static str, f64)>,
+}
+
+/// Totals of the four in-superstep phases across all workers, summed
+/// from a trace. Attached to [`crate::metrics::JobMetrics::phases`]
+/// when a job ran with tracing, so `report()` can break a superstep
+/// wall down into where the time actually went.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseTotals {
+    /// Σ `compute` span seconds (all workers, all supersteps).
+    pub compute_seconds: f64,
+    /// Σ `route` span seconds.
+    pub route_seconds: f64,
+    /// Σ `drain` span seconds.
+    pub drain_seconds: f64,
+    /// Σ `barrier` span seconds (sync send through resume receive).
+    pub barrier_seconds: f64,
+}
+
+/// The per-job event collector every [`Recorder`] drains into.
+pub struct TraceSink {
+    origin: Instant,
+    events: Mutex<Vec<Event>>,
+}
+
+impl TraceSink {
+    fn new() -> TraceSink {
+        TraceSink { origin: Instant::now(), events: Mutex::new(Vec::new()) }
+    }
+
+    fn absorb(&self, mut buf: Vec<Event>) {
+        self.events.lock().expect("trace sink lock").append(&mut buf);
+    }
+
+    /// Snapshot of every recorded event, in flush order.
+    pub fn events(&self) -> Vec<Event> {
+        self.events.lock().expect("trace sink lock").clone()
+    }
+
+    /// Sum phase-span durations by name (see [`PhaseTotals`]).
+    pub fn phase_totals(&self) -> PhaseTotals {
+        let mut t = PhaseTotals::default();
+        for e in self.events.lock().expect("trace sink lock").iter() {
+            let secs = e.dur_us as f64 / 1e6;
+            match e.name {
+                "compute" => t.compute_seconds += secs,
+                "route" => t.route_seconds += secs,
+                "drain" => t.drain_seconds += secs,
+                "barrier" => t.barrier_seconds += secs,
+                _ => {}
+            }
+        }
+        t
+    }
+
+    /// Render the Chrome trace-event object: `{"traceEvents":[...]}`.
+    /// Events are sorted by `(tid, ts)` so output is deterministic for
+    /// a given set of recorded spans.
+    pub fn to_json(&self) -> JsonValue {
+        let mut events = self.events();
+        events.sort_by(|a, b| (a.tid, a.ts_us, a.dur_us).cmp(&(b.tid, b.ts_us, b.dur_us)));
+        let rows = events
+            .iter()
+            .map(|e| {
+                let mut fields = vec![
+                    ("name".to_string(), JsonValue::Str(e.name.to_string())),
+                    ("cat".to_string(), JsonValue::Str(e.cat.to_string())),
+                    ("ph".to_string(), JsonValue::Str("X".to_string())),
+                    ("ts".to_string(), JsonValue::Num(e.ts_us as f64)),
+                    ("dur".to_string(), JsonValue::Num(e.dur_us as f64)),
+                    ("pid".to_string(), JsonValue::Num(1.0)),
+                    ("tid".to_string(), JsonValue::Num(f64::from(e.tid))),
+                ];
+                if let Some((k, v)) = e.arg {
+                    fields.push((
+                        "args".to_string(),
+                        JsonValue::Obj(vec![(k.to_string(), JsonValue::Num(v))]),
+                    ));
+                }
+                JsonValue::Obj(fields)
+            })
+            .collect();
+        JsonValue::Obj(vec![("traceEvents".to_string(), JsonValue::Arr(rows))])
+    }
+
+    /// Write the trace file (see [`TraceSink::to_json`]).
+    pub fn write_file(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().render())
+            .with_context(|| format!("write trace to {}", path.display()))
+    }
+}
+
+/// A per-job tracing handle: `Default` is disabled (a no-op that costs
+/// one branch per would-be span); [`Tracer::enabled`] allocates the
+/// shared [`TraceSink`]. Cloning shares the sink, so engine configs can
+/// carry it by value.
+#[derive(Clone, Default)]
+pub struct Tracer(Option<Arc<TraceSink>>);
+
+impl fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(if self.0.is_some() { "Tracer(on)" } else { "Tracer(off)" })
+    }
+}
+
+impl Tracer {
+    /// A tracer with a live sink.
+    pub fn enabled() -> Tracer {
+        Tracer(Some(Arc::new(TraceSink::new())))
+    }
+
+    /// Whether spans are being recorded.
+    pub fn is_enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// A thread-local recorder on lane `tid`, or `None` when disabled —
+    /// call sites keep the `Option` and never touch the clock when off.
+    pub fn recorder(&self, tid: u32) -> Option<Recorder> {
+        self.0.as_ref().map(|sink| Recorder {
+            sink: sink.clone(),
+            tid,
+            buf: RefCell::new(Vec::new()),
+        })
+    }
+
+    /// The shared sink, when enabled.
+    pub fn sink(&self) -> Option<&Arc<TraceSink>> {
+        self.0.as_ref()
+    }
+
+    /// Phase totals recorded so far (`None` when disabled).
+    pub fn phase_totals(&self) -> Option<PhaseTotals> {
+        self.0.as_ref().map(|s| s.phase_totals())
+    }
+
+    /// Write the Chrome-trace file; a no-op when disabled.
+    pub fn write_file(&self, path: &Path) -> Result<()> {
+        match &self.0 {
+            Some(sink) => sink.write_file(path),
+            None => Ok(()),
+        }
+    }
+}
+
+/// One thread's event buffer. Spans open with [`Recorder::span`] /
+/// [`Recorder::span_n`]; completed spans accumulate locally and drain
+/// into the sink on drop or [`Recorder::flush`].
+pub struct Recorder {
+    sink: Arc<TraceSink>,
+    tid: u32,
+    buf: RefCell<Vec<Event>>,
+}
+
+impl Recorder {
+    /// Open a span; it closes (records) when the guard drops.
+    pub fn span<'a>(&'a self, name: &'static str, cat: &'static str) -> SpanGuard<'a> {
+        SpanGuard { rec: self, name, cat, start: Instant::now(), arg: None }
+    }
+
+    /// Open a span carrying one numeric argument (e.g. the superstep
+    /// number).
+    pub fn span_n<'a>(
+        &'a self,
+        name: &'static str,
+        cat: &'static str,
+        key: &'static str,
+        value: f64,
+    ) -> SpanGuard<'a> {
+        SpanGuard { rec: self, name, cat, start: Instant::now(), arg: Some((key, value)) }
+    }
+
+    /// Drain buffered events into the sink now (drop does this too).
+    pub fn flush(&self) {
+        let buf = std::mem::take(&mut *self.buf.borrow_mut());
+        if !buf.is_empty() {
+            self.sink.absorb(buf);
+        }
+    }
+
+    fn record(&self, name: &'static str, cat: &'static str, start: Instant, arg: Option<(&'static str, f64)>) {
+        let ts_us = start.saturating_duration_since(self.sink.origin).as_micros() as u64;
+        let dur_us = start.elapsed().as_micros() as u64;
+        self.buf.borrow_mut().push(Event { name, cat, tid: self.tid, ts_us, dur_us, arg });
+    }
+}
+
+impl Drop for Recorder {
+    fn drop(&mut self) {
+        let buf = std::mem::take(self.buf.get_mut());
+        if !buf.is_empty() {
+            self.sink.absorb(buf);
+        }
+    }
+}
+
+/// RAII span: created by [`Recorder::span`], records one complete
+/// trace event when dropped.
+pub struct SpanGuard<'a> {
+    rec: &'a Recorder,
+    name: &'static str,
+    cat: &'static str,
+    start: Instant,
+    arg: Option<(&'static str, f64)>,
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        self.rec.record(self.name, self.cat, self.start, self.arg);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_hands_out_no_recorders() {
+        let t = Tracer::default();
+        assert!(!t.is_enabled());
+        assert!(t.recorder(0).is_none());
+        assert!(t.sink().is_none());
+        assert!(t.phase_totals().is_none());
+        // The engine idiom: one Option branch, nothing else.
+        let rec = t.recorder(1);
+        let _g = rec.as_ref().map(|r| r.span("compute", "phase"));
+    }
+
+    #[test]
+    fn spans_nest_and_flush_into_the_sink() {
+        let t = Tracer::enabled();
+        {
+            let rec = t.recorder(1).unwrap();
+            let ss = rec.span_n("superstep", "superstep", "superstep", 1.0);
+            {
+                let _c = rec.span("compute", "phase");
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            {
+                let _r = rec.span("route", "phase");
+            }
+            drop(ss);
+        } // recorder drop flushes
+        let sink = t.sink().unwrap();
+        let events = sink.events();
+        assert_eq!(events.len(), 3);
+        let ss = events.iter().find(|e| e.name == "superstep").unwrap();
+        let compute = events.iter().find(|e| e.name == "compute").unwrap();
+        assert_eq!(ss.arg, Some(("superstep", 1.0)));
+        // The phase span nests inside the superstep span.
+        assert!(compute.ts_us >= ss.ts_us);
+        assert!(compute.ts_us + compute.dur_us <= ss.ts_us + ss.dur_us);
+        // Phase totals sum only the four phase names, and stay within
+        // the enclosing superstep wall.
+        let totals = sink.phase_totals();
+        assert!(totals.compute_seconds > 0.0);
+        assert_eq!(totals.barrier_seconds, 0.0);
+        let phase_sum = totals.compute_seconds + totals.route_seconds;
+        assert!(phase_sum <= ss.dur_us as f64 / 1e6 + 1e-9);
+    }
+
+    #[test]
+    fn to_json_round_trips_through_the_strict_parser() {
+        let t = Tracer::enabled();
+        {
+            let rec = t.recorder(0).unwrap();
+            let _g = rec.span("ckpt_commit", "ckpt");
+        }
+        let text = t.sink().unwrap().to_json().render();
+        let v = JsonValue::parse(&text).unwrap();
+        let rows = v.get("traceEvents").unwrap().as_array().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("name").unwrap().as_str(), Some("ckpt_commit"));
+        assert_eq!(rows[0].get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(rows[0].get("pid").unwrap().as_f64(), Some(1.0));
+        assert_eq!(rows[0].get("tid").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn json_output_is_deterministically_ordered() {
+        let t = Tracer::enabled();
+        // Record on two lanes in interleaved order.
+        let r2 = t.recorder(2).unwrap();
+        let r1 = t.recorder(1).unwrap();
+        drop(r2.span("drain", "phase"));
+        drop(r1.span("compute", "phase"));
+        r2.flush();
+        r1.flush();
+        let json = t.sink().unwrap().to_json().render();
+        // Sorted by tid: lane 1 renders before lane 2 regardless of
+        // flush order.
+        let i1 = json.find("\"tid\":1").unwrap();
+        let i2 = json.find("\"tid\":2").unwrap();
+        assert!(i1 < i2, "{json}");
+    }
+}

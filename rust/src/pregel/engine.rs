@@ -65,6 +65,12 @@ pub struct PregelConfig {
     /// (default true); `false` forces the sorted fallback. Results are
     /// identical either way — pinned by the engine parity tests.
     pub dense_index: bool,
+    /// Span tracing ([`crate::obs::trace`]): same taxonomy as the
+    /// matching knob on `gopher::GopherConfig` — per-worker load (here:
+    /// index build + state init) and compute/route/drain/barrier phase
+    /// spans, manager-side checkpoint commits. Disabled by default and
+    /// never result-affecting.
+    pub trace: crate::obs::trace::Tracer,
 }
 
 impl Default for PregelConfig {
@@ -79,6 +85,7 @@ impl Default for PregelConfig {
             fail_at: None,
             control: None,
             dense_index: true,
+            trace: crate::obs::trace::Tracer::default(),
         }
     }
 }
@@ -128,6 +135,11 @@ fn decode_batch<M: MsgCodec>(bytes: &[u8]) -> Result<(u32, Vec<(VertexId, M)>)> 
 struct WorkerSync {
     worker: u32,
     sent: u64,
+    /// Encoded bytes put on the fabric this superstep.
+    bytes: u64,
+    /// Wall clock of this worker's compute phase (manager publishes a
+    /// live straggler ratio through `RunControl`).
+    compute_seconds: f64,
     quiescent: bool,
     /// Worker failed: manager must abort the job after this superstep.
     failed: bool,
@@ -201,6 +213,8 @@ where
             let _ = sync_tx.send(WorkerSync {
                 worker: me,
                 sent: 0,
+                bytes: 0,
+                compute_seconds: 0.0,
                 quiescent: true,
                 failed: true,
                 agg: Vec::new(),
@@ -232,6 +246,15 @@ where
     let me = fabric.id();
     let k = fabric.num_workers();
     let n_local = my_vertices.len();
+
+    // Span recorder for this worker's lane (tid = worker id + 1; tid 0
+    // is the manager). `None` when tracing is disabled — every would-be
+    // span below then costs one `Option` branch and nothing else.
+    let rec = cfg.trace.recorder(me + 1);
+    // The vertex engine has no storage load; its per-worker setup cost
+    // (index build + state init / snapshot decode) is the analogous
+    // span so traces from both engines share one taxonomy.
+    let load_span = rec.as_ref().map(|r| r.span("load", "load"));
 
     // Global id -> local index: the vertex-centric engine pays this
     // lookup once per delivered message, so it gets the same compact
@@ -284,6 +307,7 @@ where
     let values: Vec<Mutex<P::Value>> = init_values.into_iter().map(Mutex::new).collect();
     let halted: Vec<AtomicBool> = init_halted.into_iter().map(AtomicBool::new).collect();
     let mut inbox: Vec<Vec<InboxEntry<P::Msg>>> = init_inbox;
+    drop(load_span);
 
     let mut per_superstep = Vec::new();
     let mut superstep = start_superstep;
@@ -305,6 +329,11 @@ where
             }
         }
         let t_step = Instant::now();
+        // Superstep span stays open through the barrier so the phase
+        // spans below nest inside it (see gopher::engine).
+        let span_step = rec
+            .as_ref()
+            .map(|r| r.span_n("superstep", "superstep", "superstep", superstep as f64));
         // Deliveries of the previous superstep, stably sorted by sending
         // worker (see `encode_batch`): deterministic replay.
         let queued: Vec<Vec<InboxEntry<P::Msg>>> =
@@ -339,6 +368,7 @@ where
         let chunk_out: Vec<Mutex<ChunkOut<P::Msg>>> = (0..n_chunks)
             .map(|_| Mutex::new((Vec::new(), Vec::new())))
             .collect();
+        let span_compute = rec.as_ref().map(|r| r.span("compute", "phase"));
         let t0 = Instant::now();
         let unit_times = pool::run_indexed(cores_now, n_chunks, |c| {
             let lo = (c * chunk_size).min(active.len());
@@ -359,8 +389,10 @@ where
         })?;
         let compute_seconds = t0.elapsed().as_secs_f64();
         last_compute = compute_seconds;
+        drop(span_compute);
 
         // ---- route phase (folding aggregator partials as we harvest)
+        let span_route = rec.as_ref().map(|r| r.span("route", "phase"));
         let mut sent_msgs = 0u64;
         let mut sent_bytes = 0u64;
         let mut agg_partial = aggs.identity_values();
@@ -416,8 +448,10 @@ where
                 fabric.send(p, vec![TAG_EOS])?;
             }
         }
+        drop(span_route);
 
         // ---- drain phase
+        let span_drain = rec.as_ref().map(|r| r.span("drain", "phase"));
         let mut eos_seen = 0usize;
         while eos_seen < k - 1 {
             let frame = fabric.recv()?;
@@ -434,6 +468,7 @@ where
                 other => bail!("bad frame tag {other:?}"),
             }
         }
+        drop(span_drain);
 
         // ---- checkpoint phase (mirrors gopher::engine: snapshot before
         // sync; the manager commits once every worker synced cleanly).
@@ -441,6 +476,7 @@ where
         let mut ckpt_bytes = 0u64;
         if let (Some(w), Some(ck)) = (writer, cfg.checkpoint.as_ref()) {
             if superstep % ck.every == 0 {
+                let _span_ckpt = rec.as_ref().map(|r| r.span("ckpt_write", "ckpt"));
                 let t_ck = Instant::now();
                 // Sender-sort the queues before encoding so identical
                 // runs write identical snapshot bytes (see
@@ -475,16 +511,22 @@ where
 
         let quiescent = (0..n_local)
             .all(|i| halted[i].load(Ordering::Relaxed) && inbox[i].is_empty());
+        let span_barrier = rec.as_ref().map(|r| r.span("barrier", "phase"));
         sync_tx
             .send(WorkerSync {
                 worker: me,
                 sent: sent_msgs,
+                bytes: sent_bytes,
+                compute_seconds,
                 quiescent,
                 failed: false,
                 agg: agg_partial,
             })
             .map_err(|_| anyhow::anyhow!("manager hung up"))?;
-        match cmd_rx.recv().context("manager command channel closed")? {
+        let cmd = cmd_rx.recv().context("manager command channel closed")?;
+        drop(span_barrier);
+        drop(span_step);
+        match cmd {
             ManagerCmd::Resume(globals) => {
                 agg_global = Some(globals);
                 superstep += 1;
@@ -603,8 +645,15 @@ pub fn run<P: VertexProgram>(
             let mut superstep = base_superstep;
             let mut commit_err: Option<anyhow::Error> = None;
             let mut cancelled = false;
+            // Manager lane spans (tid 0) + cumulative counters for the
+            // live-progress publication below.
+            let mgr_rec = cfg.trace.recorder(0);
+            let mut cum_msgs = 0u64;
+            let mut cum_bytes = 0u64;
             loop {
                 let mut sent_total = 0u64;
+                let mut bytes_total = 0u64;
+                let mut computes = vec![0.0f64; k];
                 let mut all_quiescent = true;
                 let mut any_failed = false;
                 // Worker-indexed partials: fold order independent of
@@ -615,6 +664,8 @@ pub fn run<P: VertexProgram>(
                     match sync_rx.recv() {
                         Ok(s) => {
                             sent_total += s.sent;
+                            bytes_total += s.bytes;
+                            computes[s.worker as usize] = s.compute_seconds;
                             all_quiescent &= s.quiescent;
                             any_failed |= s.failed;
                             partials[s.worker as usize] = s.agg;
@@ -637,6 +688,8 @@ pub fn run<P: VertexProgram>(
                 // Barrier-synchronous epoch commit (see gopher::engine).
                 if let (Some(w), Some(ck)) = (&writer, &cfg.checkpoint) {
                     if superstep % ck.every == 0 && !any_failed {
+                        let _span_commit =
+                            mgr_rec.as_ref().map(|r| r.span("ckpt_commit", "ckpt"));
                         let coord_bytes = ckpt::encode_coordinator(
                             superstep as u64,
                             aggs.len(),
@@ -651,8 +704,16 @@ pub fn run<P: VertexProgram>(
                 // observers and honor a cancellation request — workers
                 // are terminated at this barrier, so a cancelled job
                 // stops within one superstep of the request.
+                cum_msgs += sent_total;
+                cum_bytes += bytes_total;
                 if let Some(ctl) = &cfg.control {
                     ctl.publish_superstep(superstep);
+                    let straggler = SuperstepMetrics {
+                        partition_compute_seconds: computes,
+                        ..Default::default()
+                    }
+                    .straggler_ratio();
+                    ctl.publish_progress(cum_msgs, cum_bytes, straggler);
                     cancelled = ctl.is_cancelled();
                 }
                 let done = (all_quiescent && sent_total == 0)

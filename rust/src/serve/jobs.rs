@@ -303,6 +303,12 @@ impl Jobs {
                     metrics: Box::new(out.metrics.clone()),
                     num_values: out.values.len(),
                 };
+                crate::obs::registry::global().counter_add(
+                    "goffish_result_evictions_total",
+                    "Job results dropped by --keep-results retention (410 thereafter).",
+                    &[],
+                    1,
+                );
             }
         }
     }
@@ -334,6 +340,12 @@ impl Jobs {
         };
         if refused {
             self.inner.lock().expect("jobs lock").map.remove(&entry.id);
+            crate::obs::registry::global().counter_add(
+                "goffish_admission_rejections_total",
+                "Job submissions refused with 503 because the admission queue was full.",
+                &[],
+                1,
+            );
             return Err(SubmitError::QueueFull);
         }
         Ok(entry)

@@ -63,10 +63,10 @@
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -85,6 +85,8 @@ const IO_TIMEOUT: Duration = Duration::from_secs(30);
 
 const JSON_CT: &str = "application/json";
 const TSV_CT: &str = "text/tab-separated-values";
+/// Prometheus text exposition format (what standard scrapers accept).
+const PROM_CT: &str = "text/plain; version=0.0.4; charset=utf-8";
 
 /// One loaded snapshot of a GoFS store: a store handle pinned to the
 /// generation it opened, the in-memory [`DistributedGraph`] built from
@@ -204,11 +206,21 @@ pub struct ServeOptions {
     /// `done`, metrics stay queryable, `GET .../results` turns 410).
     /// `None` keeps everything until shutdown.
     pub keep_results: Option<usize>,
+    /// Print one access-log line per request to stdout
+    /// (`method path status micros req=<id>`); `serve --access-log`.
+    pub access_log: bool,
 }
 
 impl Default for ServeOptions {
     fn default() -> ServeOptions {
-        ServeOptions { port: 8080, workers: 2, queue: 16, cores: 4, keep_results: None }
+        ServeOptions {
+            port: 8080,
+            workers: 2,
+            queue: 16,
+            cores: 4,
+            keep_results: None,
+            access_log: false,
+        }
     }
 }
 
@@ -217,6 +229,7 @@ struct Ctx {
     jobs: Arc<Jobs>,
     resident: Arc<ResidentGraph>,
     default_cores: usize,
+    access_log: bool,
 }
 
 /// A running job server. Construct with [`Server::start`]; stop with
@@ -259,6 +272,7 @@ impl Server {
             jobs: jobs.clone(),
             resident,
             default_cores: opts.cores.max(1),
+            access_log: opts.access_log,
         });
         let accept = {
             let stop = stop.clone();
@@ -314,17 +328,76 @@ fn accept_loop(listener: &TcpListener, stop: &AtomicBool, ctx: &Arc<Ctx>) {
     }
 }
 
+/// Process-wide request ids for access-log correlation (monotonic,
+/// never reset — ids stay unique across the server's lifetime).
+static NEXT_REQUEST_ID: AtomicU64 = AtomicU64::new(1);
+
 fn handle_connection(stream: &TcpStream, ctx: &Ctx) {
     let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
     let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let request_id = NEXT_REQUEST_ID.fetch_add(1, Ordering::Relaxed);
+    let start = Instant::now();
     let mut reader = BufReader::new(stream);
-    let (status, ctype, body) = match http::read_request(&mut reader) {
-        Ok(Some(req)) => route(&req, ctx),
+    let (method, path, reply) = match http::read_request(&mut reader) {
+        Ok(Some(req)) => {
+            let reply = route(&req, ctx);
+            (req.method, req.path, reply)
+        }
         Ok(None) => return, // peer closed without sending a request
-        Err(e) => error(400, &format!("{e:#}")),
+        Err(e) => ("-".to_string(), "-".to_string(), error(400, &format!("{e:#}"))),
     };
+    let (status, ctype, body) = reply;
     let mut w = stream;
     let _ = http::write_response(&mut w, status, ctype, &body);
+    let micros = start.elapsed().as_micros() as u64;
+    record_request(&method, &path, status, micros);
+    if ctx.access_log {
+        println!("[access] {method} {path} {status} {micros}us req={request_id}");
+    }
+}
+
+/// Collapse a raw request path onto the fixed endpoint table so metric
+/// label cardinality stays bounded no matter what clients send.
+fn route_pattern(path: &str) -> &'static str {
+    let segs: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
+    match segs.as_slice() {
+        ["v1", "healthz"] => "/v1/healthz",
+        ["v1", "graphs"] => "/v1/graphs",
+        ["v1", "graphs", _, "refresh"] => "/v1/graphs/{name}/refresh",
+        ["v1", "metrics"] => "/v1/metrics",
+        ["v1", "jobs"] => "/v1/jobs",
+        ["v1", "jobs", _] => "/v1/jobs/{id}",
+        ["v1", "jobs", _, "results"] => "/v1/jobs/{id}/results",
+        _ => "other",
+    }
+}
+
+/// Register one served request into the process-wide metric registry:
+/// a `{method, route, status}` counter and a per-route latency
+/// histogram (see `docs/OBSERVABILITY.md` for the naming conventions).
+fn record_request(method: &str, path: &str, status: u16, micros: u64) {
+    let reg = crate::obs::registry::global();
+    let method = match method {
+        "GET" => "GET",
+        "POST" => "POST",
+        "DELETE" => "DELETE",
+        _ => "other",
+    };
+    let route = route_pattern(path);
+    let status = status.to_string();
+    reg.counter_add(
+        "goffish_http_requests_total",
+        "HTTP requests served, by method, route pattern, and status.",
+        &[("method", method), ("route", route), ("status", &status)],
+        1,
+    );
+    reg.observe(
+        "goffish_http_request_seconds",
+        "HTTP request wall time from first byte read to last byte written.",
+        &[("route", route)],
+        crate::obs::registry::LATENCY_BUCKETS,
+        micros as f64 / 1e6,
+    );
 }
 
 type Reply = (u16, &'static str, Vec<u8>);
@@ -351,10 +424,16 @@ fn route(req: &Request, ctx: &Ctx) -> Reply {
             json_ok(200, JsonValue::Arr(vec![graph_json(&ctx.resident.snapshot())]))
         }
         ("POST", ["v1", "graphs", name, "refresh"]) => refresh_graph(ctx, name),
-        ("GET", ["v1", "metrics"]) => {
-            let list = ctx.jobs.list().iter().map(|e| metrics_json(e)).collect();
-            json_ok(200, JsonValue::Arr(list))
-        }
+        ("GET", ["v1", "metrics"]) => match req.query_get("format") {
+            None | Some("json") => {
+                let list = ctx.jobs.list().iter().map(|e| metrics_json(e)).collect();
+                json_ok(200, JsonValue::Arr(list))
+            }
+            Some("prometheus") => metrics_prometheus(ctx),
+            Some(f) => {
+                error(400, &format!("unknown format {f:?} (expected json or prometheus)"))
+            }
+        },
         ("GET", ["v1", "jobs"]) => {
             let list = ctx.jobs.list().iter().map(|e| job_json(e)).collect();
             json_ok(200, JsonValue::Arr(list))
@@ -527,6 +606,84 @@ fn job_results(req: &Request, ctx: &Ctx, id: u64) -> Reply {
     }
 }
 
+/// `GET /v1/metrics?format=prometheus`: refresh the scrape-time gauges
+/// from live server state (jobs by state, resident generation, one
+/// series per job with live progress for running jobs), then render
+/// the whole process registry — HTTP counters included — as the
+/// Prometheus text format.
+fn metrics_prometheus(ctx: &Ctx) -> Reply {
+    let reg = crate::obs::registry::global();
+    let snap = ctx.resident.snapshot();
+    let graph = snap.store().meta().name.clone();
+    reg.gauge_set(
+        "goffish_graph_generation",
+        "Store generation the resident graph snapshot is pinned to.",
+        &[("graph", &graph)],
+        snap.store().meta().generation as f64,
+    );
+    // Jobs by state: every state is always exposed (zeros included) so
+    // the series set — and hence the exposition shape — is scrape-stable.
+    let mut by_state =
+        [("queued", 0u64), ("running", 0), ("done", 0), ("failed", 0), ("cancelled", 0)];
+    for e in ctx.jobs.list() {
+        let st = e.state.lock().expect("job state lock");
+        let name = st.name();
+        for slot in by_state.iter_mut() {
+            if slot.0 == name {
+                slot.1 += 1;
+            }
+        }
+        let id = e.id.to_string();
+        let labels = [("algo", e.spec.algo.as_str()), ("job", id.as_str())];
+        reg.gauge_set(
+            "goffish_job_superstep",
+            "Superstep the engine manager last published (live while running).",
+            &labels,
+            e.control.superstep() as f64,
+        );
+        // Finished jobs report their final totals; queued/running jobs
+        // report what the manager has published so far.
+        let (messages, bytes) = match &*st {
+            JobState::Done(out) => {
+                (out.metrics.total_messages(), out.metrics.total_bytes())
+            }
+            JobState::Evicted { metrics, .. } => {
+                (metrics.total_messages(), metrics.total_bytes())
+            }
+            _ => (e.control.messages(), e.control.bytes()),
+        };
+        reg.counter_set(
+            "goffish_job_messages_total",
+            "Messages the job has sent across all supersteps so far.",
+            &labels,
+            messages,
+        );
+        reg.counter_set(
+            "goffish_job_bytes_total",
+            "Encoded message bytes the job has sent so far.",
+            &labels,
+            bytes,
+        );
+        if matches!(&*st, JobState::Running) {
+            reg.gauge_set(
+                "goffish_job_straggler_ratio",
+                "Live slowest/median compute-time ratio of the running job's last superstep.",
+                &labels,
+                e.control.straggler_ratio(),
+            );
+        }
+    }
+    for (state, n) in by_state {
+        reg.gauge_set(
+            "goffish_jobs",
+            "Jobs registered on this server, by state.",
+            &[("state", state)],
+            n as f64,
+        );
+    }
+    (200, PROM_CT, reg.render_prometheus().into_bytes())
+}
+
 fn job_json(e: &JobEntry) -> JsonValue {
     let st = e.state.lock().expect("job state lock");
     let mut fields = vec![
@@ -563,6 +720,17 @@ fn job_json(e: &JobEntry) -> JsonValue {
         }
         JobState::Failed(msg) => {
             fields.push(("error", JsonValue::Str(msg.clone())));
+        }
+        JobState::Running => {
+            // Live progress, as last published by the engine manager at
+            // a superstep barrier (superstep itself is always present
+            // above; these only make sense mid-run).
+            fields.push(("messages", JsonValue::Num(e.control.messages() as f64)));
+            fields.push(("bytes", JsonValue::Num(e.control.bytes() as f64)));
+            fields.push((
+                "straggler_ratio",
+                JsonValue::Num(e.control.straggler_ratio()),
+            ));
         }
         _ => {}
     }
@@ -662,6 +830,7 @@ mod tests {
             jobs: Arc::new(jobs),
             resident: Arc::new(resident),
             default_cores: 2,
+            access_log: false,
         };
         (ctx, rx)
     }
@@ -778,6 +947,80 @@ mod tests {
         // GET on the refresh path is a method error, not an unknown path.
         let (st, _, _) = route(&get("/v1/graphs/tiny/refresh"), &ctx);
         assert_eq!(st, 405);
+    }
+
+    #[test]
+    fn prometheus_exposition_matches_json_metrics() {
+        let (ctx, _rx) = test_ctx("prom_parity");
+        let post = Request {
+            method: "POST".to_string(),
+            path: "/v1/jobs".to_string(),
+            query: Vec::new(),
+            body: b"{\"algo\":\"cc\"}".to_vec(),
+        };
+        let (st, _, body) = route(&post, &ctx);
+        assert_eq!(st, 202);
+        let v = JsonValue::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        let id = v.get("id").unwrap().as_f64().unwrap() as u64;
+
+        // Force a finished job with known totals (2 supersteps,
+        // 5 + 2 messages, 80 + 32 bytes), values already evicted.
+        let entry = ctx.jobs.get(id).unwrap();
+        let mut metrics = crate::metrics::JobMetrics::default();
+        for (m, b) in [(5u64, 80u64), (2, 32)] {
+            metrics.supersteps.push(crate::metrics::SuperstepMetrics {
+                messages: m,
+                bytes: b,
+                ..Default::default()
+            });
+        }
+        *entry.state.lock().unwrap() =
+            JobState::Evicted { metrics: Box::new(metrics), num_values: 8 };
+
+        // The JSON report for the same job.
+        let (st, ct, body) = route(&get("/v1/metrics"), &ctx);
+        assert_eq!((st, ct), (200, JSON_CT));
+        let v = JsonValue::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        let m = &v.as_array().unwrap()[0];
+        let json_msgs = m.get("messages").unwrap().as_f64().unwrap();
+        let json_bytes = m.get("bytes").unwrap().as_f64().unwrap();
+        assert_eq!((json_msgs, json_bytes), (7.0, 112.0));
+
+        // The prometheus exposition must agree, value for value.
+        let mut prom = get("/v1/metrics");
+        prom.query.push(("format".to_string(), "prometheus".to_string()));
+        let (st, ct, body) = route(&prom, &ctx);
+        assert_eq!((st, ct), (200, PROM_CT));
+        let text = String::from_utf8(body).unwrap();
+        let labels = format!("{{algo=\"cc\",job=\"{id}\"}}");
+        assert!(
+            text.contains(&format!("goffish_job_messages_total{labels} {json_msgs}")),
+            "{text}"
+        );
+        assert!(
+            text.contains(&format!("goffish_job_bytes_total{labels} {json_bytes}")),
+            "{text}"
+        );
+        assert!(text.contains(&format!("goffish_job_superstep{labels} 0")), "{text}");
+        assert!(text.contains("goffish_jobs{state=\"done\"} 1"), "{text}");
+        assert!(text.contains("goffish_graph_generation{graph=\"tiny\"} 0"), "{text}");
+
+        // Unknown formats are 400s, and the default stays JSON (the CI
+        // smoke greps `"supersteps"` out of the default response).
+        let mut bad = get("/v1/metrics");
+        bad.query.push(("format".to_string(), "xml".to_string()));
+        let (st, _, _) = route(&bad, &ctx);
+        assert_eq!(st, 400);
+    }
+
+    #[test]
+    fn route_patterns_bound_label_cardinality() {
+        assert_eq!(route_pattern("/v1/jobs/17"), "/v1/jobs/{id}");
+        assert_eq!(route_pattern("/v1/jobs/17/results"), "/v1/jobs/{id}/results");
+        assert_eq!(route_pattern("/v1/graphs/tiny/refresh"), "/v1/graphs/{name}/refresh");
+        assert_eq!(route_pattern("/v1/metrics"), "/v1/metrics");
+        assert_eq!(route_pattern("/anything/else"), "other");
+        assert_eq!(route_pattern("-"), "other");
     }
 
     #[test]
