@@ -48,7 +48,7 @@ use std::sync::Arc;
 /// straggler ratio (§6.5: slowest partition compute / next-slowest) —
 /// the live series `GET /v1/metrics?format=prometheus` exposes per
 /// running job.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct RunControl {
     cancel: Arc<AtomicBool>,
     superstep: Arc<AtomicUsize>,
@@ -57,6 +57,21 @@ pub struct RunControl {
     /// Straggler ratio of the last completed superstep, stored as
     /// `f64::to_bits` (atomics carry no floats).
     straggler: Arc<AtomicU64>,
+}
+
+impl Default for RunControl {
+    fn default() -> RunControl {
+        RunControl {
+            cancel: Arc::default(),
+            superstep: Arc::default(),
+            messages: Arc::default(),
+            bytes: Arc::default(),
+            // Seed with 1.0 ("nobody has straggled yet") so readers need
+            // no zero-bits sentinel — which would also be the bit pattern
+            // of a legitimately published 0.0.
+            straggler: Arc::new(AtomicU64::new(1.0f64.to_bits())),
+        }
+    }
 }
 
 impl RunControl {
@@ -109,12 +124,7 @@ impl RunControl {
     /// Observer-side: straggler ratio of the last completed superstep
     /// (`1.0` before the first barrier: nobody has straggled yet).
     pub fn straggler_ratio(&self) -> f64 {
-        let bits = self.straggler.load(Ordering::Relaxed);
-        if bits == 0 {
-            1.0
-        } else {
-            f64::from_bits(bits)
-        }
+        f64::from_bits(self.straggler.load(Ordering::Relaxed))
     }
 }
 

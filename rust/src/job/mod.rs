@@ -608,8 +608,10 @@ mod tests {
                 .map(|e| e.3)
                 .sum();
             let step_sum: f64 = steps.iter().map(|s| s.3).sum();
-            // +n_ss: each span duration truncates to whole microseconds,
-            // so each superstep can under-report by <1us vs its phases.
+            // Span endpoints are floored to whole microseconds against a
+            // common origin, so nested phase durations telescope and the
+            // bound holds exactly; keep +n_ss slack anyway so a future
+            // change in rounding can't make this flaky.
             assert!(
                 phase_sum <= step_sum + n_ss as f64,
                 "lane {lane}: phases {phase_sum}us > supersteps {step_sum}us"

@@ -230,8 +230,15 @@ impl Recorder {
     }
 
     fn record(&self, name: &'static str, cat: &'static str, start: Instant, arg: Option<(&'static str, f64)>) {
+        // Floor both endpoints against the sink origin and derive the
+        // duration from the floored pair, so the rendered end
+        // (`ts + dur`) is exactly the floored end time. Flooring the
+        // start and the duration independently would let a child span
+        // that closes nanoseconds before its parent render an end 1us
+        // *past* the parent's, breaking nesting in the output.
         let ts_us = start.saturating_duration_since(self.sink.origin).as_micros() as u64;
-        let dur_us = start.elapsed().as_micros() as u64;
+        let end_us = self.sink.origin.elapsed().as_micros() as u64;
+        let dur_us = end_us.saturating_sub(ts_us);
         self.buf.borrow_mut().push(Event { name, cat, tid: self.tid, ts_us, dur_us, arg });
     }
 }

@@ -664,14 +664,25 @@ fn metrics_prometheus(ctx: &Ctx) -> Reply {
             &labels,
             bytes,
         );
-        if matches!(&*st, JobState::Running) {
-            reg.gauge_set(
-                "goffish_job_straggler_ratio",
-                "Live slowest/median compute-time ratio of the running job's last superstep.",
-                &labels,
-                e.control.straggler_ratio(),
-            );
-        }
+        // Straggler ratio of the last completed superstep: live from the
+        // barrier publication while running, the final superstep's value
+        // once the job ends — always set, so the series never freezes on
+        // a stale mid-run reading after the state leaves Running.
+        let straggler = match &*st {
+            JobState::Done(out) => {
+                out.metrics.supersteps.last().map_or(1.0, |s| s.straggler_ratio())
+            }
+            JobState::Evicted { metrics, .. } => {
+                metrics.supersteps.last().map_or(1.0, |s| s.straggler_ratio())
+            }
+            _ => e.control.straggler_ratio(),
+        };
+        reg.gauge_set(
+            "goffish_job_straggler_ratio",
+            "Slowest/next-slowest compute-time ratio of the job's last completed superstep.",
+            &labels,
+            straggler,
+        );
     }
     for (state, n) in by_state {
         reg.gauge_set(
