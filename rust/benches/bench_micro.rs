@@ -187,14 +187,22 @@ fn main() {
             every: 1,
             dir: ckpt_dir.clone(),
             label: "pagerank/gopher".into(),
+            mode: goffish::ckpt::CheckpointMode::Sync,
+            compress: false,
         }),
         ..Default::default()
     };
+    // Barrier stall = the slowest worker's in-barrier checkpoint work,
+    // summed over epochs (`JobMetrics::checkpoint_seconds`). Min over
+    // reps: stall is pure added latency, so the least-noisy rep is the
+    // honest one.
+    let mut stall_sync = f64::INFINITY;
     let (w, r) = reps(1, 3);
     let m = measure(w, r, || {
         let prog = PageRankSg { supersteps: 5, kernel: RankKernel::Scalar, epsilon: None };
         let res = run(&ljdg, &prog, &ckpt_cfg).unwrap();
         assert_eq!(res.metrics.checkpoints.len(), 5);
+        stall_sync = stall_sync.min(res.metrics.checkpoint_seconds());
     });
     let ckpt_per_ss = m.median / 5.0;
     // Clamp in BOTH reports: on a noisy box the checkpointed median can
@@ -212,6 +220,39 @@ fn main() {
     ]);
     json.emit("LJ", "checkpointed_superstep_seconds", ckpt_per_ss);
     json.emit("LJ", "checkpoint_overhead", overhead);
+
+    // Async double-buffering: same run, but the barrier pays only for
+    // the snapshot encode — the flusher thread persists the epoch while
+    // the next superstep computes. CI asserts async stall < sync stall.
+    let ckpt_async_cfg = GopherConfig {
+        checkpoint: Some(goffish::ckpt::CheckpointConfig {
+            every: 1,
+            dir: ckpt_dir.clone(),
+            label: "pagerank/gopher".into(),
+            mode: goffish::ckpt::CheckpointMode::Async,
+            compress: false,
+        }),
+        ..Default::default()
+    };
+    let mut stall_async = f64::INFINITY;
+    let (w, r) = reps(1, 3);
+    let m_async = measure(w, r, || {
+        let prog = PageRankSg { supersteps: 5, kernel: RankKernel::Scalar, epsilon: None };
+        let res = run(&ljdg, &prog, &ckpt_async_cfg).unwrap();
+        assert_eq!(res.metrics.checkpoints.len(), 5);
+        stall_async = stall_async.min(res.metrics.checkpoint_seconds());
+    });
+    t.row(&[
+        "pagerank 5 ss LJ + async ckpt every 1".into(),
+        fmt_secs(m_async.median),
+        format!(
+            "barrier stall {} vs {} sync",
+            fmt_secs(stall_async),
+            fmt_secs(stall_sync),
+        ),
+    ]);
+    json.emit("LJ", "checkpoint_stall_sync_seconds", stall_sync);
+    json.emit("LJ", "checkpoint_stall_async_seconds", stall_async);
     let _ = std::fs::remove_dir_all(&ckpt_dir);
 
     // Streaming-ingest throughput: the RN analog written out as a TSV

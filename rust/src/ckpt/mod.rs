@@ -18,6 +18,50 @@
 //! each worker's snapshot write is a `ckpt_write` span on its lane and
 //! the manager's manifest commit a `ckpt_commit` span on lane 0.
 //!
+//! # Sync vs async persistence
+//!
+//! [`CheckpointMode`] picks *when* the bytes hit disk. `Sync` is the
+//! PR 4 behaviour: each worker writes (and fsyncs) its snapshot inside
+//! the barrier, and the manager commits before broadcasting resume —
+//! the write stalls every checkpointed superstep. `Async`
+//! double-buffers instead: the worker only *encodes* its snapshot at
+//! the barrier (a `ckpt_buffer` span — the whole remaining stall) and
+//! hands the bytes to a background [`CheckpointFlusher`] thread that
+//! persists them (`ckpt_flush` spans on its own trace lane) while the
+//! next superstep computes; the manager enqueues the epoch commit on
+//! the same channel. Because every worker enqueues its snapshot
+//! *before* syncing and the manager enqueues the commit only *after*
+//! all syncs, the single-consumer FIFO guarantees all partition writes
+//! land before their commit — the torn-write rule of the manifest is
+//! preserved. Flush errors surface at the next barrier (or at the
+//! run's end, which joins the flusher). Either mode writes the same
+//! bytes: the mode is not part of the job label, so a sync-written
+//! checkpoint resumes under async and vice versa.
+//!
+//! # Sender-side message logs and confined recovery
+//!
+//! Alongside its snapshot, each worker persists a *send log*
+//! (`sendlog_p.ckpt`): every batch frame it put on the fabric during
+//! the checkpointed superstep (self-deliveries included), tagged with
+//! the destination worker. Logs make **confined recovery** possible: a
+//! resume with [`ResumePoint::confined`] restarts only the dead worker
+//! from its snapshot and rebuilds its in-flight inbox by replaying the
+//! epoch's frames destined to it from *all* senders' logs — instead of
+//! trusting the dead worker's own snapshot queues, which a real
+//! cluster loses with the worker's memory. Deterministic replay
+//! (sender-sorted inboxes, per-sender FIFO fabrics) makes the rebuilt
+//! inbox byte-identical to the uninterrupted run's. The manager
+//! records *which* worker died in a `FAILED_WORKER` marker next to the
+//! manifest; confined resume requires it.
+//!
+//! # Compression
+//!
+//! With [`CheckpointConfig::compress`] every section body is packed
+//! with a byte-oriented run-length scheme before framing and the file
+//! carries [`VERSION_COMPRESSED`]. Checksums cover the packed bodies,
+//! so `store verify` scrubs compressed checkpoints unchanged; readers
+//! accept both versions.
+//!
 //! # On-disk layout
 //!
 //! The files reuse the GoFS v2 sectioned framing ([`crate::gofs::section`]):
@@ -69,20 +113,26 @@ use crate::util::codec::{Decoder, Encoder};
 
 /// Checkpoint file magic ("GoFFish ChecKpoint").
 pub const MAGIC: &[u8; 4] = b"GFCK";
-/// Checkpoint format version byte.
+/// Checkpoint format version byte (plain section bodies).
 pub const VERSION: u8 = 1;
+/// Checkpoint format version byte for files whose section bodies are
+/// run-length packed ([`CheckpointConfig::compress`]). Section
+/// checksums cover the packed bodies, so scrubbing is version-blind.
+pub const VERSION_COMPRESSED: u8 = 2;
 /// Committed epochs retained per directory (older ones are pruned at
 /// commit; 2 = latest + the fallback for a rotted latest).
 pub const KEEP_EPOCHS: usize = 2;
 
 const KIND_PARTITION: u8 = 0;
 const KIND_COORD: u8 = 1;
+const KIND_SENDLOG: u8 = 2;
 
 const SEC_META: u8 = 0;
 const SEC_STATES: u8 = 1;
 const SEC_HALTED: u8 = 2;
 const SEC_INBOX: u8 = 3;
 const SEC_AGG_HISTORY: u8 = 4;
+const SEC_SENDLOG: u8 = 5;
 
 fn section_name(id: u8) -> &'static str {
     match id {
@@ -91,11 +141,186 @@ fn section_name(id: u8) -> &'static str {
         SEC_HALTED => "halted",
         SEC_INBOX => "inbox",
         SEC_AGG_HISTORY => "agg_history",
+        SEC_SENDLOG => "sendlog",
         _ => "unknown",
     }
 }
 
+// ----------------------------------------------- section body compression
+//
+// A dependency-free PackBits-style byte RLE: checkpoint columns (halted
+// flags, zero-heavy little-endian floats, varint runs) are full of
+// repeated bytes, and the scheme never expands a body by more than
+// 1/128 plus the length prefix. Token stream after a varint raw length:
+// `0x00..=0x7F` = literal run of `c + 1` bytes follows; `0x80..=0xFF` =
+// the next byte repeated `(c - 0x80) + 3` times.
+
+fn rle_flush_literals(out: &mut Vec<u8>, mut lit: &[u8]) {
+    while !lit.is_empty() {
+        let take = lit.len().min(128);
+        out.push((take - 1) as u8);
+        out.extend_from_slice(&lit[..take]);
+        lit = &lit[take..];
+    }
+}
+
+fn rle_compress(raw: &[u8]) -> Vec<u8> {
+    let mut e = Encoder::with_capacity(raw.len() / 2 + 8);
+    e.put_varint(raw.len() as u64);
+    let mut out = e.into_bytes();
+    let n = raw.len();
+    let mut i = 0usize;
+    let mut lit = 0usize;
+    while i < n {
+        let mut j = i + 1;
+        while j < n && raw[j] == raw[i] && j - i < 130 {
+            j += 1;
+        }
+        if j - i >= 3 {
+            rle_flush_literals(&mut out, &raw[lit..i]);
+            out.push(0x80 + (j - i - 3) as u8);
+            out.push(raw[i]);
+            lit = j;
+        }
+        i = j;
+    }
+    rle_flush_literals(&mut out, &raw[lit..n]);
+    out
+}
+
+fn rle_decompress(packed: &[u8]) -> Result<Vec<u8>> {
+    let mut pos = 0usize;
+    let mut raw_len: u64 = 0;
+    let mut shift = 0u32;
+    loop {
+        let Some(&b) = packed.get(pos) else {
+            bail!("run-length body: truncated length prefix");
+        };
+        pos += 1;
+        raw_len |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            break;
+        }
+        shift += 7;
+        ensure!(shift < 64, "run-length body: length prefix overflows");
+    }
+    let raw_len = raw_len as usize;
+    // A crafted length cannot force a huge allocation: every token
+    // yields bounded output, so the token stream caps the capacity.
+    let mut out =
+        Vec::with_capacity(raw_len.min((packed.len() - pos).saturating_mul(130)));
+    while pos < packed.len() {
+        let c = packed[pos];
+        pos += 1;
+        if c < 0x80 {
+            let take = c as usize + 1;
+            ensure!(
+                pos + take <= packed.len(),
+                "run-length body: truncated literal run"
+            );
+            out.extend_from_slice(&packed[pos..pos + take]);
+            pos += take;
+        } else {
+            ensure!(pos < packed.len(), "run-length body: truncated repeat run");
+            out.resize(out.len() + (c as usize - 0x80) + 3, packed[pos]);
+            pos += 1;
+        }
+    }
+    ensure!(
+        out.len() == raw_len,
+        "run-length body decodes to {} bytes, header says {raw_len}",
+        out.len()
+    );
+    Ok(out)
+}
+
+/// Frame section bodies, packing them first when `compress` is set (the
+/// file then carries [`VERSION_COMPRESSED`] so readers know to unpack).
+fn frame_sections(kind: u8, sections: &[(u8, Vec<u8>)], compress: bool) -> Vec<u8> {
+    if !compress {
+        return section::frame(MAGIC, VERSION, kind, sections);
+    }
+    let packed: Vec<(u8, Vec<u8>)> =
+        sections.iter().map(|(id, body)| (*id, rle_compress(body))).collect();
+    section::frame(MAGIC, VERSION_COMPRESSED, kind, &packed)
+}
+
+/// The version byte a checkpoint file claims (both accepted versions
+/// map to themselves; anything else is left for `unframe` to reject
+/// with its own error message).
+fn claimed_version(bytes: &[u8]) -> u8 {
+    match bytes.get(4) {
+        Some(&VERSION_COMPRESSED) => VERSION_COMPRESSED,
+        _ => VERSION,
+    }
+}
+
+/// A checkpoint file's section table plus whether bodies need
+/// unpacking. `get` hides the difference from the decode paths.
+struct CkptSections<'a> {
+    table: section::SectionTable<'a>,
+    compressed: bool,
+}
+
+impl CkptSections<'_> {
+    fn get(&self, id: u8) -> Result<std::borrow::Cow<'_, [u8]>> {
+        let body = self.table.get(id)?;
+        if self.compressed {
+            Ok(std::borrow::Cow::Owned(rle_decompress(body).with_context(
+                || format!("unpack section `{}`", section_name(id)),
+            )?))
+        } else {
+            Ok(std::borrow::Cow::Borrowed(body))
+        }
+    }
+}
+
+fn open_sections<'a>(
+    bytes: &'a [u8],
+    kind: u8,
+    what: &'static str,
+) -> Result<CkptSections<'a>> {
+    let version = claimed_version(bytes);
+    let table =
+        section::unframe(bytes, MAGIC, version, kind, section_name).context(what)?;
+    Ok(CkptSections { table, compressed: version == VERSION_COMPRESSED })
+}
+
 // ------------------------------------------------------------- knob types
+
+/// When checkpoint bytes are persisted relative to the barrier (see the
+/// module docs): `Sync` writes inside it, `Async` double-buffers and
+/// lets a background [`CheckpointFlusher`] write while the next
+/// superstep computes. Not result-affecting, so it is excluded from
+/// the job label — checkpoints written in either mode resume in either.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CheckpointMode {
+    /// Persist snapshots inside the barrier (PR 4 behaviour).
+    #[default]
+    Sync,
+    /// Encode at the barrier, persist + commit on a background thread.
+    Async,
+}
+
+impl std::str::FromStr for CheckpointMode {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<CheckpointMode> {
+        match s {
+            "sync" => Ok(CheckpointMode::Sync),
+            "async" => Ok(CheckpointMode::Async),
+            other => bail!("unknown checkpoint mode {other:?} (use sync|async)"),
+        }
+    }
+}
+
+impl std::fmt::Display for CheckpointMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            CheckpointMode::Sync => "sync",
+            CheckpointMode::Async => "async",
+        })
+    }
+}
 
 /// Engine-side checkpointing knob (built by the job layer from
 /// `JobBuilder::checkpoint_every` / `checkpoint_dir`).
@@ -110,6 +335,13 @@ pub struct CheckpointConfig {
     /// a directory written by a different job *or* different
     /// parameters.
     pub label: String,
+    /// Sync (in-barrier) or async (double-buffered) persistence. Like
+    /// `mmap`/`dense_index`, never result-affecting and therefore not
+    /// part of the label.
+    pub mode: CheckpointMode,
+    /// Run-length pack every section body before framing
+    /// ([`VERSION_COMPRESSED`] files). Not result-affecting either.
+    pub compress: bool,
 }
 
 /// A validated resume target: resolved by the job layer (falling back
@@ -120,6 +352,12 @@ pub struct ResumePoint {
     pub dir: PathBuf,
     /// The committed epoch (= superstep) to restart after.
     pub epoch: u64,
+    /// Confined recovery: rebuild only the dead worker (named by the
+    /// directory's `FAILED_WORKER` marker) from its snapshot, replaying
+    /// its in-flight messages from every sender's epoch log instead of
+    /// its own snapshot queues. Requires the marker and the epoch's
+    /// send logs; survivors restore exactly as in global recovery.
+    pub confined: bool,
 }
 
 /// Failure-injection testing hook: the named worker aborts at the start
@@ -175,6 +413,7 @@ pub fn encode_partition<M: MsgCodec>(
     mut save_state: impl FnMut(usize, &mut Encoder),
     halted: impl Fn(usize) -> bool,
     inbox: &[Vec<InboxEntry<M>>],
+    compress: bool,
 ) -> Vec<u8> {
     debug_assert_eq!(inbox.len(), n_units);
     let mut meta = Vec::with_capacity(PART_META_LEN);
@@ -205,9 +444,7 @@ pub fn encode_partition<M: MsgCodec>(
         }
     }
 
-    section::frame(
-        MAGIC,
-        VERSION,
+    frame_sections(
         KIND_PARTITION,
         &[
             (SEC_META, meta),
@@ -215,6 +452,7 @@ pub fn encode_partition<M: MsgCodec>(
             (SEC_HALTED, halted_col),
             (SEC_INBOX, ie.into_bytes()),
         ],
+        compress,
     )
 }
 
@@ -233,8 +471,7 @@ where
     M: MsgCodec,
     R: FnMut(usize, &mut Decoder) -> Result<S>,
 {
-    let table = section::unframe(bytes, MAGIC, VERSION, KIND_PARTITION, section_name)
-        .context("partition snapshot")?;
+    let table = open_sections(bytes, KIND_PARTITION, "partition snapshot")?;
 
     let meta = table.get(SEC_META)?;
     ensure!(
@@ -259,7 +496,8 @@ where
          (resume must use the same store/partitioning as the original run)"
     );
 
-    let mut sd = Decoder::new(table.get(SEC_STATES)?);
+    let states_body = table.get(SEC_STATES)?;
+    let mut sd = Decoder::new(&states_body);
     let mut states = Vec::with_capacity(n_units);
     for i in 0..n_units {
         states.push(
@@ -281,7 +519,8 @@ where
     );
     let halted: Vec<bool> = halted_col.iter().map(|&b| b != 0).collect();
 
-    let mut id = Decoder::new(table.get(SEC_INBOX)?);
+    let inbox_body = table.get(SEC_INBOX)?;
+    let mut id = Decoder::new(&inbox_body);
     let mut inbox = Vec::with_capacity(n_units);
     for _ in 0..n_units {
         let n = id.get_varint()? as usize;
@@ -322,7 +561,12 @@ pub struct CoordSnapshot {
 const COORD_META_LEN: usize = 16;
 
 /// Encode the manager's barrier snapshot (see [`CoordSnapshot`]).
-pub fn encode_coordinator(epoch: u64, naggs: usize, history: &[Vec<f64>]) -> Vec<u8> {
+pub fn encode_coordinator(
+    epoch: u64,
+    naggs: usize,
+    history: &[Vec<f64>],
+    compress: bool,
+) -> Vec<u8> {
     let mut meta = Vec::with_capacity(COORD_META_LEN);
     meta.extend_from_slice(&epoch.to_le_bytes());
     meta.extend_from_slice(&(naggs as u32).to_le_bytes());
@@ -334,19 +578,13 @@ pub fn encode_coordinator(epoch: u64, naggs: usize, history: &[Vec<f64>]) -> Vec
             col.extend_from_slice(&v.to_le_bytes());
         }
     }
-    section::frame(
-        MAGIC,
-        VERSION,
-        KIND_COORD,
-        &[(SEC_META, meta), (SEC_AGG_HISTORY, col)],
-    )
+    frame_sections(KIND_COORD, &[(SEC_META, meta), (SEC_AGG_HISTORY, col)], compress)
 }
 
 /// Decode a coordinator snapshot, validating the aggregator count
 /// against the resuming run's program.
 pub fn decode_coordinator(bytes: &[u8], expect_naggs: usize) -> Result<CoordSnapshot> {
-    let table = section::unframe(bytes, MAGIC, VERSION, KIND_COORD, section_name)
-        .context("coordinator snapshot")?;
+    let table = open_sections(bytes, KIND_COORD, "coordinator snapshot")?;
     let meta = table.get(SEC_META)?;
     ensure!(
         meta.len() == COORD_META_LEN,
@@ -377,6 +615,82 @@ pub fn decode_coordinator(bytes: &[u8], expect_naggs: usize) -> Result<CoordSnap
         );
     }
     Ok(CoordSnapshot { epoch, history })
+}
+
+// ---------------------------------------------------------------- send log
+//
+// One `sendlog_p.ckpt` per worker per checkpointed epoch: every batch
+// frame the worker put on the fabric during that superstep (self-
+// deliveries encoded too, even though they bypass the fabric), tagged
+// with the destination worker. The ckpt layer treats each entry as an
+// opaque `(dest, frame)` pair — the engines own the frame wire format
+// and decode replayed frames with their own `decode_batch`.
+
+const SENDLOG_META_LEN: usize = 16;
+
+/// Encode one worker's send log for a checkpointed epoch. `entries` are
+/// `(destination worker, batch frame bytes)` in send order.
+pub fn encode_sendlog(
+    epoch: u64,
+    partition: u32,
+    entries: &[(u32, Vec<u8>)],
+    compress: bool,
+) -> Vec<u8> {
+    let mut meta = Vec::with_capacity(SENDLOG_META_LEN);
+    meta.extend_from_slice(&epoch.to_le_bytes());
+    meta.extend_from_slice(&partition.to_le_bytes());
+    meta.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+    let mut le = Encoder::new();
+    for (dest, frame) in entries {
+        le.put_varint(*dest as u64);
+        le.put_bytes(frame);
+    }
+    frame_sections(
+        KIND_SENDLOG,
+        &[(SEC_META, meta), (SEC_SENDLOG, le.into_bytes())],
+        compress,
+    )
+}
+
+/// Decode a send log, validating it against the epoch/worker being
+/// replayed. Entries come back in send order.
+pub fn decode_sendlog(
+    bytes: &[u8],
+    expect_epoch: u64,
+    expect_partition: u32,
+) -> Result<Vec<(u32, Vec<u8>)>> {
+    let table = open_sections(bytes, KIND_SENDLOG, "send log")?;
+    let meta = table.get(SEC_META)?;
+    ensure!(
+        meta.len() == SENDLOG_META_LEN,
+        "section `meta` has {} bytes, expected {SENDLOG_META_LEN}",
+        meta.len()
+    );
+    let epoch = u64::from_le_bytes(meta[0..8].try_into().unwrap());
+    let partition = u32::from_le_bytes(meta[8..12].try_into().unwrap());
+    let n_entries = u32::from_le_bytes(meta[12..16].try_into().unwrap()) as usize;
+    ensure!(
+        epoch == expect_epoch,
+        "send log is for epoch {epoch}, replaying epoch {expect_epoch}"
+    );
+    ensure!(
+        partition == expect_partition,
+        "send log belongs to worker {partition}, expected {expect_partition}"
+    );
+    let body = table.get(SEC_SENDLOG)?;
+    let mut ld = Decoder::new(&body);
+    let mut entries = Vec::with_capacity(n_entries.min(ld.remaining() + 1));
+    for _ in 0..n_entries {
+        let dest = ld.get_varint()? as u32;
+        let frame = ld.get_bytes()?.to_vec();
+        entries.push((dest, frame));
+    }
+    ensure!(
+        ld.is_at_end(),
+        "section `sendlog` has {} trailing bytes",
+        ld.remaining()
+    );
+    Ok(entries)
 }
 
 // --------------------------------------------------------------- manifest
@@ -454,6 +768,12 @@ fn read_manifest(dir: &Path) -> Result<Manifest> {
 pub struct CheckpointWriter {
     dir: PathBuf,
     manifest: Mutex<Manifest>,
+    /// Uncommitted epoch directories whose prune failed (permissions,
+    /// open handles). Re-attempted at every commit so a transient
+    /// failure cannot desynchronize the retained-epoch set from disk
+    /// forever; each failed attempt bumps
+    /// `goffish_ckpt_prune_failures_total`.
+    pending_prunes: Mutex<Vec<u64>>,
 }
 
 impl CheckpointWriter {
@@ -474,6 +794,7 @@ impl CheckpointWriter {
     ) -> Result<CheckpointWriter> {
         fs::create_dir_all(dir)
             .with_context(|| format!("create checkpoint dir {}", dir.display()))?;
+        let mut stale = Vec::new();
         let manifest = if manifest_path(dir).exists() {
             let mut m = read_manifest(dir)?;
             ensure!(
@@ -491,11 +812,8 @@ impl CheckpointWriter {
                 partitions
             );
             if !continue_epochs && !m.epochs.is_empty() {
-                let stale = std::mem::take(&mut m.epochs);
+                stale = std::mem::take(&mut m.epochs);
                 write_manifest(dir, &m)?;
-                for e in stale {
-                    let _ = fs::remove_dir_all(epoch_dir(dir, e));
-                }
             }
             m
         } else {
@@ -507,7 +825,59 @@ impl CheckpointWriter {
             write_manifest(dir, &m)?;
             m
         };
-        Ok(CheckpointWriter { dir: dir.to_path_buf(), manifest: Mutex::new(manifest) })
+        if !continue_epochs {
+            // A fresh run cannot be resumed confined into: drop any
+            // stale failure marker along with the stale epochs.
+            let _ = fs::remove_file(failed_marker_path(dir));
+        }
+        let w = CheckpointWriter {
+            dir: dir.to_path_buf(),
+            manifest: Mutex::new(manifest),
+            pending_prunes: Mutex::new(Vec::new()),
+        };
+        w.prune_epochs(stale);
+        Ok(w)
+    }
+
+    /// Remove uncommitted epoch directories — best-effort but
+    /// *accounted*. The epochs are already out of the manifest, so a
+    /// failed removal (permissions, open handle) cannot corrupt
+    /// recovery; what it must not do is vanish silently. Failures land
+    /// in [`CheckpointWriter::pending_prunes`], bump the
+    /// `goffish_ckpt_prune_failures_total` counter, and are re-attempted
+    /// at every subsequent commit.
+    fn prune_epochs(&self, epochs: Vec<u64>) {
+        let mut pending = self.pending_prunes.lock().unwrap();
+        for e in epochs {
+            if !pending.contains(&e) {
+                pending.push(e);
+            }
+        }
+        pending.retain(|&e| {
+            let dir = epoch_dir(&self.dir, e);
+            if !dir.exists() {
+                return false;
+            }
+            match fs::remove_dir_all(&dir) {
+                Ok(()) => false,
+                Err(_) => {
+                    crate::obs::registry::global().counter_add(
+                        "goffish_ckpt_prune_failures_total",
+                        "Failed checkpoint epoch-prune attempts \
+                         (leftovers are re-tried at the next commit).",
+                        &[],
+                        1,
+                    );
+                    true
+                }
+            }
+        });
+    }
+
+    /// How many pruned-but-still-on-disk epoch directories are awaiting
+    /// a retry (surfaces in the job report's checkpoint clause).
+    pub fn pending_prune_count(&self) -> usize {
+        self.pending_prunes.lock().unwrap().len()
     }
 
     /// Durably (temp + fsync + rename) write worker `p`'s snapshot for
@@ -546,12 +916,219 @@ impl CheckpointWriter {
         };
         write_manifest(&self.dir, &m)?;
         drop(m);
-        // Old epochs are already uncommitted (manifest rewritten), so
-        // pruning them is best-effort cleanup.
-        for e in pruned {
-            let _ = fs::remove_dir_all(epoch_dir(&self.dir, e));
-        }
+        // Old epochs are already uncommitted (manifest rewritten);
+        // pruning retries earlier leftovers too and records failures.
+        self.prune_epochs(pruned);
         Ok(())
+    }
+
+    /// Durably write worker `p`'s send log for `epoch` (alongside its
+    /// snapshot; read back only by confined recovery).
+    pub fn write_sendlog(&self, epoch: u64, p: u32, bytes: &[u8]) -> Result<u64> {
+        let dir = epoch_dir(&self.dir, epoch);
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("create {}", dir.display()))?;
+        persist(
+            &dir.join(format!("sendlog_{p}.ckpt.tmp")),
+            &dir.join(format!("sendlog_{p}.ckpt")),
+            bytes,
+        )?;
+        Ok(bytes.len() as u64)
+    }
+
+    /// Record which worker a failed run lost, next to the manifest
+    /// (atomic rename like everything else here) — the input confined
+    /// recovery needs to know whom to rebuild.
+    pub fn write_failed_marker(&self, worker: u32) -> Result<()> {
+        let text = format!("worker={worker}\n");
+        persist(
+            &self.dir.join("FAILED_WORKER.tmp"),
+            &failed_marker_path(&self.dir),
+            text.as_bytes(),
+        )
+    }
+
+    /// Drop the failure marker after a clean completion (best-effort:
+    /// a stale marker only means a later confined resume rebuilds a
+    /// worker that did not need it, which replay makes harmless).
+    pub fn clear_failed_marker(&self) {
+        let _ = fs::remove_file(failed_marker_path(&self.dir));
+    }
+}
+
+fn failed_marker_path(dir: &Path) -> PathBuf {
+    dir.join("FAILED_WORKER")
+}
+
+/// Read the `FAILED_WORKER` marker of a checkpoint directory, if
+/// present.
+pub fn read_failed_marker(dir: &Path) -> Result<Option<u32>> {
+    let path = failed_marker_path(dir);
+    let text = match fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e).with_context(|| format!("read {}", path.display())),
+    };
+    for line in text.lines() {
+        if let Some(v) = line.strip_prefix("worker=") {
+            return Ok(Some(v.trim().parse().with_context(|| {
+                format!("parse worker id in {}", path.display())
+            })?));
+        }
+    }
+    bail!("{} has no worker= line", path.display())
+}
+
+// ---------------------------------------------------------- async flusher
+
+/// What workers and the manager hand the background writer in
+/// [`CheckpointMode::Async`].
+enum FlushMsg {
+    /// One worker's encoded snapshot for an epoch.
+    Partition { epoch: u64, partition: u32, bytes: Vec<u8> },
+    /// One worker's encoded send log for an epoch.
+    Sendlog { epoch: u64, partition: u32, bytes: Vec<u8> },
+    /// The manager's epoch commit (coordinator snapshot included).
+    /// Correct ordering is free: every worker enqueues its files
+    /// *before* syncing the barrier and the manager enqueues the commit
+    /// only *after* collecting all syncs, so the single-consumer FIFO
+    /// processes every partition write before its commit.
+    Commit { epoch: u64, coord: Vec<u8> },
+}
+
+/// The background persistence thread of [`CheckpointMode::Async`]: a
+/// single consumer draining [`FlushMsg`]s while the next superstep
+/// computes. The first flush error poisons the flusher — it keeps
+/// draining (so senders never block) without touching disk again, and
+/// the error surfaces through [`CheckpointFlusher::take_error`] at the
+/// next barrier or through [`CheckpointFlusher::finish`] at run end.
+pub struct CheckpointFlusher {
+    tx: Option<std::sync::mpsc::Sender<FlushMsg>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    /// Snapshots/logs/commits enqueued but not yet durably on disk —
+    /// published as the `goffish_ckpt_inflight` gauge.
+    inflight: Arc<std::sync::atomic::AtomicU64>,
+    error: Arc<Mutex<Option<anyhow::Error>>>,
+}
+
+impl CheckpointFlusher {
+    /// Spawn the flusher thread. `lane` is its trace lane (engines use
+    /// `k + 1`, the first lane after the workers'); its writes show up
+    /// as `ckpt_flush` spans there.
+    pub fn spawn(
+        writer: Arc<CheckpointWriter>,
+        tracer: &crate::obs::trace::Tracer,
+        lane: u32,
+    ) -> Result<CheckpointFlusher> {
+        use std::sync::atomic::Ordering;
+        let (tx, rx) = std::sync::mpsc::channel::<FlushMsg>();
+        let inflight = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let error: Arc<Mutex<Option<anyhow::Error>>> = Arc::new(Mutex::new(None));
+        let (inflight_t, error_t) = (inflight.clone(), error.clone());
+        let tracer = tracer.clone();
+        let handle = std::thread::Builder::new()
+            .name("ckpt-flush".into())
+            .spawn(move || {
+                let rec = tracer.recorder(lane);
+                for msg in rx {
+                    let poisoned = error_t.lock().unwrap().is_some();
+                    if !poisoned {
+                        let res = match &msg {
+                            FlushMsg::Partition { epoch, partition, bytes } => {
+                                let _span = rec.as_ref().map(|r| {
+                                    r.span_n("ckpt_flush", "ckpt", "epoch", *epoch as f64)
+                                });
+                                writer
+                                    .write_partition(*epoch, *partition, bytes)
+                                    .map(|_| ())
+                            }
+                            FlushMsg::Sendlog { epoch, partition, bytes } => {
+                                let _span = rec.as_ref().map(|r| {
+                                    r.span_n("ckpt_flush", "ckpt", "epoch", *epoch as f64)
+                                });
+                                writer.write_sendlog(*epoch, *partition, bytes).map(|_| ())
+                            }
+                            FlushMsg::Commit { epoch, coord } => {
+                                let _span = rec.as_ref().map(|r| {
+                                    r.span_n("ckpt_commit", "ckpt", "epoch", *epoch as f64)
+                                });
+                                writer.commit(*epoch, coord)
+                            }
+                        };
+                        if let Err(e) = res {
+                            *error_t.lock().unwrap() = Some(e);
+                        }
+                    }
+                    inflight_t.fetch_sub(1, Ordering::Relaxed);
+                }
+                if let Some(r) = rec {
+                    r.flush();
+                }
+            })
+            .context("spawn ckpt-flush thread")?;
+        Ok(CheckpointFlusher { tx: Some(tx), handle: Some(handle), inflight, error })
+    }
+
+    fn enqueue(&self, msg: FlushMsg) {
+        use std::sync::atomic::Ordering;
+        self.inflight.fetch_add(1, Ordering::Relaxed);
+        // The receiver only hangs up when the flusher thread is gone;
+        // its error (if any) surfaces via take_error/finish.
+        if self.tx.as_ref().unwrap().send(msg).is_err() {
+            self.inflight.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Hand the flusher one worker's encoded snapshot (worker-side, at
+    /// the barrier — this call is the whole remaining stall).
+    pub fn enqueue_partition(&self, epoch: u64, partition: u32, bytes: Vec<u8>) {
+        self.enqueue(FlushMsg::Partition { epoch, partition, bytes });
+    }
+
+    /// Hand the flusher one worker's encoded send log.
+    pub fn enqueue_sendlog(&self, epoch: u64, partition: u32, bytes: Vec<u8>) {
+        self.enqueue(FlushMsg::Sendlog { epoch, partition, bytes });
+    }
+
+    /// Hand the flusher an epoch commit (manager-side, after all
+    /// workers synced).
+    pub fn enqueue_commit(&self, epoch: u64, coord: Vec<u8>) {
+        self.enqueue(FlushMsg::Commit { epoch, coord });
+    }
+
+    /// Flush operations enqueued but not yet completed (the
+    /// `goffish_ckpt_inflight` gauge).
+    pub fn inflight(&self) -> u64 {
+        self.inflight.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Take the first flush error, if one happened (checked by the
+    /// manager at every barrier so a dead disk aborts the run promptly
+    /// instead of at join time).
+    pub fn take_error(&self) -> Option<anyhow::Error> {
+        self.error.lock().unwrap().take()
+    }
+
+    /// Drain the queue, join the thread, and surface any flush error.
+    pub fn finish(mut self) -> Result<()> {
+        self.join();
+        match self.error.lock().unwrap().take() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    fn join(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for CheckpointFlusher {
+    fn drop(&mut self) {
+        self.join();
     }
 }
 
@@ -581,6 +1158,13 @@ impl CheckpointReader {
     /// file, data-local style).
     pub fn partition_path(&self, epoch: u64, p: u32) -> PathBuf {
         epoch_dir(&self.dir, epoch).join(format!("part_{p}.ckpt"))
+    }
+
+    /// Path of worker `p`'s send log in `epoch` (present only for
+    /// epochs written since send logs existed; confined recovery
+    /// requires them, global recovery never reads them).
+    pub fn sendlog_path(&self, epoch: u64, p: u32) -> PathBuf {
+        epoch_dir(&self.dir, epoch).join(format!("sendlog_{p}.ckpt"))
     }
 
     /// Read *and* checksum-scrub every file of a committed epoch in one
@@ -640,9 +1224,6 @@ impl CheckpointReader {
     /// bytes so the caller never re-reads what the scrub already pulled
     /// off disk.
     pub fn latest_valid_epoch(&self) -> Result<ValidatedEpoch> {
-        if self.manifest.epochs.is_empty() {
-            bail!("no committed epoch in {}", self.dir.display());
-        }
         let mut last_err = None;
         for &e in self.manifest.epochs.iter().rev() {
             match self.read_valid_epoch(e) {
@@ -650,11 +1231,16 @@ impl CheckpointReader {
                 Err(err) => last_err = Some(err),
             }
         }
-        Err(anyhow!(
-            "no valid committed epoch in {}: {:#}",
-            self.dir.display(),
-            last_err.expect("at least one epoch was checked")
-        ))
+        // `epochs` empty covers both a genuinely fresh directory and a
+        // truncated/hand-edited manifest (`epochs=` with no entries) —
+        // either way a typed error, never a panic.
+        match last_err {
+            Some(err) => Err(anyhow!(
+                "no valid committed epoch in {}: {err:#}",
+                self.dir.display()
+            )),
+            None => Err(anyhow!("no committed epoch in {}", self.dir.display())),
+        }
     }
 
     /// Load the coordinator snapshot of a committed epoch.
@@ -722,6 +1308,22 @@ pub struct ResumeState {
     pub coord: CoordSnapshot,
     /// The validated epoch, bytes included.
     pub epoch: ValidatedEpoch,
+    /// Confined-recovery instructions ([`ResumePoint::confined`]):
+    /// which worker to rebuild and the replay frames destined to it.
+    pub confined: Option<ConfinedResume>,
+}
+
+/// What confined recovery rebuilds: the dead worker (from the
+/// directory's `FAILED_WORKER` marker) and every epoch frame destined
+/// to it, gathered from all senders' logs in sender order (per-sender
+/// FIFO within) — exactly the order the stable sender-sort of the
+/// inboxes normalizes to, which is what makes the replayed inbox
+/// byte-identical to the snapshot one.
+pub struct ConfinedResume {
+    /// The worker being rebuilt.
+    pub dead_worker: u32,
+    /// Batch frames destined to it, sender-ordered.
+    pub frames: Vec<Vec<u8>>,
 }
 
 /// Per-worker resume instructions, derived from [`open_resume`]'s
@@ -740,15 +1342,26 @@ pub struct WorkerResume {
     pub epoch: u64,
     /// Globals folded at the resumed epoch's barrier.
     pub globals: Vec<f64>,
+    /// Confined recovery only, dead worker only: batch frames to
+    /// rebuild the in-flight inbox from (the snapshot's own inbox
+    /// section is ignored — a real cluster loses it with the worker's
+    /// memory). `None` everywhere else: survivors and global recovery
+    /// restore the snapshot queues as before.
+    pub replay: Option<Vec<Vec<u8>>>,
 }
 
 /// Build worker `p`'s resume instructions (shared by both engines).
 pub fn worker_resume(rs: &ResumeState, p: u32) -> WorkerResume {
+    let replay = match &rs.confined {
+        Some(c) if c.dead_worker == p => Some(c.frames.clone()),
+        _ => None,
+    };
     WorkerResume {
         path: rs.reader.partition_path(rs.epoch.epoch, p),
         bytes: rs.epoch.partitions[p as usize].clone(),
         epoch: rs.epoch.epoch,
         globals: rs.coord.history.last().cloned().unwrap_or_default(),
+        replay,
     }
 }
 
@@ -780,7 +1393,64 @@ pub fn open_resume(rp: &ResumePoint, partitions: usize, naggs: usize) -> Result<
         coord.history.len(),
         rp.epoch
     );
-    Ok(ResumeState { reader, coord, epoch })
+    let confined = if rp.confined {
+        Some(open_confined(&reader, &rp.dir, rp.epoch, partitions as u32)?)
+    } else {
+        None
+    };
+    Ok(ResumeState { reader, coord, epoch, confined })
+}
+
+/// Load what confined recovery needs: the `FAILED_WORKER` marker (a
+/// typed error when absent — without it there is nothing to confine
+/// to) and every sender's scrubbed send log for the epoch, filtered to
+/// frames destined to the dead worker, in sender order.
+fn open_confined(
+    reader: &CheckpointReader,
+    dir: &Path,
+    epoch: u64,
+    partitions: u32,
+) -> Result<ConfinedResume> {
+    let Some(dead_worker) = read_failed_marker(dir)? else {
+        bail!(
+            "confined recovery needs the FAILED_WORKER marker in {}, and there \
+             is none — the checkpointed run did not record a worker failure \
+             (resume without --confined-recovery instead)",
+            dir.display()
+        );
+    };
+    ensure!(
+        dead_worker < partitions,
+        "FAILED_WORKER marker in {} names worker {dead_worker}, but the \
+         checkpoint only has {partitions} partitions",
+        dir.display()
+    );
+    let mut frames = Vec::new();
+    for p in 0..partitions {
+        let path = reader.sendlog_path(epoch, p);
+        let bytes = fs::read(&path).with_context(|| {
+            format!(
+                "read send log {} (confined recovery needs every sender's log; \
+                 pre-sendlog checkpoints only support global recovery)",
+                path.display()
+            )
+        })?;
+        let report = scrub_file_of_kind(&bytes, KIND_SENDLOG)
+            .with_context(|| format!("scrub {}", path.display()))?;
+        for (name, clean) in report {
+            ensure!(
+                clean,
+                "send log {}: section `{name}` corrupt (checksum mismatch)",
+                path.display()
+            );
+        }
+        let entries = decode_sendlog(&bytes, epoch, p)
+            .with_context(|| format!("decode {}", path.display()))?;
+        frames.extend(
+            entries.into_iter().filter(|(dest, _)| *dest == dead_worker).map(|(_, f)| f),
+        );
+    }
+    Ok(ConfinedResume { dead_worker, frames })
 }
 
 // ------------------------------------------------------------------ scrub
@@ -789,7 +1459,11 @@ pub fn open_resume(rp: &ResumePoint, partitions: usize, naggs: usize) -> Result<
 /// kind byte (the one header byte no section checksum covers) against
 /// what the file's place in the epoch layout says it must be.
 fn scrub_file_of_kind(bytes: &[u8], want_kind: u8) -> Result<Vec<(&'static str, bool)>> {
-    Ok(section::unframe(bytes, MAGIC, VERSION, want_kind, section_name)?.scrub())
+    // Checksums cover the (possibly packed) section bodies, so the
+    // scrub itself is version-blind — it only needs the right version
+    // byte to satisfy `unframe`'s header check.
+    let version = claimed_version(bytes);
+    Ok(section::unframe(bytes, MAGIC, version, want_kind, section_name)?.scrub())
 }
 
 /// Whether two paths name the same directory, resolving symlinks and
@@ -828,6 +1502,14 @@ pub fn scrub_dir(dir: &Path) -> Result<ScrubSummary> {
             epoch_dir(dir, e).join("coord.ckpt"),
             KIND_COORD,
         ));
+        // Send logs are optional (absent in pre-sendlog checkpoints):
+        // scrub the ones that exist, never demand them.
+        for p in 0..reader.manifest.partitions {
+            let path = reader.sendlog_path(e, p);
+            if path.exists() {
+                paths.push((format!("epoch_{e}/sendlog_{p}.ckpt"), path, KIND_SENDLOG));
+            }
+        }
         for (rel, path, kind) in paths {
             match fs::read(&path) {
                 Ok(bytes) => sum.record(&rel, scrub_file_of_kind(&bytes, kind)),
@@ -861,7 +1543,7 @@ mod tests {
         ]
     }
 
-    fn sample_partition(epoch: u64, p: u32) -> Vec<u8> {
+    fn sample_partition_mode(epoch: u64, p: u32, compress: bool) -> Vec<u8> {
         let states = [3.0f32, 1.5, -8.25];
         let halted = [true, false, true];
         encode_partition(
@@ -871,7 +1553,12 @@ mod tests {
             |i, e| states[i].encode_state(e),
             |i| halted[i],
             &sample_inbox(),
+            compress,
         )
+    }
+
+    fn sample_partition(epoch: u64, p: u32) -> Vec<u8> {
+        sample_partition_mode(epoch, p, false)
     }
 
     #[test]
@@ -902,13 +1589,13 @@ mod tests {
     #[test]
     fn coordinator_snapshot_round_trip() {
         let history = vec![vec![1.0, f64::INFINITY], vec![0.5, 3.0], vec![0.25, 2.0]];
-        let bytes = encode_coordinator(3, 2, &history);
+        let bytes = encode_coordinator(3, 2, &history, false);
         let snap = decode_coordinator(&bytes, 2).unwrap();
         assert_eq!(snap.epoch, 3);
         assert_eq!(snap.history, history);
         assert!(decode_coordinator(&bytes, 1).is_err());
         // Aggregator-free jobs have empty-but-counted history entries.
-        let bytes = encode_coordinator(2, 0, &[vec![], vec![]]);
+        let bytes = encode_coordinator(2, 0, &[vec![], vec![]], false);
         let snap = decode_coordinator(&bytes, 0).unwrap();
         assert_eq!(snap.history, vec![Vec::<f64>::new(); 2]);
     }
@@ -925,7 +1612,7 @@ mod tests {
             for p in 0..2 {
                 w.write_partition(epoch, p, &sample_partition(epoch, p)).unwrap();
             }
-            w.commit(epoch, &encode_coordinator(epoch, 0, &vec![vec![]; epoch as usize]))
+            w.commit(epoch, &encode_coordinator(epoch, 0, &vec![vec![]; epoch as usize], false))
                 .unwrap();
         }
         let r = CheckpointReader::open(&dir).unwrap();
@@ -940,7 +1627,7 @@ mod tests {
         for p in 0..2 {
             w2.write_partition(4, p, &sample_partition(4, p)).unwrap();
         }
-        w2.commit(4, &encode_coordinator(4, 0, &vec![vec![]; 4])).unwrap();
+        w2.commit(4, &encode_coordinator(4, 0, &vec![vec![]; 4], false)).unwrap();
         assert_eq!(CheckpointReader::open(&dir).unwrap().manifest().epochs, vec![3, 4]);
         // …but a different job or cluster shape is refused.
         assert!(CheckpointWriter::create(&dir, "sssp/gopher", 2, false).is_err());
@@ -956,7 +1643,7 @@ mod tests {
         let w = CheckpointWriter::create(&dir, "cc/gopher", 1, false).unwrap();
         for epoch in [6u64, 8] {
             w.write_partition(epoch, 0, &sample_partition(epoch, 0)).unwrap();
-            w.commit(epoch, &encode_coordinator(epoch, 0, &vec![vec![]; epoch as usize]))
+            w.commit(epoch, &encode_coordinator(epoch, 0, &vec![vec![]; epoch as usize], false))
                 .unwrap();
         }
         drop(w);
@@ -967,7 +1654,7 @@ mod tests {
         );
         assert!(!epoch_dir(&dir, 8).exists());
         w.write_partition(2, 0, &sample_partition(2, 0)).unwrap();
-        w.commit(2, &encode_coordinator(2, 0, &vec![vec![]; 2])).unwrap();
+        w.commit(2, &encode_coordinator(2, 0, &vec![vec![]; 2], false)).unwrap();
         let r = CheckpointReader::open(&dir).unwrap();
         assert_eq!(r.manifest().epochs, vec![2]);
         assert_eq!(r.latest_valid().unwrap(), 2);
@@ -979,7 +1666,7 @@ mod tests {
         let w = CheckpointWriter::create(&dir, "cc/gopher", 1, false).unwrap();
         for epoch in [2u64, 4] {
             w.write_partition(epoch, 0, &sample_partition(epoch, 0)).unwrap();
-            w.commit(epoch, &encode_coordinator(epoch, 0, &vec![vec![]; epoch as usize]))
+            w.commit(epoch, &encode_coordinator(epoch, 0, &vec![vec![]; epoch as usize], false))
                 .unwrap();
         }
         let r = CheckpointReader::open(&dir).unwrap();
@@ -1030,7 +1717,7 @@ mod tests {
         for p in 0..2 {
             w.write_partition(3, p, &sample_partition(3, p)).unwrap();
         }
-        w.commit(3, &encode_coordinator(3, 0, &vec![vec![]; 3])).unwrap();
+        w.commit(3, &encode_coordinator(3, 0, &vec![vec![]; 3], false)).unwrap();
         let r = CheckpointReader::open(&dir).unwrap();
         let v = r.read_valid_epoch(3).unwrap();
         assert_eq!(v.epoch, 3);
@@ -1044,7 +1731,12 @@ mod tests {
         assert_eq!(r.latest_valid_epoch().unwrap().epoch, r.latest_valid().unwrap());
 
         // Worker resume instructions carry the validated bytes through.
-        let rs = open_resume(&ResumePoint { dir: dir.clone(), epoch: 3 }, 2, 0).unwrap();
+        let rs = open_resume(
+            &ResumePoint { dir: dir.clone(), epoch: 3, confined: false },
+            2,
+            0,
+        )
+        .unwrap();
         let wr = worker_resume(&rs, 1);
         assert_eq!(wr.epoch, 3);
         assert_eq!(*wr.bytes, fs::read(&wr.path).unwrap());
@@ -1057,5 +1749,309 @@ mod tests {
         fs::create_dir_all(&dir).unwrap();
         assert!(CheckpointReader::open(&dir).is_err());
         assert!(scrub_dir(&dir).is_err());
+    }
+
+    #[test]
+    fn rle_round_trips_and_rejects_garbage() {
+        let cases: Vec<Vec<u8>> = vec![
+            Vec::new(),
+            vec![7],
+            vec![0; 1000],                      // one long run (needs splitting at 130)
+            (0..=255u8).collect(),              // pure literals (needs splitting at 128)
+            vec![1, 1, 2, 2, 2, 3, 3, 3, 3, 0], // short runs around the threshold
+            {
+                let mut v = vec![0u8; 300];
+                v.extend((0..200).map(|i| (i * 37 % 251) as u8));
+                v.extend_from_slice(&[9; 130]);
+                v.push(1);
+                v
+            },
+        ];
+        for raw in cases {
+            let packed = rle_compress(&raw);
+            assert_eq!(rle_decompress(&packed).unwrap(), raw, "len {}", raw.len());
+        }
+        // Runs actually compress.
+        assert!(rle_compress(&[0u8; 1000]).len() < 30);
+        // Truncations and length lies are errors, not panics.
+        assert!(rle_decompress(&[]).is_err());
+        let packed = rle_compress(&[5u8; 50]);
+        assert!(rle_decompress(&packed[..packed.len() - 1]).is_err());
+        let mut lying = rle_compress(&[5u8; 50]);
+        lying[0] = 49; // claim one byte fewer than the tokens produce
+        assert!(rle_decompress(&lying).is_err());
+    }
+
+    #[test]
+    fn compressed_snapshots_round_trip_and_scrub() {
+        // Same logical content, VERSION_COMPRESSED on disk: decode,
+        // validation, resume, and the scrubber all handle it.
+        let dir = tmp("compressed");
+        let bytes = sample_partition_mode(4, 0, true);
+        assert_eq!(bytes[4], VERSION_COMPRESSED);
+        let plain = sample_partition_mode(4, 0, false);
+        assert!(bytes.len() != plain.len() || bytes != plain);
+        let snap =
+            decode_partition::<f32, f32, _>(&bytes, 4, 0, 3, |_, d| f32::decode_state(d))
+                .unwrap();
+        assert_eq!(snap.states, vec![3.0, 1.5, -8.25]);
+        assert_eq!(snap.inbox[0][0].payload, 2.5);
+
+        let history = vec![vec![0.5, 3.0]; 4];
+        let cb = encode_coordinator(4, 2, &history, true);
+        assert_eq!(decode_coordinator(&cb, 2).unwrap().history, history);
+
+        let w = CheckpointWriter::create(&dir, "cc/gopher", 1, false).unwrap();
+        w.write_partition(4, 0, &bytes).unwrap();
+        w.write_sendlog(4, 0, &encode_sendlog(4, 0, &[(0, vec![1, 2, 3])], true))
+            .unwrap();
+        w.commit(4, &cb).unwrap();
+        let r = CheckpointReader::open(&dir).unwrap();
+        assert_eq!(r.latest_valid().unwrap(), 4);
+        let sum = scrub_dir(&dir).unwrap();
+        assert!(sum.corrupt.is_empty(), "{:?}", sum.corrupt);
+        assert_eq!(sum.files, 3); // partition + coord + sendlog
+
+        // Corruption inside a packed body is still caught by checksum.
+        let path = r.partition_path(4, 0);
+        let mut b = fs::read(&path).unwrap();
+        let mid = b.len() / 2;
+        b[mid] ^= 0x55;
+        fs::write(&path, &b).unwrap();
+        assert!(r.validate_epoch(4).is_err());
+    }
+
+    #[test]
+    fn sendlog_round_trips_and_validates() {
+        let entries: Vec<(u32, Vec<u8>)> =
+            vec![(1, vec![0xde, 0xad]), (0, Vec::new()), (1, vec![7; 40])];
+        for compress in [false, true] {
+            let bytes = encode_sendlog(9, 2, &entries, compress);
+            assert_eq!(decode_sendlog(&bytes, 9, 2).unwrap(), entries);
+            assert!(decode_sendlog(&bytes, 8, 2).is_err());
+            assert!(decode_sendlog(&bytes, 9, 1).is_err());
+        }
+        // Empty logs (quiescent superstep) are fine.
+        let bytes = encode_sendlog(3, 0, &[], false);
+        assert!(decode_sendlog(&bytes, 3, 0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn flusher_persists_and_commits_in_order() {
+        let dir = tmp("flusher");
+        let w = Arc::new(CheckpointWriter::create(&dir, "cc/gopher", 2, false).unwrap());
+        let f = CheckpointFlusher::spawn(
+            w.clone(),
+            &crate::obs::trace::Tracer::default(),
+            3,
+        )
+        .unwrap();
+        for epoch in [1u64, 2] {
+            for p in 0..2 {
+                f.enqueue_partition(epoch, p, sample_partition(epoch, p));
+                f.enqueue_sendlog(epoch, p, encode_sendlog(epoch, p, &[], false));
+            }
+            f.enqueue_commit(
+                epoch,
+                encode_coordinator(epoch, 0, &vec![vec![]; epoch as usize], false),
+            );
+        }
+        f.finish().unwrap();
+        let r = CheckpointReader::open(&dir).unwrap();
+        assert_eq!(r.manifest().epochs, vec![1, 2]);
+        assert_eq!(r.latest_valid().unwrap(), 2);
+        assert!(r.sendlog_path(2, 1).exists());
+    }
+
+    #[test]
+    fn flusher_surfaces_write_errors() {
+        let dir = tmp("flusher_err");
+        let w = Arc::new(CheckpointWriter::create(&dir, "cc/gopher", 1, false).unwrap());
+        // A regular file where the epoch dir must go makes every write
+        // for that epoch fail.
+        fs::write(epoch_dir(&dir, 5), b"not a directory").unwrap();
+        let f = CheckpointFlusher::spawn(
+            w.clone(),
+            &crate::obs::trace::Tracer::default(),
+            2,
+        )
+        .unwrap();
+        f.enqueue_partition(5, 0, sample_partition(5, 0));
+        let err = f.finish().unwrap_err();
+        assert!(format!("{err:#}").contains("epoch_5"), "{err:#}");
+        // Nothing was committed.
+        assert!(CheckpointReader::open(&dir).unwrap().latest_valid().is_err());
+    }
+
+    #[test]
+    fn failed_prunes_are_recorded_and_retried() {
+        let dir = tmp("prune_retry");
+        let w = CheckpointWriter::create(&dir, "cc/gopher", 1, false).unwrap();
+        for epoch in [1u64, 2] {
+            w.write_partition(epoch, 0, &sample_partition(epoch, 0)).unwrap();
+            w.commit(epoch, &encode_coordinator(epoch, 0, &vec![vec![]; epoch as usize], false))
+                .unwrap();
+        }
+        // Make epoch 1's prune fail: swap its directory for a regular
+        // file (remove_dir_all refuses non-directories on every
+        // platform, even for root).
+        fs::remove_dir_all(epoch_dir(&dir, 1)).unwrap();
+        fs::write(epoch_dir(&dir, 1), b"immovable").unwrap();
+        w.write_partition(3, 0, &sample_partition(3, 0)).unwrap();
+        w.commit(3, &encode_coordinator(3, 0, &vec![vec![]; 3], false)).unwrap();
+        // Epoch 1 left the manifest but its removal failed: recorded,
+        // not swallowed.
+        assert_eq!(CheckpointReader::open(&dir).unwrap().manifest().epochs, vec![2, 3]);
+        assert!(epoch_dir(&dir, 1).exists());
+        assert_eq!(w.pending_prune_count(), 1);
+        // Once the obstacle clears, the next commit retires the
+        // leftover.
+        fs::remove_file(epoch_dir(&dir, 1)).unwrap();
+        w.write_partition(4, 0, &sample_partition(4, 0)).unwrap();
+        w.commit(4, &encode_coordinator(4, 0, &vec![vec![]; 4], false)).unwrap();
+        assert_eq!(w.pending_prune_count(), 0);
+        assert!(!epoch_dir(&dir, 2).exists());
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn read_only_epoch_dir_prune_failure_is_recorded() {
+        use std::os::unix::fs::PermissionsExt;
+        let dir = tmp("prune_readonly");
+        let w = CheckpointWriter::create(&dir, "cc/gopher", 1, false).unwrap();
+        for epoch in [1u64, 2, 3] {
+            w.write_partition(epoch, 0, &sample_partition(epoch, 0)).unwrap();
+            if epoch == 1 {
+                // Strip write permission so the unlink inside fails.
+                fs::set_permissions(
+                    epoch_dir(&dir, 1),
+                    fs::Permissions::from_mode(0o555),
+                )
+                .unwrap();
+                // Root ignores permission bits; skip the assertions when
+                // the sandbox runs privileged.
+                if fs::File::create(epoch_dir(&dir, 1).join("probe")).is_ok() {
+                    fs::set_permissions(
+                        epoch_dir(&dir, 1),
+                        fs::Permissions::from_mode(0o755),
+                    )
+                    .unwrap();
+                    return;
+                }
+            }
+            w.commit(epoch, &encode_coordinator(epoch, 0, &vec![vec![]; epoch as usize], false))
+                .unwrap();
+        }
+        assert!(epoch_dir(&dir, 1).exists());
+        assert_eq!(w.pending_prune_count(), 1);
+        // Restore permissions; the next commit clears the backlog.
+        fs::set_permissions(epoch_dir(&dir, 1), fs::Permissions::from_mode(0o755))
+            .unwrap();
+        w.write_partition(4, 0, &sample_partition(4, 0)).unwrap();
+        w.commit(4, &encode_coordinator(4, 0, &vec![vec![]; 4], false)).unwrap();
+        assert_eq!(w.pending_prune_count(), 0);
+        assert!(!epoch_dir(&dir, 1).exists());
+    }
+
+    #[test]
+    fn crafted_manifest_with_no_epochs_is_an_error_not_a_panic() {
+        // A hand-edited/truncated manifest whose epoch list is empty (or
+        // lists only epochs that no longer exist) must produce the typed
+        // checkpoint error, never the old `expect` panic.
+        let dir = tmp("crafted_manifest");
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(
+            manifest_path(&dir),
+            b"label=cc/gopher\npartitions=1\nepochs=\n",
+        )
+        .unwrap();
+        let r = CheckpointReader::open(&dir).unwrap();
+        let err = r.latest_valid_epoch().unwrap_err();
+        assert!(format!("{err:#}").contains("no committed epoch"), "{err:#}");
+        // An epoch listed but missing on disk takes the other branch.
+        fs::write(
+            manifest_path(&dir),
+            b"label=cc/gopher\npartitions=1\nepochs=7\n",
+        )
+        .unwrap();
+        let r = CheckpointReader::open(&dir).unwrap();
+        let err = r.latest_valid_epoch().unwrap_err();
+        assert!(format!("{err:#}").contains("no valid committed epoch"), "{err:#}");
+    }
+
+    #[test]
+    fn failed_marker_round_trips_and_resets() {
+        let dir = tmp("marker");
+        let w = CheckpointWriter::create(&dir, "cc/gopher", 2, false).unwrap();
+        assert_eq!(read_failed_marker(&dir).unwrap(), None);
+        w.write_failed_marker(1).unwrap();
+        assert_eq!(read_failed_marker(&dir).unwrap(), Some(1));
+        w.clear_failed_marker();
+        assert_eq!(read_failed_marker(&dir).unwrap(), None);
+        // A fresh (non-continuing) create drops a stale marker.
+        w.write_failed_marker(0).unwrap();
+        drop(w);
+        let _w = CheckpointWriter::create(&dir, "cc/gopher", 2, false).unwrap();
+        assert_eq!(read_failed_marker(&dir).unwrap(), None);
+    }
+
+    #[test]
+    fn confined_resume_replays_the_dead_workers_frames() {
+        let dir = tmp("confined");
+        let w = CheckpointWriter::create(&dir, "cc/gopher", 2, false).unwrap();
+        for p in 0..2 {
+            w.write_partition(3, p, &sample_partition(3, p)).unwrap();
+        }
+        // Worker 0 sent one frame to each side; worker 1 sent two to
+        // worker 1 (self-deliveries are logged too).
+        w.write_sendlog(
+            3,
+            0,
+            &encode_sendlog(3, 0, &[(1, vec![0xa0]), (0, vec![0xa1])], false),
+        )
+        .unwrap();
+        w.write_sendlog(
+            3,
+            1,
+            &encode_sendlog(3, 1, &[(1, vec![0xb0]), (1, vec![0xb1])], false),
+        )
+        .unwrap();
+        w.commit(3, &encode_coordinator(3, 0, &vec![vec![]; 3], false)).unwrap();
+
+        // Without the marker, confined resume is a typed error…
+        let rp = ResumePoint { dir: dir.clone(), epoch: 3, confined: true };
+        let err = open_resume(&rp, 2, 0).unwrap_err();
+        assert!(format!("{err:#}").contains("FAILED_WORKER"), "{err:#}");
+
+        // …with it, the dead worker gets the frames destined to it in
+        // sender order, and only the dead worker replays.
+        w.write_failed_marker(1).unwrap();
+        let rs = open_resume(&rp, 2, 0).unwrap();
+        let c = rs.confined.as_ref().unwrap();
+        assert_eq!(c.dead_worker, 1);
+        assert_eq!(c.frames, vec![vec![0xa0], vec![0xb0], vec![0xb1]]);
+        assert_eq!(
+            worker_resume(&rs, 1).replay,
+            Some(vec![vec![0xa0], vec![0xb0], vec![0xb1]])
+        );
+        assert_eq!(worker_resume(&rs, 0).replay, None);
+
+        // Global resume of the same directory ignores marker + logs.
+        let rs = open_resume(
+            &ResumePoint { dir: dir.clone(), epoch: 3, confined: false },
+            2,
+            0,
+        )
+        .unwrap();
+        assert!(rs.confined.is_none());
+        assert_eq!(worker_resume(&rs, 1).replay, None);
+
+        // A missing send log is a typed error (pre-sendlog checkpoint).
+        fs::remove_file(
+            CheckpointReader::open(&dir).unwrap().sendlog_path(3, 0),
+        )
+        .unwrap();
+        let err = open_resume(&rp, 2, 0).unwrap_err();
+        assert!(format!("{err:#}").contains("send log"), "{err:#}");
     }
 }

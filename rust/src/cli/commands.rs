@@ -20,7 +20,9 @@
 //!                   [--no-mmap] [--no-dense-index]
 //!                   [--xla] [--fabric inproc|tcp] [--cores N]
 //!                   [--load-attributes a,b] [--output values.tsv]
-//!                   [--checkpoint-every N --checkpoint-dir D] [--resume D]
+//!                   [--checkpoint-every N --checkpoint-dir D]
+//!                   [--checkpoint-mode sync|async] [--checkpoint-compress]
+//!                   [--resume D [--confined-recovery]]
 //!                   [--kill-at S [--kill-worker W]] [--trace t.json]
 //! ```
 //!
@@ -77,7 +79,14 @@
 //! Fault tolerance: `--checkpoint-every N --checkpoint-dir D` snapshots
 //! every N supersteps; after a crash, `run --resume D` restarts from
 //! the latest valid committed epoch (and keeps checkpointing into `D`
-//! when `--checkpoint-every` is also given). `--kill-at S` is the
+//! when `--checkpoint-every` is also given). `--checkpoint-mode async`
+//! double-buffers the snapshot at the barrier and persists it on a
+//! background flusher thread (sync, the default, pays the write inside
+//! the barrier); `--checkpoint-compress` run-length packs the section
+//! bodies. `--resume D --confined-recovery` restarts only the worker
+//! named by the directory's `FAILED_WORKER` marker, replaying its
+//! in-flight messages from the surviving senders' logs — output stays
+//! byte-identical to a global rollback. `--kill-at S` is the
 //! failure-injection hook (kills worker `--kill-worker`, default 0, at
 //! superstep S) driving the kill-and-resume smoke tests.
 
@@ -138,8 +147,10 @@ commands:
   ingest       stream an edge list into a GoFS store with bounded memory
                (--spill-buffer; byte-identical to the batch store path)
   run          execute an algorithm with Gopher or the vertex baseline
-               (checkpoint with --checkpoint-every/--checkpoint-dir, recover
-               with --resume; --trace t.json writes a Chrome-trace timeline)
+               (checkpoint with --checkpoint-every/--checkpoint-dir, plus
+               --checkpoint-mode sync|async and --checkpoint-compress;
+               recover with --resume [--confined-recovery]; --trace t.json
+               writes a Chrome-trace timeline)
   serve        resident job server: load a store once, accept jobs over
                an HTTP API (see docs/API.md; --access-log prints request
                lines, /v1/metrics?format=prometheus exposes live metrics)
@@ -465,8 +476,17 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(dir) = args.get("checkpoint-dir") {
         builder = builder.checkpoint_dir(dir);
     }
+    if let Some(s) = args.get("checkpoint-mode") {
+        builder = builder.checkpoint_mode(s.parse()?);
+    }
+    if args.flag("checkpoint-compress") {
+        builder = builder.checkpoint_compress(true);
+    }
     if let Some(dir) = args.get("resume") {
         builder = builder.resume_from(dir);
+    }
+    if args.flag("confined-recovery") {
+        builder = builder.confined_recovery(true);
     }
     if let Some(s) = args.get("kill-at") {
         let superstep = s
@@ -964,6 +984,57 @@ mod tests {
         // Resuming with the wrong algorithm is a typed refusal.
         assert!(run_cmd(&["run", "--store", store.to_str().unwrap(), "--algo", "sssp",
                           "--resume", ckpt.to_str().unwrap()])
+            .is_err());
+    }
+
+    #[test]
+    fn async_kill_confined_resume_recovers_identical_tsv() {
+        let dir = tmp("kill_resume_async");
+        let graph = dir.join("g.txt");
+        let store = dir.join("store");
+        let ckpt = dir.join("ckpt");
+        run_cmd(&["gen", "--kind", "road", "--scale", "12", "--seed", "3", "--out",
+                  graph.to_str().unwrap()])
+            .unwrap();
+        run_cmd(&["store", "--graph", graph.to_str().unwrap(), "--k", "3", "--out",
+                  store.to_str().unwrap()])
+            .unwrap();
+        // Baseline: uninterrupted run.
+        let full = dir.join("full.tsv");
+        run_cmd(&["run", "--store", store.to_str().unwrap(), "--algo", "cc",
+                  "--output", full.to_str().unwrap()])
+            .unwrap();
+        // Async + compressed checkpointed run killed mid-job: the
+        // flusher persists epochs off the barrier; worker 1's failure
+        // leaves a FAILED_WORKER marker for confined recovery.
+        let err = run_cmd(&["run", "--store", store.to_str().unwrap(), "--algo", "cc",
+                            "--checkpoint-every", "1",
+                            "--checkpoint-mode", "async",
+                            "--checkpoint-compress",
+                            "--checkpoint-dir", ckpt.to_str().unwrap(),
+                            "--kill-at", "2", "--kill-worker", "1"]);
+        assert!(err.is_err(), "killed run must fail");
+        assert!(format!("{:#}", err.unwrap_err()).contains("injected worker failure"));
+        // Confined resume (only worker 1 rebuilds, replaying its
+        // in-flight messages from the senders' logs) produces a
+        // byte-identical TSV.
+        let resumed = dir.join("resumed.tsv");
+        run_cmd(&["run", "--store", store.to_str().unwrap(), "--algo", "cc",
+                  "--resume", ckpt.to_str().unwrap(), "--confined-recovery",
+                  "--output", resumed.to_str().unwrap()])
+            .unwrap();
+        assert_eq!(
+            std::fs::read_to_string(&full).unwrap(),
+            std::fs::read_to_string(&resumed).unwrap()
+        );
+        // Compressed async-written epochs (and their send logs) scrub
+        // clean through `store verify`.
+        run_cmd(&["store", "verify", "--ckpt", ckpt.to_str().unwrap()]).unwrap();
+        // An unknown mode is a loud parse error.
+        assert!(run_cmd(&["run", "--store", store.to_str().unwrap(), "--algo", "cc",
+                          "--checkpoint-every", "1",
+                          "--checkpoint-dir", ckpt.to_str().unwrap(),
+                          "--checkpoint-mode", "turbo"])
             .is_err());
     }
 

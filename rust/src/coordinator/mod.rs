@@ -57,6 +57,9 @@ pub struct RunControl {
     /// Straggler ratio of the last completed superstep, stored as
     /// `f64::to_bits` (atomics carry no floats).
     straggler: Arc<AtomicU64>,
+    /// Async-checkpoint flush operations enqueued but not yet durable
+    /// (0 for sync-mode and checkpoint-free runs).
+    ckpt_inflight: Arc<AtomicU64>,
 }
 
 impl Default for RunControl {
@@ -70,6 +73,7 @@ impl Default for RunControl {
             // no zero-bits sentinel — which would also be the bit pattern
             // of a legitimately published 0.0.
             straggler: Arc::new(AtomicU64::new(1.0f64.to_bits())),
+            ckpt_inflight: Arc::default(),
         }
     }
 }
@@ -125,6 +129,19 @@ impl RunControl {
     /// (`1.0` before the first barrier: nobody has straggled yet).
     pub fn straggler_ratio(&self) -> f64 {
         f64::from_bits(self.straggler.load(Ordering::Relaxed))
+    }
+
+    /// Manager-side: publish the async checkpoint backlog (flush
+    /// operations enqueued but not yet durable) at the barrier. Sync
+    /// runs publish 0.
+    pub fn publish_ckpt_inflight(&self, inflight: u64) {
+        self.ckpt_inflight.store(inflight, Ordering::Relaxed);
+    }
+
+    /// Observer-side: the async checkpoint backlog as of the last
+    /// barrier (the `goffish_ckpt_inflight` gauge).
+    pub fn ckpt_inflight(&self) -> u64 {
+        self.ckpt_inflight.load(Ordering::Relaxed)
     }
 }
 

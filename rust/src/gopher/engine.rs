@@ -69,12 +69,18 @@ pub struct GopherConfig {
     /// slices each worker loads alongside its topology (paper §4.1's
     /// "only loads the slice it needs"). Ignored for in-memory sources.
     pub load_attributes: AttrProjection,
-    /// Barrier-synchronous checkpointing: every `every` supersteps each
-    /// worker snapshots its states/halted-flags/in-flight queues and the
-    /// manager commits the epoch (see [`crate::ckpt`]).
+    /// Checkpointing: every `every` supersteps each worker snapshots
+    /// its states/halted-flags/in-flight queues (plus its send log) and
+    /// the manager commits the epoch (see [`crate::ckpt`]). The
+    /// config's [`ckpt::CheckpointMode`] picks whether the persistence
+    /// happens inside the barrier (sync) or on a background flusher
+    /// thread while the next superstep computes (async).
     pub checkpoint: Option<ckpt::CheckpointConfig>,
     /// Restart after a committed epoch instead of superstep 1. The run
     /// must use the same source/partitioning as the checkpointed one.
+    /// With [`ckpt::ResumePoint::confined`], only the failed worker
+    /// (per the directory's marker) rebuilds its inbox from the
+    /// senders' logs; everyone restores states the same way either way.
     pub resume: Option<ckpt::ResumePoint>,
     /// Failure-injection testing hook: the named worker aborts at the
     /// start of the named superstep.
@@ -267,6 +273,7 @@ fn worker_body<P, F>(
     load: LoadStats,
     directory: &[u32],
     writer: Option<&ckpt::CheckpointWriter>,
+    flusher: Option<&ckpt::CheckpointFlusher>,
     resume: Option<WorkerResume>,
     sync_tx: Sender<WorkerSync>,
     cmd_rx: Receiver<ManagerCmd>,
@@ -278,8 +285,8 @@ where
     let me = fabric.id();
     let k = fabric.num_workers();
     match worker_loop(
-        program, &fabric, cfg, aggs, subgraphs, &attrs, directory, writer, resume,
-        &sync_tx, &cmd_rx,
+        program, &fabric, cfg, aggs, subgraphs, &attrs, directory, writer, flusher,
+        resume, &sync_tx, &cmd_rx,
     ) {
         Ok((states, emitted, per_superstep)) => {
             Ok(WorkerOutput { states, emitted, per_superstep, load })
@@ -323,6 +330,7 @@ fn worker_loop<P, F>(
     attrs: &PartitionAttributes,
     directory: &[u32],
     writer: Option<&ckpt::CheckpointWriter>,
+    flusher: Option<&ckpt::CheckpointFlusher>,
     resume: Option<WorkerResume>,
     sync_tx: &Sender<WorkerSync>,
     cmd_rx: &Receiver<ManagerCmd>,
@@ -380,10 +388,38 @@ where
                 |i, d| program.restore_state(&subgraphs[i], d),
             )
             .with_context(|| format!("decode checkpoint {}", r.path.display()))?;
+            let queues = match &r.replay {
+                // Confined recovery, dead worker: the snapshot's own
+                // queues stand in for state this worker's memory lost —
+                // rebuild them from the senders' logged frames instead.
+                // Frames arrive sender-ordered with per-sender FIFO
+                // intact, and the stable sender-sort before compute
+                // normalizes them exactly as it would the snapshot
+                // queues, so replay is byte-identical.
+                Some(frames) => {
+                    let mut queues: Vec<Vec<InboxEntry<P::Msg>>> =
+                        (0..n_local).map(|_| Vec::new()).collect();
+                    for frame in frames {
+                        let (sender, msgs) = decode_batch::<P::Msg>(frame)?;
+                        for (sgi, vertex, payload) in msgs {
+                            let slot =
+                                queues.get_mut(sgi as usize).with_context(|| {
+                                    format!(
+                                        "replayed message for unknown sub-graph \
+                                         index {sgi} on worker {me}"
+                                    )
+                                })?;
+                            slot.push(InboxEntry { sender, vertex, payload });
+                        }
+                    }
+                    queues
+                }
+                None => snap.inbox,
+            };
             (
                 snap.states,
                 snap.halted,
-                snap.inbox,
+                queues,
                 r.epoch as usize + 1,
                 Some(r.globals),
             )
@@ -497,15 +533,30 @@ where
         let mut batcher: transport::Batcher<P::Msg> =
             transport::Batcher::new(k, cfg.batch_flush_bytes, cfg.combiners);
         let combine = |a: &P::Msg, b: &P::Msg| program.combine(a, b);
+        // On checkpoint supersteps, log every outgoing frame with its
+        // destination: the epoch's send log is what lets a later
+        // confined recovery replay the dead worker's in-flight
+        // messages from the senders' side.
+        let log_sends = cfg
+            .checkpoint
+            .as_ref()
+            .is_some_and(|ck| superstep % ck.every == 0);
+        let mut sendlog: Option<Vec<(u32, Vec<u8>)>> = log_sends.then(Vec::new);
         let deliver = |p: usize,
                        batch: Vec<(u32, Option<u32>, P::Msg)>,
-                       inbox: &mut Vec<Vec<InboxEntry<P::Msg>>>|
+                       inbox: &mut Vec<Vec<InboxEntry<P::Msg>>>,
+                       sendlog: &mut Option<Vec<(u32, Vec<u8>)>>|
          -> Result<u64> {
             if batch.is_empty() {
                 return Ok(0);
             }
             if p as u32 == me {
                 // Self-delivery bypasses the fabric (but still counts).
+                // The send log gets the encoded frame anyway: confined
+                // replay must cover self-sent messages too.
+                if let Some(log) = sendlog {
+                    log.push((me, encode_batch(me, &batch)));
+                }
                 for (sgi, vertex, payload) in batch {
                     inbox[sgi as usize].push(InboxEntry { sender: me, vertex, payload });
                 }
@@ -513,6 +564,9 @@ where
             }
             let frame = encode_batch(me, &batch);
             let len = frame.len() as u64;
+            if let Some(log) = sendlog {
+                log.push((p as u32, frame.clone()));
+            }
             fabric.send(p as u32, frame)?;
             Ok(len)
         };
@@ -533,7 +587,7 @@ where
                             env.payload.clone(),
                             &combine,
                         ) {
-                            sent_bytes += deliver(p, batch, &mut inbox)?;
+                            sent_bytes += deliver(p, batch, &mut inbox, &mut sendlog)?;
                         }
                     }
                     Outgoing::Broadcast(m) => {
@@ -543,7 +597,8 @@ where
                                 if let Some(batch) =
                                     batcher.push(p, idx, None, m.clone(), &combine)
                                 {
-                                    sent_bytes += deliver(p, batch, &mut inbox)?;
+                                    sent_bytes +=
+                                        deliver(p, batch, &mut inbox, &mut sendlog)?;
                                 }
                             }
                         }
@@ -553,7 +608,7 @@ where
         }
         for p in 0..k {
             let batch = batcher.take(p);
-            sent_bytes += deliver(p, batch, &mut inbox)?;
+            sent_bytes += deliver(p, batch, &mut inbox, &mut sendlog)?;
         }
         let combined = batcher.combined;
         // End-of-superstep markers to every peer.
@@ -593,7 +648,6 @@ where
         let mut ckpt_bytes = 0u64;
         if let (Some(w), Some(ck)) = (writer, cfg.checkpoint.as_ref()) {
             if superstep % ck.every == 0 {
-                let _span_ckpt = rec.as_ref().map(|r| r.span("ckpt_write", "ckpt"));
                 let t_ck = Instant::now();
                 // Snapshot the queues in their canonical (sender-sorted)
                 // order: arrival interleaving across peers is the one
@@ -604,15 +658,42 @@ where
                 for unit in &mut inbox {
                     unit.sort_by_key(|m| m.sender);
                 }
-                let snapshot = ckpt::encode_partition(
-                    superstep as u64,
-                    me,
-                    n_local,
-                    |i, e| program.save_state(&states[i].lock().unwrap(), e),
-                    |i| halted[i].load(Ordering::Relaxed),
-                    &inbox,
-                );
-                ckpt_bytes = w.write_partition(superstep as u64, me, &snapshot)?;
+                let encode = |compress: bool| {
+                    ckpt::encode_partition(
+                        superstep as u64,
+                        me,
+                        n_local,
+                        |i, e| program.save_state(&states[i].lock().unwrap(), e),
+                        |i| halted[i].load(Ordering::Relaxed),
+                        &inbox,
+                        compress,
+                    )
+                };
+                let log = sendlog.take().unwrap_or_default();
+                let log_bytes =
+                    ckpt::encode_sendlog(superstep as u64, me, &log, ck.compress);
+                match flusher {
+                    // Async: the barrier pays only for the encode (the
+                    // `ckpt_buffer` span is the whole remaining stall);
+                    // the flusher persists on its own thread while the
+                    // next superstep computes.
+                    Some(f) => {
+                        let _span_ckpt =
+                            rec.as_ref().map(|r| r.span("ckpt_buffer", "ckpt"));
+                        let snapshot = encode(ck.compress);
+                        ckpt_bytes = snapshot.len() as u64;
+                        f.enqueue_partition(superstep as u64, me, snapshot);
+                        f.enqueue_sendlog(superstep as u64, me, log_bytes);
+                    }
+                    // Sync: persist (and fsync) inside the barrier.
+                    None => {
+                        let _span_ckpt =
+                            rec.as_ref().map(|r| r.span("ckpt_write", "ckpt"));
+                        let snapshot = encode(ck.compress);
+                        ckpt_bytes = w.write_partition(superstep as u64, me, &snapshot)?;
+                        w.write_sendlog(superstep as u64, me, &log_bytes)?;
+                    }
+                }
                 ckpt_seconds = t_ck.elapsed().as_secs_f64();
             }
         }
@@ -701,8 +782,18 @@ fn run_inner<P: SubgraphProgram>(
     // ckpt::open_resume): one writer shared by workers + manager, and
     // (on resume) the coordinator snapshot of the epoch being resumed.
     let writer = match &cfg.checkpoint {
-        Some(ck) => Some(ckpt::create_writer(ck, cfg.resume.as_ref(), k as u32)?),
+        Some(ck) => {
+            Some(Arc::new(ckpt::create_writer(ck, cfg.resume.as_ref(), k as u32)?))
+        }
         None => None,
+    };
+    // Async mode: one background flusher (trace lane k+1, the first
+    // after the workers') persists what workers/manager enqueue.
+    let flusher = match (&writer, &cfg.checkpoint) {
+        (Some(w), Some(ck)) if ck.mode == ckpt::CheckpointMode::Async => {
+            Some(ckpt::CheckpointFlusher::spawn(w.clone(), &cfg.trace, k as u32 + 1)?)
+        }
+        _ => None,
     };
     let resume_state: Option<ckpt::ResumeState> = match &cfg.resume {
         Some(rp) => Some(ckpt::open_resume(rp, k, aggs.len())?),
@@ -733,7 +824,8 @@ fn run_inner<P: SubgraphProgram>(
         std::thread::scope(|scope| {
             // ---- workers
             let mut handles = Vec::with_capacity(k);
-            let writer_ref = writer.as_ref();
+            let writer_ref = writer.as_deref();
+            let flusher_ref = flusher.as_ref();
             let resume_ref = resume_state.as_ref();
             let mut spawn_worker = |p: usize, fab_any: FabricAny| {
                 let sync_tx = sync_tx.clone();
@@ -811,11 +903,11 @@ fn run_inner<P: SubgraphProgram>(
                     match fab_any {
                         FabricAny::InProc(f) => worker_body(
                             program, f, cfg, aggs, subgraphs, attrs, load, directory,
-                            writer_ref, worker_resume, sync_tx, cmd_rx,
+                            writer_ref, flusher_ref, worker_resume, sync_tx, cmd_rx,
                         ),
                         FabricAny::Tcp(f) => worker_body(
                             program, f, cfg, aggs, subgraphs, attrs, load, directory,
-                            writer_ref, worker_resume, sync_tx, cmd_rx,
+                            writer_ref, flusher_ref, worker_resume, sync_tx, cmd_rx,
                         ),
                     }
                 }));
@@ -848,6 +940,10 @@ fn run_inner<P: SubgraphProgram>(
             let mut superstep = base_superstep;
             let mut commit_err: Option<anyhow::Error> = None;
             let mut cancelled = false;
+            // First worker that reported failure this run (recorded in
+            // the checkpoint dir's FAILED_WORKER marker at abort so a
+            // later --confined-recovery resume knows whom to rebuild).
+            let mut failed_worker: Option<u32> = None;
             // Manager lane spans (tid 0) + cumulative counters for the
             // live-progress publication below.
             let mgr_rec = cfg.trace.recorder(0);
@@ -872,7 +968,10 @@ fn run_inner<P: SubgraphProgram>(
                             bytes_total += s.bytes;
                             computes[s.worker as usize] = s.compute_seconds;
                             all_quiescent &= s.quiescent;
-                            any_failed |= s.failed;
+                            if s.failed {
+                                any_failed = true;
+                                failed_worker.get_or_insert(s.worker);
+                            }
                             partials[s.worker as usize] = s.agg;
                             seen += 1;
                         }
@@ -897,15 +996,32 @@ fn run_inner<P: SubgraphProgram>(
                 // means the epoch is complete.
                 if let (Some(w), Some(ck)) = (&writer, &cfg.checkpoint) {
                     if superstep % ck.every == 0 && !any_failed {
-                        let _span_commit =
-                            mgr_rec.as_ref().map(|r| r.span("ckpt_commit", "ckpt"));
                         let coord_bytes = ckpt::encode_coordinator(
                             superstep as u64,
                             aggs.len(),
                             coordinator.history(),
+                            ck.compress,
                         );
-                        if let Err(e) = w.commit(superstep as u64, &coord_bytes) {
-                            commit_err = Some(e);
+                        match &flusher {
+                            // Async: every worker enqueued its snapshot
+                            // before syncing, so the FIFO commit lands
+                            // after them; an earlier flush error
+                            // surfaces here, at the next barrier.
+                            Some(f) => {
+                                f.enqueue_commit(superstep as u64, coord_bytes);
+                                if let Some(e) = f.take_error() {
+                                    commit_err = Some(e);
+                                }
+                            }
+                            None => {
+                                let _span_commit = mgr_rec
+                                    .as_ref()
+                                    .map(|r| r.span("ckpt_commit", "ckpt"));
+                                if let Err(e) = w.commit(superstep as u64, &coord_bytes)
+                                {
+                                    commit_err = Some(e);
+                                }
+                            }
                         }
                     }
                 }
@@ -923,12 +1039,25 @@ fn run_inner<P: SubgraphProgram>(
                     }
                     .straggler_ratio();
                     ctl.publish_progress(cum_msgs, cum_bytes, straggler);
+                    ctl.publish_ckpt_inflight(
+                        flusher.as_ref().map_or(0, |f| f.inflight()),
+                    );
                     cancelled = ctl.is_cancelled();
                 }
                 let done = (all_quiescent && sent_total == 0)
                     || any_failed
                     || commit_err.is_some()
                     || cancelled;
+                if done && any_failed {
+                    if let (Some(w), Some(fw)) = (&writer, failed_worker) {
+                        // Best-effort: a missing marker only downgrades a
+                        // later resume from confined to global; a stale
+                        // one is harmless (replay equals the snapshot
+                        // queues), so neither failure mode is worth
+                        // aborting the abort for.
+                        let _ = w.write_failed_marker(fw);
+                    }
+                }
                 for tx in &cmd_txs {
                     // A worker that already errored may have dropped its rx.
                     let _ = tx.send(if done {
@@ -1003,9 +1132,24 @@ fn run_inner<P: SubgraphProgram>(
                 metrics.supersteps.push(sm);
             }
             metrics.aggregators = coordinator.into_traces();
+            metrics.ckpt_prune_failures =
+                writer.as_ref().map_or(0, |w| w.pending_prune_count() as u64);
             Ok((outputs, metrics))
         });
+    // Always drain + join the flusher, then let a worker/manager error
+    // outrank a flush error (the flush error for a failed run is
+    // usually downstream noise of the same fault).
+    let flush_result = match flusher {
+        Some(f) => f.finish(),
+        None => Ok(()),
+    };
     let (outputs, metrics) = result?;
+    flush_result.context("background checkpoint flush")?;
+    if let Some(w) = &writer {
+        // Clean completion: drop any failure marker left by an earlier
+        // run of this directory.
+        w.clear_failed_marker();
+    }
 
     let mut states = BTreeMap::new();
     let mut values: Vec<(VertexId, f64)> = Vec::new();

@@ -146,7 +146,10 @@ pub struct JobBuilder {
     load_attributes: Vec<String>,
     checkpoint_every: Option<usize>,
     checkpoint_dir: Option<PathBuf>,
+    checkpoint_mode: ckpt::CheckpointMode,
+    checkpoint_compress: bool,
     resume_from: Option<PathBuf>,
+    confined_recovery: bool,
     kill_at: Option<ckpt::FailPoint>,
     control: Option<crate::coordinator::RunControl>,
     incremental_from: Option<u64>,
@@ -171,7 +174,10 @@ impl Default for JobBuilder {
             load_attributes: Vec::new(),
             checkpoint_every: None,
             checkpoint_dir: None,
+            checkpoint_mode: ckpt::CheckpointMode::Sync,
+            checkpoint_compress: false,
             resume_from: None,
+            confined_recovery: false,
             kill_at: None,
             control: None,
             incremental_from: None,
@@ -275,6 +281,41 @@ impl JobBuilder {
     /// [`JobBuilder::checkpoint_every`]).
     pub fn checkpoint_dir(mut self, dir: impl Into<PathBuf>) -> Self {
         self.checkpoint_dir = Some(dir.into());
+        self
+    }
+
+    /// How epoch snapshots reach disk (default: sync). Sync persists
+    /// inside the barrier; async double-buffers the encoded snapshot at
+    /// the barrier and a background flusher thread writes it while the
+    /// next superstep computes (the CLI's `--checkpoint-mode` flag).
+    /// Not result-affecting — both modes commit identical epochs — so
+    /// it is excluded from the checkpoint label: a sync-written
+    /// directory resumes fine under async and vice versa.
+    pub fn checkpoint_mode(mut self, mode: ckpt::CheckpointMode) -> Self {
+        self.checkpoint_mode = mode;
+        self
+    }
+
+    /// Run-length pack checkpoint section bodies (default: off; the
+    /// CLI's `--checkpoint-compress` flag). Checksums cover the packed
+    /// bytes, so `store verify`-style scrubbing still works. Not
+    /// result-affecting and excluded from the checkpoint label —
+    /// readers dispatch on each file's own version byte, so compressed
+    /// and uncompressed epochs can coexist in one directory.
+    pub fn checkpoint_compress(mut self, on: bool) -> Self {
+        self.checkpoint_compress = on;
+        self
+    }
+
+    /// Confined recovery (requires [`JobBuilder::resume_from`]): restart
+    /// only the worker named by the checkpoint directory's
+    /// `FAILED_WORKER` marker from its snapshot, replaying its in-flight
+    /// messages from the surviving senders' logs instead of rebuilding
+    /// every worker's queues from snapshots. Byte-exact with a global
+    /// rollback — deterministic replay makes the two indistinguishable —
+    /// so it is excluded from the checkpoint label.
+    pub fn confined_recovery(mut self, on: bool) -> Self {
+        self.confined_recovery = on;
         self
     }
 
@@ -461,6 +502,24 @@ impl JobBuilder {
                 }
             },
         };
+        if checkpoint.is_none() && self.checkpoint_mode == ckpt::CheckpointMode::Async {
+            return Err(JobError::CheckpointConfig {
+                reason: "checkpoint_mode async without checkpointing does nothing; \
+                         set checkpoint_every + checkpoint_dir",
+            });
+        }
+        if checkpoint.is_none() && self.checkpoint_compress {
+            return Err(JobError::CheckpointConfig {
+                reason: "checkpoint_compress without checkpointing does nothing; \
+                         set checkpoint_every + checkpoint_dir",
+            });
+        }
+        if self.confined_recovery && self.resume_from.is_none() {
+            return Err(JobError::CheckpointConfig {
+                reason: "confined_recovery only applies to a resumed run; \
+                         set resume_from",
+            });
+        }
         let resume = match &self.resume_from {
             None => None,
             Some(dir) => {
@@ -479,7 +538,11 @@ impl JobBuilder {
                 let epoch = reader.latest_valid().map_err(|e| {
                     JobError::NoCheckpoint { dir: dir_str.clone(), reason: format!("{e:#}") }
                 })?;
-                Some(ckpt::ResumePoint { dir: dir.clone(), epoch })
+                Some(ckpt::ResumePoint {
+                    dir: dir.clone(),
+                    epoch,
+                    confined: self.confined_recovery,
+                })
             }
         };
         Ok(Job {
@@ -498,6 +561,8 @@ impl JobBuilder {
             load_attributes: self.load_attributes,
             label,
             checkpoint,
+            checkpoint_mode: self.checkpoint_mode,
+            checkpoint_compress: self.checkpoint_compress,
             resume,
             fail_at: self.kill_at,
             control: self.control,
@@ -632,6 +697,39 @@ mod tests {
             .algo("cc")
             .checkpoint_every(2)
             .checkpoint_dir("/tmp/nowhere")
+            .build()
+            .is_ok());
+    }
+
+    #[test]
+    fn async_compress_and_confined_knobs_validated_at_build_time() {
+        // Async mode / compression without checkpointing do nothing.
+        let err = Job::builder()
+            .algo("cc")
+            .checkpoint_mode(crate::ckpt::CheckpointMode::Async)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, JobError::CheckpointConfig { .. }), "{err}");
+        let err = Job::builder()
+            .algo("cc")
+            .checkpoint_compress(true)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, JobError::CheckpointConfig { .. }), "{err}");
+        // Confined recovery only makes sense on a resumed run.
+        let err = Job::builder().algo("cc").confined_recovery(true).build().unwrap_err();
+        assert!(
+            matches!(&err, JobError::CheckpointConfig { reason }
+                     if reason.contains("resume_from")),
+            "{err}"
+        );
+        // All three knobs together on a checkpointing job build fine.
+        assert!(Job::builder()
+            .algo("cc")
+            .checkpoint_every(2)
+            .checkpoint_dir("/tmp/nowhere")
+            .checkpoint_mode(crate::ckpt::CheckpointMode::Async)
+            .checkpoint_compress(true)
             .build()
             .is_ok());
     }

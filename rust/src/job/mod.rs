@@ -46,6 +46,7 @@
 //! | `supersteps` / `source_vertex` / `kernel` | ✓ | ✓ (kernel is Gopher-only at run time, ignored by vertex programs) | — |
 //! | `load_attributes(...)` | ✓ (store-backed loads read exactly the declared attribute columns; a packed v3 store seeks past the rest) | ✗ (the baseline reassembles the whole graph) | [`JobError::IncompatibleKnob`] |
 //! | `checkpoint_every` / `checkpoint_dir` / `resume_from` | ✓ | ✓ | [`JobError::CheckpointConfig`] (inconsistent knobs), [`JobError::NoCheckpoint`] / [`JobError::CheckpointMismatch`] (bad resume target) |
+//! | `checkpoint_mode` / `checkpoint_compress` / `confined_recovery` | ✓ | ✓ | [`JobError::CheckpointConfig`] (async/compress without checkpointing, confined without `resume_from`); none are result-affecting, so all three are excluded from the checkpoint label |
 //! | `incremental_from(...)` | ✓ (store-backed sources only — checked at run time) | ✗ (no sub-graph structure to scope by) | [`JobError::IncompatibleKnob`] |
 //! | `mmap(false)` / `dense_index(false)` | ✓ | ✓ | — (never result-affecting: mmap selects the store read path, dense_index the vertex-lookup mechanics) |
 //! | `trace(path)` | ✓ | ✓ | — (never result-affecting: spans only observe the run; writes a Chrome trace-event JSON timeline after it) |
@@ -164,6 +165,12 @@ pub struct Job {
     pub(crate) label: String,
     /// `(every, dir)` from the builder's checkpoint knobs.
     pub(crate) checkpoint: Option<(usize, std::path::PathBuf)>,
+    /// Sync (in-barrier persist) or async (background flusher); see
+    /// [`JobBuilder::checkpoint_mode`].
+    pub(crate) checkpoint_mode: ckpt::CheckpointMode,
+    /// Run-length pack checkpoint sections; see
+    /// [`JobBuilder::checkpoint_compress`].
+    pub(crate) checkpoint_compress: bool,
     /// Resolved at build time (latest valid committed epoch).
     pub(crate) resume: Option<ckpt::ResumePoint>,
     /// Failure-injection testing hook.
@@ -278,6 +285,8 @@ impl Job {
                 every: *every,
                 dir: dir.clone(),
                 label: self.label.clone(),
+                mode: self.checkpoint_mode,
+                compress: self.checkpoint_compress,
             }
         });
         let resume = match &self.resume {
@@ -289,7 +298,11 @@ impl Job {
                 } else {
                     reader.latest_valid()?
                 };
-                Some(ckpt::ResumePoint { dir: rp.dir.clone(), epoch })
+                Some(ckpt::ResumePoint {
+                    dir: rp.dir.clone(),
+                    epoch,
+                    confined: rp.confined,
+                })
             }
         };
         // One sink per run: spans from every worker/manager land in it,

@@ -60,8 +60,11 @@ pub struct CheckpointMetrics {
     /// Absolute superstep the epoch snapshots (resumed runs keep
     /// counting from the restored superstep).
     pub superstep: usize,
-    /// Wall clock of the slowest worker's snapshot write (workers write
-    /// concurrently at the barrier, so the slowest gates the superstep).
+    /// Wall clock of the slowest worker's snapshot work at the barrier
+    /// (workers run concurrently, so the slowest gates the superstep).
+    /// In sync mode this is the persist + fsync; in async mode it is
+    /// only the encode/double-buffer stall — the write itself happens
+    /// off the barrier on the flusher thread.
     pub seconds: f64,
     /// Snapshot bytes written across all workers.
     pub bytes: u64,
@@ -104,6 +107,11 @@ pub struct JobMetrics {
     /// job ran with tracing (`Job::builder().trace(path)`); see
     /// [`crate::obs::trace::PhaseTotals`].
     pub phases: Option<crate::obs::trace::PhaseTotals>,
+    /// Checkpoint epochs whose pruning failed and is still pending
+    /// retry at job end (see `ckpt::CheckpointWriter::prune_epochs`):
+    /// non-zero means stale `epoch_N/` directories remain on disk and
+    /// the next commit against this directory will retry them.
+    pub ckpt_prune_failures: u64,
 }
 
 impl JobMetrics {
@@ -165,6 +173,12 @@ impl JobMetrics {
                 self.checkpoints.len(),
                 self.checkpoint_seconds(),
                 self.checkpoint_bytes(),
+            ));
+        }
+        if self.ckpt_prune_failures > 0 {
+            line.push_str(&format!(
+                " ckpt_prune_failures={}",
+                self.ckpt_prune_failures,
             ));
         }
         if let Some(p) = &self.phases {
@@ -268,6 +282,14 @@ mod tests {
         assert!(r.contains("supersteps=0"));
         // No checkpointing → no ckpt clause.
         assert!(!r.contains("ckpt["));
+    }
+
+    #[test]
+    fn report_notes_pending_prune_failures() {
+        let m = JobMetrics { ckpt_prune_failures: 2, ..Default::default() };
+        assert!(m.report("cc/rn").contains("ckpt_prune_failures=2"));
+        // Clean runs never mention pruning.
+        assert!(!JobMetrics::default().report("cc/rn").contains("ckpt_prune_failures"));
     }
 
     #[test]

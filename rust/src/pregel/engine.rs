@@ -20,7 +20,7 @@
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -47,11 +47,15 @@ pub struct PregelConfig {
     /// Simulated load time charged to metrics (the HDFS side of Fig 4b is
     /// modelled by `sim::disk`; the engine itself loads from memory).
     pub load_seconds: f64,
-    /// Barrier-synchronous checkpointing (see [`crate::ckpt`] and the
-    /// matching knob on `gopher::GopherConfig`).
+    /// Checkpointing (see [`crate::ckpt`] and the matching knob on
+    /// `gopher::GopherConfig`): the config's `mode` picks whether the
+    /// epoch write happens inside the barrier (sync) or on a background
+    /// flusher thread (async double-buffering).
     pub checkpoint: Option<ckpt::CheckpointConfig>,
     /// Restart after a committed epoch instead of superstep 1. The run
     /// must use the same graph/partitioning as the checkpointed one.
+    /// With `confined: true`, only the failed worker rebuilds from its
+    /// snapshot + the senders' message logs (see [`crate::ckpt`]).
     pub resume: Option<ckpt::ResumePoint>,
     /// Failure-injection testing hook: the named worker aborts at the
     /// start of the named superstep.
@@ -189,6 +193,7 @@ fn worker_body<P, F>(
     parts: &Partitioning,
     my_vertices: Vec<VertexId>,
     writer: Option<&ckpt::CheckpointWriter>,
+    flusher: Option<&ckpt::CheckpointFlusher>,
     resume: Option<WorkerResume>,
     sync_tx: Sender<WorkerSync>,
     cmd_rx: Receiver<ManagerCmd>,
@@ -200,8 +205,8 @@ where
     let me = fabric.id();
     let k = fabric.num_workers();
     match worker_loop(
-        program, &fabric, cfg, aggs, graph, parts, my_vertices, writer, resume,
-        &sync_tx, &cmd_rx,
+        program, &fabric, cfg, aggs, graph, parts, my_vertices, writer, flusher,
+        resume, &sync_tx, &cmd_rx,
     ) {
         Ok(out) => Ok(out),
         Err(e) => {
@@ -235,6 +240,7 @@ fn worker_loop<P, F>(
     parts: &Partitioning,
     my_vertices: Vec<VertexId>,
     writer: Option<&ckpt::CheckpointWriter>,
+    flusher: Option<&ckpt::CheckpointFlusher>,
     resume: Option<WorkerResume>,
     sync_tx: &Sender<WorkerSync>,
     cmd_rx: &Receiver<ManagerCmd>,
@@ -287,10 +293,39 @@ where
                 |i, d| program.restore_state(my_vertices[i], graph, d),
             )
             .with_context(|| format!("decode checkpoint {}", r.path.display()))?;
+            let queues = match &r.replay {
+                // Confined recovery, dead worker: rebuild the inbox from
+                // the senders' logged frames (sender-ordered, per-sender
+                // FIFO intact); the stable sender-sort before compute
+                // normalizes them exactly like the snapshot queues, so
+                // replay is byte-identical (see gopher::engine).
+                Some(frames) => {
+                    let mut queues: Vec<Vec<InboxEntry<P::Msg>>> =
+                        (0..n_local).map(|_| Vec::new()).collect();
+                    for frame in frames {
+                        let (sender, msgs) = decode_batch::<P::Msg>(frame)?;
+                        for (v, payload) in msgs {
+                            let i = local_of(v).with_context(|| {
+                                format!(
+                                    "replayed message for non-local vertex {v} \
+                                     on worker {me}"
+                                )
+                            })?;
+                            queues[i].push(InboxEntry {
+                                sender,
+                                vertex: None,
+                                payload,
+                            });
+                        }
+                    }
+                    queues
+                }
+                None => snap.inbox,
+            };
             (
                 snap.states,
                 snap.halted,
-                snap.inbox,
+                queues,
                 r.epoch as usize + 1,
                 Some(r.globals),
             )
@@ -426,11 +461,26 @@ where
             combined += (before - folded.len()) as u64;
             *buf = folded;
         }
+        // On checkpoint supersteps, log every outgoing frame with its
+        // destination: the epoch's send log is what lets a later
+        // confined recovery replay the dead worker's in-flight
+        // messages from the senders' side (see gopher::engine).
+        let log_sends = cfg
+            .checkpoint
+            .as_ref()
+            .is_some_and(|ck| superstep % ck.every == 0);
+        let mut sendlog: Option<Vec<(u32, Vec<u8>)>> = log_sends.then(Vec::new);
         for (p, buf) in pending.iter_mut().enumerate() {
             if buf.is_empty() {
                 continue;
             }
             if p as u32 == me {
+                // Self-delivery bypasses the fabric, but the send log
+                // gets the encoded frame anyway: confined replay must
+                // cover self-sent messages too.
+                if let Some(log) = &mut sendlog {
+                    log.push((me, encode_batch(me, buf)));
+                }
                 for (v, m) in buf.drain(..) {
                     let i = local_of(v)
                         .with_context(|| format!("message for non-local vertex {v}"))?;
@@ -439,6 +489,9 @@ where
             } else {
                 let frame = encode_batch(me, buf);
                 sent_bytes += frame.len() as u64;
+                if let Some(log) = &mut sendlog {
+                    log.push((p as u32, frame.clone()));
+                }
                 fabric.send(p as u32, frame)?;
                 buf.clear();
             }
@@ -476,7 +529,6 @@ where
         let mut ckpt_bytes = 0u64;
         if let (Some(w), Some(ck)) = (writer, cfg.checkpoint.as_ref()) {
             if superstep % ck.every == 0 {
-                let _span_ckpt = rec.as_ref().map(|r| r.span("ckpt_write", "ckpt"));
                 let t_ck = Instant::now();
                 // Sender-sort the queues before encoding so identical
                 // runs write identical snapshot bytes (see
@@ -484,15 +536,42 @@ where
                 for unit in &mut inbox {
                     unit.sort_by_key(|m| m.sender);
                 }
-                let snapshot = ckpt::encode_partition(
-                    superstep as u64,
-                    me,
-                    n_local,
-                    |i, e| program.save_state(&values[i].lock().unwrap(), e),
-                    |i| halted[i].load(Ordering::Relaxed),
-                    &inbox,
-                );
-                ckpt_bytes = w.write_partition(superstep as u64, me, &snapshot)?;
+                let encode = |compress: bool| {
+                    ckpt::encode_partition(
+                        superstep as u64,
+                        me,
+                        n_local,
+                        |i, e| program.save_state(&values[i].lock().unwrap(), e),
+                        |i| halted[i].load(Ordering::Relaxed),
+                        &inbox,
+                        compress,
+                    )
+                };
+                let log = sendlog.take().unwrap_or_default();
+                let log_bytes =
+                    ckpt::encode_sendlog(superstep as u64, me, &log, ck.compress);
+                match flusher {
+                    // Async: the barrier pays only for the encode (the
+                    // `ckpt_buffer` span is the whole remaining stall);
+                    // the flusher persists on its own thread while the
+                    // next superstep computes.
+                    Some(f) => {
+                        let _span_ckpt =
+                            rec.as_ref().map(|r| r.span("ckpt_buffer", "ckpt"));
+                        let snapshot = encode(ck.compress);
+                        ckpt_bytes = snapshot.len() as u64;
+                        f.enqueue_partition(superstep as u64, me, snapshot);
+                        f.enqueue_sendlog(superstep as u64, me, log_bytes);
+                    }
+                    // Sync: persist (and fsync) inside the barrier.
+                    None => {
+                        let _span_ckpt =
+                            rec.as_ref().map(|r| r.span("ckpt_write", "ckpt"));
+                        let snapshot = encode(ck.compress);
+                        ckpt_bytes = w.write_partition(superstep as u64, me, &snapshot)?;
+                        w.write_sendlog(superstep as u64, me, &log_bytes)?;
+                    }
+                }
                 ckpt_seconds = t_ck.elapsed().as_secs_f64();
             }
         }
@@ -566,8 +645,18 @@ pub fn run<P: VertexProgram>(
 
     // Checkpoint plumbing (shared helpers, identical to gopher::engine).
     let writer = match &cfg.checkpoint {
-        Some(ck) => Some(ckpt::create_writer(ck, cfg.resume.as_ref(), k as u32)?),
+        Some(ck) => {
+            Some(Arc::new(ckpt::create_writer(ck, cfg.resume.as_ref(), k as u32)?))
+        }
         None => None,
+    };
+    // Async mode: one background flusher (trace lane k+1, the first
+    // after the workers') persists what workers/manager enqueue.
+    let flusher = match (&writer, &cfg.checkpoint) {
+        (Some(w), Some(ck)) if ck.mode == ckpt::CheckpointMode::Async => {
+            Some(ckpt::CheckpointFlusher::spawn(w.clone(), &cfg.trace, k as u32 + 1)?)
+        }
+        _ => None,
     };
     let resume_state: Option<ckpt::ResumeState> = match &cfg.resume {
         Some(rp) => Some(ckpt::open_resume(rp, k, aggs.len())?),
@@ -603,7 +692,8 @@ pub fn run<P: VertexProgram>(
                 Tcp(transport::TcpFabric),
             }
             let aggs_ref = &aggs;
-            let writer_ref = writer.as_ref();
+            let writer_ref = writer.as_deref();
+            let flusher_ref = flusher.as_ref();
             let resume_ref = resume_state.as_ref();
             let mut spawn_worker = |p: usize, fab: FabricAny| {
                 let sync_tx = sync_tx.clone();
@@ -613,11 +703,11 @@ pub fn run<P: VertexProgram>(
                 handles.push(scope.spawn(move || match fab {
                     FabricAny::InProc(f) => worker_body(
                         program, f, cfg, aggs_ref, graph, parts, my_vertices,
-                        writer_ref, worker_resume, sync_tx, cmd_rx,
+                        writer_ref, flusher_ref, worker_resume, sync_tx, cmd_rx,
                     ),
                     FabricAny::Tcp(f) => worker_body(
                         program, f, cfg, aggs_ref, graph, parts, my_vertices,
-                        writer_ref, worker_resume, sync_tx, cmd_rx,
+                        writer_ref, flusher_ref, worker_resume, sync_tx, cmd_rx,
                     ),
                 }));
             };
@@ -645,6 +735,10 @@ pub fn run<P: VertexProgram>(
             let mut superstep = base_superstep;
             let mut commit_err: Option<anyhow::Error> = None;
             let mut cancelled = false;
+            // First worker that reported failure this run (recorded in
+            // the checkpoint dir's FAILED_WORKER marker at abort so a
+            // later --confined-recovery resume knows whom to rebuild).
+            let mut failed_worker: Option<u32> = None;
             // Manager lane spans (tid 0) + cumulative counters for the
             // live-progress publication below.
             let mgr_rec = cfg.trace.recorder(0);
@@ -667,7 +761,10 @@ pub fn run<P: VertexProgram>(
                             bytes_total += s.bytes;
                             computes[s.worker as usize] = s.compute_seconds;
                             all_quiescent &= s.quiescent;
-                            any_failed |= s.failed;
+                            if s.failed {
+                                any_failed = true;
+                                failed_worker.get_or_insert(s.worker);
+                            }
                             partials[s.worker as usize] = s.agg;
                             seen += 1;
                         }
@@ -685,18 +782,35 @@ pub fn run<P: VertexProgram>(
                 }
                 superstep += 1;
                 let globals = coordinator.fold_superstep(&partials);
-                // Barrier-synchronous epoch commit (see gopher::engine).
+                // Epoch commit at a clean barrier (see gopher::engine).
                 if let (Some(w), Some(ck)) = (&writer, &cfg.checkpoint) {
                     if superstep % ck.every == 0 && !any_failed {
-                        let _span_commit =
-                            mgr_rec.as_ref().map(|r| r.span("ckpt_commit", "ckpt"));
                         let coord_bytes = ckpt::encode_coordinator(
                             superstep as u64,
                             aggs.len(),
                             coordinator.history(),
+                            ck.compress,
                         );
-                        if let Err(e) = w.commit(superstep as u64, &coord_bytes) {
-                            commit_err = Some(e);
+                        match &flusher {
+                            // Async: every worker enqueued its snapshot
+                            // before syncing, so the FIFO commit lands
+                            // after them; an earlier flush error
+                            // surfaces here, at the next barrier.
+                            Some(f) => {
+                                f.enqueue_commit(superstep as u64, coord_bytes);
+                                if let Some(e) = f.take_error() {
+                                    commit_err = Some(e);
+                                }
+                            }
+                            None => {
+                                let _span_commit = mgr_rec
+                                    .as_ref()
+                                    .map(|r| r.span("ckpt_commit", "ckpt"));
+                                if let Err(e) = w.commit(superstep as u64, &coord_bytes)
+                                {
+                                    commit_err = Some(e);
+                                }
+                            }
                         }
                     }
                 }
@@ -714,12 +828,25 @@ pub fn run<P: VertexProgram>(
                     }
                     .straggler_ratio();
                     ctl.publish_progress(cum_msgs, cum_bytes, straggler);
+                    ctl.publish_ckpt_inflight(
+                        flusher.as_ref().map_or(0, |f| f.inflight()),
+                    );
                     cancelled = ctl.is_cancelled();
                 }
                 let done = (all_quiescent && sent_total == 0)
                     || any_failed
                     || commit_err.is_some()
                     || cancelled;
+                if done && any_failed {
+                    if let (Some(w), Some(fw)) = (&writer, failed_worker) {
+                        // Best-effort: a missing marker only downgrades a
+                        // later resume from confined to global; a stale
+                        // one is harmless (replay equals the snapshot
+                        // queues), so neither failure mode is worth
+                        // aborting the abort for.
+                        let _ = w.write_failed_marker(fw);
+                    }
+                }
                 for tx in &cmd_txs {
                     // A worker that already errored may have dropped its rx.
                     let _ = tx.send(if done {
@@ -750,7 +877,20 @@ pub fn run<P: VertexProgram>(
             }
             Ok((outs, coordinator.into_traces()))
         });
+    // Always drain + join the flusher, then let a worker/manager error
+    // outrank a flush error (the flush error for a failed run is
+    // usually downstream noise of the same fault).
+    let flush_result = match flusher {
+        Some(f) => f.finish(),
+        None => Ok(()),
+    };
     let (outputs, traces) = outputs?;
+    flush_result.context("background checkpoint flush")?;
+    if let Some(w) = &writer {
+        // Clean completion: drop any failure marker left by an earlier
+        // run of this directory.
+        w.clear_failed_marker();
+    }
 
     // Merge values back into global id order.
     let mut values: Vec<Option<P::Value>> = vec![None; graph.num_vertices()];
@@ -797,6 +937,8 @@ pub fn run<P: VertexProgram>(
         metrics.compute_seconds += sm.wall_seconds;
         metrics.supersteps.push(sm);
     }
+    metrics.ckpt_prune_failures =
+        writer.as_ref().map_or(0, |w| w.pending_prune_count() as u64);
 
     Ok(VertexRunResult { values, metrics })
 }

@@ -333,8 +333,26 @@ fn accept_loop(listener: &TcpListener, stop: &AtomicBool, ctx: &Arc<Ctx>) {
 static NEXT_REQUEST_ID: AtomicU64 = AtomicU64::new(1);
 
 fn handle_connection(stream: &TcpStream, ctx: &Ctx) {
-    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
-    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    // A socket without timeouts can pin this thread forever on a peer
+    // that stalls mid-request (or never reads the response), so a
+    // failed setsockopt is grounds to drop the connection, not to
+    // serve it untimed. The per-read/write timeouts bound each IO
+    // call; `http::read_request` additionally bounds the whole
+    // header/body read loop with a deadline (slow-loris clients stay
+    // under the per-read timeout forever, but not under the deadline).
+    if let Err(e) = stream
+        .set_read_timeout(Some(IO_TIMEOUT))
+        .and_then(|()| stream.set_write_timeout(Some(IO_TIMEOUT)))
+    {
+        crate::obs::registry::global().counter_add(
+            "goffish_http_socket_config_failures_total",
+            "Connections dropped because socket timeouts could not be armed.",
+            &[],
+            1,
+        );
+        eprintln!("[serve] dropping connection: cannot arm socket timeouts: {e}");
+        return;
+    }
     let request_id = NEXT_REQUEST_ID.fetch_add(1, Ordering::Relaxed);
     let start = Instant::now();
     let mut reader = BufReader::new(stream);
@@ -682,6 +700,15 @@ fn metrics_prometheus(ctx: &Ctx) -> Reply {
             "Slowest/next-slowest compute-time ratio of the job's last completed superstep.",
             &labels,
             straggler,
+        );
+        // Epochs handed to the async checkpoint flusher and not yet
+        // persisted (0 for sync-mode and finished jobs — the flusher
+        // drains before the run returns).
+        reg.gauge_set(
+            "goffish_ckpt_inflight",
+            "Checkpoint writes enqueued on the async flusher and not yet persisted.",
+            &labels,
+            e.control.ckpt_inflight() as f64,
         );
     }
     for (state, n) in by_state {

@@ -1,0 +1,184 @@
+//! Chaos recovery drill (ROADMAP direction 5): pseudo-random kills
+//! across a multi-job sequence on the TCP fabric, in both checkpoint
+//! modes (sync and async, compressed and plain) and both recovery
+//! scopes (global rollback and confined single-worker restart). Every
+//! recovered `JobOutput` — values *and* aggregator traces — must be
+//! byte-exact against the same job running uninterrupted; that is the
+//! contract PR 4's deterministic replay makes testable.
+
+use std::path::PathBuf;
+
+use goffish::ckpt::{self, CheckpointMode};
+use goffish::gofs::Store;
+use goffish::gopher::FabricKind;
+use goffish::graph::gen;
+use goffish::job::{EngineKind, Job, JobBuilder, JobOutput, JobSource};
+use goffish::partition::{MultilevelPartitioner, Partitioner};
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join("goffish_chaos_recovery")
+        .join(format!("{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn build_store(name: &str) -> Store {
+    let g = gen::with_random_weights(&gen::road(12, 0.92, 0.02, 7), 1.0, 10.0, 8);
+    let parts = MultilevelPartitioner::default().partition(&g, 3);
+    let (store, _) = Store::create(&tmp(name), "chaos", &g, &parts).unwrap();
+    store
+}
+
+/// Deterministic xorshift64* so the "random" kill schedule is stable
+/// across runs — chaos we can re-run is chaos we can debug.
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform-ish pick in `lo..=hi`.
+    fn pick(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.next() % (hi - lo + 1)
+    }
+}
+
+fn base_job(algo: &str, engine: EngineKind) -> JobBuilder {
+    Job::builder()
+        .algo(algo)
+        .engine(engine)
+        .fabric(FabricKind::Tcp)
+        .supersteps(8)
+        .source_vertex(0)
+}
+
+fn assert_output_identical(a: &JobOutput, b: &JobOutput, label: &str) {
+    assert_eq!(a.values, b.values, "{label}: values diverged");
+    assert_eq!(
+        a.aggregators.len(),
+        b.aggregators.len(),
+        "{label}: aggregator count diverged"
+    );
+    for (ta, tb) in a.aggregators.iter().zip(&b.aggregators) {
+        assert_eq!(ta.name, tb.name, "{label}");
+        assert_eq!(ta.values, tb.values, "{label}: trace {} diverged", ta.name);
+    }
+}
+
+/// Run the whole chaos matrix for one algorithm/engine: every
+/// (mode, recovery-scope) combination, each with a pseudo-random kill
+/// point, against one uninterrupted baseline.
+fn chaos_drill(store: &Store, algo: &str, engine: EngineKind, rng: &mut Rng) {
+    let baseline = base_job(algo, engine)
+        .build()
+        .unwrap()
+        .run(JobSource::Store(store))
+        .unwrap();
+
+    let scenarios = [
+        (CheckpointMode::Sync, false),
+        (CheckpointMode::Sync, true),
+        (CheckpointMode::Async, false),
+        (CheckpointMode::Async, true),
+    ];
+    for (mode, confined) in scenarios {
+        // Random kill point: late enough that an epoch committed, early
+        // enough that the job is still mid-flight (the 8-superstep jobs
+        // here never quiesce before superstep 4).
+        let kill_at = rng.pick(2, 4) as usize;
+        let worker = rng.pick(0, 2) as u32;
+        // Exercise compression on half the matrix.
+        let compress = confined;
+        let label =
+            format!("{algo}/{engine:?}/{mode}/confined={confined}/kill {worker}@{kill_at}");
+        assert!(
+            baseline.metrics.num_supersteps() > kill_at,
+            "{label}: drill needs a kill before natural termination"
+        );
+        let dir = tmp(&format!(
+            "{algo}_{engine:?}_{mode}_{confined}_{kill_at}_{worker}"
+        ));
+
+        let err = base_job(algo, engine)
+            .checkpoint_every(1)
+            .checkpoint_dir(&dir)
+            .checkpoint_mode(mode)
+            .checkpoint_compress(compress)
+            .kill_at(kill_at, worker)
+            .build()
+            .unwrap()
+            .run(JobSource::Store(store))
+            .expect_err("killed run must fail");
+        assert!(
+            format!("{err:#}").contains("injected worker failure"),
+            "{label}: {err:#}"
+        );
+        // The aborted run recorded whom it lost — confined recovery
+        // reads this marker to decide which worker to rebuild.
+        assert_eq!(
+            ckpt::read_failed_marker(&dir).unwrap(),
+            Some(worker),
+            "{label}: FAILED_WORKER marker"
+        );
+
+        let resumed = base_job(algo, engine)
+            .resume_from(&dir)
+            .confined_recovery(confined)
+            .build()
+            .unwrap()
+            .run(JobSource::Store(store))
+            .unwrap();
+        assert_output_identical(&baseline, &resumed, &label);
+    }
+}
+
+#[test]
+fn chaos_recovery_gopher_tcp() {
+    let store = build_store("gopher");
+    let mut rng = Rng(0x9E3779B97F4A7C15);
+    // Two jobs back to back on the same store — the multi-job shape:
+    // a float-summing fixed-length job and an aggregator-terminated one.
+    chaos_drill(&store, "pagerank", EngineKind::Gopher, &mut rng);
+    chaos_drill(&store, "cc", EngineKind::Gopher, &mut rng);
+}
+
+#[test]
+fn chaos_recovery_vertex_tcp() {
+    let store = build_store("vertex");
+    let mut rng = Rng(0xD1B54A32D192ED03);
+    chaos_drill(&store, "pagerank", EngineKind::Vertex, &mut rng);
+    chaos_drill(&store, "cc", EngineKind::Vertex, &mut rng);
+}
+
+#[test]
+fn confined_recovery_without_a_marker_is_a_typed_refusal() {
+    // A directory whose run completed (or predates failure markers)
+    // cannot answer a confined resume: the builder resolves the epoch,
+    // but the run fails loudly asking for the marker instead of
+    // silently doing a global rollback.
+    let store = build_store("nomarker");
+    let dir = tmp("nomarker_ckpt");
+    base_job("cc", EngineKind::Gopher)
+        .checkpoint_every(1)
+        .checkpoint_dir(&dir)
+        .build()
+        .unwrap()
+        .run(JobSource::Store(&store))
+        .unwrap();
+    assert_eq!(ckpt::read_failed_marker(&dir).unwrap(), None);
+    let err = base_job("cc", EngineKind::Gopher)
+        .resume_from(&dir)
+        .confined_recovery(true)
+        .build()
+        .unwrap()
+        .run(JobSource::Store(&store))
+        .expect_err("confined resume without a marker must fail");
+    assert!(format!("{err:#}").contains("FAILED_WORKER"), "{err:#}");
+}
